@@ -1,0 +1,26 @@
+//! Reproduce paper Figure 2: overflow profile + accuracy of a 1-layer MLP
+//! (8-bit weights/activations) vs accumulator bitwidth.
+//!
+//!     cargo run --release --offline --example fig2_overflow_profile
+//!
+//! Flags: --limit N (test samples per point), --from P --to P (bit range).
+
+use pqs::figures::{self, fig2};
+use pqs::formats::manifest::Manifest;
+use pqs::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let man = Manifest::load_default()?;
+    let limit = args.get_usize("limit", figures::eval_limit(512));
+    let from = args.get_u32("from", 12);
+    let to = args.get_u32("to", 21);
+    let r = fig2::run(&man, limit, from..=to)?;
+    fig2::print(&r);
+    println!(
+        "\npaper shape check: transient share of overflows is small at low p \
+         (paper: 3-24% at 13-16b), yet resolving them (oracle) lifts accuracy \
+         well above clip; sorted matches oracle."
+    );
+    Ok(())
+}

@@ -1,0 +1,58 @@
+//! Quickstart: load a trained PQS model, run bit-accurate inference with a
+//! narrow accumulator, and see why sorting matters.
+//!
+//!     cargo run --release --offline --example quickstart
+//!
+//! (run `make artifacts` once first.)
+
+use pqs::accum::Policy;
+use pqs::coordinator::EvalService;
+use pqs::data::Dataset;
+use pqs::formats::manifest::Manifest;
+use pqs::models;
+use pqs::nn::engine::{Engine, EngineConfig};
+
+fn main() -> anyhow::Result<()> {
+    // 1. artifacts: the experiment manifest indexes every trained model
+    let man = Manifest::load_default()?;
+    println!("artifacts at {:?} — {} models", man.dir, man.models.len());
+
+    // 2. load a pruned + quantized model (87.5% sparse 2-layer MLP)
+    let name = "mlp2_pq_s875_w8a8_kfull";
+    let model = models::load(&man, name)?;
+    println!("{}", models::describe(&model));
+
+    // 3. classify a few test images with a 15-bit accumulator
+    let ds = Dataset::load(man.dataset_path(&man.test_dataset_for(&model.arch)?.test))?;
+    let imgs = ds.images_f32(0, 4);
+    let mut engine = Engine::new(
+        &model,
+        EngineConfig { policy: Policy::Sorted, acc_bits: 15, ..Default::default() },
+    );
+    let out = engine.forward(&imgs, 4)?;
+    for i in 0..4 {
+        println!(
+            "image {i}: predicted {} (true {})",
+            out.argmax(i),
+            ds.labels[i]
+        );
+    }
+
+    // 4. the point of the paper: at the same 15 bits, clipping the
+    //    accumulations destroys the model, sorting keeps it alive
+    for policy in [Policy::Clip, Policy::Sorted] {
+        let svc = EvalService::new(
+            &model,
+            EngineConfig { policy, acc_bits: 15, ..Default::default() },
+        );
+        let r = svc.evaluate(&ds, Some(512))?;
+        println!(
+            "15-bit accumulator, {:>6}: accuracy {:.3}  ({:.0} img/s)",
+            policy.name(),
+            r.accuracy,
+            r.throughput_ips
+        );
+    }
+    println!("fp32 baseline (python): {:.3}", model.acc_fp32);
+    Ok(())
+}

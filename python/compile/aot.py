@@ -1,0 +1,421 @@
+"""AOT build orchestrator: datasets -> trainings -> PQSW models -> HLO text.
+
+`make artifacts` runs `python -m compile.aot --out ../artifacts` once; Rust is
+self-contained afterwards. Outputs:
+
+  artifacts/datasets/*.bin            PQSD datasets (identical bytes for rust)
+  artifacts/models/*.pqsw             trained quantized models (PQSW)
+  artifacts/goldens/*.json            bit-exact dot-product / model goldens
+  artifacts/model.hlo.txt             mlp1 quantized fwd via the Pallas kernel
+  artifacts/hlo/*.hlo.txt             FP32 forwards for the PJRT fast path
+  artifacts/manifest.json             experiment index consumed by the figures
+
+HLO is exported as *text* (not serialized proto): jax >= 0.5 emits protos
+with 64-bit instruction ids which xla_extension 0.5.1 rejects; the HLO text
+parser reassigns ids (see /opt/xla-example/README.md).
+
+Set PQS_QUICK=1 for a reduced matrix during development.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import datasets as D
+from . import model as M
+from . import quantize as Q
+from . import train as T
+from .kernels import ref
+from .kernels.pqs_matmul import pqs_matmul
+from .pqsw import export_pqsw
+
+QUICK = os.environ.get("PQS_QUICK", "") not in ("", "0")
+
+# dataset sizes (DESIGN.md §4: miniaturized substitutes)
+MNIST_TRAIN, MNIST_TEST = 2560, 1024
+CIFAR_TRAIN, CIFAR_TEST, CIFAR_SIZE = 1024, 512, 20
+
+MLP_EPOCHS = 4 if QUICK else 12
+CNN_EPOCHS = 2 if QUICK else 6
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # print_large_constants=True is ESSENTIAL: the default printer elides
+    # big weight arrays as `constant({...})`, which xla_extension 0.5.1's
+    # text parser silently mis-parses into garbage values instead of
+    # erroring. (Bug found the hard way — see EXPERIMENTS.md.)
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+# ---------------------------------------------------------------------------
+# experiment matrix
+# ---------------------------------------------------------------------------
+
+def mlp_cfg(**kw):
+    base = dict(epochs=MLP_EPOCHS, qat_epochs=3 if not QUICK else 1, lr=5e-3, bs=128)
+    base.update(kw)
+    return T.TrainCfg(**base)
+
+
+def cnn_cfg(**kw):
+    base = dict(epochs=CNN_EPOCHS, qat_epochs=2 if not QUICK else 1, lr=4e-3, bs=128)
+    base.update(kw)
+    return T.TrainCfg(**base)
+
+
+def build_matrix() -> dict[str, list[T.TrainCfg]]:
+    """Experiment id -> list of training configs (see DESIGN.md §3)."""
+    exps: dict[str, list[T.TrainCfg]] = {}
+
+    # Fig. 2: 1-layer MLP, 8/8, dense — the overflow-profile workhorse.
+    exps["fig2"] = [mlp_cfg(arch="mlp1", schedule="pq")]
+
+    # Fig. 3: P->Q vs Q->P under low-rank approximation (hidden layer, M=32).
+    ranks = [None, 10] if QUICK else [None, 64, 10, 5]
+    spars = [0.5] if QUICK else [0.25, 0.5, 0.75, 0.9]
+    exps["fig3"] = [
+        mlp_cfg(arch="mlp2", schedule=s, sparsity=sp, nm_m=32, lowrank_k=k,
+                arch_kw={"hidden": 256})
+        for s in ("pq", "qp") for k in ranks for sp in spars
+    ]
+
+    # Fig. 4: CNN schedules (N:M with M=16 vs structured filter pruning).
+    archs = ["resnet_tiny", "mbv2_tiny"]
+    spars4 = [0.5] if QUICK else [0.25, 0.5, 0.75]
+    scheds = ["pq", "qp"] if QUICK else ["pq", "qp", "filter"]
+    exps["fig4"] = [
+        cnn_cfg(arch=a, schedule=s, sparsity=sp, nm_m=16)
+        for a in archs for s in scheds for sp in spars4
+    ]
+
+    # Fig. 5 extras: PQS pareto sweep (bitwidths x sparsity) + A2Q baseline.
+    if QUICK:
+        exps["fig5"] = [cnn_cfg(arch="resnet_tiny", schedule="a2q", acc_bits=16)]
+    else:
+        # A2Q pareto co-tunes weight bitwidth with the accumulator target, as
+        # in the paper's Fig. 5 frontier (8-bit weights need p >= ~16; lower
+        # p is reachable only with narrower weights).
+        a2q_pts = [(8, 16), (6, 14), (5, 13), (4, 12)]
+        exps["fig5"] = (
+            [cnn_cfg(arch=a, schedule="pq", sparsity=0.875, nm_m=16) for a in archs]
+            + [cnn_cfg(arch=a, schedule="pq", sparsity=sp, nm_m=16, wbits=6, abits=6)
+               for a in archs for sp in (0.5, 0.75)]
+            + [cnn_cfg(arch=a, schedule="a2q", wbits=w, abits=w, acc_bits=p,
+                       epochs=CNN_EPOCHS + 2)
+               for a in archs for (w, p) in a2q_pts]
+            + [mlp_cfg(arch="mlp2", schedule="pq", sparsity=sp, nm_m=16,
+                       wbits=w, abits=w, arch_kw={"hidden": 256})
+               for w in (5, 6, 8) for sp in (0.75, 0.875)]
+            + [mlp_cfg(arch="mlp2", schedule="a2q", wbits=w, abits=w, acc_bits=p,
+                       epochs=MLP_EPOCHS + 4, arch_kw={"hidden": 256})
+               for (w, p) in a2q_pts]
+        )
+
+    # FP32 baselines (accuracy reference lines in Figs. 2b/4/5).
+    exps["fp32"] = [
+        mlp_cfg(arch="mlp1", schedule="fp32"),
+        mlp_cfg(arch="mlp2", schedule="fp32", arch_kw={"hidden": 256}),
+    ] + [cnn_cfg(arch=a, schedule="fp32") for a in archs]
+    return exps
+
+
+def cfg_name(cfg: T.TrainCfg) -> str:
+    parts = [cfg.arch, cfg.schedule, f"s{int(round(cfg.sparsity * 1000)):03d}",
+             f"w{cfg.wbits}a{cfg.abits}"]
+    if cfg.acc_bits is not None:
+        parts.append(f"p{cfg.acc_bits}")
+    if cfg.lowrank_k is not None:
+        parts.append(f"k{cfg.lowrank_k}")
+    if cfg.lowrank_k is None and cfg.arch == "mlp2":
+        parts.append("kfull")
+    return "_".join(parts)
+
+
+# ---------------------------------------------------------------------------
+# goldens
+# ---------------------------------------------------------------------------
+
+def export_dot_goldens(path: str, seed: int = 7) -> None:
+    """Random dot products + expected results for every policy/bitwidth —
+    the bit-exactness contract for rust/src/dot."""
+    rng = np.random.default_rng(seed)
+    cases = []
+    for K in (8, 33, 256, 784):
+        for bits in (4, 8):
+            lim = 1 << (bits - 1)
+            w = rng.integers(-(lim - 1), lim, K)
+            x = rng.integers(-lim, lim, K)
+            prods = (w * x).astype(np.int64)
+            entry = {"w": w.tolist(), "x": x.tolist(), "results": {}}
+            for p in (12, 14, 16, 20, 24):
+                res = {}
+                for pol in ref.POLICIES:
+                    v, e = ref.dot_with_policy(prods, p, pol)
+                    res[pol] = [int(v), int(e)]
+                cls = ref.classify_overflow(prods, p)
+                res["classify"] = [
+                    int(cls["exact"]),
+                    int(cls["persistent"]),
+                    int(cls["naive_events"]),
+                    int(cls["transient"]),
+                ]
+                entry["results"][str(p)] = res
+            cases.append(entry)
+    with open(path, "w") as f:
+        json.dump({"cases": cases}, f)
+
+
+def export_matmul_goldens(path: str, seed: int = 11) -> None:
+    """Kernel-vs-rust matmul contract (the pallas kernel already equals ref)."""
+    rng = np.random.default_rng(seed)
+    cases = []
+    for (m, k, n) in ((3, 17, 5), (4, 64, 8)):
+        xq = rng.integers(-128, 128, (m, k)).astype(np.int32)
+        wq = rng.integers(-127, 128, (k, n)).astype(np.int32)
+        for p in (13, 16):
+            for pol in ("exact", "clip", "wrap", "sorted1"):
+                y, ev = pqs_matmul(xq, wq, acc_bits=p, policy=pol)
+                cases.append({
+                    "m": m, "k": k, "n": n, "p": p, "policy": pol,
+                    "x": xq.flatten().tolist(), "w": wq.flatten().tolist(),
+                    "y": np.asarray(y).flatten().tolist(),
+                    "ovf": np.asarray(ev).flatten().tolist(),
+                })
+    with open(path, "w") as f:
+        json.dump({"cases": cases}, f)
+
+
+def export_model_golden(path: str, pqsw_path: str, x_test: np.ndarray) -> None:
+    """End-to-end integer contract for the mlp1 model: quantized inputs,
+    exact integer accumulators, and dequantized logits for 8 test images.
+
+    Activations are quantized into the *offset-free* domain the accumulator
+    sees: q~ = clamp(round(x/s), qlo - o, qhi - o) — the TFLite/CMSIS
+    formulation when o_w = 0, mirrored by rust `quant::quantize_centered_*`.
+    Dequantization is then z = s_w*s_x*acc + bias."""
+    import struct
+
+    with open(pqsw_path, "rb") as f:
+        raw = f.read()
+    hlen = struct.unpack("<I", raw[8:12])[0]
+    hdr = json.loads(raw[12 : 12 + hlen])
+    blob_base = (12 + hlen + 7) & ~7
+    fc = [n for n in hdr["graph"] if n["op"] == "qlinear"][0]
+    wb = hdr["blobs"][fc["wq_blob"]]
+    bb = hdr["blobs"][fc["bias_blob"]]
+    wq = np.frombuffer(
+        raw[blob_base + wb["offset"] : blob_base + wb["offset"] + wb["len"]],
+        dtype=np.int8,
+    ).reshape(fc["oc"], fc["ic"]).astype(np.int64)
+    bias = np.frombuffer(
+        raw[blob_base + bb["offset"] : blob_base + bb["offset"] + bb["len"]],
+        dtype=np.float32,
+    )
+    abits = hdr["abits"]
+    s_x, o_x = fc["x_scale"], fc["x_offset"]
+    qlo, qhi = -(1 << (abits - 1)), (1 << (abits - 1)) - 1
+    xs = x_test[:8].reshape(8, -1).astype(np.float32)
+    # f32 division + round-half-even, matching rust bit-for-bit
+    xq = np.clip(
+        np.round(xs / np.float32(s_x)).astype(np.int64), qlo - o_x, qhi - o_x
+    )
+    acc = xq @ wq.T  # exact integer accumulators (8, oc)
+    logits = (fc["w_scale"] * s_x) * acc + bias[None, :]
+    logits = np.maximum(logits, 0.0)  # mlp1 has trailing relu
+    with open(path, "w") as f:
+        json.dump({
+            "model": os.path.basename(pqsw_path),
+            "xq": xq.flatten().tolist(),
+            "acc_exact": acc.flatten().tolist(),
+            "logits": logits.flatten().tolist(),
+            "shape": [8, int(fc["ic"]), int(fc["oc"])],
+        }, f)
+
+
+# ---------------------------------------------------------------------------
+# HLO exports
+# ---------------------------------------------------------------------------
+
+def export_fp32_hlo(path: str, result, input_shape, batch: int = 8) -> None:
+    """FP32 (fake-quant-weights) forward with baked weights, for the PJRT
+    fast path in rust/src/runtime."""
+    graph, params, masks, qstate = (
+        result.graph, result.params, result.masks, result.qstate,
+    )
+
+    def fwd(x):
+        logits, _ = M.forward(
+            graph, params, masks, qstate, x,
+            qat=False, wbits=8, abits=8, track=False,
+        )
+        return (logits,)
+
+    spec = jax.ShapeDtypeStruct((batch, *input_shape), jnp.float32)
+    lowered = jax.jit(fwd).lower(spec)
+    with open(path, "w") as f:
+        f.write(to_hlo_text(lowered))
+
+
+def export_pqs_kernel_hlo(path: str, pqsw_path: str, batch: int = 8,
+                          acc_bits: int = 16, policy: str = "sorted1") -> None:
+    """The headline AOT artifact: mlp1 quantized forward built around the
+    Layer-1 Pallas kernel (sorted low-bitwidth accumulation), lowered to HLO
+    text and executed from Rust via PJRT. Outputs (logits f32[b,10],
+    overflow_events i32[] total)."""
+    import struct
+
+    with open(pqsw_path, "rb") as f:
+        raw = f.read()
+    hlen = struct.unpack("<I", raw[8:12])[0]
+    hdr = json.loads(raw[12 : 12 + hlen])
+    blob_base = (12 + hlen + 7) & ~7
+    fc = [n for n in hdr["graph"] if n["op"] == "qlinear"][0]
+    wb = hdr["blobs"][fc["wq_blob"]]
+    bb = hdr["blobs"][fc["bias_blob"]]
+    wq = np.frombuffer(
+        raw[blob_base + wb["offset"] : blob_base + wb["offset"] + wb["len"]],
+        dtype=np.int8,
+    ).reshape(fc["oc"], fc["ic"])
+    bias = np.frombuffer(
+        raw[blob_base + bb["offset"] : blob_base + bb["offset"] + bb["len"]],
+        dtype=np.float32,
+    )
+    s_x, o_x, s_w = fc["x_scale"], fc["x_offset"], fc["w_scale"]
+    abits = hdr["abits"]
+    qlo, qhi = -(1 << (abits - 1)), (1 << (abits - 1)) - 1
+    wq_t = jnp.asarray(wq.T.astype(np.int32))          # (K, N)
+    bias_j = jnp.asarray(bias)
+
+    def fwd(x):
+        # offset-free activation quantization (matches the rust engine and
+        # the model golden): q~ in [qlo - o_x, qhi - o_x]
+        xf = x.reshape(batch, -1)
+        xq = jnp.clip(jnp.round(xf / s_x), qlo - o_x, qhi - o_x).astype(jnp.int32)
+        y, ovf = pqs_matmul(xq, wq_t, acc_bits=acc_bits, policy=policy)
+        z = (s_w * s_x) * y.astype(jnp.float32) + bias_j[None, :]
+        return (jax.nn.relu(z), jnp.sum(ovf))
+
+    spec = jax.ShapeDtypeStruct((batch, 1, 28, 28), jnp.float32)
+    lowered = jax.jit(fwd).lower(spec)
+    with open(path, "w") as f:
+        f.write(to_hlo_text(lowered))
+
+
+# ---------------------------------------------------------------------------
+# main
+# ---------------------------------------------------------------------------
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    args = ap.parse_args()
+    out = args.out
+    for sub in ("datasets", "models", "goldens", "hlo"):
+        os.makedirs(os.path.join(out, sub), exist_ok=True)
+
+    t_start = time.time()
+    print(f"[aot] QUICK={QUICK}")
+
+    # 1. datasets ------------------------------------------------------------
+    xm, ym = D.synth_mnist(MNIST_TRAIN, seed=1)
+    xmt, ymt = D.synth_mnist(MNIST_TEST, seed=2)
+    xc, yc = D.synth_cifar(CIFAR_TRAIN, seed=3, size=CIFAR_SIZE)
+    xct, yct = D.synth_cifar(CIFAR_TEST, seed=4, size=CIFAR_SIZE)
+    D.save_dataset(os.path.join(out, "datasets/synth_mnist_train.bin"), xm, ym)
+    D.save_dataset(os.path.join(out, "datasets/synth_mnist_test.bin"), xmt, ymt)
+    D.save_dataset(os.path.join(out, "datasets/synth_cifar_train.bin"), xc, yc)
+    D.save_dataset(os.path.join(out, "datasets/synth_cifar_test.bin"), xct, yct)
+    # reload so training sees the exact u8-rounded pixels rust will see
+    xm, ym = D.load_dataset(os.path.join(out, "datasets/synth_mnist_train.bin"))
+    xmt, ymt = D.load_dataset(os.path.join(out, "datasets/synth_mnist_test.bin"))
+    xc, yc = D.load_dataset(os.path.join(out, "datasets/synth_cifar_train.bin"))
+    xct, yct = D.load_dataset(os.path.join(out, "datasets/synth_cifar_test.bin"))
+    mnist_data = (xm, ym, xmt, ymt)
+    cifar_data = (xc, yc, xct, yct)
+    print(f"[aot] datasets done {time.time()-t_start:.0f}s")
+
+    # 2. trainings -----------------------------------------------------------
+    exps = build_matrix()
+    manifest = {"experiments": {}, "models": [], "datasets": {
+        "mnist": {"train": "synth_mnist_train.bin", "test": "synth_mnist_test.bin",
+                   "shape": [1, 28, 28]},
+        "cifar": {"train": "synth_cifar_train.bin", "test": "synth_cifar_test.bin",
+                   "shape": [3, CIFAR_SIZE, CIFAR_SIZE]},
+    }, "quick": QUICK}
+    seen: dict[str, dict] = {}
+    results: dict[str, T.TrainResult] = {}
+    for exp, cfgs in exps.items():
+        names = []
+        for cfg in cfgs:
+            name = cfg_name(cfg)
+            names.append(name)
+            if name in seen:
+                continue
+            data = mnist_data if cfg.arch.startswith("mlp") else cifar_data
+            in_shape = [1, 28, 28] if cfg.arch.startswith("mlp") else [3, CIFAR_SIZE, CIFAR_SIZE]
+            t0 = time.time()
+            res = T.train(cfg, data)
+            entry = export_pqsw(
+                os.path.join(out, f"models/{name}.pqsw"), name, res, cfg, in_shape
+            )
+            seen[name] = entry
+            results[name] = res
+            manifest["models"].append(entry)
+            print(f"[aot] {exp:5s} {name:48s} acc_q={res.acc_q:.3f} "
+                  f"fp32={res.acc_fp32:.3f} sp={res.sparsity:.2f} "
+                  f"{time.time()-t0:.0f}s (total {time.time()-t_start:.0f}s)", flush=True)
+        manifest["experiments"][exp] = names
+
+    # 3. goldens ---------------------------------------------------------------
+    export_dot_goldens(os.path.join(out, "goldens/dot_goldens.json"))
+    export_matmul_goldens(os.path.join(out, "goldens/matmul_goldens.json"))
+    mlp1_name = manifest["experiments"]["fig2"][0]
+    export_model_golden(
+        os.path.join(out, "goldens/model_golden.json"),
+        os.path.join(out, f"models/{mlp1_name}.pqsw"),
+        xmt,
+    )
+    print(f"[aot] goldens done {time.time()-t_start:.0f}s")
+
+    # 4. HLO ---------------------------------------------------------------
+    export_pqs_kernel_hlo(
+        os.path.join(out, "model.hlo.txt"),
+        os.path.join(out, f"models/{mlp1_name}.pqsw"),
+    )
+    hlo_index = {"model.hlo.txt": {"model": mlp1_name, "batch": 8,
+                                    "acc_bits": 16, "policy": "sorted1",
+                                    "outputs": ["logits", "ovf_total"]}}
+    # FP32 fast-path graphs (PJRT baseline logits in rust/src/runtime).
+    fp32_targets = [(mlp1_name, [1, 28, 28])]
+    for nm in manifest["experiments"].get("fp32", []):
+        shape = [1, 28, 28] if nm.startswith("mlp") else [3, CIFAR_SIZE, CIFAR_SIZE]
+        fp32_targets.append((nm, shape))
+    for nm, shape in fp32_targets:
+        fname = f"hlo/{nm}_fp32.hlo.txt"
+        export_fp32_hlo(os.path.join(out, fname), results[nm], shape)
+        hlo_index[fname] = {"model": nm, "batch": 8, "outputs": ["logits"]}
+    print(f"[aot] HLO artifacts done {time.time()-t_start:.0f}s")
+
+    with open(os.path.join(out, "hlo/index.json"), "w") as f:
+        json.dump(hlo_index, f, indent=1)
+    with open(os.path.join(out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"[aot] DONE in {time.time()-t_start:.0f}s — "
+          f"{len(manifest['models'])} models")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,152 @@
+"""Deterministic synthetic datasets substituting MNIST / CIFAR-10.
+
+This environment has no network access, so the paper's datasets are replaced
+by procedurally generated equivalents (DESIGN.md §4 documents the
+substitution argument):
+
+  * `synth_mnist`  — 28x28 grayscale digit glyphs (hand-drawn 7x5 bitmaps,
+    upscaled) with random translation, thickness jitter, contrast scaling
+    and Gaussian noise. 10 classes; learnable to >95% by a small MLP.
+  * `synth_cifar`  — `size` x `size` RGB images; class = (shape, hue) combo
+    out of 5 shapes x 2 hue families, with textured backgrounds, random
+    placement and noise. Learnable by a small CNN; activations after ReLU
+    are half-normal-ish, matching the overflow statistics that matter.
+
+Everything is generated from a fixed seed; `aot.py` exports the raw bytes to
+`artifacts/datasets/` so the Rust engine evaluates *identical* inputs.
+
+Binary format (read by `rust/src/data/loader.rs`):
+  magic  b"PQSD1\\0\\0\\0"
+  u32le  n, c, h, w
+  u8     images  [n*c*h*w]   (pixel value 0..255; engine maps to f32/255)
+  u8     labels  [n]
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import struct
+
+import numpy as np
+
+# 7x5 digit glyphs (classic seven-segment-ish bitmaps).
+_GLYPHS = {
+    0: ["01110", "10001", "10011", "10101", "11001", "10001", "01110"],
+    1: ["00100", "01100", "00100", "00100", "00100", "00100", "01110"],
+    2: ["01110", "10001", "00001", "00110", "01000", "10000", "11111"],
+    3: ["11110", "00001", "00001", "01110", "00001", "00001", "11110"],
+    4: ["00010", "00110", "01010", "10010", "11111", "00010", "00010"],
+    5: ["11111", "10000", "11110", "00001", "00001", "10001", "01110"],
+    6: ["00110", "01000", "10000", "11110", "10001", "10001", "01110"],
+    7: ["11111", "00001", "00010", "00100", "01000", "01000", "01000"],
+    8: ["01110", "10001", "10001", "01110", "10001", "10001", "01110"],
+    9: ["01110", "10001", "10001", "01111", "00001", "00010", "01100"],
+}
+
+
+def _glyph_array(d: int) -> np.ndarray:
+    return np.array([[int(c) for c in row] for row in _GLYPHS[d]], dtype=np.float32)
+
+
+def synth_mnist(n: int, seed: int) -> tuple[np.ndarray, np.ndarray]:
+    """Returns (images f32 [n,1,28,28] in [0,1], labels u8 [n])."""
+    rng = np.random.default_rng(seed)
+    labels = rng.integers(0, 10, n).astype(np.uint8)
+    imgs = np.zeros((n, 1, 28, 28), dtype=np.float32)
+    for i in range(n):
+        g = _glyph_array(int(labels[i]))
+        # upscale 7x5 -> (7*sy)x(5*sx) with random stroke scale 2..3
+        sy = int(rng.integers(2, 4))
+        sx = int(rng.integers(2, 4))
+        big = np.kron(g, np.ones((sy, sx), dtype=np.float32))
+        hh, ww = big.shape
+        # near-centered placement (+-2 px): keeps a linear classifier viable,
+        # like MNIST itself, while still providing positional variation.
+        cy0, cx0 = (28 - hh) // 2, (28 - ww) // 2
+        oy = int(np.clip(cy0 + rng.integers(-2, 3), 0, 28 - hh))
+        ox = int(np.clip(cx0 + rng.integers(-2, 3), 0, 28 - ww))
+        canvas = np.zeros((28, 28), dtype=np.float32)
+        canvas[oy : oy + hh, ox : ox + ww] = big
+        contrast = 0.6 + 0.4 * rng.random()
+        canvas = canvas * contrast + rng.normal(0, 0.08, (28, 28)).astype(np.float32)
+        imgs[i, 0] = np.clip(canvas, 0.0, 1.0)
+    return imgs, labels
+
+
+_HUES = [  # (r, g, b) base colors: two clearly separated hue families
+    (0.95, 0.35, 0.10),
+    (0.10, 0.40, 0.95),
+]
+
+
+def _shape_mask(shape_id: int, size: int, cy: float, cx: float, r: float) -> np.ndarray:
+    yy, xx = np.mgrid[0:size, 0:size].astype(np.float32)
+    dy, dx = yy - cy, xx - cx
+    if shape_id == 0:  # disk
+        return ((dy**2 + dx**2) <= r * r).astype(np.float32)
+    if shape_id == 1:  # square
+        return ((np.abs(dy) <= r) & (np.abs(dx) <= r)).astype(np.float32)
+    if shape_id == 2:  # cross
+        return ((np.abs(dy) <= r / 2.5) | (np.abs(dx) <= r / 2.5)).astype(
+            np.float32
+        ) * ((np.abs(dy) <= r) & (np.abs(dx) <= r))
+    if shape_id == 3:  # horizontal stripes
+        return (((yy // max(2, int(r / 2))) % 2 == 0) & (dy**2 + dx**2 <= (1.4 * r) ** 2)).astype(np.float32)
+    # vertical stripes
+    return (((xx // max(2, int(r / 2))) % 2 == 0) & (dy**2 + dx**2 <= (1.4 * r) ** 2)).astype(np.float32)
+
+
+def synth_cifar(n: int, seed: int, size: int = 24) -> tuple[np.ndarray, np.ndarray]:
+    """Returns (images f32 [n,3,size,size] in [0,1], labels u8 [n]).
+
+    Class c in 0..9 maps to shape = c % 5, hue family = c // 5."""
+    rng = np.random.default_rng(seed)
+    labels = rng.integers(0, 10, n).astype(np.uint8)
+    imgs = np.zeros((n, 3, size, size), dtype=np.float32)
+    for i in range(n):
+        c = int(labels[i])
+        shape_id, hue_id = c % 5, c // 5
+        base = np.array(_HUES[hue_id], dtype=np.float32)
+        # textured background
+        bg = rng.normal(0.32, 0.10, (3, size, size)).astype(np.float32)
+        cy = size / 2 + rng.uniform(-size / 8, size / 8)
+        cx = size / 2 + rng.uniform(-size / 8, size / 8)
+        r = size * (0.22 + 0.14 * rng.random())
+        mask = _shape_mask(shape_id, size, cy, cx, r)
+        jitter = rng.normal(0, 0.06, 3).astype(np.float32)
+        color = np.clip(base + jitter, 0.05, 1.0)
+        img = bg * (1 - mask)[None] + (color[:, None, None] * (0.8 + 0.2 * rng.random())) * mask[None]
+        img += rng.normal(0, 0.03, (3, size, size)).astype(np.float32)
+        imgs[i] = np.clip(img, 0.0, 1.0)
+    return imgs, labels
+
+
+MAGIC = b"PQSD1\x00\x00\x00"
+
+
+def save_dataset(path: str, imgs: np.ndarray, labels: np.ndarray) -> None:
+    """Write the PQSD binary + sidecar meta JSON (see module docstring)."""
+    n, c, h, w = imgs.shape
+    u8 = np.clip(np.round(imgs * 255.0), 0, 255).astype(np.uint8)
+    with open(path, "wb") as f:
+        f.write(MAGIC)
+        f.write(struct.pack("<IIII", n, c, h, w))
+        f.write(u8.tobytes())
+        f.write(labels.astype(np.uint8).tobytes())
+    with open(os.path.splitext(path)[0] + ".meta.json", "w") as f:
+        json.dump({"n": n, "c": c, "h": h, "w": w, "classes": 10}, f)
+
+
+def load_dataset(path: str) -> tuple[np.ndarray, np.ndarray]:
+    """Round-trip reader (used by tests and by training after export, so the
+    *quantized-to-u8* pixels seen by python training match rust exactly)."""
+    with open(path, "rb") as f:
+        assert f.read(8) == MAGIC, "bad PQSD magic"
+        n, c, h, w = struct.unpack("<IIII", f.read(16))
+        imgs = np.frombuffer(f.read(n * c * h * w), dtype=np.uint8)
+        labels = np.frombuffer(f.read(n), dtype=np.uint8)
+    return (
+        imgs.reshape(n, c, h, w).astype(np.float32) / 255.0,
+        labels.copy(),
+    )

@@ -1,0 +1,156 @@
+"""Layer-1 Pallas kernel: quantized matmul with low-bitwidth accumulation.
+
+Implements the PQS sorted dot product (paper Section 3.2, single sorting
+round) plus the clip / wrap / exact baselines as a Pallas kernel. The kernel
+is bit-exact against `ref.py` (`qmatmul_ref`) — this is enforced by
+`python/tests/test_kernel.py` with hypothesis sweeps over shapes, bitwidths
+and policies.
+
+TPU adaptation notes (DESIGN.md §Hardware-Adaptation): the grid tiles output
+rows/columns, but the contraction dimension K is kept whole inside one block
+because the sorting round needs *all* partial products of a dot product
+(paper §6, Software Scheduling). Products are computed as int32 element-wise
+multiplies in VMEM; `jnp.sort` lowers to an XLA sort — the software analogue
+of the bitonic sorting networks the paper proposes for hardware. Kernels run
+with interpret=True: the CPU PJRT plugin cannot execute Mosaic custom-calls.
+
+The k-tiled variant of the paper's §6 study lives in the Rust engine
+(`rust/src/dot/tiled.rs`); at the kernel level tiling K would split the sort.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+POLICIES = ("exact", "clip", "wrap", "sorted1")
+
+
+def _acc_range(p: int) -> tuple[int, int]:
+    return -(1 << (p - 1)), (1 << (p - 1)) - 1
+
+
+def _sorted1_pair(prods: jnp.ndarray) -> jnp.ndarray:
+    """Single PQS sorting round along axis 1 of a (bm, K, bn) product block.
+
+    pos: positives sorted descending (zeros pad the tail);
+    neg: negatives sorted ascending (zeros pad the tail).
+    Elementwise pairing cancels the largest positive against the most
+    negative product; the sum over K is preserved exactly.
+    """
+    pos = jnp.where(prods > 0, prods, 0)
+    neg = jnp.where(prods < 0, prods, 0)
+    pos = jnp.flip(jnp.sort(pos, axis=1), axis=1)  # descending
+    neg = jnp.sort(neg, axis=1)                    # ascending
+    return pos + neg
+
+
+def _accumulate_seq(seq: jnp.ndarray, acc_bits: int, policy: str):
+    """Sequential width-limited accumulation of seq (bm, K, bn) along axis 1.
+
+    Mirrors ref.clip_accumulate / ref.wrap_accumulate element-by-element.
+    Returns (acc (bm, bn) int32, overflow event counts (bm, bn) int32).
+    """
+    lo, hi = _acc_range(acc_bits)
+    bm, K, bn = seq.shape
+    span = 1 << acc_bits
+
+    def body(k, carry):
+        acc, ovf = carry
+        t = acc + seq[:, k, :]
+        over = (t < lo) | (t > hi)
+        ovf = ovf + over.astype(jnp.int32)
+        if policy == "clip":
+            t = jnp.clip(t, lo, hi)
+        else:  # wrap (two's complement)
+            t = jnp.where(over, ((t - lo) % span) + lo, t)
+        return t, ovf
+
+    init = (jnp.zeros((bm, bn), jnp.int32), jnp.zeros((bm, bn), jnp.int32))
+    return jax.lax.fori_loop(0, K, body, init)
+
+
+def _kernel(x_ref, w_ref, y_ref, ovf_ref, *, acc_bits: int, policy: str):
+    x = x_ref[...].astype(jnp.int32)  # (bm, K)
+    w = w_ref[...].astype(jnp.int32)  # (K, bn)
+    prods = x[:, :, None] * w[None, :, :]  # (bm, K, bn) exact int32
+
+    if policy == "exact":
+        y_ref[...] = jnp.sum(prods, axis=1, dtype=jnp.int32)
+        ovf_ref[...] = jnp.zeros(y_ref.shape, jnp.int32)
+        return
+
+    seq = _sorted1_pair(prods) if policy == "sorted1" else prods
+    acc_policy = "clip" if policy in ("clip", "sorted1") else "wrap"
+    acc, ovf = _accumulate_seq(seq, acc_bits, acc_policy)
+    y_ref[...] = acc
+    ovf_ref[...] = ovf
+
+
+def _pad_to(a: jnp.ndarray, axis: int, mult: int) -> jnp.ndarray:
+    n = a.shape[axis]
+    rem = (-n) % mult
+    if rem == 0:
+        return a
+    pad = [(0, 0)] * a.ndim
+    pad[axis] = (0, rem)
+    return jnp.pad(a, pad)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("acc_bits", "policy", "block_m", "block_n", "interpret"),
+)
+def pqs_matmul(
+    xq: jnp.ndarray,
+    wq: jnp.ndarray,
+    *,
+    acc_bits: int = 16,
+    policy: str = "sorted1",
+    block_m: int = 8,
+    block_n: int = 8,
+    interpret: bool = True,
+):
+    """Quantized matmul y[i,j] = sum_k xq[i,k] * wq[k,j] with a p-bit
+    accumulator under `policy` (exact | clip | wrap | sorted1).
+
+    xq: (M, K) integer values (any int dtype), wq: (K, N).
+    Returns (y, ovf): int32 results and per-element overflow event counts.
+    M and N are zero-padded to block multiples (zero products are sign-less,
+    so padding never changes results); K stays whole per the sorting rule.
+    """
+    if policy not in POLICIES:
+        raise ValueError(f"policy must be one of {POLICIES}")
+    M, K = xq.shape
+    K2, N = wq.shape
+    if K != K2:
+        raise ValueError(f"shape mismatch {xq.shape} @ {wq.shape}")
+
+    x = _pad_to(xq.astype(jnp.int32), 0, block_m)
+    w = _pad_to(wq.astype(jnp.int32), 1, block_n)
+    Mp, Np = x.shape[0], w.shape[1]
+    bm, bn = min(block_m, Mp), min(block_n, Np)
+
+    grid = (Mp // bm, Np // bn)
+    out_shape = [
+        jax.ShapeDtypeStruct((Mp, Np), jnp.int32),
+        jax.ShapeDtypeStruct((Mp, Np), jnp.int32),
+    ]
+    y, ovf = pl.pallas_call(
+        functools.partial(_kernel, acc_bits=acc_bits, policy=policy),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, K), lambda i, j: (i, 0)),
+            pl.BlockSpec((K, bn), lambda i, j: (0, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+            pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        ],
+        out_shape=out_shape,
+        interpret=interpret,
+    )(x, w)
+    return y[:M, :N], ovf[:M, :N]

@@ -1,0 +1,206 @@
+"""Bit-exact NumPy reference semantics for PQS dot products.
+
+This module is the *authoritative specification* of the integer arithmetic in
+the PQS reproduction. Three implementations must match it bit-for-bit:
+
+  1. the Pallas kernel (`pqs_matmul.py`, interpret=True),
+  2. the Rust engine (`rust/src/dot/`, checked against exported goldens),
+  3. itself (property tests in `python/tests/`).
+
+Terminology follows the paper (Natesh & Kung 2025):
+
+  * products  p_k = w_q[k] * x_q[k]           (exact int32)
+  * a p-bit accumulator holds values in [-2^(p-1), 2^(p-1) - 1]
+  * an *overflow event* occurs when `acc + v` leaves that range before the
+    policy (clip/wrap) is applied
+  * an overflow is *persistent* when the exact final sum leaves the range,
+    *transient* when only intermediate partial sums do (Section 3.1)
+
+Sorted dot product (Section 3.2, Algorithm 1):
+
+  * `sorted1` — the single-round variant used by the Pallas kernel: split
+    the products into positives (sorted descending, zero padded) and
+    negatives (sorted ascending, zero padded), pair them elementwise, then
+    push the paired sums through the p-bit accumulator in order.
+    Pairing additions happen in exact temporary storage (they are bounded by
+    max(|pos|, |neg|)); only the running accumulation is width-limited.
+  * `sorted_full` — Algorithm 1 verbatim: repeat split/sort/pair rounds in
+    exact temporaries until a single sign remains, then accumulate the
+    remaining (monotone) sequence through the p-bit accumulator.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+__all__ = [
+    "acc_range",
+    "clamp",
+    "clip_accumulate",
+    "wrap_accumulate",
+    "exact_dot",
+    "sorted1_pair",
+    "sorted1_dot",
+    "sorted_full_dot",
+    "classify_overflow",
+    "dot_with_policy",
+    "qmatmul_ref",
+    "POLICIES",
+]
+
+POLICIES = ("exact", "clip", "wrap", "sorted1", "sorted", "oracle")
+
+
+def acc_range(p: int) -> tuple[int, int]:
+    """Inclusive [lo, hi] range of a signed p-bit accumulator."""
+    return -(1 << (p - 1)), (1 << (p - 1)) - 1
+
+
+def clamp(v: int, p: int) -> int:
+    lo, hi = acc_range(p)
+    return min(max(int(v), lo), hi)
+
+
+def exact_dot(prods: np.ndarray) -> int:
+    """Exact (wide) sum of partial products."""
+    return int(np.asarray(prods, dtype=np.int64).sum())
+
+
+def clip_accumulate(prods: np.ndarray, p: int) -> tuple[int, int]:
+    """Sequential saturating accumulation in index order.
+
+    Returns (final value, number of overflow events)."""
+    lo, hi = acc_range(p)
+    acc = 0
+    ovf = 0
+    for v in np.asarray(prods, dtype=np.int64):
+        t = acc + int(v)
+        if t < lo or t > hi:
+            ovf += 1
+            t = lo if t < lo else hi
+        acc = t
+    return acc, ovf
+
+
+def wrap_accumulate(prods: np.ndarray, p: int) -> tuple[int, int]:
+    """Sequential two's-complement wraparound accumulation in index order."""
+    lo, hi = acc_range(p)
+    span = 1 << p
+    acc = 0
+    ovf = 0
+    for v in np.asarray(prods, dtype=np.int64):
+        t = acc + int(v)
+        if t < lo or t > hi:
+            ovf += 1
+            t = ((t - lo) % span) + lo
+        acc = t
+    return acc, ovf
+
+
+def sorted1_pair(prods: np.ndarray) -> np.ndarray:
+    """One PQS sorting round: pair largest positives with most-negative values.
+
+    Returns the K paired sums s where s[i] = pos_desc[i] + neg_asc[i] with
+    zero padding, so sum(s) == sum(prods) exactly. Pairing arithmetic is
+    exact (int64 temporaries)."""
+    p = np.asarray(prods, dtype=np.int64)
+    pos = np.sort(np.where(p > 0, p, 0))[::-1]  # descending, zeros pad tail
+    neg = np.sort(np.where(p < 0, p, 0))        # ascending, zeros pad tail
+    return pos + neg
+
+
+def sorted1_dot(prods: np.ndarray, p: int) -> tuple[int, int]:
+    """Single-round sorted dot product through a p-bit clipping accumulator."""
+    return clip_accumulate(sorted1_pair(prods), p)
+
+
+def sorted_full_dot(prods: np.ndarray, p: int) -> tuple[int, int]:
+    """Algorithm 1 (multi-round) through a p-bit clipping accumulator.
+
+    Rounds of split/sort/pairwise-add run in exact temporaries; when only a
+    single sign remains the (monotone) remainder is accumulated with
+    clipping. Returns (value, overflow events in the accumulation phase)."""
+    cur = np.asarray(prods, dtype=np.int64)
+    cur = cur[cur != 0]
+    while len(cur) > 1:
+        pos = np.sort(cur[cur > 0])[::-1]
+        neg = np.sort(cur[cur < 0])
+        m = min(len(pos), len(neg))
+        if m == 0:
+            # Single sign: monotone accumulation through the accumulator.
+            return clip_accumulate(cur, p)
+        paired = pos[:m] + neg[:m]
+        leftover = pos[m:] if len(pos) > len(neg) else neg[m:]
+        cur = np.concatenate([paired, leftover])
+        cur = cur[cur != 0]
+    if len(cur) == 0:
+        return 0, 0
+    return clip_accumulate(cur, p)
+
+
+def classify_overflow(prods: np.ndarray, p: int) -> dict:
+    """Classify a dot product per Section 3.1.
+
+    Returns dict with keys: exact, persistent (bool), naive_events (int),
+    transient (bool) — transient means naive-order accumulation overflowed
+    but the exact final result fits."""
+    lo, hi = acc_range(p)
+    exact = exact_dot(prods)
+    _, events = clip_accumulate(prods, p)
+    persistent = exact < lo or exact > hi
+    return {
+        "exact": exact,
+        "persistent": persistent,
+        "naive_events": events,
+        "transient": (events > 0) and not persistent,
+    }
+
+
+def dot_with_policy(prods: np.ndarray, p: int, policy: str) -> tuple[int, int]:
+    """Evaluate one dot product under an accumulation policy.
+
+    Policies: exact | clip | wrap | sorted1 | sorted | oracle.
+    `oracle` resolves transient overflows perfectly (Fig. 2b red line): it
+    returns the exact value unless the overflow is persistent, in which case
+    it returns the clipped exact value."""
+    if policy == "exact":
+        return exact_dot(prods), 0
+    if policy == "clip":
+        return clip_accumulate(prods, p)
+    if policy == "wrap":
+        return wrap_accumulate(prods, p)
+    if policy == "sorted1":
+        return sorted1_dot(prods, p)
+    if policy == "sorted":
+        return sorted_full_dot(prods, p)
+    if policy == "oracle":
+        exact = exact_dot(prods)
+        lo, hi = acc_range(p)
+        if lo <= exact <= hi:
+            return exact, 0
+        return clamp(exact, p), 1
+    raise ValueError(f"unknown policy {policy!r}")
+
+
+def qmatmul_ref(
+    xq: np.ndarray, wq: np.ndarray, p: int, policy: str
+) -> tuple[np.ndarray, np.ndarray]:
+    """Reference quantized matmul: xq [M,K] @ wq [K,N] integer values.
+
+    Every output element is an independent length-K dot product pushed
+    through the policy. Returns (y int64 [M,N], overflow events int64 [M,N]).
+    """
+    xq = np.asarray(xq, dtype=np.int64)
+    wq = np.asarray(wq, dtype=np.int64)
+    M, K = xq.shape
+    K2, N = wq.shape
+    assert K == K2, (xq.shape, wq.shape)
+    y = np.zeros((M, N), dtype=np.int64)
+    ev = np.zeros((M, N), dtype=np.int64)
+    for i in range(M):
+        for j in range(N):
+            prods = xq[i, :] * wq[:, j]
+            v, e = dot_with_policy(prods, p, policy)
+            y[i, j] = v
+            ev[i, j] = e
+    return y, ev

@@ -1,0 +1,281 @@
+"""Layer-2: JAX model definitions + QAT forward for the PQS reproduction.
+
+Models are described by a small graph IR (list of node dicts) shared across
+the whole stack: python trains/ exports it, `pqsw.py` serializes it, and the
+Rust engine (`rust/src/nn/graph.rs`) interprets the very same structure for
+bit-accurate integer inference.
+
+Node schema:
+  {"id": int, "op": str, "inputs": [int], ...}
+  ops: input | relu | add | gap | flatten | qlinear | qconv | qdwconv
+  q-layers carry: name, oc, ic, kh, kw, stride, pad, prune (bool)
+
+Architectures (CIFAR-substitute sizes; DESIGN.md §4 records the paper->here
+miniaturization):
+  mlp1        — paper §3.1 Fig. 2: 1-layer MLP (linear 784->10 + ReLU)
+  mlp2        — paper §4 Fig. 3: hidden linear + classifier head
+  resnet_tiny — paper §5 ResNet-18 stand-in: 3 residual stages, no BN
+  mbv2_tiny   — paper §5 MobileNetV2 stand-in: inverted residual blocks
+                (expand 1x1 -> depthwise 3x3 -> project 1x1, skip on same
+                shape), no BN
+
+The first conv and the final classifier are never pruned (paper §5.0.2).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import quantize as Q
+
+# ---------------------------------------------------------------------------
+# graph builders
+# ---------------------------------------------------------------------------
+
+def _node(nid, op, inputs, **kw):
+    d = {"id": nid, "op": op, "inputs": inputs}
+    d.update(kw)
+    return d
+
+
+def mlp1(in_dim: int = 784, classes: int = 10) -> list[dict]:
+    return [
+        _node(0, "input", []),
+        _node(1, "flatten", [0]),
+        _node(2, "qlinear", [1], name="fc", oc=classes, ic=in_dim, prune=True),
+        _node(3, "relu", [2]),
+    ]
+
+
+def mlp2(in_dim: int = 784, hidden: int = 256, classes: int = 10) -> list[dict]:
+    return [
+        _node(0, "input", []),
+        _node(1, "flatten", [0]),
+        _node(2, "qlinear", [1], name="hidden", oc=hidden, ic=in_dim, prune=True),
+        _node(3, "relu", [2]),
+        _node(4, "qlinear", [3], name="head", oc=classes, ic=hidden, prune=False),
+    ]
+
+
+def _conv(nid, src, name, ic, oc, k=3, stride=1, pad=1, prune=True, dw=False):
+    return _node(
+        nid,
+        "qdwconv" if dw else "qconv",
+        [src],
+        name=name,
+        oc=oc,
+        ic=ic,
+        kh=k,
+        kw=k,
+        stride=stride,
+        pad=pad,
+        prune=prune,
+    )
+
+
+def resnet_tiny(classes: int = 10, w0: int = 8, w1: int = 16, w2: int = 32) -> list[dict]:
+    g = []
+    nid = 0
+
+    def nxt():
+        nonlocal nid
+        nid += 1
+        return nid
+
+    g.append(_node(0, "input", []))
+    c0 = nxt(); g.append(_conv(c0, 0, "conv0", 3, w0, prune=False))
+    r0 = nxt(); g.append(_node(r0, "relu", [c0]))
+
+    def basic_block(src, ic, oc, stride, tag):
+        a = nxt(); g.append(_conv(a, src, f"{tag}_a", ic, oc, stride=stride))
+        ra = nxt(); g.append(_node(ra, "relu", [a]))
+        b = nxt(); g.append(_conv(b, ra, f"{tag}_b", oc, oc))
+        if stride != 1 or ic != oc:
+            s = nxt(); g.append(_conv(s, src, f"{tag}_skip", ic, oc, k=1, stride=stride, pad=0))
+            skip = s
+        else:
+            skip = src
+        ad = nxt(); g.append(_node(ad, "add", [b, skip]))
+        r = nxt(); g.append(_node(r, "relu", [ad]))
+        return r
+
+    x = basic_block(r0, w0, w0, 1, "s1b1")
+    x = basic_block(x, w0, w1, 2, "s2b1")
+    x = basic_block(x, w1, w2, 2, "s3b1")
+    gp = nxt(); g.append(_node(gp, "gap", [x]))
+    fc = nxt(); g.append(_node(fc, "qlinear", [gp], name="head", oc=classes, ic=w2, prune=False))
+    return g
+
+
+def mbv2_tiny(classes: int = 10, c0: int = 8, c1: int = 16, c2: int = 24, t: int = 2) -> list[dict]:
+    g = []
+    nid = 0
+
+    def nxt():
+        nonlocal nid
+        nid += 1
+        return nid
+
+    g.append(_node(0, "input", []))
+    cv = nxt(); g.append(_conv(cv, 0, "conv0", 3, c0, prune=False))
+    rv = nxt(); g.append(_node(rv, "relu", [cv]))
+    x, xc = rv, c0
+
+    def inverted_residual(src, ic, oc, stride, tag):
+        mid = ic * t
+        e = nxt(); g.append(_conv(e, src, f"{tag}_exp", ic, mid, k=1, pad=0))
+        re_ = nxt(); g.append(_node(re_, "relu", [e]))
+        d = nxt(); g.append(_conv(d, re_, f"{tag}_dw", mid, mid, stride=stride, dw=True))
+        rd = nxt(); g.append(_node(rd, "relu", [d]))
+        p = nxt(); g.append(_conv(p, rd, f"{tag}_proj", mid, oc, k=1, pad=0))
+        if stride == 1 and ic == oc:
+            a = nxt(); g.append(_node(a, "add", [p, src]))
+            return a
+        return p
+
+    x = inverted_residual(x, xc, c0, 1, "ir1"); xc = c0
+    x = inverted_residual(x, xc, c1, 2, "ir2"); xc = c1
+    x = inverted_residual(x, xc, c1, 1, "ir3")
+    x = inverted_residual(x, xc, c2, 2, "ir4"); xc = c2
+    gp = nxt(); g.append(_node(gp, "gap", [x]))
+    fc = nxt(); g.append(_node(fc, "qlinear", [gp], name="head", oc=classes, ic=xc, prune=False))
+    return g
+
+
+ARCHS = {
+    "mlp1": mlp1,
+    "mlp2": mlp2,
+    "resnet_tiny": resnet_tiny,
+    "mbv2_tiny": mbv2_tiny,
+}
+
+
+def q_layers(graph: list[dict]) -> list[dict]:
+    return [n for n in graph if n["op"] in ("qlinear", "qconv", "qdwconv")]
+
+
+# ---------------------------------------------------------------------------
+# parameter init
+# ---------------------------------------------------------------------------
+
+def init_params(graph: list[dict], seed: int) -> dict[str, jnp.ndarray]:
+    rng = np.random.default_rng(seed)
+    params = {}
+    for n in q_layers(graph):
+        nid = n["id"]
+        if n["op"] == "qlinear":
+            fan_in = n["ic"]
+            shape = (n["oc"], n["ic"])
+        elif n["op"] == "qconv":
+            fan_in = n["ic"] * n["kh"] * n["kw"]
+            shape = (n["oc"], n["ic"], n["kh"], n["kw"])
+        else:  # qdwconv: oc == ic, one filter per channel
+            fan_in = n["kh"] * n["kw"]
+            shape = (n["oc"], 1, n["kh"], n["kw"])
+        std = float(np.sqrt(2.0 / fan_in))
+        params[f"w{nid}"] = jnp.asarray(
+            rng.normal(0, std, shape).astype(np.float32)
+        )
+        params[f"b{nid}"] = jnp.zeros((n["oc"],), jnp.float32)
+    return params
+
+
+def init_masks(graph: list[dict]) -> dict[str, jnp.ndarray]:
+    return {
+        f"w{n['id']}": jnp.ones_like(jnp.zeros(1))  # placeholder replaced below
+        for n in ()
+    }
+
+
+def ones_masks(params: dict) -> dict:
+    return {k: jnp.ones_like(v) for k, v in params.items() if k.startswith("w")}
+
+
+def init_qstate(graph: list[dict]) -> dict[str, jnp.ndarray]:
+    """Per-q-layer EMA (lo, hi) of the layer-*input* activation range."""
+    return {f"a{n['id']}": jnp.array([0.0, 1.0], jnp.float32) for n in q_layers(graph)}
+
+
+# ---------------------------------------------------------------------------
+# forward interpreter
+# ---------------------------------------------------------------------------
+
+def _conv2d(x, w, stride, pad, groups=1):
+    return jax.lax.conv_general_dilated(
+        x,
+        w,
+        window_strides=(stride, stride),
+        padding=[(pad, pad), (pad, pad)],
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+        feature_group_count=groups,
+    )
+
+
+def forward(
+    graph: list[dict],
+    params: dict,
+    masks: dict,
+    qstate: dict,
+    x: jnp.ndarray,
+    *,
+    qat: bool,
+    wbits: int,
+    abits: int,
+    track: bool,
+    ema_decay: float = 0.95,
+):
+    """Run the graph. Returns (logits, new_qstate).
+
+    qat=True inserts fake-quant (STE) on every q-layer's input activations
+    and weights; track=True updates the EMA activation-range statistics.
+    """
+    vals: dict[int, jnp.ndarray] = {}
+    new_state = dict(qstate)
+    out_id = graph[-1]["id"]
+    for n in graph:
+        op, nid = n["op"], n["id"]
+        ins = [vals[i] for i in n["inputs"]]
+        if op == "input":
+            v = x
+        elif op == "relu":
+            v = jax.nn.relu(ins[0])
+        elif op == "add":
+            v = ins[0] + ins[1]
+        elif op == "gap":
+            v = jnp.mean(ins[0], axis=(2, 3))
+        elif op == "flatten":
+            v = ins[0].reshape(ins[0].shape[0], -1)
+        else:  # q-layer
+            xin = ins[0]
+            if track:
+                key = f"a{nid}"
+                lo, hi = new_state[key][0], new_state[key][1]
+                blo = jnp.minimum(jnp.min(xin), 0.0)
+                bhi = jnp.max(xin)
+                new_state[key] = jnp.stack(
+                    [Q.ema_update(lo, blo, ema_decay), Q.ema_update(hi, bhi, ema_decay)]
+                )
+            w = params[f"w{nid}"]
+            mk = masks.get(f"w{nid}")
+            if mk is not None:
+                w = w * mk
+            b = params[f"b{nid}"]
+            if qat:
+                key = f"a{nid}"
+                xin = Q.fake_quant_act(xin, qstate[key][0], qstate[key][1], abits)
+                if f"s{nid}" in params:  # learned scale (A2Q schedule)
+                    w = Q.fake_quant_weight_lsq(w, params[f"s{nid}"], wbits)
+                else:
+                    w = Q.fake_quant_weight(w, wbits)
+            if op == "qlinear":
+                v = xin @ w.T + b
+            elif op == "qconv":
+                v = _conv2d(xin, w, n["stride"], n["pad"]) + b[None, :, None, None]
+            else:  # qdwconv
+                v = _conv2d(xin, w, n["stride"], n["pad"], groups=n["oc"]) + b[
+                    None, :, None, None
+                ]
+        vals[nid] = v
+    return vals[out_id], new_state

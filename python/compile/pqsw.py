@@ -1,0 +1,145 @@
+"""PQSW model container: serialize trained quantized models for the Rust engine.
+
+Layout (little-endian; parsed by `rust/src/formats/pqsw.rs`):
+
+    bytes 0..8    magic  b"PQSW1\\0\\0\\0"
+    bytes 8..12   u32    header_len (JSON bytes)
+    bytes 12..    header JSON, then zero padding to an 8-byte boundary
+    ...           blob section; every blob starts 8-byte aligned
+
+Header JSON schema:
+    {
+      "name": str, "arch": str, "schedule": str,
+      "wbits": int, "abits": int, "nm_m": int,
+      "target_sparsity": float, "achieved_sparsity": float,
+      "acc_bits_trained": int | null,       # A2Q accumulator target
+      "lowrank_k": int | null,
+      "acc_q": float, "acc_fp32": float,    # python-side eval accuracies
+      "input_shape": [c, h, w] | [dim],
+      "graph": [node...],                   # model.py IR; q-layers extended:
+          "w_scale": float, "x_scale": float, "x_offset": int,
+          "wq_blob": int, "bias_blob": int
+      "blobs": [{"offset": int, "len": int, "dtype": "i8"|"f32"|"i32"}]
+    }
+
+Weights are exported as int8 in (O, K) row-major layout where K is the
+contraction length the accumulator sees (I*kh*kw for conv via im2col,
+kh*kw for depthwise, in_features for linear). Quantization uses numpy
+`round` (half-to-even) — the Rust side mirrors this exactly.
+"""
+
+from __future__ import annotations
+
+import json
+import struct
+
+import numpy as np
+
+from . import model as M
+from . import quantize as Q
+
+MAGIC = b"PQSW1\x00\x00\x00"
+
+
+def _align8(n: int) -> int:
+    return (n + 7) & ~7
+
+
+def export_pqsw(
+    path: str,
+    name: str,
+    result,
+    cfg,
+    input_shape: list[int],
+) -> dict:
+    """Write a TrainResult to a .pqsw file; returns the manifest entry."""
+    graph_out = []
+    blobs_meta: list[dict] = []
+    blob_data: list[bytes] = []
+
+    def add_blob(arr: np.ndarray, dtype: str) -> int:
+        raw = arr.tobytes()
+        blobs_meta.append({"dtype": dtype, "len": len(raw)})
+        blob_data.append(raw)
+        return len(blob_data) - 1
+
+    for n in result.graph:
+        node = dict(n)
+        if n["op"] in ("qlinear", "qconv", "qdwconv"):
+            nid = n["id"]
+            w = np.asarray(result.params[f"w{nid}"], dtype=np.float64)
+            mk = result.masks.get(f"w{nid}")
+            if mk is not None:
+                w = w * np.asarray(mk)
+            wf = w.reshape(w.shape[0], -1)  # (O, K)
+            if f"s{nid}" in result.params:  # learned scale (A2Q schedule)
+                s = float(np.exp(np.asarray(result.params[f"s{nid}"])))
+                qp_w = Q.QParams(scale=s, offset=0, bits=cfg.wbits)
+            else:
+                qp_w = Q.weight_qparams_np(wf, cfg.wbits)
+            wq = Q.quantize_np(wf, qp_w).astype(np.int8)
+            bias = np.asarray(result.params[f"b{nid}"], dtype=np.float32)
+            lo, hi = [float(v) for v in np.asarray(result.qstate[f"a{nid}"])]
+            qp_x = Q.act_qparams_np(lo, hi, cfg.abits)
+            node["w_scale"] = qp_w.scale
+            node["x_scale"] = qp_x.scale
+            node["x_offset"] = qp_x.offset
+            node["wq_blob"] = add_blob(wq, "i8")
+            node["bias_blob"] = add_blob(bias, "f32")
+        graph_out.append(node)
+
+    header = {
+        "name": name,
+        "arch": cfg.arch,
+        "schedule": cfg.schedule,
+        "wbits": cfg.wbits,
+        "abits": cfg.abits,
+        "nm_m": cfg.nm_m,
+        "target_sparsity": cfg.sparsity,
+        "achieved_sparsity": result.sparsity,
+        "acc_bits_trained": cfg.acc_bits,
+        "lowrank_k": cfg.lowrank_k,
+        "acc_q": result.acc_q,
+        "acc_fp32": result.acc_fp32,
+        "input_shape": input_shape,
+        "graph": graph_out,
+        "blobs": blobs_meta,
+    }
+
+    # lay out blob offsets relative to blob-section start
+    off = 0
+    for bm in blobs_meta:
+        bm["offset"] = off
+        off = _align8(off + bm["len"])
+
+    hdr = json.dumps(header).encode()
+    with open(path, "wb") as f:
+        f.write(MAGIC)
+        f.write(struct.pack("<I", len(hdr)))
+        f.write(hdr)
+        pad = _align8(12 + len(hdr)) - (12 + len(hdr))
+        f.write(b"\x00" * pad)
+        pos = 0
+        for bm2, raw in zip(blobs_meta, blob_data):
+            assert bm2["offset"] == pos, (bm2, pos)
+            f.write(raw)
+            pos += len(raw)
+            apad = _align8(pos) - pos
+            f.write(b"\x00" * apad)
+            pos += apad
+
+    return {
+        "name": name,
+        "file": path.split("/")[-1],
+        "arch": cfg.arch,
+        "schedule": cfg.schedule,
+        "wbits": cfg.wbits,
+        "abits": cfg.abits,
+        "nm_m": cfg.nm_m,
+        "target_sparsity": cfg.sparsity,
+        "achieved_sparsity": result.sparsity,
+        "acc_bits_trained": cfg.acc_bits,
+        "lowrank_k": cfg.lowrank_k,
+        "acc_q": result.acc_q,
+        "acc_fp32": result.acc_fp32,
+    }

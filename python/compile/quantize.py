@@ -1,0 +1,119 @@
+"""Uniform per-tensor quantization (paper Section 2.1) + QAT fake-quant.
+
+Conventions (mirrored bit-exactly by `rust/src/quant`):
+
+  * Weights: symmetric signed b-bit, offset o_w = 0 (paper §2.1 follows
+    common practice), scale s_w = max|W| / (2^(b-1) - 1), values clamped to
+    [-(2^(b-1)-1), 2^(b-1)-1].
+  * Activations: affine b-bit per Eq. (1): s_x = R / (2^b - 1),
+    o_x = -2^(b-1) - round(min/s_x), q = clamp(round(x/s_x) + o_x,
+    -2^(b-1), 2^(b-1)-1). Ranges come from EMA min/max statistics collected
+    during QAT (the `QState` carried through training).
+  * Rounding is round-half-away-from-zero? No — we standardise on
+    numpy/jax `round` (banker's rounding, round-half-to-even) in BOTH
+    layers so integer parity holds.
+
+The integer inference identity used by the Rust engine:
+
+    z_f = s_w * s_x * (sum_k w_q x_q  -  o_x * sum_k w_q) + bias
+
+where `sum_k w_q x_q` is the width-limited accumulation the paper studies
+and `o_x * sum_k w_q` is a per-output constant (the activation-offset
+correction) computed outside the accumulator.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class QParams(NamedTuple):
+    scale: float
+    offset: int  # 0 for weights (symmetric)
+    bits: int
+
+
+# ---------------------------------------------------------------------------
+# numpy side (export / bit-exact helpers)
+# ---------------------------------------------------------------------------
+
+def weight_qparams_np(w: np.ndarray, bits: int) -> QParams:
+    """Symmetric per-tensor weight quantization parameters."""
+    amax = float(np.max(np.abs(w))) if w.size else 0.0
+    qmax = (1 << (bits - 1)) - 1
+    scale = amax / qmax if amax > 0 else 1.0
+    return QParams(scale=scale, offset=0, bits=bits)
+
+
+def act_qparams_np(lo: float, hi: float, bits: int) -> QParams:
+    """Affine activation quantization parameters per Eq. (1)."""
+    lo = min(lo, 0.0)  # always representable zero
+    hi = max(hi, lo + 1e-8)
+    scale = (hi - lo) / ((1 << bits) - 1)
+    offset = int(-(1 << (bits - 1)) - np.round(lo / scale))
+    return QParams(scale=scale, offset=offset, bits=bits)
+
+
+def quantize_np(x: np.ndarray, qp: QParams) -> np.ndarray:
+    """f32 -> integer values (int32 carrier) with clamping."""
+    if qp.offset == 0:
+        qmax = (1 << (qp.bits - 1)) - 1
+        q = np.round(x / qp.scale).astype(np.int64)
+        return np.clip(q, -qmax, qmax).astype(np.int32)
+    lo, hi = -(1 << (qp.bits - 1)), (1 << (qp.bits - 1)) - 1
+    q = np.round(x / qp.scale).astype(np.int64) + qp.offset
+    return np.clip(q, lo, hi).astype(np.int32)
+
+
+def dequantize_np(q: np.ndarray, qp: QParams) -> np.ndarray:
+    return (q.astype(np.float64) - qp.offset).astype(np.float32) * np.float32(
+        qp.scale
+    )
+
+
+# ---------------------------------------------------------------------------
+# jax side (QAT fake-quant with straight-through estimator)
+# ---------------------------------------------------------------------------
+
+def fake_quant_weight(w: jnp.ndarray, bits: int) -> jnp.ndarray:
+    """Symmetric fake-quant with STE: forward quantize/dequantize, identity
+    gradient. Scale is derived from the live tensor (per-tensor max)."""
+    qmax = (1 << (bits - 1)) - 1
+    amax = jnp.maximum(jnp.max(jnp.abs(w)), 1e-8)
+    scale = amax / qmax
+    wq = jnp.clip(jnp.round(w / scale), -qmax, qmax) * scale
+    return w + jax.lax.stop_gradient(wq - w)
+
+
+def fake_quant_weight_lsq(w: jnp.ndarray, log_s: jnp.ndarray, bits: int) -> jnp.ndarray:
+    """Symmetric fake-quant against a *learned* per-tensor scale exp(log_s)
+    (LSQ-style, used by the A2Q schedule). Forward: s * clip(round(w/s));
+    backward: through the soft clip, so gradients reach both w and log_s.
+    Decoupling the scale from max|w| is what makes the A2Q L1 projection a
+    genuine convex projection instead of a max-chasing spiral."""
+    qmax = (1 << (bits - 1)) - 1
+    s = jnp.exp(log_s)
+    hard = jnp.clip(jnp.round(w / s), -qmax, qmax) * s
+    soft = jnp.clip(w, -qmax * s, qmax * s)
+    return soft + jax.lax.stop_gradient(hard - soft)
+
+
+def fake_quant_act(x: jnp.ndarray, lo: jnp.ndarray, hi: jnp.ndarray, bits: int) -> jnp.ndarray:
+    """Affine fake-quant of activations against an externally tracked
+    (lo, hi) range (EMA statistics), with STE."""
+    lo = jnp.minimum(lo, 0.0)
+    hi = jnp.maximum(hi, lo + 1e-8)
+    scale = (hi - lo) / ((1 << bits) - 1)
+    qlo, qhi = -(1 << (bits - 1)), (1 << (bits - 1)) - 1
+    offset = -(1 << (bits - 1)) - jnp.round(lo / scale)
+    q = jnp.clip(jnp.round(x / scale) + offset, qlo, qhi)
+    xq = (q - offset) * scale
+    return x + jax.lax.stop_gradient(xq - x)
+
+
+def ema_update(stat: jnp.ndarray, new: jnp.ndarray, decay: float = 0.9) -> jnp.ndarray:
+    return decay * stat + (1.0 - decay) * new

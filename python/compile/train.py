@@ -1,0 +1,367 @@
+"""Training schedules for PQS: P->Q, Q->P, A2Q, filter pruning, low-rank.
+
+Implements the paper's training pipeline (Sections 4 and 5.0.2):
+
+  * iterative N:M magnitude pruning — every `prune_every` epochs the target
+    sparsity ramps linearly; the smallest round(s * group) values within each
+    consecutive group of M weights (along the dot-product/contraction axis)
+    are set to zero. Pruned weights stay pruned (their magnitude is 0).
+  * P->Q  — FP32 training with the pruning ramp, followed by QAT epochs.
+  * Q->P  — QAT from the start; the pruning signal is the *quantized*
+    weight magnitude (paper §4 shows this is the inferior signal).
+  * A2Q   — QAT with per-output-row L1-norm projection
+    sum_k |w_q| <= (2^(p-1)-1) / 2^(b-1), the accumulator-aware bound of
+    Colbert et al. (paper §3.1) which guarantees overflow-free p-bit
+    accumulation. No explicit pruning (the bound induces unstructured
+    sparsity by itself).
+  * filter — structured filter pruning baseline (Fig. 4 magenta): entire
+    output channels with the smallest L1 norms are removed.
+  * low-rank — before each pruning event the target matrix is replaced by
+    its rank-k SVD approximation (Fig. 3 study, MLP hidden layer only).
+
+Everything runs on CPU JAX; the per-epoch batch loop is a `lax.scan` inside
+one jit so single-core dispatch overhead stays negligible.
+"""
+
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import model as M
+
+
+@dataclass
+class TrainCfg:
+    arch: str = "mlp1"
+    schedule: str = "pq"  # fp32 | pq | qp | a2q | filter
+    epochs: int = 10
+    qat_epochs: int = 3  # trailing QAT epochs for pq/filter; ignored for qp/a2q
+    wbits: int = 8
+    abits: int = 8
+    sparsity: float = 0.0
+    nm_m: int = 16
+    acc_bits: int | None = None  # A2Q accumulator target p
+    lowrank_k: int | None = None  # Fig. 3: SVD rank before prune events
+    lr: float = 2e-3
+    bs: int = 128
+    seed: int = 0
+    arch_kw: dict = field(default_factory=dict)
+
+
+# ---------------------------------------------------------------------------
+# hand-rolled Adam (no optax in this environment)
+# ---------------------------------------------------------------------------
+
+def adam_init(params):
+    z = {k: jnp.zeros_like(v) for k, v in params.items()}
+    return {"m": z, "v": {k: jnp.zeros_like(v) for k, v in params.items()}, "t": jnp.zeros((), jnp.int32)}
+
+
+def adam_update(params, grads, state, lr, b1=0.9, b2=0.999, eps=1e-8):
+    t = state["t"] + 1
+    m = {k: b1 * state["m"][k] + (1 - b1) * grads[k] for k in params}
+    v = {k: b2 * state["v"][k] + (1 - b2) * grads[k] ** 2 for k in params}
+    tf = t.astype(jnp.float32)
+    new = {}
+    for k in params:
+        mhat = m[k] / (1 - b1**tf)
+        vhat = v[k] / (1 - b2**tf)
+        new[k] = params[k] - lr * mhat / (jnp.sqrt(vhat) + eps)
+    return new, {"m": m, "v": v, "t": t}
+
+
+# ---------------------------------------------------------------------------
+# pruning (numpy, between epochs — exact and easy to audit)
+# ---------------------------------------------------------------------------
+
+def nm_prune_mask(w: np.ndarray, sparsity: float, m: int) -> np.ndarray:
+    """N:M mask along the contraction axis. w is (out, K) after flattening.
+
+    Within each consecutive group of `m` (ragged tail allowed) the
+    round(sparsity * group_len) smallest |w| are zeroed."""
+    out, K = w.shape
+    mask = np.ones_like(w, dtype=np.float32)
+    for g0 in range(0, K, m):
+        g1 = min(g0 + m, K)
+        glen = g1 - g0
+        nprune = int(round(sparsity * glen))
+        if nprune <= 0:
+            continue
+        seg = np.abs(w[:, g0:g1])
+        idx = np.argsort(seg, axis=1, kind="stable")[:, :nprune]
+        rows = np.repeat(np.arange(out)[:, None], nprune, axis=1)
+        mask[rows, g0 + idx] = 0.0
+    return mask
+
+
+def filter_prune_mask(w: np.ndarray, sparsity: float) -> np.ndarray:
+    """Structured baseline: zero whole output rows with smallest L1 norm."""
+    out = w.shape[0]
+    nprune = int(round(sparsity * out))
+    mask = np.ones_like(w, dtype=np.float32)
+    if nprune <= 0:
+        return mask
+    nprune = min(nprune, out - 1)  # keep at least one filter
+    norms = np.abs(w).reshape(out, -1).sum(axis=1)
+    mask[np.argsort(norms, kind="stable")[:nprune]] = 0.0
+    return mask
+
+
+def lowrank_approx(w: np.ndarray, k: int) -> np.ndarray:
+    u, s, vt = np.linalg.svd(w, full_matrices=False)
+    k = min(k, len(s))
+    return (u[:, :k] * s[:k]) @ vt[:k]
+
+
+def _flat2(w: np.ndarray) -> np.ndarray:
+    return w.reshape(w.shape[0], -1)
+
+
+def prune_event(
+    graph, params, masks, cfg: TrainCfg, target: float, *, quant_signal: bool
+):
+    """Apply one pruning event at cumulative sparsity `target`.
+
+    quant_signal=True prunes on |w_q| (Q->P); otherwise on FP32 |w| (P->Q).
+    Returns updated (params, masks) with pruned weights zeroed."""
+    params = dict(params)
+    masks = dict(masks)
+    for n in M.q_layers(graph):
+        if not n.get("prune", False):
+            continue
+        key = f"w{n['id']}"
+        w = np.asarray(params[key])
+        shape = w.shape
+        wf = _flat2(w).copy()
+        if cfg.lowrank_k is not None and n.get("name") == "hidden":
+            wf = lowrank_approx(wf, cfg.lowrank_k)
+        sig = wf
+        if quant_signal:
+            qmax = (1 << (cfg.wbits - 1)) - 1
+            s = np.abs(wf).max() / qmax if np.abs(wf).max() > 0 else 1.0
+            sig = np.round(wf / s)  # quantized-magnitude signal
+        if cfg.schedule == "filter":
+            mk = filter_prune_mask(sig, target)
+        else:
+            mk = nm_prune_mask(sig, target, cfg.nm_m)
+        wf = wf * mk
+        params[key] = jnp.asarray(wf.reshape(shape))
+        masks[key] = jnp.asarray(mk.reshape(shape))
+    return params, masks
+
+
+# ---------------------------------------------------------------------------
+# A2Q projection
+# ---------------------------------------------------------------------------
+
+def _l1_ball_project_rows(wf: jnp.ndarray, radius: jnp.ndarray) -> jnp.ndarray:
+    """Euclidean projection of each row of wf onto the L1 ball of `radius`
+    (Duchi et al. 2008, sort-based soft thresholding). Rows already inside
+    the ball are untouched."""
+    radius = jnp.broadcast_to(jnp.asarray(radius, wf.dtype), (wf.shape[0],))
+    a = jnp.sort(jnp.abs(wf), axis=1)[:, ::-1]  # descending magnitudes
+    css = jnp.cumsum(a, axis=1)
+    j = jnp.arange(1, wf.shape[1] + 1, dtype=wf.dtype)
+    cond = a - (css - radius[:, None]) / j > 0
+    rho = jnp.maximum(jnp.sum(cond, axis=1) - 1, 0)
+    css_rho = jnp.take_along_axis(css, rho[:, None], axis=1)[:, 0]
+    tau = jnp.maximum((css_rho - radius) / (rho + 1).astype(wf.dtype), 0.0)
+    inside = jnp.sum(jnp.abs(wf), axis=1) <= radius
+    tau = jnp.where(inside, 0.0, tau)
+    return jnp.sign(wf) * jnp.maximum(jnp.abs(wf) - tau[:, None], 0.0)
+
+
+def a2q_project(params, graph, wbits: int, acc_bits: int, shrink: float = 0.0):
+    """A2Q accumulator-aware bound: per-output-row sum|w_q| <= L with
+    L = (2^(p-1)-1)/2^(b-1) (paper §3.1). With a per-tensor max-derived
+    scale s_w a multiplicative rescale is scale-invariant, so we project
+    rows onto the L1 ball of radius L*s_w (soft threshold); the threshold
+    shrinks small weights toward zero — exactly the unstructured sparsity
+    the paper attributes to A2Q — and the bound converges over steps."""
+    limit = float((1 << (acc_bits - 1)) - 1) / float(1 << (wbits - 1))
+    qmax = (1 << (wbits - 1)) - 1
+    out = dict(params)
+    for n in M.q_layers(graph):
+        key = f"w{n['id']}"
+        w = out[key]
+        wf = w.reshape(w.shape[0], -1)
+        skey = f"s{n['id']}"
+        if skey in out:  # learned, decoupled scale (the A2Q way)
+            s = jax.lax.stop_gradient(jnp.exp(out[skey]))
+        else:
+            s = jnp.maximum(jnp.max(jnp.abs(wf)), 1e-8) / qmax
+        # Anneal: early epochs only shrink each row's L1 mass by a fraction
+        # per step (so the optimizer keeps learning); late epochs project
+        # hard onto the bound (shrink=0) so the export satisfies it.
+        l1 = jnp.sum(jnp.abs(wf), axis=1)
+        radius = jnp.maximum(limit * s, shrink * l1)
+        wf = _l1_ball_project_rows(wf, radius)
+        out[key] = wf.reshape(w.shape)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# loss / steps
+# ---------------------------------------------------------------------------
+
+def _loss_fn(params, masks, qstate, graph, x, y, qat, wbits, abits):
+    logits, new_state = M.forward(
+        graph, params, masks, qstate, x, qat=qat, wbits=wbits, abits=abits, track=True
+    )
+    logp = jax.nn.log_softmax(logits)
+    loss = -jnp.mean(jnp.take_along_axis(logp, y[:, None], axis=1))
+    return loss, new_state
+
+
+@functools.partial(jax.jit, static_argnames=("graph_key", "qat", "wbits", "abits", "lr", "a2q_p", "a2q_shrink"))
+def _train_epoch(
+    params, masks, qstate, opt, xb, yb, *, graph_key, qat, wbits, abits, lr, a2q_p,
+    a2q_shrink=0.0,
+):
+    graph = _GRAPH_CACHE[graph_key]
+
+    def step(carry, batch):
+        params, qstate, opt = carry
+        x, y = batch
+        (loss, new_state), grads = jax.value_and_grad(_loss_fn, has_aux=True)(
+            params, masks, qstate, graph, x, y, qat, wbits, abits
+        )
+        params, opt = adam_update(params, grads, opt, lr)
+        if a2q_p is not None:
+            params = a2q_project(params, graph, wbits, a2q_p, a2q_shrink)
+        return (params, new_state, opt), loss
+
+    (params, qstate, opt), losses = jax.lax.scan(step, (params, qstate, opt), (xb, yb))
+    return params, qstate, opt, jnp.mean(losses)
+
+
+@functools.partial(jax.jit, static_argnames=("graph_key", "qat", "wbits", "abits"))
+def _eval_batched(params, masks, qstate, xb, yb, *, graph_key, qat, wbits, abits):
+    graph = _GRAPH_CACHE[graph_key]
+
+    def step(_, batch):
+        x, y = batch
+        logits, _ = M.forward(
+            graph, params, masks, qstate, x, qat=qat, wbits=wbits, abits=abits, track=False
+        )
+        return None, jnp.mean((jnp.argmax(logits, axis=1) == y).astype(jnp.float32))
+    _, accs = jax.lax.scan(step, None, (xb, yb))
+    return jnp.mean(accs)
+
+
+# Graphs are lists of dicts (unhashable); key them by (arch, kwargs) string so
+# jit static args work.
+_GRAPH_CACHE: dict[str, list] = {}
+
+
+def _graph_for(cfg: TrainCfg) -> tuple[str, list]:
+    key = f"{cfg.arch}:{sorted(cfg.arch_kw.items())}"
+    if key not in _GRAPH_CACHE:
+        _GRAPH_CACHE[key] = M.ARCHS[cfg.arch](**cfg.arch_kw)
+    return key, _GRAPH_CACHE[key]
+
+
+def _batchify(x: np.ndarray, y: np.ndarray, bs: int):
+    nb = len(x) // bs
+    xb = jnp.asarray(x[: nb * bs].reshape(nb, bs, *x.shape[1:]))
+    yb = jnp.asarray(y[: nb * bs].reshape(nb, bs).astype(np.int32))
+    return xb, yb
+
+
+@dataclass
+class TrainResult:
+    graph: list
+    params: dict
+    masks: dict
+    qstate: dict
+    acc_q: float    # fake-quant eval accuracy (wide accumulator)
+    acc_fp32: float # plain f32 eval accuracy
+    losses: list
+    sparsity: float # achieved fraction of zero weights in pruned layers
+
+
+def achieved_sparsity(graph, params, masks) -> float:
+    tot = nz = 0
+    for n in M.q_layers(graph):
+        if not n.get("prune", False):
+            continue
+        w = np.asarray(params[f"w{n['id']}"])
+        mk = masks.get(f"w{n['id']}")
+        if mk is not None:
+            w = w * np.asarray(mk)
+        tot += w.size
+        nz += int((w == 0).sum())
+    return nz / tot if tot else 0.0
+
+
+def train(cfg: TrainCfg, data) -> TrainResult:
+    """Run one schedule. `data` = (x_train, y_train, x_test, y_test)."""
+    x_tr, y_tr, x_te, y_te = data
+    gkey, graph = _graph_for(cfg)
+    params = M.init_params(graph, cfg.seed)
+    if cfg.schedule == "a2q":
+        # learned per-tensor weight scales, initialised from the data range
+        qmax = (1 << (cfg.wbits - 1)) - 1
+        for n in M.q_layers(graph):
+            w = params[f"w{n['id']}"]
+            params[f"s{n['id']}"] = jnp.log(jnp.max(jnp.abs(w)) / qmax)
+    masks = M.ones_masks(params)
+    qstate = M.init_qstate(graph)
+    opt = adam_init(params)
+    xb, yb = _batchify(x_tr, y_tr, cfg.bs)
+    xe, ye = _batchify(x_te, y_te, min(cfg.bs, 256))
+
+    sched = cfg.schedule
+    qat_from = {
+        "fp32": cfg.epochs + 1,     # never
+        "pq": cfg.epochs - cfg.qat_epochs,
+        "filter": cfg.epochs - cfg.qat_epochs,
+        "qp": 0,
+        "a2q": 0,
+    }[sched]
+    # pruning ramp: events at the end of epochs 0..ramp_end-1
+    ramp_end = max(1, (cfg.epochs - cfg.qat_epochs - 1) if sched in ("pq", "filter") else cfg.epochs - 2)
+    do_prune = sched in ("pq", "qp", "filter") and cfg.sparsity > 0
+
+    losses = []
+    rng = np.random.default_rng(cfg.seed + 1)
+    n_batches = xb.shape[0]
+    for epoch in range(cfg.epochs):
+        qat = epoch >= qat_from
+        perm = rng.permutation(n_batches)
+        # A2Q: soft L1 annealing for the first half, then hard projection
+        # with a lowered learning rate so the network recovers under the
+        # (now exact) accumulator bound.
+        a2q_hard = sched == "a2q" and epoch >= 0.5 * cfg.epochs
+        params, qstate, opt, loss = _train_epoch(
+            params, masks, qstate, opt, xb[perm], yb[perm],
+            graph_key=gkey, qat=qat, wbits=cfg.wbits, abits=cfg.abits,
+            lr=cfg.lr * (0.3 if a2q_hard else 1.0),
+            a2q_p=cfg.acc_bits if sched == "a2q" else None,
+            a2q_shrink=0.0 if a2q_hard else 0.9,
+        )
+        losses.append(float(loss))
+        if do_prune and epoch < ramp_end:
+            target = cfg.sparsity * (epoch + 1) / ramp_end
+            params, masks = prune_event(
+                graph, params, masks, cfg, target, quant_signal=(sched == "qp")
+            )
+
+    acc_q = float(
+        _eval_batched(params, masks, qstate, xe, ye, graph_key=gkey, qat=True,
+                      wbits=cfg.wbits, abits=cfg.abits)
+    )
+    acc_fp = float(
+        _eval_batched(params, masks, qstate, xe, ye, graph_key=gkey, qat=False,
+                      wbits=cfg.wbits, abits=cfg.abits)
+    )
+    return TrainResult(
+        graph=graph, params=params, masks=masks, qstate=qstate,
+        acc_q=acc_q, acc_fp32=acc_fp, losses=losses,
+        sparsity=achieved_sparsity(graph, params, masks),
+    )

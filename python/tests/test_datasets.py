@@ -1,0 +1,55 @@
+"""Tests for the synthetic dataset generators + PQSD container round-trip."""
+
+import os
+
+import numpy as np
+
+from compile import datasets as D
+
+
+def test_mnist_deterministic():
+    a, la = D.synth_mnist(32, seed=9)
+    b, lb = D.synth_mnist(32, seed=9)
+    np.testing.assert_array_equal(a, b)
+    np.testing.assert_array_equal(la, lb)
+
+
+def test_mnist_shapes_and_range():
+    x, y = D.synth_mnist(16, seed=0)
+    assert x.shape == (16, 1, 28, 28)
+    assert y.shape == (16,)
+    assert x.min() >= 0.0 and x.max() <= 1.0
+    assert set(np.unique(y)).issubset(set(range(10)))
+
+
+def test_cifar_shapes_and_range():
+    x, y = D.synth_cifar(16, seed=0, size=20)
+    assert x.shape == (16, 3, 20, 20)
+    assert x.min() >= 0.0 and x.max() <= 1.0
+
+
+def test_all_classes_reachable():
+    _, y = D.synth_mnist(500, seed=1)
+    assert len(np.unique(y)) == 10
+    _, y = D.synth_cifar(500, seed=1, size=20)
+    assert len(np.unique(y)) == 10
+
+
+def test_pqsd_roundtrip(tmp_path):
+    x, y = D.synth_cifar(8, seed=5, size=20)
+    p = str(tmp_path / "d.bin")
+    D.save_dataset(p, x, y)
+    x2, y2 = D.load_dataset(p)
+    np.testing.assert_array_equal(y, y2)
+    # u8 quantization: within 1/255 of original
+    assert np.max(np.abs(x - x2)) <= (1.0 / 255.0) + 1e-6
+    assert os.path.exists(str(tmp_path / "d.meta.json"))
+
+
+def test_classes_distinguishable_by_mean_pixel():
+    """Sanity: per-class mean images differ (the task is learnable)."""
+    x, y = D.synth_mnist(400, seed=3)
+    means = np.stack([x[y == c].mean(axis=0) for c in range(10)])
+    d = np.abs(means[:, None] - means[None, :]).sum(axis=(2, 3, 4))
+    off_diag = d[~np.eye(10, dtype=bool)]
+    assert off_diag.min() > 1.0

@@ -1,0 +1,104 @@
+"""PQSW container + experiment-matrix tests."""
+
+import json
+import struct
+
+import numpy as np
+import pytest
+
+from compile import datasets as D
+from compile.aot import build_matrix, cfg_name
+from compile.pqsw import export_pqsw
+from compile.train import TrainCfg, train
+
+
+@pytest.fixture(scope="module")
+def trained(tmp_path_factory):
+    x, y = D.synth_mnist(256, seed=31)
+    xt, yt = D.synth_mnist(128, seed=32)
+    cfg = TrainCfg(arch="mlp2", schedule="pq", epochs=3, qat_epochs=1,
+                   sparsity=0.5, nm_m=16, lr=5e-3, bs=64,
+                   arch_kw={"hidden": 32})
+    res = train(cfg, (x, y, xt, yt))
+    path = str(tmp_path_factory.mktemp("pqsw") / "m.pqsw")
+    entry = export_pqsw(path, "m", res, cfg, [1, 28, 28])
+    return path, entry, res, cfg
+
+
+def _parse(path):
+    raw = open(path, "rb").read()
+    assert raw[:8] == b"PQSW1\x00\x00\x00"
+    hlen = struct.unpack("<I", raw[8:12])[0]
+    hdr = json.loads(raw[12:12 + hlen])
+    base = (12 + hlen + 7) & ~7
+    return raw, hdr, base
+
+
+def test_header_fields(trained):
+    path, entry, res, cfg = trained
+    _, hdr, _ = _parse(path)
+    assert hdr["arch"] == "mlp2"
+    assert hdr["wbits"] == 8
+    assert hdr["nm_m"] == 16
+    assert abs(hdr["achieved_sparsity"] - res.sparsity) < 1e-9
+    assert entry["file"] == "m.pqsw"
+
+
+def test_blobs_are_aligned_and_in_bounds(trained):
+    path, _, _, _ = trained
+    raw, hdr, base = _parse(path)
+    for b in hdr["blobs"]:
+        assert b["offset"] % 8 == 0
+        assert base + b["offset"] + b["len"] <= len(raw)
+
+
+def test_weight_blob_roundtrip(trained):
+    """int8 weights in the container dequantize back to ~the fp32 weights."""
+    path, _, res, cfg = trained
+    raw, hdr, base = _parse(path)
+    hidden = [n for n in hdr["graph"] if n.get("name") == "hidden"][0]
+    wb = hdr["blobs"][hidden["wq_blob"]]
+    wq = np.frombuffer(raw[base + wb["offset"]: base + wb["offset"] + wb["len"]],
+                       dtype=np.int8).reshape(hidden["oc"], hidden["ic"])
+    w = np.asarray(res.params["w2"]) * np.asarray(res.masks["w2"])
+    back = wq.astype(np.float64) * hidden["w_scale"]
+    assert np.abs(back - w).max() <= hidden["w_scale"] * 0.5 + 1e-6
+    # pruned zeros stay zero in the quantized container
+    assert np.all(wq[np.asarray(res.masks["w2"]) == 0] == 0)
+
+
+def test_sparsity_survives_quantization(trained):
+    path, _, res, _ = trained
+    raw, hdr, base = _parse(path)
+    hidden = [n for n in hdr["graph"] if n.get("name") == "hidden"][0]
+    wb = hdr["blobs"][hidden["wq_blob"]]
+    wq = np.frombuffer(raw[base + wb["offset"]: base + wb["offset"] + wb["len"]],
+                       dtype=np.int8)
+    frac_zero = (wq == 0).mean()
+    assert frac_zero >= res.sparsity - 1e-9  # quantization only adds zeros
+
+
+def test_cfg_names_unique_in_matrix(monkeypatch):
+    exps = build_matrix()
+    seen = {}
+    for exp, cfgs in exps.items():
+        for cfg in cfgs:
+            name = cfg_name(cfg)
+            if name in seen:
+                # duplicates across experiments must be identical configs
+                assert seen[name] == (cfg.arch, cfg.schedule, cfg.sparsity,
+                                      cfg.wbits, cfg.acc_bits, cfg.lowrank_k)
+            seen[name] = (cfg.arch, cfg.schedule, cfg.sparsity, cfg.wbits,
+                          cfg.acc_bits, cfg.lowrank_k)
+    assert len(seen) >= 10
+
+
+def test_matrix_covers_all_figures():
+    exps = build_matrix()
+    for k in ("fig2", "fig3", "fig4", "fig5", "fp32"):
+        assert exps[k], f"experiment {k} empty"
+    # fig4 must include the filter-pruning baseline unless quick mode
+    import os
+    if os.environ.get("PQS_QUICK", "") in ("", "0"):
+        assert any(c.schedule == "filter" for c in exps["fig4"])
+        assert any(c.schedule == "a2q" for c in exps["fig5"])

@@ -1,0 +1,70 @@
+"""Tests for uniform quantization (Eq. 1-4 semantics)."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import quantize as Q
+
+
+@given(
+    st.lists(st.floats(-10, 10, allow_nan=False), min_size=1, max_size=64),
+    st.sampled_from([4, 5, 6, 8]),
+)
+@settings(max_examples=100, deadline=None)
+def test_weight_roundtrip_error_bounded(vals, bits):
+    w = np.array(vals, dtype=np.float32)
+    qp = Q.weight_qparams_np(w, bits)
+    q = Q.quantize_np(w, qp)
+    back = Q.dequantize_np(q, qp)
+    # quantization error is at most half a step
+    assert np.all(np.abs(back - w) <= qp.scale * 0.5 + 1e-5)
+
+
+@given(
+    st.floats(-5, 0), st.floats(0.1, 8), st.sampled_from([4, 6, 8]),
+)
+@settings(max_examples=100, deadline=None)
+def test_act_zero_maps_exactly(lo, hi, bits):
+    """Eq. (1) guarantees the FP32 value 0 maps to an integer exactly."""
+    qp = Q.act_qparams_np(lo, hi, bits)
+    q0 = Q.quantize_np(np.zeros(1, dtype=np.float32), qp)
+    back = Q.dequantize_np(q0, qp)
+    assert abs(float(back[0])) <= qp.scale * 0.51
+
+
+@given(st.floats(-5, 0), st.floats(0.1, 8), st.sampled_from([4, 6, 8]))
+@settings(max_examples=100, deadline=None)
+def test_act_values_in_signed_range(lo, hi, bits):
+    qp = Q.act_qparams_np(lo, hi, bits)
+    x = np.linspace(lo, hi, 100, dtype=np.float32)
+    q = Q.quantize_np(x, qp)
+    assert q.min() >= -(1 << (bits - 1))
+    assert q.max() <= (1 << (bits - 1)) - 1
+
+
+def test_weight_symmetric_range():
+    w = np.array([-1.0, 0.5, 1.0], dtype=np.float32)
+    qp = Q.weight_qparams_np(w, 8)
+    q = Q.quantize_np(w, qp)
+    assert list(q) == [-127, 64, 127]  # 0.5/ (1/127) = 63.5 -> round-even 64
+    assert qp.offset == 0
+
+
+def test_fake_quant_weight_idempotent_on_grid():
+    import jax.numpy as jnp
+
+    w = jnp.array([-1.0, 0.0, 0.5, 1.0])
+    fq = Q.fake_quant_weight(w, 8)
+    fq2 = Q.fake_quant_weight(fq, 8)
+    np.testing.assert_allclose(np.asarray(fq), np.asarray(fq2), atol=1e-6)
+
+
+def test_fake_quant_act_matches_np():
+    import jax.numpy as jnp
+
+    x = np.linspace(-0.3, 2.1, 57, dtype=np.float32)
+    lo, hi = -0.3, 2.1
+    fq = np.asarray(Q.fake_quant_act(jnp.asarray(x), jnp.float32(lo), jnp.float32(hi), 8))
+    qp = Q.act_qparams_np(lo, hi, 8)
+    back = Q.dequantize_np(Q.quantize_np(x, qp), qp)
+    np.testing.assert_allclose(fq, back, atol=1e-5)

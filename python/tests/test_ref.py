@@ -1,0 +1,125 @@
+"""Property tests for the bit-exact reference semantics (`kernels/ref.py`).
+
+These are the invariants the paper's analysis rests on (Section 3):
+sorting never changes the exact sum, resolves transient overflows, and a
+persistent overflow clips to the saturation boundary.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+
+
+def prods_strategy(max_len=200, bits=8):
+    lim = 1 << (bits - 1)
+    return st.lists(
+        st.integers(min_value=-(lim - 1) * lim, max_value=(lim - 1) * lim),
+        min_size=0,
+        max_size=max_len,
+    )
+
+
+@given(prods_strategy(), st.integers(min_value=10, max_value=28))
+@settings(max_examples=200, deadline=None)
+def test_sorted1_pair_preserves_sum(prods, p):
+    prods = np.array(prods, dtype=np.int64)
+    s = ref.sorted1_pair(prods)
+    assert s.sum() == prods.sum()
+
+
+@given(prods_strategy(), st.integers(min_value=12, max_value=28))
+@settings(max_examples=200, deadline=None)
+def test_exact_policy_matches_sum(prods, p):
+    prods = np.array(prods, dtype=np.int64)
+    v, e = ref.dot_with_policy(prods, p, "exact")
+    assert v == prods.sum() and e == 0
+
+
+@given(prods_strategy(), st.integers(min_value=12, max_value=28))
+@settings(max_examples=200, deadline=None)
+def test_clip_no_overflow_is_exact(prods, p):
+    prods = np.array(prods, dtype=np.int64)
+    v, e = ref.clip_accumulate(prods, p)
+    if e == 0:
+        assert v == prods.sum()
+
+
+@given(prods_strategy(), st.integers(min_value=12, max_value=28))
+@settings(max_examples=300, deadline=None)
+def test_sorted_full_resolves_all_transients(prods, p):
+    """Algorithm 1's guarantee: if the final result fits, there is an
+    ordering with no intermediate overflow — and the multi-round sorted
+    accumulation finds it."""
+    prods = np.array(prods, dtype=np.int64)
+    cls = ref.classify_overflow(prods, p)
+    v, e = ref.sorted_full_dot(prods, p)
+    if not cls["persistent"]:
+        assert e == 0, (prods, p)
+        assert v == cls["exact"]
+    else:
+        # persistent: monotone accumulation clips at the boundary
+        lo, hi = ref.acc_range(p)
+        assert v == (hi if cls["exact"] > hi else lo)
+
+
+@given(prods_strategy(), st.integers(min_value=12, max_value=28))
+@settings(max_examples=200, deadline=None)
+def test_sorted1_no_events_means_exact(prods, p):
+    prods = np.array(prods, dtype=np.int64)
+    v, e = ref.sorted1_dot(prods, p)
+    if e == 0:
+        assert v == prods.sum()
+
+
+@given(prods_strategy())
+@settings(max_examples=100, deadline=None)
+def test_wide_accumulator_never_overflows(prods):
+    prods = np.array(prods, dtype=np.int64)
+    v, e = ref.clip_accumulate(prods, 48)
+    assert e == 0 and v == prods.sum()
+
+
+@given(prods_strategy(), st.integers(min_value=12, max_value=24))
+@settings(max_examples=200, deadline=None)
+def test_transient_persistent_partition(prods, p):
+    prods = np.array(prods, dtype=np.int64)
+    cls = ref.classify_overflow(prods, p)
+    # transient and persistent are mutually exclusive; transient requires
+    # a naive-order event
+    assert not (cls["transient"] and cls["persistent"])
+    if cls["transient"]:
+        assert cls["naive_events"] > 0
+
+
+def test_wrap_matches_twos_complement():
+    # -overflow wraps to positive and vice versa
+    v, e = ref.wrap_accumulate(np.array([120, 10], dtype=np.int64), 8)
+    assert e == 1 and v == 130 - 256
+    v, e = ref.wrap_accumulate(np.array([-120, -10], dtype=np.int64), 8)
+    assert e == 1 and v == -130 + 256
+
+
+def test_clip_saturates():
+    v, e = ref.clip_accumulate(np.array([120, 10, 5], dtype=np.int64), 8)
+    assert v == 127 and e == 2
+    v, e = ref.clip_accumulate(np.array([-120, -10, -5], dtype=np.int64), 8)
+    assert v == -128 and e == 2
+
+
+def test_sorted_full_zero_and_singletons():
+    assert ref.sorted_full_dot(np.array([], dtype=np.int64), 12) == (0, 0)
+    assert ref.sorted_full_dot(np.array([5], dtype=np.int64), 12) == (5, 0)
+    assert ref.sorted_full_dot(np.array([0, 0], dtype=np.int64), 12) == (0, 0)
+
+
+def test_classify_example_from_paper():
+    # K >= 2^(p-2b) threshold: 8-bit values, p=16 accumulator can overflow
+    # after summing only a few maximal products
+    prods = np.array([127 * 127] * 3, dtype=np.int64)
+    cls = ref.classify_overflow(prods, 16)
+    assert cls["persistent"]  # 48387 > 32767
+    prods = np.array([127 * 127] * 3 + [-127 * 127] * 2, dtype=np.int64)
+    cls = ref.classify_overflow(prods, 16)
+    assert cls["transient"] and not cls["persistent"]

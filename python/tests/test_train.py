@@ -1,0 +1,111 @@
+"""Smoke + invariant tests for the training schedules (tiny budgets)."""
+
+import numpy as np
+import pytest
+
+from compile import datasets as D
+from compile import model as M
+from compile.train import (
+    TrainCfg,
+    filter_prune_mask,
+    lowrank_approx,
+    nm_prune_mask,
+    train,
+)
+
+
+@pytest.fixture(scope="module")
+def tiny_mnist():
+    x, y = D.synth_mnist(512, seed=21)
+    xt, yt = D.synth_mnist(256, seed=22)
+    return (x, y, xt, yt)
+
+
+def test_nm_prune_mask_exact_fraction():
+    rng = np.random.default_rng(0)
+    w = rng.normal(size=(8, 64))
+    mk = nm_prune_mask(w, 0.5, 16)
+    # every group of 16 has exactly 8 zeros
+    for g in range(0, 64, 16):
+        assert (mk[:, g : g + 16] == 0).sum(axis=1).tolist() == [8] * 8
+
+
+def test_nm_prune_ragged_tail():
+    rng = np.random.default_rng(1)
+    w = rng.normal(size=(4, 37))  # 2 groups of 16 + tail of 5
+    mk = nm_prune_mask(w, 0.5, 16)
+    tail = mk[:, 32:]
+    assert ((tail == 0).sum(axis=1) == round(0.5 * 5)).all()
+
+
+def test_nm_prune_removes_smallest():
+    w = np.array([[0.1, -5.0, 0.2, 4.0]])
+    mk = nm_prune_mask(w, 0.5, 4)
+    np.testing.assert_array_equal(mk, [[0.0, 1.0, 0.0, 1.0]])
+
+
+def test_nm_prune_monotone():
+    """Already-zeroed weights stay pruned as sparsity ramps."""
+    rng = np.random.default_rng(2)
+    w = rng.normal(size=(4, 32))
+    m1 = nm_prune_mask(w, 0.25, 16)
+    w2 = w * m1
+    m2 = nm_prune_mask(w2, 0.5, 16)
+    assert np.all(m2 <= m1 + 1e-9)  # zeros only grow
+
+
+def test_filter_prune_whole_rows():
+    rng = np.random.default_rng(3)
+    w = rng.normal(size=(8, 10))
+    mk = filter_prune_mask(w, 0.5)
+    rowz = (mk == 0).all(axis=1)
+    assert rowz.sum() == 4
+    # smallest-norm rows die first
+    norms = np.abs(w).sum(axis=1)
+    assert set(np.argsort(norms)[:4]) == set(np.where(rowz)[0])
+
+
+def test_lowrank_rank():
+    rng = np.random.default_rng(4)
+    w = rng.normal(size=(20, 30))
+    a = lowrank_approx(w, 5)
+    assert np.linalg.matrix_rank(a, tol=1e-6) == 5
+
+
+def test_pq_training_learns_and_prunes(tiny_mnist):
+    cfg = TrainCfg(arch="mlp2", schedule="pq", epochs=5, qat_epochs=2,
+                   sparsity=0.5, nm_m=32, lr=5e-3, bs=64,
+                   arch_kw={"hidden": 64})
+    r = train(cfg, tiny_mnist)
+    assert r.acc_q > 0.5  # far above 10% chance
+    assert abs(r.sparsity - 0.5) < 0.05
+
+
+def test_qp_training_runs(tiny_mnist):
+    cfg = TrainCfg(arch="mlp2", schedule="qp", epochs=4, qat_epochs=0,
+                   sparsity=0.5, nm_m=32, lr=5e-3, bs=64,
+                   arch_kw={"hidden": 64})
+    r = train(cfg, tiny_mnist)
+    assert r.acc_q > 0.3
+    assert abs(r.sparsity - 0.5) < 0.05
+
+
+def test_a2q_bound_enforced(tiny_mnist):
+    cfg = TrainCfg(arch="mlp2", schedule="a2q", epochs=6, qat_epochs=2,
+                   wbits=5, abits=5, acc_bits=13, lr=5e-3, bs=64,
+                   arch_kw={"hidden": 64})
+    r = train(cfg, tiny_mnist)
+    limit = ((1 << 12) - 1) / (1 << 4)
+    qmax = 15
+    for n in M.q_layers(r.graph):
+        w = np.asarray(r.params[f"w{n['id']}"]).reshape(n["oc"], -1)
+        s = float(np.exp(np.asarray(r.params[f"s{n['id']}"])))
+        wq = np.clip(np.round(w / s), -qmax, qmax)
+        # small rounding slack allowed (round-to-nearest after projection)
+        assert np.abs(wq).sum(axis=1).max() <= limit * 1.1 + 1
+
+
+def test_fp32_baseline(tiny_mnist):
+    cfg = TrainCfg(arch="mlp1", schedule="fp32", epochs=5, lr=5e-3, bs=64)
+    r = train(cfg, tiny_mnist)
+    assert r.acc_fp32 > 0.5

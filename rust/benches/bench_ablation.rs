@@ -1,0 +1,143 @@
+//! Ablation bench for the design choices DESIGN.md calls out:
+//!
+//! 1. sorting rounds — none (clip) vs one round (sorted1) vs full
+//!    Algorithm 1: how many transient overflows does each leave, and what
+//!    does each cost? (paper §3.2: one round suffices for ~99%+)
+//! 2. early persistent-overflow exit (§6): how many accumulation steps
+//!    does the monotone phase skip once clipped?
+//! 3. pairing order — PQS pairing (largest pos + most-negative) vs a
+//!    naive interleave of sorted positives/negatives: shows *why* the
+//!    pairing is the right order.
+//!
+//!     cargo bench --offline --bench bench_ablation
+
+use pqs::accum;
+use pqs::dot::{classify, sorted_full_dot, sorted1_dot, DotEngine};
+use pqs::dot::sorted::sorted_full_dot_early_exit;
+use pqs::util::bench::{bench, black_box};
+use pqs::util::rng::Pcg32;
+
+/// Products with a controllable transient profile: balanced heavy tails.
+fn gen(rng: &mut Pcg32, k: usize) -> Vec<i32> {
+    (0..k)
+        .map(|_| (rng.range_i64(-127, 127) * rng.range_i64(0, 255)) as i32)
+        .collect()
+}
+
+/// Naive interleave ablation: alternate sorted positives and negatives
+/// without magnitude pairing.
+fn interleave_dot(prods: &[i32], p: u32) -> (i64, u32) {
+    let mut pos: Vec<i32> = prods.iter().copied().filter(|&v| v > 0).collect();
+    let mut neg: Vec<i32> = prods.iter().copied().filter(|&v| v < 0).collect();
+    pos.sort_unstable_by(|a, b| b.cmp(a));
+    neg.sort_unstable();
+    let mut seq = Vec::with_capacity(pos.len() + neg.len());
+    let m = pos.len().max(neg.len());
+    for i in 0..m {
+        if i < pos.len() {
+            seq.push(pos[i]);
+        }
+        if i < neg.len() {
+            seq.push(neg[i]);
+        }
+    }
+    accum::clip_accumulate(&seq, p)
+}
+
+fn main() {
+    let mut rng = Pcg32::new(0xAB1A);
+    let p = 16;
+    let n_dots = 2000;
+    let k = 784;
+    let cases: Vec<Vec<i32>> = (0..n_dots).map(|_| gen(&mut rng, k)).collect();
+
+    // ---- 1. rounds ablation: residual unresolved transients ------------
+    let mut transients = 0u64;
+    let mut unresolved = [0u64; 3]; // clip, sorted1, interleave
+    let mut e = DotEngine::new();
+    for prods in &cases {
+        let cls = classify(prods, p);
+        if !cls.transient {
+            continue;
+        }
+        transients += 1;
+        if accum::clip_accumulate(prods, p).1 > 0 {
+            unresolved[0] += 1;
+        }
+        if sorted1_dot(&mut e, prods, p).1 > 0 {
+            unresolved[1] += 1;
+        }
+        if interleave_dot(prods, p).1 > 0 {
+            unresolved[2] += 1;
+        }
+        // full Algorithm 1 provably resolves all (property-tested)
+    }
+    println!("# ablation 1 — transient resolution over {n_dots} random dots (K={k}, p={p})");
+    println!("transient dots: {transients}");
+    println!(
+        "unresolved: clip {} ({:.1}%) | interleave {} ({:.1}%) | sorted1 {} ({:.1}%) | full-alg1 0 (0.0%)",
+        unresolved[0], 100.0 * unresolved[0] as f64 / transients.max(1) as f64,
+        unresolved[2], 100.0 * unresolved[2] as f64 / transients.max(1) as f64,
+        unresolved[1], 100.0 * unresolved[1] as f64 / transients.max(1) as f64,
+    );
+
+    // ---- 2. cost ablation ----------------------------------------------
+    println!("\n# ablation 2 — cost per policy (K={k})");
+    let prods = &cases[0];
+    bench("clip (0 rounds)", || {
+        black_box(accum::clip_accumulate(black_box(prods), p));
+    })
+    .print();
+    let mut e1 = DotEngine::new();
+    bench("sorted1 (1 round)", || {
+        black_box(sorted1_dot(&mut e1, black_box(prods), p));
+    })
+    .print();
+    let mut e2 = DotEngine::new();
+    bench("full Algorithm 1", || {
+        black_box(sorted_full_dot(&mut e2, black_box(prods), p));
+    })
+    .print();
+    bench("engine fast path (clamp(exact))", || {
+        let v = accum::exact_dot(black_box(prods));
+        black_box(accum::clamp(v, p));
+    })
+    .print();
+
+    // ---- 3. early-exit ablation (paper §6) ------------------------------
+    println!("\n# ablation 3 — early persistent-overflow exit");
+    let mut skipped_total = 0usize;
+    let mut persistent = 0u64;
+    let mut e3 = DotEngine::new();
+    // heavy positive skew -> persistent overflows
+    let skewed: Vec<Vec<i32>> = (0..500)
+        .map(|i| {
+            let mut v = gen(&mut Pcg32::new(i), 784);
+            for x in v.iter_mut() {
+                *x = x.abs();
+            }
+            v
+        })
+        .collect();
+    for prods in &skewed {
+        let (_, _, skipped) = sorted_full_dot_early_exit(&mut e3, prods, p);
+        if skipped > 0 {
+            persistent += 1;
+            skipped_total += skipped;
+        }
+    }
+    println!(
+        "persistent dots: {persistent}/500; mean adds skipped when persistent: {:.0}/{k}",
+        skipped_total as f64 / persistent.max(1) as f64
+    );
+    let mut e4 = DotEngine::new();
+    bench("alg1 without early exit (persistent)", || {
+        black_box(sorted_full_dot(&mut e4, black_box(&skewed[0]), p));
+    })
+    .print();
+    let mut e5 = DotEngine::new();
+    bench("alg1 with early exit    (persistent)", || {
+        black_box(sorted_full_dot_early_exit(&mut e5, black_box(&skewed[0]), p));
+    })
+    .print();
+}

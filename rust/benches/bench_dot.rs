@@ -1,0 +1,84 @@
+//! Microbenchmarks of the dot-product engines (the hot path of the whole
+//! library): naive clip vs one-round sorted vs full Algorithm 1 vs the
+//! engine's O(K) sorted fast path, across dot lengths and sparsities.
+//!
+//!     cargo bench --offline --bench bench_dot
+
+use pqs::accum;
+use pqs::dot::{sorted_full_dot, sorted1_dot, tiled_sorted_dot, DotEngine};
+use pqs::util::bench::{bench, black_box};
+use pqs::util::rng::Pcg32;
+
+fn gen_products(rng: &mut Pcg32, k: usize, sparsity: f64) -> Vec<i32> {
+    (0..k)
+        .map(|_| {
+            if rng.f64() < sparsity {
+                0
+            } else {
+                (rng.range_i64(-127, 127) * rng.range_i64(0, 255)) as i32
+            }
+        })
+        .filter(|&v| v != 0)
+        .collect()
+}
+
+fn main() {
+    println!("# bench_dot — per-dot-product cost (paper hot path)\n");
+    let mut rng = Pcg32::new(0xD07);
+    for &k in &[64usize, 256, 784, 4096] {
+        let prods = gen_products(&mut rng, k, 0.0);
+        let mut e = DotEngine::new();
+        let p = 16;
+
+        bench(&format!("exact            K={k}"), || {
+            black_box(accum::exact_dot(black_box(&prods)));
+        })
+        .print_throughput(prods.len() as f64, "prod/s");
+
+        bench(&format!("clip             K={k}"), || {
+            black_box(accum::clip_accumulate(black_box(&prods), p));
+        })
+        .print_throughput(prods.len() as f64, "prod/s");
+
+        bench(&format!("sorted1 (1 round) K={k}"), || {
+            black_box(sorted1_dot(&mut e, black_box(&prods), p));
+        })
+        .print_throughput(prods.len() as f64, "prod/s");
+
+        bench(&format!("sorted full alg1 K={k}"), || {
+            black_box(sorted_full_dot(&mut e, black_box(&prods), p));
+        })
+        .print_throughput(prods.len() as f64, "prod/s");
+
+        bench(&format!("tiled t=256      K={k}"), || {
+            black_box(tiled_sorted_dot(&mut e, black_box(&prods), p, 256));
+        })
+        .print_throughput(prods.len() as f64, "prod/s");
+        println!();
+    }
+
+    // the engine's provable O(K) fast path for full Algorithm 1
+    println!("# engine Sorted fast path vs real multi-round algorithm (K=784)");
+    let prods = gen_products(&mut rng, 784, 0.0);
+    let mut e = DotEngine::new();
+    bench("engine-sorted-fastpath  K=784", || {
+        let exact = accum::exact_dot(black_box(&prods));
+        black_box(accum::clamp(exact, 16));
+    })
+    .print_throughput(prods.len() as f64, "prod/s");
+    bench("sorted-full-real        K=784", || {
+        black_box(sorted_full_dot(&mut e, black_box(&prods), 16));
+    })
+    .print_throughput(prods.len() as f64, "prod/s");
+
+    // pruning shortens dots (paper §3.1): cost at N:M sparsities
+    println!("\n# effect of pruning on sorted dot cost (K=784 nominal)");
+    for &s in &[0.0, 0.5, 0.75, 0.875] {
+        let prods = gen_products(&mut rng, 784, s);
+        let mut e = DotEngine::new();
+        bench(&format!("sorted1 sparsity={s}"), || {
+            black_box(sorted1_dot(&mut e, black_box(&prods), 16));
+        })
+        .print();
+    }
+}

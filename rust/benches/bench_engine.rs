@@ -1,0 +1,70 @@
+//! End-to-end engine throughput per policy/accumulator configuration, on
+//! the real artifacts (paper §5 evaluation workloads).
+//!
+//!     cargo bench --offline --bench bench_engine
+
+use pqs::accum::Policy;
+use pqs::data::Dataset;
+use pqs::formats::manifest::Manifest;
+use pqs::models;
+use pqs::nn::engine::{Engine, EngineConfig};
+use pqs::util::bench::{bench_cfg, black_box};
+
+fn main() -> anyhow::Result<()> {
+    let man = Manifest::load_default()?;
+    println!("# bench_engine — images/s through the bit-accurate engine\n");
+
+    for (model_name, batch) in [
+        ("mlp1_pq_s000_w8a8", 64usize),
+        ("mlp2_pq_s875_w8a8_kfull", 64),
+    ] {
+        let model = models::load(&man, model_name)?;
+        let ds = Dataset::load(man.dataset_path(&man.test_dataset_for(&model.arch)?.test))?;
+        let imgs = ds.images_f32(0, batch);
+        for (policy, stats) in [
+            (Policy::Exact, false),
+            (Policy::Clip, false),
+            (Policy::Sorted, false),
+            (Policy::Sorted1, false),
+            (Policy::Clip, true),
+        ] {
+            let mut eng = Engine::new(
+                &model,
+                EngineConfig { policy, acc_bits: 16, tile: 0, collect_stats: stats },
+            );
+            let label = format!(
+                "{model_name} {}{}",
+                policy.name(),
+                if stats { "+stats" } else { "" }
+            );
+            bench_cfg(&label, 1, 5, &mut || {
+                black_box(eng.forward(black_box(&imgs), batch).unwrap());
+            })
+            .print_throughput(batch as f64, "img/s");
+        }
+        println!();
+    }
+
+    // CNN engine (heavier): one config each
+    if let Some(e) = man
+        .experiment_models("fig4")
+        .into_iter()
+        .find(|e| e.arch == "resnet_tiny" && e.schedule == "pq" && e.target_sparsity == 0.75)
+    {
+        let model = models::load(&man, &e.name)?;
+        let ds = Dataset::load(man.dataset_path(&man.test_dataset_for(&model.arch)?.test))?;
+        let batch = 8;
+        let imgs = ds.images_f32(0, batch);
+        for policy in [Policy::Sorted, Policy::Clip, Policy::Sorted1] {
+            let mut eng = Engine::new(
+                &model,
+                EngineConfig { policy, acc_bits: 16, ..Default::default() },
+            );
+            bench_cfg(&format!("{} {}", e.name, policy.name()), 1, 3, &mut || {
+                black_box(eng.forward(black_box(&imgs), batch).unwrap());
+            })
+            .print_throughput(batch as f64, "img/s");
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,50 @@
+//! Times the figure-regeneration harnesses (one per paper table/figure) on
+//! reduced sample budgets, and prints their headline rows — `cargo bench`
+//! therefore regenerates the *shape* of every result in the paper's
+//! evaluation section.
+//!
+//!     cargo bench --offline --bench bench_figures
+
+use std::time::Instant;
+
+use pqs::figures::{fig2, fig3, fig4, fig5, sec6};
+use pqs::formats::manifest::Manifest;
+
+fn timed<T>(name: &str, f: impl FnOnce() -> anyhow::Result<T>) -> anyhow::Result<T> {
+    let t0 = Instant::now();
+    let r = f()?;
+    println!("[{name}] completed in {:.1} s", t0.elapsed().as_secs_f64());
+    Ok(r)
+}
+
+fn main() -> anyhow::Result<()> {
+    let man = Manifest::load_default()?;
+    println!("# bench_figures — regenerate every paper figure (reduced budgets)\n");
+
+    let r2 = timed("fig2", || fig2::run(&man, 192, 13..=20))?;
+    fig2::print(&r2);
+    println!();
+
+    let r3 = timed("fig3", || fig3::run(&man, 256, 8))?;
+    println!("fig3: {} rows (P->Q vs Q->P x rank x sparsity)", r3.len());
+
+    let r4 = timed("fig4", || fig4::run(&man, 64, 8))?;
+    println!("fig4: {} rows (arch x schedule x sparsity)", r4.len());
+
+    let pts = timed("fig5", || fig5::run(&man, 96, &[13, 14, 16, 20], Some("mlp2")))?;
+    println!("fig5 (mlp2 subset): {} pareto points", pts.len());
+    for arch in ["mlp2"] {
+        if let Some((p, acc, base)) = fig5::min_width_within(&pts, arch, 0.02) {
+            println!(
+                "  headline {arch}: min width {p} bits (acc {acc:.3} vs fp32 {base:.3}) = {:.1}x vs 32b",
+                32.0 / p as f64
+            );
+        }
+    }
+
+    if let Some(name) = sec6::default_model(&man) {
+        let r6 = timed("sec6", || sec6::run(&man, &name, 16, &[64, 256, 0], 24))?;
+        sec6::print(&r6);
+    }
+    Ok(())
+}

@@ -1,0 +1,48 @@
+//! PJRT runtime benchmarks: AOT-compiled HLO (fused XLA, Pallas sorted1
+//! kernel) vs the bit-accurate interpreting engine — the "fast path vs
+//! analysis path" trade of the three-layer architecture.
+//!
+//!     cargo bench --offline --bench bench_runtime
+
+use pqs::accum::Policy;
+use pqs::data::Dataset;
+use pqs::formats::manifest::Manifest;
+use pqs::models;
+use pqs::nn::engine::{Engine, EngineConfig};
+use pqs::runtime::Runtime;
+use pqs::util::bench::{bench_cfg, black_box};
+
+fn main() -> anyhow::Result<()> {
+    let man = Manifest::load_default()?;
+    let rt = Runtime::cpu()?;
+    println!("# bench_runtime — PJRT vs engine (mlp1, batch 8)\n");
+
+    let name = man.experiments["fig2"][0].clone();
+    let model = models::load(&man, &name)?;
+    let ds = Dataset::load(man.dataset_path(&man.test_dataset_for(&model.arch)?.test))?;
+    let imgs = ds.images_f32(0, 8);
+
+    let exe = rt.load_hlo(man.dir.join("model.hlo.txt"))?;
+    bench_cfg("pjrt pallas-sorted1 p=16 (quantized)", 2, 8, &mut || {
+        black_box(exe.run_f32(black_box(&imgs), &[8, 1, 28, 28]).unwrap());
+    })
+    .print_throughput(8.0, "img/s");
+
+    let fp32 = rt.load_hlo(man.dir.join(format!("hlo/{name}_fp32.hlo.txt")))?;
+    bench_cfg("pjrt fp32 fused", 2, 8, &mut || {
+        black_box(fp32.run_f32(black_box(&imgs), &[8, 1, 28, 28]).unwrap());
+    })
+    .print_throughput(8.0, "img/s");
+
+    for policy in [Policy::Sorted, Policy::Sorted1, Policy::Clip] {
+        let mut eng = Engine::new(
+            &model,
+            EngineConfig { policy, acc_bits: 16, ..Default::default() },
+        );
+        bench_cfg(&format!("engine {} p=16", policy.name()), 1, 5, &mut || {
+            black_box(eng.forward(black_box(&imgs), 8).unwrap());
+        })
+        .print_throughput(8.0, "img/s");
+    }
+    Ok(())
+}

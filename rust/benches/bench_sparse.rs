@@ -1,0 +1,79 @@
+//! Sparse-format benchmarks reproducing the paper's §2.2 argument: N:M
+//! semi-structured storage is lighter and faster to traverse than
+//! unstructured CSR at equal nnz, and pruning shortens the dot products the
+//! accumulator sees.
+//!
+//!     cargo bench --offline --bench bench_sparse
+
+use pqs::sparse::{CsrMatrix, NmMatrix};
+use pqs::util::bench::{bench, black_box};
+use pqs::util::rng::Pcg32;
+
+fn random_nm_dense(rng: &mut Pcg32, rows: usize, cols: usize, m: usize, keep: usize) -> Vec<i8> {
+    let mut dense = vec![0i8; rows * cols];
+    for r in 0..rows {
+        for g0 in (0..cols).step_by(m) {
+            let glen = m.min(cols - g0);
+            let mut pos: Vec<usize> = (0..glen).collect();
+            rng.shuffle(&mut pos);
+            for &p in pos.iter().take(keep.min(glen)) {
+                let mut v = rng.range_i64(-127, 127) as i8;
+                if v == 0 {
+                    v = 1;
+                }
+                dense[r * cols + g0 + p] = v;
+            }
+        }
+    }
+    dense
+}
+
+fn main() {
+    let mut rng = Pcg32::new(0x5BA5);
+    println!("# bench_sparse — N:M vs CSR vs dense (256 rows x 784 cols)\n");
+    for &(m, keep, label) in &[(16usize, 16usize, "dense(16:16)"), (16, 8, "8:16"), (16, 4, "4:16"), (16, 2, "2:16")] {
+        let dense = random_nm_dense(&mut rng, 256, 784, m, keep);
+        let x = rng.ivec(784, 0, 255);
+        let nm = NmMatrix::from_dense(&dense, 256, 784, m);
+        let csr = CsrMatrix::from_dense(&dense, 256, 784);
+        println!(
+            "{label}: nnz={} nm_bytes={} csr_bytes={} dense_bytes={}",
+            nm.nnz(),
+            nm.footprint_bytes(),
+            csr.footprint_bytes(),
+            dense.len()
+        );
+
+        let mut prods = Vec::new();
+        bench(&format!("nm  row-products {label}"), || {
+            for r in 0..256 {
+                nm.dot_products_into(r, black_box(&x), &mut prods);
+                black_box(&prods);
+            }
+        })
+        .print_throughput(nm.nnz() as f64, "prod/s");
+
+        let mut y = Vec::new();
+        bench(&format!("csr spmv         {label}"), || {
+            csr.spmv_exact(black_box(&x), &mut y);
+            black_box(&y);
+        })
+        .print_throughput(csr.nnz() as f64, "prod/s");
+
+        // dense baseline: multiply everything, including zeros
+        bench(&format!("dense matvec     {label}"), || {
+            let mut out = [0i64; 256];
+            for r in 0..256 {
+                let row = &dense[r * 784..(r + 1) * 784];
+                let mut acc = 0i64;
+                for c in 0..784 {
+                    acc += row[c] as i64 * x[c] as i64;
+                }
+                out[r] = acc;
+            }
+            black_box(out);
+        })
+        .print_throughput((256 * 784) as f64, "prod/s");
+        println!();
+    }
+}

@@ -1,0 +1,186 @@
+//! p-bit accumulator simulation (paper §3).
+//!
+//! A signed p-bit accumulator holds values in `[-2^(p-1), 2^(p-1)-1]`. An
+//! *overflow event* is any step where the exact running sum would leave
+//! that range before the policy (clip / wrap) brings it back. Mirrors
+//! `python/compile/kernels/ref.py` bit-for-bit (the contract is enforced by
+//! `rust/tests/golden_dot.rs` against exported goldens).
+
+/// Accumulation policy for a dot product (paper terminology).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Policy {
+    /// Wide accumulator: exact integer sum, never overflows.
+    Exact,
+    /// Saturating arithmetic in index order (what CMSIS-NN-class kernels do).
+    Clip,
+    /// Two's-complement wraparound in index order (WrapNet-style).
+    Wrap,
+    /// Single sorting round then clipped accumulation (the Pallas kernel).
+    Sorted1,
+    /// Full Algorithm 1: repeated sort/pair rounds, then monotone
+    /// accumulation (the PQS inference algorithm).
+    Sorted,
+    /// Oracle that resolves every transient overflow (Fig. 2b red line).
+    Oracle,
+}
+
+impl Policy {
+    pub const ALL: [Policy; 6] =
+        [Policy::Exact, Policy::Clip, Policy::Wrap, Policy::Sorted1, Policy::Sorted, Policy::Oracle];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Policy::Exact => "exact",
+            Policy::Clip => "clip",
+            Policy::Wrap => "wrap",
+            Policy::Sorted1 => "sorted1",
+            Policy::Sorted => "sorted",
+            Policy::Oracle => "oracle",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<Policy> {
+        Policy::ALL.iter().copied().find(|p| p.name() == s)
+    }
+}
+
+/// Inclusive [lo, hi] range of a signed p-bit accumulator.
+#[inline]
+pub fn acc_range(p: u32) -> (i64, i64) {
+    (-(1i64 << (p - 1)), (1i64 << (p - 1)) - 1)
+}
+
+/// Clamp a wide value into the p-bit range.
+#[inline]
+pub fn clamp(v: i64, p: u32) -> i64 {
+    let (lo, hi) = acc_range(p);
+    v.clamp(lo, hi)
+}
+
+/// Sequential saturating accumulation in index order.
+/// Returns `(final value, overflow events)`.
+pub fn clip_accumulate(prods: &[i32], p: u32) -> (i64, u32) {
+    let (lo, hi) = acc_range(p);
+    let mut acc = 0i64;
+    let mut ovf = 0u32;
+    for &v in prods {
+        let t = acc + v as i64;
+        acc = if t < lo {
+            ovf += 1;
+            lo
+        } else if t > hi {
+            ovf += 1;
+            hi
+        } else {
+            t
+        };
+    }
+    (acc, ovf)
+}
+
+/// Sequential two's-complement wraparound accumulation in index order.
+pub fn wrap_accumulate(prods: &[i32], p: u32) -> (i64, u32) {
+    let (lo, hi) = acc_range(p);
+    let span = 1i64 << p;
+    let mut acc = 0i64;
+    let mut ovf = 0u32;
+    for &v in prods {
+        let mut t = acc + v as i64;
+        if t < lo || t > hi {
+            ovf += 1;
+            t = (t - lo).rem_euclid(span) + lo;
+        }
+        acc = t;
+    }
+    (acc, ovf)
+}
+
+/// Exact (wide) sum.
+#[inline]
+pub fn exact_dot(prods: &[i32]) -> i64 {
+    prods.iter().map(|&v| v as i64).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+    use crate::util::rng::Pcg32;
+
+    #[test]
+    fn ranges() {
+        assert_eq!(acc_range(8), (-128, 127));
+        assert_eq!(acc_range(16), (-32768, 32767));
+        assert_eq!(acc_range(32), (i32::MIN as i64, i32::MAX as i64));
+    }
+
+    #[test]
+    fn clip_saturates_matches_python() {
+        // mirror python test_ref: [120,10,5] at p=8 -> 127 with 2 events
+        assert_eq!(clip_accumulate(&[120, 10, 5], 8), (127, 2));
+        assert_eq!(clip_accumulate(&[-120, -10, -5], 8), (-128, 2));
+    }
+
+    #[test]
+    fn wrap_matches_twos_complement() {
+        assert_eq!(wrap_accumulate(&[120, 10], 8), (130 - 256, 1));
+        assert_eq!(wrap_accumulate(&[-120, -10], 8), (-130 + 256, 1));
+    }
+
+    #[test]
+    fn no_overflow_means_exact_prop() {
+        prop::check(
+            "clip-exact-when-clean",
+            300,
+            |r: &mut Pcg32| (prop::gen_prods(r, 128, 8), 12 + r.below(16)),
+            |(prods, p)| {
+                let (v, e) = clip_accumulate(prods, *p);
+                if e == 0 && v != exact_dot(prods) {
+                    return Err(format!("clean but {v} != exact"));
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn wide_accumulator_never_overflows_prop() {
+        prop::check(
+            "wide-never-overflows",
+            200,
+            |r: &mut Pcg32| prop::gen_prods(r, 512, 8),
+            |prods| {
+                let (v, e) = clip_accumulate(prods, 48);
+                if e != 0 || v != exact_dot(prods) {
+                    return Err("48-bit accumulator overflowed?!".into());
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn wrap_value_always_in_range_prop() {
+        prop::check(
+            "wrap-in-range",
+            300,
+            |r: &mut Pcg32| (prop::gen_prods(r, 128, 8), 12 + r.below(10)),
+            |(prods, p)| {
+                let (v, _) = wrap_accumulate(prods, *p);
+                let (lo, hi) = acc_range(*p);
+                if v < lo || v > hi {
+                    return Err(format!("{v} outside [{lo},{hi}]"));
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn policy_names_roundtrip() {
+        for p in Policy::ALL {
+            assert_eq!(Policy::from_name(p.name()), Some(p));
+        }
+        assert_eq!(Policy::from_name("bogus"), None);
+    }
+}

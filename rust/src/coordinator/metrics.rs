@@ -1,0 +1,83 @@
+//! Latency/throughput metrics for the serving front-end.
+
+use crate::util::stats;
+
+/// Streaming latency recorder (microseconds).
+#[derive(Clone, Debug, Default)]
+pub struct LatencyRecorder {
+    samples: Vec<f64>,
+}
+
+impl LatencyRecorder {
+    pub fn record(&mut self, us: f64) {
+        self.samples.push(us);
+    }
+
+    pub fn count(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn mean_us(&self) -> f64 {
+        stats::mean(&self.samples)
+    }
+
+    pub fn p50_us(&self) -> f64 {
+        stats::percentile(&self.samples, 50.0)
+    }
+
+    pub fn p95_us(&self) -> f64 {
+        stats::percentile(&self.samples, 95.0)
+    }
+
+    pub fn p99_us(&self) -> f64 {
+        stats::percentile(&self.samples, 99.0)
+    }
+}
+
+/// Aggregate serving metrics.
+#[derive(Clone, Debug, Default)]
+pub struct ServeMetrics {
+    pub requests: usize,
+    pub wall_s: f64,
+    pub throughput_rps: f64,
+    pub latency: LatencyRecorder,
+}
+
+impl ServeMetrics {
+    pub fn print(&self) {
+        println!(
+            "requests={} wall={:.2}s throughput={:.1} req/s  latency mean={:.1}us p50={:.1}us p95={:.1}us p99={:.1}us",
+            self.requests,
+            self.wall_s,
+            self.throughput_rps,
+            self.latency.mean_us(),
+            self.latency.p50_us(),
+            self.latency.p95_us(),
+            self.latency.p99_us(),
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn recorder_percentiles() {
+        let mut r = LatencyRecorder::default();
+        for i in 1..=100 {
+            r.record(i as f64);
+        }
+        assert_eq!(r.count(), 100);
+        assert!((r.mean_us() - 50.5).abs() < 1e-9);
+        assert!(r.p95_us() >= 94.0 && r.p95_us() <= 96.0);
+        assert!(r.p99_us() >= 98.0);
+    }
+
+    #[test]
+    fn empty_recorder() {
+        let r = LatencyRecorder::default();
+        assert_eq!(r.mean_us(), 0.0);
+        assert_eq!(r.p99_us(), 0.0);
+    }
+}

@@ -1,0 +1,202 @@
+//! Threaded evaluation coordinator (DESIGN.md S19).
+//!
+//! The paper's contribution lives at the numeric level, so L3 coordination
+//! is an *evaluation service*: it owns a pool of worker threads, each with
+//! its own `Engine` instance, shards dataset batches across them with a
+//! work queue, applies backpressure via the queue bound, and aggregates
+//! accuracy + overflow statistics and latency metrics.
+//!
+//! Two front-ends build on it:
+//! * `EvalService::evaluate` — whole-dataset sweeps used by the figure
+//!   harnesses;
+//! * `serve_requests` — a request/response loop used by `examples/serve.rs`
+//!   to demonstrate batched online inference with latency accounting.
+
+pub mod metrics;
+
+use anyhow::Result;
+
+use crate::data::{Batches, Dataset};
+use crate::formats::pqsw::PqswModel;
+use crate::nn::engine::{Engine, EngineConfig};
+use crate::overflow::OverflowReport;
+use crate::util::pool;
+
+pub use metrics::{LatencyRecorder, ServeMetrics};
+
+/// Outcome of a coordinated evaluation.
+#[derive(Clone, Debug)]
+pub struct EvalOutcome {
+    pub accuracy: f64,
+    pub samples: usize,
+    pub report: OverflowReport,
+    pub wall_ms: f64,
+    pub throughput_ips: f64,
+}
+
+/// Evaluation coordinator: fan batches out over engines.
+pub struct EvalService<'m> {
+    model: &'m PqswModel,
+    cfg: EngineConfig,
+    threads: usize,
+    batch: usize,
+}
+
+impl<'m> EvalService<'m> {
+    pub fn new(model: &'m PqswModel, cfg: EngineConfig) -> Self {
+        EvalService { model, cfg, threads: pool::default_threads(), batch: 64 }
+    }
+
+    pub fn with_threads(mut self, threads: usize) -> Self {
+        self.threads = threads.max(1);
+        self
+    }
+
+    pub fn with_batch(mut self, batch: usize) -> Self {
+        self.batch = batch.max(1);
+        self
+    }
+
+    /// Evaluate up to `limit` samples of `ds`, sharded over worker engines.
+    pub fn evaluate(&self, ds: &Dataset, limit: Option<usize>) -> Result<EvalOutcome> {
+        let t0 = std::time::Instant::now();
+        // materialize the batch index (start, len)
+        let mut shards: Vec<(Vec<f32>, Vec<u8>)> = Vec::new();
+        let mut taken = 0usize;
+        for (imgs, labels, _s) in Batches::new(ds, self.batch) {
+            let mut lab = labels.to_vec();
+            let mut im = imgs;
+            if let Some(lim) = limit {
+                if taken >= lim {
+                    break;
+                }
+                if taken + lab.len() > lim {
+                    let keep = lim - taken;
+                    lab.truncate(keep);
+                    im.truncate(keep * ds.dim());
+                }
+            }
+            taken += lab.len();
+            shards.push((im, lab));
+        }
+
+        let model = self.model;
+        let cfg = self.cfg;
+        let results = pool::parallel_map_init(
+            shards.len(),
+            self.threads,
+            || Engine::new(model, cfg),
+            |eng, i| {
+                let (imgs, labels) = &shards[i];
+                let r = eng.forward(imgs, labels.len()).expect("forward");
+                let correct =
+                    (0..r.batch).filter(|&j| r.argmax(j) == labels[j] as usize).count();
+                (correct, labels.len(), r.report)
+            },
+        );
+
+        let mut report = OverflowReport::default();
+        let (mut correct, mut total) = (0usize, 0usize);
+        for (c, n, rep) in &results {
+            correct += c;
+            total += n;
+            report.merge(rep);
+        }
+        let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
+        Ok(EvalOutcome {
+            accuracy: correct as f64 / total.max(1) as f64,
+            samples: total,
+            report,
+            wall_ms,
+            throughput_ips: total as f64 / (wall_ms / 1e3).max(1e-9),
+        })
+    }
+}
+
+/// A single inference request for the serve front-end.
+pub struct Request {
+    pub id: u64,
+    pub image: Vec<f32>,
+}
+
+/// Response with latency accounting.
+#[derive(Clone, Debug)]
+pub struct Response {
+    pub id: u64,
+    pub class: usize,
+    pub latency_us: f64,
+}
+
+/// Online batched serving: drain `requests` in arrival order, grouping up
+/// to `max_batch` per engine invocation (dynamic batching). Returns
+/// responses + metrics. Single-node, thread-per-worker design.
+pub fn serve_requests(
+    model: &PqswModel,
+    cfg: EngineConfig,
+    requests: Vec<Request>,
+    max_batch: usize,
+    threads: usize,
+) -> Result<(Vec<Response>, ServeMetrics)> {
+    let t_start = std::time::Instant::now();
+    let dim: usize = model.input_shape.iter().product();
+    // group into dynamic batches
+    let mut groups: Vec<Vec<Request>> = Vec::new();
+    let mut cur: Vec<Request> = Vec::new();
+    for r in requests {
+        assert_eq!(r.image.len(), dim, "request image size");
+        cur.push(r);
+        if cur.len() >= max_batch {
+            groups.push(std::mem::take(&mut cur));
+        }
+    }
+    if !cur.is_empty() {
+        groups.push(cur);
+    }
+
+    let results = pool::parallel_map_init(
+        groups.len(),
+        threads.max(1),
+        || Engine::new(model, cfg),
+        |eng, gi| {
+            let group = &groups[gi];
+            let mut flat = Vec::with_capacity(group.len() * dim);
+            for r in group {
+                flat.extend_from_slice(&r.image);
+            }
+            let t0 = std::time::Instant::now();
+            let out = eng.forward(&flat, group.len()).expect("forward");
+            let us = t0.elapsed().as_secs_f64() * 1e6;
+            group
+                .iter()
+                .enumerate()
+                .map(|(j, r)| Response {
+                    id: r.id,
+                    class: out.argmax(j),
+                    latency_us: us, // batch latency attributed to each member
+                })
+                .collect::<Vec<_>>()
+        },
+    );
+
+    let mut responses: Vec<Response> = results.into_iter().flatten().collect();
+    responses.sort_by_key(|r| r.id);
+    let mut lat = LatencyRecorder::default();
+    for r in &responses {
+        lat.record(r.latency_us);
+    }
+    let wall_s = t_start.elapsed().as_secs_f64();
+    let metrics = ServeMetrics {
+        requests: responses.len(),
+        wall_s,
+        throughput_rps: responses.len() as f64 / wall_s.max(1e-9),
+        latency: lat,
+    };
+    Ok((responses, metrics))
+}
+
+#[cfg(test)]
+mod tests {
+    // Coordinator paths over real models are exercised in
+    // rust/tests/coordinator.rs (needs artifacts). Metrics unit tests live
+    // in metrics.rs.
+}

@@ -1,0 +1,134 @@
+//! PQSD dataset container reader (written by `python/compile/datasets.py`).
+//!
+//! Layout: magic `PQSD1\0\0\0`, u32le n/c/h/w, n*c*h*w u8 pixels, n u8
+//! labels. Pixels map to f32 as `v / 255.0` — identical to what python
+//! training saw after its save/reload round-trip.
+
+use anyhow::{bail, Context, Result};
+use std::path::Path;
+
+pub const MAGIC: &[u8; 8] = b"PQSD1\x00\x00\x00";
+
+/// An in-memory image-classification dataset.
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    pub n: usize,
+    pub c: usize,
+    pub h: usize,
+    pub w: usize,
+    pub pixels: Vec<u8>,
+    pub labels: Vec<u8>,
+}
+
+impl Dataset {
+    pub fn load<P: AsRef<Path>>(path: P) -> Result<Dataset> {
+        let raw = std::fs::read(path.as_ref())
+            .with_context(|| format!("reading dataset {:?}", path.as_ref()))?;
+        if raw.len() < 24 || &raw[0..8] != MAGIC {
+            bail!("bad PQSD magic in {:?}", path.as_ref());
+        }
+        let rd = |o: usize| u32::from_le_bytes(raw[o..o + 4].try_into().unwrap()) as usize;
+        let (n, c, h, w) = (rd(8), rd(12), rd(16), rd(20));
+        let npix = n * c * h * w;
+        if raw.len() != 24 + npix + n {
+            bail!(
+                "PQSD size mismatch: have {} want {}",
+                raw.len(),
+                24 + npix + n
+            );
+        }
+        Ok(Dataset {
+            n,
+            c,
+            h,
+            w,
+            pixels: raw[24..24 + npix].to_vec(),
+            labels: raw[24 + npix..].to_vec(),
+        })
+    }
+
+    /// Flattened image size.
+    pub fn dim(&self) -> usize {
+        self.c * self.h * self.w
+    }
+
+    /// Decode `count` images starting at `start` to f32 in [0,1].
+    pub fn images_f32(&self, start: usize, count: usize) -> Vec<f32> {
+        let stride = self.dim();
+        let a = start * stride;
+        let b = (start + count) * stride;
+        self.pixels[a..b].iter().map(|&v| v as f32 / 255.0).collect()
+    }
+
+    /// Class frequency histogram (10 classes assumed by the tasks here).
+    pub fn class_histogram(&self) -> Vec<usize> {
+        let k = *self.labels.iter().max().unwrap_or(&0) as usize + 1;
+        let mut h = vec![0usize; k];
+        for &l in &self.labels {
+            h[l as usize] += 1;
+        }
+        h
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    fn write_tiny(path: &Path) {
+        let mut f = std::fs::File::create(path).unwrap();
+        f.write_all(MAGIC).unwrap();
+        for v in [2u32, 1, 2, 2] {
+            f.write_all(&v.to_le_bytes()).unwrap();
+        }
+        f.write_all(&[0, 64, 128, 255, 10, 20, 30, 40]).unwrap(); // pixels
+        f.write_all(&[3, 7]).unwrap(); // labels
+    }
+
+    #[test]
+    fn load_roundtrip() {
+        let dir = std::env::temp_dir().join("pqs_test_loader");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("tiny.bin");
+        write_tiny(&p);
+        let ds = Dataset::load(&p).unwrap();
+        assert_eq!((ds.n, ds.c, ds.h, ds.w), (2, 1, 2, 2));
+        assert_eq!(ds.labels, vec![3, 7]);
+        let img = ds.images_f32(0, 1);
+        assert_eq!(img[0], 0.0);
+        assert_eq!(img[3], 1.0);
+        assert!((img[1] - 64.0 / 255.0).abs() < 1e-7);
+    }
+
+    #[test]
+    fn rejects_truncated() {
+        let dir = std::env::temp_dir().join("pqs_test_loader");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("bad.bin");
+        std::fs::write(&p, b"PQSD1\x00\x00\x00\x01").unwrap();
+        assert!(Dataset::load(&p).is_err());
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let dir = std::env::temp_dir().join("pqs_test_loader");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("magic.bin");
+        std::fs::write(&p, vec![0u8; 64]).unwrap();
+        assert!(Dataset::load(&p).is_err());
+    }
+
+    #[test]
+    fn histogram() {
+        let ds = Dataset {
+            n: 4,
+            c: 1,
+            h: 1,
+            w: 1,
+            pixels: vec![0; 4],
+            labels: vec![1, 1, 2, 0],
+        };
+        assert_eq!(ds.class_histogram(), vec![1, 2, 1]);
+    }
+}

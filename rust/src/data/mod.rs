@@ -1,0 +1,76 @@
+//! Dataset loading + batching (DESIGN.md S16).
+//!
+//! `loader` reads the PQSD binaries exported by `python/compile/datasets.py`
+//! so both layers evaluate byte-identical inputs; `batcher` iterates them.
+
+pub mod loader;
+
+pub use loader::Dataset;
+
+/// Iterator over contiguous batches of a dataset.
+pub struct Batches<'a> {
+    ds: &'a Dataset,
+    batch: usize,
+    pos: usize,
+}
+
+impl<'a> Batches<'a> {
+    pub fn new(ds: &'a Dataset, batch: usize) -> Self {
+        assert!(batch > 0);
+        Batches { ds, batch, pos: 0 }
+    }
+}
+
+impl<'a> Iterator for Batches<'a> {
+    /// (images f32 flattened [b, c*h*w], labels, global start index)
+    type Item = (Vec<f32>, &'a [u8], usize);
+
+    fn next(&mut self) -> Option<Self::Item> {
+        if self.pos >= self.ds.n {
+            return None;
+        }
+        let b = self.batch.min(self.ds.n - self.pos);
+        let stride = self.ds.c * self.ds.h * self.ds.w;
+        let imgs = self.ds.images_f32(self.pos, b);
+        let labels = &self.ds.labels[self.pos..self.pos + b];
+        let start = self.pos;
+        self.pos += b;
+        debug_assert_eq!(imgs.len(), b * stride);
+        Some((imgs, labels, start))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_ds() -> Dataset {
+        Dataset {
+            n: 5,
+            c: 1,
+            h: 2,
+            w: 2,
+            pixels: (0..20).map(|i| (i * 12) as u8).collect(),
+            labels: vec![0, 1, 2, 3, 4],
+        }
+    }
+
+    #[test]
+    fn batches_cover_all() {
+        let ds = tiny_ds();
+        let mut seen = 0;
+        for (imgs, labels, start) in Batches::new(&ds, 2) {
+            assert_eq!(imgs.len(), labels.len() * 4);
+            assert_eq!(start, seen);
+            seen += labels.len();
+        }
+        assert_eq!(seen, 5);
+    }
+
+    #[test]
+    fn last_batch_ragged() {
+        let ds = tiny_ds();
+        let sizes: Vec<usize> = Batches::new(&ds, 2).map(|(_, l, _)| l.len()).collect();
+        assert_eq!(sizes, vec![2, 2, 1]);
+    }
+}

@@ -1,0 +1,84 @@
+//! Transient vs persistent overflow classification (paper §3.1).
+
+use crate::accum;
+
+/// Classification of one dot product at accumulator width p.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct OverflowClass {
+    /// Exact (wide) final value.
+    pub exact: i64,
+    /// The final result itself leaves the p-bit range: a true overflow no
+    /// ordering can fix.
+    pub persistent: bool,
+    /// Overflow events under naive index-order clipped accumulation.
+    pub naive_events: u32,
+    /// Naive order overflowed but the final result fits: fixable by
+    /// reordering (what the sorted dot product eliminates).
+    pub transient: bool,
+}
+
+/// Classify a dot product per paper §3.1.
+pub fn classify(prods: &[i32], p: u32) -> OverflowClass {
+    let (lo, hi) = accum::acc_range(p);
+    let exact = accum::exact_dot(prods);
+    let (_, naive_events) = accum::clip_accumulate(prods, p);
+    let persistent = exact < lo || exact > hi;
+    OverflowClass {
+        exact,
+        persistent,
+        naive_events,
+        transient: naive_events > 0 && !persistent,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+    use crate::util::rng::Pcg32;
+
+    #[test]
+    fn paper_examples() {
+        // 3 maximal 8-bit products: 48387 > 32767 -> persistent at p=16
+        let c = classify(&[16129; 3], 16);
+        assert!(c.persistent && !c.transient);
+        // balanced: exact 0, naive order spikes -> transient
+        let c = classify(&[16129, 16129, 16129, -16129, -16129, -16129], 16);
+        assert!(c.transient && !c.persistent && c.naive_events > 0);
+        // clean
+        let c = classify(&[100, -50], 16);
+        assert!(!c.transient && !c.persistent && c.naive_events == 0);
+    }
+
+    #[test]
+    fn partition_prop() {
+        prop::check(
+            "classify-partition",
+            400,
+            |r: &mut Pcg32| (prop::gen_prods(r, 200, 8), 12 + r.below(12)),
+            |(prods, p)| {
+                let c = classify(prods, *p);
+                if c.transient && c.persistent {
+                    return Err("both transient and persistent".into());
+                }
+                if c.transient && c.naive_events == 0 {
+                    return Err("transient without events".into());
+                }
+                let (lo, hi) = accum::acc_range(*p);
+                if c.persistent != (c.exact < lo || c.exact > hi) {
+                    return Err("persistent flag wrong".into());
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn threshold_k_star() {
+        // paper §3: p=32, b=8 -> overflow needs K >= 2^16 maximal products
+        let prods = vec![16129i32; 100];
+        assert!(!classify(&prods, 32).persistent);
+        // p = 2b = 16: possible after only a few
+        assert!(classify(&[16129, 16129, 16129], 16).persistent);
+    }
+}

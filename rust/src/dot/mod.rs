@@ -1,0 +1,161 @@
+//! Dot-product engines with width-limited accumulation — the heart of the
+//! PQS library (paper §3).
+//!
+//! `DotEngine` owns reusable scratch buffers so the hot path (millions of
+//! dot products per model evaluation) is allocation-free.
+
+pub mod classify;
+pub mod sorted;
+pub mod tiled;
+
+use crate::accum::{self, Policy};
+
+pub use classify::{classify, OverflowClass};
+pub use sorted::{sorted1_pair_into, sorted_full_dot, sorted1_dot};
+pub use tiled::tiled_sorted_dot;
+
+/// Reusable scratch space for sorted dot products.
+#[derive(Default)]
+pub struct DotEngine {
+    pub(crate) pos: Vec<i32>,
+    pub(crate) neg: Vec<i32>,
+    pub(crate) seq: Vec<i32>,
+    pub(crate) tmp: Vec<i32>,
+}
+
+impl DotEngine {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Evaluate one dot product (given the partial products) under `policy`
+    /// with a p-bit accumulator. Returns `(value, overflow events)`.
+    ///
+    /// Event semantics per policy match `ref.py::dot_with_policy`:
+    /// * exact — always 0 events;
+    /// * clip/wrap — events in index order;
+    /// * sorted1/sorted — events in the width-limited accumulation phase
+    ///   (pairing runs in exact temporaries);
+    /// * oracle — exact value unless persistently overflowing (then clipped
+    ///   exact value, 1 event).
+    pub fn dot(&mut self, prods: &[i32], p: u32, policy: Policy) -> (i64, u32) {
+        match policy {
+            Policy::Exact => (accum::exact_dot(prods), 0),
+            Policy::Clip => accum::clip_accumulate(prods, p),
+            Policy::Wrap => accum::wrap_accumulate(prods, p),
+            Policy::Sorted1 => sorted::sorted1_dot(self, prods, p),
+            Policy::Sorted => sorted::sorted_full_dot(self, prods, p),
+            Policy::Oracle => {
+                let exact = accum::exact_dot(prods);
+                let (lo, hi) = accum::acc_range(p);
+                if exact >= lo && exact <= hi {
+                    (exact, 0)
+                } else {
+                    (accum::clamp(exact, p), 1)
+                }
+            }
+        }
+    }
+
+    /// Compute partial products `w[k]*x[k]` into the provided buffer.
+    #[inline]
+    pub fn products_into(w: &[i32], x: &[i32], out: &mut Vec<i32>) {
+        debug_assert_eq!(w.len(), x.len());
+        out.clear();
+        out.extend(w.iter().zip(x).map(|(&a, &b)| a * b));
+    }
+
+    /// Convenience: full dot product from weight/activation vectors.
+    pub fn dot_wx(&mut self, w: &[i32], x: &[i32], p: u32, policy: Policy) -> (i64, u32) {
+        Self::products_into(w, x, &mut self.tmp);
+        let prods = std::mem::take(&mut self.tmp);
+        let r = self.dot(&prods, p, policy);
+        self.tmp = prods;
+        self.tmp.clear();
+        r
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+    use crate::util::rng::Pcg32;
+
+    #[test]
+    fn exact_is_sum() {
+        let mut e = DotEngine::new();
+        assert_eq!(e.dot(&[1, 2, 3], 16, Policy::Exact), (6, 0));
+        assert_eq!(e.dot(&[], 16, Policy::Exact), (0, 0));
+    }
+
+    #[test]
+    fn oracle_resolves_transients() {
+        let mut e = DotEngine::new();
+        // transient: exact sum 0 but naive order spikes
+        let prods = [16129, 16129, 16129, -16129, -16129, -16129];
+        assert_eq!(e.dot(&prods, 16, Policy::Oracle), (0, 0));
+        let (v, ev) = e.dot(&prods, 16, Policy::Clip);
+        assert!(ev > 0 && v != 0);
+        // persistent: clipped exact
+        let prods = [16129i32; 3];
+        assert_eq!(e.dot(&prods, 16, Policy::Oracle), (32767, 1));
+    }
+
+    #[test]
+    fn dot_wx_matches_manual_products() {
+        let mut e = DotEngine::new();
+        let w = [2, -3, 4];
+        let x = [5, 6, -7];
+        let prods = [10, -18, -28];
+        for pol in Policy::ALL {
+            assert_eq!(e.dot_wx(&w, &x, 14, pol), e.dot(&prods, 14, pol), "{pol:?}");
+        }
+    }
+
+    #[test]
+    fn all_policies_agree_on_wide_accumulator_prop() {
+        prop::check(
+            "policies-agree-wide",
+            200,
+            |r: &mut Pcg32| prop::gen_prods(r, 200, 8),
+            |prods| {
+                let mut e = DotEngine::new();
+                let exact = accum::exact_dot(prods);
+                for pol in Policy::ALL {
+                    let (v, ev) = e.dot(prods, 40, pol);
+                    if v != exact {
+                        return Err(format!("{pol:?}: {v} != {exact}"));
+                    }
+                    if ev != 0 {
+                        return Err(format!("{pol:?}: events at p=40"));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn sorted_policies_match_exact_when_no_persistent_prop() {
+        prop::check(
+            "sorted-resolves",
+            300,
+            |r: &mut Pcg32| (prop::gen_prods(r, 200, 8), 13 + r.below(8)),
+            |(prods, p)| {
+                let mut e = DotEngine::new();
+                let cls = classify(prods, *p);
+                let (v, ev) = e.dot(prods, *p, Policy::Sorted);
+                if !cls.persistent {
+                    if ev != 0 {
+                        return Err(format!("sorted had {ev} events without persistent overflow"));
+                    }
+                    if v != cls.exact {
+                        return Err(format!("sorted {v} != exact {}", cls.exact));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+}

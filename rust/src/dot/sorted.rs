@@ -1,0 +1,296 @@
+//! The PQS sorted dot product (paper §3.2, Algorithm 1).
+//!
+//! Two variants, both bit-exact against `ref.py`:
+//! * `sorted1_dot` — single sorting round (what the Pallas kernel and the
+//!   paper's one-round claim use): pair the largest positives with the most
+//!   negative products, then push the paired sums through the p-bit
+//!   accumulator in order.
+//! * `sorted_full_dot` — Algorithm 1 verbatim: repeat split/sort/pair in
+//!   exact temporaries until a single sign remains, then accumulate the
+//!   monotone remainder with clipping.
+//!
+//! Pairing arithmetic is exact (|pos + neg| <= max(|pos|, |neg|) fits i32);
+//! only the running accumulation is width-limited, mirroring a hardware
+//! sorting network feeding a narrow accumulator (paper §6).
+
+use super::DotEngine;
+use crate::accum::{self};
+
+/// One PQS sorting round into `seq`: `seq[i] = pos_desc[i] + neg_asc[i]`
+/// with zero padding so `sum(seq) == sum(prods)` exactly.
+pub fn sorted1_pair_into(eng: &mut DotEngine, prods: &[i32], out_is_seq: bool) {
+    let k = prods.len();
+    let (pos, neg, seq) = (&mut eng.pos, &mut eng.neg, &mut eng.seq);
+    pos.clear();
+    neg.clear();
+    for &v in prods {
+        if v > 0 {
+            pos.push(v);
+        } else if v < 0 {
+            neg.push(v);
+        }
+    }
+    // descending positives, ascending negatives; zeros pad the tails
+    pos.sort_unstable_by(|a, b| b.cmp(a));
+    neg.sort_unstable();
+    if out_is_seq {
+        seq.clear();
+        seq.reserve(k);
+        let m = pos.len().min(neg.len());
+        for i in 0..m {
+            seq.push(pos[i] + neg[i]);
+        }
+        if pos.len() > m {
+            seq.extend_from_slice(&pos[m..]);
+        } else {
+            seq.extend_from_slice(&neg[m..]);
+        }
+        // NOTE: ref.py / the Pallas kernel keep a fixed K-length sequence
+        // with a zero tail; adding zero can never overflow, so dropping the
+        // padding preserves both value and event count exactly (perf pass:
+        // the zero tail dominated the clip scan on sparse inputs).
+        let _ = k;
+    }
+}
+
+/// Single-round sorted dot product through a p-bit clipping accumulator.
+pub fn sorted1_dot(eng: &mut DotEngine, prods: &[i32], p: u32) -> (i64, u32) {
+    sorted1_pair_into(eng, prods, true);
+    let seq = std::mem::take(&mut eng.seq);
+    let r = accum::clip_accumulate(&seq, p);
+    eng.seq = seq;
+    r
+}
+
+/// Algorithm 1 (multi-round) through a p-bit clipping accumulator.
+pub fn sorted_full_dot(eng: &mut DotEngine, prods: &[i32], p: u32) -> (i64, u32) {
+    let cur = &mut eng.tmp;
+    cur.clear();
+    cur.extend(prods.iter().copied().filter(|&v| v != 0));
+    loop {
+        if cur.len() <= 1 {
+            let r = match cur.first() {
+                None => (0, 0),
+                Some(&v) => accum::clip_accumulate(&[v], p),
+            };
+            return r;
+        }
+        let (pos, neg) = (&mut eng.pos, &mut eng.neg);
+        pos.clear();
+        neg.clear();
+        for &v in cur.iter() {
+            if v > 0 {
+                pos.push(v);
+            } else {
+                neg.push(v);
+            }
+        }
+        if pos.is_empty() || neg.is_empty() {
+            // Single sign: monotone accumulation through the accumulator.
+            // Order within a sign does not change the event count (monotone
+            // prefix), but keep ref.py's order: the current buffer order.
+            return accum::clip_accumulate(cur, p);
+        }
+        pos.sort_unstable_by(|a, b| b.cmp(a));
+        neg.sort_unstable();
+        let m = pos.len().min(neg.len());
+        cur.clear();
+        for i in 0..m {
+            let s = pos[i] + neg[i];
+            if s != 0 {
+                cur.push(s);
+            }
+        }
+        if pos.len() > m {
+            cur.extend_from_slice(&pos[m..]);
+        } else if neg.len() > m {
+            cur.extend_from_slice(&neg[m..]);
+        }
+    }
+}
+
+/// `sorted_full_dot` with early persistent-overflow exit (paper §6): once
+/// the monotone accumulation clips, every remaining same-sign add would
+/// also clip, so we stop. Returns `(value, events, adds_skipped)`.
+pub fn sorted_full_dot_early_exit(eng: &mut DotEngine, prods: &[i32], p: u32) -> (i64, u32, usize) {
+    let cur = &mut eng.tmp;
+    cur.clear();
+    cur.extend(prods.iter().copied().filter(|&v| v != 0));
+    loop {
+        if cur.len() <= 1 {
+            return match cur.first() {
+                None => (0, 0, 0),
+                Some(&v) => {
+                    let (val, ev) = accum::clip_accumulate(&[v], p);
+                    (val, ev, 0)
+                }
+            };
+        }
+        let (pos, neg) = (&mut eng.pos, &mut eng.neg);
+        pos.clear();
+        neg.clear();
+        for &v in cur.iter() {
+            if v > 0 {
+                pos.push(v);
+            } else {
+                neg.push(v);
+            }
+        }
+        if pos.is_empty() || neg.is_empty() {
+            // monotone phase with early exit
+            let (lo, hi) = accum::acc_range(p);
+            let mut acc = 0i64;
+            for (i, &v) in cur.iter().enumerate() {
+                let t = acc + v as i64;
+                if t < lo || t > hi {
+                    // one event, remainder skipped (all same sign => all clip)
+                    let skipped = cur.len() - i - 1;
+                    return (if t < lo { lo } else { hi }, 1 + skipped as u32, skipped);
+                }
+                acc = t;
+            }
+            return (acc, 0, 0);
+        }
+        pos.sort_unstable_by(|a, b| b.cmp(a));
+        neg.sort_unstable();
+        let m = pos.len().min(neg.len());
+        cur.clear();
+        for i in 0..m {
+            let s = pos[i] + neg[i];
+            if s != 0 {
+                cur.push(s);
+            }
+        }
+        if pos.len() > m {
+            cur.extend_from_slice(&pos[m..]);
+        } else if neg.len() > m {
+            cur.extend_from_slice(&neg[m..]);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::accum::Policy;
+    use crate::dot::classify;
+    use crate::util::prop;
+    use crate::util::rng::Pcg32;
+
+    fn eng() -> DotEngine {
+        DotEngine::new()
+    }
+
+    #[test]
+    fn pair_preserves_sum_prop() {
+        prop::check(
+            "sorted1-sum-preserved",
+            300,
+            |r: &mut Pcg32| prop::gen_prods(r, 128, 8),
+            |prods| {
+                let mut e = eng();
+                sorted1_pair_into(&mut e, prods, true);
+                let s: i64 = e.seq.iter().map(|&v| v as i64).sum();
+                let t: i64 = prods.iter().map(|&v| v as i64).sum();
+                if s != t {
+                    return Err(format!("{s} != {t}"));
+                }
+                if e.seq.len() > prods.len() {
+                    return Err("length grew".into());
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn full_sorted_terminates_and_is_exact_when_fits_prop() {
+        prop::check(
+            "sorted-full-exact",
+            500,
+            |r: &mut Pcg32| (prop::gen_prods(r, 256, 8), 12 + r.below(12)),
+            |(prods, p)| {
+                let mut e = eng();
+                let cls = classify(prods, *p);
+                let (v, ev) = sorted_full_dot(&mut e, prods, *p);
+                if !cls.persistent && (ev != 0 || v != cls.exact) {
+                    return Err(format!("v={v} ev={ev} exact={}", cls.exact));
+                }
+                if cls.persistent {
+                    let (lo, hi) = crate::accum::acc_range(*p);
+                    let want = if cls.exact > hi { hi } else { lo };
+                    if v != want {
+                        return Err(format!("persistent clipped to {v} not {want}"));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn early_exit_matches_value() {
+        prop::check(
+            "early-exit-value",
+            300,
+            |r: &mut Pcg32| (prop::gen_prods(r, 128, 8), 12 + r.below(8)),
+            |(prods, p)| {
+                let mut e = eng();
+                let (v1, _) = sorted_full_dot(&mut e, prods, *p);
+                let mut e2 = eng();
+                let (v2, _, _) = sorted_full_dot_early_exit(&mut e2, prods, *p);
+                if v1 != v2 {
+                    return Err(format!("{v1} != {v2}"));
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn early_exit_skips_on_persistent() {
+        let mut e = eng();
+        let prods = vec![10_000i32; 64]; // hugely persistent at p=14
+        let (_, _, skipped) = sorted_full_dot_early_exit(&mut e, &prods, 14);
+        assert!(skipped > 50, "skipped {skipped}");
+    }
+
+    #[test]
+    fn engineered_transient_resolved() {
+        // mirrors python test: +3/-3 maximal products, exact sum 0
+        let prods = [16129, 16129, 16129, -16129, -16129, -16129];
+        let mut e = eng();
+        assert_eq!(sorted1_dot(&mut e, &prods, 16), (0, 0));
+        assert_eq!(sorted_full_dot(&mut e, &prods, 16), (0, 0));
+        let mut d = eng();
+        let (v, ev) = d.dot(&prods, 16, Policy::Clip);
+        assert!(ev > 0 && v != 0);
+    }
+
+    #[test]
+    fn single_sign_monotone_no_events_when_fits() {
+        let prods = [5i32, 7, 11, 13];
+        let mut e = eng();
+        assert_eq!(sorted_full_dot(&mut e, &prods, 12), (36, 0));
+    }
+
+    #[test]
+    fn zeros_and_empty() {
+        let mut e = eng();
+        assert_eq!(sorted_full_dot(&mut e, &[], 12), (0, 0));
+        assert_eq!(sorted_full_dot(&mut e, &[0, 0, 0], 12), (0, 0));
+        assert_eq!(sorted1_dot(&mut e, &[], 12), (0, 0));
+        assert_eq!(sorted1_dot(&mut e, &[0], 12), (0, 0));
+    }
+
+    #[test]
+    fn scratch_reuse_is_clean() {
+        // running different dots back-to-back on one engine must not leak
+        let mut e = eng();
+        let a = sorted1_dot(&mut e, &[100, -50, 25], 16);
+        let b = sorted1_dot(&mut e, &[1, 2, 3], 16);
+        let c = sorted1_dot(&mut e, &[100, -50, 25], 16);
+        assert_eq!(a, c);
+        assert_eq!(b, (6, 0));
+    }
+}

@@ -1,0 +1,117 @@
+//! Tiled sorted dot product (paper §6, Software Scheduling).
+//!
+//! Tiling splits a length-K dot product into K/t independent chunks so that
+//! cache-blocked matmul schedules (and bounded hardware sorting networks)
+//! can be used — but the sorting round then only sees the products inside
+//! one tile. This module reproduces the paper's study: with tile size
+//! k=256, PQS still eliminates ~99% of transient overflows in MobileNetV2.
+//!
+//! Semantics: each tile is sorted+paired independently (exact temporaries);
+//! the paired sequences are pushed tile-after-tile through the *single*
+//! running p-bit accumulator.
+
+use super::sorted::sorted1_pair_into;
+use super::DotEngine;
+use crate::accum;
+
+/// Tiled single-round sorted dot product. `tile == 0` or `tile >= K` means
+/// one full-width tile (identical to `sorted1_dot`).
+/// Returns `(value, overflow events)`.
+pub fn tiled_sorted_dot(eng: &mut DotEngine, prods: &[i32], p: u32, tile: usize) -> (i64, u32) {
+    let k = prods.len();
+    let tile = if tile == 0 { k.max(1) } else { tile };
+    let (lo, hi) = accum::acc_range(p);
+    let mut acc = 0i64;
+    let mut ovf = 0u32;
+    let mut start = 0;
+    while start < k {
+        let end = (start + tile).min(k);
+        sorted1_pair_into(eng, &prods[start..end], true);
+        for &v in &eng.seq {
+            let t = acc + v as i64;
+            acc = if t < lo {
+                ovf += 1;
+                lo
+            } else if t > hi {
+                ovf += 1;
+                hi
+            } else {
+                t
+            };
+        }
+        start = end;
+    }
+    (acc, ovf)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dot::sorted::sorted1_dot;
+    use crate::util::prop;
+    use crate::util::rng::Pcg32;
+
+    #[test]
+    fn full_tile_equals_sorted1() {
+        prop::check(
+            "tiled-full-is-sorted1",
+            200,
+            |r: &mut Pcg32| (prop::gen_prods(r, 128, 8), 12 + r.below(10)),
+            |(prods, p)| {
+                let mut a = DotEngine::new();
+                let mut b = DotEngine::new();
+                let t = tiled_sorted_dot(&mut a, prods, *p, 0);
+                let s = sorted1_dot(&mut b, prods, *p);
+                if t != s {
+                    return Err(format!("{t:?} != {s:?}"));
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn tiled_value_exact_when_no_events() {
+        prop::check(
+            "tiled-clean-exact",
+            300,
+            |r: &mut Pcg32| {
+                let prods = prop::gen_prods(r, 200, 8);
+                let tile = [8usize, 16, 64][r.below(3) as usize];
+                (prods, 14 + r.below(8), tile)
+            },
+            |(prods, p, tile)| {
+                let mut e = DotEngine::new();
+                let (v, ev) = tiled_sorted_dot(&mut e, prods, *p, *tile);
+                let exact: i64 = prods.iter().map(|&x| x as i64).sum();
+                if ev == 0 && v != exact {
+                    return Err(format!("clean but {v} != {exact}"));
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn smaller_tiles_weaker_or_equal() {
+        // An engineered case where tiling misses the cancellation: large
+        // positives in tile 1, large negatives in tile 2.
+        let mut prods = vec![16000i32; 8];
+        prods.extend(vec![-16000i32; 8]);
+        let mut e = DotEngine::new();
+        let (v_full, ev_full) = tiled_sorted_dot(&mut e, &prods, 16, 0);
+        assert_eq!((v_full, ev_full), (0, 0));
+        let (_, ev_tiled) = tiled_sorted_dot(&mut e, &prods, 16, 8);
+        assert!(ev_tiled > 0, "tile=8 should overflow inside first tile");
+    }
+
+    #[test]
+    fn tile_one_is_naive_clip() {
+        // tile=1 degenerates to index-order clipped accumulation
+        let prods = [30000i32, -20000, 25000, -30000];
+        let mut e = DotEngine::new();
+        let a = tiled_sorted_dot(&mut e, &prods, 16, 1);
+        let b = crate::accum::clip_accumulate(&prods, 16);
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,103 @@
+//! Figure 2 — overflow profile of a 1-layer MLP (8-bit w/act) vs
+//! accumulator bitwidth.
+//!
+//! (a) fraction of overflowing dot products that are transient vs
+//!     persistent, per accumulator width;
+//! (b) test accuracy when clipping all overflows vs resolving only the
+//!     transient ones (oracle) vs the PQS sorted dot product, against the
+//!     FP32 baseline.
+
+use anyhow::Result;
+
+use crate::accum::Policy;
+use crate::coordinator::EvalService;
+use crate::formats::manifest::Manifest;
+use crate::models;
+use crate::nn::engine::EngineConfig;
+
+#[derive(Clone, Debug)]
+pub struct Fig2Row {
+    pub acc_bits: u32,
+    pub dots: u64,
+    pub overflow_dots: u64,
+    pub transient_dots: u64,
+    pub persistent_dots: u64,
+    pub transient_pct: f64,
+    pub acc_clip: f64,
+    pub acc_oracle: f64,
+    pub acc_sorted: f64,
+}
+
+pub struct Fig2Result {
+    pub model: String,
+    pub fp32_baseline: f64,
+    pub rows: Vec<Fig2Row>,
+}
+
+pub fn run(man: &Manifest, limit: usize, bit_range: std::ops::RangeInclusive<u32>) -> Result<Fig2Result> {
+    let name = &man.experiments["fig2"][0];
+    let model = models::load(man, name)?;
+    let ds = super::test_dataset(man, &model.arch)?;
+    let fp32_baseline = model.acc_fp32;
+
+    let mut rows = Vec::new();
+    for p in bit_range {
+        // one stats pass (clip policy) gives the overflow profile + clip acc
+        let svc = EvalService::new(
+            &model,
+            EngineConfig { policy: Policy::Clip, acc_bits: p, collect_stats: true, tile: 0 },
+        );
+        let clip = svc.evaluate(&ds, Some(limit))?;
+        let st = clip.report.total();
+
+        let oracle = EvalService::new(
+            &model,
+            EngineConfig { policy: Policy::Oracle, acc_bits: p, ..Default::default() },
+        )
+        .evaluate(&ds, Some(limit))?;
+        let sorted = EvalService::new(
+            &model,
+            EngineConfig { policy: Policy::Sorted, acc_bits: p, ..Default::default() },
+        )
+        .evaluate(&ds, Some(limit))?;
+
+        let overflow_dots = st.transient_dots + st.persistent_dots;
+        rows.push(Fig2Row {
+            acc_bits: p,
+            dots: st.dots,
+            overflow_dots,
+            transient_dots: st.transient_dots,
+            persistent_dots: st.persistent_dots,
+            transient_pct: 100.0 * st.transient_fraction(),
+            acc_clip: clip.accuracy,
+            acc_oracle: oracle.accuracy,
+            acc_sorted: sorted.accuracy,
+        });
+    }
+    Ok(Fig2Result { model: name.clone(), fp32_baseline, rows })
+}
+
+pub fn print(r: &Fig2Result) {
+    println!("\n=== Fig. 2 — overflow profile, model {} (fp32 baseline {:.3}) ===", r.model, r.fp32_baseline);
+    let rows: Vec<Vec<String>> = r
+        .rows
+        .iter()
+        .map(|w| {
+            vec![
+                w.acc_bits.to_string(),
+                w.dots.to_string(),
+                w.overflow_dots.to_string(),
+                w.transient_dots.to_string(),
+                w.persistent_dots.to_string(),
+                format!("{:.1}%", w.transient_pct),
+                format!("{:.3}", w.acc_clip),
+                format!("{:.3}", w.acc_oracle),
+                format!("{:.3}", w.acc_sorted),
+            ]
+        })
+        .collect();
+    super::print_table(
+        &["p", "dots", "ovf", "transient", "persistent", "trans%", "acc(clip)", "acc(oracle)", "acc(sorted)"],
+        &rows,
+    );
+}

@@ -1,0 +1,73 @@
+//! Figure 3 — P->Q vs Q->P under low-rank weight approximation
+//! (2-layer MLP, N:M with M=32).
+//!
+//! The comparison is a *training-schedule* property, so the accuracies come
+//! from the python QAT runs recorded in the manifest; the rust engine
+//! re-verifies a subset end-to-end (wide accumulator) to confirm the
+//! exported artifacts reproduce the python numbers.
+
+use anyhow::Result;
+
+use crate::accum::Policy;
+use crate::coordinator::EvalService;
+use crate::formats::manifest::{Manifest, ModelEntry};
+use crate::models;
+use crate::nn::engine::EngineConfig;
+
+#[derive(Clone, Debug)]
+pub struct Fig3Row {
+    pub schedule: String,
+    pub rank: String,
+    pub sparsity: f64,
+    pub acc_python: f64,
+    /// engine accuracy at wide accumulator (verification; NaN if skipped)
+    pub acc_rust: f64,
+}
+
+pub fn run(man: &Manifest, limit: usize, verify_every: usize) -> Result<Vec<Fig3Row>> {
+    let mut rows = Vec::new();
+    let entries: Vec<&ModelEntry> = man.experiment_models("fig3");
+    for (i, e) in entries.iter().enumerate() {
+        let rank = e.lowrank_k.map(|k| k.to_string()).unwrap_or_else(|| "full".into());
+        let mut acc_rust = f64::NAN;
+        if verify_every > 0 && i % verify_every == 0 {
+            let model = models::load(man, &e.name)?;
+            let ds = super::test_dataset(man, &model.arch)?;
+            let svc = EvalService::new(
+                &model,
+                EngineConfig { policy: Policy::Exact, acc_bits: 32, ..Default::default() },
+            );
+            acc_rust = svc.evaluate(&ds, Some(limit))?.accuracy;
+        }
+        rows.push(Fig3Row {
+            schedule: e.schedule.clone(),
+            rank,
+            sparsity: e.target_sparsity,
+            acc_python: e.acc_q,
+            acc_rust,
+        });
+    }
+    rows.sort_by(|a, b| {
+        (a.schedule.clone(), a.rank.clone(), a.sparsity)
+            .partial_cmp(&(b.schedule.clone(), b.rank.clone(), b.sparsity))
+            .unwrap()
+    });
+    Ok(rows)
+}
+
+pub fn print(rows: &[Fig3Row]) {
+    println!("\n=== Fig. 3 — P->Q vs Q->P under low-rank approximation (MLP-2) ===");
+    let out: Vec<Vec<String>> = rows
+        .iter()
+        .map(|r| {
+            vec![
+                r.schedule.clone(),
+                r.rank.clone(),
+                format!("{:.0}%", 100.0 * r.sparsity),
+                format!("{:.3}", r.acc_python),
+                if r.acc_rust.is_nan() { "-".into() } else { format!("{:.3}", r.acc_rust) },
+            ]
+        })
+        .collect();
+    super::print_table(&["schedule", "rank", "sparsity", "acc(python)", "acc(rust-engine)"], &out);
+}

@@ -1,0 +1,77 @@
+//! Figure 4 — P->Q vs Q->P vs structured filter pruning on the CNNs
+//! (ResNet-tiny / MobileNetV2-tiny, N:M with M=16).
+
+use anyhow::Result;
+
+use crate::accum::Policy;
+use crate::coordinator::EvalService;
+use crate::formats::manifest::Manifest;
+use crate::models;
+use crate::nn::engine::EngineConfig;
+
+#[derive(Clone, Debug)]
+pub struct Fig4Row {
+    pub arch: String,
+    pub schedule: String,
+    pub sparsity: f64,
+    pub acc_python: f64,
+    pub acc_rust: f64,
+    pub fp32_baseline: f64,
+}
+
+pub fn run(man: &Manifest, limit: usize, verify_every: usize) -> Result<Vec<Fig4Row>> {
+    let mut rows = Vec::new();
+    for (i, e) in man.experiment_models("fig4").iter().enumerate() {
+        let fp32 = man
+            .experiment_models("fp32")
+            .iter()
+            .find(|b| b.arch == e.arch)
+            .map(|b| b.acc_fp32)
+            .unwrap_or(f64::NAN);
+        let mut acc_rust = f64::NAN;
+        if verify_every > 0 && i % verify_every == 0 {
+            let model = models::load(man, &e.name)?;
+            let ds = super::test_dataset(man, &model.arch)?;
+            let svc = EvalService::new(
+                &model,
+                EngineConfig { policy: Policy::Exact, acc_bits: 32, ..Default::default() },
+            );
+            acc_rust = svc.evaluate(&ds, Some(limit))?.accuracy;
+        }
+        rows.push(Fig4Row {
+            arch: e.arch.clone(),
+            schedule: e.schedule.clone(),
+            sparsity: e.target_sparsity,
+            acc_python: e.acc_q,
+            acc_rust,
+            fp32_baseline: fp32,
+        });
+    }
+    rows.sort_by(|a, b| {
+        (a.arch.clone(), a.schedule.clone(), a.sparsity)
+            .partial_cmp(&(b.arch.clone(), b.schedule.clone(), b.sparsity))
+            .unwrap()
+    });
+    Ok(rows)
+}
+
+pub fn print(rows: &[Fig4Row]) {
+    println!("\n=== Fig. 4 — pruning/quantization schedules on CNNs ===");
+    let out: Vec<Vec<String>> = rows
+        .iter()
+        .map(|r| {
+            vec![
+                r.arch.clone(),
+                r.schedule.clone(),
+                format!("{:.0}%", 100.0 * r.sparsity),
+                format!("{:.3}", r.acc_python),
+                if r.acc_rust.is_nan() { "-".into() } else { format!("{:.3}", r.acc_rust) },
+                format!("{:.3}", r.fp32_baseline),
+            ]
+        })
+        .collect();
+    super::print_table(
+        &["arch", "schedule", "sparsity", "acc(python)", "acc(rust)", "fp32-baseline"],
+        &out,
+    );
+}

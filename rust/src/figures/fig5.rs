@@ -1,0 +1,155 @@
+//! Figure 5 — accuracy vs accumulator bitwidth: the PQS pareto frontier
+//! against A2Q and against clipping the (sparse) dot products.
+//!
+//! For every candidate model the rust engine sweeps the accumulator width
+//! with the full sorted policy (PQS, blue) and with saturating clipping
+//! (magenta), producing the paper's central claim: sorting buys ~4 bits of
+//! accumulator and pushes below the A2Q frontier.
+
+use anyhow::Result;
+
+use crate::accum::Policy;
+use crate::coordinator::EvalService;
+use crate::formats::manifest::{Manifest, ModelEntry};
+use crate::models;
+use crate::nn::engine::EngineConfig;
+
+#[derive(Clone, Debug)]
+pub struct Fig5Point {
+    pub model: String,
+    pub arch: String,
+    pub family: String, // "pqs" | "a2q"
+    pub wbits: u8,
+    pub sparsity: f64,
+    pub acc_bits: u32,
+    pub acc_sorted: f64,
+    pub acc_clip: f64,
+    pub fp32_baseline: f64,
+}
+
+/// Candidate models: PQS = all P->Q pruned models (fig4/fig5 pq + fig2),
+/// A2Q = the a2q schedule runs.
+fn candidates<'m>(man: &'m Manifest, arch_filter: Option<&str>) -> Vec<&'m ModelEntry> {
+    let mut names: Vec<&String> = Vec::new();
+    for exp in ["fig2", "fig4", "fig5"] {
+        if let Some(v) = man.experiments.get(exp) {
+            names.extend(v.iter());
+        }
+    }
+    names.sort();
+    names.dedup();
+    names
+        .into_iter()
+        .filter_map(|n| man.models.get(n))
+        .filter(|e| e.schedule == "pq" || e.schedule == "a2q")
+        .filter(|e| arch_filter.map(|a| e.arch == a).unwrap_or(true))
+        .collect()
+}
+
+pub fn run(
+    man: &Manifest,
+    limit: usize,
+    acc_bits: &[u32],
+    arch_filter: Option<&str>,
+) -> Result<Vec<Fig5Point>> {
+    let mut points = Vec::new();
+    for e in candidates(man, arch_filter) {
+        let model = models::load(man, &e.name)?;
+        let ds = super::test_dataset(man, &model.arch)?;
+        let fp32 = man
+            .experiment_models("fp32")
+            .iter()
+            .find(|b| b.arch == e.arch)
+            .map(|b| b.acc_fp32)
+            .unwrap_or(f64::NAN);
+        // A2Q models are evaluated at their trained accumulator width only
+        // (their guarantee is specific to it); PQS models sweep the range.
+        let widths: Vec<u32> = match e.acc_bits_trained {
+            Some(p) => vec![p],
+            None => acc_bits.to_vec(),
+        };
+        for p in widths {
+            let sorted = EvalService::new(
+                &model,
+                EngineConfig { policy: Policy::Sorted, acc_bits: p, ..Default::default() },
+            )
+            .evaluate(&ds, Some(limit))?;
+            let clip = EvalService::new(
+                &model,
+                EngineConfig { policy: Policy::Clip, acc_bits: p, ..Default::default() },
+            )
+            .evaluate(&ds, Some(limit))?;
+            points.push(Fig5Point {
+                model: e.name.clone(),
+                arch: e.arch.clone(),
+                family: if e.schedule == "a2q" { "a2q".into() } else { "pqs".into() },
+                wbits: e.wbits,
+                sparsity: e.achieved_sparsity,
+                acc_bits: p,
+                acc_sorted: sorted.accuracy,
+                acc_clip: clip.accuracy,
+                fp32_baseline: fp32,
+            });
+        }
+    }
+    Ok(points)
+}
+
+/// Pareto frontier per family: for each accumulator width, the best
+/// accuracy achieved by any model of that family.
+pub fn frontier(points: &[Fig5Point], arch: &str, family: &str) -> Vec<(u32, f64)> {
+    let mut best: std::collections::BTreeMap<u32, f64> = Default::default();
+    for p in points.iter().filter(|p| p.arch == arch && p.family == family) {
+        let acc = if family == "a2q" { p.acc_clip } else { p.acc_sorted };
+        let e = best.entry(p.acc_bits).or_insert(f64::MIN);
+        if acc > *e {
+            *e = acc;
+        }
+    }
+    best.into_iter().collect()
+}
+
+pub fn print(points: &[Fig5Point]) {
+    println!("\n=== Fig. 5 — accuracy vs accumulator bitwidth (per point) ===");
+    let rows: Vec<Vec<String>> = points
+        .iter()
+        .map(|p| {
+            vec![
+                p.model.clone(),
+                p.family.clone(),
+                p.acc_bits.to_string(),
+                format!("{:.3}", p.acc_sorted),
+                format!("{:.3}", p.acc_clip),
+                format!("{:.3}", p.fp32_baseline),
+            ]
+        })
+        .collect();
+    super::print_table(
+        &["model", "family", "p", "acc(sorted)", "acc(clip)", "fp32"],
+        &rows,
+    );
+    // frontiers
+    let mut archs: Vec<&str> = points.iter().map(|p| p.arch.as_str()).collect();
+    archs.sort();
+    archs.dedup();
+    for arch in archs {
+        println!("\n--- {arch} pareto frontiers ---");
+        for fam in ["pqs", "a2q"] {
+            let f = frontier(points, arch, fam);
+            let line: Vec<String> =
+                f.iter().map(|(p, a)| format!("p{p}:{a:.3}")).collect();
+            println!("{fam:>4}: {}", line.join("  "));
+        }
+    }
+}
+
+/// Headline metric: lowest accumulator width at which the best PQS model
+/// stays within `tol` of the FP32 baseline (paper: 2.5x reduction vs 32b).
+pub fn min_width_within(points: &[Fig5Point], arch: &str, tol: f64) -> Option<(u32, f64, f64)> {
+    let base = points.iter().find(|p| p.arch == arch)?.fp32_baseline;
+    frontier(points, arch, "pqs")
+        .into_iter()
+        .filter(|(_, acc)| *acc >= base - tol)
+        .min_by_key(|(p, _)| *p)
+        .map(|(p, acc)| (p, acc, base))
+}

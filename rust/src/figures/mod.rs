@@ -1,0 +1,53 @@
+//! Figure/table reproduction harnesses (DESIGN.md §3, experiment index).
+//!
+//! Each `figN` module computes the rows behind the corresponding figure of
+//! the paper; `examples/figN_*.rs` print them and `rust/benches/
+//! bench_figures.rs` times them. Sample limits are tunable via
+//! `PQS_EVAL_LIMIT` (default keeps full-figure regeneration in minutes on
+//! one core).
+
+pub mod fig2;
+pub mod fig3;
+pub mod fig4;
+pub mod fig5;
+pub mod sec6;
+
+use anyhow::Result;
+
+use crate::data::Dataset;
+use crate::formats::manifest::Manifest;
+
+/// Default per-model evaluation sample cap (override: PQS_EVAL_LIMIT).
+pub fn eval_limit(default: usize) -> usize {
+    std::env::var("PQS_EVAL_LIMIT").ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+/// Load the test dataset for an architecture.
+pub fn test_dataset(man: &Manifest, arch: &str) -> Result<Dataset> {
+    let entry = man.test_dataset_for(arch)?;
+    Ok(Dataset::load(man.dataset_path(&entry.test))?)
+}
+
+/// Render a simple aligned table.
+pub fn print_table(headers: &[&str], rows: &[Vec<String>]) {
+    let mut width: Vec<usize> = headers.iter().map(|h| h.len()).collect();
+    for r in rows {
+        for (i, c) in r.iter().enumerate() {
+            if i < width.len() {
+                width[i] = width[i].max(c.len());
+            }
+        }
+    }
+    let line = |cells: Vec<String>| {
+        let mut s = String::new();
+        for (i, c) in cells.iter().enumerate() {
+            s.push_str(&format!("{:>w$}  ", c, w = width[i]));
+        }
+        println!("{}", s.trim_end());
+    };
+    line(headers.iter().map(|h| h.to_string()).collect());
+    line(width.iter().map(|w| "-".repeat(*w)).collect());
+    for r in rows {
+        line(r.clone());
+    }
+}

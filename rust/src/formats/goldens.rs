@@ -1,0 +1,143 @@
+//! Readers for the bit-exactness goldens exported by `python/compile/aot.py`
+//! (`artifacts/goldens/*.json`). These are the cross-layer contracts: the
+//! Rust engine must reproduce the NumPy/Pallas integer semantics exactly.
+
+use anyhow::{anyhow, Context, Result};
+use std::path::Path;
+
+use crate::util::json::Json;
+
+/// One dot-product golden case.
+#[derive(Clone, Debug)]
+pub struct DotCase {
+    pub w: Vec<i32>,
+    pub x: Vec<i32>,
+    /// accumulator bits -> policy name -> (value, events)
+    pub results: Vec<(u32, Vec<(String, i64, i64)>)>,
+    /// accumulator bits -> (exact, persistent, naive_events, transient)
+    pub classify: Vec<(u32, (i64, bool, i64, bool))>,
+}
+
+pub fn load_dot_goldens<P: AsRef<Path>>(path: P) -> Result<Vec<DotCase>> {
+    let txt = std::fs::read_to_string(path.as_ref()).context("reading dot goldens")?;
+    let j = Json::parse(&txt)?;
+    let mut out = Vec::new();
+    for c in j.get("cases").and_then(Json::as_arr).ok_or_else(|| anyhow!("cases"))? {
+        let w: Vec<i32> = c.get("w").and_then(Json::as_ivec).ok_or_else(|| anyhow!("w"))?
+            .into_iter().map(|v| v as i32).collect();
+        let x: Vec<i32> = c.get("x").and_then(Json::as_ivec).ok_or_else(|| anyhow!("x"))?
+            .into_iter().map(|v| v as i32).collect();
+        let mut results = Vec::new();
+        let mut classify = Vec::new();
+        if let Some(Json::Obj(res)) = c.get("results") {
+            for (pbits, table) in res {
+                let p: u32 = pbits.parse().context("p bits key")?;
+                let mut pol = Vec::new();
+                if let Json::Obj(t) = table {
+                    for (name, val) in t {
+                        if name == "classify" {
+                            let v = val.as_ivec().ok_or_else(|| anyhow!("classify"))?;
+                            classify.push((p, (v[0], v[1] != 0, v[2], v[3] != 0)));
+                        } else {
+                            let v = val.as_ivec().ok_or_else(|| anyhow!("policy vals"))?;
+                            pol.push((name.clone(), v[0], v[1]));
+                        }
+                    }
+                }
+                results.push((p, pol));
+            }
+        }
+        out.push(DotCase { w, x, results, classify });
+    }
+    Ok(out)
+}
+
+/// Matmul golden (pallas kernel contract).
+#[derive(Clone, Debug)]
+pub struct MatmulCase {
+    pub m: usize,
+    pub k: usize,
+    pub n: usize,
+    pub p: u32,
+    pub policy: String,
+    pub x: Vec<i32>,
+    pub w: Vec<i32>,
+    pub y: Vec<i64>,
+    pub ovf: Vec<i64>,
+}
+
+pub fn load_matmul_goldens<P: AsRef<Path>>(path: P) -> Result<Vec<MatmulCase>> {
+    let txt = std::fs::read_to_string(path.as_ref()).context("reading matmul goldens")?;
+    let j = Json::parse(&txt)?;
+    let mut out = Vec::new();
+    for c in j.get("cases").and_then(Json::as_arr).ok_or_else(|| anyhow!("cases"))? {
+        let iv = |k: &str| -> Result<Vec<i64>> {
+            c.get(k).and_then(Json::as_ivec).ok_or_else(|| anyhow!("field {k}"))
+        };
+        out.push(MatmulCase {
+            m: c.get("m").and_then(Json::as_usize).ok_or_else(|| anyhow!("m"))?,
+            k: c.get("k").and_then(Json::as_usize).ok_or_else(|| anyhow!("k"))?,
+            n: c.get("n").and_then(Json::as_usize).ok_or_else(|| anyhow!("n"))?,
+            p: c.get("p").and_then(Json::as_i64).ok_or_else(|| anyhow!("p"))? as u32,
+            policy: c.get("policy").and_then(Json::as_str).unwrap_or("").to_string(),
+            x: iv("x")?.into_iter().map(|v| v as i32).collect(),
+            w: iv("w")?.into_iter().map(|v| v as i32).collect(),
+            y: iv("y")?,
+            ovf: iv("ovf")?,
+        });
+    }
+    Ok(out)
+}
+
+/// End-to-end model golden (mlp1): quantized inputs, exact accumulators,
+/// offset corrections and final logits for 8 test images.
+#[derive(Clone, Debug)]
+pub struct ModelGolden {
+    pub model: String,
+    pub batch: usize,
+    pub ic: usize,
+    pub oc: usize,
+    pub xq: Vec<i32>,
+    pub acc_exact: Vec<i64>,
+    pub logits: Vec<f64>,
+}
+
+pub fn load_model_golden<P: AsRef<Path>>(path: P) -> Result<ModelGolden> {
+    let txt = std::fs::read_to_string(path.as_ref()).context("reading model golden")?;
+    let j = Json::parse(&txt)?;
+    let shape = j.get("shape").and_then(Json::as_ivec).ok_or_else(|| anyhow!("shape"))?;
+    Ok(ModelGolden {
+        model: j.get("model").and_then(Json::as_str).unwrap_or("").to_string(),
+        batch: shape[0] as usize,
+        ic: shape[1] as usize,
+        oc: shape[2] as usize,
+        xq: j.get("xq").and_then(Json::as_ivec).ok_or_else(|| anyhow!("xq"))?
+            .into_iter().map(|v| v as i32).collect(),
+        acc_exact: j.get("acc_exact").and_then(Json::as_ivec).ok_or_else(|| anyhow!("acc"))?,
+        logits: j.get("logits").and_then(Json::as_fvec).ok_or_else(|| anyhow!("logits"))?,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_synthetic_dot_golden() {
+        let dir = std::env::temp_dir().join("pqs_test_goldens");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("dot.json");
+        std::fs::write(
+            &p,
+            r#"{"cases":[{"w":[1,-2],"x":[3,4],
+                "results":{"14":{"exact":[-5,0],"classify":[-5,0,0,0]}}}]}"#,
+        )
+        .unwrap();
+        let cases = load_dot_goldens(&p).unwrap();
+        assert_eq!(cases.len(), 1);
+        assert_eq!(cases[0].w, vec![1, -2]);
+        assert_eq!(cases[0].results[0].0, 14);
+        assert_eq!(cases[0].results[0].1[0], ("exact".to_string(), -5, 0));
+        assert_eq!(cases[0].classify[0], (14, (-5, false, 0, false)));
+    }
+}

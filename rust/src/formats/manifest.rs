@@ -1,0 +1,167 @@
+//! `artifacts/manifest.json` reader: the experiment index written by
+//! `python/compile/aot.py` that maps each paper figure to its trained
+//! models (DESIGN.md §3).
+
+use anyhow::{anyhow, Context, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use crate::util::json::Json;
+
+/// Summary of one trained model.
+#[derive(Clone, Debug)]
+pub struct ModelEntry {
+    pub name: String,
+    pub file: String,
+    pub arch: String,
+    pub schedule: String,
+    pub wbits: u8,
+    pub abits: u8,
+    pub target_sparsity: f64,
+    pub achieved_sparsity: f64,
+    pub acc_bits_trained: Option<u32>,
+    pub lowrank_k: Option<usize>,
+    pub acc_q: f64,
+    pub acc_fp32: f64,
+}
+
+/// Dataset pointers.
+#[derive(Clone, Debug)]
+pub struct DatasetEntry {
+    pub train: String,
+    pub test: String,
+    pub shape: Vec<usize>,
+}
+
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub quick: bool,
+    pub experiments: BTreeMap<String, Vec<String>>,
+    pub models: BTreeMap<String, ModelEntry>,
+    pub datasets: BTreeMap<String, DatasetEntry>,
+}
+
+impl Manifest {
+    pub fn load_dir<P: AsRef<Path>>(dir: P) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let txt = std::fs::read_to_string(dir.join("manifest.json"))
+            .with_context(|| format!("reading manifest in {dir:?}"))?;
+        let j = Json::parse(&txt).context("manifest json")?;
+
+        let mut experiments = BTreeMap::new();
+        if let Some(Json::Obj(exps)) = j.get("experiments") {
+            for (k, v) in exps {
+                let names = v
+                    .as_arr()
+                    .map(|a| a.iter().filter_map(|x| x.as_str().map(String::from)).collect())
+                    .unwrap_or_default();
+                experiments.insert(k.clone(), names);
+            }
+        }
+
+        let mut models = BTreeMap::new();
+        for m in j.get("models").and_then(Json::as_arr).ok_or_else(|| anyhow!("models"))? {
+            let gets = |k: &str| m.get(k).and_then(Json::as_str).unwrap_or("").to_string();
+            let e = ModelEntry {
+                name: gets("name"),
+                file: gets("file"),
+                arch: gets("arch"),
+                schedule: gets("schedule"),
+                wbits: m.get("wbits").and_then(Json::as_i64).unwrap_or(8) as u8,
+                abits: m.get("abits").and_then(Json::as_i64).unwrap_or(8) as u8,
+                target_sparsity: m.get("target_sparsity").and_then(Json::as_f64).unwrap_or(0.0),
+                achieved_sparsity: m.get("achieved_sparsity").and_then(Json::as_f64).unwrap_or(0.0),
+                acc_bits_trained: m.get("acc_bits_trained").and_then(Json::as_i64).map(|v| v as u32),
+                lowrank_k: m.get("lowrank_k").and_then(Json::as_usize),
+                acc_q: m.get("acc_q").and_then(Json::as_f64).unwrap_or(0.0),
+                acc_fp32: m.get("acc_fp32").and_then(Json::as_f64).unwrap_or(0.0),
+            };
+            models.insert(e.name.clone(), e);
+        }
+
+        let mut datasets = BTreeMap::new();
+        if let Some(Json::Obj(ds)) = j.get("datasets") {
+            for (k, v) in ds {
+                datasets.insert(
+                    k.clone(),
+                    DatasetEntry {
+                        train: v.get("train").and_then(Json::as_str).unwrap_or("").to_string(),
+                        test: v.get("test").and_then(Json::as_str).unwrap_or("").to_string(),
+                        shape: v
+                            .get("shape")
+                            .and_then(Json::as_arr)
+                            .map(|a| a.iter().filter_map(Json::as_usize).collect())
+                            .unwrap_or_default(),
+                    },
+                );
+            }
+        }
+
+        Ok(Manifest {
+            dir,
+            quick: j.get("quick").and_then(Json::as_bool).unwrap_or(false),
+            experiments,
+            models,
+            datasets,
+        })
+    }
+
+    /// Load from the default artifacts location.
+    pub fn load_default() -> Result<Manifest> {
+        Self::load_dir(crate::artifacts_dir())
+    }
+
+    pub fn model_path(&self, name: &str) -> PathBuf {
+        self.dir.join("models").join(format!("{name}.pqsw"))
+    }
+
+    pub fn dataset_path(&self, file: &str) -> PathBuf {
+        self.dir.join("datasets").join(file)
+    }
+
+    /// Test dataset for an architecture (mlp* -> mnist, else cifar).
+    pub fn test_dataset_for(&self, arch: &str) -> Result<&DatasetEntry> {
+        let key = if arch.starts_with("mlp") { "mnist" } else { "cifar" };
+        self.datasets.get(key).ok_or_else(|| anyhow!("no dataset {key}"))
+    }
+
+    /// Models of one experiment, resolved.
+    pub fn experiment_models(&self, exp: &str) -> Vec<&ModelEntry> {
+        self.experiments
+            .get(exp)
+            .map(|names| names.iter().filter_map(|n| self.models.get(n)).collect())
+            .unwrap_or_default()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_synthetic_manifest() {
+        let dir = std::env::temp_dir().join("pqs_test_manifest");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{"quick":true,
+                "experiments":{"fig2":["m1"]},
+                "models":[{"name":"m1","file":"m1.pqsw","arch":"mlp1","schedule":"pq",
+                           "wbits":8,"abits":8,"target_sparsity":0.5,
+                           "achieved_sparsity":0.49,"acc_bits_trained":null,
+                           "lowrank_k":null,"acc_q":0.9,"acc_fp32":0.91}],
+                "datasets":{"mnist":{"train":"a.bin","test":"b.bin","shape":[1,28,28]}}}"#,
+        )
+        .unwrap();
+        let m = Manifest::load_dir(&dir).unwrap();
+        assert!(m.quick);
+        assert_eq!(m.experiments["fig2"], vec!["m1"]);
+        let e = &m.models["m1"];
+        assert_eq!(e.arch, "mlp1");
+        assert_eq!(e.acc_bits_trained, None);
+        assert_eq!(m.test_dataset_for("mlp1").unwrap().test, "b.bin");
+        assert_eq!(m.experiment_models("fig2").len(), 1);
+        assert!(m.model_path("m1").ends_with("models/m1.pqsw"));
+    }
+}

@@ -1,0 +1,9 @@
+//! Artifact container readers: `.pqsw` models, the experiment manifest, and
+//! the bit-exactness goldens (DESIGN.md S17).
+
+pub mod goldens;
+pub mod manifest;
+pub mod pqsw;
+
+pub use manifest::Manifest;
+pub use pqsw::{GraphNode, Op, PqswModel, QLayerMeta};

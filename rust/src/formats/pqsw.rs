@@ -1,0 +1,259 @@
+//! `.pqsw` model container reader (written by `python/compile/pqsw.py`).
+//!
+//! Layout: magic `PQSW1\0\0\0`, u32le header length, JSON header, zero pad
+//! to 8 bytes, then 8-aligned blobs. The header carries the model graph IR
+//! shared with `python/compile/model.py` (see that module's docstring).
+
+use anyhow::{anyhow, bail, Context, Result};
+use std::path::Path;
+
+use crate::util::json::Json;
+
+pub const MAGIC: &[u8; 8] = b"PQSW1\x00\x00\x00";
+
+/// Graph operation kinds (mirrors the python IR).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Op {
+    Input,
+    Relu,
+    Add,
+    Gap,
+    Flatten,
+    QLinear,
+    QConv,
+    QDwConv,
+}
+
+impl Op {
+    pub fn from_str(s: &str) -> Result<Op> {
+        Ok(match s {
+            "input" => Op::Input,
+            "relu" => Op::Relu,
+            "add" => Op::Add,
+            "gap" => Op::Gap,
+            "flatten" => Op::Flatten,
+            "qlinear" => Op::QLinear,
+            "qconv" => Op::QConv,
+            "qdwconv" => Op::QDwConv,
+            other => bail!("unknown op {other:?}"),
+        })
+    }
+
+    pub fn is_q_layer(&self) -> bool {
+        matches!(self, Op::QLinear | Op::QConv | Op::QDwConv)
+    }
+}
+
+/// Quantized-layer metadata + weights.
+#[derive(Clone, Debug)]
+pub struct QLayerMeta {
+    pub name: String,
+    pub oc: usize,
+    pub ic: usize,
+    pub kh: usize,
+    pub kw: usize,
+    pub stride: usize,
+    pub pad: usize,
+    pub prune: bool,
+    pub w_scale: f32,
+    pub x_scale: f32,
+    pub x_offset: i32,
+    /// int8 weights, (oc, K) row-major; K = ic*kh*kw (kh*kw for depthwise)
+    pub wq: Vec<i8>,
+    /// contraction length
+    pub k: usize,
+    pub bias: Vec<f32>,
+}
+
+/// One node of the model graph.
+#[derive(Clone, Debug)]
+pub struct GraphNode {
+    pub id: usize,
+    pub op: Op,
+    pub inputs: Vec<usize>,
+    pub q: Option<QLayerMeta>,
+}
+
+/// A parsed `.pqsw` model.
+#[derive(Clone, Debug)]
+pub struct PqswModel {
+    pub name: String,
+    pub arch: String,
+    pub schedule: String,
+    pub wbits: u8,
+    pub abits: u8,
+    pub nm_m: usize,
+    pub target_sparsity: f64,
+    pub achieved_sparsity: f64,
+    pub acc_bits_trained: Option<u32>,
+    pub lowrank_k: Option<usize>,
+    pub acc_q: f64,
+    pub acc_fp32: f64,
+    pub input_shape: Vec<usize>,
+    pub graph: Vec<GraphNode>,
+}
+
+struct Blob {
+    offset: usize,
+    len: usize,
+    dtype: String,
+}
+
+impl PqswModel {
+    pub fn load<P: AsRef<Path>>(path: P) -> Result<PqswModel> {
+        let raw = std::fs::read(path.as_ref())
+            .with_context(|| format!("reading model {:?}", path.as_ref()))?;
+        if raw.len() < 12 || &raw[0..8] != MAGIC {
+            bail!("bad PQSW magic in {:?}", path.as_ref());
+        }
+        let hlen = u32::from_le_bytes(raw[8..12].try_into().unwrap()) as usize;
+        let hdr_txt = std::str::from_utf8(&raw[12..12 + hlen]).context("header utf8")?;
+        let h = Json::parse(hdr_txt).context("header json")?;
+        let blob_base = (12 + hlen + 7) & !7;
+
+        let blobs: Vec<Blob> = h
+            .get("blobs")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("missing blobs"))?
+            .iter()
+            .map(|b| {
+                Ok(Blob {
+                    offset: b.get("offset").and_then(Json::as_usize).ok_or_else(|| anyhow!("blob offset"))?,
+                    len: b.get("len").and_then(Json::as_usize).ok_or_else(|| anyhow!("blob len"))?,
+                    dtype: b.get("dtype").and_then(Json::as_str).unwrap_or("").to_string(),
+                })
+            })
+            .collect::<Result<_>>()?;
+
+        let blob_bytes = |i: usize| -> Result<&[u8]> {
+            let b = blobs.get(i).ok_or_else(|| anyhow!("blob index {i}"))?;
+            let a = blob_base + b.offset;
+            raw.get(a..a + b.len).ok_or_else(|| anyhow!("blob {i} out of bounds"))
+        };
+
+        let mut graph = Vec::new();
+        for n in h.get("graph").and_then(Json::as_arr).ok_or_else(|| anyhow!("missing graph"))? {
+            let op = Op::from_str(n.get("op").and_then(Json::as_str).unwrap_or(""))?;
+            let id = n.get("id").and_then(Json::as_usize).ok_or_else(|| anyhow!("node id"))?;
+            let inputs = n
+                .get("inputs")
+                .and_then(Json::as_arr)
+                .map(|a| a.iter().filter_map(Json::as_usize).collect())
+                .unwrap_or_default();
+            let q = if op.is_q_layer() {
+                let geti = |k: &str, d: usize| n.get(k).and_then(Json::as_usize).unwrap_or(d);
+                let oc = geti("oc", 0);
+                let ic = geti("ic", 0);
+                let kh = geti("kh", 1);
+                let kw = geti("kw", 1);
+                let wq_raw = blob_bytes(geti("wq_blob", usize::MAX))?;
+                let bias_raw = blob_bytes(geti("bias_blob", usize::MAX))?;
+                if blobs[geti("wq_blob", 0)].dtype != "i8" {
+                    bail!("weight blob dtype");
+                }
+                let wq: Vec<i8> = wq_raw.iter().map(|&b| b as i8).collect();
+                let bias: Vec<f32> = bias_raw
+                    .chunks_exact(4)
+                    .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+                    .collect();
+                let k = if op == Op::QDwConv { kh * kw } else { ic * kh * kw };
+                if wq.len() != oc * k {
+                    bail!("weight blob size {} != oc*k {}", wq.len(), oc * k);
+                }
+                if bias.len() != oc {
+                    bail!("bias blob size {} != oc {}", bias.len(), oc);
+                }
+                Some(QLayerMeta {
+                    name: n.get("name").and_then(Json::as_str).unwrap_or("").to_string(),
+                    oc,
+                    ic,
+                    kh,
+                    kw,
+                    stride: geti("stride", 1),
+                    pad: geti("pad", 0),
+                    prune: n.get("prune").and_then(Json::as_bool).unwrap_or(false),
+                    w_scale: n.get("w_scale").and_then(Json::as_f64).unwrap_or(1.0) as f32,
+                    x_scale: n.get("x_scale").and_then(Json::as_f64).unwrap_or(1.0) as f32,
+                    x_offset: n.get("x_offset").and_then(Json::as_i64).unwrap_or(0) as i32,
+                    wq,
+                    k,
+                    bias,
+                })
+            } else {
+                None
+            };
+            graph.push(GraphNode { id, op, inputs, q });
+        }
+
+        let gets = |k: &str| h.get(k).and_then(Json::as_str).unwrap_or("").to_string();
+        Ok(PqswModel {
+            name: gets("name"),
+            arch: gets("arch"),
+            schedule: gets("schedule"),
+            wbits: h.get("wbits").and_then(Json::as_i64).unwrap_or(8) as u8,
+            abits: h.get("abits").and_then(Json::as_i64).unwrap_or(8) as u8,
+            nm_m: h.get("nm_m").and_then(Json::as_usize).unwrap_or(0),
+            target_sparsity: h.get("target_sparsity").and_then(Json::as_f64).unwrap_or(0.0),
+            achieved_sparsity: h.get("achieved_sparsity").and_then(Json::as_f64).unwrap_or(0.0),
+            acc_bits_trained: h
+                .get("acc_bits_trained")
+                .and_then(Json::as_i64)
+                .map(|v| v as u32),
+            lowrank_k: h.get("lowrank_k").and_then(Json::as_usize),
+            acc_q: h.get("acc_q").and_then(Json::as_f64).unwrap_or(0.0),
+            acc_fp32: h.get("acc_fp32").and_then(Json::as_f64).unwrap_or(0.0),
+            input_shape: h
+                .get("input_shape")
+                .and_then(Json::as_arr)
+                .map(|a| a.iter().filter_map(Json::as_usize).collect())
+                .unwrap_or_default(),
+            graph,
+        })
+    }
+
+    /// All quantized layers in graph order.
+    pub fn q_layers(&self) -> impl Iterator<Item = (&GraphNode, &QLayerMeta)> {
+        self.graph.iter().filter_map(|n| n.q.as_ref().map(|q| (n, q)))
+    }
+
+    /// Total / nonzero weight counts over prunable layers.
+    pub fn weight_sparsity(&self) -> f64 {
+        let (mut z, mut t) = (0usize, 0usize);
+        for (_, q) in self.q_layers() {
+            if !q.prune {
+                continue;
+            }
+            t += q.wq.len();
+            z += q.wq.iter().filter(|&&v| v == 0).count();
+        }
+        if t == 0 {
+            0.0
+        } else {
+            z as f64 / t as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn op_parsing() {
+        assert_eq!(Op::from_str("qconv").unwrap(), Op::QConv);
+        assert!(Op::from_str("conv3d").is_err());
+        assert!(Op::QLinear.is_q_layer());
+        assert!(!Op::Relu.is_q_layer());
+    }
+
+    // Full-file parsing is covered by integration tests against real
+    // artifacts (rust/tests/artifacts.rs); here we test the error paths.
+    #[test]
+    fn rejects_bad_magic() {
+        let dir = std::env::temp_dir().join("pqs_test_pqsw");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("bad.pqsw");
+        std::fs::write(&p, b"NOTPQSW0rest").unwrap();
+        assert!(PqswModel::load(&p).is_err());
+    }
+}

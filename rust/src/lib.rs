@@ -1,0 +1,53 @@
+//! # PQS — Prune, Quantize, and Sort
+//!
+//! Rust reproduction of *"PQS: Low-Bitwidth Accumulation of Dot Products in
+//! Neural Network Computations"* (Natesh & Kung, 2025): a bit-accurate
+//! quantized inference engine with fine-grained control over dot-product
+//! accumulation (the paper §5.0.1 "library for analyzing overflows"),
+//! plus every substrate it needs — tensors, quantizers, N:M sparse formats,
+//! synthetic datasets, a PJRT runtime for AOT-compiled JAX/Pallas artifacts,
+//! and a threaded evaluation coordinator.
+//!
+//! The three-layer architecture (see DESIGN.md):
+//! * **L1** Pallas kernel (`python/compile/kernels/pqs_matmul.py`) — sorted
+//!   low-bitwidth accumulation, AOT-lowered to HLO text.
+//! * **L2** JAX model + training schedules (`python/compile/`), build-time
+//!   only.
+//! * **L3** this crate — loads the exported `.pqsw` models and HLO
+//!   artifacts and runs every experiment in the paper.
+
+pub mod accum;
+pub mod coordinator;
+pub mod data;
+pub mod dot;
+pub mod figures;
+pub mod formats;
+pub mod models;
+pub mod nn;
+pub mod overflow;
+pub mod quant;
+pub mod runtime;
+pub mod sparse;
+pub mod tensor;
+pub mod util;
+
+/// Default artifacts directory (relative to the repo root).
+pub const ARTIFACTS_DIR: &str = "artifacts";
+
+/// Resolve the artifacts directory: honours `PQS_ARTIFACTS`, else walks up
+/// from the current dir looking for an `artifacts/` folder.
+pub fn artifacts_dir() -> std::path::PathBuf {
+    if let Ok(p) = std::env::var("PQS_ARTIFACTS") {
+        return p.into();
+    }
+    let mut d = std::env::current_dir().unwrap_or_else(|_| ".".into());
+    loop {
+        let cand = d.join(ARTIFACTS_DIR);
+        if cand.is_dir() {
+            return cand;
+        }
+        if !d.pop() {
+            return ARTIFACTS_DIR.into();
+        }
+    }
+}

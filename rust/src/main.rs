@@ -1,0 +1,161 @@
+//! `pqs` — CLI for the PQS (Prune, Quantize, and Sort) reproduction.
+//!
+//! Subcommands:
+//!   list                         list trained models from the manifest
+//!   describe --model NAME        model summary (layers, dot lengths, sparsity)
+//!   eval --model NAME [--policy sorted|clip|wrap|sorted1|oracle|exact]
+//!        [--acc-bits P] [--tile K] [--limit N] [--stats] [--batch B]
+//!   profile --model NAME --acc-bits P [--limit N]
+//!        per-layer transient/persistent overflow profile
+//!   runtime --hlo PATH [--n N]   run an AOT HLO artifact through PJRT
+//!   figures [--fig 2|3|4|5|6]    regenerate the paper figures
+//!
+//! Run from the repo root (or set PQS_ARTIFACTS).
+
+use anyhow::{anyhow, bail, Result};
+
+use pqs::accum::Policy;
+use pqs::coordinator::EvalService;
+use pqs::data::Dataset;
+use pqs::figures;
+use pqs::formats::manifest::Manifest;
+use pqs::models;
+use pqs::nn::engine::EngineConfig;
+use pqs::util::cli::Args;
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn engine_cfg(args: &Args) -> Result<EngineConfig> {
+    let policy = Policy::from_name(args.get_or("policy", "sorted"))
+        .ok_or_else(|| anyhow!("unknown policy (use one of exact|clip|wrap|sorted1|sorted|oracle)"))?;
+    Ok(EngineConfig {
+        policy,
+        acc_bits: args.get_u32("acc-bits", 16),
+        tile: args.get_usize("tile", 0),
+        collect_stats: args.has("stats"),
+    })
+}
+
+fn run() -> Result<()> {
+    let args = Args::from_env();
+    let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
+    match cmd {
+        "list" => {
+            let man = Manifest::load_default()?;
+            println!("{:<46} {:<8} {:>6} {:>8} {:>8}", "name", "schedule", "w/a", "sparsity", "acc(py)");
+            for (_, e) in &man.models {
+                println!(
+                    "{:<46} {:<8} {:>3}/{:<3} {:>7.1}% {:>8.3}",
+                    e.name, e.schedule, e.wbits, e.abits, 100.0 * e.achieved_sparsity, e.acc_q
+                );
+            }
+            for (exp, names) in &man.experiments {
+                println!("experiment {exp}: {} models", names.len());
+            }
+        }
+        "describe" => {
+            let man = Manifest::load_default()?;
+            let name = args.get("model").ok_or_else(|| anyhow!("--model required"))?;
+            let m = models::load(&man, name)?;
+            println!("{}", models::describe(&m));
+            println!(
+                "max dot length {} (effective after pruning {})",
+                models::max_dot_length(&m),
+                models::max_effective_dot_length(&m)
+            );
+        }
+        "eval" => {
+            let man = Manifest::load_default()?;
+            let name = args.get("model").ok_or_else(|| anyhow!("--model required"))?;
+            let model = models::load(&man, name)?;
+            let cfg = engine_cfg(&args)?;
+            let entry = man.test_dataset_for(&model.arch)?;
+            let ds = Dataset::load(man.dataset_path(&entry.test))?;
+            let limit = args.get_usize("limit", ds.n);
+            let svc = EvalService::new(&model, cfg).with_batch(args.get_usize("batch", 64));
+            let out = svc.evaluate(&ds, Some(limit))?;
+            println!(
+                "model={name} policy={} p={} tile={} samples={} accuracy={:.4} ({:.1} img/s, {:.0} ms)",
+                cfg.policy.name(), cfg.acc_bits, cfg.tile, out.samples, out.accuracy,
+                out.throughput_ips, out.wall_ms
+            );
+            if cfg.collect_stats {
+                out.report.print();
+            }
+        }
+        "profile" => {
+            let man = Manifest::load_default()?;
+            let name = args.get("model").ok_or_else(|| anyhow!("--model required"))?;
+            let model = models::load(&man, name)?;
+            let mut cfg = engine_cfg(&args)?;
+            cfg.collect_stats = true;
+            let entry = man.test_dataset_for(&model.arch)?;
+            let ds = Dataset::load(man.dataset_path(&entry.test))?;
+            let limit = args.get_usize("limit", 128);
+            let out = EvalService::new(&model, cfg).evaluate(&ds, Some(limit))?;
+            println!(
+                "model={name} policy={} p={} samples={} accuracy={:.4}",
+                cfg.policy.name(), cfg.acc_bits, out.samples, out.accuracy
+            );
+            out.report.print();
+        }
+        "runtime" => {
+            let man = Manifest::load_default()?;
+            let hlo = args.get("hlo").map(String::from).unwrap_or_else(|| {
+                man.dir.join("model.hlo.txt").display().to_string()
+            });
+            let rt = pqs::runtime::Runtime::cpu()?;
+            println!("PJRT platform: {}", rt.platform());
+            let exe = rt.load_hlo(&hlo)?;
+            // feed the first 8 mnist test images
+            let entry = man.test_dataset_for("mlp1")?;
+            let ds = Dataset::load(man.dataset_path(&entry.test))?;
+            let imgs = ds.images_f32(0, 8);
+            let outs = exe.run_f32(&imgs, &[8, 1, 28, 28])?;
+            println!("outputs: {} tensors", outs.len());
+            for (i, o) in outs.iter().enumerate() {
+                let head: Vec<String> = o.iter().take(10).map(|v| format!("{v:.3}")).collect();
+                println!("  out[{i}] len={} head=[{}]", o.len(), head.join(", "));
+            }
+        }
+        "figures" => {
+            let man = Manifest::load_default()?;
+            let which = args.get_or("fig", "all").to_string();
+            let limit = figures::eval_limit(256);
+            if which == "2" || which == "all" {
+                let r = figures::fig2::run(&man, limit, 12..=20)?;
+                figures::fig2::print(&r);
+            }
+            if which == "3" || which == "all" {
+                let rows = figures::fig3::run(&man, limit, 8)?;
+                figures::fig3::print(&rows);
+            }
+            if which == "4" || which == "all" {
+                let rows = figures::fig4::run(&man, limit.min(128), 6)?;
+                figures::fig4::print(&rows);
+            }
+            if which == "5" || which == "all" {
+                let pts = figures::fig5::run(&man, limit.min(192), &[12, 13, 14, 16, 20], None)?;
+                figures::fig5::print(&pts);
+            }
+            if which == "6" || which == "all" {
+                if let Some(name) = figures::sec6::default_model(&man) {
+                    let r = figures::sec6::run(&man, &name, 16, &[16, 64, 256, 0], limit.min(64))?;
+                    figures::sec6::print(&r);
+                }
+            }
+        }
+        "help" => {
+            println!("pqs — Prune, Quantize, and Sort (paper reproduction)");
+            println!("commands: list | describe | eval | profile | runtime | figures");
+            println!("see rust/src/main.rs doc comment for flags");
+        }
+        other => bail!("unknown command {other:?} (try `pqs help`)"),
+    }
+    Ok(())
+}

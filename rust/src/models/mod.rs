@@ -1,0 +1,59 @@
+//! Model zoo helpers: locate, load and describe the trained `.pqsw`
+//! models exported by the build (DESIGN.md S15).
+//!
+//! The architectures themselves (mlp1, mlp2, resnet_tiny, mbv2_tiny) are
+//! generic graphs — the engine interprets whatever graph the artifact
+//! carries, so this module is lookup + summary convenience.
+
+use anyhow::{Context, Result};
+
+use crate::formats::manifest::Manifest;
+use crate::formats::pqsw::PqswModel;
+
+/// Load a model by manifest name.
+pub fn load(manifest: &Manifest, name: &str) -> Result<PqswModel> {
+    PqswModel::load(manifest.model_path(name)).with_context(|| format!("loading model {name}"))
+}
+
+/// Human-readable one-line summary.
+pub fn describe(m: &PqswModel) -> String {
+    let layers = m.q_layers().count();
+    let params: usize = m.q_layers().map(|(_, q)| q.wq.len()).sum();
+    let dots: Vec<usize> = m.q_layers().map(|(_, q)| q.k).collect();
+    format!(
+        "{} [{}] {} q-layers, {} weights, sparsity {:.1}%, w{}a{}, dot lengths {:?}, python acc {:.3}",
+        m.name,
+        m.schedule,
+        layers,
+        params,
+        100.0 * m.achieved_sparsity,
+        m.wbits,
+        m.abits,
+        dots,
+        m.acc_q,
+    )
+}
+
+/// Longest dot product in the model (drives the persistent-overflow
+/// threshold K* = 2^(p-2b), paper §3).
+pub fn max_dot_length(m: &PqswModel) -> usize {
+    m.q_layers().map(|(_, q)| q.k).max().unwrap_or(0)
+}
+
+/// Effective (post-pruning) max nonzeros per dot.
+pub fn max_effective_dot_length(m: &PqswModel) -> usize {
+    m.q_layers()
+        .map(|(_, q)| {
+            (0..q.oc)
+                .map(|o| q.wq[o * q.k..(o + 1) * q.k].iter().filter(|&&v| v != 0).count())
+                .max()
+                .unwrap_or(0)
+        })
+        .max()
+        .unwrap_or(0)
+}
+
+#[cfg(test)]
+mod tests {
+    // exercised end-to-end by rust/tests/artifacts.rs against real models
+}

@@ -1,0 +1,472 @@
+//! The bit-accurate quantized inference engine — the paper's §5.0.1
+//! "library for analyzing overflows", as a graph interpreter.
+//!
+//! Every conv/linear MAC flows through a width-limited accumulator under a
+//! configurable `Policy`; the engine optionally classifies every dot
+//! product (transient/persistent, paper §3.1) while it computes.
+//!
+//! ### Fast path for the full sorted policy
+//! Algorithm 1 with exact 2b-bit pairing temporaries provably returns
+//! `clamp(exact)` with zero accumulation overflows whenever the exact
+//! result fits (the terminal phase is single-sign, hence monotone — see
+//! `dot::sorted` property tests, which assert this equivalence against the
+//! real multi-round implementation). The engine therefore evaluates
+//! `Policy::Sorted` in O(K) instead of O(K log K); `Policy::Sorted1` and
+//! the tiled variant run the real sorting machinery.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::accum::{self, Policy};
+use crate::dot::{tiled_sorted_dot, DotEngine};
+use crate::formats::pqsw::{Op, PqswModel};
+use crate::overflow::{OverflowReport, OverflowStats};
+use crate::quant;
+use crate::tensor::{conv_out_dim, im2col, im2col_grouped, TensorF};
+
+use super::layer::QLayer;
+
+/// Engine configuration: accumulation policy, width, optional k-tiling
+/// (paper §6) and whether to collect overflow statistics.
+#[derive(Clone, Copy, Debug)]
+pub struct EngineConfig {
+    pub policy: Policy,
+    pub acc_bits: u32,
+    /// tile size for `Policy::Sorted1` (0 = full-width sort)
+    pub tile: usize,
+    /// classify every dot product (slower; needed for Figs. 2/5 analyses)
+    pub collect_stats: bool,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        EngineConfig { policy: Policy::Sorted, acc_bits: 16, tile: 0, collect_stats: false }
+    }
+}
+
+/// Result of one forward pass.
+#[derive(Clone, Debug)]
+pub struct EvalResult {
+    pub logits: Vec<f32>,
+    pub batch: usize,
+    pub classes: usize,
+    pub report: OverflowReport,
+}
+
+impl EvalResult {
+    pub fn argmax(&self, i: usize) -> usize {
+        let row = &self.logits[i * self.classes..(i + 1) * self.classes];
+        row.iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(j, _)| j)
+            .unwrap_or(0)
+    }
+
+    pub fn accuracy(&self, labels: &[u8]) -> f64 {
+        let correct = (0..self.batch).filter(|&i| self.argmax(i) == labels[i] as usize).count();
+        correct as f64 / self.batch.max(1) as f64
+    }
+}
+
+/// Scratch buffers shared across layers (allocation-free hot path).
+#[derive(Default)]
+struct Scratch {
+    dot: DotEngine,
+    qbuf: Vec<i32>,
+    colbuf: Vec<i32>,
+    prods: Vec<i32>,
+}
+
+/// The graph-interpreting engine. Construct once per (model, config);
+/// `forward` may be called repeatedly.
+pub struct Engine {
+    pub cfg: EngineConfig,
+    pub model_name: String,
+    input_shape: Vec<usize>,
+    nodes: Vec<EngineNode>,
+    scratch: Scratch,
+}
+
+struct EngineNode {
+    id: usize,
+    op: Op,
+    inputs: Vec<usize>,
+    layer: Option<QLayer>,
+}
+
+/// Evaluate one dot product under the config; updates stats when present.
+///
+/// Stats collection uses one fused scan computing the exact sum AND the
+/// naive clipped accumulation simultaneously (perf pass: the separate
+/// `classify` + policy scans cost ~1.5x; see EXPERIMENTS.md §Perf).
+#[inline]
+fn eval_dot(
+    dot: &mut DotEngine,
+    cfg: &EngineConfig,
+    prods: &[i32],
+    stats: Option<&mut OverflowStats>,
+) -> i64 {
+    let p = cfg.acc_bits;
+    let (lo, hi) = accum::acc_range(p);
+
+    if let Some(st) = stats {
+        // fused exact + naive-clip scan
+        let mut exact = 0i64;
+        let mut acc = 0i64;
+        let mut naive_events = 0u32;
+        for &v in prods {
+            exact += v as i64;
+            let t = acc + v as i64;
+            acc = if t < lo {
+                naive_events += 1;
+                lo
+            } else if t > hi {
+                naive_events += 1;
+                hi
+            } else {
+                t
+            };
+        }
+        let persistent = exact < lo || exact > hi;
+        let (v, ev) = match cfg.policy {
+            Policy::Exact => (exact, 0u32),
+            Policy::Sorted | Policy::Oracle => {
+                (exact.clamp(lo, hi), u32::from(persistent))
+            }
+            Policy::Clip => (acc, naive_events),
+            Policy::Wrap => accum::wrap_accumulate(prods, p),
+            Policy::Sorted1 => {
+                if cfg.tile > 0 {
+                    tiled_sorted_dot(dot, prods, p, cfg.tile)
+                } else {
+                    crate::dot::sorted1_dot(dot, prods, p)
+                }
+            }
+        };
+        st.dots += 1;
+        st.products += prods.len() as u64;
+        if naive_events > 0 {
+            st.naive_event_dots += 1;
+        }
+        st.naive_events += naive_events as u64;
+        if naive_events > 0 && !persistent {
+            st.transient_dots += 1;
+        }
+        if persistent {
+            st.persistent_dots += 1;
+        }
+        if ev > 0 {
+            st.policy_event_dots += 1;
+        }
+        return v;
+    }
+
+    let (v, _ev) = match cfg.policy {
+        Policy::Exact => (accum::exact_dot(prods), 0u32),
+        Policy::Sorted | Policy::Oracle => {
+            // fast path: Algorithm 1 == clamp(exact), events iff persistent
+            let exact = accum::exact_dot(prods);
+            (exact.clamp(lo, hi), 0)
+        }
+        Policy::Sorted1 => {
+            if cfg.tile > 0 {
+                tiled_sorted_dot(dot, prods, p, cfg.tile)
+            } else {
+                crate::dot::sorted1_dot(dot, prods, p)
+            }
+        }
+        Policy::Clip => accum::clip_accumulate(prods, p),
+        Policy::Wrap => accum::wrap_accumulate(prods, p),
+    };
+    v
+}
+
+/// Evaluate one weight-row x activation dot product, using the fused
+/// buffer-free paths when no statistics are collected (perf pass §Perf:
+/// skipping the intermediate product buffer is worth ~25-40% end-to-end).
+#[inline]
+fn eval_row(
+    layer: &QLayer,
+    cfg: &EngineConfig,
+    s: &mut Scratch,
+    o: usize,
+    x: &[i32],
+    stats: Option<&mut OverflowStats>,
+) -> i64 {
+    if stats.is_none() {
+        match cfg.policy {
+            Policy::Exact => return layer.w.dot_exact(o, x),
+            Policy::Sorted | Policy::Oracle => {
+                // Algorithm 1 fast path (see module docs): clamp(exact)
+                let exact = layer.w.dot_exact(o, x);
+                let (lo, hi) = accum::acc_range(cfg.acc_bits);
+                return exact.clamp(lo, hi);
+            }
+            Policy::Clip => return layer.w.dot_clip(o, x, cfg.acc_bits).0,
+            _ => {}
+        }
+    }
+    layer.w.dot_products_into(o, x, &mut s.prods);
+    let prods = std::mem::take(&mut s.prods);
+    let v = eval_dot(&mut s.dot, cfg, &prods, stats);
+    s.prods = prods;
+    v
+}
+
+impl Engine {
+    pub fn new(model: &PqswModel, cfg: EngineConfig) -> Engine {
+        let nodes = model
+            .graph
+            .iter()
+            .map(|n| EngineNode {
+                id: n.id,
+                op: n.op,
+                inputs: n.inputs.clone(),
+                layer: n.q.as_ref().map(|q| QLayer::from_meta(q, model.abits, model.nm_m)),
+            })
+            .collect();
+        Engine {
+            cfg,
+            model_name: model.name.clone(),
+            input_shape: model.input_shape.clone(),
+            nodes,
+            scratch: Scratch::default(),
+        }
+    }
+
+    /// Forward a batch of images (flattened f32 in [0,1], row-major NCHW).
+    pub fn forward(&mut self, images: &[f32], n: usize) -> Result<EvalResult> {
+        let dim: usize = self.input_shape.iter().product();
+        if images.len() != n * dim {
+            bail!("input size {} != n*dim {}", images.len(), n * dim);
+        }
+        let mut report = OverflowReport::default();
+        let mut vals: BTreeMap<usize, TensorF> = BTreeMap::new();
+        let mut in_shape = vec![n];
+        in_shape.extend_from_slice(&self.input_shape);
+
+        let out_id = self.nodes.last().map(|nd| nd.id).ok_or_else(|| anyhow!("empty graph"))?;
+        for ni in 0..self.nodes.len() {
+            let node = &self.nodes[ni];
+            let t = match node.op {
+                Op::Input => TensorF::from_vec(&in_shape, images.to_vec()),
+                Op::Relu => {
+                    let mut t = vals[&node.inputs[0]].clone();
+                    t.relu_inplace();
+                    t
+                }
+                Op::Add => vals[&node.inputs[0]].add(&vals[&node.inputs[1]]),
+                Op::Gap => vals[&node.inputs[0]].global_avg_pool(),
+                Op::Flatten => {
+                    let t = vals[&node.inputs[0]].clone();
+                    let rows = t.shape[0];
+                    let cols = t.numel() / rows;
+                    t.reshape(&[rows, cols])
+                }
+                Op::QLinear | Op::QConv | Op::QDwConv => {
+                    let x = &vals[&node.inputs[0]];
+                    let layer = self.nodes[ni].layer.as_ref().unwrap();
+                    let mut stats = OverflowStats::default();
+                    let out = match node.op {
+                        Op::QLinear => qlinear_forward(
+                            layer, &self.cfg, &mut self.scratch, x,
+                            self.cfg.collect_stats.then_some(&mut stats),
+                        ),
+                        Op::QConv => qconv_forward(
+                            layer, &self.cfg, &mut self.scratch, x, false,
+                            self.cfg.collect_stats.then_some(&mut stats),
+                        ),
+                        _ => qconv_forward(
+                            layer, &self.cfg, &mut self.scratch, x, true,
+                            self.cfg.collect_stats.then_some(&mut stats),
+                        ),
+                    };
+                    if self.cfg.collect_stats {
+                        report.layer_mut(&layer.name).merge(&stats);
+                    }
+                    out
+                }
+            };
+            vals.insert(node.id, t);
+        }
+
+        let out = vals.remove(&out_id).unwrap();
+        let classes = out.shape[1];
+        Ok(EvalResult { logits: out.data, batch: n, classes, report })
+    }
+
+    /// Evaluate accuracy over a dataset slice.
+    pub fn evaluate(
+        &mut self,
+        ds: &crate::data::Dataset,
+        batch: usize,
+        limit: Option<usize>,
+    ) -> Result<(f64, OverflowReport)> {
+        let mut report = OverflowReport::default();
+        let mut correct = 0usize;
+        let mut total = 0usize;
+        for (imgs, labels, _start) in crate::data::Batches::new(ds, batch) {
+            let r = self.forward(&imgs, labels.len())?;
+            correct += (0..r.batch).filter(|&i| r.argmax(i) == labels[i] as usize).count();
+            total += r.batch;
+            report.merge(&r.report);
+            if let Some(lim) = limit {
+                if total >= lim {
+                    break;
+                }
+            }
+        }
+        Ok((correct as f64 / total.max(1) as f64, report))
+    }
+}
+
+/// Quantized linear layer over (n, d) input.
+fn qlinear_forward(
+    layer: &QLayer,
+    cfg: &EngineConfig,
+    s: &mut Scratch,
+    x: &TensorF,
+    mut stats: Option<&mut OverflowStats>,
+) -> TensorF {
+    let n = x.shape[0];
+    let d = x.numel() / n;
+    debug_assert_eq!(d, layer.k, "linear input dim");
+    let mut out = vec![0f32; n * layer.oc];
+    for i in 0..n {
+        quant::quantize_centered_slice_into(&x.data[i * d..(i + 1) * d], &layer.x_qp, &mut s.qbuf);
+        for o in 0..layer.oc {
+            let acc = {
+                let qbuf = std::mem::take(&mut s.qbuf);
+                let acc = eval_row(layer, cfg, s, o, &qbuf, stats.as_deref_mut());
+                s.qbuf = qbuf;
+                acc
+            };
+            out[i * layer.oc + o] = layer.dequant(o, acc);
+        }
+    }
+    TensorF::from_vec(&[n, layer.oc], out)
+}
+
+/// Quantized (depthwise-)conv layer over (n, c, h, w) input via im2col.
+fn qconv_forward(
+    layer: &QLayer,
+    cfg: &EngineConfig,
+    s: &mut Scratch,
+    x: &TensorF,
+    depthwise: bool,
+    mut stats: Option<&mut OverflowStats>,
+) -> TensorF {
+    let (n, c, h, w) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
+    debug_assert_eq!(c, layer.ic, "conv input channels");
+    let oh = conv_out_dim(h, layer.kh, layer.stride, layer.pad);
+    let ow = conv_out_dim(w, layer.kw, layer.stride, layer.pad);
+    let l = oh * ow;
+    let chw = c * h * w;
+    let mut out = vec![0f32; n * layer.oc * l];
+    for i in 0..n {
+        quant::quantize_centered_slice_into(&x.data[i * chw..(i + 1) * chw], &layer.x_qp, &mut s.qbuf);
+        if depthwise {
+            for ch in 0..c {
+                let (li, k) = im2col_grouped(
+                    &s.qbuf, c, h, w, ch, layer.kh, layer.kw, layer.stride, layer.pad,
+                    layer.pad_q, &mut s.colbuf,
+                );
+                debug_assert_eq!((li, k), (l, layer.k));
+                for pos in 0..l {
+                    let acc = {
+                        let colbuf = std::mem::take(&mut s.colbuf);
+                        let acc = eval_row(
+                            layer, cfg, s, ch, &colbuf[pos * k..(pos + 1) * k],
+                            stats.as_deref_mut(),
+                        );
+                        s.colbuf = colbuf;
+                        acc
+                    };
+                    out[(i * layer.oc + ch) * l + pos] = layer.dequant(ch, acc);
+                }
+            }
+        } else {
+            let (li, k) = im2col(
+                &s.qbuf, c, h, w, layer.kh, layer.kw, layer.stride, layer.pad, layer.pad_q,
+                &mut s.colbuf,
+            );
+            debug_assert_eq!((li, k), (l, layer.k));
+            for pos in 0..l {
+                let colbuf = std::mem::take(&mut s.colbuf);
+                let col = &colbuf[pos * k..(pos + 1) * k];
+                for o in 0..layer.oc {
+                    let acc = eval_row(layer, cfg, s, o, col, stats.as_deref_mut());
+                    out[(i * layer.oc + o) * l + pos] = layer.dequant(o, acc);
+                }
+                s.colbuf = colbuf;
+            }
+        }
+    }
+    TensorF::from_vec(&[n, layer.oc, oh, ow], out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+    use crate::util::rng::Pcg32;
+
+    #[test]
+    fn sorted_fast_path_matches_real_algorithm() {
+        // the engine's O(K) shortcut must equal dot::sorted_full_dot in
+        // value, and agree on event-presence
+        prop::check(
+            "engine-sorted-shortcut",
+            400,
+            |r: &mut Pcg32| (prop::gen_prods(r, 256, 8), 12 + r.below(12)),
+            |(prods, p)| {
+                let cfg = EngineConfig { policy: Policy::Sorted, acc_bits: *p, ..Default::default() };
+                let mut d = DotEngine::new();
+                let fast = eval_dot(&mut d, &cfg, prods, None);
+                let mut d2 = DotEngine::new();
+                let (real, ev) = crate::dot::sorted_full_dot(&mut d2, prods, *p);
+                if fast != real {
+                    return Err(format!("fast {fast} != real {real} (ev {ev})"));
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn eval_dot_stats_classification() {
+        let cfg = EngineConfig { policy: Policy::Clip, acc_bits: 16, collect_stats: true, ..Default::default() };
+        let mut d = DotEngine::new();
+        let mut st = OverflowStats::default();
+        // transient case
+        let prods = [16129, 16129, 16129, -16129, -16129, -16129];
+        let v = eval_dot(&mut d, &cfg, &prods, Some(&mut st));
+        assert_eq!(st.dots, 1);
+        assert_eq!(st.transient_dots, 1);
+        assert_eq!(st.persistent_dots, 0);
+        assert_eq!(st.policy_event_dots, 1); // clip had events
+        assert_ne!(v, 0); // clipped value is wrong
+        // sorted policy resolves it
+        let cfg = EngineConfig { policy: Policy::Sorted, acc_bits: 16, collect_stats: true, ..Default::default() };
+        let mut st2 = OverflowStats::default();
+        let v2 = eval_dot(&mut d, &cfg, &prods, Some(&mut st2));
+        assert_eq!(v2, 0);
+        assert_eq!(st2.policy_event_dots, 0);
+        assert_eq!(st2.transient_dots, 1); // still classified transient
+    }
+
+    #[test]
+    fn argmax_and_accuracy() {
+        let r = EvalResult {
+            logits: vec![0.1, 0.9, 0.0, 0.8, 0.1, 0.1],
+            batch: 2,
+            classes: 3,
+            report: OverflowReport::default(),
+        };
+        assert_eq!(r.argmax(0), 1);
+        assert_eq!(r.argmax(1), 0);
+        assert!((r.accuracy(&[1, 2]) - 0.5).abs() < 1e-9);
+    }
+}

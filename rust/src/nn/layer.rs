@@ -1,0 +1,103 @@
+//! Prepared quantized layer: sparse weights + quantization constants.
+
+use crate::formats::pqsw::QLayerMeta;
+use crate::quant::QParams;
+use crate::sparse::NmMatrix;
+
+/// Engine-ready layer state derived from a `.pqsw` q-layer.
+#[derive(Clone, Debug)]
+pub struct QLayer {
+    pub name: String,
+    pub oc: usize,
+    pub ic: usize,
+    pub kh: usize,
+    pub kw: usize,
+    pub stride: usize,
+    pub pad: usize,
+    /// contraction length each accumulator sees
+    pub k: usize,
+    /// N:M sparse weights (oc x k)
+    pub w: NmMatrix,
+    pub w_scale: f32,
+    pub x_qp: QParams,
+    /// integer value that FP32 zero quantizes to (= padding value)
+    pub pad_q: i32,
+    pub bias: Vec<f32>,
+    /// combined dequant scale s_w * s_x
+    pub dq_scale: f32,
+}
+
+impl QLayer {
+    pub fn from_meta(meta: &QLayerMeta, abits: u8, nm_m: usize) -> QLayer {
+        let x_qp = QParams { scale: meta.x_scale, offset: meta.x_offset, bits: abits };
+        let w = NmMatrix::from_dense(&meta.wq, meta.oc, meta.k, nm_m);
+        // activations are quantized into the offset-free domain, where the
+        // FP32 value 0.0 maps to integer 0 (guaranteed by Eq. 1)
+        let pad_q = crate::quant::quantize_centered(0.0, &x_qp);
+        debug_assert_eq!(pad_q, 0);
+        QLayer {
+            name: meta.name.clone(),
+            oc: meta.oc,
+            ic: meta.ic,
+            kh: meta.kh,
+            kw: meta.kw,
+            stride: meta.stride,
+            pad: meta.pad,
+            k: meta.k,
+            w,
+            w_scale: meta.w_scale,
+            x_qp,
+            pad_q,
+            bias: meta.bias.clone(),
+            dq_scale: meta.w_scale * meta.x_scale,
+        }
+    }
+
+    /// Dequantize one integer accumulator value for output row `o`.
+    ///
+    /// The engine accumulates offset-free products `w_q * (x_q - o_x)`
+    /// (see `quant::quantize_centered_slice_into`), so Eq. 3 reduces to
+    /// `z = s_w * s_x * acc + bias[o]` — no offset correction transits the
+    /// narrow accumulator.
+    #[inline]
+    pub fn dequant(&self, o: usize, acc: i64) -> f32 {
+        self.dq_scale * acc as f32 + self.bias[o]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::formats::pqsw::QLayerMeta;
+
+    fn meta() -> QLayerMeta {
+        QLayerMeta {
+            name: "t".into(),
+            oc: 2,
+            ic: 4,
+            kh: 1,
+            kw: 1,
+            stride: 1,
+            pad: 0,
+            prune: true,
+            w_scale: 0.5,
+            x_scale: 0.25,
+            x_offset: -8,
+            wq: vec![1, 0, -2, 3, 0, 0, 4, -1],
+            k: 4,
+            bias: vec![0.5, -0.5],
+        }
+    }
+
+    #[test]
+    fn build_and_dequant() {
+        let l = QLayer::from_meta(&meta(), 4, 4);
+        assert_eq!(l.w.nnz(), 5);
+        assert_eq!(l.w.row_wsum, vec![2, 3]);
+        // FP32 zero maps to integer 0 in the offset-free domain
+        assert_eq!(l.pad_q, 0);
+        // dequant: z = s_w*s_x*acc + bias = 0.125*10 + 0.5
+        let z = l.dequant(0, 10);
+        assert!((z - (0.125 * 10.0 + 0.5)).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,11 @@
+//! Quantized neural-network graph execution (DESIGN.md S14).
+//!
+//! `layer` prepares per-layer state from the `.pqsw` metadata (sparse
+//! weights, qparams, offset corrections); `engine` interprets the model
+//! graph with bit-accurate width-limited accumulation.
+
+pub mod engine;
+pub mod layer;
+
+pub use engine::{Engine, EngineConfig, EvalResult};
+pub use layer::QLayer;

@@ -1,0 +1,149 @@
+//! Overflow statistics collection (paper §3.1 and §5.0.1 — the
+//! "library for analyzing overflows").
+//!
+//! Every dot product evaluated by the engine can be classified as clean,
+//! transient (naive order overflows but the exact result fits) or
+//! persistent (the result itself cannot fit). Reports aggregate per layer
+//! and over a whole evaluation.
+
+/// Counters over a set of dot products at one accumulator width.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct OverflowStats {
+    /// dot products evaluated
+    pub dots: u64,
+    /// dots whose naive (index-order) accumulation had >= 1 overflow event
+    pub naive_event_dots: u64,
+    /// total naive overflow events
+    pub naive_events: u64,
+    /// dots with a transient overflow (naive events but exact fits)
+    pub transient_dots: u64,
+    /// dots with a persistent overflow (exact result out of range)
+    pub persistent_dots: u64,
+    /// dots where the *selected policy* still had >= 1 event
+    pub policy_event_dots: u64,
+    /// partial products processed (dot lengths summed, zeros skipped)
+    pub products: u64,
+}
+
+impl OverflowStats {
+    pub fn merge(&mut self, o: &OverflowStats) {
+        self.dots += o.dots;
+        self.naive_event_dots += o.naive_event_dots;
+        self.naive_events += o.naive_events;
+        self.transient_dots += o.transient_dots;
+        self.persistent_dots += o.persistent_dots;
+        self.policy_event_dots += o.policy_event_dots;
+        self.products += o.products;
+    }
+
+    /// Fraction of overflowing dots that are transient (Fig. 2a).
+    pub fn transient_fraction(&self) -> f64 {
+        let total = self.transient_dots + self.persistent_dots;
+        if total == 0 {
+            0.0
+        } else {
+            self.transient_dots as f64 / total as f64
+        }
+    }
+
+    /// Fraction of transient dots the policy resolved (paper §3.2: 99.8%).
+    pub fn resolved_transient_fraction(&self) -> f64 {
+        if self.transient_dots == 0 {
+            return 1.0;
+        }
+        // policy events on transient dots = policy_event_dots minus the
+        // persistent ones (persistent dots always have policy events under
+        // clipping policies)
+        let unresolved = self.policy_event_dots.saturating_sub(self.persistent_dots);
+        1.0 - (unresolved.min(self.transient_dots) as f64 / self.transient_dots as f64)
+    }
+}
+
+/// Per-layer + aggregate report for one evaluation run.
+#[derive(Clone, Debug, Default)]
+pub struct OverflowReport {
+    pub layers: Vec<(String, OverflowStats)>,
+}
+
+impl OverflowReport {
+    pub fn layer_mut(&mut self, name: &str) -> &mut OverflowStats {
+        if let Some(i) = self.layers.iter().position(|(n, _)| n == name) {
+            &mut self.layers[i].1
+        } else {
+            self.layers.push((name.to_string(), OverflowStats::default()));
+            &mut self.layers.last_mut().unwrap().1
+        }
+    }
+
+    pub fn total(&self) -> OverflowStats {
+        let mut t = OverflowStats::default();
+        for (_, s) in &self.layers {
+            t.merge(s);
+        }
+        t
+    }
+
+    pub fn merge(&mut self, o: &OverflowReport) {
+        for (name, s) in &o.layers {
+            self.layer_mut(name).merge(s);
+        }
+    }
+
+    pub fn print(&self) {
+        println!(
+            "{:<14} {:>10} {:>10} {:>10} {:>10} {:>10}",
+            "layer", "dots", "naive-ovf", "transient", "persist", "policy-ovf"
+        );
+        for (name, s) in &self.layers {
+            println!(
+                "{:<14} {:>10} {:>10} {:>10} {:>10} {:>10}",
+                name, s.dots, s.naive_event_dots, s.transient_dots, s.persistent_dots,
+                s.policy_event_dots
+            );
+        }
+        let t = self.total();
+        println!(
+            "{:<14} {:>10} {:>10} {:>10} {:>10} {:>10}",
+            "TOTAL", t.dots, t.naive_event_dots, t.transient_dots, t.persistent_dots,
+            t.policy_event_dots
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn merge_accumulates() {
+        let mut a = OverflowStats { dots: 10, transient_dots: 2, ..Default::default() };
+        let b = OverflowStats { dots: 5, transient_dots: 1, persistent_dots: 4, ..Default::default() };
+        a.merge(&b);
+        assert_eq!(a.dots, 15);
+        assert_eq!(a.transient_dots, 3);
+        assert_eq!(a.persistent_dots, 4);
+    }
+
+    #[test]
+    fn fractions() {
+        let s = OverflowStats { transient_dots: 3, persistent_dots: 97, ..Default::default() };
+        assert!((s.transient_fraction() - 0.03).abs() < 1e-12);
+        let clean = OverflowStats::default();
+        assert_eq!(clean.transient_fraction(), 0.0);
+        assert_eq!(clean.resolved_transient_fraction(), 1.0);
+    }
+
+    #[test]
+    fn report_layers() {
+        let mut r = OverflowReport::default();
+        r.layer_mut("conv0").dots += 7;
+        r.layer_mut("conv0").dots += 3;
+        r.layer_mut("fc").dots += 5;
+        assert_eq!(r.layers.len(), 2);
+        assert_eq!(r.total().dots, 15);
+        let mut r2 = OverflowReport::default();
+        r2.layer_mut("fc").dots = 1;
+        r.merge(&r2);
+        assert_eq!(r.total().dots, 16);
+    }
+}

@@ -1,0 +1,245 @@
+//! Uniform per-tensor quantization (paper §2.1, Eq. 1–4).
+//!
+//! Mirrors `python/compile/quantize.py` bit-for-bit:
+//! * weights: symmetric signed b-bit, offset 0, scale = max|W|/(2^(b-1)-1),
+//!   clamped to ±(2^(b-1)-1);
+//! * activations: affine per Eq. (1), range [-2^(b-1), 2^(b-1)-1];
+//! * rounding is **round-half-to-even** in f32 precision, matching
+//!   `np.round` on float32 arrays (NumPy weak scalar promotion keeps the
+//!   division in f32). This is what makes the exported goldens bit-exact.
+
+/// Quantization parameters for one tensor.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct QParams {
+    pub scale: f32,
+    pub offset: i32,
+    pub bits: u8,
+}
+
+impl QParams {
+    pub fn weight(scale: f32, bits: u8) -> Self {
+        QParams { scale, offset: 0, bits }
+    }
+
+    /// Signed integer range for this bitwidth.
+    pub fn qrange(&self) -> (i32, i32) {
+        if self.offset == 0 {
+            // symmetric weights use ±(2^(b-1)-1)
+            let m = (1i32 << (self.bits - 1)) - 1;
+            (-m, m)
+        } else {
+            (-(1i32 << (self.bits - 1)), (1i32 << (self.bits - 1)) - 1)
+        }
+    }
+}
+
+/// Round half to even at f32 precision (numpy `np.round` semantics).
+#[inline]
+pub fn round_half_even(x: f32) -> f32 {
+    let r = x.round(); // half away from zero
+    if (x - x.trunc()).abs() == 0.5 {
+        // tie: pick the even neighbour
+        if r % 2.0 == 0.0 {
+            r
+        } else {
+            r - (r - x).signum()
+        }
+    } else {
+        r
+    }
+}
+
+/// Symmetric weight qparams from data (max-abs scaling).
+pub fn weight_qparams(w: &[f32], bits: u8) -> QParams {
+    let amax = w.iter().fold(0f32, |m, &v| m.max(v.abs()));
+    let qmax = ((1i32 << (bits - 1)) - 1) as f32;
+    QParams::weight(if amax > 0.0 { amax / qmax } else { 1.0 }, bits)
+}
+
+/// Affine activation qparams per Eq. (1); `lo` is clamped to <= 0 so zero is
+/// exactly representable.
+pub fn act_qparams(lo: f32, hi: f32, bits: u8) -> QParams {
+    let lo = lo.min(0.0);
+    let hi = hi.max(lo + 1e-8);
+    let scale = (hi - lo) / (((1u32 << bits) - 1) as f32);
+    let offset = -(1i32 << (bits - 1)) - round_half_even(lo / scale) as i32;
+    QParams { scale, offset, bits }
+}
+
+/// Quantize one value: `round(x/s) + o`, clamped into the signed range.
+#[inline]
+pub fn quantize(x: f32, qp: &QParams) -> i32 {
+    let (lo, hi) = qp.qrange();
+    let q = round_half_even(x / qp.scale) as i64 + qp.offset as i64;
+    q.clamp(lo as i64, hi as i64) as i32
+}
+
+/// Dequantize per Eq. (2): `s * (q - o)`.
+#[inline]
+pub fn dequantize(q: i32, qp: &QParams) -> f32 {
+    qp.scale * (q - qp.offset) as f32
+}
+
+/// Quantize into the *offset-free* integer domain the accumulator sees:
+/// `q~ = x_q - o_x = clamp(round(x/s), qlo - o, qhi - o)`.
+///
+/// This is the standard integer-kernel formulation when o_w = 0 (TFLite /
+/// CMSIS-NN): the dot product accumulates `w_q * (x_q - o_x)` directly and
+/// the dequantization is simply `s_w * s_x * acc + bias` — the huge
+/// `o_x * sum(w)` constant never transits the narrow accumulator. Products
+/// still fit the paper's 2b-bit product model (127*255 = 32385 < 2^15).
+/// For ReLU-positive layers (o = -2^(b-1)) the window is [0, 2^b - 1].
+pub fn quantize_centered_slice_into(xs: &[f32], qp: &QParams, out: &mut Vec<i32>) {
+    out.clear();
+    out.reserve(xs.len());
+    let (qlo, qhi) = qp.qrange();
+    let (lo, hi) = ((qlo - qp.offset) as i64, (qhi - qp.offset) as i64);
+    for &x in xs {
+        let q = round_half_even(x / qp.scale) as i64;
+        out.push(q.clamp(lo, hi) as i32);
+    }
+}
+
+/// Centered quantization of a single value (see `quantize_centered_slice_into`).
+#[inline]
+pub fn quantize_centered(x: f32, qp: &QParams) -> i32 {
+    let (qlo, qhi) = qp.qrange();
+    let q = round_half_even(x / qp.scale) as i64;
+    q.clamp((qlo - qp.offset) as i64, (qhi - qp.offset) as i64) as i32
+}
+
+/// Quantize a slice into the provided buffer (hot-path friendly).
+pub fn quantize_slice_into(xs: &[f32], qp: &QParams, out: &mut Vec<i32>) {
+    out.clear();
+    out.reserve(xs.len());
+    let (lo, hi) = qp.qrange();
+    // NOTE: true division, not multiply-by-reciprocal — f32 bit-parity with
+    // numpy's `np.round(x / s)` requires the identical operation.
+    for &x in xs {
+        let q = round_half_even(x / qp.scale) as i64 + qp.offset as i64;
+        out.push(q.clamp(lo as i64, hi as i64) as i32);
+    }
+}
+
+/// Quantize a slice (allocating convenience wrapper).
+pub fn quantize_slice(xs: &[f32], qp: &QParams) -> Vec<i32> {
+    let mut out = Vec::new();
+    quantize_slice_into(xs, qp, &mut out);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+    use crate::util::rng::Pcg32;
+
+    #[test]
+    fn round_half_even_ties() {
+        assert_eq!(round_half_even(0.5), 0.0);
+        assert_eq!(round_half_even(1.5), 2.0);
+        assert_eq!(round_half_even(2.5), 2.0);
+        assert_eq!(round_half_even(-0.5), 0.0);
+        assert_eq!(round_half_even(-1.5), -2.0);
+        assert_eq!(round_half_even(-2.5), -2.0);
+        assert_eq!(round_half_even(0.4999), 0.0);
+        assert_eq!(round_half_even(63.5), 64.0); // the test_quantize.py case
+    }
+
+    #[test]
+    fn weight_symmetric_matches_python() {
+        // mirrors python test: [-1, 0.5, 1] at 8 bits -> [-127, 64, 127]
+        let w = [-1.0f32, 0.5, 1.0];
+        let qp = weight_qparams(&w, 8);
+        let q: Vec<i32> = w.iter().map(|&x| quantize(x, &qp)).collect();
+        assert_eq!(q, vec![-127, 64, 127]);
+        assert_eq!(qp.offset, 0);
+    }
+
+    #[test]
+    fn act_zero_maps_exactly() {
+        let qp = act_qparams(-0.3, 2.1, 8);
+        let q0 = quantize(0.0, &qp);
+        let back = dequantize(q0, &qp);
+        assert!(back.abs() <= qp.scale * 0.51, "{back}");
+    }
+
+    #[test]
+    fn act_values_in_range_prop() {
+        prop::check(
+            "act-range",
+            200,
+            |r: &mut Pcg32| {
+                let lo = -(r.f32() * 5.0);
+                let hi = r.f32() * 8.0 + 0.1;
+                let bits = [4u8, 6, 8][r.below(3) as usize];
+                let x = (r.f32() * (hi - lo) + lo).clamp(lo, hi);
+                (lo, hi, bits, x)
+            },
+            |&(lo, hi, bits, x)| {
+                let qp = act_qparams(lo, hi, bits);
+                let q = quantize(x, &qp);
+                let (qlo, qhi) = qp.qrange();
+                if q < qlo || q > qhi {
+                    return Err(format!("q {q} out of [{qlo},{qhi}]"));
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn roundtrip_error_bounded_prop() {
+        prop::check(
+            "quant-roundtrip",
+            200,
+            |r: &mut Pcg32| {
+                let bits = [5u8, 8][r.below(2) as usize];
+                let w: Vec<f32> = (0..16).map(|_| (r.f32() - 0.5) * 4.0).collect();
+                (bits, w)
+            },
+            |(bits, w)| {
+                let qp = weight_qparams(w, *bits);
+                for &x in w {
+                    let back = dequantize(quantize(x, &qp), &qp);
+                    if (back - x).abs() > qp.scale * 0.5 + 1e-5 {
+                        return Err(format!("{x} -> {back} (scale {})", qp.scale));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn centered_equals_shifted() {
+        // q~ must equal quantize(x) - offset wherever no clamping occurs,
+        // and respect the shifted window everywhere
+        let qp = act_qparams(-0.5, 2.0, 8);
+        let xs: Vec<f32> = (0..200).map(|i| -1.0 + 0.02 * i as f32).collect();
+        let mut c = Vec::new();
+        quantize_centered_slice_into(&xs, &qp, &mut c);
+        for (i, &x) in xs.iter().enumerate() {
+            assert_eq!(c[i], quantize(x, &qp) - qp.offset, "x={x}");
+        }
+    }
+
+    #[test]
+    fn centered_relu_window_is_unsigned() {
+        let qp = act_qparams(0.0, 1.0, 8); // o = -128
+        assert_eq!(quantize_centered(0.0, &qp), 0);
+        assert_eq!(quantize_centered(1.0, &qp), 255);
+        assert_eq!(quantize_centered(-5.0, &qp), 0);
+        assert_eq!(quantize_centered(99.0, &qp), 255);
+    }
+
+    #[test]
+    fn quantize_slice_matches_scalar() {
+        let qp = act_qparams(-1.0, 3.0, 8);
+        let xs: Vec<f32> = (0..100).map(|i| -1.0 + 0.04 * i as f32).collect();
+        let v = quantize_slice(&xs, &qp);
+        for (i, &x) in xs.iter().enumerate() {
+            assert_eq!(v[i], quantize(x, &qp));
+        }
+    }
+}

@@ -1,0 +1,78 @@
+//! PJRT runtime: load AOT-compiled HLO text (from `python/compile/aot.py`)
+//! and execute it on the CPU PJRT client via the `xla` crate.
+//!
+//! This is the fast path of the stack: the same quantized computation the
+//! bit-accurate engine interprets is also available as a fused XLA
+//! executable built around the Layer-1 Pallas kernel
+//! (`artifacts/model.hlo.txt` — sorted1 policy, 16-bit accumulator), plus
+//! FP32 baselines under `artifacts/hlo/`.
+//!
+//! Interchange is HLO *text*: jax >= 0.5 emits protos with 64-bit ids that
+//! xla_extension 0.5.1 rejects; the text parser reassigns ids
+//! (see /opt/xla-example/README.md).
+
+use anyhow::{Context, Result};
+use std::path::Path;
+
+/// A PJRT CPU client + compiled executables.
+pub struct Runtime {
+    client: xla::PjRtClient,
+}
+
+/// One compiled HLO program with a fixed input batch size.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    pub path: String,
+}
+
+impl Runtime {
+    pub fn cpu() -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an HLO text file.
+    pub fn load_hlo<P: AsRef<Path>>(&self, path: P) -> Result<Executable> {
+        let p = path.as_ref();
+        let proto = xla::HloModuleProto::from_text_file(p)
+            .with_context(|| format!("parsing HLO text {p:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp).with_context(|| format!("compiling {p:?}"))?;
+        Ok(Executable { exe, path: p.display().to_string() })
+    }
+}
+
+impl Executable {
+    /// Execute with a single f32 input tensor; returns all tuple outputs as
+    /// flat f32 vectors (integer outputs are converted).
+    pub fn run_f32(&self, input: &[f32], shape: &[usize]) -> Result<Vec<Vec<f32>>> {
+        let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+        let lit = xla::Literal::vec1(input).reshape(&dims).context("reshaping input")?;
+        let result = self.exe.execute::<xla::Literal>(&[lit]).context("executing")?[0][0]
+            .to_literal_sync()
+            .context("fetching result")?;
+        // python lowered with return_tuple=True
+        let tuple = result.to_tuple().context("decomposing tuple")?;
+        let mut out = Vec::with_capacity(tuple.len());
+        for t in tuple {
+            match t.ty() {
+                Ok(xla::ElementType::F32) => out.push(t.to_vec::<f32>().context("f32 out")?),
+                Ok(xla::ElementType::S32) => out.push(
+                    t.to_vec::<i32>().context("i32 out")?.into_iter().map(|v| v as f32).collect(),
+                ),
+                other => anyhow::bail!("unsupported output element type {other:?}"),
+            }
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    // PJRT tests live in rust/tests/runtime_pjrt.rs (they need artifacts
+    // and take ~seconds to compile HLO; keeping them out of `--lib`).
+}

@@ -1,0 +1,130 @@
+//! Unstructured CSR baseline (paper §2.2, refs [9][35]).
+//!
+//! Functionally equivalent to `NmMatrix` but with u32 column indices and no
+//! group structure — used by `bench_sparse` to reproduce the paper's
+//! argument that unstructured formats pay index-storage and irregular-access
+//! overheads that N:M avoids.
+
+/// Compressed sparse row matrix over i8 values.
+#[derive(Clone, Debug)]
+pub struct CsrMatrix {
+    pub rows: usize,
+    pub cols: usize,
+    pub row_ptr: Vec<u32>,
+    pub col_idx: Vec<u32>,
+    pub val: Vec<i8>,
+}
+
+impl CsrMatrix {
+    pub fn from_dense(dense: &[i8], rows: usize, cols: usize) -> Self {
+        assert_eq!(dense.len(), rows * cols);
+        let mut row_ptr = Vec::with_capacity(rows + 1);
+        let mut col_idx = Vec::new();
+        let mut val = Vec::new();
+        row_ptr.push(0u32);
+        for r in 0..rows {
+            for c in 0..cols {
+                let v = dense[r * cols + c];
+                if v != 0 {
+                    col_idx.push(c as u32);
+                    val.push(v);
+                }
+            }
+            row_ptr.push(col_idx.len() as u32);
+        }
+        CsrMatrix { rows, cols, row_ptr, col_idx, val }
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.val.len()
+    }
+
+    /// SpMV in exact i64 arithmetic: y = A x (x dense, len cols).
+    pub fn spmv_exact(&self, x: &[i32], y: &mut Vec<i64>) {
+        debug_assert_eq!(x.len(), self.cols);
+        y.clear();
+        y.reserve(self.rows);
+        for r in 0..self.rows {
+            let a = self.row_ptr[r] as usize;
+            let b = self.row_ptr[r + 1] as usize;
+            let mut acc = 0i64;
+            for i in a..b {
+                acc += self.val[i] as i64 * x[self.col_idx[i] as usize] as i64;
+            }
+            y.push(acc);
+        }
+    }
+
+    /// Index + pointer storage overhead in bytes (the dCSR complaint).
+    pub fn footprint_bytes(&self) -> usize {
+        self.val.len() + 4 * self.col_idx.len() + 4 * self.row_ptr.len()
+    }
+
+    pub fn to_dense(&self) -> Vec<i8> {
+        let mut out = vec![0i8; self.rows * self.cols];
+        for r in 0..self.rows {
+            for i in self.row_ptr[r] as usize..self.row_ptr[r + 1] as usize {
+                out[r * self.cols + self.col_idx[i] as usize] = self.val[i];
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::nm::NmMatrix;
+    use crate::util::rng::Pcg32;
+
+    fn random_dense(rng: &mut Pcg32, rows: usize, cols: usize, density: f64) -> Vec<i8> {
+        (0..rows * cols)
+            .map(|_| {
+                if rng.f64() < density {
+                    let v = rng.range_i64(-127, 127) as i8;
+                    if v == 0 {
+                        3
+                    } else {
+                        v
+                    }
+                } else {
+                    0
+                }
+            })
+            .collect()
+    }
+
+    #[test]
+    fn roundtrip() {
+        let mut rng = Pcg32::new(8);
+        let d = random_dense(&mut rng, 7, 33, 0.3);
+        let csr = CsrMatrix::from_dense(&d, 7, 33);
+        assert_eq!(csr.to_dense(), d);
+    }
+
+    #[test]
+    fn spmv_matches_dense() {
+        let mut rng = Pcg32::new(9);
+        let d = random_dense(&mut rng, 5, 40, 0.25);
+        let x = rng.ivec(40, -100, 100);
+        let csr = CsrMatrix::from_dense(&d, 5, 40);
+        let mut y = Vec::new();
+        csr.spmv_exact(&x, &mut y);
+        for r in 0..5 {
+            let want: i64 = (0..40).map(|c| d[r * 40 + c] as i64 * x[c] as i64).sum();
+            assert_eq!(y[r], want);
+        }
+    }
+
+    #[test]
+    fn csr_footprint_larger_than_nm() {
+        // the paper's §2.2 point: 4-byte indices make unstructured sparse
+        // formats heavier than semi-structured ones at equal nnz
+        let mut rng = Pcg32::new(10);
+        let d = random_dense(&mut rng, 16, 256, 0.125);
+        let csr = CsrMatrix::from_dense(&d, 16, 256);
+        let nm = NmMatrix::from_dense(&d, 16, 256, 16);
+        assert_eq!(csr.nnz(), nm.nnz());
+        assert!(csr.footprint_bytes() > nm.footprint_bytes() - 4 * (nm.rows + 1));
+    }
+}

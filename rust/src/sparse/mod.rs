@@ -1,0 +1,31 @@
+//! Sparse weight formats (DESIGN.md S12/S13).
+//!
+//! * `nm` — the paper's N:M semi-structured format: within each consecutive
+//!   group of M weights along the contraction axis only a bounded number are
+//!   nonzero; storage is (group -> [ (idx_in_group, value) ]) flattened with
+//!   per-row offsets. Predictable structure, cheap skipping.
+//! * `csr` — classic unstructured CSR baseline for the overhead comparison
+//!   the paper makes in §2.2.
+
+pub mod csr;
+pub mod nm;
+
+pub use csr::CsrMatrix;
+pub use nm::NmMatrix;
+
+/// Fraction of zero entries in a dense row-major matrix.
+pub fn density_stats(w: &[i8]) -> (usize, usize) {
+    let nz = w.iter().filter(|&&v| v != 0).count();
+    (nz, w.len())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn density() {
+        assert_eq!(density_stats(&[0, 1, 0, -3]), (2, 4));
+        assert_eq!(density_stats(&[]), (0, 0));
+    }
+}

@@ -1,0 +1,271 @@
+//! N:M semi-structured sparse weight matrix (paper §2.2).
+//!
+//! Built from the dense int8 rows exported in `.pqsw` files (zeros are the
+//! pruned positions). Storage keeps, per row, the nonzero (column, value)
+//! pairs in column order — since N:M sparsity bounds nonzeros per group,
+//! indices within a group fit a u8 and the structure is predictable; we
+//! store absolute u16 columns for simplicity (K <= 65535 everywhere).
+//!
+//! `dot_products_into` emits only the partial products of *nonzero* weights:
+//! pruning shortens the dot products the accumulator sees, which is exactly
+//! how PQS reduces persistent overflows (paper §3.1).
+
+/// One sparse row-major weight matrix (O rows, K columns).
+#[derive(Clone, Debug)]
+pub struct NmMatrix {
+    pub rows: usize,
+    pub cols: usize,
+    /// group size M used at pruning time (metadata; 0 = unknown/dense)
+    pub m: usize,
+    /// per-row start offsets into idx/val (len rows+1)
+    pub row_ptr: Vec<u32>,
+    pub idx: Vec<u16>,
+    pub val: Vec<i8>,
+    /// per-row sum of weights (for the o_x * sum(w) dequant correction)
+    pub row_wsum: Vec<i32>,
+}
+
+impl NmMatrix {
+    /// Build from a dense row-major i8 matrix; zeros become implicit.
+    pub fn from_dense(dense: &[i8], rows: usize, cols: usize, m: usize) -> Self {
+        assert_eq!(dense.len(), rows * cols);
+        assert!(cols <= u16::MAX as usize + 1, "cols too large for u16 indices");
+        let mut row_ptr = Vec::with_capacity(rows + 1);
+        let mut idx = Vec::new();
+        let mut val = Vec::new();
+        let mut row_wsum = Vec::with_capacity(rows);
+        row_ptr.push(0u32);
+        for r in 0..rows {
+            let mut wsum = 0i32;
+            for c in 0..cols {
+                let v = dense[r * cols + c];
+                wsum += v as i32;
+                if v != 0 {
+                    idx.push(c as u16);
+                    val.push(v);
+                }
+            }
+            row_wsum.push(wsum);
+            row_ptr.push(idx.len() as u32);
+        }
+        NmMatrix { rows, cols, m, row_ptr, idx, val, row_wsum }
+    }
+
+    /// Number of stored nonzeros.
+    pub fn nnz(&self) -> usize {
+        self.val.len()
+    }
+
+    /// Achieved sparsity fraction.
+    pub fn sparsity(&self) -> f64 {
+        if self.rows * self.cols == 0 {
+            return 0.0;
+        }
+        1.0 - self.nnz() as f64 / (self.rows * self.cols) as f64
+    }
+
+    /// Nonzeros of one row as (columns, values).
+    #[inline]
+    pub fn row(&self, r: usize) -> (&[u16], &[i8]) {
+        let a = self.row_ptr[r] as usize;
+        let b = self.row_ptr[r + 1] as usize;
+        (&self.idx[a..b], &self.val[a..b])
+    }
+
+    /// Emit the partial products of row `r` against activation vector `x`
+    /// (length `cols`) into `out` — only nonzero-weight positions.
+    #[inline]
+    pub fn dot_products_into(&self, r: usize, x: &[i32], out: &mut Vec<i32>) {
+        debug_assert_eq!(x.len(), self.cols);
+        let (cols, vals) = self.row(r);
+        out.clear();
+        out.reserve(cols.len());
+        for (c, v) in cols.iter().zip(vals) {
+            out.push(*v as i32 * x[*c as usize]);
+        }
+    }
+
+    /// Fused exact dot product of row `r` with `x` (no product buffer) —
+    /// the engine's hot path for the Exact/Sorted/Oracle policies.
+    #[inline]
+    pub fn dot_exact(&self, r: usize, x: &[i32]) -> i64 {
+        let (cols, vals) = self.row(r);
+        let mut acc = 0i64;
+        for (c, v) in cols.iter().zip(vals) {
+            acc += (*v as i32 * x[*c as usize]) as i64;
+        }
+        acc
+    }
+
+    /// Fused saturating accumulation in index order (policy Clip).
+    /// Returns (value, overflow events). Identical semantics to
+    /// `accum::clip_accumulate` over the nonzero products.
+    #[inline]
+    pub fn dot_clip(&self, r: usize, x: &[i32], p: u32) -> (i64, u32) {
+        let (lo, hi) = crate::accum::acc_range(p);
+        let (cols, vals) = self.row(r);
+        let mut acc = 0i64;
+        let mut ovf = 0u32;
+        for (c, v) in cols.iter().zip(vals) {
+            let t = acc + (*v as i32 * x[*c as usize]) as i64;
+            acc = if t < lo {
+                ovf += 1;
+                lo
+            } else if t > hi {
+                ovf += 1;
+                hi
+            } else {
+                t
+            };
+        }
+        (acc, ovf)
+    }
+
+    /// Verify the N:M structural invariant: each consecutive group of M has
+    /// at most `max_keep` nonzeros. Returns worst group occupancy.
+    pub fn check_group_bound(&self, max_keep: usize) -> Result<usize, String> {
+        if self.m == 0 {
+            return Ok(0);
+        }
+        let mut worst = 0usize;
+        for r in 0..self.rows {
+            let (cols, _) = self.row(r);
+            let mut i = 0;
+            while i < cols.len() {
+                let g = cols[i] as usize / self.m;
+                let mut n = 0;
+                while i < cols.len() && (cols[i] as usize) / self.m == g {
+                    n += 1;
+                    i += 1;
+                }
+                worst = worst.max(n);
+                if n > max_keep {
+                    return Err(format!("row {r} group {g} has {n} > {max_keep} nonzeros"));
+                }
+            }
+        }
+        Ok(worst)
+    }
+
+    /// Dense reconstruction (tests).
+    pub fn to_dense(&self) -> Vec<i8> {
+        let mut out = vec![0i8; self.rows * self.cols];
+        for r in 0..self.rows {
+            let (cols, vals) = self.row(r);
+            for (c, v) in cols.iter().zip(vals) {
+                out[r * self.cols + *c as usize] = *v;
+            }
+        }
+        out
+    }
+
+    /// Approximate in-memory footprint in bytes (values + indices + ptrs).
+    pub fn footprint_bytes(&self) -> usize {
+        self.val.len() + 2 * self.idx.len() + 4 * self.row_ptr.len() + 4 * self.row_wsum.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+    use crate::util::rng::Pcg32;
+
+    fn random_nm(rng: &mut Pcg32, rows: usize, cols: usize, m: usize, keep: usize) -> Vec<i8> {
+        let mut dense = vec![0i8; rows * cols];
+        for r in 0..rows {
+            for g0 in (0..cols).step_by(m) {
+                let glen = m.min(cols - g0);
+                let mut positions: Vec<usize> = (0..glen).collect();
+                rng.shuffle(&mut positions);
+                for &p in positions.iter().take(keep.min(glen)) {
+                    let mut v = rng.range_i64(-127, 127) as i8;
+                    if v == 0 {
+                        v = 1;
+                    }
+                    dense[r * cols + g0 + p] = v;
+                }
+            }
+        }
+        dense
+    }
+
+    #[test]
+    fn roundtrip_dense() {
+        prop::check(
+            "nm-roundtrip",
+            50,
+            |r: &mut Pcg32| random_nm(r, 4, 32, 8, 3),
+            |dense| {
+                let nm = NmMatrix::from_dense(dense, 4, 32, 8);
+                if nm.to_dense() != *dense {
+                    return Err("roundtrip mismatch".into());
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn group_bound_checked() {
+        let mut rng = Pcg32::new(5);
+        let dense = random_nm(&mut rng, 8, 64, 16, 4);
+        let nm = NmMatrix::from_dense(&dense, 8, 64, 16);
+        assert!(nm.check_group_bound(4).is_ok());
+        assert!(nm.check_group_bound(0).is_err() || nm.nnz() == 0);
+    }
+
+    #[test]
+    fn sparsity_and_nnz() {
+        let dense = vec![0i8, 5, 0, 0, -3, 0, 0, 0];
+        let nm = NmMatrix::from_dense(&dense, 2, 4, 4);
+        assert_eq!(nm.nnz(), 2);
+        assert!((nm.sparsity() - 0.75).abs() < 1e-12);
+        assert_eq!(nm.row_wsum, vec![5, -3]);
+    }
+
+    #[test]
+    fn products_skip_zeros() {
+        let dense = vec![2i8, 0, -1, 0];
+        let nm = NmMatrix::from_dense(&dense, 1, 4, 4);
+        let mut out = Vec::new();
+        nm.dot_products_into(0, &[10, 20, 30, 40], &mut out);
+        assert_eq!(out, vec![20, -30]);
+    }
+
+    #[test]
+    fn sparse_dot_equals_dense_dot() {
+        prop::check(
+            "nm-dot-matches-dense",
+            100,
+            |r: &mut Pcg32| {
+                let dense = random_nm(r, 3, 48, 16, 5);
+                let x = r.ivec(48, -128, 127);
+                (dense, x)
+            },
+            |(dense, x)| {
+                let nm = NmMatrix::from_dense(dense, 3, 48, 16);
+                let mut out = Vec::new();
+                for r in 0..3 {
+                    nm.dot_products_into(r, x, &mut out);
+                    let sp: i64 = out.iter().map(|&v| v as i64).sum();
+                    let dn: i64 = (0..48)
+                        .map(|c| dense[r * 48 + c] as i64 * x[c] as i64)
+                        .sum();
+                    if sp != dn {
+                        return Err(format!("row {r}: {sp} != {dn}"));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn footprint_smaller_when_sparse() {
+        let mut rng = Pcg32::new(6);
+        let sparse = random_nm(&mut rng, 16, 256, 16, 2); // 87.5% sparse
+        let nm = NmMatrix::from_dense(&sparse, 16, 256, 16);
+        assert!(nm.footprint_bytes() < 16 * 256); // beats dense i8
+    }
+}

@@ -1,0 +1,185 @@
+//! im2col lowering of 2-D convolution to matmul (quantized domain).
+//!
+//! A conv over a quantized activation map becomes: for each output spatial
+//! position, gather the receptive field into one row of length K = C*kh*kw,
+//! then every output channel is a dot product of that row with the filter
+//! row — exactly the dot products the paper's accumulator analysis studies.
+//!
+//! **Padding note:** padding happens in FP32 space with value 0.0, which in
+//! the affine quantized domain is the *offset* `o_x`, not integer 0. The
+//! caller passes `pad_q = quantize(0.0)`.
+
+/// Output spatial dimension for a conv axis.
+pub fn conv_out_dim(input: usize, k: usize, stride: usize, pad: usize) -> usize {
+    (input + 2 * pad - k) / stride + 1
+}
+
+/// Lower one image (C,H,W as a flat slice) to the im2col matrix with layout
+/// (L, K): L = oh*ow rows, K = c*kh*kw columns; each row is the receptive
+/// field of one output position (channel-major, then kernel row/col —
+/// matching the (O, I*kh*kw) weight layout exported by `pqsw.py`).
+#[allow(clippy::too_many_arguments)]
+pub fn im2col(
+    x: &[i32],
+    c: usize,
+    h: usize,
+    w: usize,
+    kh: usize,
+    kw: usize,
+    stride: usize,
+    pad: usize,
+    pad_q: i32,
+    out: &mut Vec<i32>,
+) -> (usize, usize) {
+    debug_assert_eq!(x.len(), c * h * w);
+    let oh = conv_out_dim(h, kh, stride, pad);
+    let ow = conv_out_dim(w, kw, stride, pad);
+    let k = c * kh * kw;
+    out.clear();
+    out.reserve(oh * ow * k);
+    for oy in 0..oh {
+        for ox in 0..ow {
+            let iy0 = (oy * stride) as isize - pad as isize;
+            let ix0 = (ox * stride) as isize - pad as isize;
+            for ch in 0..c {
+                let base = ch * h * w;
+                for ky in 0..kh {
+                    let iy = iy0 + ky as isize;
+                    for kx in 0..kw {
+                        let ix = ix0 + kx as isize;
+                        if iy < 0 || iy >= h as isize || ix < 0 || ix >= w as isize {
+                            out.push(pad_q);
+                        } else {
+                            out.push(x[base + iy as usize * w + ix as usize]);
+                        }
+                    }
+                }
+            }
+        }
+    }
+    (oh * ow, k)
+}
+
+/// Depthwise variant: lower only channel `ch` to (L, kh*kw).
+#[allow(clippy::too_many_arguments)]
+pub fn im2col_grouped(
+    x: &[i32],
+    c: usize,
+    h: usize,
+    w: usize,
+    ch: usize,
+    kh: usize,
+    kw: usize,
+    stride: usize,
+    pad: usize,
+    pad_q: i32,
+    out: &mut Vec<i32>,
+) -> (usize, usize) {
+    debug_assert!(ch < c);
+    let oh = conv_out_dim(h, kh, stride, pad);
+    let ow = conv_out_dim(w, kw, stride, pad);
+    let k = kh * kw;
+    out.clear();
+    out.reserve(oh * ow * k);
+    let base = ch * h * w;
+    for oy in 0..oh {
+        for ox in 0..ow {
+            let iy0 = (oy * stride) as isize - pad as isize;
+            let ix0 = (ox * stride) as isize - pad as isize;
+            for ky in 0..kh {
+                let iy = iy0 + ky as isize;
+                for kx in 0..kw {
+                    let ix = ix0 + kx as isize;
+                    if iy < 0 || iy >= h as isize || ix < 0 || ix >= w as isize {
+                        out.push(pad_q);
+                    } else {
+                        out.push(x[base + iy as usize * w + ix as usize]);
+                    }
+                }
+            }
+        }
+    }
+    (oh * ow, k)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn out_dims() {
+        assert_eq!(conv_out_dim(28, 3, 1, 1), 28);
+        assert_eq!(conv_out_dim(20, 3, 2, 1), 10);
+        assert_eq!(conv_out_dim(5, 1, 1, 0), 5);
+    }
+
+    #[test]
+    fn identity_1x1() {
+        // 1x1 conv im2col is just the pixels, channel-major per position
+        let x: Vec<i32> = (0..2 * 2 * 2).collect(); // (2,2,2)
+        let mut out = Vec::new();
+        let (l, k) = im2col(&x, 2, 2, 2, 1, 1, 1, 0, 0, &mut out);
+        assert_eq!((l, k), (4, 2));
+        // position (0,0): ch0 val 0, ch1 val 4
+        assert_eq!(&out[0..2], &[0, 4]);
+        // position (1,1): ch0 val 3, ch1 val 7
+        assert_eq!(&out[6..8], &[3, 7]);
+    }
+
+    #[test]
+    fn conv3x3_matches_naive() {
+        // compare im2col dot against a naive conv loop
+        let (c, h, w) = (2, 5, 5);
+        let x: Vec<i32> = (0..c * h * w).map(|i| (i as i32 * 7) % 11 - 5).collect();
+        let weights: Vec<i32> = (0..c * 9).map(|i| (i as i32 * 3) % 7 - 3).collect(); // one filter
+        let (stride, pad, pad_q) = (1, 1, -2);
+        let mut cols = Vec::new();
+        let (l, k) = im2col(&x, c, h, w, 3, 3, stride, pad, pad_q, &mut cols);
+        assert_eq!((l, k), (25, 18));
+        for oy in 0..5usize {
+            for ox in 0..5usize {
+                // naive
+                let mut acc = 0i64;
+                for ch in 0..c {
+                    for ky in 0..3usize {
+                        for kx in 0..3usize {
+                            let iy = oy as isize + ky as isize - 1;
+                            let ix = ox as isize + kx as isize - 1;
+                            let v = if iy < 0 || iy >= 5 || ix < 0 || ix >= 5 {
+                                pad_q
+                            } else {
+                                x[ch * 25 + iy as usize * 5 + ix as usize]
+                            };
+                            acc += (v * weights[ch * 9 + ky * 3 + kx]) as i64;
+                        }
+                    }
+                }
+                let row = &cols[(oy * 5 + ox) * k..(oy * 5 + ox + 1) * k];
+                let dot: i64 = row.iter().zip(&weights).map(|(&a, &b)| (a * b) as i64).sum();
+                assert_eq!(dot, acc, "at ({oy},{ox})");
+            }
+        }
+    }
+
+    #[test]
+    fn grouped_matches_full_on_single_channel() {
+        let (c, h, w) = (3, 4, 4);
+        let x: Vec<i32> = (0..c * h * w).map(|i| i as i32 % 9 - 4).collect();
+        let mut full = Vec::new();
+        im2col(&x[16..32].to_vec(), 1, h, w, 3, 3, 1, 1, 0, &mut full);
+        let mut grp = Vec::new();
+        let (l, k) = im2col_grouped(&x, c, h, w, 1, 3, 3, 1, 1, 0, &mut grp);
+        assert_eq!((l, k), (16, 9));
+        assert_eq!(full, grp);
+    }
+
+    #[test]
+    fn stride_two_downsamples() {
+        let x: Vec<i32> = (0..36).collect(); // (1,6,6)
+        let mut out = Vec::new();
+        let (l, k) = im2col(&x, 1, 6, 6, 3, 3, 2, 1, 99, &mut out);
+        assert_eq!((l, k), (9, 9));
+        // first row, first element is padding
+        assert_eq!(out[0], 99);
+    }
+}

@@ -1,0 +1,146 @@
+//! Minimal dense tensor substrate: shapes, f32/i32 storage, matmul and
+//! im2col convolution lowering (DESIGN.md S11).
+//!
+//! Convolutions are lowered to matmul via im2col so that *every* MAC in the
+//! network flows through the same dot-product machinery the paper analyzes:
+//! a conv output element is a length C*kh*kw dot product, a depthwise
+//! output element a length kh*kw dot product.
+
+pub mod im2col;
+
+pub use im2col::{conv_out_dim, im2col, im2col_grouped};
+
+/// Dense row-major tensor.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor<T> {
+    pub shape: Vec<usize>,
+    pub data: Vec<T>,
+}
+
+impl<T: Clone + Default> Tensor<T> {
+    pub fn zeros(shape: &[usize]) -> Self {
+        let n = shape.iter().product();
+        Tensor { shape: shape.to_vec(), data: vec![T::default(); n] }
+    }
+
+    pub fn from_vec(shape: &[usize], data: Vec<T>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len(), "shape/data mismatch");
+        Tensor { shape: shape.to_vec(), data }
+    }
+
+    pub fn numel(&self) -> usize {
+        self.data.len()
+    }
+
+    /// Row-major strides.
+    pub fn strides(&self) -> Vec<usize> {
+        let mut s = vec![1; self.shape.len()];
+        for i in (0..self.shape.len().saturating_sub(1)).rev() {
+            s[i] = s[i + 1] * self.shape[i + 1];
+        }
+        s
+    }
+
+    pub fn reshape(mut self, shape: &[usize]) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), self.data.len());
+        self.shape = shape.to_vec();
+        self
+    }
+}
+
+pub type TensorF = Tensor<f32>;
+pub type TensorI = Tensor<i32>;
+
+impl TensorF {
+    /// ReLU in place.
+    pub fn relu_inplace(&mut self) {
+        for v in &mut self.data {
+            if *v < 0.0 {
+                *v = 0.0;
+            }
+        }
+    }
+
+    /// Elementwise add (shapes must match).
+    pub fn add(&self, other: &TensorF) -> TensorF {
+        assert_eq!(self.shape, other.shape);
+        let data = self.data.iter().zip(&other.data).map(|(a, b)| a + b).collect();
+        Tensor { shape: self.shape.clone(), data }
+    }
+
+    /// Global average pool over the last two axes: (N,C,H,W) -> (N,C).
+    pub fn global_avg_pool(&self) -> TensorF {
+        assert_eq!(self.shape.len(), 4);
+        let (n, c, h, w) = (self.shape[0], self.shape[1], self.shape[2], self.shape[3]);
+        let hw = h * w;
+        let mut out = vec![0f32; n * c];
+        for i in 0..n {
+            for j in 0..c {
+                let base = (i * c + j) * hw;
+                let s: f32 = self.data[base..base + hw].iter().sum();
+                out[i * c + j] = s / hw as f32;
+            }
+        }
+        Tensor::from_vec(&[n, c], out)
+    }
+}
+
+/// f32 matmul: a (m,k) @ b (k,n) -> (m,n). Reference (non-hot-path) impl.
+pub fn matmul_f32(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    let mut out = vec![0f32; m * n];
+    for i in 0..m {
+        for kk in 0..k {
+            let av = a[i * k + kk];
+            if av == 0.0 {
+                continue;
+            }
+            let brow = &b[kk * n..kk * n + n];
+            let orow = &mut out[i * n..i * n + n];
+            for j in 0..n {
+                orow[j] += av * brow[j];
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zeros_and_strides() {
+        let t = TensorF::zeros(&[2, 3, 4]);
+        assert_eq!(t.numel(), 24);
+        assert_eq!(t.strides(), vec![12, 4, 1]);
+    }
+
+    #[test]
+    fn relu_and_add() {
+        let mut t = TensorF::from_vec(&[4], vec![-1.0, 0.0, 2.0, -3.0]);
+        t.relu_inplace();
+        assert_eq!(t.data, vec![0.0, 0.0, 2.0, 0.0]);
+        let u = t.add(&TensorF::from_vec(&[4], vec![1.0; 4]));
+        assert_eq!(u.data, vec![1.0, 1.0, 3.0, 1.0]);
+    }
+
+    #[test]
+    fn gap() {
+        let t = TensorF::from_vec(&[1, 2, 2, 2], vec![1., 2., 3., 4., 10., 20., 30., 40.]);
+        let g = t.global_avg_pool();
+        assert_eq!(g.shape, vec![1, 2]);
+        assert_eq!(g.data, vec![2.5, 25.0]);
+    }
+
+    #[test]
+    fn matmul_small() {
+        let r = matmul_f32(&[1., 2., 3., 4.], &[1., 1., 1., 1.], 2, 2, 2);
+        assert_eq!(r, vec![3., 3., 7., 7.]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn from_vec_checks_shape() {
+        let _ = TensorF::from_vec(&[2, 2], vec![1.0; 3]);
+    }
+}

@@ -1,0 +1,104 @@
+//! Minimal benchmarking harness (criterion is unavailable offline).
+//!
+//! Measures wall time over adaptive iteration counts with warmup, reports
+//! mean / stddev / throughput, and prints criterion-like one-line summaries.
+//! `cargo bench` binaries (rust/benches/*.rs, harness = false) use this.
+
+use std::time::Instant;
+
+use crate::util::stats;
+
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u64,
+    pub mean_ns: f64,
+    pub stddev_ns: f64,
+    pub samples: Vec<f64>,
+}
+
+impl BenchResult {
+    pub fn print(&self) {
+        println!(
+            "{:<48} {:>12} ± {:>10}   ({} iters)",
+            self.name,
+            stats::fmt_ns(self.mean_ns),
+            stats::fmt_ns(self.stddev_ns),
+            self.iters
+        );
+    }
+
+    pub fn print_throughput(&self, items: f64, unit: &str) {
+        println!(
+            "{:<48} {:>12} ± {:>10}   {:>14} {unit}",
+            self.name,
+            stats::fmt_ns(self.mean_ns),
+            stats::fmt_ns(self.stddev_ns),
+            stats::fmt_rate(items / (self.mean_ns / 1e9)),
+        );
+    }
+}
+
+/// Benchmark `f`, automatically choosing an iteration count so each sample
+/// takes >= ~5ms, collecting `samples` samples after `warmup` runs.
+pub fn bench<F: FnMut()>(name: &str, mut f: F) -> BenchResult {
+    bench_cfg(name, 3, 10, &mut f)
+}
+
+pub fn bench_cfg<F: FnMut()>(name: &str, warmup: u32, n_samples: u32, f: &mut F) -> BenchResult {
+    // calibrate
+    let mut iters = 1u64;
+    loop {
+        let t0 = Instant::now();
+        for _ in 0..iters {
+            f();
+        }
+        let dt = t0.elapsed().as_nanos() as f64;
+        if dt > 5e6 || iters >= 1 << 24 {
+            break;
+        }
+        iters = (iters * 2).max((iters as f64 * 6e6 / dt.max(1.0)) as u64);
+    }
+    for _ in 0..warmup {
+        let t0 = Instant::now();
+        for _ in 0..iters {
+            f();
+        }
+        let _ = t0.elapsed();
+    }
+    let mut samples = Vec::with_capacity(n_samples as usize);
+    for _ in 0..n_samples {
+        let t0 = Instant::now();
+        for _ in 0..iters {
+            f();
+        }
+        samples.push(t0.elapsed().as_nanos() as f64 / iters as f64);
+    }
+    BenchResult {
+        name: name.to_string(),
+        iters,
+        mean_ns: stats::mean(&samples),
+        stddev_ns: stats::stddev(&samples),
+        samples,
+    }
+}
+
+/// Prevent the optimizer from deleting a computed value.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        let mut acc = 0u64;
+        let r = bench_cfg("noop-ish", 1, 3, &mut || {
+            acc = black_box(acc.wrapping_add(1));
+        });
+        assert!(r.mean_ns > 0.0);
+        assert!(r.iters > 100);
+    }
+}

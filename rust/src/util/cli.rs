@@ -1,0 +1,98 @@
+//! Tiny CLI argument parser (no clap offline).
+//!
+//! Supports `--key value`, `--key=value`, boolean `--flag`, and positional
+//! arguments. Used by the `pqs` binary and the examples.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub flags: BTreeMap<String, String>,
+}
+
+impl Args {
+    /// Parse from an explicit iterator (tests) — `std::env::args().skip(1)`.
+    pub fn parse<I: IntoIterator<Item = String>>(it: I) -> Args {
+        let mut out = Args::default();
+        let mut it = it.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(rest) = a.strip_prefix("--") {
+                if let Some((k, v)) = rest.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    let v = it.next().unwrap();
+                    out.flags.insert(rest.to_string(), v);
+                } else {
+                    out.flags.insert(rest.to_string(), "true".to_string());
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        out
+    }
+
+    pub fn from_env() -> Args {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> usize {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn get_u32(&self, key: &str, default: u32) -> u32 {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn has(&self, key: &str) -> bool {
+        self.flags.contains_key(key)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(v: &[&str]) -> Args {
+        Args::parse(v.iter().map(|s| s.to_string()))
+    }
+
+    #[test]
+    fn positional_and_flags() {
+        // note: `--flag value`-style binds the next non-flag token, so pure
+        // boolean flags must use `--flag` at the end or `--flag=true`.
+        let a = parse(&["run", "--model", "mlp", "--acc-bits=14", "x", "--verbose"]);
+        assert_eq!(a.positional, vec!["run", "x"]);
+        assert_eq!(a.get("model"), Some("mlp"));
+        assert_eq!(a.get_u32("acc-bits", 0), 14);
+        assert!(a.has("verbose"));
+        assert_eq!(a.get("verbose"), Some("true"));
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse(&[]);
+        assert_eq!(a.get_usize("n", 7), 7);
+        assert_eq!(a.get_or("x", "d"), "d");
+        assert!(!a.has("q"));
+    }
+
+    #[test]
+    fn trailing_flag_is_boolean() {
+        let a = parse(&["--last"]);
+        assert_eq!(a.get("last"), Some("true"));
+    }
+}

@@ -1,0 +1,10 @@
+//! Substrate utilities built from scratch (this environment is offline:
+//! no serde / clap / rand / criterion / tokio — see DESIGN.md §2 S20).
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod pool;
+pub mod prop;
+pub mod rng;
+pub mod stats;

@@ -1,0 +1,102 @@
+//! Scoped thread-pool helpers (no tokio/rayon offline).
+//!
+//! `parallel_map` splits work across `n_threads` scoped workers pulling
+//! indices from a shared atomic counter (work stealing by chunk); results
+//! land in order. The evaluation coordinator builds on this.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Number of worker threads to use (PQS_THREADS env or available cores).
+pub fn default_threads() -> usize {
+    if let Ok(v) = std::env::var("PQS_THREADS") {
+        if let Ok(n) = v.parse::<usize>() {
+            return n.max(1);
+        }
+    }
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Apply `f` to every index in 0..n on `threads` scoped workers, collecting
+/// results in index order. `f` must be Sync; per-item state should live
+/// inside `f` (e.g. thread-locals are overkill — construct scratch per call
+/// or use `parallel_map_init`).
+pub fn parallel_map<T: Send, F: Fn(usize) -> T + Sync>(n: usize, threads: usize, f: F) -> Vec<T> {
+    parallel_map_init(n, threads, || (), |_, i| f(i))
+}
+
+/// Like `parallel_map` but each worker gets its own state from `init`
+/// (scratch buffers, engines) reused across its items.
+pub fn parallel_map_init<T, S, I, F>(n: usize, threads: usize, init: I, f: F) -> Vec<T>
+where
+    T: Send,
+    I: Fn() -> S + Sync,
+    F: Fn(&mut S, usize) -> T + Sync,
+{
+    let threads = threads.clamp(1, n.max(1));
+    if n == 0 {
+        return Vec::new();
+    }
+    if threads == 1 {
+        let mut st = init();
+        return (0..n).map(|i| f(&mut st, i)).collect();
+    }
+    let next = AtomicUsize::new(0);
+    let out: Vec<Mutex<Option<T>>> = (0..n).map(|_| Mutex::new(None)).collect();
+    std::thread::scope(|scope| {
+        for _ in 0..threads {
+            scope.spawn(|| {
+                let mut st = init();
+                loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= n {
+                        break;
+                    }
+                    let v = f(&mut st, i);
+                    *out[i].lock().unwrap() = Some(v);
+                }
+            });
+        }
+    });
+    out.into_iter().map(|m| m.into_inner().unwrap().unwrap()).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn maps_in_order() {
+        let v = parallel_map(100, 4, |i| i * i);
+        assert_eq!(v, (0..100).map(|i| i * i).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn empty() {
+        let v: Vec<usize> = parallel_map(0, 4, |i| i);
+        assert!(v.is_empty());
+    }
+
+    #[test]
+    fn single_thread_path() {
+        let v = parallel_map(10, 1, |i| i + 1);
+        assert_eq!(v[9], 10);
+    }
+
+    #[test]
+    fn init_state_reused() {
+        // each worker counts its own items; total must equal n
+        let counts = parallel_map_init(
+            1000,
+            4,
+            || 0usize,
+            |st, i| {
+                *st += 1;
+                (i, *st)
+            },
+        );
+        assert_eq!(counts.len(), 1000);
+        // state is per-worker, so per-item counters are <= n
+        assert!(counts.iter().all(|&(_, c)| c >= 1 && c <= 1000));
+    }
+}

@@ -1,0 +1,69 @@
+//! Hand-rolled property-testing harness (no proptest offline).
+//!
+//! `check(name, iters, gen, prop)` runs `prop` over `iters` generated cases
+//! with a deterministic seed sequence; on failure it retries with a simple
+//! shrink pass (re-generating "smaller" cases from derived seeds is left to
+//! the generator — we report the failing seed so the case is reproducible).
+
+use crate::util::rng::Pcg32;
+
+/// Run a property over generated cases. Panics with the failing seed and
+/// message on the first counterexample.
+pub fn check<T: std::fmt::Debug, G, P>(name: &str, iters: u64, gen: G, prop: P)
+where
+    G: Fn(&mut Pcg32) -> T,
+    P: Fn(&T) -> Result<(), String>,
+{
+    for seed in 0..iters {
+        let mut rng = Pcg32::new(0x5051_5EED ^ seed);
+        let case = gen(&mut rng);
+        if let Err(msg) = prop(&case) {
+            panic!("property '{name}' failed at seed {seed}: {msg}\ncase: {case:?}");
+        }
+    }
+}
+
+/// Generator helpers for the common "vector of small ints" shape.
+pub fn gen_prods(rng: &mut Pcg32, max_len: usize, bits: u32) -> Vec<i32> {
+    let len = rng.below(max_len as u32 + 1) as usize;
+    let lim = 1i64 << (bits - 1);
+    (0..len)
+        .map(|_| (rng.range_i64(-(lim - 1), lim - 1) * rng.range_i64(-lim, lim - 1)) as i32)
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivial_property() {
+        check("sum-commutes", 50, |r| r.ivec(10, -100, 100), |v| {
+            let a: i64 = v.iter().map(|&x| x as i64).sum();
+            let b: i64 = v.iter().rev().map(|&x| x as i64).sum();
+            if a == b {
+                Ok(())
+            } else {
+                Err(format!("{a} != {b}"))
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-fails'")]
+    fn reports_failures() {
+        check("always-fails", 5, |r| r.next_u32(), |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn gen_prods_in_product_range() {
+        let mut r = Pcg32::new(1);
+        for _ in 0..100 {
+            let v = gen_prods(&mut r, 64, 8);
+            assert!(v.len() <= 64);
+            for &p in &v {
+                assert!((p as i64).abs() <= 127 * 128);
+            }
+        }
+    }
+}

@@ -1,0 +1,115 @@
+//! Artifact-integrity integration tests: every exported model parses, its
+//! metadata is self-consistent, N:M structure holds, and datasets load.
+
+use pqs::formats::manifest::Manifest;
+use pqs::formats::pqsw::{Op, PqswModel};
+use pqs::sparse::NmMatrix;
+
+#[test]
+fn all_models_parse_and_are_consistent() {
+    let man = Manifest::load_default().expect("run `make artifacts` first");
+    assert!(man.models.len() >= 10, "suspiciously few models");
+    for (name, entry) in &man.models {
+        let m = PqswModel::load(man.model_path(name)).unwrap_or_else(|e| panic!("{name}: {e:#}"));
+        assert_eq!(&m.name, name);
+        assert_eq!(m.arch, entry.arch);
+        // sparsity recomputed from the *quantized* weights: quantization
+        // only adds zeros on top of pruning (paper §6, "quantization itself
+        // induces additional sparsity"), so int8 sparsity >= fp32 sparsity
+        let sp = m.weight_sparsity();
+        assert!(
+            sp + 0.02 >= entry.achieved_sparsity,
+            "{name}: int8 sparsity {sp} below manifest fp32 sparsity {}",
+            entry.achieved_sparsity
+        );
+        // graph sanity: exactly one input, last node produces the logits
+        let inputs = m.graph.iter().filter(|n| n.op == Op::Input).count();
+        assert_eq!(inputs, 1, "{name}");
+        for n in &m.graph {
+            for &i in &n.inputs {
+                assert!(m.graph.iter().any(|o| o.id == i), "{name}: dangling input {i}");
+            }
+        }
+    }
+}
+
+#[test]
+fn nm_structure_holds_for_pq_models() {
+    let man = Manifest::load_default().expect("manifest");
+    let mut checked = 0;
+    for (name, entry) in &man.models {
+        if entry.schedule != "pq" || entry.target_sparsity == 0.0 {
+            continue;
+        }
+        let m = PqswModel::load(man.model_path(name)).unwrap();
+        for (node, q) in m.q_layers() {
+            if !q.prune {
+                continue;
+            }
+            let nm = NmMatrix::from_dense(&q.wq, q.oc, q.k, m.nm_m);
+            // with target sparsity s, each group of M keeps at most
+            // M - round(s*M) nonzeros (quantization can only add zeros)
+            let keep = m.nm_m - (entry.target_sparsity * m.nm_m as f64).round() as usize;
+            let worst = nm
+                .check_group_bound(keep)
+                .unwrap_or_else(|e| panic!("{name}/{:?}: {e}", node.id));
+            assert!(worst <= keep);
+            checked += 1;
+        }
+    }
+    assert!(checked > 5, "checked only {checked} layers");
+}
+
+#[test]
+fn datasets_load_and_match_manifest_shapes() {
+    let man = Manifest::load_default().expect("manifest");
+    for (key, entry) in &man.datasets {
+        for file in [&entry.train, &entry.test] {
+            let ds = pqs::data::Dataset::load(man.dataset_path(file)).expect("dataset");
+            assert_eq!(
+                vec![ds.c, ds.h, ds.w],
+                entry.shape,
+                "{key}/{file} shape mismatch"
+            );
+            assert_eq!(ds.labels.len(), ds.n);
+            let hist = ds.class_histogram();
+            assert_eq!(hist.len(), 10, "{key} classes");
+            assert!(hist.iter().all(|&c| c > 0), "{key} has empty classes");
+        }
+    }
+}
+
+#[test]
+fn a2q_models_respect_l1_bound() {
+    // sum_k |w_q| <= (2^(p-1)-1) / 2^(b-1), with small rounding slack
+    let man = Manifest::load_default().expect("manifest");
+    let mut checked = 0;
+    for (name, entry) in &man.models {
+        let Some(p) = entry.acc_bits_trained else { continue };
+        let m = PqswModel::load(man.model_path(name)).unwrap();
+        let limit = ((1i64 << (p - 1)) - 1) as f64 / (1i64 << (m.wbits - 1)) as f64;
+        for (_, q) in m.q_layers() {
+            for o in 0..q.oc {
+                let l1: i64 = q.wq[o * q.k..(o + 1) * q.k].iter().map(|&v| (v as i64).abs()).sum();
+                assert!(
+                    l1 as f64 <= limit * 1.15 + 2.0,
+                    "{name} layer {} row {o}: sum|w_q| = {l1} > limit {limit}",
+                    q.name
+                );
+            }
+        }
+        checked += 1;
+    }
+    assert!(checked >= 4, "checked only {checked} a2q models");
+}
+
+#[test]
+fn fig_experiments_present() {
+    let man = Manifest::load_default().expect("manifest");
+    for exp in ["fig2", "fig3", "fig4", "fig5", "fp32"] {
+        assert!(
+            !man.experiment_models(exp).is_empty(),
+            "experiment {exp} has no models"
+        );
+    }
+}

@@ -1,0 +1,83 @@
+//! Coordinator invariants: sharding must not change results; the serving
+//! front-end must conserve requests and answer deterministically.
+
+use pqs::accum::Policy;
+use pqs::coordinator::{serve_requests, EvalService, Request};
+use pqs::data::Dataset;
+use pqs::formats::manifest::Manifest;
+use pqs::models;
+use pqs::nn::engine::EngineConfig;
+
+fn setup() -> (Manifest, Dataset, pqs::formats::pqsw::PqswModel) {
+    let man = Manifest::load_default().expect("run `make artifacts` first");
+    let entry = man.test_dataset_for("mlp1").unwrap();
+    let ds = Dataset::load(man.dataset_path(&entry.test)).unwrap();
+    let name = man.experiments["fig2"][0].clone();
+    let model = models::load(&man, &name).unwrap();
+    (man, ds, model)
+}
+
+#[test]
+fn sharding_invariance() {
+    let (_man, ds, model) = setup();
+    let cfg = EngineConfig { policy: Policy::Sorted, acc_bits: 14, collect_stats: true, tile: 0 };
+    let a = EvalService::new(&model, cfg).with_threads(1).with_batch(64)
+        .evaluate(&ds, Some(256)).unwrap();
+    let b = EvalService::new(&model, cfg).with_threads(4).with_batch(32)
+        .evaluate(&ds, Some(256)).unwrap();
+    assert_eq!(a.samples, b.samples);
+    assert!((a.accuracy - b.accuracy).abs() < 1e-12);
+    // overflow totals are per-dot counts: independent of sharding
+    assert_eq!(a.report.total(), b.report.total());
+}
+
+#[test]
+fn limit_truncates_exactly() {
+    let (_man, ds, model) = setup();
+    let cfg = EngineConfig::default();
+    let out = EvalService::new(&model, cfg).with_batch(50).evaluate(&ds, Some(123)).unwrap();
+    assert_eq!(out.samples, 123);
+}
+
+#[test]
+fn serve_conserves_and_orders_responses() {
+    let (_man, ds, model) = setup();
+    let dim = ds.dim();
+    let n = 100;
+    let imgs = ds.images_f32(0, n);
+    let requests: Vec<Request> = (0..n)
+        .map(|i| Request { id: i as u64, image: imgs[i * dim..(i + 1) * dim].to_vec() })
+        .collect();
+    let cfg = EngineConfig::default();
+    let (resp, metrics) = serve_requests(&model, cfg, requests, 16, 2).unwrap();
+    assert_eq!(resp.len(), n);
+    assert_eq!(metrics.requests, n);
+    for (i, r) in resp.iter().enumerate() {
+        assert_eq!(r.id, i as u64, "responses must be ordered by id");
+        assert!(r.latency_us > 0.0);
+    }
+    assert!(metrics.throughput_rps > 0.0);
+    // predictions must match the offline engine
+    let mut eng = pqs::nn::engine::Engine::new(&model, cfg);
+    let out = eng.forward(&imgs, n).unwrap();
+    for i in 0..n {
+        assert_eq!(resp[i].class, out.argmax(i), "request {i}");
+    }
+}
+
+#[test]
+fn serve_single_thread_matches_parallel() {
+    let (_man, ds, model) = setup();
+    let dim = ds.dim();
+    let n = 40;
+    let imgs = ds.images_f32(0, n);
+    let make_reqs = || -> Vec<Request> {
+        (0..n).map(|i| Request { id: i as u64, image: imgs[i * dim..(i + 1) * dim].to_vec() }).collect()
+    };
+    let cfg = EngineConfig { policy: Policy::Clip, acc_bits: 13, ..Default::default() };
+    let (a, _) = serve_requests(&model, cfg, make_reqs(), 8, 1).unwrap();
+    let (b, _) = serve_requests(&model, cfg, make_reqs(), 8, 4).unwrap();
+    for (x, y) in a.iter().zip(&b) {
+        assert_eq!(x.class, y.class);
+    }
+}

@@ -1,0 +1,138 @@
+//! Engine end-to-end accuracy: the Rust integer engine with a wide
+//! accumulator must reproduce the python fake-quant eval accuracy of the
+//! exported models (they implement the same math), and the paper's
+//! qualitative orderings must hold (sorted >= clip at narrow widths, etc.).
+
+use pqs::accum::Policy;
+use pqs::coordinator::EvalService;
+use pqs::data::Dataset;
+use pqs::formats::manifest::Manifest;
+use pqs::models;
+use pqs::nn::engine::EngineConfig;
+
+fn setup() -> (Manifest, Dataset) {
+    let man = Manifest::load_default().expect("run `make artifacts` first");
+    let entry = man.test_dataset_for("mlp1").unwrap();
+    let ds = Dataset::load(man.dataset_path(&entry.test)).unwrap();
+    (man, ds)
+}
+
+#[test]
+fn engine_matches_python_accuracy_mlp() {
+    let (man, ds) = setup();
+    for exp in ["fig2", "fig3"] {
+        // check up to 3 models per experiment (full eval over 1024 images)
+        for e in man.experiment_models(exp).iter().take(3) {
+            let model = models::load(&man, &e.name).unwrap();
+            let svc = EvalService::new(
+                &model,
+                EngineConfig { policy: Policy::Exact, acc_bits: 32, ..Default::default() },
+            );
+            let out = svc.evaluate(&ds, None).unwrap();
+            assert!(
+                (out.accuracy - e.acc_q).abs() < 0.03,
+                "{}: rust {} vs python {}",
+                e.name,
+                out.accuracy,
+                e.acc_q
+            );
+        }
+    }
+}
+
+#[test]
+fn sorted_beats_clip_at_narrow_widths() {
+    let (man, ds) = setup();
+    let name = &man.experiments["fig2"][0];
+    let model = models::load(&man, name).unwrap();
+    let limit = Some(256);
+    let mut found_gap = false;
+    for p in [14u32, 15, 16] {
+        let acc_sorted = EvalService::new(
+            &model,
+            EngineConfig { policy: Policy::Sorted, acc_bits: p, ..Default::default() },
+        )
+        .evaluate(&ds, limit)
+        .unwrap()
+        .accuracy;
+        let acc_clip = EvalService::new(
+            &model,
+            EngineConfig { policy: Policy::Clip, acc_bits: p, ..Default::default() },
+        )
+        .evaluate(&ds, limit)
+        .unwrap()
+        .accuracy;
+        assert!(
+            acc_sorted >= acc_clip - 0.02,
+            "p={p}: sorted {acc_sorted} << clip {acc_clip}"
+        );
+        if acc_sorted > acc_clip + 0.05 {
+            found_gap = true;
+        }
+    }
+    assert!(found_gap, "sorting never helped — suspicious");
+}
+
+#[test]
+fn wide_accumulator_policies_all_agree() {
+    let (man, ds) = setup();
+    let name = &man.experiments["fig2"][0];
+    let model = models::load(&man, name).unwrap();
+    let mut accs = Vec::new();
+    for policy in [Policy::Exact, Policy::Clip, Policy::Sorted, Policy::Sorted1, Policy::Wrap] {
+        let acc = EvalService::new(
+            &model,
+            EngineConfig { policy, acc_bits: 32, ..Default::default() },
+        )
+        .evaluate(&ds, Some(256))
+        .unwrap()
+        .accuracy;
+        accs.push((policy, acc));
+    }
+    let first = accs[0].1;
+    for (p, a) in &accs {
+        assert!((a - first).abs() < 1e-9, "{p:?}: {a} vs {first}");
+    }
+}
+
+#[test]
+fn stats_consistency_transient_plus_persistent_le_naive() {
+    let (man, ds) = setup();
+    let name = &man.experiments["fig2"][0];
+    let model = models::load(&man, name).unwrap();
+    for p in [13u32, 15, 17] {
+        let out = EvalService::new(
+            &model,
+            EngineConfig { policy: Policy::Clip, acc_bits: p, collect_stats: true, tile: 0 },
+        )
+        .evaluate(&ds, Some(128))
+        .unwrap();
+        let st = out.report.total();
+        assert!(st.transient_dots <= st.naive_event_dots);
+        // every transient dot has naive events by definition; persistent
+        // dots may or may not (they can overflow only at the very end)
+        assert!(st.dots > 0);
+        assert_eq!(st.dots % 10, 0, "mlp1 emits 10 dots per sample");
+    }
+}
+
+#[test]
+fn cnn_engine_smoke() {
+    let man = Manifest::load_default().expect("manifest");
+    let entry = man.test_dataset_for("resnet_tiny").unwrap();
+    let ds = Dataset::load(man.dataset_path(&entry.test)).unwrap();
+    let e = man
+        .experiment_models("fig4")
+        .into_iter()
+        .find(|e| e.arch == "resnet_tiny" && e.schedule == "pq")
+        .expect("resnet pq model");
+    let model = models::load(&man, &e.name).unwrap();
+    let svc = EvalService::new(
+        &model,
+        EngineConfig { policy: Policy::Exact, acc_bits: 32, ..Default::default() },
+    );
+    let out = svc.evaluate(&ds, Some(64)).unwrap();
+    // must be far above chance and near the python accuracy
+    assert!(out.accuracy > 0.3, "cnn accuracy {}", out.accuracy);
+    assert!((out.accuracy - e.acc_q).abs() < 0.15, "rust {} python {}", out.accuracy, e.acc_q);
+}

@@ -1,0 +1,50 @@
+//! Cross-layer bit-exactness: the Rust dot-product engine must reproduce
+//! the NumPy reference (`ref.py`) on every exported golden case, for every
+//! policy and accumulator width. This is the L1<->L3 numeric contract.
+
+use pqs::accum::Policy;
+use pqs::dot::{classify, DotEngine};
+use pqs::formats::goldens::load_dot_goldens;
+
+fn goldens_path() -> std::path::PathBuf {
+    pqs::artifacts_dir().join("goldens/dot_goldens.json")
+}
+
+#[test]
+fn dot_goldens_bit_exact() {
+    let cases = load_dot_goldens(goldens_path()).expect("run `make artifacts` first");
+    assert!(!cases.is_empty());
+    let mut eng = DotEngine::new();
+    let mut checked = 0usize;
+    for (ci, c) in cases.iter().enumerate() {
+        let prods: Vec<i32> = c.w.iter().zip(&c.x).map(|(&w, &x)| w * x).collect();
+        for (p, table) in &c.results {
+            for (policy_name, want_v, want_e) in table {
+                let policy = Policy::from_name(policy_name).expect("policy name");
+                let (v, e) = eng.dot(&prods, *p, policy);
+                assert_eq!(
+                    (v, e as i64),
+                    (*want_v, *want_e),
+                    "case {ci} policy {policy_name} p={p}"
+                );
+                checked += 1;
+            }
+        }
+    }
+    assert!(checked > 100, "only {checked} golden checks ran");
+}
+
+#[test]
+fn classification_goldens_bit_exact() {
+    let cases = load_dot_goldens(goldens_path()).expect("run `make artifacts` first");
+    for (ci, c) in cases.iter().enumerate() {
+        let prods: Vec<i32> = c.w.iter().zip(&c.x).map(|(&w, &x)| w * x).collect();
+        for (p, (exact, persistent, naive_events, transient)) in &c.classify {
+            let cls = classify(&prods, *p);
+            assert_eq!(cls.exact, *exact, "case {ci} p={p} exact");
+            assert_eq!(cls.persistent, *persistent, "case {ci} p={p} persistent");
+            assert_eq!(cls.naive_events as i64, *naive_events, "case {ci} p={p} events");
+            assert_eq!(cls.transient, *transient, "case {ci} p={p} transient");
+        }
+    }
+}

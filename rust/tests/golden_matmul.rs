@@ -1,0 +1,38 @@
+//! Pallas-kernel parity: the matmul goldens were produced *by the Layer-1
+//! Pallas kernel* (`pqs_matmul.py`, interpret=True); the Rust engine must
+//! match them element-for-element, proving L1 and L3 implement identical
+//! integer semantics.
+
+use pqs::accum::Policy;
+use pqs::dot::DotEngine;
+use pqs::formats::goldens::load_matmul_goldens;
+
+#[test]
+fn matmul_goldens_bit_exact() {
+    let path = pqs::artifacts_dir().join("goldens/matmul_goldens.json");
+    let cases = load_matmul_goldens(path).expect("run `make artifacts` first");
+    assert!(!cases.is_empty());
+    let mut eng = DotEngine::new();
+    for (ci, c) in cases.iter().enumerate() {
+        let policy = Policy::from_name(&c.policy).expect("policy");
+        for i in 0..c.m {
+            for j in 0..c.n {
+                let prods: Vec<i32> =
+                    (0..c.k).map(|kk| c.x[i * c.k + kk] * c.w[kk * c.n + j]).collect();
+                let (v, e) = eng.dot(&prods, c.p, policy);
+                assert_eq!(
+                    v,
+                    c.y[i * c.n + j],
+                    "case {ci} ({},{}) policy {} p {}",
+                    i, j, c.policy, c.p
+                );
+                assert_eq!(
+                    e as i64,
+                    c.ovf[i * c.n + j],
+                    "case {ci} events ({},{}) policy {} p {}",
+                    i, j, c.policy, c.p
+                );
+            }
+        }
+    }
+}

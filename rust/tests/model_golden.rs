@@ -1,0 +1,59 @@
+//! End-to-end model contract: quantization of real test images, exact
+//! integer accumulators, offset corrections and final logits of the mlp1
+//! model must match the python export bit-for-bit (integers) / closely
+//! (floats).
+
+use pqs::data::Dataset;
+use pqs::formats::goldens::load_model_golden;
+use pqs::formats::manifest::Manifest;
+use pqs::formats::pqsw::PqswModel;
+use pqs::quant::{quantize_centered_slice_into, QParams};
+
+#[test]
+fn model_golden_quantization_and_accumulators() {
+    let dir = pqs::artifacts_dir();
+    let g = load_model_golden(dir.join("goldens/model_golden.json")).expect("model golden");
+    let man = Manifest::load_dir(&dir).expect("manifest");
+    let model_name = g.model.trim_end_matches(".pqsw");
+    let model = PqswModel::load(man.model_path(model_name)).expect("model");
+    let (_, fc) = model.q_layers().next().expect("q layer");
+
+    // 1. input quantization must be bit-exact vs numpy
+    let entry = man.test_dataset_for(&model.arch).unwrap();
+    let ds = Dataset::load(man.dataset_path(&entry.test)).unwrap();
+    let imgs = ds.images_f32(0, g.batch);
+    let qp = QParams { scale: fc.x_scale, offset: fc.x_offset, bits: model.abits };
+    let mut xq = Vec::new();
+    quantize_centered_slice_into(&imgs, &qp, &mut xq);
+    assert_eq!(xq.len(), g.xq.len());
+    let mismatches = xq.iter().zip(&g.xq).filter(|(a, b)| a != b).count();
+    assert_eq!(mismatches, 0, "quantized inputs differ from numpy in {mismatches} places");
+
+    // 2. exact integer accumulators
+    for b in 0..g.batch {
+        for o in 0..g.oc {
+            let acc: i64 = (0..g.ic)
+                .map(|k| xq[b * g.ic + k] as i64 * fc.wq[o * g.ic + k] as i64)
+                .sum();
+            assert_eq!(acc, g.acc_exact[b * g.oc + o], "acc ({b},{o})");
+        }
+    }
+
+    // 3. final logits via the engine (wide accumulator)
+    use pqs::accum::Policy;
+    use pqs::nn::engine::{Engine, EngineConfig};
+    let mut eng = Engine::new(
+        &model,
+        EngineConfig { policy: Policy::Exact, acc_bits: 32, ..Default::default() },
+    );
+    let out = eng.forward(&imgs, g.batch).unwrap();
+    // mlp1 graph ends with relu(logits); golden applied relu too
+    for i in 0..g.batch * g.oc {
+        let want = g.logits[i] as f32;
+        let got = out.logits[i];
+        assert!(
+            (want - got).abs() <= 1e-4 * want.abs().max(1.0),
+            "logit {i}: {got} vs {want}"
+        );
+    }
+}

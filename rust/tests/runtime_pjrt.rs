@@ -1,0 +1,113 @@
+//! PJRT runtime integration: load the AOT HLO artifacts (lowered from JAX +
+//! the Pallas kernel by `python/compile/aot.py`) and check their numerics
+//! against the bit-accurate Rust engine.
+
+use pqs::accum::Policy;
+use pqs::data::Dataset;
+use pqs::formats::manifest::Manifest;
+use pqs::models;
+use pqs::nn::engine::{Engine, EngineConfig};
+use pqs::runtime::Runtime;
+
+#[test]
+fn pallas_kernel_hlo_matches_engine() {
+    let man = Manifest::load_default().expect("run `make artifacts` first");
+    let rt = Runtime::cpu().expect("pjrt client");
+    let exe = rt.load_hlo(man.dir.join("model.hlo.txt")).expect("compile model.hlo.txt");
+
+    let entry = man.test_dataset_for("mlp1").unwrap();
+    let ds = Dataset::load(man.dataset_path(&entry.test)).unwrap();
+    let imgs = ds.images_f32(0, 8);
+    let outs = exe.run_f32(&imgs, &[8, 1, 28, 28]).expect("execute");
+    assert_eq!(outs.len(), 2, "expected (logits, ovf_total)");
+    let logits_hlo = &outs[0];
+    assert_eq!(logits_hlo.len(), 80);
+
+    // engine reference: sorted1, p=16 (the configuration baked by aot.py)
+    let name = &man.experiments["fig2"][0];
+    let model = models::load(&man, name).unwrap();
+    let mut eng = Engine::new(
+        &model,
+        EngineConfig { policy: Policy::Sorted1, acc_bits: 16, ..Default::default() },
+    );
+    let out = eng.forward(&imgs, 8).unwrap();
+    for i in 0..80 {
+        let (a, b) = (logits_hlo[i], out.logits[i]);
+        assert!(
+            (a - b).abs() <= 1e-3 * a.abs().max(1.0),
+            "logit {i}: hlo {a} vs engine {b}"
+        );
+    }
+    // same top-1 predictions
+    for i in 0..8 {
+        let row = &logits_hlo[i * 10..(i + 1) * 10];
+        let top_hlo = row
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap()
+            .0;
+        assert_eq!(top_hlo, out.argmax(i), "sample {i}");
+    }
+}
+
+#[test]
+fn fp32_hlo_baseline_matches_engine_exact() {
+    let man = Manifest::load_default().expect("manifest");
+    let rt = Runtime::cpu().expect("pjrt client");
+    // mlp1 fp32 graph exported per hlo/index.json
+    let name = &man.experiments["fig2"][0];
+    let hlo = man.dir.join(format!("hlo/{name}_fp32.hlo.txt"));
+    let exe = rt.load_hlo(&hlo).expect("compile fp32 hlo");
+
+    let entry = man.test_dataset_for("mlp1").unwrap();
+    let ds = Dataset::load(man.dataset_path(&entry.test)).unwrap();
+    let imgs = ds.images_f32(0, 8);
+    let outs = exe.run_f32(&imgs, &[8, 1, 28, 28]).expect("execute");
+    let logits_hlo = &outs[0];
+
+    // The fp32 HLO runs the model without fake-quant; the engine's Exact
+    // path runs the quantized model, so only top-1 agreement is expected.
+    let model = models::load(&man, name).unwrap();
+    let mut eng = Engine::new(
+        &model,
+        EngineConfig { policy: Policy::Exact, acc_bits: 32, ..Default::default() },
+    );
+    let out = eng.forward(&imgs, 8).unwrap();
+    let mut agree = 0;
+    for i in 0..8 {
+        let row = &logits_hlo[i * 10..(i + 1) * 10];
+        let top = row
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap()
+            .0;
+        if top == out.argmax(i) {
+            agree += 1;
+        }
+    }
+    assert!(agree >= 6, "only {agree}/8 top-1 agreements between fp32 HLO and engine");
+}
+
+#[test]
+fn cnn_fp32_hlo_runs() {
+    let man = Manifest::load_default().expect("manifest");
+    let rt = Runtime::cpu().expect("pjrt client");
+    let cnns: Vec<&String> = man.experiments["fp32"]
+        .iter()
+        .filter(|n| !n.starts_with("mlp"))
+        .collect();
+    assert!(!cnns.is_empty());
+    let name = cnns[0];
+    let hlo = man.dir.join(format!("hlo/{name}_fp32.hlo.txt"));
+    let exe = rt.load_hlo(&hlo).expect("compile cnn hlo");
+    let entry = man.test_dataset_for("resnet_tiny").unwrap();
+    let ds = Dataset::load(man.dataset_path(&entry.test)).unwrap();
+    let imgs = ds.images_f32(0, 8);
+    let outs = exe
+        .run_f32(&imgs, &[8, ds.c, ds.h, ds.w])
+        .expect("execute cnn");
+    assert_eq!(outs[0].len(), 80);
+    assert!(outs[0].iter().all(|v| v.is_finite()));
+}
