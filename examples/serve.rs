@@ -1,87 +1,192 @@
-//! End-to-end driver (DESIGN.md §deliverables): batched online inference
-//! through the full stack, on a real workload.
+//! End-to-end serving driver (DESIGN.md §deliverables): batched online
+//! inference through the persistent `Server` runtime.
 //!
-//! * loads a trained, pruned, quantized model (`.pqsw` artifact);
-//! * serves 1024 classification requests through the coordinator's dynamic
-//!   batcher with the PQS sorted 16-bit accumulation engine, reporting
-//!   latency percentiles + throughput + accuracy;
-//! * runs the same batch through the AOT-compiled HLO (Layer-1 Pallas
-//!   kernel, PJRT runtime) and cross-checks predictions — proving all
-//!   three layers compose.
+//! Three phases:
+//! 1. **serve** — classification requests flow through the bounded queue
+//!    and the streaming dynamic batcher (per-request latency percentiles,
+//!    accuracy when real artifacts/labels are available);
+//! 2. **soak** — a 10k-synthetic-request flood through the bounded queue
+//!    (backpressure + dynamic batching under load, no panics, per-request
+//!    latency percentiles);
+//! 3. **PJRT cross-check** — the same batch through the AOT-compiled HLO
+//!    (Layer-1 Pallas kernel), proving all three layers compose. Skipped
+//!    gracefully when the build has no PJRT backend or artifacts are
+//!    absent.
+//!
+//! Works with or without artifacts: without them, a synthetic model keeps
+//! the serving-path demonstration (and the soak) fully runnable.
 //!
 //!     cargo run --release --offline --example serve
+//!     (flags: --threads N --max-batch B --queue-cap Q --soak N)
+
+use std::time::Duration;
 
 use pqs::accum::Policy;
-use pqs::coordinator::{serve_requests, Request};
+use pqs::coordinator::{Server, ServerConfig, SubmitError};
 use pqs::data::Dataset;
 use pqs::formats::manifest::Manifest;
 use pqs::models;
 use pqs::nn::engine::{Engine, EngineConfig};
 use pqs::runtime::Runtime;
+use pqs::util::cli::Args;
+use pqs::util::rng::Pcg32;
 
 fn main() -> anyhow::Result<()> {
-    let man = Manifest::load_default()?;
-    let name = man.experiments["fig2"][0].clone(); // mlp1, 8/8
-    let model = models::load(&man, &name)?;
-    let ds = Dataset::load(man.dataset_path(&man.test_dataset_for(&model.arch)?.test))?;
-    println!("serving model: {}", models::describe(&model));
-
-    // ---- engine path: dynamic batching over the evaluation coordinator --
-    let n = ds.n.min(1024);
-    let dim = ds.dim();
-    let imgs = ds.images_f32(0, n);
-    let requests: Vec<Request> = (0..n)
-        .map(|i| Request { id: i as u64, image: imgs[i * dim..(i + 1) * dim].to_vec() })
-        .collect();
+    let args = Args::from_env();
+    let threads = args.get_usize("threads", pqs::util::pool::default_threads());
+    let max_batch = args.get_usize("max-batch", 32);
+    let queue_cap = args.get_usize("queue-cap", 512);
+    let soak_n = args.get_usize("soak", 10_000);
     let cfg = EngineConfig { policy: Policy::Sorted, acc_bits: 16, ..Default::default() };
-    let threads = pqs::util::pool::default_threads();
-    let (resp, metrics) = serve_requests(&model, cfg, requests, 32, threads)?;
-    let correct = resp.iter().filter(|r| r.class == ds.labels[r.id as usize] as usize).count();
-    println!("\n-- engine path (sorted, 16-bit accumulator, batch<=32, {threads} threads) --");
-    metrics.print();
-    println!("accuracy {:.3} over {} requests", correct as f64 / n as f64, n);
+    let scfg = ServerConfig {
+        threads,
+        max_batch,
+        queue_cap,
+        linger: Duration::from_micros(200),
+        engine_threads: 1,
+    };
 
-    // ---- PJRT path: the AOT artifact built around the Pallas kernel -----
-    println!("\n-- PJRT path (artifacts/model.hlo.txt: Pallas sorted1 kernel, p=16) --");
-    let rt = Runtime::cpu()?;
-    let exe = rt.load_hlo(man.dir.join("model.hlo.txt"))?;
-    let batch = 8;
-    let mut agree = 0usize;
-    let mut served = 0usize;
-    let mut engine = Engine::new(
-        &model,
-        EngineConfig { policy: Policy::Sorted1, acc_bits: 16, ..Default::default() },
+    // ---- load real artifacts when present, else a synthetic model -------
+    let artifacts = Manifest::load_default().ok();
+    let (model, ds) = match &artifacts {
+        Some(man) => {
+            let name = man.experiments["fig2"][0].clone(); // mlp1, 8/8
+            let model = models::load(man, &name)?;
+            let ds = Dataset::load(man.dataset_path(&man.test_dataset_for(&model.arch)?.test))?;
+            (model, Some(ds))
+        }
+        None => {
+            println!("(artifacts not found — using a synthetic model; run `make artifacts` for the real one)");
+            (models::synthetic_linear(784, 10), None)
+        }
+    };
+    println!("serving model: {}", models::describe(&model));
+    let dim: usize = model.input_shape.iter().product();
+
+    // ---- phase 1: serve requests through the persistent runtime ---------
+    let n = ds.as_ref().map(|d| d.n.min(1024)).unwrap_or(1024);
+    let images: Vec<f32> = match &ds {
+        Some(d) => d.images_f32(0, n),
+        None => {
+            let mut rng = Pcg32::new(0x5EED);
+            (0..n * dim).map(|_| rng.f32()).collect()
+        }
+    };
+    let srv = Server::start(&model, cfg, scfg);
+    let pending: Vec<_> = (0..n)
+        .map(|i| {
+            srv.submit(i as u64, images[i * dim..(i + 1) * dim].to_vec())
+                .expect("server accepts while open")
+        })
+        .collect();
+    let mut classes = vec![0usize; n];
+    for p in pending {
+        let r = p.wait();
+        classes[r.id as usize] = r.result.expect("well-formed request");
+    }
+    let metrics = srv.shutdown();
+    println!(
+        "\n-- engine path (sorted, 16-bit accumulator, batch<={max_batch}, {threads} workers) --"
     );
-    let t0 = std::time::Instant::now();
-    let mut hlo_ovf_total = 0f32;
-    for b in 0..(n / batch).min(16) {
-        let chunk = ds.images_f32(b * batch, batch);
-        let outs = exe.run_f32(&chunk, &[batch, ds.c, ds.h, ds.w])?;
-        hlo_ovf_total += outs[1][0];
-        let eng_out = engine.forward(&chunk, batch)?;
-        for i in 0..batch {
-            let row = &outs[0][i * 10..(i + 1) * 10];
-            let top = row
-                .iter()
-                .enumerate()
-                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-                .unwrap()
-                .0;
-            if top == eng_out.argmax(i) {
-                agree += 1;
+    metrics.print();
+    if let Some(d) = &ds {
+        let correct = (0..n).filter(|&i| classes[i] == d.labels[i] as usize).count();
+        println!("accuracy {:.3} over {} requests", correct as f64 / n as f64, n);
+    } else {
+        // no labels: verify against the offline engine instead
+        let mut eng = Engine::new(&model, cfg);
+        let out = eng.forward(&images, n)?;
+        let agree = (0..n).filter(|&i| classes[i] == out.argmax(i)).count();
+        assert_eq!(agree, n, "server must match the offline engine");
+        println!("server<->offline-engine agreement: {agree}/{n}");
+    }
+
+    // ---- phase 2: 10k-synthetic-request soak through the bounded queue --
+    println!("\n-- soak: {soak_n} synthetic requests (queue_cap {queue_cap}) --");
+    let srv = Server::start(&model, cfg, scfg);
+    let mut rng = Pcg32::new(0xB10B);
+    let base: Vec<Vec<f32>> =
+        (0..64).map(|_| (0..dim).map(|_| rng.f32()).collect()).collect();
+    let mut pending = Vec::with_capacity(soak_n);
+    let mut shed = 0usize;
+    for i in 0..soak_n {
+        let img = base[i % base.len()].clone();
+        // fast path first; fall back to blocking submit under backpressure
+        match srv.try_submit(i as u64, img) {
+            Ok(p) => pending.push(p),
+            Err(SubmitError::Full(img)) => {
+                shed += 1;
+                match srv.submit(i as u64, img) {
+                    Ok(p) => pending.push(p),
+                    Err(_) => unreachable!("server is open"),
+                }
             }
-            served += 1;
+            Err(SubmitError::Closed(_)) => unreachable!("server is open"),
         }
     }
-    let dt = t0.elapsed().as_secs_f64();
+    let mut ok = 0usize;
+    for p in pending {
+        if p.wait().result.is_ok() {
+            ok += 1;
+        }
+    }
+    let metrics = srv.shutdown();
+    metrics.print();
     println!(
-        "PJRT served {served} images in {:.1} ms ({:.0} img/s incl. engine cross-check)",
-        dt * 1e3,
-        served as f64 / dt
+        "soak complete: {ok}/{soak_n} ok, {shed} submissions hit backpressure, no panics"
     );
-    println!("engine<->HLO top-1 agreement: {agree}/{served}");
-    println!("HLO-reported overflow events (16-bit sorted1): {hlo_ovf_total:.0}");
-    assert_eq!(agree, served, "layers disagree!");
-    println!("\nall three layers agree — stack verified.");
+    assert_eq!(ok, soak_n, "soak must answer every request");
+
+    // ---- phase 3: PJRT path (AOT artifact around the Pallas kernel) -----
+    println!("\n-- PJRT path (artifacts/model.hlo.txt: Pallas sorted1 kernel, p=16) --");
+    match (&artifacts, Runtime::available()) {
+        (Some(man), true) => {
+            let ds = ds.as_ref().expect("artifacts imply dataset");
+            let rt = Runtime::cpu()?;
+            let exe = rt.load_hlo(man.dir.join("model.hlo.txt"))?;
+            let batch = 8;
+            let mut agree = 0usize;
+            let mut served = 0usize;
+            let mut engine = Engine::new(
+                &model,
+                EngineConfig { policy: Policy::Sorted1, acc_bits: 16, ..Default::default() },
+            );
+            let t0 = std::time::Instant::now();
+            let mut hlo_ovf_total = 0f32;
+            for b in 0..(n / batch).min(16) {
+                let chunk = ds.images_f32(b * batch, batch);
+                let outs = exe.run_f32(&chunk, &[batch, ds.c, ds.h, ds.w])?;
+                hlo_ovf_total += outs[1][0];
+                let eng_out = engine.forward(&chunk, batch)?;
+                for i in 0..batch {
+                    let row = &outs[0][i * 10..(i + 1) * 10];
+                    let top = row
+                        .iter()
+                        .enumerate()
+                        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                        .unwrap()
+                        .0;
+                    if top == eng_out.argmax(i) {
+                        agree += 1;
+                    }
+                    served += 1;
+                }
+            }
+            let dt = t0.elapsed().as_secs_f64();
+            println!(
+                "PJRT served {served} images in {:.1} ms ({:.0} img/s incl. engine cross-check)",
+                dt * 1e3,
+                served as f64 / dt
+            );
+            println!("engine<->HLO top-1 agreement: {agree}/{served}");
+            println!("HLO-reported overflow events (16-bit sorted1): {hlo_ovf_total:.0}");
+            assert_eq!(agree, served, "layers disagree!");
+            println!("\nall three layers agree — stack verified.");
+        }
+        (None, _) => println!("skipped: artifacts not built (run `make artifacts`)"),
+        (_, false) => {
+            println!("skipped: built without the `pjrt` feature (xla crate unavailable offline)")
+        }
+    }
     Ok(())
 }

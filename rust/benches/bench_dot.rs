@@ -81,4 +81,44 @@ fn main() {
         })
         .print();
     }
+
+    // counting/radix pairing fast path vs the seed's comparison sorts
+    // (acceptance: adaptive pairing no slower than comparison at K <= 1024)
+    println!("\n# sorted1 pairing: adaptive counting/radix vs comparison sorts");
+    for &(k, lo, hi, label) in &[
+        (256usize, -50i64, 50i64, "narrow (counting)"),
+        (1024, -50, 50, "narrow (counting)"),
+        (256, -32385, 32385, "wide 15-bit (radix)"),
+        (1024, -32385, 32385, "wide 15-bit (radix)"),
+        (4096, -32385, 32385, "wide 15-bit (radix)"),
+    ] {
+        let prods: Vec<i32> =
+            (0..k).map(|_| rng.range_i64(lo, hi) as i32).collect();
+        let mut e = DotEngine::new();
+        bench(&format!("sorted1 adaptive   K={k} {label}"), || {
+            black_box(sorted1_dot(&mut e, black_box(&prods), 16));
+        })
+        .print_throughput(k as f64, "prod/s");
+        bench(&format!("sorted1 comparison K={k} {label}"), || {
+            black_box(comparison_sorted1(black_box(&prods), 16));
+        })
+        .print_throughput(k as f64, "prod/s");
+    }
+}
+
+/// The seed implementation: comparison-sort pairing + clipped accumulation
+/// (kept here as the baseline the adaptive fast path is measured against).
+fn comparison_sorted1(prods: &[i32], p: u32) -> (i64, u32) {
+    let mut pos: Vec<i32> = prods.iter().copied().filter(|&v| v > 0).collect();
+    let mut neg: Vec<i32> = prods.iter().copied().filter(|&v| v < 0).collect();
+    pos.sort_unstable_by(|a, b| b.cmp(a));
+    neg.sort_unstable();
+    let m = pos.len().min(neg.len());
+    let mut seq: Vec<i32> = (0..m).map(|i| pos[i] + neg[i]).collect();
+    if pos.len() > m {
+        seq.extend_from_slice(&pos[m..]);
+    } else {
+        seq.extend_from_slice(&neg[m..]);
+    }
+    accum::clip_accumulate(&seq, p)
 }

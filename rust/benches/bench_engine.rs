@@ -1,5 +1,7 @@
 //! End-to-end engine throughput per policy/accumulator configuration, on
-//! the real artifacts (paper §5 evaluation workloads).
+//! the real artifacts (paper §5 evaluation workloads) when present, plus a
+//! multi-thread forward-scaling section that runs on a synthetic model so
+//! the serving-path speedup is measurable on any checkout.
 //!
 //!     cargo bench --offline --bench bench_engine
 
@@ -9,16 +11,15 @@ use pqs::formats::manifest::Manifest;
 use pqs::models;
 use pqs::nn::engine::{Engine, EngineConfig};
 use pqs::util::bench::{bench_cfg, black_box};
+use pqs::util::pool;
+use pqs::util::rng::Pcg32;
 
-fn main() -> anyhow::Result<()> {
-    let man = Manifest::load_default()?;
-    println!("# bench_engine — images/s through the bit-accurate engine\n");
-
+fn real_model_benches(man: &Manifest) -> anyhow::Result<()> {
     for (model_name, batch) in [
         ("mlp1_pq_s000_w8a8", 64usize),
         ("mlp2_pq_s875_w8a8_kfull", 64),
     ] {
-        let model = models::load(&man, model_name)?;
+        let model = models::load(man, model_name)?;
         let ds = Dataset::load(man.dataset_path(&man.test_dataset_for(&model.arch)?.test))?;
         let imgs = ds.images_f32(0, batch);
         for (policy, stats) in [
@@ -43,6 +44,10 @@ fn main() -> anyhow::Result<()> {
             .print_throughput(batch as f64, "img/s");
         }
         println!();
+
+        // multi-thread forward on the real model
+        threads_sweep(&model, &imgs, batch, Policy::Sorted1);
+        println!();
     }
 
     // CNN engine (heavier): one config each
@@ -51,7 +56,7 @@ fn main() -> anyhow::Result<()> {
         .into_iter()
         .find(|e| e.arch == "resnet_tiny" && e.schedule == "pq" && e.target_sparsity == 0.75)
     {
-        let model = models::load(&man, &e.name)?;
+        let model = models::load(man, &e.name)?;
         let ds = Dataset::load(man.dataset_path(&man.test_dataset_for(&model.arch)?.test))?;
         let batch = 8;
         let imgs = ds.images_f32(0, batch);
@@ -65,6 +70,74 @@ fn main() -> anyhow::Result<()> {
             })
             .print_throughput(batch as f64, "img/s");
         }
+        println!();
+        threads_sweep(&model, &imgs, batch, Policy::Sorted1);
     }
+    Ok(())
+}
+
+/// Forward throughput vs intra-forward thread count (target: >=1.5x at
+/// T >= 4 over T = 1 on multi-core hosts).
+fn threads_sweep(
+    model: &pqs::formats::pqsw::PqswModel,
+    imgs: &[f32],
+    batch: usize,
+    policy: Policy,
+) {
+    println!("# multi-thread forward scaling ({}, {})", model.name, policy.name());
+    let hw = pool::default_threads();
+    let mut sweep = vec![1usize, 2, 4];
+    if !sweep.contains(&hw) {
+        sweep.push(hw);
+    }
+    let mut base_ns = 0.0f64;
+    for &t in sweep.iter().filter(|&&t| t <= hw.max(4)) {
+        let mut eng = Engine::new(
+            model,
+            EngineConfig { policy, acc_bits: 16, ..Default::default() },
+        )
+        .with_threads(t);
+        let r = bench_cfg(&format!("forward {} T={t}", model.name), 1, 5, &mut || {
+            black_box(eng.forward(black_box(imgs), batch).unwrap());
+        });
+        if t == 1 {
+            base_ns = r.mean_ns;
+        }
+        let speedup = if r.mean_ns > 0.0 { base_ns / r.mean_ns } else { 0.0 };
+        println!(
+            "{:<48} {:>10.2} img/s   speedup vs T=1: {speedup:.2}x",
+            format!("forward T={t}"),
+            batch as f64 / (r.mean_ns / 1e9),
+        );
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    println!("# bench_engine — images/s through the bit-accurate engine\n");
+    match Manifest::load_default() {
+        Ok(man) => real_model_benches(&man)?,
+        Err(_) => {
+            println!("(artifacts not found — running the synthetic-model sections only)\n");
+        }
+    }
+
+    // synthetic model: always available, sized like mlp1 but wider so the
+    // parallel path has work per row
+    let model = models::synthetic_linear(784, 128);
+    let batch = 64;
+    let mut rng = Pcg32::new(0xBE7C);
+    let imgs: Vec<f32> = (0..batch * 784).map(|_| rng.f32()).collect();
+    for policy in [Policy::Sorted, Policy::Sorted1, Policy::Clip] {
+        let mut eng = Engine::new(
+            &model,
+            EngineConfig { policy, acc_bits: 16, ..Default::default() },
+        );
+        bench_cfg(&format!("synthetic {}", policy.name()), 1, 5, &mut || {
+            black_box(eng.forward(black_box(&imgs), batch).unwrap());
+        })
+        .print_throughput(batch as f64, "img/s");
+    }
+    println!();
+    threads_sweep(&model, &imgs, batch, Policy::Sorted1);
     Ok(())
 }

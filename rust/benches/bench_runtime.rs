@@ -13,7 +13,17 @@ use pqs::runtime::Runtime;
 use pqs::util::bench::{bench_cfg, black_box};
 
 fn main() -> anyhow::Result<()> {
-    let man = Manifest::load_default()?;
+    if !Runtime::available() {
+        println!("bench_runtime skipped: built without the `pjrt` feature");
+        return Ok(());
+    }
+    let man = match Manifest::load_default() {
+        Ok(m) => m,
+        Err(e) => {
+            println!("bench_runtime skipped: artifacts not built ({e:#})");
+            return Ok(());
+        }
+    };
     let rt = Runtime::cpu()?;
     println!("# bench_runtime — PJRT vs engine (mlp1, batch 8)\n");
 

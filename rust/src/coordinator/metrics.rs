@@ -2,23 +2,59 @@
 
 use crate::util::stats;
 
-/// Streaming latency recorder (microseconds).
+/// Reservoir size: memory stays bounded (~512 KiB of f64) no matter how
+/// long the server runs; percentiles beyond this many samples are computed
+/// over a uniform reservoir (Algorithm R), mean/max/count stay exact.
+const RESERVOIR_CAP: usize = 65_536;
+
+#[inline]
+fn splitmix64(mut z: u64) -> u64 {
+    z = z.wrapping_add(0x9E3779B97F4A7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
+/// Streaming latency recorder (microseconds). Bounded memory: a uniform
+/// reservoir of at most [`RESERVOIR_CAP`] samples backs the percentiles,
+/// while count, mean and max are tracked exactly — safe for a long-lived
+/// production `Server` serving unbounded request streams.
 #[derive(Clone, Debug, Default)]
 pub struct LatencyRecorder {
     samples: Vec<f64>,
+    seen: u64,
+    sum: f64,
+    max: f64,
 }
 
 impl LatencyRecorder {
     pub fn record(&mut self, us: f64) {
-        self.samples.push(us);
+        self.sum += us;
+        if us > self.max {
+            self.max = us;
+        }
+        if self.samples.len() < RESERVOIR_CAP {
+            self.samples.push(us);
+        } else {
+            // Algorithm R with a deterministic splitmix64 draw
+            let j = (splitmix64(self.seen) % (self.seen + 1)) as usize;
+            if j < RESERVOIR_CAP {
+                self.samples[j] = us;
+            }
+        }
+        self.seen += 1;
     }
 
     pub fn count(&self) -> usize {
-        self.samples.len()
+        self.seen as usize
     }
 
     pub fn mean_us(&self) -> f64 {
-        stats::mean(&self.samples)
+        if self.seen == 0 {
+            0.0
+        } else {
+            self.sum / self.seen as f64
+        }
     }
 
     pub fn p50_us(&self) -> f64 {
@@ -32,28 +68,66 @@ impl LatencyRecorder {
     pub fn p99_us(&self) -> f64 {
         stats::percentile(&self.samples, 99.0)
     }
+
+    pub fn max_us(&self) -> f64 {
+        self.max
+    }
 }
 
 /// Aggregate serving metrics.
+///
+/// All latency recorders are *per-request*: `latency` is the end-to-end
+/// enqueue→response time each client saw, decomposed into `queue`
+/// (time waiting for batch assembly) and `compute` (the engine invocation
+/// the request was batched into). `requests` counts every response,
+/// including the `errors` answered with a per-request error.
 #[derive(Clone, Debug, Default)]
 pub struct ServeMetrics {
     pub requests: usize,
+    pub errors: usize,
     pub wall_s: f64,
     pub throughput_rps: f64,
+    /// engine invocations (dynamic batches) executed
+    pub batches: usize,
+    /// mean requests per engine invocation
+    pub mean_batch: f64,
+    /// per-request enqueue -> response (every response, incl. errors)
     pub latency: LatencyRecorder,
+    /// per-request enqueue -> batch assembly (queue wait); excludes
+    /// pre-engine rejections, which never waited for an engine
+    pub queue: LatencyRecorder,
+    /// per-request engine invocation wall time; excludes pre-engine
+    /// rejections so it describes real engine invocations only
+    pub compute: LatencyRecorder,
 }
 
 impl ServeMetrics {
     pub fn print(&self) {
         println!(
-            "requests={} wall={:.2}s throughput={:.1} req/s  latency mean={:.1}us p50={:.1}us p95={:.1}us p99={:.1}us",
-            self.requests,
-            self.wall_s,
-            self.throughput_rps,
+            "requests={} errors={} wall={:.2}s throughput={:.1} req/s  batches={} (mean {:.1} req/batch)",
+            self.requests, self.errors, self.wall_s, self.throughput_rps, self.batches,
+            self.mean_batch,
+        );
+        println!(
+            "  e2e latency  mean={:.1}us p50={:.1}us p95={:.1}us p99={:.1}us",
             self.latency.mean_us(),
             self.latency.p50_us(),
             self.latency.p95_us(),
             self.latency.p99_us(),
+        );
+        println!(
+            "  queue wait   mean={:.1}us p50={:.1}us p95={:.1}us p99={:.1}us",
+            self.queue.mean_us(),
+            self.queue.p50_us(),
+            self.queue.p95_us(),
+            self.queue.p99_us(),
+        );
+        println!(
+            "  compute      mean={:.1}us p50={:.1}us p95={:.1}us p99={:.1}us",
+            self.compute.mean_us(),
+            self.compute.p50_us(),
+            self.compute.p95_us(),
+            self.compute.p99_us(),
         );
     }
 }
@@ -72,6 +146,24 @@ mod tests {
         assert!((r.mean_us() - 50.5).abs() < 1e-9);
         assert!(r.p95_us() >= 94.0 && r.p95_us() <= 96.0);
         assert!(r.p99_us() >= 98.0);
+        assert_eq!(r.max_us(), 100.0);
+    }
+
+    #[test]
+    fn recorder_memory_is_bounded() {
+        // far more samples than the reservoir holds: count/mean/max stay
+        // exact, percentiles remain plausible, memory stays capped
+        let mut r = LatencyRecorder::default();
+        let n = RESERVOIR_CAP + 50_000;
+        for i in 0..n {
+            r.record((i % 1000) as f64);
+        }
+        assert_eq!(r.count(), n);
+        assert_eq!(r.max_us(), 999.0);
+        assert!((r.mean_us() - 499.5).abs() < 2.0);
+        assert!(r.samples.len() <= RESERVOIR_CAP);
+        let p50 = r.p50_us();
+        assert!((400.0..=600.0).contains(&p50), "p50 {p50}");
     }
 
     #[test]
@@ -79,5 +171,15 @@ mod tests {
         let r = LatencyRecorder::default();
         assert_eq!(r.mean_us(), 0.0);
         assert_eq!(r.p99_us(), 0.0);
+        assert_eq!(r.max_us(), 0.0);
+    }
+
+    #[test]
+    fn default_metrics_are_empty() {
+        let m = ServeMetrics::default();
+        assert_eq!(m.requests, 0);
+        assert_eq!(m.errors, 0);
+        assert_eq!(m.batches, 0);
+        assert_eq!(m.latency.count(), 0);
     }
 }

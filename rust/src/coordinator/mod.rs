@@ -1,18 +1,20 @@
-//! Threaded evaluation coordinator (DESIGN.md S19).
+//! Threaded evaluation + serving coordinator (DESIGN.md S19).
 //!
 //! The paper's contribution lives at the numeric level, so L3 coordination
-//! is an *evaluation service*: it owns a pool of worker threads, each with
-//! its own `Engine` instance, shards dataset batches across them with a
-//! work queue, applies backpressure via the queue bound, and aggregates
-//! accuracy + overflow statistics and latency metrics.
+//! provides the deployment-shaped fronts around the engine:
 //!
-//! Two front-ends build on it:
+//! * [`server::Server`] — the persistent serving runtime: long-lived
+//!   workers with pinned engines, a bounded request queue with
+//!   backpressure, streaming dynamic batching with a linger window,
+//!   per-request error responses and latency accounting, graceful
+//!   draining shutdown;
 //! * `EvalService::evaluate` — whole-dataset sweeps used by the figure
-//!   harnesses;
-//! * `serve_requests` — a request/response loop used by `examples/serve.rs`
-//!   to demonstrate batched online inference with latency accounting.
+//!   harnesses (shards batches over a scoped pool);
+//! * `serve_requests` — the legacy one-shot request/response front-end,
+//!   kept as a thin compatibility shim over [`server::Server`].
 
 pub mod metrics;
+pub mod server;
 
 use anyhow::Result;
 
@@ -23,6 +25,9 @@ use crate::overflow::OverflowReport;
 use crate::util::pool;
 
 pub use metrics::{LatencyRecorder, ServeMetrics};
+pub use server::{
+    PendingResponse, ServeError, ServeResponse, Server, ServerConfig, SubmitError,
+};
 
 /// Outcome of a coordinated evaluation.
 #[derive(Clone, Debug)]
@@ -119,17 +124,23 @@ pub struct Request {
     pub image: Vec<f32>,
 }
 
-/// Response with latency accounting.
+/// Response of the legacy one-shot front-end.
+///
+/// `latency_us` is the *per-request* enqueue→response time (queue wait +
+/// compute), not the batch's forward time. A malformed request sets
+/// `error` (and `class` is meaningless); it never panics the service.
 #[derive(Clone, Debug)]
 pub struct Response {
     pub id: u64,
     pub class: usize,
     pub latency_us: f64,
+    pub error: Option<String>,
 }
 
-/// Online batched serving: drain `requests` in arrival order, grouping up
-/// to `max_batch` per engine invocation (dynamic batching). Returns
-/// responses + metrics. Single-node, thread-per-worker design.
+/// Online batched serving over the persistent [`Server`]: drain `requests`,
+/// grouping up to `max_batch` per engine invocation (streaming dynamic
+/// batching). Returns per-request responses + metrics. Compatibility shim —
+/// long-running callers should drive [`Server`] directly.
 pub fn serve_requests(
     model: &PqswModel,
     cfg: EngineConfig,
@@ -137,66 +148,52 @@ pub fn serve_requests(
     max_batch: usize,
     threads: usize,
 ) -> Result<(Vec<Response>, ServeMetrics)> {
-    let t_start = std::time::Instant::now();
-    let dim: usize = model.input_shape.iter().product();
-    // group into dynamic batches
-    let mut groups: Vec<Vec<Request>> = Vec::new();
-    let mut cur: Vec<Request> = Vec::new();
+    let threads = threads.max(1);
+    let max_batch = max_batch.max(1);
+    let scfg = ServerConfig {
+        threads,
+        max_batch,
+        // bounded, but roomy enough that the one-shot path is not the
+        // bottleneck; submit() blocks when it fills (backpressure)
+        queue_cap: (threads * max_batch * 4).max(64),
+        linger: std::time::Duration::from_micros(100),
+        engine_threads: 1,
+    };
+    let srv = Server::start(model, cfg, scfg);
+    let mut pending = Vec::with_capacity(requests.len());
+    let mut responses: Vec<Response> = Vec::with_capacity(requests.len());
     for r in requests {
-        assert_eq!(r.image.len(), dim, "request image size");
-        cur.push(r);
-        if cur.len() >= max_batch {
-            groups.push(std::mem::take(&mut cur));
+        match srv.submit(r.id, r.image) {
+            Ok(p) => pending.push(p),
+            Err(SubmitError::Full(_)) | Err(SubmitError::Closed(_)) => {
+                // cannot happen here (submit blocks; we have not closed),
+                // but answer rather than panic if it ever does
+                responses.push(Response {
+                    id: r.id,
+                    class: 0,
+                    latency_us: 0.0,
+                    error: Some("server rejected the request".into()),
+                });
+            }
         }
     }
-    if !cur.is_empty() {
-        groups.push(cur);
+    for p in pending {
+        let sr = p.wait();
+        let (class, error) = match sr.result {
+            Ok(c) => (c, None),
+            Err(e) => (0, Some(e.to_string())),
+        };
+        responses.push(Response { id: sr.id, class, latency_us: sr.latency_us, error });
     }
-
-    let results = pool::parallel_map_init(
-        groups.len(),
-        threads.max(1),
-        || Engine::new(model, cfg),
-        |eng, gi| {
-            let group = &groups[gi];
-            let mut flat = Vec::with_capacity(group.len() * dim);
-            for r in group {
-                flat.extend_from_slice(&r.image);
-            }
-            let t0 = std::time::Instant::now();
-            let out = eng.forward(&flat, group.len()).expect("forward");
-            let us = t0.elapsed().as_secs_f64() * 1e6;
-            group
-                .iter()
-                .enumerate()
-                .map(|(j, r)| Response {
-                    id: r.id,
-                    class: out.argmax(j),
-                    latency_us: us, // batch latency attributed to each member
-                })
-                .collect::<Vec<_>>()
-        },
-    );
-
-    let mut responses: Vec<Response> = results.into_iter().flatten().collect();
+    let metrics = srv.shutdown();
     responses.sort_by_key(|r| r.id);
-    let mut lat = LatencyRecorder::default();
-    for r in &responses {
-        lat.record(r.latency_us);
-    }
-    let wall_s = t_start.elapsed().as_secs_f64();
-    let metrics = ServeMetrics {
-        requests: responses.len(),
-        wall_s,
-        throughput_rps: responses.len() as f64 / wall_s.max(1e-9),
-        latency: lat,
-    };
     Ok((responses, metrics))
 }
 
 #[cfg(test)]
 mod tests {
     // Coordinator paths over real models are exercised in
-    // rust/tests/coordinator.rs (needs artifacts). Metrics unit tests live
-    // in metrics.rs.
+    // rust/tests/coordinator.rs (needs artifacts); artifact-free server
+    // tests over synthetic models live in rust/tests/server.rs. Metrics
+    // unit tests live in metrics.rs.
 }

@@ -1,0 +1,430 @@
+//! Persistent serving runtime (the production-shaped front of the stack).
+//!
+//! `Server` owns a pool of long-lived worker threads, each with a pinned
+//! `Engine` instance built once at startup. Requests enter a bounded FIFO
+//! queue (`submit` blocks for backpressure, `try_submit` fails fast);
+//! workers drain it with *streaming dynamic batching*: grab the first
+//! available request, then keep filling the batch up to `max_batch`,
+//! lingering at most `linger` for stragglers before running the engine.
+//!
+//! Failure semantics are per-request: a malformed request (wrong image
+//! size) or an engine error produces an error *response* on that request's
+//! channel — it never panics a worker and never affects batch-mates.
+//!
+//! Latency accounting is per-request and honest: `queue_us` (enqueue →
+//! batch assembly), `compute_us` (the engine invocation the request rode
+//! in), and `latency_us` (enqueue → response, which is what a client
+//! experiences). `shutdown` closes the queue, lets workers drain every
+//! queued request, joins them, and returns the final [`ServeMetrics`].
+//!
+//! The legacy one-shot front-ends (`coordinator::serve_requests`) are thin
+//! shims over this type.
+
+use std::collections::VecDeque;
+use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::formats::pqsw::PqswModel;
+use crate::nn::engine::{Engine, EngineConfig};
+use crate::util::pool;
+
+use super::metrics::{LatencyRecorder, ServeMetrics};
+
+/// Serving-layer error carried inside a [`ServeResponse`].
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum ServeError {
+    /// The request itself was malformed (e.g. wrong image size).
+    BadRequest(String),
+    /// The engine failed on the batch this request rode in.
+    Internal(String),
+}
+
+impl std::fmt::Display for ServeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ServeError::BadRequest(m) => write!(f, "bad request: {m}"),
+            ServeError::Internal(m) => write!(f, "internal error: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for ServeError {}
+
+/// Why a submission was not accepted. The image is handed back so the
+/// caller can retry or shed load.
+#[derive(Debug)]
+pub enum SubmitError {
+    /// Bounded queue is at capacity (only from [`Server::try_submit`]).
+    Full(Vec<f32>),
+    /// Server is shutting down; no new work is accepted.
+    Closed(Vec<f32>),
+}
+
+/// One served response with per-request latency accounting (microseconds).
+#[derive(Clone, Debug)]
+pub struct ServeResponse {
+    pub id: u64,
+    /// Predicted class, or the per-request serving error.
+    pub result: Result<usize, ServeError>,
+    /// enqueue -> batch assembly (time spent waiting in the queue)
+    pub queue_us: f64,
+    /// wall time of the engine invocation this request was batched into
+    pub compute_us: f64,
+    /// enqueue -> response: what a client actually experiences
+    pub latency_us: f64,
+    /// how many requests shared the engine invocation (0 for pre-engine
+    /// rejections)
+    pub batch_size: usize,
+}
+
+/// Handle to a response that has not been produced yet.
+pub struct PendingResponse {
+    pub id: u64,
+    rx: mpsc::Receiver<ServeResponse>,
+}
+
+impl PendingResponse {
+    /// Block until the response arrives. Never panics: if the serving side
+    /// vanished, an `Internal` error response is synthesized.
+    pub fn wait(self) -> ServeResponse {
+        self.rx.recv().unwrap_or_else(|_| ServeResponse {
+            id: self.id,
+            result: Err(ServeError::Internal("server dropped the request channel".into())),
+            queue_us: 0.0,
+            compute_us: 0.0,
+            latency_us: 0.0,
+            batch_size: 0,
+        })
+    }
+
+    /// Non-blocking poll.
+    pub fn try_wait(&self) -> Option<ServeResponse> {
+        self.rx.try_recv().ok()
+    }
+}
+
+/// Server tuning knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct ServerConfig {
+    /// worker threads, each with a pinned engine
+    pub threads: usize,
+    /// dynamic-batching cap per engine invocation
+    pub max_batch: usize,
+    /// bounded queue capacity (backpressure bound)
+    pub queue_cap: usize,
+    /// how long a worker lingers for stragglers once it holds a partial
+    /// batch (0 = never wait; serve whatever is immediately available)
+    pub linger: Duration,
+    /// intra-forward engine threads per worker (keep 1 unless workers are
+    /// fewer than cores: inter-batch parallelism is usually better)
+    pub engine_threads: usize,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig {
+            threads: pool::default_threads(),
+            max_batch: 32,
+            queue_cap: 1024,
+            linger: Duration::from_micros(200),
+            engine_threads: 1,
+        }
+    }
+}
+
+struct Job {
+    id: u64,
+    image: Vec<f32>,
+    enqueued: Instant,
+    tx: mpsc::Sender<ServeResponse>,
+}
+
+struct QueueState {
+    jobs: VecDeque<Job>,
+    closed: bool,
+}
+
+#[derive(Default)]
+struct MetricsState {
+    completed: usize,
+    errors: usize,
+    batches: usize,
+    batched_requests: usize,
+    latency: LatencyRecorder,
+    queue: LatencyRecorder,
+    compute: LatencyRecorder,
+}
+
+struct Shared {
+    model: PqswModel,
+    cfg: EngineConfig,
+    scfg: ServerConfig,
+    queue: Mutex<QueueState>,
+    not_empty: Condvar,
+    not_full: Condvar,
+    metrics: Mutex<MetricsState>,
+    started: Instant,
+}
+
+/// Persistent worker-pool serving runtime. See the module docs.
+pub struct Server {
+    shared: Arc<Shared>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+#[inline]
+fn dur_us(d: Duration) -> f64 {
+    d.as_secs_f64() * 1e6
+}
+
+impl Server {
+    /// Spawn the worker pool. The model is copied once into the server;
+    /// each worker builds its own pinned `Engine` from it.
+    pub fn start(model: &PqswModel, cfg: EngineConfig, scfg: ServerConfig) -> Server {
+        let scfg = ServerConfig {
+            threads: scfg.threads.max(1),
+            max_batch: scfg.max_batch.max(1),
+            queue_cap: scfg.queue_cap.max(1),
+            engine_threads: scfg.engine_threads.max(1),
+            ..scfg
+        };
+        let shared = Arc::new(Shared {
+            model: model.clone(),
+            cfg,
+            scfg,
+            queue: Mutex::new(QueueState { jobs: VecDeque::new(), closed: false }),
+            not_empty: Condvar::new(),
+            not_full: Condvar::new(),
+            metrics: Mutex::new(MetricsState::default()),
+            started: Instant::now(),
+        });
+        let workers = (0..scfg.threads)
+            .map(|_| {
+                let sh = Arc::clone(&shared);
+                std::thread::spawn(move || worker_loop(&sh))
+            })
+            .collect();
+        Server { shared, workers }
+    }
+
+    /// Enqueue a request, blocking while the bounded queue is full
+    /// (backpressure). Fails only once the server is shutting down.
+    pub fn submit(&self, id: u64, image: Vec<f32>) -> Result<PendingResponse, SubmitError> {
+        let (tx, rx) = mpsc::channel();
+        let mut q = self.shared.queue.lock().unwrap();
+        loop {
+            if q.closed {
+                return Err(SubmitError::Closed(image));
+            }
+            if q.jobs.len() < self.shared.scfg.queue_cap {
+                q.jobs.push_back(Job { id, image, enqueued: Instant::now(), tx });
+                drop(q);
+                self.shared.not_empty.notify_one();
+                return Ok(PendingResponse { id, rx });
+            }
+            q = self.shared.not_full.wait(q).unwrap();
+        }
+    }
+
+    /// Enqueue without blocking; `Full` hands the image back when the
+    /// backpressure bound is hit.
+    pub fn try_submit(&self, id: u64, image: Vec<f32>) -> Result<PendingResponse, SubmitError> {
+        let (tx, rx) = mpsc::channel();
+        let mut q = self.shared.queue.lock().unwrap();
+        if q.closed {
+            return Err(SubmitError::Closed(image));
+        }
+        if q.jobs.len() >= self.shared.scfg.queue_cap {
+            return Err(SubmitError::Full(image));
+        }
+        q.jobs.push_back(Job { id, image, enqueued: Instant::now(), tx });
+        drop(q);
+        self.shared.not_empty.notify_one();
+        Ok(PendingResponse { id, rx })
+    }
+
+    /// Requests currently waiting in the queue.
+    pub fn queue_len(&self) -> usize {
+        self.shared.queue.lock().unwrap().jobs.len()
+    }
+
+    /// Snapshot of the serving metrics so far.
+    pub fn metrics(&self) -> ServeMetrics {
+        snapshot(&self.shared)
+    }
+
+    /// Graceful shutdown: stop accepting work, let workers drain every
+    /// queued request, join them, and return the final metrics.
+    pub fn shutdown(mut self) -> ServeMetrics {
+        self.close_and_join();
+        snapshot(&self.shared)
+    }
+
+    fn close_and_join(&mut self) {
+        {
+            let mut q = self.shared.queue.lock().unwrap();
+            q.closed = true;
+        }
+        self.shared.not_empty.notify_all();
+        self.shared.not_full.notify_all();
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.close_and_join();
+    }
+}
+
+fn snapshot(shared: &Shared) -> ServeMetrics {
+    let m = shared.metrics.lock().unwrap();
+    let wall_s = shared.started.elapsed().as_secs_f64();
+    let requests = m.completed + m.errors;
+    ServeMetrics {
+        requests,
+        errors: m.errors,
+        wall_s,
+        throughput_rps: requests as f64 / wall_s.max(1e-9),
+        batches: m.batches,
+        mean_batch: if m.batches == 0 {
+            0.0
+        } else {
+            m.batched_requests as f64 / m.batches as f64
+        },
+        latency: m.latency.clone(),
+        queue: m.queue.clone(),
+        compute: m.compute.clone(),
+    }
+}
+
+fn worker_loop(shared: &Shared) {
+    let mut engine =
+        Engine::new(&shared.model, shared.cfg).with_threads(shared.scfg.engine_threads);
+    let dim: usize = shared.model.input_shape.iter().product();
+    loop {
+        let mut batch: Vec<Job> = Vec::new();
+        {
+            let mut q = shared.queue.lock().unwrap();
+            // block for the first request (or exit once closed and drained)
+            loop {
+                if let Some(j) = q.jobs.pop_front() {
+                    batch.push(j);
+                    break;
+                }
+                if q.closed {
+                    return;
+                }
+                q = shared.not_empty.wait(q).unwrap();
+            }
+            // streaming dynamic batching: fill up to max_batch, lingering
+            // briefly for stragglers
+            let deadline = Instant::now() + shared.scfg.linger;
+            while batch.len() < shared.scfg.max_batch {
+                if let Some(j) = q.jobs.pop_front() {
+                    batch.push(j);
+                    continue;
+                }
+                if q.closed {
+                    break;
+                }
+                let now = Instant::now();
+                if now >= deadline {
+                    break;
+                }
+                let (qq, timeout) = shared.not_empty.wait_timeout(q, deadline - now).unwrap();
+                q = qq;
+                if timeout.timed_out() && q.jobs.is_empty() {
+                    break;
+                }
+            }
+        }
+        // queue capacity was freed
+        shared.not_full.notify_all();
+        process_batch(&mut engine, shared, dim, batch);
+    }
+}
+
+fn process_batch(engine: &mut Engine, shared: &Shared, dim: usize, jobs: Vec<Job>) {
+    // per-request validation: a malformed request answers with an error and
+    // never reaches the engine (one bad request cannot hurt batch-mates)
+    let mut valid: Vec<Job> = Vec::with_capacity(jobs.len());
+    for j in jobs {
+        if j.image.len() != dim {
+            let err = ServeError::BadRequest(format!(
+                "image size {} != model input {dim}",
+                j.image.len()
+            ));
+            respond(shared, &j, Err(err), 0.0, 0);
+        } else {
+            valid.push(j);
+        }
+    }
+    if valid.is_empty() {
+        return;
+    }
+    let n = valid.len();
+    let mut flat = Vec::with_capacity(n * dim);
+    for j in &valid {
+        flat.extend_from_slice(&j.image);
+    }
+    let t0 = Instant::now();
+    let out = engine.forward(&flat, n);
+    let compute_us = dur_us(t0.elapsed());
+    {
+        let mut m = shared.metrics.lock().unwrap();
+        m.batches += 1;
+        m.batched_requests += n;
+    }
+    match out {
+        Ok(out) => {
+            for (bi, j) in valid.iter().enumerate() {
+                respond(shared, j, Ok(out.argmax(bi)), compute_us, n);
+            }
+        }
+        Err(e) => {
+            // engine failure: per-request error responses, service survives
+            let msg = format!("forward failed: {e:#}");
+            for j in &valid {
+                respond(shared, j, Err(ServeError::Internal(msg.clone())), compute_us, n);
+            }
+        }
+    }
+}
+
+fn respond(
+    shared: &Shared,
+    job: &Job,
+    result: Result<usize, ServeError>,
+    compute_us: f64,
+    batch_size: usize,
+) {
+    let total_us = dur_us(job.enqueued.elapsed());
+    let resp = ServeResponse {
+        id: job.id,
+        queue_us: (total_us - compute_us).max(0.0),
+        compute_us,
+        latency_us: total_us,
+        batch_size,
+        result,
+    };
+    {
+        let mut m = shared.metrics.lock().unwrap();
+        match &resp.result {
+            Ok(_) => m.completed += 1,
+            Err(_) => m.errors += 1,
+        }
+        m.latency.record(resp.latency_us);
+        // pre-engine rejections (batch_size == 0) never ran the engine:
+        // keep them out of the queue/compute distributions so those
+        // recorders describe real engine invocations only
+        if batch_size > 0 {
+            m.queue.record(resp.queue_us);
+            m.compute.record(resp.compute_us);
+        }
+    }
+    let _ = job.tx.send(resp);
+}

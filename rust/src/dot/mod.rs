@@ -21,6 +21,11 @@ pub struct DotEngine {
     pub(crate) neg: Vec<i32>,
     pub(crate) seq: Vec<i32>,
     pub(crate) tmp: Vec<i32>,
+    /// bucket counters for the counting/radix sorting fast paths
+    /// (invariant: all zero between calls)
+    pub(crate) counts: Vec<u32>,
+    /// ping-pong buffer for the radix sorting fast path
+    pub(crate) radix_tmp: Vec<i32>,
 }
 
 impl DotEngine {

@@ -12,15 +12,146 @@
 //! Pairing arithmetic is exact (|pos + neg| <= max(|pos|, |neg|) fits i32);
 //! only the running accumulation is width-limited, mirroring a hardware
 //! sorting network feeding a narrow accumulator (paper §6).
+//!
+//! ### Sorting fast paths
+//!
+//! Quantized partial products live in a bounded domain (|w·x| <= 127·255 <
+//! 2^15 for 8-bit weights/activations), so the sorting round does not need
+//! a comparison sort. `sort_asc`/`sort_desc` pick per call:
+//! * **counting sort** over the observed `[min, max]` window when the span
+//!   is at most [`COUNTING_SPAN_FACTOR`]× the length (emit walk stays
+//!   O(len) — typical for low-bit or sparse products);
+//! * **2-pass LSD radix sort** (256 buckets/pass) when the span fits 16
+//!   bits — always true for 8-bit products — giving O(len) for long dots;
+//! * **comparison sort** for short inputs (< [`FAST_SORT_MIN_LEN`]) or
+//!   arbitrary-range values, so the fast path is never slower.
+//!
+//! All three produce identical sequences (values are sorted by value only),
+//! which the pairing property tests below assert bit-for-bit.
 
 use super::DotEngine;
 use crate::accum::{self};
+
+/// Minimum length before the counting/radix fast paths pay off.
+const FAST_SORT_MIN_LEN: usize = 64;
+/// Counting sort is used when `span <= len * COUNTING_SPAN_FACTOR`.
+const COUNTING_SPAN_FACTOR: u64 = 4;
+
+/// Ascending sort with the adaptive counting/radix/comparison strategy.
+fn sort_asc(v: &mut [i32], counts: &mut Vec<u32>, tmp: &mut Vec<i32>) {
+    if v.len() < FAST_SORT_MIN_LEN {
+        v.sort_unstable();
+    } else {
+        sort_fast_asc(v, counts, tmp);
+    }
+}
+
+/// Descending sort with the adaptive counting/radix/comparison strategy.
+fn sort_desc(v: &mut [i32], counts: &mut Vec<u32>, tmp: &mut Vec<i32>) {
+    if v.len() < FAST_SORT_MIN_LEN {
+        v.sort_unstable_by(|a, b| b.cmp(a));
+    } else {
+        sort_fast_asc(v, counts, tmp);
+        v.reverse();
+    }
+}
+
+/// len >= FAST_SORT_MIN_LEN: choose counting / radix / comparison by span.
+fn sort_fast_asc(v: &mut [i32], counts: &mut Vec<u32>, tmp: &mut Vec<i32>) {
+    let (mut lo, mut hi) = (v[0], v[0]);
+    for &x in v.iter() {
+        if x < lo {
+            lo = x;
+        }
+        if x > hi {
+            hi = x;
+        }
+    }
+    let span = (hi as i64 - lo as i64) as u64 + 1;
+    if span <= (v.len() as u64).saturating_mul(COUNTING_SPAN_FACTOR) {
+        counting_sort_asc(v, lo, span as usize, counts);
+    } else if span <= 1 << 16 {
+        radix_sort_asc(v, lo, counts, tmp);
+    } else {
+        v.sort_unstable();
+    }
+}
+
+/// Counting sort over the dense window `[lo, lo + span)`. `counts` is
+/// persistent scratch; it is left all-zero (buckets are cleared as they are
+/// emitted), so reuse across calls never needs a full clear.
+fn counting_sort_asc(v: &mut [i32], lo: i32, span: usize, counts: &mut Vec<u32>) {
+    if counts.len() < span {
+        counts.resize(span, 0);
+    }
+    for &x in v.iter() {
+        counts[(x - lo) as usize] += 1;
+    }
+    let mut w = 0usize;
+    for (b, slot) in counts.iter_mut().enumerate().take(span) {
+        let c = *slot;
+        if c > 0 {
+            let val = lo + b as i32;
+            for _ in 0..c {
+                v[w] = val;
+                w += 1;
+            }
+            *slot = 0;
+        }
+    }
+    debug_assert_eq!(w, v.len());
+}
+
+/// Stable 2-pass LSD radix sort of `v` by the 16-bit key `x - lo`
+/// (precondition: `hi - lo < 2^16`). 256 buckets per pass; `counts` and
+/// `tmp` are persistent scratch, `counts` is left all-zero.
+fn radix_sort_asc(v: &mut [i32], lo: i32, counts: &mut Vec<u32>, tmp: &mut Vec<i32>) {
+    let n = v.len();
+    if counts.len() < 256 {
+        counts.resize(256, 0);
+    }
+    tmp.clear();
+    tmp.resize(n, 0);
+    let c = &mut counts[..256];
+    // pass 1: low byte, v -> tmp
+    for &x in v.iter() {
+        c[((x - lo) as u16 & 0xff) as usize] += 1;
+    }
+    let mut sum = 0u32;
+    for slot in c.iter_mut() {
+        let cnt = *slot;
+        *slot = sum;
+        sum += cnt;
+    }
+    for &x in v.iter() {
+        let b = ((x - lo) as u16 & 0xff) as usize;
+        tmp[c[b] as usize] = x;
+        c[b] += 1;
+    }
+    c.fill(0);
+    // pass 2: high byte, tmp -> v
+    for &x in tmp.iter() {
+        c[((x - lo) as u16 >> 8) as usize] += 1;
+    }
+    let mut sum = 0u32;
+    for slot in c.iter_mut() {
+        let cnt = *slot;
+        *slot = sum;
+        sum += cnt;
+    }
+    for &x in tmp.iter() {
+        let b = ((x - lo) as u16 >> 8) as usize;
+        v[c[b] as usize] = x;
+        c[b] += 1;
+    }
+    c.fill(0);
+}
 
 /// One PQS sorting round into `seq`: `seq[i] = pos_desc[i] + neg_asc[i]`
 /// with zero padding so `sum(seq) == sum(prods)` exactly.
 pub fn sorted1_pair_into(eng: &mut DotEngine, prods: &[i32], out_is_seq: bool) {
     let k = prods.len();
-    let (pos, neg, seq) = (&mut eng.pos, &mut eng.neg, &mut eng.seq);
+    let DotEngine { pos, neg, seq, counts, radix_tmp, .. } = eng;
     pos.clear();
     neg.clear();
     for &v in prods {
@@ -31,8 +162,8 @@ pub fn sorted1_pair_into(eng: &mut DotEngine, prods: &[i32], out_is_seq: bool) {
         }
     }
     // descending positives, ascending negatives; zeros pad the tails
-    pos.sort_unstable_by(|a, b| b.cmp(a));
-    neg.sort_unstable();
+    sort_desc(pos, counts, radix_tmp);
+    sort_asc(neg, counts, radix_tmp);
     if out_is_seq {
         seq.clear();
         seq.reserve(k);
@@ -64,7 +195,7 @@ pub fn sorted1_dot(eng: &mut DotEngine, prods: &[i32], p: u32) -> (i64, u32) {
 
 /// Algorithm 1 (multi-round) through a p-bit clipping accumulator.
 pub fn sorted_full_dot(eng: &mut DotEngine, prods: &[i32], p: u32) -> (i64, u32) {
-    let cur = &mut eng.tmp;
+    let DotEngine { pos, neg, tmp: cur, counts, radix_tmp, .. } = eng;
     cur.clear();
     cur.extend(prods.iter().copied().filter(|&v| v != 0));
     loop {
@@ -75,7 +206,6 @@ pub fn sorted_full_dot(eng: &mut DotEngine, prods: &[i32], p: u32) -> (i64, u32)
             };
             return r;
         }
-        let (pos, neg) = (&mut eng.pos, &mut eng.neg);
         pos.clear();
         neg.clear();
         for &v in cur.iter() {
@@ -91,8 +221,8 @@ pub fn sorted_full_dot(eng: &mut DotEngine, prods: &[i32], p: u32) -> (i64, u32)
             // prefix), but keep ref.py's order: the current buffer order.
             return accum::clip_accumulate(cur, p);
         }
-        pos.sort_unstable_by(|a, b| b.cmp(a));
-        neg.sort_unstable();
+        sort_desc(pos, counts, radix_tmp);
+        sort_asc(neg, counts, radix_tmp);
         let m = pos.len().min(neg.len());
         cur.clear();
         for i in 0..m {
@@ -113,7 +243,7 @@ pub fn sorted_full_dot(eng: &mut DotEngine, prods: &[i32], p: u32) -> (i64, u32)
 /// the monotone accumulation clips, every remaining same-sign add would
 /// also clip, so we stop. Returns `(value, events, adds_skipped)`.
 pub fn sorted_full_dot_early_exit(eng: &mut DotEngine, prods: &[i32], p: u32) -> (i64, u32, usize) {
-    let cur = &mut eng.tmp;
+    let DotEngine { pos, neg, tmp: cur, counts, radix_tmp, .. } = eng;
     cur.clear();
     cur.extend(prods.iter().copied().filter(|&v| v != 0));
     loop {
@@ -126,7 +256,6 @@ pub fn sorted_full_dot_early_exit(eng: &mut DotEngine, prods: &[i32], p: u32) ->
                 }
             };
         }
-        let (pos, neg) = (&mut eng.pos, &mut eng.neg);
         pos.clear();
         neg.clear();
         for &v in cur.iter() {
@@ -151,8 +280,8 @@ pub fn sorted_full_dot_early_exit(eng: &mut DotEngine, prods: &[i32], p: u32) ->
             }
             return (acc, 0, 0);
         }
-        pos.sort_unstable_by(|a, b| b.cmp(a));
-        neg.sort_unstable();
+        sort_desc(pos, counts, radix_tmp);
+        sort_asc(neg, counts, radix_tmp);
         let m = pos.len().min(neg.len());
         cur.clear();
         for i in 0..m {
@@ -181,6 +310,133 @@ mod tests {
         DotEngine::new()
     }
 
+    /// Reference pairing with plain comparison sorts (the seed
+    /// implementation), used to prove the fast sorts change nothing.
+    fn reference_pair(prods: &[i32]) -> Vec<i32> {
+        let mut pos: Vec<i32> = prods.iter().copied().filter(|&v| v > 0).collect();
+        let mut neg: Vec<i32> = prods.iter().copied().filter(|&v| v < 0).collect();
+        pos.sort_unstable_by(|a, b| b.cmp(a));
+        neg.sort_unstable();
+        let m = pos.len().min(neg.len());
+        let mut seq: Vec<i32> = (0..m).map(|i| pos[i] + neg[i]).collect();
+        if pos.len() > m {
+            seq.extend_from_slice(&pos[m..]);
+        } else {
+            seq.extend_from_slice(&neg[m..]);
+        }
+        seq
+    }
+
+    #[test]
+    fn counting_sort_matches_comparison() {
+        prop::check(
+            "counting-sort-matches",
+            200,
+            |r: &mut Pcg32| {
+                // narrow span forces the counting path at these lengths
+                let n = 64 + r.below(200) as usize;
+                r.ivec(n, -40, 40)
+            },
+            |v| {
+                let mut a = v.clone();
+                let mut b = v.clone();
+                let (mut counts, mut tmp) = (Vec::new(), Vec::new());
+                sort_asc(&mut a, &mut counts, &mut tmp);
+                b.sort_unstable();
+                if a != b {
+                    return Err("ascending mismatch".into());
+                }
+                let mut d = v.clone();
+                sort_desc(&mut d, &mut counts, &mut tmp);
+                b.reverse();
+                if d != b {
+                    return Err("descending mismatch".into());
+                }
+                if counts.iter().any(|&c| c != 0) {
+                    return Err("counts scratch not re-zeroed".into());
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn radix_sort_matches_comparison() {
+        prop::check(
+            "radix-sort-matches",
+            200,
+            |r: &mut Pcg32| {
+                // wide 15-bit span at modest length forces the radix path
+                let n = 64 + r.below(400) as usize;
+                r.ivec(n, -32385, 32385)
+            },
+            |v| {
+                let mut a = v.clone();
+                let mut b = v.clone();
+                let (mut counts, mut tmp) = (Vec::new(), Vec::new());
+                sort_asc(&mut a, &mut counts, &mut tmp);
+                b.sort_unstable();
+                if a != b {
+                    return Err("ascending mismatch".into());
+                }
+                let mut d = v.clone();
+                sort_desc(&mut d, &mut counts, &mut tmp);
+                b.reverse();
+                if d != b {
+                    return Err("descending mismatch".into());
+                }
+                if counts.iter().any(|&c| c != 0) {
+                    return Err("counts scratch not re-zeroed".into());
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn wide_span_falls_back_to_comparison() {
+        let mut v: Vec<i32> = (0..128).map(|i| (i * 16_777_259) ^ 0x5A5A5A5).collect();
+        let mut b = v.clone();
+        let (mut counts, mut tmp) = (Vec::new(), Vec::new());
+        sort_asc(&mut v, &mut counts, &mut tmp);
+        b.sort_unstable();
+        assert_eq!(v, b);
+    }
+
+    #[test]
+    fn fast_pairing_bit_identical_to_comparison_pairing() {
+        // the ISSUE contract: counting/radix pairing == comparison pairing,
+        // across short (comparison), narrow (counting) and wide (radix)
+        // product profiles
+        prop::check(
+            "pairing-bit-identical",
+            300,
+            |r: &mut Pcg32| {
+                let profile = r.below(3);
+                let n = match profile {
+                    0 => r.below(64) as usize,        // short: comparison
+                    1 => 64 + r.below(512) as usize,  // narrow: counting
+                    _ => 64 + r.below(512) as usize,  // wide: radix
+                };
+                let (lo, hi) = if profile == 1 { (-50, 50) } else { (-32385, 32385) };
+                r.ivec(n, lo, hi)
+            },
+            |prods| {
+                let mut e = eng();
+                sorted1_pair_into(&mut e, prods, true);
+                let want = reference_pair(prods);
+                if e.seq != want {
+                    return Err(format!(
+                        "pairing diverged: len {} vs {}",
+                        e.seq.len(),
+                        want.len()
+                    ));
+                }
+                Ok(())
+            },
+        );
+    }
+
     #[test]
     fn pair_preserves_sum_prop() {
         prop::check(
@@ -197,6 +453,26 @@ mod tests {
                 }
                 if e.seq.len() > prods.len() {
                     return Err("length grew".into());
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn pair_preserves_sum_long_dots() {
+        // same invariant at lengths that engage the counting/radix paths
+        prop::check(
+            "sorted1-sum-preserved-long",
+            100,
+            |r: &mut Pcg32| prop::gen_prods(r, 1024, 8),
+            |prods| {
+                let mut e = eng();
+                sorted1_pair_into(&mut e, prods, true);
+                let s: i64 = e.seq.iter().map(|&v| v as i64).sum();
+                let t: i64 = prods.iter().map(|&v| v as i64).sum();
+                if s != t {
+                    return Err(format!("{s} != {t}"));
                 }
                 Ok(())
             },
@@ -292,5 +568,22 @@ mod tests {
         let c = sorted1_dot(&mut e, &[100, -50, 25], 16);
         assert_eq!(a, c);
         assert_eq!(b, (6, 0));
+    }
+
+    #[test]
+    fn scratch_reuse_is_clean_across_fast_paths() {
+        // alternate counting-path, radix-path and comparison-path dots on
+        // one engine: persistent count/tmp scratch must never leak between
+        let mut r = Pcg32::new(0xFA57);
+        let narrow = r.ivec(256, -30, 30);
+        let wide = r.ivec(256, -32000, 32000);
+        let short = r.ivec(8, -32000, 32000);
+        let mut e = eng();
+        let mut fresh = || eng();
+        for v in [&narrow, &wide, &short, &narrow, &wide] {
+            let got = sorted1_dot(&mut e, v, 16);
+            let want = sorted1_dot(&mut fresh(), v, 16);
+            assert_eq!(got, want);
+        }
     }
 }

@@ -8,11 +8,61 @@
 use anyhow::{Context, Result};
 
 use crate::formats::manifest::Manifest;
-use crate::formats::pqsw::PqswModel;
+use crate::formats::pqsw::{GraphNode, Op, PqswModel, QLayerMeta};
 
 /// Load a model by manifest name.
 pub fn load(manifest: &Manifest, name: &str) -> Result<PqswModel> {
     PqswModel::load(manifest.model_path(name)).with_context(|| format!("loading model {name}"))
+}
+
+/// Build a tiny deterministic synthetic model (no artifacts needed): one
+/// quantized linear layer `dim -> classes` behind a flatten. The weights
+/// are a fixed mixed-sign pattern so predictions depend on the input.
+/// Used by `examples/serve.rs`, the serving benches and the artifact-free
+/// integration tests to exercise the engine + serving stack end to end.
+pub fn synthetic_linear(dim: usize, classes: usize) -> PqswModel {
+    let mut wq = Vec::with_capacity(classes * dim);
+    for o in 0..classes {
+        for k in 0..dim {
+            wq.push((((o * 31 + k * 7) % 11) as i8) - 5);
+        }
+    }
+    let q = QLayerMeta {
+        name: "fc".into(),
+        oc: classes,
+        ic: dim,
+        kh: 1,
+        kw: 1,
+        stride: 1,
+        pad: 0,
+        prune: false,
+        w_scale: 0.05,
+        x_scale: 1.0 / 255.0,
+        x_offset: -128,
+        wq,
+        k: dim,
+        bias: vec![0.0; classes],
+    };
+    PqswModel {
+        name: format!("synthetic_linear_{dim}x{classes}"),
+        arch: "mlp1".into(),
+        schedule: "pq".into(),
+        wbits: 8,
+        abits: 8,
+        nm_m: 0,
+        target_sparsity: 0.0,
+        achieved_sparsity: 0.0,
+        acc_bits_trained: None,
+        lowrank_k: None,
+        acc_q: 0.0,
+        acc_fp32: 0.0,
+        input_shape: vec![1, dim, 1],
+        graph: vec![
+            GraphNode { id: 0, op: Op::Input, inputs: vec![], q: None },
+            GraphNode { id: 1, op: Op::Flatten, inputs: vec![0], q: None },
+            GraphNode { id: 2, op: Op::QLinear, inputs: vec![1], q: Some(q) },
+        ],
+    }
 }
 
 /// Human-readable one-line summary.
@@ -55,5 +105,23 @@ pub fn max_effective_dot_length(m: &PqswModel) -> usize {
 
 #[cfg(test)]
 mod tests {
-    // exercised end-to-end by rust/tests/artifacts.rs against real models
+    // manifest-backed paths are exercised end-to-end by
+    // rust/tests/artifacts.rs against real models
+    use super::*;
+
+    #[test]
+    fn synthetic_model_is_well_formed() {
+        let m = synthetic_linear(64, 10);
+        assert_eq!(m.q_layers().count(), 1);
+        let (_, q) = m.q_layers().next().unwrap();
+        assert_eq!(q.wq.len(), 640);
+        assert_eq!(max_dot_length(&m), 64);
+        assert!(max_effective_dot_length(&m) <= 64);
+        assert_eq!(m.input_shape.iter().product::<usize>(), 64);
+        // engine accepts it
+        let mut eng = crate::nn::Engine::new(&m, crate::nn::EngineConfig::default());
+        let out = eng.forward(&vec![0.5; 2 * 64], 2).unwrap();
+        assert_eq!(out.classes, 10);
+        assert_eq!(out.logits.len(), 20);
+    }
 }

@@ -13,6 +13,19 @@
 //! real multi-round implementation). The engine therefore evaluates
 //! `Policy::Sorted` in O(K) instead of O(K log K); `Policy::Sorted1` and
 //! the tiled variant run the real sorting machinery.
+//!
+//! ### Interpreter state
+//! Values flow through an indexed arena (`Vec<Option<TensorF>>`, one slot
+//! per graph node, ids remapped to dense slots at construction). Each value
+//! is dropped at its statically computed last use, and single-consumer
+//! ReLU/Add/Flatten steal their input buffer instead of cloning — the
+//! interpreter allocates one tensor per producing node and nothing else.
+//!
+//! ### Intra-forward parallelism
+//! `Engine::with_threads(n)` parallelizes the per-row (linear) and
+//! per-image (conv) loops over `util::pool` with per-worker scratch.
+//! Results are bit-identical to the serial path: every dot product is an
+//! independent computation and overflow statistics merge commutatively.
 
 use std::collections::BTreeMap;
 
@@ -24,6 +37,7 @@ use crate::formats::pqsw::{Op, PqswModel};
 use crate::overflow::{OverflowReport, OverflowStats};
 use crate::quant;
 use crate::tensor::{conv_out_dim, im2col, im2col_grouped, TensorF};
+use crate::util::pool;
 
 use super::layer::QLayer;
 
@@ -70,13 +84,20 @@ impl EvalResult {
     }
 }
 
-/// Scratch buffers shared across layers (allocation-free hot path).
+/// Per-worker scratch for evaluating dot-product rows (allocation-free hot
+/// path; one instance per pool worker on the parallel path).
+#[derive(Default)]
+struct RowScratch {
+    dot: DotEngine,
+    prods: Vec<i32>,
+}
+
+/// Scratch buffers for the serial path, shared across layers.
 #[derive(Default)]
 struct Scratch {
-    dot: DotEngine,
+    row: RowScratch,
     qbuf: Vec<i32>,
     colbuf: Vec<i32>,
-    prods: Vec<i32>,
 }
 
 /// The graph-interpreting engine. Construct once per (model, config);
@@ -86,12 +107,17 @@ pub struct Engine {
     pub model_name: String,
     input_shape: Vec<usize>,
     nodes: Vec<EngineNode>,
+    /// node index of the last consumer of each slot's value
+    /// (`usize::MAX` for the output slot: never freed mid-run)
+    last_use: Vec<usize>,
+    out_slot: usize,
     scratch: Scratch,
+    threads: usize,
 }
 
 struct EngineNode {
-    id: usize,
     op: Op,
+    /// dense slot indices (graph ids are remapped at construction)
     inputs: Vec<usize>,
     layer: Option<QLayer>,
 }
@@ -190,7 +216,7 @@ fn eval_dot(
 fn eval_row(
     layer: &QLayer,
     cfg: &EngineConfig,
-    s: &mut Scratch,
+    rs: &mut RowScratch,
     o: usize,
     x: &[i32],
     stats: Option<&mut OverflowStats>,
@@ -208,32 +234,68 @@ fn eval_row(
             _ => {}
         }
     }
-    layer.w.dot_products_into(o, x, &mut s.prods);
-    let prods = std::mem::take(&mut s.prods);
-    let v = eval_dot(&mut s.dot, cfg, &prods, stats);
-    s.prods = prods;
+    layer.w.dot_products_into(o, x, &mut rs.prods);
+    let prods = std::mem::take(&mut rs.prods);
+    let v = eval_dot(&mut rs.dot, cfg, &prods, stats);
+    rs.prods = prods;
     v
 }
 
 impl Engine {
     pub fn new(model: &PqswModel, cfg: EngineConfig) -> Engine {
-        let nodes = model
+        let mut id_to_slot: BTreeMap<usize, usize> = BTreeMap::new();
+        for (slot, n) in model.graph.iter().enumerate() {
+            id_to_slot.insert(n.id, slot);
+        }
+        let nodes: Vec<EngineNode> = model
             .graph
             .iter()
             .map(|n| EngineNode {
-                id: n.id,
                 op: n.op,
-                inputs: n.inputs.clone(),
+                inputs: n
+                    .inputs
+                    .iter()
+                    .map(|i| *id_to_slot.get(i).expect("dangling graph input id"))
+                    .collect(),
                 layer: n.q.as_ref().map(|q| QLayer::from_meta(q, model.abits, model.nm_m)),
             })
             .collect();
+        // liveness: slot s may be freed after node last_use[s] executes
+        let mut last_use: Vec<usize> = (0..nodes.len()).collect();
+        for (ni, n) in nodes.iter().enumerate() {
+            for &s in &n.inputs {
+                last_use[s] = last_use[s].max(ni);
+            }
+        }
+        let out_slot = nodes.len().saturating_sub(1);
+        if !nodes.is_empty() {
+            last_use[out_slot] = usize::MAX;
+        }
         Engine {
             cfg,
             model_name: model.name.clone(),
             input_shape: model.input_shape.clone(),
             nodes,
+            last_use,
+            out_slot,
             scratch: Scratch::default(),
+            threads: 1,
         }
+    }
+
+    /// Parallelize the per-row / per-image loops of `forward` over `n`
+    /// pool workers (1 = serial). Results are bit-identical to serial.
+    pub fn with_threads(mut self, threads: usize) -> Engine {
+        self.set_threads(threads);
+        self
+    }
+
+    pub fn set_threads(&mut self, threads: usize) {
+        self.threads = threads.max(1);
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads
     }
 
     /// Forward a batch of images (flattened f32 in [0,1], row-major NCHW).
@@ -242,62 +304,97 @@ impl Engine {
         if images.len() != n * dim {
             bail!("input size {} != n*dim {}", images.len(), n * dim);
         }
+        if self.nodes.is_empty() {
+            return Err(anyhow!("empty graph"));
+        }
         let mut report = OverflowReport::default();
-        let mut vals: BTreeMap<usize, TensorF> = BTreeMap::new();
+        let mut vals: Vec<Option<TensorF>> = (0..self.nodes.len()).map(|_| None).collect();
         let mut in_shape = vec![n];
         in_shape.extend_from_slice(&self.input_shape);
 
-        let out_id = self.nodes.last().map(|nd| nd.id).ok_or_else(|| anyhow!("empty graph"))?;
         for ni in 0..self.nodes.len() {
             let node = &self.nodes[ni];
             let t = match node.op {
                 Op::Input => TensorF::from_vec(&in_shape, images.to_vec()),
                 Op::Relu => {
-                    let mut t = vals[&node.inputs[0]].clone();
+                    let a = node.inputs[0];
+                    let mut t = if self.last_use[a] == ni {
+                        vals[a].take().expect("relu input missing")
+                    } else {
+                        vals[a].as_ref().expect("relu input missing").clone()
+                    };
                     t.relu_inplace();
                     t
                 }
-                Op::Add => vals[&node.inputs[0]].add(&vals[&node.inputs[1]]),
-                Op::Gap => vals[&node.inputs[0]].global_avg_pool(),
+                Op::Add => {
+                    let (a, b) = (node.inputs[0], node.inputs[1]);
+                    if self.last_use[a] == ni && a != b {
+                        // steal the left operand's buffer
+                        let mut t = vals[a].take().expect("add lhs missing");
+                        t.add_assign(vals[b].as_ref().expect("add rhs missing"));
+                        t
+                    } else {
+                        vals[a]
+                            .as_ref()
+                            .expect("add lhs missing")
+                            .add(vals[b].as_ref().expect("add rhs missing"))
+                    }
+                }
+                Op::Gap => vals[node.inputs[0]].as_ref().expect("gap input missing").global_avg_pool(),
                 Op::Flatten => {
-                    let t = vals[&node.inputs[0]].clone();
+                    let a = node.inputs[0];
+                    let t = if self.last_use[a] == ni {
+                        vals[a].take().expect("flatten input missing")
+                    } else {
+                        vals[a].as_ref().expect("flatten input missing").clone()
+                    };
                     let rows = t.shape[0];
                     let cols = t.numel() / rows;
                     t.reshape(&[rows, cols])
                 }
                 Op::QLinear | Op::QConv | Op::QDwConv => {
-                    let x = &vals[&node.inputs[0]];
+                    let x = vals[node.inputs[0]].as_ref().expect("q-layer input missing");
                     let layer = self.nodes[ni].layer.as_ref().unwrap();
                     let mut stats = OverflowStats::default();
+                    let collect = self.cfg.collect_stats;
                     let out = match node.op {
                         Op::QLinear => qlinear_forward(
-                            layer, &self.cfg, &mut self.scratch, x,
-                            self.cfg.collect_stats.then_some(&mut stats),
+                            layer, &self.cfg, &mut self.scratch, self.threads, x,
+                            collect.then_some(&mut stats),
                         ),
                         Op::QConv => qconv_forward(
-                            layer, &self.cfg, &mut self.scratch, x, false,
-                            self.cfg.collect_stats.then_some(&mut stats),
+                            layer, &self.cfg, &mut self.scratch, self.threads, x, false,
+                            collect.then_some(&mut stats),
                         ),
                         _ => qconv_forward(
-                            layer, &self.cfg, &mut self.scratch, x, true,
-                            self.cfg.collect_stats.then_some(&mut stats),
+                            layer, &self.cfg, &mut self.scratch, self.threads, x, true,
+                            collect.then_some(&mut stats),
                         ),
                     };
-                    if self.cfg.collect_stats {
+                    if collect {
                         report.layer_mut(&layer.name).merge(&stats);
                     }
                     out
                 }
             };
-            vals.insert(node.id, t);
+            vals[ni] = Some(t);
+            // free every value whose last consumer just ran (buffer reuse:
+            // peak live memory is bounded by the widest graph cut, not the
+            // whole graph)
+            for (s, slot) in vals.iter_mut().enumerate().take(ni + 1) {
+                if s != ni && self.last_use[s] <= ni {
+                    *slot = None;
+                }
+            }
         }
 
-        let out = vals.remove(&out_id).unwrap();
+        let out = vals[self.out_slot].take().ok_or_else(|| anyhow!("missing graph output"))?;
         let classes = out.shape[1];
         Ok(EvalResult { logits: out.data, batch: n, classes, report })
     }
 
-    /// Evaluate accuracy over a dataset slice.
+    /// Evaluate accuracy over a dataset slice. `limit` is exact: the final
+    /// batch is truncated so that exactly `min(limit, ds.n)` samples count.
     pub fn evaluate(
         &mut self,
         ds: &crate::data::Dataset,
@@ -307,10 +404,21 @@ impl Engine {
         let mut report = OverflowReport::default();
         let mut correct = 0usize;
         let mut total = 0usize;
-        for (imgs, labels, _start) in crate::data::Batches::new(ds, batch) {
-            let r = self.forward(&imgs, labels.len())?;
-            correct += (0..r.batch).filter(|&i| r.argmax(i) == labels[i] as usize).count();
-            total += r.batch;
+        let dim = ds.dim();
+        for (mut imgs, labels, _start) in crate::data::Batches::new(ds, batch) {
+            let mut take = labels.len();
+            if let Some(lim) = limit {
+                if total >= lim {
+                    break;
+                }
+                if total + take > lim {
+                    take = lim - total;
+                    imgs.truncate(take * dim);
+                }
+            }
+            let r = self.forward(&imgs, take)?;
+            correct += (0..take).filter(|&i| r.argmax(i) == labels[i] as usize).count();
+            total += take;
             report.merge(&r.report);
             if let Some(lim) = limit {
                 if total >= lim {
@@ -327,26 +435,112 @@ fn qlinear_forward(
     layer: &QLayer,
     cfg: &EngineConfig,
     s: &mut Scratch,
+    threads: usize,
     x: &TensorF,
     mut stats: Option<&mut OverflowStats>,
 ) -> TensorF {
     let n = x.shape[0];
     let d = x.numel() / n;
     debug_assert_eq!(d, layer.k, "linear input dim");
+
+    if threads > 1 && n > 1 {
+        // row-parallel: each worker quantizes and evaluates whole rows with
+        // its own scratch; chunks are contiguous (row i -> out[i*oc..])
+        let collect = stats.is_some();
+        let rows = pool::parallel_map_init(
+            n,
+            threads,
+            || (RowScratch::default(), Vec::<i32>::new()),
+            |(rs, qbuf), i| {
+                quant::quantize_centered_slice_into(
+                    &x.data[i * d..(i + 1) * d],
+                    &layer.x_qp,
+                    qbuf,
+                );
+                let mut st = OverflowStats::default();
+                let mut row_out = vec![0f32; layer.oc];
+                for (o, out) in row_out.iter_mut().enumerate() {
+                    let acc = eval_row(
+                        layer, cfg, rs, o, qbuf,
+                        if collect { Some(&mut st) } else { None },
+                    );
+                    *out = layer.dequant(o, acc);
+                }
+                (row_out, st)
+            },
+        );
+        let mut out = Vec::with_capacity(n * layer.oc);
+        for (row, st) in rows {
+            out.extend_from_slice(&row);
+            if let Some(stats) = stats.as_deref_mut() {
+                stats.merge(&st);
+            }
+        }
+        return TensorF::from_vec(&[n, layer.oc], out);
+    }
+
     let mut out = vec![0f32; n * layer.oc];
     for i in 0..n {
         quant::quantize_centered_slice_into(&x.data[i * d..(i + 1) * d], &layer.x_qp, &mut s.qbuf);
         for o in 0..layer.oc {
-            let acc = {
-                let qbuf = std::mem::take(&mut s.qbuf);
-                let acc = eval_row(layer, cfg, s, o, &qbuf, stats.as_deref_mut());
-                s.qbuf = qbuf;
-                acc
-            };
+            let acc = eval_row(layer, cfg, &mut s.row, o, &s.qbuf, stats.as_deref_mut());
             out[i * layer.oc + o] = layer.dequant(o, acc);
         }
     }
     TensorF::from_vec(&[n, layer.oc], out)
+}
+
+/// One image of (depthwise-)conv work: quantize, im2col, evaluate every
+/// (channel/filter, position) dot product. Returns the image's output chunk
+/// (layout `[oc, l]`) plus its overflow stats.
+#[allow(clippy::too_many_arguments)]
+fn qconv_image(
+    layer: &QLayer,
+    cfg: &EngineConfig,
+    rs: &mut RowScratch,
+    qbuf: &mut Vec<i32>,
+    colbuf: &mut Vec<i32>,
+    x_img: &[f32],
+    dims: (usize, usize, usize, usize),
+    depthwise: bool,
+    collect: bool,
+) -> (Vec<f32>, OverflowStats) {
+    let (c, h, w, l) = dims;
+    let mut st = OverflowStats::default();
+    let mut out = vec![0f32; layer.oc * l];
+    quant::quantize_centered_slice_into(x_img, &layer.x_qp, qbuf);
+    if depthwise {
+        for ch in 0..c {
+            let (li, k) = im2col_grouped(
+                qbuf, c, h, w, ch, layer.kh, layer.kw, layer.stride, layer.pad, layer.pad_q,
+                colbuf,
+            );
+            debug_assert_eq!((li, k), (l, layer.k));
+            for pos in 0..l {
+                let acc = eval_row(
+                    layer, cfg, rs, ch, &colbuf[pos * k..(pos + 1) * k],
+                    if collect { Some(&mut st) } else { None },
+                );
+                out[ch * l + pos] = layer.dequant(ch, acc);
+            }
+        }
+    } else {
+        let (li, k) = im2col(
+            qbuf, c, h, w, layer.kh, layer.kw, layer.stride, layer.pad, layer.pad_q, colbuf,
+        );
+        debug_assert_eq!((li, k), (l, layer.k));
+        for pos in 0..l {
+            let col = &colbuf[pos * k..(pos + 1) * k];
+            for o in 0..layer.oc {
+                let acc = eval_row(
+                    layer, cfg, rs, o, col,
+                    if collect { Some(&mut st) } else { None },
+                );
+                out[o * l + pos] = layer.dequant(o, acc);
+            }
+        }
+    }
+    (out, st)
 }
 
 /// Quantized (depthwise-)conv layer over (n, c, h, w) input via im2col.
@@ -354,6 +548,7 @@ fn qconv_forward(
     layer: &QLayer,
     cfg: &EngineConfig,
     s: &mut Scratch,
+    threads: usize,
     x: &TensorF,
     depthwise: bool,
     mut stats: Option<&mut OverflowStats>,
@@ -364,44 +559,46 @@ fn qconv_forward(
     let ow = conv_out_dim(w, layer.kw, layer.stride, layer.pad);
     let l = oh * ow;
     let chw = c * h * w;
-    let mut out = vec![0f32; n * layer.oc * l];
+    let collect = stats.is_some();
+
+    if threads > 1 && n > 1 {
+        // image-parallel: each worker owns quantize + im2col + row scratch
+        let chunks = pool::parallel_map_init(
+            n,
+            threads,
+            || (RowScratch::default(), Vec::<i32>::new(), Vec::<i32>::new()),
+            |(rs, qbuf, colbuf), i| {
+                qconv_image(
+                    layer, cfg, rs, qbuf, colbuf,
+                    &x.data[i * chw..(i + 1) * chw],
+                    (c, h, w, l),
+                    depthwise,
+                    collect,
+                )
+            },
+        );
+        let mut out = Vec::with_capacity(n * layer.oc * l);
+        for (chunk, st) in chunks {
+            out.extend_from_slice(&chunk);
+            if let Some(stats) = stats.as_deref_mut() {
+                stats.merge(&st);
+            }
+        }
+        return TensorF::from_vec(&[n, layer.oc, oh, ow], out);
+    }
+
+    let mut out = Vec::with_capacity(n * layer.oc * l);
     for i in 0..n {
-        quant::quantize_centered_slice_into(&x.data[i * chw..(i + 1) * chw], &layer.x_qp, &mut s.qbuf);
-        if depthwise {
-            for ch in 0..c {
-                let (li, k) = im2col_grouped(
-                    &s.qbuf, c, h, w, ch, layer.kh, layer.kw, layer.stride, layer.pad,
-                    layer.pad_q, &mut s.colbuf,
-                );
-                debug_assert_eq!((li, k), (l, layer.k));
-                for pos in 0..l {
-                    let acc = {
-                        let colbuf = std::mem::take(&mut s.colbuf);
-                        let acc = eval_row(
-                            layer, cfg, s, ch, &colbuf[pos * k..(pos + 1) * k],
-                            stats.as_deref_mut(),
-                        );
-                        s.colbuf = colbuf;
-                        acc
-                    };
-                    out[(i * layer.oc + ch) * l + pos] = layer.dequant(ch, acc);
-                }
-            }
-        } else {
-            let (li, k) = im2col(
-                &s.qbuf, c, h, w, layer.kh, layer.kw, layer.stride, layer.pad, layer.pad_q,
-                &mut s.colbuf,
-            );
-            debug_assert_eq!((li, k), (l, layer.k));
-            for pos in 0..l {
-                let colbuf = std::mem::take(&mut s.colbuf);
-                let col = &colbuf[pos * k..(pos + 1) * k];
-                for o in 0..layer.oc {
-                    let acc = eval_row(layer, cfg, s, o, col, stats.as_deref_mut());
-                    out[(i * layer.oc + o) * l + pos] = layer.dequant(o, acc);
-                }
-                s.colbuf = colbuf;
-            }
+        let (chunk, st) = qconv_image(
+            layer, cfg, &mut s.row, &mut s.qbuf, &mut s.colbuf,
+            &x.data[i * chw..(i + 1) * chw],
+            (c, h, w, l),
+            depthwise,
+            collect,
+        );
+        out.extend_from_slice(&chunk);
+        if let Some(stats) = stats.as_deref_mut() {
+            stats.merge(&st);
         }
     }
     TensorF::from_vec(&[n, layer.oc, oh, ow], out)
@@ -469,4 +666,7 @@ mod tests {
         assert_eq!(r.argmax(1), 0);
         assert!((r.accuracy(&[1, 2]) - 0.5).abs() < 1e-9);
     }
+
+    // Parallel-vs-serial bit-identity over a synthetic model is covered in
+    // rust/tests/server.rs (which builds tiny PqswModels without artifacts).
 }

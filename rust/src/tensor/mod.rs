@@ -68,6 +68,15 @@ impl TensorF {
         Tensor { shape: self.shape.clone(), data }
     }
 
+    /// Elementwise add in place (shapes must match) — lets the engine's
+    /// value arena steal a residual branch's buffer instead of allocating.
+    pub fn add_assign(&mut self, other: &TensorF) {
+        assert_eq!(self.shape, other.shape);
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a += b;
+        }
+    }
+
     /// Global average pool over the last two axes: (N,C,H,W) -> (N,C).
     pub fn global_avg_pool(&self) -> TensorF {
         assert_eq!(self.shape.len(), 4);
@@ -122,6 +131,9 @@ mod tests {
         assert_eq!(t.data, vec![0.0, 0.0, 2.0, 0.0]);
         let u = t.add(&TensorF::from_vec(&[4], vec![1.0; 4]));
         assert_eq!(u.data, vec![1.0, 1.0, 3.0, 1.0]);
+        let mut v = t.clone();
+        v.add_assign(&TensorF::from_vec(&[4], vec![1.0; 4]));
+        assert_eq!(v.data, u.data);
     }
 
     #[test]

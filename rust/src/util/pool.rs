@@ -1,11 +1,14 @@
 //! Scoped thread-pool helpers (no tokio/rayon offline).
 //!
-//! `parallel_map` splits work across `n_threads` scoped workers pulling
-//! indices from a shared atomic counter (work stealing by chunk); results
-//! land in order. The evaluation coordinator builds on this.
+//! `parallel_map` splits the index range `0..n` across `n_threads` scoped
+//! workers. Workers claim *chunks* of consecutive indices from a shared
+//! atomic cursor (one fetch-add per chunk, not per item), compute results
+//! into a private buffer, and the buffers are stitched back into index
+//! order after the scope joins — no per-item locking anywhere. The
+//! evaluation coordinator and the engine's intra-forward parallelism build
+//! on this.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Mutex;
 
 /// Number of worker threads to use (PQS_THREADS env or available cores).
 pub fn default_threads() -> usize {
@@ -17,16 +20,21 @@ pub fn default_threads() -> usize {
     std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
 }
 
+/// Chunk of indices claimed per cursor fetch: large enough to amortize the
+/// atomic, small enough (>= 8 chunks per worker) to balance uneven items.
+fn chunk_size(n: usize, threads: usize) -> usize {
+    (n / (threads * 8)).clamp(1, 1024)
+}
+
 /// Apply `f` to every index in 0..n on `threads` scoped workers, collecting
 /// results in index order. `f` must be Sync; per-item state should live
-/// inside `f` (e.g. thread-locals are overkill — construct scratch per call
-/// or use `parallel_map_init`).
+/// inside `f` (construct scratch per call or use `parallel_map_init`).
 pub fn parallel_map<T: Send, F: Fn(usize) -> T + Sync>(n: usize, threads: usize, f: F) -> Vec<T> {
     parallel_map_init(n, threads, || (), |_, i| f(i))
 }
 
 /// Like `parallel_map` but each worker gets its own state from `init`
-/// (scratch buffers, engines) reused across its items.
+/// (scratch buffers, engines) reused across all items it claims.
 pub fn parallel_map_init<T, S, I, F>(n: usize, threads: usize, init: I, f: F) -> Vec<T>
 where
     T: Send,
@@ -41,29 +49,48 @@ where
         let mut st = init();
         return (0..n).map(|i| f(&mut st, i)).collect();
     }
+    let chunk = chunk_size(n, threads);
     let next = AtomicUsize::new(0);
-    let out: Vec<Mutex<Option<T>>> = (0..n).map(|_| Mutex::new(None)).collect();
+    let mut parts: Vec<Vec<(usize, T)>> = Vec::with_capacity(threads);
     std::thread::scope(|scope| {
-        for _ in 0..threads {
-            scope.spawn(|| {
-                let mut st = init();
-                loop {
-                    let i = next.fetch_add(1, Ordering::Relaxed);
-                    if i >= n {
-                        break;
+        let handles: Vec<_> = (0..threads)
+            .map(|_| {
+                scope.spawn(|| {
+                    let mut st = init();
+                    let mut local: Vec<(usize, T)> = Vec::with_capacity(n / threads + chunk);
+                    loop {
+                        let start = next.fetch_add(chunk, Ordering::Relaxed);
+                        if start >= n {
+                            break;
+                        }
+                        let end = (start + chunk).min(n);
+                        for i in start..end {
+                            local.push((i, f(&mut st, i)));
+                        }
                     }
-                    let v = f(&mut st, i);
-                    *out[i].lock().unwrap() = Some(v);
-                }
-            });
+                    local
+                })
+            })
+            .collect();
+        for h in handles {
+            parts.push(h.join().expect("pool worker panicked"));
         }
     });
-    out.into_iter().map(|m| m.into_inner().unwrap().unwrap()).collect()
+    // stitch the per-worker runs back into index order
+    let mut out: Vec<Option<T>> = (0..n).map(|_| None).collect();
+    for part in parts {
+        for (i, v) in part {
+            debug_assert!(out[i].is_none(), "index {i} produced twice");
+            out[i] = Some(v);
+        }
+    }
+    out.into_iter().map(|v| v.expect("pool missed an index")).collect()
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use std::sync::atomic::AtomicU64;
 
     #[test]
     fn maps_in_order() {
@@ -98,5 +125,26 @@ mod tests {
         assert_eq!(counts.len(), 1000);
         // state is per-worker, so per-item counters are <= n
         assert!(counts.iter().all(|&(_, c)| c >= 1 && c <= 1000));
+    }
+
+    #[test]
+    fn every_index_computed_exactly_once() {
+        // sum over f(i)=1 must be n for ragged n/thread/chunk combinations
+        for &(n, threads) in &[(1usize, 8usize), (7, 3), (64, 4), (1000, 7), (1025, 16)] {
+            let calls = AtomicU64::new(0);
+            let v = parallel_map(n, threads, |i| {
+                calls.fetch_add(1, Ordering::Relaxed);
+                i
+            });
+            assert_eq!(v, (0..n).collect::<Vec<_>>(), "n={n} threads={threads}");
+            assert_eq!(calls.load(Ordering::Relaxed), n as u64, "n={n} threads={threads}");
+        }
+    }
+
+    #[test]
+    fn chunk_size_bounds() {
+        assert_eq!(chunk_size(1, 8), 1);
+        assert_eq!(chunk_size(100, 4), 3);
+        assert!(chunk_size(1_000_000, 2) <= 1024);
     }
 }

@@ -1,5 +1,9 @@
 //! Coordinator invariants: sharding must not change results; the serving
 //! front-end must conserve requests and answer deterministically.
+//! Each test skips (with a notice) when artifacts are not built; the
+//! artifact-free serving tests live in rust/tests/server.rs.
+
+mod common;
 
 use pqs::accum::Policy;
 use pqs::coordinator::{serve_requests, EvalService, Request};
@@ -8,18 +12,18 @@ use pqs::formats::manifest::Manifest;
 use pqs::models;
 use pqs::nn::engine::EngineConfig;
 
-fn setup() -> (Manifest, Dataset, pqs::formats::pqsw::PqswModel) {
-    let man = Manifest::load_default().expect("run `make artifacts` first");
+fn setup(test: &str) -> Option<(Manifest, Dataset, pqs::formats::pqsw::PqswModel)> {
+    let man = common::manifest_or_skip(test)?;
     let entry = man.test_dataset_for("mlp1").unwrap();
     let ds = Dataset::load(man.dataset_path(&entry.test)).unwrap();
     let name = man.experiments["fig2"][0].clone();
     let model = models::load(&man, &name).unwrap();
-    (man, ds, model)
+    Some((man, ds, model))
 }
 
 #[test]
 fn sharding_invariance() {
-    let (_man, ds, model) = setup();
+    let Some((_man, ds, model)) = setup("sharding_invariance") else { return };
     let cfg = EngineConfig { policy: Policy::Sorted, acc_bits: 14, collect_stats: true, tile: 0 };
     let a = EvalService::new(&model, cfg).with_threads(1).with_batch(64)
         .evaluate(&ds, Some(256)).unwrap();
@@ -33,15 +37,28 @@ fn sharding_invariance() {
 
 #[test]
 fn limit_truncates_exactly() {
-    let (_man, ds, model) = setup();
+    let Some((_man, ds, model)) = setup("limit_truncates_exactly") else { return };
     let cfg = EngineConfig::default();
     let out = EvalService::new(&model, cfg).with_batch(50).evaluate(&ds, Some(123)).unwrap();
     assert_eq!(out.samples, 123);
 }
 
 #[test]
+fn engine_evaluate_limit_matches_service() {
+    // Engine::evaluate must also truncate exactly (it used to overshoot by
+    // counting the full final batch)
+    let Some((_man, ds, model)) = setup("engine_evaluate_limit_matches_service") else { return };
+    let cfg = EngineConfig::default();
+    let mut eng = pqs::nn::engine::Engine::new(&model, cfg);
+    let (acc_eng, _) = eng.evaluate(&ds, 50, Some(123)).unwrap();
+    let svc = EvalService::new(&model, cfg).with_batch(50).evaluate(&ds, Some(123)).unwrap();
+    assert_eq!(svc.samples, 123);
+    assert!((acc_eng - svc.accuracy).abs() < 1e-12, "{acc_eng} vs {}", svc.accuracy);
+}
+
+#[test]
 fn serve_conserves_and_orders_responses() {
-    let (_man, ds, model) = setup();
+    let Some((_man, ds, model)) = setup("serve_conserves_and_orders_responses") else { return };
     let dim = ds.dim();
     let n = 100;
     let imgs = ds.images_f32(0, n);
@@ -52,11 +69,17 @@ fn serve_conserves_and_orders_responses() {
     let (resp, metrics) = serve_requests(&model, cfg, requests, 16, 2).unwrap();
     assert_eq!(resp.len(), n);
     assert_eq!(metrics.requests, n);
+    assert_eq!(metrics.errors, 0);
     for (i, r) in resp.iter().enumerate() {
         assert_eq!(r.id, i as u64, "responses must be ordered by id");
         assert!(r.latency_us > 0.0);
+        assert!(r.error.is_none());
     }
     assert!(metrics.throughput_rps > 0.0);
+    // latency percentiles are per-request (one sample per request)
+    assert_eq!(metrics.latency.count(), n);
+    assert_eq!(metrics.queue.count(), n);
+    assert_eq!(metrics.compute.count(), n);
     // predictions must match the offline engine
     let mut eng = pqs::nn::engine::Engine::new(&model, cfg);
     let out = eng.forward(&imgs, n).unwrap();
@@ -67,7 +90,7 @@ fn serve_conserves_and_orders_responses() {
 
 #[test]
 fn serve_single_thread_matches_parallel() {
-    let (_man, ds, model) = setup();
+    let Some((_man, ds, model)) = setup("serve_single_thread_matches_parallel") else { return };
     let dim = ds.dim();
     let n = 40;
     let imgs = ds.images_f32(0, n);
@@ -79,5 +102,33 @@ fn serve_single_thread_matches_parallel() {
     let (b, _) = serve_requests(&model, cfg, make_reqs(), 8, 4).unwrap();
     for (x, y) in a.iter().zip(&b) {
         assert_eq!(x.class, y.class);
+    }
+}
+
+#[test]
+fn serve_bad_request_is_isolated() {
+    // a wrong-sized image yields an error response; batch-mates still get
+    // correct answers and nothing panics
+    let Some((_man, ds, model)) = setup("serve_bad_request_is_isolated") else { return };
+    let dim = ds.dim();
+    let n = 10;
+    let imgs = ds.images_f32(0, n);
+    let mut requests: Vec<Request> = (0..n)
+        .map(|i| Request { id: i as u64, image: imgs[i * dim..(i + 1) * dim].to_vec() })
+        .collect();
+    requests.push(Request { id: n as u64, image: vec![0.5; dim / 2] });
+    let cfg = EngineConfig::default();
+    let (resp, metrics) = serve_requests(&model, cfg, requests, 4, 2).unwrap();
+    assert_eq!(resp.len(), n + 1);
+    assert_eq!(metrics.errors, 1);
+    let mut eng = pqs::nn::engine::Engine::new(&model, cfg);
+    let out = eng.forward(&imgs, n).unwrap();
+    for (i, r) in resp.iter().enumerate() {
+        if i < n {
+            assert!(r.error.is_none(), "request {i} unexpectedly errored");
+            assert_eq!(r.class, out.argmax(i), "request {i}");
+        } else {
+            assert!(r.error.is_some(), "bad request must error");
+        }
     }
 }

@@ -2,6 +2,9 @@
 //! accumulator must reproduce the python fake-quant eval accuracy of the
 //! exported models (they implement the same math), and the paper's
 //! qualitative orderings must hold (sorted >= clip at narrow widths, etc.).
+//! Each test skips (with a notice) when artifacts are not built.
+
+mod common;
 
 use pqs::accum::Policy;
 use pqs::coordinator::EvalService;
@@ -10,16 +13,16 @@ use pqs::formats::manifest::Manifest;
 use pqs::models;
 use pqs::nn::engine::EngineConfig;
 
-fn setup() -> (Manifest, Dataset) {
-    let man = Manifest::load_default().expect("run `make artifacts` first");
+fn setup(test: &str) -> Option<(Manifest, Dataset)> {
+    let man = common::manifest_or_skip(test)?;
     let entry = man.test_dataset_for("mlp1").unwrap();
     let ds = Dataset::load(man.dataset_path(&entry.test)).unwrap();
-    (man, ds)
+    Some((man, ds))
 }
 
 #[test]
 fn engine_matches_python_accuracy_mlp() {
-    let (man, ds) = setup();
+    let Some((man, ds)) = setup("engine_matches_python_accuracy_mlp") else { return };
     for exp in ["fig2", "fig3"] {
         // check up to 3 models per experiment (full eval over 1024 images)
         for e in man.experiment_models(exp).iter().take(3) {
@@ -42,7 +45,7 @@ fn engine_matches_python_accuracy_mlp() {
 
 #[test]
 fn sorted_beats_clip_at_narrow_widths() {
-    let (man, ds) = setup();
+    let Some((man, ds)) = setup("sorted_beats_clip_at_narrow_widths") else { return };
     let name = &man.experiments["fig2"][0];
     let model = models::load(&man, name).unwrap();
     let limit = Some(256);
@@ -75,7 +78,7 @@ fn sorted_beats_clip_at_narrow_widths() {
 
 #[test]
 fn wide_accumulator_policies_all_agree() {
-    let (man, ds) = setup();
+    let Some((man, ds)) = setup("wide_accumulator_policies_all_agree") else { return };
     let name = &man.experiments["fig2"][0];
     let model = models::load(&man, name).unwrap();
     let mut accs = Vec::new();
@@ -97,7 +100,9 @@ fn wide_accumulator_policies_all_agree() {
 
 #[test]
 fn stats_consistency_transient_plus_persistent_le_naive() {
-    let (man, ds) = setup();
+    let Some((man, ds)) = setup("stats_consistency_transient_plus_persistent_le_naive") else {
+        return;
+    };
     let name = &man.experiments["fig2"][0];
     let model = models::load(&man, name).unwrap();
     for p in [13u32, 15, 17] {
@@ -118,7 +123,7 @@ fn stats_consistency_transient_plus_persistent_le_naive() {
 
 #[test]
 fn cnn_engine_smoke() {
-    let man = Manifest::load_default().expect("manifest");
+    let Some(man) = common::manifest_or_skip("cnn_engine_smoke") else { return };
     let entry = man.test_dataset_for("resnet_tiny").unwrap();
     let ds = Dataset::load(man.dataset_path(&entry.test)).unwrap();
     let e = man
@@ -135,4 +140,21 @@ fn cnn_engine_smoke() {
     // must be far above chance and near the python accuracy
     assert!(out.accuracy > 0.3, "cnn accuracy {}", out.accuracy);
     assert!((out.accuracy - e.acc_q).abs() < 0.15, "rust {} python {}", out.accuracy, e.acc_q);
+}
+
+#[test]
+fn multithreaded_forward_is_bit_identical() {
+    // the intra-forward parallel path must reproduce the serial path
+    // exactly, including overflow statistics
+    let Some((man, ds)) = setup("multithreaded_forward_is_bit_identical") else { return };
+    let name = &man.experiments["fig2"][0];
+    let model = models::load(&man, name).unwrap();
+    let cfg = EngineConfig { policy: Policy::Clip, acc_bits: 14, collect_stats: true, tile: 0 };
+    let imgs = ds.images_f32(0, 32);
+    let mut serial = pqs::nn::engine::Engine::new(&model, cfg);
+    let mut parallel = pqs::nn::engine::Engine::new(&model, cfg).with_threads(4);
+    let a = serial.forward(&imgs, 32).unwrap();
+    let b = parallel.forward(&imgs, 32).unwrap();
+    assert_eq!(a.logits, b.logits);
+    assert_eq!(a.report.total(), b.report.total());
 }

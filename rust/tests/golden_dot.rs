@@ -1,18 +1,20 @@
 //! Cross-layer bit-exactness: the Rust dot-product engine must reproduce
 //! the NumPy reference (`ref.py`) on every exported golden case, for every
 //! policy and accumulator width. This is the L1<->L3 numeric contract.
+//! Skips (with a notice) when the goldens are not built.
+
+mod common;
 
 use pqs::accum::Policy;
 use pqs::dot::{classify, DotEngine};
 use pqs::formats::goldens::load_dot_goldens;
 
-fn goldens_path() -> std::path::PathBuf {
-    pqs::artifacts_dir().join("goldens/dot_goldens.json")
-}
-
 #[test]
 fn dot_goldens_bit_exact() {
-    let cases = load_dot_goldens(goldens_path()).expect("run `make artifacts` first");
+    let Some(path) = common::golden_or_skip("dot_goldens_bit_exact", "dot_goldens.json") else {
+        return;
+    };
+    let cases = load_dot_goldens(path).expect("parse dot goldens");
     assert!(!cases.is_empty());
     let mut eng = DotEngine::new();
     let mut checked = 0usize;
@@ -36,7 +38,11 @@ fn dot_goldens_bit_exact() {
 
 #[test]
 fn classification_goldens_bit_exact() {
-    let cases = load_dot_goldens(goldens_path()).expect("run `make artifacts` first");
+    let Some(path) = common::golden_or_skip("classification_goldens_bit_exact", "dot_goldens.json")
+    else {
+        return;
+    };
+    let cases = load_dot_goldens(path).expect("parse dot goldens");
     for (ci, c) in cases.iter().enumerate() {
         let prods: Vec<i32> = c.w.iter().zip(&c.x).map(|(&w, &x)| w * x).collect();
         for (p, (exact, persistent, naive_events, transient)) in &c.classify {

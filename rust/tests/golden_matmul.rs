@@ -1,7 +1,9 @@
 //! Pallas-kernel parity: the matmul goldens were produced *by the Layer-1
 //! Pallas kernel* (`pqs_matmul.py`, interpret=True); the Rust engine must
 //! match them element-for-element, proving L1 and L3 implement identical
-//! integer semantics.
+//! integer semantics. Skips (with a notice) when the goldens are not built.
+
+mod common;
 
 use pqs::accum::Policy;
 use pqs::dot::DotEngine;
@@ -9,8 +11,11 @@ use pqs::formats::goldens::load_matmul_goldens;
 
 #[test]
 fn matmul_goldens_bit_exact() {
-    let path = pqs::artifacts_dir().join("goldens/matmul_goldens.json");
-    let cases = load_matmul_goldens(path).expect("run `make artifacts` first");
+    let Some(path) = common::golden_or_skip("matmul_goldens_bit_exact", "matmul_goldens.json")
+    else {
+        return;
+    };
+    let cases = load_matmul_goldens(path).expect("parse matmul goldens");
     assert!(!cases.is_empty());
     let mut eng = DotEngine::new();
     for (ci, c) in cases.iter().enumerate() {

@@ -1,19 +1,26 @@
 //! End-to-end model contract: quantization of real test images, exact
 //! integer accumulators, offset corrections and final logits of the mlp1
 //! model must match the python export bit-for-bit (integers) / closely
-//! (floats).
+//! (floats). Skips (with a notice) when artifacts are not built.
+
+mod common;
 
 use pqs::data::Dataset;
 use pqs::formats::goldens::load_model_golden;
-use pqs::formats::manifest::Manifest;
 use pqs::formats::pqsw::PqswModel;
 use pqs::quant::{quantize_centered_slice_into, QParams};
 
 #[test]
 fn model_golden_quantization_and_accumulators() {
-    let dir = pqs::artifacts_dir();
-    let g = load_model_golden(dir.join("goldens/model_golden.json")).expect("model golden");
-    let man = Manifest::load_dir(&dir).expect("manifest");
+    let Some(path) =
+        common::golden_or_skip("model_golden_quantization_and_accumulators", "model_golden.json")
+    else {
+        return;
+    };
+    let Some(man) = common::manifest_or_skip("model_golden_quantization_and_accumulators") else {
+        return;
+    };
+    let g = load_model_golden(path).expect("model golden");
     let model_name = g.model.trim_end_matches(".pqsw");
     let model = PqswModel::load(man.model_path(model_name)).expect("model");
     let (_, fc) = model.q_layers().next().expect("q layer");

@@ -1,6 +1,11 @@
 //! PJRT runtime integration: load the AOT HLO artifacts (lowered from JAX +
 //! the Pallas kernel by `python/compile/aot.py`) and check their numerics
 //! against the bit-accurate Rust engine.
+//!
+//! Skips (with a notice) when the build has no PJRT backend (offline
+//! default: the `pjrt` cargo feature is off) or when artifacts are absent.
+
+mod common;
 
 use pqs::accum::Policy;
 use pqs::data::Dataset;
@@ -9,10 +14,19 @@ use pqs::models;
 use pqs::nn::engine::{Engine, EngineConfig};
 use pqs::runtime::Runtime;
 
+fn setup(test: &str) -> Option<(Manifest, Runtime)> {
+    if !Runtime::available() {
+        eprintln!("SKIP {test}: built without the `pjrt` feature");
+        return None;
+    }
+    let man = common::manifest_or_skip(test)?;
+    let rt = Runtime::cpu().expect("pjrt client");
+    Some((man, rt))
+}
+
 #[test]
 fn pallas_kernel_hlo_matches_engine() {
-    let man = Manifest::load_default().expect("run `make artifacts` first");
-    let rt = Runtime::cpu().expect("pjrt client");
+    let Some((man, rt)) = setup("pallas_kernel_hlo_matches_engine") else { return };
     let exe = rt.load_hlo(man.dir.join("model.hlo.txt")).expect("compile model.hlo.txt");
 
     let entry = man.test_dataset_for("mlp1").unwrap();
@@ -53,8 +67,7 @@ fn pallas_kernel_hlo_matches_engine() {
 
 #[test]
 fn fp32_hlo_baseline_matches_engine_exact() {
-    let man = Manifest::load_default().expect("manifest");
-    let rt = Runtime::cpu().expect("pjrt client");
+    let Some((man, rt)) = setup("fp32_hlo_baseline_matches_engine_exact") else { return };
     // mlp1 fp32 graph exported per hlo/index.json
     let name = &man.experiments["fig2"][0];
     let hlo = man.dir.join(format!("hlo/{name}_fp32.hlo.txt"));
@@ -92,8 +105,7 @@ fn fp32_hlo_baseline_matches_engine_exact() {
 
 #[test]
 fn cnn_fp32_hlo_runs() {
-    let man = Manifest::load_default().expect("manifest");
-    let rt = Runtime::cpu().expect("pjrt client");
+    let Some((man, rt)) = setup("cnn_fp32_hlo_runs") else { return };
     let cnns: Vec<&String> = man.experiments["fp32"]
         .iter()
         .filter(|n| !n.starts_with("mlp"))

@@ -1,0 +1,260 @@
+//! Serving-runtime tests that run WITHOUT artifacts: a tiny synthetic
+//! `PqswModel` exercises the persistent `Server` (backpressure, per-request
+//! errors, draining shutdown), the engine's parallel forward path, the
+//! exact `limit` semantics, and the sorted1 counting/radix pairing contract.
+
+mod common;
+
+use std::time::Duration;
+
+use pqs::accum::{self, Policy};
+use pqs::coordinator::{serve_requests, EvalService, Request, ServeError, Server, ServerConfig, SubmitError};
+use pqs::data::Dataset;
+use pqs::dot::DotEngine;
+use pqs::nn::engine::{Engine, EngineConfig};
+use pqs::util::rng::Pcg32;
+
+const DIM: usize = 64;
+const CLASSES: usize = 10;
+
+fn scfg(threads: usize, max_batch: usize, queue_cap: usize) -> ServerConfig {
+    ServerConfig {
+        threads,
+        max_batch,
+        queue_cap,
+        linger: Duration::from_micros(50),
+        engine_threads: 1,
+    }
+}
+
+fn img(seed: u64) -> Vec<f32> {
+    common::synth_images(1, DIM, seed)
+}
+
+#[test]
+fn server_serves_and_matches_offline_engine() {
+    let model = common::tiny_linear_model(DIM, CLASSES);
+    let cfg = EngineConfig { policy: Policy::Sorted, acc_bits: 20, ..Default::default() };
+    let srv = Server::start(&model, cfg, scfg(2, 8, 64));
+    let n = 100;
+    let mut pending = Vec::new();
+    for i in 0..n {
+        pending.push(srv.submit(i as u64, img(i as u64)).expect("submit"));
+    }
+    let mut eng = Engine::new(&model, cfg);
+    for p in pending {
+        let r = p.wait();
+        let want = eng.forward(&img(r.id), 1).unwrap().argmax(0);
+        assert_eq!(r.result, Ok(want), "request {}", r.id);
+        assert!(r.latency_us > 0.0);
+        assert!(r.compute_us > 0.0);
+        assert!(r.queue_us >= 0.0);
+        assert!(r.batch_size >= 1);
+        // e2e latency covers queue wait + compute (within timing noise)
+        assert!(r.latency_us + 1.0 >= r.compute_us);
+    }
+    let m = srv.shutdown();
+    assert_eq!(m.requests, n);
+    assert_eq!(m.errors, 0);
+    assert_eq!(m.latency.count(), n);
+    assert!(m.batches >= 1);
+    assert!(m.mean_batch >= 1.0);
+}
+
+#[test]
+fn bad_size_request_yields_error_response_not_panic() {
+    let model = common::tiny_linear_model(DIM, CLASSES);
+    let cfg = EngineConfig::default();
+    let srv = Server::start(&model, cfg, scfg(2, 4, 64));
+    // interleave good and malformed requests
+    let good1 = srv.submit(1, img(1)).unwrap();
+    let bad = srv.submit(2, vec![0.25; DIM / 2]).unwrap();
+    let bad_empty = srv.submit(3, Vec::new()).unwrap();
+    let good2 = srv.submit(4, img(4)).unwrap();
+    assert!(good1.wait().result.is_ok());
+    match bad.wait().result {
+        Err(ServeError::BadRequest(msg)) => assert!(msg.contains("32"), "msg: {msg}"),
+        other => panic!("expected BadRequest, got {other:?}"),
+    }
+    assert!(matches!(bad_empty.wait().result, Err(ServeError::BadRequest(_))));
+    // the service survived and still answers correctly
+    assert!(good2.wait().result.is_ok());
+    let m = srv.shutdown();
+    assert_eq!(m.requests, 4);
+    assert_eq!(m.errors, 2);
+}
+
+#[test]
+fn backpressure_bound_is_respected() {
+    // a deliberately slow model (long sorted1 dots) pins the single worker
+    // while the producer floods the bounded queue
+    let model = common::tiny_linear_model(2048, 64);
+    let cfg = EngineConfig { policy: Policy::Sorted1, acc_bits: 16, ..Default::default() };
+    let cap = 4;
+    let srv = Server::start(&model, cfg, scfg(1, 1, cap));
+    let image: Vec<f32> = common::synth_images(1, 2048, 7);
+    let mut accepted = Vec::new();
+    let mut fulls = 0usize;
+    for i in 0..(cap + 12) as u64 {
+        match srv.try_submit(i, image.clone()) {
+            Ok(p) => accepted.push(p),
+            Err(SubmitError::Full(returned)) => {
+                fulls += 1;
+                // the image is handed back intact for retry/load-shedding
+                assert_eq!(returned.len(), 2048);
+            }
+            Err(SubmitError::Closed(_)) => panic!("server is not closed"),
+        }
+        assert!(srv.queue_len() <= cap, "queue grew past its bound");
+    }
+    assert!(fulls > 0, "queue never filled: backpressure untested");
+    // every accepted request still completes
+    for p in accepted {
+        assert!(p.wait().result.is_ok());
+    }
+    srv.shutdown();
+}
+
+#[test]
+fn shutdown_drains_the_queue() {
+    let model = common::tiny_linear_model(DIM, CLASSES);
+    let cfg = EngineConfig::default();
+    let srv = Server::start(&model, cfg, scfg(2, 8, 256));
+    let n = 200;
+    let pending: Vec<_> =
+        (0..n).map(|i| srv.submit(i as u64, img(i as u64)).expect("submit")).collect();
+    // close immediately: every queued request must still be answered
+    let m = srv.shutdown();
+    assert_eq!(m.requests, n);
+    assert_eq!(m.errors, 0);
+    for p in pending {
+        assert!(p.wait().result.is_ok());
+    }
+}
+
+#[test]
+fn metrics_snapshot_and_server_restart() {
+    let model = common::tiny_linear_model(DIM, CLASSES);
+    let srv = Server::start(&model, EngineConfig::default(), scfg(1, 4, 16));
+    let metrics_before = srv.metrics();
+    assert_eq!(metrics_before.requests, 0);
+    let probe = srv.submit(0, img(0)).unwrap();
+    assert!(probe.wait().result.is_ok());
+    let m = srv.shutdown();
+    assert_eq!(m.requests, 1);
+    // the server is gone; a fresh one still works (no global state)
+    let model2 = common::tiny_linear_model(DIM, CLASSES);
+    let srv2 = Server::start(&model2, EngineConfig::default(), scfg(1, 4, 16));
+    assert!(srv2.submit(9, img(9)).unwrap().wait().result.is_ok());
+    srv2.shutdown();
+}
+
+#[test]
+fn serve_requests_shim_over_synthetic_model() {
+    let model = common::tiny_linear_model(DIM, CLASSES);
+    let cfg = EngineConfig { policy: Policy::Sorted, acc_bits: 20, ..Default::default() };
+    let n = 50;
+    let mut requests: Vec<Request> = (0..n)
+        .map(|i| Request { id: i as u64, image: img(i as u64) })
+        .collect();
+    requests.push(Request { id: n as u64, image: vec![0.0; 3] }); // malformed
+    let (resp, metrics) = serve_requests(&model, cfg, requests, 8, 2).unwrap();
+    assert_eq!(resp.len(), n + 1);
+    assert_eq!(metrics.requests, n + 1);
+    assert_eq!(metrics.errors, 1);
+    let mut eng = Engine::new(&model, cfg);
+    for (i, r) in resp.iter().enumerate() {
+        assert_eq!(r.id, i as u64, "sorted by id");
+        if i < n {
+            assert!(r.error.is_none());
+            let want = eng.forward(&img(r.id), 1).unwrap().argmax(0);
+            assert_eq!(r.class, want);
+            assert!(r.latency_us > 0.0, "per-request latency must be positive");
+        } else {
+            assert!(r.error.is_some(), "malformed request must carry an error");
+        }
+    }
+}
+
+#[test]
+fn parallel_forward_bit_identical_on_synthetic_model() {
+    let model = common::tiny_linear_model(DIM, CLASSES);
+    for policy in [Policy::Exact, Policy::Clip, Policy::Sorted, Policy::Sorted1] {
+        let cfg = EngineConfig { policy, acc_bits: 14, collect_stats: true, tile: 0 };
+        let imgs = common::synth_images(32, DIM, 99);
+        let mut serial = Engine::new(&model, cfg);
+        let mut parallel = Engine::new(&model, cfg).with_threads(4);
+        let a = serial.forward(&imgs, 32).unwrap();
+        let b = parallel.forward(&imgs, 32).unwrap();
+        assert_eq!(a.logits, b.logits, "{policy:?}");
+        assert_eq!(a.report.total(), b.report.total(), "{policy:?}");
+    }
+}
+
+#[test]
+fn forward_rejects_wrong_size_without_panic() {
+    let model = common::tiny_linear_model(DIM, CLASSES);
+    let mut eng = Engine::new(&model, EngineConfig::default());
+    let err = eng.forward(&[0.5; 10], 1).unwrap_err();
+    assert!(format!("{err:#}").contains("input size"));
+}
+
+#[test]
+fn evaluate_limit_is_exact_on_synthetic_dataset() {
+    let model = common::tiny_linear_model(DIM, CLASSES);
+    let n = 10;
+    let ds = Dataset {
+        n,
+        c: 1,
+        h: DIM,
+        w: 1,
+        pixels: (0..n * DIM).map(|i| (i * 37 % 251) as u8).collect(),
+        labels: (0..n).map(|i| (i % CLASSES) as u8).collect(),
+    };
+    // EvalService reports samples == limit even when it splits mid-batch
+    let cfg = EngineConfig { collect_stats: true, ..Default::default() };
+    let out = EvalService::new(&model, cfg).with_batch(4).evaluate(&ds, Some(7)).unwrap();
+    assert_eq!(out.samples, 7);
+    assert_eq!(out.report.total().dots, (7 * CLASSES) as u64);
+    // Engine::evaluate must truncate identically (it used to overshoot)
+    let mut eng = Engine::new(&model, cfg);
+    let (_, report) = eng.evaluate(&ds, 4, Some(7)).unwrap();
+    assert_eq!(report.total().dots, (7 * CLASSES) as u64);
+    // limit of 0 evaluates nothing
+    let (_, report0) = eng.evaluate(&ds, 4, Some(0)).unwrap();
+    assert_eq!(report0.total().dots, 0);
+}
+
+#[test]
+fn sorted1_fast_pairing_matches_reference_end_to_end() {
+    // ISSUE contract via the public API: the adaptive counting/radix
+    // pairing inside Policy::Sorted1 must be bit-identical (value AND
+    // event count) to a reference comparison-sort pairing
+    fn reference_sorted1(prods: &[i32], p: u32) -> (i64, u32) {
+        let mut pos: Vec<i32> = prods.iter().copied().filter(|&v| v > 0).collect();
+        let mut neg: Vec<i32> = prods.iter().copied().filter(|&v| v < 0).collect();
+        pos.sort_unstable_by(|a, b| b.cmp(a));
+        neg.sort_unstable();
+        let m = pos.len().min(neg.len());
+        let mut seq: Vec<i32> = (0..m).map(|i| pos[i] + neg[i]).collect();
+        if pos.len() > m {
+            seq.extend_from_slice(&pos[m..]);
+        } else {
+            seq.extend_from_slice(&neg[m..]);
+        }
+        accum::clip_accumulate(&seq, p)
+    }
+
+    let mut rng = Pcg32::new(0x50F7);
+    let mut eng = DotEngine::new();
+    for case in 0..400 {
+        // mix of lengths and value ranges so every sort strategy fires
+        let len = (rng.below(1500)) as usize;
+        let bound = [30i32, 500, 32385][rng.below(3) as usize];
+        let prods = rng.ivec(len, -bound, bound);
+        let p = 12 + rng.below(10);
+        let got = eng.dot(&prods, p, Policy::Sorted1);
+        let want = reference_sorted1(&prods, p);
+        assert_eq!(got, want, "case {case}: len {len} bound {bound} p {p}");
+    }
+}
