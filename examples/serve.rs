@@ -1,14 +1,19 @@
 //! End-to-end serving driver (DESIGN.md §deliverables): batched online
 //! inference through the persistent `Server` runtime.
 //!
-//! Three phases:
+//! Four phases:
 //! 1. **serve** — classification requests flow through the bounded queue
 //!    and the streaming dynamic batcher (per-request latency percentiles,
 //!    accuracy when real artifacts/labels are available);
 //! 2. **soak** — a 10k-synthetic-request flood through the bounded queue
 //!    (backpressure + dynamic batching under load, no panics, per-request
 //!    latency percentiles);
-//! 3. **PJRT cross-check** — the same batch through the AOT-compiled HLO
+//! 3. **HTTP front-end** — the same engine behind the hand-rolled
+//!    HTTP/1.1 server: keep-alive `POST /v1/classify` over loopback TCP,
+//!    a malformed request answered with 400, an already-expired deadline
+//!    answered with 504 (the `expired` metric increments), all without
+//!    killing the listener;
+//! 4. **PJRT cross-check** — the same batch through the AOT-compiled HLO
 //!    (Layer-1 Pallas kernel), proving all three layers compose. Skipped
 //!    gracefully when the build has no PJRT backend or artifacts are
 //!    absent.
@@ -19,17 +24,88 @@
 //!     cargo run --release --offline --example serve
 //!     (flags: --threads N --max-batch B --queue-cap Q --soak N)
 
+use std::io::{Read, Write};
+use std::net::TcpStream;
 use std::time::Duration;
 
+use anyhow::{anyhow, bail};
 use pqs::accum::Policy;
 use pqs::coordinator::{Server, ServerConfig, SubmitError};
 use pqs::data::Dataset;
 use pqs::formats::manifest::Manifest;
+use pqs::http::{HttpConfig, HttpServer};
 use pqs::models;
 use pqs::nn::engine::{Engine, EngineConfig};
 use pqs::runtime::Runtime;
 use pqs::util::cli::Args;
+use pqs::util::json::Json;
 use pqs::util::rng::Pcg32;
+
+/// Minimal blocking HTTP client for the phase-3 demo: keeps one socket
+/// open and reads Content-Length-framed responses off it.
+struct MiniClient {
+    stream: TcpStream,
+    buf: Vec<u8>,
+}
+
+impl MiniClient {
+    fn connect(addr: std::net::SocketAddr) -> anyhow::Result<MiniClient> {
+        let stream = TcpStream::connect(addr)?;
+        stream.set_read_timeout(Some(Duration::from_secs(10)))?;
+        Ok(MiniClient { stream, buf: Vec::new() })
+    }
+
+    fn request(&mut self, raw: &[u8]) -> anyhow::Result<(u16, Json)> {
+        self.stream.write_all(raw)?;
+        let mut tmp = [0u8; 4096];
+        loop {
+            if let Some(he) = self.buf.windows(4).position(|w| w == b"\r\n\r\n") {
+                let head_end = he + 4;
+                let head = std::str::from_utf8(&self.buf[..head_end])?.to_string();
+                let status: u16 = head
+                    .split(' ')
+                    .nth(1)
+                    .ok_or_else(|| anyhow!("bad status line"))?
+                    .parse()?;
+                let mut body_len = 0usize;
+                for line in head.lines().skip(1) {
+                    if let Some((k, v)) = line.split_once(':') {
+                        if k.eq_ignore_ascii_case("content-length") {
+                            body_len = v.trim().parse()?;
+                        }
+                    }
+                }
+                while self.buf.len() < head_end + body_len {
+                    let n = self.stream.read(&mut tmp)?;
+                    if n == 0 {
+                        bail!("eof mid-body");
+                    }
+                    self.buf.extend_from_slice(&tmp[..n]);
+                }
+                let body = Json::parse_bytes(&self.buf[head_end..head_end + body_len])
+                    .map_err(|e| anyhow!("bad json body: {e}"))?;
+                self.buf.drain(..head_end + body_len);
+                return Ok((status, body));
+            }
+            let n = self.stream.read(&mut tmp)?;
+            if n == 0 {
+                bail!("eof before response head");
+            }
+            self.buf.extend_from_slice(&tmp[..n]);
+        }
+    }
+}
+
+fn classify_request(image: &[f32], id: u64, deadline_ms: Option<f64>) -> Vec<u8> {
+    let nums: Vec<String> = image.iter().map(|v| format!("{v}")).collect();
+    let deadline = deadline_ms.map(|d| format!(",\"deadline_ms\":{d}")).unwrap_or_default();
+    let body = format!("{{\"id\":{id},\"image\":[{}]{deadline}}}", nums.join(","));
+    format!(
+        "POST /v1/classify HTTP/1.1\r\nHost: serve\r\nContent-Type: application/json\r\nContent-Length: {}\r\n\r\n{body}",
+        body.len()
+    )
+    .into_bytes()
+}
 
 fn main() -> anyhow::Result<()> {
     let args = Args::from_env();
@@ -44,6 +120,7 @@ fn main() -> anyhow::Result<()> {
         queue_cap,
         linger: Duration::from_micros(200),
         engine_threads: 1,
+        default_deadline: None,
     };
 
     // ---- load real artifacts when present, else a synthetic model -------
@@ -75,7 +152,7 @@ fn main() -> anyhow::Result<()> {
     let srv = Server::start(&model, cfg, scfg);
     let pending: Vec<_> = (0..n)
         .map(|i| {
-            srv.submit(i as u64, images[i * dim..(i + 1) * dim].to_vec())
+            srv.submit(i as u64, images[i * dim..(i + 1) * dim].to_vec(), None)
                 .expect("server accepts while open")
         })
         .collect();
@@ -112,11 +189,11 @@ fn main() -> anyhow::Result<()> {
     for i in 0..soak_n {
         let img = base[i % base.len()].clone();
         // fast path first; fall back to blocking submit under backpressure
-        match srv.try_submit(i as u64, img) {
+        match srv.try_submit(i as u64, img, None) {
             Ok(p) => pending.push(p),
             Err(SubmitError::Full(img)) => {
                 shed += 1;
-                match srv.submit(i as u64, img) {
+                match srv.submit(i as u64, img, None) {
                     Ok(p) => pending.push(p),
                     Err(_) => unreachable!("server is open"),
                 }
@@ -137,7 +214,45 @@ fn main() -> anyhow::Result<()> {
     );
     assert_eq!(ok, soak_n, "soak must answer every request");
 
-    // ---- phase 3: PJRT path (AOT artifact around the Pallas kernel) -----
+    // ---- phase 3: HTTP/1.1 front-end over loopback TCP ------------------
+    println!("\n-- HTTP front-end: keep-alive POST /v1/classify over loopback --");
+    let srv = Server::start(&model, cfg, scfg);
+    let http = HttpServer::start(srv, "127.0.0.1:0", HttpConfig::default())?;
+    println!("bound http://{}", http.local_addr());
+    let mut client = MiniClient::connect(http.local_addr())?;
+    let http_n = 16.min(n);
+    let mut agree = 0usize;
+    for i in 0..http_n {
+        let image = &images[i * dim..(i + 1) * dim];
+        let (status, body) = client.request(&classify_request(image, i as u64, None))?;
+        assert_eq!(status, 200, "well-formed request must classify");
+        let class = body
+            .get("class")
+            .and_then(Json::as_usize)
+            .ok_or_else(|| anyhow!("response missing class"))?;
+        if class == classes[i] {
+            agree += 1;
+        }
+    }
+    println!("HTTP<->engine agreement over one keep-alive connection: {agree}/{http_n}");
+    assert_eq!(agree, http_n, "HTTP path must match the engine-path classes");
+    // malformed body: 400, and the connection/listener survive
+    let bad = b"POST /v1/classify HTTP/1.1\r\nContent-Length: 9\r\n\r\n{not json";
+    let (status, _) = client.request(bad)?;
+    assert_eq!(status, 400, "malformed JSON must answer 400");
+    // an already-expired deadline: 504 without touching an engine
+    let image = &images[..dim];
+    let (status, body) = client.request(&classify_request(image, 9_999, Some(0.0)))?;
+    assert_eq!(status, 504, "expired deadline must answer 504");
+    println!(
+        "expired-deadline request answered 504 ({})",
+        body.get("error").and_then(Json::as_str).unwrap_or("?")
+    );
+    let http_metrics = http.shutdown();
+    http_metrics.print();
+    assert!(http_metrics.expired >= 1, "expired counter must increment");
+
+    // ---- phase 4: PJRT path (AOT artifact around the Pallas kernel) -----
     println!("\n-- PJRT path (artifacts/model.hlo.txt: Pallas sorted1 kernel, p=16) --");
     match (&artifacts, Runtime::available()) {
         (Some(man), true) => {

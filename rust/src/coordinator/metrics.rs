@@ -85,6 +85,10 @@ impl LatencyRecorder {
 pub struct ServeMetrics {
     pub requests: usize,
     pub errors: usize,
+    /// requests whose deadline passed before batch assembly; they were
+    /// skipped by the workers without touching an engine (counted in
+    /// `requests`, separate from `errors`)
+    pub expired: usize,
     pub wall_s: f64,
     pub throughput_rps: f64,
     /// engine invocations (dynamic batches) executed
@@ -104,9 +108,9 @@ pub struct ServeMetrics {
 impl ServeMetrics {
     pub fn print(&self) {
         println!(
-            "requests={} errors={} wall={:.2}s throughput={:.1} req/s  batches={} (mean {:.1} req/batch)",
-            self.requests, self.errors, self.wall_s, self.throughput_rps, self.batches,
-            self.mean_batch,
+            "requests={} errors={} expired={} wall={:.2}s throughput={:.1} req/s  batches={} (mean {:.1} req/batch)",
+            self.requests, self.errors, self.expired, self.wall_s, self.throughput_rps,
+            self.batches, self.mean_batch,
         );
         println!(
             "  e2e latency  mean={:.1}us p50={:.1}us p95={:.1}us p99={:.1}us",
@@ -135,6 +139,8 @@ impl ServeMetrics {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::rng::Pcg32;
+    use crate::util::stats;
 
     #[test]
     fn recorder_percentiles() {
@@ -179,7 +185,68 @@ mod tests {
         let m = ServeMetrics::default();
         assert_eq!(m.requests, 0);
         assert_eq!(m.errors, 0);
+        assert_eq!(m.expired, 0);
         assert_eq!(m.batches, 0);
         assert_eq!(m.latency.count(), 0);
+    }
+
+    #[test]
+    fn reservoir_replay_is_deterministic() {
+        // the reservoir draw is a pure function of the sample index, so two
+        // recorders fed the same seeded stream agree exactly, even well past
+        // capacity — percentile summaries are reproducible across runs
+        let feed = |seed: u64| {
+            let mut rng = Pcg32::new(seed);
+            let mut r = LatencyRecorder::default();
+            for _ in 0..RESERVOIR_CAP + 10_000 {
+                r.record(rng.below(1_000_000) as f64);
+            }
+            r
+        };
+        let a = feed(42);
+        let b = feed(42);
+        assert_eq!(a.count(), b.count());
+        assert_eq!(a.mean_us(), b.mean_us());
+        assert_eq!(a.max_us(), b.max_us());
+        assert_eq!(a.p50_us(), b.p50_us());
+        assert_eq!(a.p95_us(), b.p95_us());
+        assert_eq!(a.p99_us(), b.p99_us());
+        // a different stream produces a different summary
+        let c = feed(43);
+        assert_ne!(a.mean_us(), c.mean_us());
+    }
+
+    #[test]
+    fn reservoir_stays_bounded_exactly_at_capacity() {
+        let mut r = LatencyRecorder::default();
+        for i in 0..RESERVOIR_CAP + 1 {
+            r.record(i as f64);
+        }
+        assert_eq!(r.samples.len(), RESERVOIR_CAP, "reservoir must not grow past its cap");
+        assert_eq!(r.count(), RESERVOIR_CAP + 1, "count stays exact");
+        for _ in 0..10_000 {
+            r.record(1.0);
+        }
+        assert_eq!(r.samples.len(), RESERVOIR_CAP);
+    }
+
+    #[test]
+    fn quantiles_exact_below_capacity() {
+        // below capacity every sample is retained, so quantiles are exact
+        // and insertion order is irrelevant
+        let mut vals: Vec<f64> = (1..=1000).map(|i| i as f64).collect();
+        let mut rng = Pcg32::new(7);
+        rng.shuffle(&mut vals);
+        let mut r = LatencyRecorder::default();
+        for &v in &vals {
+            r.record(v);
+        }
+        let sorted: Vec<f64> = (1..=1000).map(|i| i as f64).collect();
+        assert_eq!(r.p50_us(), stats::percentile(&sorted, 50.0));
+        assert_eq!(r.p95_us(), stats::percentile(&sorted, 95.0));
+        assert_eq!(r.p99_us(), stats::percentile(&sorted, 99.0));
+        assert_eq!(r.mean_us(), 500.5);
+        assert_eq!(r.max_us(), 1000.0);
+        assert_eq!(r.count(), 1000);
     }
 }

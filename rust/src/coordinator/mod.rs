@@ -6,8 +6,10 @@
 //! * [`server::Server`] — the persistent serving runtime: long-lived
 //!   workers with pinned engines, a bounded request queue with
 //!   backpressure, streaming dynamic batching with a linger window,
-//!   per-request error responses and latency accounting, graceful
-//!   draining shutdown;
+//!   per-request deadlines (expired jobs are skipped before reaching an
+//!   engine), per-request error responses and latency accounting,
+//!   graceful draining shutdown. The HTTP/1.1 front-end (`crate::http`)
+//!   puts a network protocol in front of it;
 //! * `EvalService::evaluate` — whole-dataset sweeps used by the figure
 //!   harnesses (shards batches over a scoped pool);
 //! * `serve_requests` — the legacy one-shot request/response front-end,
@@ -158,12 +160,13 @@ pub fn serve_requests(
         queue_cap: (threads * max_batch * 4).max(64),
         linger: std::time::Duration::from_micros(100),
         engine_threads: 1,
+        default_deadline: None,
     };
     let srv = Server::start(model, cfg, scfg);
     let mut pending = Vec::with_capacity(requests.len());
     let mut responses: Vec<Response> = Vec::with_capacity(requests.len());
     for r in requests {
-        match srv.submit(r.id, r.image) {
+        match srv.submit(r.id, r.image, None) {
             Ok(p) => pending.push(p),
             Err(SubmitError::Full(_)) | Err(SubmitError::Closed(_)) => {
                 // cannot happen here (submit blocks; we have not closed),

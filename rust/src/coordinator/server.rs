@@ -17,6 +17,15 @@
 //! experiences). `shutdown` closes the queue, lets workers drain every
 //! queued request, joins them, and returns the final [`ServeMetrics`].
 //!
+//! Deadlines and cancellation live in the queue itself: `submit` takes an
+//! optional per-request deadline (falling back to
+//! [`ServerConfig::default_deadline`]), and workers *skip* any job whose
+//! deadline has passed at batch-assembly time — the job is answered with
+//! [`ServeError::Expired`] and counted in `ServeMetrics::expired` without
+//! ever touching an engine. A slow or abandoned client can therefore never
+//! hold a pinned engine hostage; the HTTP front-end (`crate::http`) maps
+//! expiry to `504 Gateway Timeout`.
+//!
 //! The legacy one-shot front-ends (`coordinator::serve_requests`) are thin
 //! shims over this type.
 
@@ -38,6 +47,12 @@ pub enum ServeError {
     BadRequest(String),
     /// The engine failed on the batch this request rode in.
     Internal(String),
+    /// The request's deadline passed before a worker assembled it into a
+    /// batch; it was cancelled without touching an engine.
+    Expired {
+        /// how long the request sat in the queue before being skipped
+        waited_us: u64,
+    },
 }
 
 impl std::fmt::Display for ServeError {
@@ -45,6 +60,9 @@ impl std::fmt::Display for ServeError {
         match self {
             ServeError::BadRequest(m) => write!(f, "bad request: {m}"),
             ServeError::Internal(m) => write!(f, "internal error: {m}"),
+            ServeError::Expired { waited_us } => {
+                write!(f, "deadline exceeded: expired after {waited_us}us in queue")
+            }
         }
     }
 }
@@ -98,6 +116,26 @@ impl PendingResponse {
         })
     }
 
+    /// Block until the response arrives or `timeout` elapses; `None` on
+    /// timeout (the request stays in flight server-side). Tests use this
+    /// instead of [`PendingResponse::wait`] so a queue-logic regression
+    /// fails fast instead of hanging the suite; the HTTP front-end uses it
+    /// to bound how long a connection handler can be held.
+    pub fn wait_timeout(self, timeout: Duration) -> Option<ServeResponse> {
+        match self.rx.recv_timeout(timeout) {
+            Ok(r) => Some(r),
+            Err(mpsc::RecvTimeoutError::Timeout) => None,
+            Err(mpsc::RecvTimeoutError::Disconnected) => Some(ServeResponse {
+                id: self.id,
+                result: Err(ServeError::Internal("server dropped the request channel".into())),
+                queue_us: 0.0,
+                compute_us: 0.0,
+                latency_us: 0.0,
+                batch_size: 0,
+            }),
+        }
+    }
+
     /// Non-blocking poll.
     pub fn try_wait(&self) -> Option<ServeResponse> {
         self.rx.try_recv().ok()
@@ -119,6 +157,10 @@ pub struct ServerConfig {
     /// intra-forward engine threads per worker (keep 1 unless workers are
     /// fewer than cores: inter-batch parallelism is usually better)
     pub engine_threads: usize,
+    /// deadline applied to requests submitted without one (`None` =
+    /// requests never expire). Expired requests are skipped by workers and
+    /// answered with [`ServeError::Expired`] before reaching an engine.
+    pub default_deadline: Option<Duration>,
 }
 
 impl Default for ServerConfig {
@@ -129,6 +171,7 @@ impl Default for ServerConfig {
             queue_cap: 1024,
             linger: Duration::from_micros(200),
             engine_threads: 1,
+            default_deadline: None,
         }
     }
 }
@@ -137,6 +180,7 @@ struct Job {
     id: u64,
     image: Vec<f32>,
     enqueued: Instant,
+    deadline: Option<Instant>,
     tx: mpsc::Sender<ServeResponse>,
 }
 
@@ -149,6 +193,7 @@ struct QueueState {
 struct MetricsState {
     completed: usize,
     errors: usize,
+    expired: usize,
     batches: usize,
     batched_requests: usize,
     latency: LatencyRecorder,
@@ -210,7 +255,18 @@ impl Server {
 
     /// Enqueue a request, blocking while the bounded queue is full
     /// (backpressure). Fails only once the server is shutting down.
-    pub fn submit(&self, id: u64, image: Vec<f32>) -> Result<PendingResponse, SubmitError> {
+    ///
+    /// `deadline` bounds how long the request may wait for batch assembly;
+    /// `None` falls back to [`ServerConfig::default_deadline`]. A request
+    /// whose deadline passes before a worker picks it up is answered with
+    /// [`ServeError::Expired`] without touching an engine.
+    pub fn submit(
+        &self,
+        id: u64,
+        image: Vec<f32>,
+        deadline: Option<Duration>,
+    ) -> Result<PendingResponse, SubmitError> {
+        let deadline = self.resolve_deadline(deadline);
         let (tx, rx) = mpsc::channel();
         let mut q = self.shared.queue.lock().unwrap();
         loop {
@@ -218,7 +274,7 @@ impl Server {
                 return Err(SubmitError::Closed(image));
             }
             if q.jobs.len() < self.shared.scfg.queue_cap {
-                q.jobs.push_back(Job { id, image, enqueued: Instant::now(), tx });
+                q.jobs.push_back(Job { id, image, enqueued: Instant::now(), deadline, tx });
                 drop(q);
                 self.shared.not_empty.notify_one();
                 return Ok(PendingResponse { id, rx });
@@ -228,8 +284,14 @@ impl Server {
     }
 
     /// Enqueue without blocking; `Full` hands the image back when the
-    /// backpressure bound is hit.
-    pub fn try_submit(&self, id: u64, image: Vec<f32>) -> Result<PendingResponse, SubmitError> {
+    /// backpressure bound is hit. Deadline semantics match [`Server::submit`].
+    pub fn try_submit(
+        &self,
+        id: u64,
+        image: Vec<f32>,
+        deadline: Option<Duration>,
+    ) -> Result<PendingResponse, SubmitError> {
+        let deadline = self.resolve_deadline(deadline);
         let (tx, rx) = mpsc::channel();
         let mut q = self.shared.queue.lock().unwrap();
         if q.closed {
@@ -238,10 +300,14 @@ impl Server {
         if q.jobs.len() >= self.shared.scfg.queue_cap {
             return Err(SubmitError::Full(image));
         }
-        q.jobs.push_back(Job { id, image, enqueued: Instant::now(), tx });
+        q.jobs.push_back(Job { id, image, enqueued: Instant::now(), deadline, tx });
         drop(q);
         self.shared.not_empty.notify_one();
         Ok(PendingResponse { id, rx })
+    }
+
+    fn resolve_deadline(&self, deadline: Option<Duration>) -> Option<Instant> {
+        deadline.or(self.shared.scfg.default_deadline).map(|d| Instant::now() + d)
     }
 
     /// Requests currently waiting in the queue.
@@ -283,10 +349,11 @@ impl Drop for Server {
 fn snapshot(shared: &Shared) -> ServeMetrics {
     let m = shared.metrics.lock().unwrap();
     let wall_s = shared.started.elapsed().as_secs_f64();
-    let requests = m.completed + m.errors;
+    let requests = m.completed + m.errors + m.expired;
     ServeMetrics {
         requests,
         errors: m.errors,
+        expired: m.expired,
         wall_s,
         throughput_rps: requests as f64 / wall_s.max(1e-9),
         batches: m.batches,
@@ -349,11 +416,16 @@ fn worker_loop(shared: &Shared) {
 }
 
 fn process_batch(engine: &mut Engine, shared: &Shared, dim: usize, jobs: Vec<Job>) {
-    // per-request validation: a malformed request answers with an error and
-    // never reaches the engine (one bad request cannot hurt batch-mates)
+    // per-request validation: an expired or malformed request answers with
+    // an error and never reaches the engine (one bad request cannot hurt
+    // batch-mates, and a dead client cannot pin an engine)
+    let now = Instant::now();
     let mut valid: Vec<Job> = Vec::with_capacity(jobs.len());
     for j in jobs {
-        if j.image.len() != dim {
+        if j.deadline.is_some_and(|d| now >= d) {
+            let waited_us = dur_us(j.enqueued.elapsed()) as u64;
+            respond(shared, &j, Err(ServeError::Expired { waited_us }), 0.0, 0);
+        } else if j.image.len() != dim {
             let err = ServeError::BadRequest(format!(
                 "image size {} != model input {dim}",
                 j.image.len()
@@ -415,6 +487,7 @@ fn respond(
         let mut m = shared.metrics.lock().unwrap();
         match &resp.result {
             Ok(_) => m.completed += 1,
+            Err(ServeError::Expired { .. }) => m.expired += 1,
             Err(_) => m.errors += 1,
         }
         m.latency.record(resp.latency_us);

@@ -114,4 +114,63 @@ mod tests {
         let b = crate::accum::clip_accumulate(&prods, 16);
         assert_eq!(a, b);
     }
+
+    #[test]
+    fn wide_accumulator_matches_single_tile_reference_for_any_tile() {
+        // 8-bit products are bounded by 127*128 = 16256, and at most 256 of
+        // them sum to < 2^23 in magnitude — so a p=28 accumulator can never
+        // clip and EVERY tile size must return the single-tile reference
+        // value (= the exact sum) with zero overflow events
+        prop::check(
+            "tiled-wide-p-matches-reference",
+            300,
+            |r: &mut Pcg32| {
+                let prods = prop::gen_prods(r, 256, 8);
+                let tile = 1 + r.below(300) as usize;
+                (prods, tile)
+            },
+            |(prods, tile)| {
+                let mut a = DotEngine::new();
+                let mut b = DotEngine::new();
+                let (v, ev) = tiled_sorted_dot(&mut a, prods, 28, *tile);
+                let (want, ev_ref) = tiled_sorted_dot(&mut b, prods, 28, 0);
+                let exact: i64 = prods.iter().map(|&x| x as i64).sum();
+                if ev != 0 || ev_ref != 0 {
+                    return Err(format!("wide p must be clean, events {ev}/{ev_ref}"));
+                }
+                if v != want || v != exact {
+                    return Err(format!("tile {tile}: {v} != reference {want} / exact {exact}"));
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn overflow_events_monotone_nonincreasing_in_p() {
+        // the paired sequence depends only on (prods, tile), never on p, so
+        // widening the accumulator can only remove clip events — overflow
+        // counts must fall monotonically as p grows
+        prop::check(
+            "tiled-events-monotone-in-p",
+            200,
+            |r: &mut Pcg32| {
+                let prods = prop::gen_prods(r, 192, 8);
+                let tile = [1usize, 4, 16, 64, 0][r.below(5) as usize];
+                (prods, tile)
+            },
+            |(prods, tile)| {
+                let mut e = DotEngine::new();
+                let mut prev = u32::MAX;
+                for p in 8..=24 {
+                    let (_, ev) = tiled_sorted_dot(&mut e, prods, p, *tile);
+                    if ev > prev {
+                        return Err(format!("events grew {prev} -> {ev} at p={p} tile={tile}"));
+                    }
+                    prev = ev;
+                }
+                Ok(())
+            },
+        );
+    }
 }

@@ -1,0 +1,79 @@
+//! Hand-rolled HTTP/1.1 serving front-end (no hyper/tonic/tokio offline).
+//!
+//! This is the network boundary in front of the persistent serving runtime
+//! [`crate::coordinator::Server`]: a [`server::HttpServer`] accepts loopback
+//! or LAN TCP connections, parses requests incrementally and zero-copy
+//! ([`parser`]), decodes classification payloads into `Server::submit`
+//! calls with per-request deadlines, and streams back JSON built with
+//! [`crate::util::json`]. Connection handling rides the bounded
+//! [`crate::util::pool::WorkerPool`]; saturated pools shed with `503`
+//! instead of queueing without bound.
+//!
+//! # Wire protocol
+//!
+//! Only HTTP/1.1 and HTTP/1.0 are spoken. Persistent connections follow
+//! the usual defaults (1.1 keep-alive unless `Connection: close`; 1.0
+//! close unless `Connection: keep-alive`) and pipelined requests on one
+//! connection are answered in order. Request bodies require
+//! `Content-Length`; `Transfer-Encoding` (chunked) is rejected with `400`
+//! rather than ignored, closing a request-smuggling vector.
+//!
+//! ## `POST /v1/classify`
+//!
+//! Request body (`Content-Type: application/json`):
+//!
+//! ```json
+//! {"image": [0.1, 0.5, ...], "id": 7, "deadline_ms": 50.0}
+//! ```
+//!
+//! * `image` — required; flat row-major pixel array matching the model's
+//!   input dimension.
+//! * `id` — optional client request id, echoed back verbatim;
+//!   auto-assigned when absent. A present but non-integer or negative
+//!   `id` is rejected with `400` (never silently replaced).
+//! * `deadline_ms` — optional per-request deadline. If the request is
+//!   still queued when it expires, workers skip it *before* it touches an
+//!   engine and the response is `504` with an `"error"` body. Without it
+//!   the coordinator's `ServerConfig::default_deadline` applies.
+//!
+//! `200` response body:
+//!
+//! ```json
+//! {"id": 7, "class": 3, "queue_us": 120.0, "compute_us": 850.0,
+//!  "latency_us": 990.0, "batch_size": 8}
+//! ```
+//!
+//! ## `GET /v1/metrics`
+//!
+//! `200` with the live [`crate::coordinator::ServeMetrics`] snapshot:
+//! request/error/expired counters, batch stats, and
+//! mean/p50/p95/p99/max summaries for the end-to-end latency, queue-wait
+//! and compute recorders.
+//!
+//! ## `GET /healthz`
+//!
+//! `200` with `{"status":"ok"}` — liveness only.
+//!
+//! ## Status codes
+//!
+//! | code | meaning |
+//! |------|---------|
+//! | 200  | classified / snapshot served |
+//! | 400  | malformed HTTP (bad request line, header, `Content-Length`, chunked), invalid JSON, missing/wrong-size `image` |
+//! | 404  | unknown path |
+//! | 405  | wrong method on a known path (`Allow` header lists the right one) |
+//! | 408  | a partial request stalled past the keep-alive timeout |
+//! | 413  | head or declared body over the configured limits |
+//! | 500  | engine failure on the batch the request rode in |
+//! | 503  | request queue full, connection backlog full, or shutting down |
+//! | 504  | per-request deadline expired in queue, or the response-wait backstop fired |
+//!
+//! All error bodies are `{"error": "<message>"}`. Protocol-level errors
+//! (400/413/408) close the connection; semantic errors (404/405 and the
+//! JSON-level 400s) keep it open per the usual keep-alive rules.
+
+pub mod parser;
+pub mod server;
+
+pub use parser::{parse_request, Limits, ParseError, Request, Version};
+pub use server::{HttpConfig, HttpServer};

@@ -1,0 +1,400 @@
+//! Incremental, zero-copy HTTP/1.1 request parser.
+//!
+//! [`parse_request`] is a pure function of the connection buffer's current
+//! prefix: it returns `Ok(None)` until one complete request (head + body)
+//! is buffered, then a [`Request`] whose `&str`/`&[u8]` fields *borrow*
+//! the buffer — no allocation beyond the header index vector, no copying
+//! of the body. Because the decision is recomputed from the prefix, the
+//! parse result is identical no matter how the bytes were split across
+//! `read()` boundaries (the chunking property test in `rust/tests/http.rs`
+//! and the exhaustive prefix test below both pin this down).
+//!
+//! Strictness follows RFC 9112 where it prevents request smuggling:
+//! whitespace before the header colon, obsolete line folding,
+//! `Transfer-Encoding` (chunked is not implemented), conflicting or
+//! non-numeric `Content-Length` values are all rejected with a 400-class
+//! error. Line endings are lenient: both CRLF and bare LF terminate lines.
+//! Head/body size limits map to 413.
+
+/// Limits enforced while parsing. Exceeding a size limit maps to
+/// `413 Content Too Large`.
+#[derive(Clone, Copy, Debug)]
+pub struct Limits {
+    /// max bytes of request line + headers, terminator included
+    pub max_head: usize,
+    /// max number of header fields
+    pub max_headers: usize,
+    /// max declared `Content-Length`
+    pub max_body: usize,
+}
+
+impl Default for Limits {
+    fn default() -> Self {
+        Limits { max_head: 16 * 1024, max_headers: 64, max_body: 4 * 1024 * 1024 }
+    }
+}
+
+/// Parse failure, carrying the HTTP status code it maps onto.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum ParseError {
+    /// 400 Bad Request
+    Bad(&'static str),
+    /// 413 Content Too Large
+    TooLarge(&'static str),
+}
+
+impl ParseError {
+    pub fn status(&self) -> u16 {
+        match self {
+            ParseError::Bad(_) => 400,
+            ParseError::TooLarge(_) => 413,
+        }
+    }
+
+    pub fn message(&self) -> &'static str {
+        match self {
+            ParseError::Bad(m) | ParseError::TooLarge(m) => m,
+        }
+    }
+}
+
+impl std::fmt::Display for ParseError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{} {}", self.status(), self.message())
+    }
+}
+
+impl std::error::Error for ParseError {}
+
+/// HTTP version from the request line.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Version {
+    Http10,
+    Http11,
+}
+
+/// One parsed request. Every field borrows the connection buffer
+/// (zero-copy); drop the request before draining consumed bytes.
+#[derive(Debug)]
+pub struct Request<'a> {
+    pub method: &'a str,
+    pub target: &'a str,
+    pub version: Version,
+    /// header fields in wire order, names *not* normalized — use
+    /// [`Request::header`] for case-insensitive lookup
+    pub headers: Vec<(&'a str, &'a str)>,
+    pub body: &'a [u8],
+}
+
+impl<'a> Request<'a> {
+    /// Case-insensitive header lookup (first occurrence).
+    pub fn header(&self, name: &str) -> Option<&'a str> {
+        self.headers.iter().find(|(k, _)| k.eq_ignore_ascii_case(name)).map(|&(_, v)| v)
+    }
+
+    /// Request target with any query string stripped.
+    pub fn path(&self) -> &'a str {
+        self.target.split('?').next().unwrap_or(self.target)
+    }
+
+    /// Connection persistence: HTTP/1.1 defaults to keep-alive unless
+    /// `Connection: close`; HTTP/1.0 defaults to close unless
+    /// `Connection: keep-alive`.
+    pub fn keep_alive(&self) -> bool {
+        let conn = self.header("connection").unwrap_or("");
+        let has = |tok: &str| conn.split(',').any(|t| t.trim().eq_ignore_ascii_case(tok));
+        match self.version {
+            Version::Http11 => !has("close"),
+            Version::Http10 => has("keep-alive"),
+        }
+    }
+}
+
+/// End of the head section: byte offset just past the blank line.
+/// Accepts `\r\n\r\n`, `\n\n`, and mixed (`\n\r\n`) terminators.
+fn find_head_end(buf: &[u8]) -> Option<usize> {
+    let mut i = 0;
+    while i < buf.len() {
+        if buf[i] == b'\n' {
+            if buf.get(i + 1) == Some(&b'\n') {
+                return Some(i + 2);
+            }
+            if buf.get(i + 1) == Some(&b'\r') && buf.get(i + 2) == Some(&b'\n') {
+                return Some(i + 3);
+            }
+        }
+        i += 1;
+    }
+    None
+}
+
+/// RFC 9110 `tchar`: the characters legal in tokens (methods, header names).
+fn is_tchar(b: u8) -> bool {
+    b.is_ascii_alphanumeric()
+        || matches!(
+            b,
+            b'!' | b'#'
+                | b'$'
+                | b'%'
+                | b'&'
+                | b'\''
+                | b'*'
+                | b'+'
+                | b'-'
+                | b'.'
+                | b'^'
+                | b'_'
+                | b'`'
+                | b'|'
+                | b'~'
+        )
+}
+
+/// Try to parse one complete request from the front of `buf`.
+///
+/// * `Ok(None)` — the buffer does not yet hold a complete request; read
+///   more bytes and call again (incremental parsing).
+/// * `Ok(Some((request, consumed)))` — one request parsed; drain
+///   `consumed` bytes once the borrow ends. Pipelined bytes after
+///   `consumed` are untouched.
+/// * `Err(_)` — the prefix can never become a valid request; answer with
+///   the error's status and close the connection.
+pub fn parse_request<'a>(
+    buf: &'a [u8],
+    limits: &Limits,
+) -> Result<Option<(Request<'a>, usize)>, ParseError> {
+    let head_end = match find_head_end(buf) {
+        Some(e) => e,
+        None => {
+            if buf.len() > limits.max_head {
+                return Err(ParseError::TooLarge("request head exceeds limit"));
+            }
+            return Ok(None);
+        }
+    };
+    if head_end > limits.max_head {
+        return Err(ParseError::TooLarge("request head exceeds limit"));
+    }
+    let head = std::str::from_utf8(&buf[..head_end])
+        .map_err(|_| ParseError::Bad("request head is not valid utf-8"))?;
+    // split into lines, tolerating CRLF and bare LF; the terminating blank
+    // line(s) become trailing empties — drop them
+    let mut lines: Vec<&str> =
+        head.split('\n').map(|l| l.strip_suffix('\r').unwrap_or(l)).collect();
+    while lines.last().is_some_and(|l| l.is_empty()) {
+        lines.pop();
+    }
+    if lines.is_empty() {
+        return Err(ParseError::Bad("empty request line"));
+    }
+
+    // ---- request line ----------------------------------------------------
+    let mut parts = lines[0].split(' ');
+    let method = parts.next().unwrap_or("");
+    let target = parts.next().ok_or(ParseError::Bad("malformed request line"))?;
+    let version = parts.next().ok_or(ParseError::Bad("malformed request line"))?;
+    if parts.next().is_some() {
+        return Err(ParseError::Bad("malformed request line"));
+    }
+    if method.is_empty() || !method.bytes().all(is_tchar) {
+        return Err(ParseError::Bad("invalid method token"));
+    }
+    if target.is_empty() || target.bytes().any(|b| b <= b' ' || b == 0x7f) {
+        return Err(ParseError::Bad("invalid request target"));
+    }
+    let version = match version {
+        "HTTP/1.1" => Version::Http11,
+        "HTTP/1.0" => Version::Http10,
+        _ => return Err(ParseError::Bad("unsupported http version")),
+    };
+
+    // ---- header fields ---------------------------------------------------
+    let mut headers: Vec<(&str, &str)> = Vec::with_capacity(lines.len().saturating_sub(1));
+    for line in &lines[1..] {
+        if headers.len() >= limits.max_headers {
+            return Err(ParseError::TooLarge("too many header fields"));
+        }
+        if line.starts_with(' ') || line.starts_with('\t') {
+            return Err(ParseError::Bad("obsolete header line folding"));
+        }
+        let (name, value) =
+            line.split_once(':').ok_or(ParseError::Bad("header line without ':'"))?;
+        if name.is_empty() || !name.bytes().all(is_tchar) {
+            // also rejects whitespace before the colon (smuggling vector)
+            return Err(ParseError::Bad("invalid header name"));
+        }
+        let value = value.trim_matches(|c: char| c == ' ' || c == '\t');
+        if value.bytes().any(|b| (b < 0x20 && b != b'\t') || b == 0x7f) {
+            return Err(ParseError::Bad("invalid header value"));
+        }
+        headers.push((name, value));
+    }
+
+    // ---- body framing ----------------------------------------------------
+    // chunked (or any transfer coding) is not implemented; ignoring the
+    // header instead of rejecting it would be a request-smuggling vector
+    if headers.iter().any(|(k, _)| k.eq_ignore_ascii_case("transfer-encoding")) {
+        return Err(ParseError::Bad("transfer-encoding not supported"));
+    }
+    let mut content_length: Option<usize> = None;
+    for (k, v) in &headers {
+        if !k.eq_ignore_ascii_case("content-length") {
+            continue;
+        }
+        if v.is_empty() || !v.bytes().all(|b| b.is_ascii_digit()) {
+            return Err(ParseError::Bad("invalid content-length"));
+        }
+        let n: usize =
+            v.parse().map_err(|_| ParseError::TooLarge("declared body exceeds limit"))?;
+        match content_length {
+            Some(prev) if prev != n => {
+                return Err(ParseError::Bad("conflicting content-length values"))
+            }
+            _ => content_length = Some(n),
+        }
+    }
+    let content_length = content_length.unwrap_or(0);
+    if content_length > limits.max_body {
+        return Err(ParseError::TooLarge("declared body exceeds limit"));
+    }
+    let total = head_end + content_length;
+    if buf.len() < total {
+        return Ok(None);
+    }
+    let body = &buf[head_end..total];
+    Ok(Some((Request { method, target, version, headers, body }, total)))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(buf: &[u8]) -> Result<Option<(Request<'_>, usize)>, ParseError> {
+        parse_request(buf, &Limits::default())
+    }
+
+    fn full(buf: &[u8]) -> (Request<'_>, usize) {
+        parse(buf).expect("valid").expect("complete")
+    }
+
+    #[test]
+    fn parses_get_with_headers() {
+        let raw = b"GET /v1/metrics?pretty=1 HTTP/1.1\r\nHost: localhost\r\nX-Trace: abc\r\n\r\n";
+        let (req, consumed) = full(raw);
+        assert_eq!(consumed, raw.len());
+        assert_eq!(req.method, "GET");
+        assert_eq!(req.target, "/v1/metrics?pretty=1");
+        assert_eq!(req.path(), "/v1/metrics");
+        assert_eq!(req.version, Version::Http11);
+        assert_eq!(req.header("host"), Some("localhost"));
+        assert_eq!(req.header("X-TRACE"), Some("abc"));
+        assert_eq!(req.header("missing"), None);
+        assert!(req.body.is_empty());
+        assert!(req.keep_alive());
+    }
+
+    #[test]
+    fn parses_post_body_and_preserves_pipelined_bytes() {
+        let raw = b"POST /v1/classify HTTP/1.1\r\nContent-Length: 5\r\n\r\nhelloGET / HTTP/1.1\r\n\r\n";
+        let (req, consumed) = full(raw);
+        assert_eq!(req.method, "POST");
+        assert_eq!(req.body, b"hello");
+        // the pipelined second request is untouched past `consumed`
+        assert!(raw[consumed..].starts_with(b"GET / "));
+        let (req2, consumed2) = full(&raw[consumed..]);
+        assert_eq!(req2.method, "GET");
+        assert_eq!(consumed + consumed2, raw.len());
+    }
+
+    #[test]
+    fn bare_lf_line_endings_accepted() {
+        let raw = b"POST /x HTTP/1.1\nContent-Length: 2\n\nok";
+        let (req, consumed) = full(raw);
+        assert_eq!(req.body, b"ok");
+        assert_eq!(consumed, raw.len());
+    }
+
+    #[test]
+    fn every_prefix_of_a_valid_request_is_incomplete_not_an_error() {
+        // the incremental contract: for EVERY split point, the prefix
+        // parses to Ok(None) and the full buffer parses identically —
+        // so the server's read-loop behaves the same no matter how the
+        // bytes are chunked across read() boundaries
+        let raw: &[u8] =
+            b"POST /v1/classify HTTP/1.1\r\nHost: t\r\nContent-Length: 11\r\n\r\n{\"image\":1}";
+        for cut in 0..raw.len() {
+            match parse(&raw[..cut]) {
+                Ok(None) => {}
+                other => panic!("prefix {cut} must be incomplete, got {other:?}"),
+            }
+        }
+        let (req, consumed) = full(raw);
+        assert_eq!(consumed, raw.len());
+        assert_eq!(req.body, b"{\"image\":1}");
+    }
+
+    #[test]
+    fn keep_alive_matrix() {
+        let ka = |raw: &[u8]| full(raw).0.keep_alive();
+        assert!(ka(b"GET / HTTP/1.1\r\n\r\n"));
+        assert!(!ka(b"GET / HTTP/1.1\r\nConnection: close\r\n\r\n"));
+        assert!(!ka(b"GET / HTTP/1.1\r\nConnection: Close\r\n\r\n"));
+        assert!(!ka(b"GET / HTTP/1.0\r\n\r\n"));
+        assert!(ka(b"GET / HTTP/1.0\r\nConnection: keep-alive\r\n\r\n"));
+        assert!(ka(b"GET / HTTP/1.1\r\nConnection: foo, keep-alive\r\n\r\n"));
+    }
+
+    #[test]
+    fn malformed_requests_rejected() {
+        let bad = |raw: &[u8]| match parse(raw) {
+            Err(ParseError::Bad(m)) => m,
+            other => panic!("expected Bad, got {other:?}"),
+        };
+        bad(b"GET / FTP/1.1\r\n\r\n");
+        bad(b"GET / HTTP/2.0\r\n\r\n");
+        bad(b"GET  / HTTP/1.1\r\n\r\n"); // double space -> empty target
+        bad(b"G<T / HTTP/1.1\r\n\r\n"); // invalid method token
+        bad(b"GET /a b HTTP/1.1\r\n\r\n"); // four request-line parts
+        bad(b"GET / HTTP/1.1\r\nNoColonHere\r\n\r\n");
+        bad(b"GET / HTTP/1.1\r\nHost : x\r\n\r\n"); // space before colon
+        bad(b"GET / HTTP/1.1\r\nA: b\r\n\tfolded\r\n\r\n"); // obs-fold
+        bad(b"POST / HTTP/1.1\r\nContent-Length: abc\r\n\r\n");
+        bad(b"POST / HTTP/1.1\r\nContent-Length: -1\r\n\r\n");
+        bad(b"POST / HTTP/1.1\r\nContent-Length: 1\r\nContent-Length: 2\r\n\r\n");
+        bad(b"POST / HTTP/1.1\r\nTransfer-Encoding: chunked\r\n\r\n");
+        bad(b"\r\nGET / HTTP/1.1\r\n\r\n"); // leading blank line
+    }
+
+    #[test]
+    fn duplicate_equal_content_lengths_are_tolerated() {
+        let raw = b"POST / HTTP/1.1\r\nContent-Length: 2\r\nContent-Length: 2\r\n\r\nhi";
+        let (req, _) = full(raw);
+        assert_eq!(req.body, b"hi");
+    }
+
+    #[test]
+    fn size_limits_map_to_too_large() {
+        let limits = Limits { max_head: 64, max_headers: 2, max_body: 16 };
+        // oversized head, even before the terminator arrives
+        let long = vec![b'A'; 100];
+        assert!(matches!(
+            parse_request(&long, &limits),
+            Err(ParseError::TooLarge("request head exceeds limit"))
+        ));
+        // too many header fields
+        let raw = b"GET / HTTP/1.1\nA: 1\nB: 2\nC: 3\n\n";
+        assert!(matches!(parse_request(raw, &limits), Err(ParseError::TooLarge(_))));
+        // declared body over the limit: rejected from the head alone
+        let raw = b"POST / HTTP/1.1\nContent-Length: 17\n\n";
+        assert!(matches!(parse_request(raw, &limits), Err(ParseError::TooLarge(_))));
+        // absurd content-length that overflows usize parsing
+        let raw = b"POST / HTTP/1.1\nContent-Length: 99999999999999999999999999\n\n";
+        assert!(matches!(parse_request(raw, &limits), Err(ParseError::TooLarge(_))));
+    }
+
+    #[test]
+    fn empty_buffer_is_incomplete() {
+        assert!(matches!(parse(b""), Ok(None)));
+        assert!(matches!(parse(b"GET"), Ok(None)));
+    }
+}

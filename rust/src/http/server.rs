@@ -1,0 +1,462 @@
+//! HTTP/1.1 front-end over [`crate::coordinator::Server`].
+//!
+//! Plain `std::net` blocking I/O: a nonblocking `TcpListener` accept loop
+//! feeds accepted sockets into a bounded [`WorkerPool`] (the connection
+//! pool); each handler thread runs the keep-alive read loop, feeding bytes
+//! into the incremental parser and answering every complete request. When
+//! the pool and its backlog are saturated the accept loop sheds the
+//! connection with `503` instead of queueing without bound.
+//!
+//! See the module docs in `crate::http` for the wire protocol.
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use crate::coordinator::{LatencyRecorder, ServeError, ServeMetrics, Server, SubmitError};
+use crate::util::json::{self, Json};
+use crate::util::pool::{self, WorkerPool};
+
+use super::parser::{self, Limits, Request};
+
+/// Granularity of the connection read loop: how often a blocked read wakes
+/// up to check the stop flag and the idle clock.
+const READ_TICK: Duration = Duration::from_millis(25);
+
+/// HTTP front-end tuning knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct HttpConfig {
+    /// connection-handler threads (the bounded connection pool)
+    pub conn_threads: usize,
+    /// accepted connections that may wait for a free handler before the
+    /// accept loop starts shedding with 503
+    pub conn_backlog: usize,
+    /// idle keep-alive connections are closed after this long with no
+    /// request bytes, and a single request must arrive *completely*
+    /// within this budget of its first byte (hard cap, regardless of
+    /// drip-feed progress — the anti-slowloris guarantee); stalled or
+    /// over-budget partial requests get 408
+    pub keep_alive_timeout: Duration,
+    /// parser limits (head size, header count, body size)
+    pub limits: Limits,
+    /// hard cap on waiting for the engine's answer to one request; the
+    /// per-request deadline usually fires long before this backstop
+    pub response_timeout: Duration,
+}
+
+impl Default for HttpConfig {
+    fn default() -> Self {
+        HttpConfig {
+            conn_threads: pool::default_threads().clamp(2, 8),
+            conn_backlog: 64,
+            keep_alive_timeout: Duration::from_secs(5),
+            limits: Limits::default(),
+            response_timeout: Duration::from_secs(30),
+        }
+    }
+}
+
+struct Ctx {
+    srv: Server,
+    cfg: HttpConfig,
+    next_id: AtomicU64,
+    stop: Arc<AtomicBool>,
+}
+
+/// The HTTP/1.1 serving front-end. Owns the coordinator [`Server`] it
+/// forwards classification requests into; [`HttpServer::shutdown`] drains
+/// the connection pool, then the coordinator, and returns final metrics.
+pub struct HttpServer {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept: Option<JoinHandle<WorkerPool<TcpStream>>>,
+    ctx: Option<Arc<Ctx>>,
+}
+
+impl HttpServer {
+    /// Bind `addr` (e.g. `"127.0.0.1:0"` for an ephemeral port) and serve
+    /// requests into `srv`.
+    pub fn start(srv: Server, addr: &str, cfg: HttpConfig) -> std::io::Result<HttpServer> {
+        let listener = TcpListener::bind(addr)?;
+        listener.set_nonblocking(true)?;
+        let local = listener.local_addr()?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let ctx =
+            Arc::new(Ctx { srv, cfg, next_id: AtomicU64::new(1), stop: Arc::clone(&stop) });
+
+        let hctx = Arc::clone(&ctx);
+        let conn_pool = WorkerPool::new(
+            cfg.conn_threads.max(1),
+            cfg.conn_backlog.max(1),
+            move |stream: TcpStream| handle_connection(&hctx, stream),
+        );
+
+        // the accept thread owns the pool and hands it back on exit so
+        // shutdown can drain it after joining the loop
+        let astop = Arc::clone(&stop);
+        let accept = std::thread::spawn(move || {
+            let mut accept_err_reported = false;
+            loop {
+                if astop.load(Ordering::Acquire) {
+                    break;
+                }
+                match listener.accept() {
+                    Ok((stream, _peer)) => {
+                        if let Err(mut shed) = conn_pool.try_dispatch(stream) {
+                            // connection pool + backlog saturated: best-effort
+                            // 503. Clear any inherited O_NONBLOCK and bound the
+                            // write so a dead peer cannot stall the accept loop.
+                            let _ = shed.set_nonblocking(false);
+                            let _ = shed.set_write_timeout(Some(Duration::from_millis(50)));
+                            let body =
+                                json::obj(vec![("error", json::s("connection backlog full"))])
+                                    .to_string();
+                            let _ = shed.write_all(&response_bytes(503, &[], &body, false));
+                            let _ = shed.shutdown(std::net::Shutdown::Write);
+                        }
+                    }
+                    Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                        std::thread::sleep(Duration::from_millis(2));
+                    }
+                    Err(e) => {
+                        // real accept failure (e.g. fd exhaustion): surface
+                        // it once instead of spinning silently, and back
+                        // off harder than the poll tick
+                        if !accept_err_reported {
+                            accept_err_reported = true;
+                            eprintln!("http accept error (backing off): {e}");
+                        }
+                        std::thread::sleep(Duration::from_millis(50));
+                    }
+                }
+            }
+            conn_pool
+        });
+
+        Ok(HttpServer { addr: local, stop, accept: Some(accept), ctx: Some(ctx) })
+    }
+
+    /// The bound address (useful with an ephemeral `:0` bind).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Snapshot of the coordinator's serving metrics.
+    pub fn metrics(&self) -> ServeMetrics {
+        match &self.ctx {
+            Some(ctx) => ctx.srv.metrics(),
+            None => ServeMetrics::default(),
+        }
+    }
+
+    /// Stop accepting connections, drain the connection pool, shut the
+    /// coordinator down (draining its queue), and return final metrics.
+    pub fn shutdown(mut self) -> ServeMetrics {
+        self.stop_and_drain();
+        match self.ctx.take().map(Arc::try_unwrap) {
+            Some(Ok(ctx)) => ctx.srv.shutdown(),
+            // a handler leaked its context somehow: best-effort snapshot
+            Some(Err(ctx)) => ctx.srv.metrics(),
+            None => ServeMetrics::default(),
+        }
+    }
+
+    fn stop_and_drain(&mut self) {
+        self.stop.store(true, Ordering::Release);
+        if let Some(h) = self.accept.take() {
+            if let Ok(conn_pool) = h.join() {
+                conn_pool.shutdown();
+            }
+        }
+    }
+}
+
+impl Drop for HttpServer {
+    fn drop(&mut self) {
+        self.stop_and_drain();
+    }
+}
+
+// ---- connection handling --------------------------------------------------
+
+fn handle_connection(ctx: &Ctx, mut stream: TcpStream) {
+    // accepted sockets can inherit the listener's nonblocking flag on some
+    // platforms; handlers use plain blocking reads with a short timeout
+    if stream.set_nonblocking(false).is_err() {
+        return;
+    }
+    let _ = stream.set_nodelay(true);
+    if stream.set_read_timeout(Some(READ_TICK)).is_err() {
+        return;
+    }
+    let mut buf: Vec<u8> = Vec::with_capacity(1024);
+    let mut chunk = [0u8; 8192];
+    let mut idle = Duration::ZERO;
+    // first byte of the currently-buffered partial request: a request must
+    // complete within keep_alive_timeout of it, so a slow-drip client
+    // (one byte per tick) cannot pin a pool worker indefinitely
+    let mut partial_since: Option<std::time::Instant> = None;
+    loop {
+        // answer every complete pipelined request already buffered
+        loop {
+            let step = match parser::parse_request(&buf, &ctx.cfg.limits) {
+                Ok(Some((req, consumed))) => {
+                    let (resp, keep) = route(ctx, &req);
+                    Some((resp, keep, consumed))
+                }
+                Ok(None) => None,
+                Err(e) => {
+                    let body = json::obj(vec![("error", json::s(e.message()))]).to_string();
+                    let _ = stream.write_all(&response_bytes(e.status(), &[], &body, false));
+                    return;
+                }
+            };
+            match step {
+                Some((resp, keep, consumed)) => {
+                    if stream.write_all(&resp).is_err() {
+                        return;
+                    }
+                    buf.drain(..consumed);
+                    idle = Duration::ZERO;
+                    partial_since = None;
+                    if !keep {
+                        return;
+                    }
+                }
+                None => break,
+            }
+        }
+        if buf.is_empty() {
+            partial_since = None;
+        } else if let Some(t0) = partial_since {
+            if t0.elapsed() >= ctx.cfg.keep_alive_timeout {
+                let body = json::obj(vec![("error", json::s("request incomplete"))]).to_string();
+                let _ = stream.write_all(&response_bytes(408, &[], &body, false));
+                return;
+            }
+        } else {
+            partial_since = Some(std::time::Instant::now());
+        }
+        if ctx.stop.load(Ordering::Acquire) {
+            return;
+        }
+        match stream.read(&mut chunk) {
+            Ok(0) => return, // peer closed
+            Ok(n) => {
+                buf.extend_from_slice(&chunk[..n]);
+                idle = Duration::ZERO;
+            }
+            Err(ref e)
+                if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                ) =>
+            {
+                idle += READ_TICK;
+                if idle >= ctx.cfg.keep_alive_timeout {
+                    if !buf.is_empty() {
+                        // a partial request stalled mid-flight
+                        let body =
+                            json::obj(vec![("error", json::s("request incomplete"))]).to_string();
+                        let _ = stream.write_all(&response_bytes(408, &[], &body, false));
+                    }
+                    return;
+                }
+            }
+            Err(ref e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(_) => return,
+        }
+    }
+}
+
+/// Dispatch one parsed request; returns the full response bytes and
+/// whether to keep the connection open.
+fn route(ctx: &Ctx, req: &Request<'_>) -> (Vec<u8>, bool) {
+    let keep = req.keep_alive() && !ctx.stop.load(Ordering::Acquire);
+    match (req.method, req.path()) {
+        ("GET", "/healthz") => {
+            let body = json::obj(vec![("status", json::s("ok"))]).to_string();
+            (response_bytes(200, &[], &body, keep), keep)
+        }
+        ("GET", "/v1/metrics") => {
+            let body = metrics_json(&ctx.srv.metrics());
+            (response_bytes(200, &[], &body, keep), keep)
+        }
+        ("POST", "/v1/classify") => classify(ctx, req, keep),
+        (_, "/healthz") | (_, "/v1/metrics") => method_not_allowed("GET", keep),
+        (_, "/v1/classify") => method_not_allowed("POST", keep),
+        _ => (error_response(404, "no such endpoint", keep), keep),
+    }
+}
+
+fn classify(ctx: &Ctx, req: &Request<'_>, keep: bool) -> (Vec<u8>, bool) {
+    let payload = match Json::parse_bytes(req.body) {
+        Ok(j) => j,
+        Err(e) => return (error_response(400, &format!("invalid json body: {e}"), keep), keep),
+    };
+    // decode the pixels straight into the f32 batch buffer (one
+    // allocation, not an intermediate Vec<f64>)
+    let image: Vec<f32> = match payload.get("image").and_then(Json::as_arr) {
+        Some(arr) => {
+            let mut img = Vec::with_capacity(arr.len());
+            for v in arr {
+                match v.as_f64() {
+                    Some(x) => img.push(x as f32),
+                    None => {
+                        return (
+                            error_response(400, "\"image\" must contain only numbers", keep),
+                            keep,
+                        )
+                    }
+                }
+            }
+            img
+        }
+        None => {
+            return (
+                error_response(400, "body must carry a numeric \"image\" array", keep),
+                keep,
+            )
+        }
+    };
+    // id is echoed back verbatim, so a present-but-invalid id is a 400,
+    // never silently replaced; an absent id is auto-assigned
+    let id = match payload.get("id") {
+        None => ctx.next_id.fetch_add(1, Ordering::Relaxed),
+        Some(v) => match v.as_i64().and_then(|i| u64::try_from(i).ok()) {
+            Some(i) => i,
+            None => {
+                return (
+                    error_response(400, "\"id\" must be a non-negative integer", keep),
+                    keep,
+                )
+            }
+        },
+    };
+    // clamp to [0, 1 day] and reject non-finite values so a hostile
+    // payload can never panic Duration::from_secs_f64 (which would kill a
+    // pool worker)
+    let deadline = payload
+        .get("deadline_ms")
+        .and_then(Json::as_f64)
+        .filter(|ms| ms.is_finite())
+        .map(|ms| Duration::from_secs_f64(ms.clamp(0.0, 86_400_000.0) / 1e3));
+
+    let pending = match ctx.srv.try_submit(id, image, deadline) {
+        Ok(p) => p,
+        Err(SubmitError::Full(_)) => {
+            return (error_response(503, "request queue is full; retry later", keep), keep)
+        }
+        Err(SubmitError::Closed(_)) => {
+            return (error_response(503, "server is shutting down", false), false)
+        }
+    };
+    let resp = match pending.wait_timeout(ctx.cfg.response_timeout) {
+        Some(r) => r,
+        None => {
+            return (error_response(504, "timed out waiting for the engine", keep), keep)
+        }
+    };
+    match resp.result {
+        Ok(class) => {
+            let body = json::obj(vec![
+                ("id", json::num(resp.id as f64)),
+                ("class", json::num(class as f64)),
+                ("queue_us", json::num(resp.queue_us)),
+                ("compute_us", json::num(resp.compute_us)),
+                ("latency_us", json::num(resp.latency_us)),
+                ("batch_size", json::num(resp.batch_size as f64)),
+            ])
+            .to_string();
+            (response_bytes(200, &[], &body, keep), keep)
+        }
+        Err(ServeError::Expired { waited_us }) => {
+            let body = json::obj(vec![
+                ("error", json::s("deadline exceeded before the engine picked it up")),
+                ("id", json::num(resp.id as f64)),
+                ("waited_us", json::num(waited_us as f64)),
+            ])
+            .to_string();
+            (response_bytes(504, &[], &body, keep), keep)
+        }
+        Err(ServeError::BadRequest(m)) => (error_response(400, &m, keep), keep),
+        Err(ServeError::Internal(m)) => (error_response(500, &m, keep), keep),
+    }
+}
+
+fn method_not_allowed(allow: &str, keep: bool) -> (Vec<u8>, bool) {
+    let body = json::obj(vec![("error", json::s("method not allowed"))]).to_string();
+    (response_bytes(405, &[("Allow", allow)], &body, keep), keep)
+}
+
+fn error_response(status: u16, message: &str, keep: bool) -> Vec<u8> {
+    let body = json::obj(vec![("error", json::s(message))]).to_string();
+    response_bytes(status, &[], &body, keep)
+}
+
+fn status_reason(code: u16) -> &'static str {
+    match code {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        408 => "Request Timeout",
+        413 => "Content Too Large",
+        500 => "Internal Server Error",
+        503 => "Service Unavailable",
+        504 => "Gateway Timeout",
+        _ => "Unknown",
+    }
+}
+
+/// Serialize one response. `body` must already be JSON text.
+fn response_bytes(status: u16, extra: &[(&str, &str)], body: &str, keep: bool) -> Vec<u8> {
+    let mut out = String::with_capacity(body.len() + 128);
+    out.push_str("HTTP/1.1 ");
+    out.push_str(&status.to_string());
+    out.push(' ');
+    out.push_str(status_reason(status));
+    out.push_str("\r\nContent-Type: application/json\r\nContent-Length: ");
+    out.push_str(&body.len().to_string());
+    out.push_str("\r\nConnection: ");
+    out.push_str(if keep { "keep-alive" } else { "close" });
+    out.push_str("\r\n");
+    for (k, v) in extra {
+        out.push_str(k);
+        out.push_str(": ");
+        out.push_str(v);
+        out.push_str("\r\n");
+    }
+    out.push_str("\r\n");
+    out.push_str(body);
+    out.into_bytes()
+}
+
+fn metrics_json(m: &ServeMetrics) -> String {
+    fn recorder(r: &LatencyRecorder) -> Json {
+        json::obj(vec![
+            ("count", json::num(r.count() as f64)),
+            ("mean_us", json::num(r.mean_us())),
+            ("p50_us", json::num(r.p50_us())),
+            ("p95_us", json::num(r.p95_us())),
+            ("p99_us", json::num(r.p99_us())),
+            ("max_us", json::num(r.max_us())),
+        ])
+    }
+    json::obj(vec![
+        ("requests", json::num(m.requests as f64)),
+        ("errors", json::num(m.errors as f64)),
+        ("expired", json::num(m.expired as f64)),
+        ("batches", json::num(m.batches as f64)),
+        ("mean_batch", json::num(m.mean_batch)),
+        ("throughput_rps", json::num(m.throughput_rps)),
+        ("wall_s", json::num(m.wall_s)),
+        ("latency", recorder(&m.latency)),
+        ("queue", recorder(&m.queue)),
+        ("compute", recorder(&m.compute)),
+    ])
+    .to_string()
+}

@@ -22,6 +22,7 @@ pub mod data;
 pub mod dot;
 pub mod figures;
 pub mod formats;
+pub mod http;
 pub mod models;
 pub mod nn;
 pub mod overflow;

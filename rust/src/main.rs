@@ -9,19 +9,30 @@
 //!        per-layer transient/persistent overflow profile
 //!   runtime --hlo PATH [--n N]   run an AOT HLO artifact through PJRT
 //!   figures [--fig 2|3|4|5|6]    regenerate the paper figures
+//!   serve-http [--addr HOST:PORT] [--model NAME] [--threads N]
+//!        [--max-batch B] [--queue-cap Q] [--deadline-ms MS]
+//!        [--for-secs S]
+//!        HTTP/1.1 front-end over the persistent serving runtime
+//!        (POST /v1/classify, GET /v1/metrics, GET /healthz — see the
+//!        `pqs::http` module docs for the wire protocol); serves a
+//!        synthetic model when artifacts are absent
 //!
 //! Run from the repo root (or set PQS_ARTIFACTS).
+
+use std::time::Duration;
 
 use anyhow::{anyhow, bail, Result};
 
 use pqs::accum::Policy;
-use pqs::coordinator::EvalService;
+use pqs::coordinator::{EvalService, Server, ServerConfig};
 use pqs::data::Dataset;
 use pqs::figures;
 use pqs::formats::manifest::Manifest;
+use pqs::http::{HttpConfig, HttpServer};
 use pqs::models;
 use pqs::nn::engine::EngineConfig;
 use pqs::util::cli::Args;
+use pqs::util::pool;
 
 fn main() {
     if let Err(e) = run() {
@@ -150,9 +161,65 @@ fn run() -> Result<()> {
                 }
             }
         }
+        "serve-http" => {
+            let addr = args.get_or("addr", "127.0.0.1:8090").to_string();
+            let cfg = engine_cfg(&args)?;
+            // artifacts when present; otherwise a synthetic model keeps the
+            // front-end fully demonstrable offline
+            let model = match Manifest::load_default() {
+                Ok(man) => {
+                    let name = match args.get("model") {
+                        Some(n) => n.to_string(),
+                        None => man
+                            .experiments
+                            .get("fig2")
+                            .and_then(|v| v.first())
+                            .cloned()
+                            .ok_or_else(|| anyhow!("no model in manifest; pass --model"))?,
+                    };
+                    models::load(&man, &name)?
+                }
+                Err(_) => {
+                    eprintln!("(artifacts not available — serving the synthetic linear model)");
+                    models::synthetic_linear(
+                        args.get_usize("dim", 784),
+                        args.get_usize("classes", 10),
+                    )
+                }
+            };
+            let deadline_ms = args.get_f64("deadline-ms", 0.0);
+            let scfg = ServerConfig {
+                threads: args.get_usize("threads", pool::default_threads()),
+                max_batch: args.get_usize("max-batch", 32),
+                queue_cap: args.get_usize("queue-cap", 1024),
+                linger: Duration::from_micros(200),
+                engine_threads: 1,
+                default_deadline: if deadline_ms > 0.0 {
+                    Some(Duration::from_secs_f64(deadline_ms / 1e3))
+                } else {
+                    None
+                },
+            };
+            println!("serving model: {}", models::describe(&model));
+            let srv = Server::start(&model, cfg, scfg);
+            let http = HttpServer::start(srv, &addr, HttpConfig::default())?;
+            println!("listening on http://{}", http.local_addr());
+            println!("  POST /v1/classify  {{\"image\":[...], \"id\":N?, \"deadline_ms\":MS?}}");
+            println!("  GET  /v1/metrics   serving metrics snapshot");
+            println!("  GET  /healthz      liveness");
+            let secs = args.get_f64("for-secs", 0.0);
+            if secs > 0.0 {
+                std::thread::sleep(Duration::from_secs_f64(secs));
+                http.shutdown().print();
+            } else {
+                loop {
+                    std::thread::sleep(Duration::from_secs(3600));
+                }
+            }
+        }
         "help" => {
             println!("pqs — Prune, Quantize, and Sort (paper reproduction)");
-            println!("commands: list | describe | eval | profile | runtime | figures");
+            println!("commands: list | describe | eval | profile | runtime | figures | serve-http");
             println!("see rust/src/main.rs doc comment for flags");
         }
         other => bail!("unknown command {other:?} (try `pqs help`)"),

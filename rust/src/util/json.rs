@@ -40,6 +40,13 @@ impl Json {
         Ok(v)
     }
 
+    /// Parse from raw bytes (HTTP bodies); the bytes must be valid UTF-8.
+    pub fn parse_bytes(b: &[u8]) -> Result<Json, JsonError> {
+        let s = std::str::from_utf8(b)
+            .map_err(|e| JsonError { msg: "invalid utf-8".to_string(), pos: e.valid_up_to() })?;
+        Json::parse(s)
+    }
+
     // ---- accessors -------------------------------------------------------
     pub fn get(&self, key: &str) -> Option<&Json> {
         match self {
@@ -398,5 +405,13 @@ mod tests {
     fn big_ints_within_f64() {
         let j = Json::parse("1073741824").unwrap(); // 2^30
         assert_eq!(j.as_i64(), Some(1 << 30));
+    }
+
+    #[test]
+    fn parse_bytes_matches_parse_and_rejects_bad_utf8() {
+        let j = Json::parse_bytes(b"{\"a\": [1, 2]}").unwrap();
+        assert_eq!(j.get("a").unwrap().as_ivec(), Some(vec![1, 2]));
+        let err = Json::parse_bytes(&[b'"', 0xff, 0xfe, b'"']).unwrap_err();
+        assert!(err.msg.contains("utf-8"), "msg: {}", err.msg);
     }
 }

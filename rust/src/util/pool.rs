@@ -1,4 +1,4 @@
-//! Scoped thread-pool helpers (no tokio/rayon offline).
+//! Thread-pool helpers (no tokio/rayon offline).
 //!
 //! `parallel_map` splits the index range `0..n` across `n_threads` scoped
 //! workers. Workers claim *chunks* of consecutive indices from a shared
@@ -7,8 +7,16 @@
 //! order after the scope joins — no per-item locking anywhere. The
 //! evaluation coordinator and the engine's intra-forward parallelism build
 //! on this.
+//!
+//! [`WorkerPool`] is the persistent counterpart: long-lived workers drain
+//! a bounded queue of dispatched items, with `try_dispatch` handing the
+//! item back when the queue is full so callers can shed load. The HTTP
+//! front-end (`crate::http`) uses it as its bounded connection pool.
 
+use std::collections::VecDeque;
 use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
 
 /// Number of worker threads to use (PQS_THREADS env or available cores).
 pub fn default_threads() -> usize {
@@ -87,6 +95,105 @@ where
     out.into_iter().map(|v| v.expect("pool missed an index")).collect()
 }
 
+struct PoolState<T> {
+    items: VecDeque<T>,
+    closed: bool,
+}
+
+struct PoolQueue<T> {
+    state: Mutex<PoolState<T>>,
+    not_empty: Condvar,
+    cap: usize,
+}
+
+/// Persistent bounded task pool: `threads` long-lived workers drain a
+/// queue of dispatched items. Unlike the scoped helpers above, workers
+/// outlive any single call, so per-item dispatch is one lock round-trip
+/// instead of a thread spawn. The queue is bounded: [`WorkerPool::try_dispatch`]
+/// hands the item back when every worker is busy and the backlog is full,
+/// letting the caller shed load instead of queueing without bound.
+pub struct WorkerPool<T: Send + 'static> {
+    shared: Arc<PoolQueue<T>>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl<T: Send + 'static> WorkerPool<T> {
+    /// Spawn `threads` workers running `handler` over dispatched items.
+    /// `cap` bounds the backlog of items waiting for a free worker.
+    pub fn new<F>(threads: usize, cap: usize, handler: F) -> WorkerPool<T>
+    where
+        F: Fn(T) + Send + Sync + 'static,
+    {
+        let shared = Arc::new(PoolQueue {
+            state: Mutex::new(PoolState { items: VecDeque::new(), closed: false }),
+            not_empty: Condvar::new(),
+            cap: cap.max(1),
+        });
+        let handler = Arc::new(handler);
+        let workers = (0..threads.max(1))
+            .map(|_| {
+                let sh = Arc::clone(&shared);
+                let h = Arc::clone(&handler);
+                std::thread::spawn(move || loop {
+                    let item = {
+                        let mut st = sh.state.lock().unwrap();
+                        loop {
+                            if let Some(it) = st.items.pop_front() {
+                                break it;
+                            }
+                            if st.closed {
+                                return;
+                            }
+                            st = sh.not_empty.wait(st).unwrap();
+                        }
+                    };
+                    h(item);
+                })
+            })
+            .collect();
+        WorkerPool { shared, workers }
+    }
+
+    /// Queue an item for the next free worker. `Err(item)` hands the item
+    /// back when the backlog is at capacity or the pool is shutting down.
+    pub fn try_dispatch(&self, item: T) -> Result<(), T> {
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            if st.closed || st.items.len() >= self.shared.cap {
+                return Err(item);
+            }
+            st.items.push_back(item);
+        }
+        self.shared.not_empty.notify_one();
+        Ok(())
+    }
+
+    /// Items dispatched but not yet claimed by a worker.
+    pub fn backlog(&self) -> usize {
+        self.shared.state.lock().unwrap().items.len()
+    }
+
+    /// Stop accepting new items, let workers finish every queued item,
+    /// and join them.
+    pub fn shutdown(mut self) {
+        self.close_and_join();
+    }
+
+    fn close_and_join(&mut self) {
+        self.shared.state.lock().unwrap().closed = true;
+        self.shared.not_empty.notify_all();
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+impl<T: Send + 'static> Drop for WorkerPool<T> {
+    fn drop(&mut self) {
+        self.close_and_join();
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -146,5 +253,60 @@ mod tests {
         assert_eq!(chunk_size(1, 8), 1);
         assert_eq!(chunk_size(100, 4), 3);
         assert!(chunk_size(1_000_000, 2) <= 1024);
+    }
+
+    #[test]
+    fn worker_pool_processes_every_dispatched_item() {
+        let done = Arc::new(AtomicU64::new(0));
+        let d = Arc::clone(&done);
+        let pool = WorkerPool::new(4, 1024, move |v: u64| {
+            d.fetch_add(v, Ordering::Relaxed);
+        });
+        let mut sum = 0u64;
+        for i in 1..=500u64 {
+            pool.try_dispatch(i).expect("queue has room");
+            sum += i;
+        }
+        // shutdown drains the backlog before joining
+        pool.shutdown();
+        assert_eq!(done.load(Ordering::Relaxed), sum);
+    }
+
+    #[test]
+    fn worker_pool_sheds_when_full() {
+        // a single worker blocked on the first item; cap 2 means the 4th
+        // dispatch (1 in flight + 2 queued) must hand the item back
+        let gate = Arc::new((Mutex::new(false), Condvar::new()));
+        let g = Arc::clone(&gate);
+        let pool = WorkerPool::new(1, 2, move |_v: u32| {
+            let (lock, cv) = &*g;
+            let mut open = lock.lock().unwrap();
+            while !*open {
+                open = cv.wait(open).unwrap();
+            }
+        });
+        pool.try_dispatch(1).unwrap();
+        // wait until the worker has claimed item 1 so the backlog is empty
+        while pool.backlog() > 0 {
+            std::thread::yield_now();
+        }
+        pool.try_dispatch(2).unwrap();
+        pool.try_dispatch(3).unwrap();
+        match pool.try_dispatch(4) {
+            Err(item) => assert_eq!(item, 4, "rejected item is handed back"),
+            Ok(()) => panic!("dispatch past the bound must shed"),
+        }
+        // open the gate so shutdown can drain and join
+        let (lock, cv) = &*gate;
+        *lock.lock().unwrap() = true;
+        cv.notify_all();
+        pool.shutdown();
+    }
+
+    #[test]
+    fn worker_pool_drop_joins_without_hanging() {
+        let pool = WorkerPool::new(2, 8, |_: usize| {});
+        pool.try_dispatch(1).unwrap();
+        drop(pool);
     }
 }

@@ -1,0 +1,393 @@
+//! HTTP/1.1 protocol-conformance suite for the hand-rolled front-end —
+//! all on loopback TCP against a tiny synthetic model, fully offline.
+//!
+//! Covers: a table-driven torture corpus of valid/malformed raw byte
+//! requests (exact status codes, listener survival), keep-alive and
+//! pipelined sequences, a chunking property test that splits request
+//! bytes across arbitrary write boundaries, and the deadline path
+//! (`deadline_ms: 0` → 504 + the `expired` metric).
+
+mod common;
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::time::Duration;
+
+use pqs::coordinator::{Server, ServerConfig};
+use pqs::http::{HttpConfig, HttpServer};
+use pqs::nn::engine::{Engine, EngineConfig};
+use pqs::util::json::Json;
+use pqs::util::prop;
+use pqs::util::rng::Pcg32;
+
+const DIM: usize = 16;
+const CLASSES: usize = 4;
+
+fn start_http() -> HttpServer {
+    let model = common::tiny_linear_model(DIM, CLASSES);
+    let scfg = ServerConfig {
+        threads: 2,
+        max_batch: 8,
+        queue_cap: 64,
+        linger: Duration::from_micros(50),
+        engine_threads: 1,
+        default_deadline: None,
+    };
+    let srv = Server::start(&model, EngineConfig::default(), scfg);
+    let hcfg = HttpConfig {
+        conn_threads: 4,
+        conn_backlog: 16,
+        keep_alive_timeout: Duration::from_millis(500),
+        ..HttpConfig::default()
+    };
+    HttpServer::start(srv, "127.0.0.1:0", hcfg).expect("bind loopback")
+}
+
+// ---- tiny raw-TCP client --------------------------------------------------
+
+struct Resp {
+    status: u16,
+    headers: Vec<(String, String)>,
+    body: String,
+}
+
+impl Resp {
+    fn header(&self, name: &str) -> Option<&str> {
+        self.headers.iter().find(|(k, _)| k == name).map(|(_, v)| v.as_str())
+    }
+
+    fn json(&self) -> Json {
+        Json::parse(&self.body).expect("json body")
+    }
+}
+
+struct Client {
+    stream: TcpStream,
+    buf: Vec<u8>,
+}
+
+impl Client {
+    fn connect(srv: &HttpServer) -> Client {
+        let stream = TcpStream::connect(srv.local_addr()).expect("connect loopback");
+        stream.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+        Client { stream, buf: Vec::new() }
+    }
+
+    fn send(&mut self, bytes: &[u8]) {
+        self.stream.write_all(bytes).expect("write request");
+    }
+
+    fn read_response(&mut self) -> Resp {
+        self.try_read_response().expect("a response before timeout/eof")
+    }
+
+    /// `None` on clean EOF before any response bytes (server closed).
+    fn try_read_response(&mut self) -> Option<Resp> {
+        let mut tmp = [0u8; 4096];
+        loop {
+            if let Some(pos) = self.buf.windows(4).position(|w| w == b"\r\n\r\n") {
+                let head_end = pos + 4;
+                let head = String::from_utf8(self.buf[..head_end].to_vec()).expect("utf8 head");
+                let status: u16 = head
+                    .split(' ')
+                    .nth(1)
+                    .expect("status line")
+                    .parse()
+                    .expect("numeric status");
+                let mut headers = Vec::new();
+                for line in head.lines().skip(1) {
+                    if let Some((k, v)) = line.split_once(':') {
+                        headers.push((k.trim().to_ascii_lowercase(), v.trim().to_string()));
+                    }
+                }
+                let body_len: usize = headers
+                    .iter()
+                    .find(|(k, _)| k == "content-length")
+                    .map(|(_, v)| v.parse().expect("content-length"))
+                    .unwrap_or(0);
+                while self.buf.len() < head_end + body_len {
+                    match self.stream.read(&mut tmp) {
+                        Ok(0) => panic!("eof mid-body"),
+                        Ok(n) => self.buf.extend_from_slice(&tmp[..n]),
+                        Err(e) => panic!("read mid-body: {e}"),
+                    }
+                }
+                let body =
+                    String::from_utf8(self.buf[head_end..head_end + body_len].to_vec())
+                        .expect("utf8 body");
+                self.buf.drain(..head_end + body_len);
+                return Some(Resp { status, headers, body });
+            }
+            match self.stream.read(&mut tmp) {
+                Ok(0) => {
+                    assert!(self.buf.is_empty(), "eof mid-head");
+                    return None;
+                }
+                Ok(n) => self.buf.extend_from_slice(&tmp[..n]),
+                Err(e) => panic!("read: {e}"),
+            }
+        }
+    }
+
+    fn assert_server_closed(&mut self) {
+        assert!(self.try_read_response().is_none(), "expected the server to close");
+    }
+}
+
+// ---- request builders -----------------------------------------------------
+
+fn image_json(dim: usize, seed: u64) -> String {
+    let img = common::synth_images(1, dim, seed);
+    let nums: Vec<String> = img.iter().map(|v| format!("{v}")).collect();
+    format!("[{}]", nums.join(","))
+}
+
+fn classify_body(dim: usize, seed: u64, id: u64, deadline_ms: Option<f64>) -> String {
+    let deadline = deadline_ms.map(|d| format!(",\"deadline_ms\":{d}")).unwrap_or_default();
+    format!("{{\"id\":{id},\"image\":{}{deadline}}}", image_json(dim, seed))
+}
+
+fn post_classify(body: &str) -> Vec<u8> {
+    format!(
+        "POST /v1/classify HTTP/1.1\r\nHost: t\r\nContent-Type: application/json\r\nContent-Length: {}\r\n\r\n{body}",
+        body.len()
+    )
+    .into_bytes()
+}
+
+fn expected_class(seed: u64) -> usize {
+    let model = common::tiny_linear_model(DIM, CLASSES);
+    let mut eng = Engine::new(&model, EngineConfig::default());
+    eng.forward(&common::synth_images(1, DIM, seed), 1).expect("forward").argmax(0)
+}
+
+// ---- tests ----------------------------------------------------------------
+
+#[test]
+fn healthz_and_classify_end_to_end() {
+    let http = start_http();
+    let mut c = Client::connect(&http);
+    c.send(b"GET /healthz HTTP/1.1\r\nHost: t\r\n\r\n");
+    let r = c.read_response();
+    assert_eq!(r.status, 200);
+    assert_eq!(r.json().get("status").and_then(Json::as_str), Some("ok"));
+
+    c.send(&post_classify(&classify_body(DIM, 3, 42, None)));
+    let r = c.read_response();
+    assert_eq!(r.status, 200, "body: {}", r.body);
+    let j = r.json();
+    assert_eq!(j.get("id").and_then(Json::as_usize), Some(42));
+    assert_eq!(j.get("class").and_then(Json::as_usize), Some(expected_class(3)));
+    assert!(j.get("latency_us").and_then(Json::as_f64).unwrap_or(-1.0) >= 0.0);
+    assert!(j.get("batch_size").and_then(Json::as_usize).unwrap_or(0) >= 1);
+    http.shutdown();
+}
+
+#[test]
+fn conformance_corpus_exact_statuses() {
+    // (name, raw request bytes, expected status)
+    let corpus: Vec<(&str, Vec<u8>, u16)> = vec![
+        ("health ok", b"GET /healthz HTTP/1.1\r\n\r\n".to_vec(), 200),
+        ("metrics ok", b"GET /v1/metrics HTTP/1.1\r\nHost: t\r\n\r\n".to_vec(), 200),
+        ("unknown path", b"GET /nope HTTP/1.1\r\nHost: t\r\n\r\n".to_vec(), 404),
+        ("get on classify", b"GET /v1/classify HTTP/1.1\r\n\r\n".to_vec(), 405),
+        (
+            "delete on classify",
+            b"DELETE /v1/classify HTTP/1.1\r\nContent-Length: 0\r\n\r\n".to_vec(),
+            405,
+        ),
+        ("post on metrics", b"POST /v1/metrics HTTP/1.1\r\nContent-Length: 0\r\n\r\n".to_vec(), 405),
+        ("bad version", b"GET / HTTP/2.0\r\n\r\n".to_vec(), 400),
+        ("not http", b"GET / FTP/1.1\r\n\r\n".to_vec(), 400),
+        ("request line extra parts", b"GET /a b HTTP/1.1\r\n\r\n".to_vec(), 400),
+        ("header without colon", b"GET /healthz HTTP/1.1\r\nBadHeader\r\n\r\n".to_vec(), 400),
+        ("space before colon", b"GET /healthz HTTP/1.1\r\nHost : x\r\n\r\n".to_vec(), 400),
+        ("obsolete folding", b"GET /healthz HTTP/1.1\r\nA: b\r\n c\r\n\r\n".to_vec(), 400),
+        (
+            "garbage content-length",
+            b"POST /v1/classify HTTP/1.1\r\nContent-Length: abc\r\n\r\n".to_vec(),
+            400,
+        ),
+        (
+            "negative content-length",
+            b"POST /v1/classify HTTP/1.1\r\nContent-Length: -1\r\n\r\n".to_vec(),
+            400,
+        ),
+        (
+            "conflicting content-lengths",
+            b"POST /v1/classify HTTP/1.1\r\nContent-Length: 1\r\nContent-Length: 2\r\n\r\nx"
+                .to_vec(),
+            400,
+        ),
+        (
+            "chunked rejected",
+            b"POST /v1/classify HTTP/1.1\r\nTransfer-Encoding: chunked\r\n\r\n0\r\n\r\n"
+                .to_vec(),
+            400,
+        ),
+        (
+            "oversized declared body",
+            b"POST /v1/classify HTTP/1.1\r\nContent-Length: 999999999\r\n\r\n".to_vec(),
+            413,
+        ),
+        ("invalid json body", post_classify("{not json"), 400),
+        ("json without image", post_classify("{\"id\":1}"), 400),
+        ("wrong image size", post_classify(&classify_body(DIM / 2, 1, 2, None)), 400),
+        ("empty body post", post_classify(""), 400),
+    ];
+
+    let http = start_http();
+    for (name, raw, want) in &corpus {
+        let mut c = Client::connect(&http);
+        c.send(raw);
+        let r = c.read_response();
+        assert_eq!(r.status, *want, "case '{name}': body {}", r.body);
+    }
+    // the listener survived the whole torture corpus: a fresh, well-formed
+    // request still classifies
+    let mut c = Client::connect(&http);
+    c.send(&post_classify(&classify_body(DIM, 5, 1, None)));
+    assert_eq!(c.read_response().status, 200);
+    http.shutdown();
+}
+
+#[test]
+fn keep_alive_connection_survives_mixed_sequence() {
+    let http = start_http();
+    let mut c = Client::connect(&http);
+    // several requests over ONE connection, including semantic errors —
+    // the connection must stay open throughout
+    c.send(b"GET /healthz HTTP/1.1\r\n\r\n");
+    assert_eq!(c.read_response().status, 200);
+    c.send(&post_classify(&classify_body(DIM, 1, 1, None)));
+    let r = c.read_response();
+    assert_eq!(r.status, 200);
+    assert_eq!(r.header("connection"), Some("keep-alive"));
+    c.send(b"GET /missing HTTP/1.1\r\n\r\n");
+    assert_eq!(c.read_response().status, 404);
+    c.send(&post_classify("{\"id\":1}"));
+    assert_eq!(c.read_response().status, 400, "semantic 400 keeps the connection");
+    c.send(&post_classify(&classify_body(DIM, 2, 2, None)));
+    assert_eq!(c.read_response().status, 200);
+    c.send(b"GET /v1/metrics HTTP/1.1\r\nConnection: close\r\n\r\n");
+    let r = c.read_response();
+    assert_eq!(r.status, 200);
+    assert_eq!(r.header("connection"), Some("close"));
+    c.assert_server_closed();
+    http.shutdown();
+}
+
+#[test]
+fn pipelined_requests_answered_in_order() {
+    let http = start_http();
+    let mut c = Client::connect(&http);
+    // three classify POSTs and a metrics GET written back-to-back in one
+    // burst; responses must come back in order on the same connection
+    let mut burst = Vec::new();
+    for (id, seed) in [(10u64, 7u64), (11, 8), (12, 9)] {
+        burst.extend_from_slice(&post_classify(&classify_body(DIM, seed, id, None)));
+    }
+    burst.extend_from_slice(b"GET /v1/metrics HTTP/1.1\r\n\r\n");
+    c.send(&burst);
+    for (id, seed) in [(10u64, 7u64), (11, 8), (12, 9)] {
+        let r = c.read_response();
+        assert_eq!(r.status, 200, "pipelined response body: {}", r.body);
+        let j = r.json();
+        assert_eq!(j.get("id").and_then(Json::as_usize), Some(id as usize));
+        assert_eq!(j.get("class").and_then(Json::as_usize), Some(expected_class(seed)));
+    }
+    let r = c.read_response();
+    assert_eq!(r.status, 200);
+    assert!(r.json().get("requests").and_then(Json::as_usize).unwrap_or(0) >= 3);
+    http.shutdown();
+}
+
+#[test]
+fn requests_survive_arbitrary_write_boundaries() {
+    // chunking property: a pipelined healthz + classify byte stream split
+    // at arbitrary boundaries (flushed with small delays so the server
+    // sees multiple reads) must parse identically to one contiguous write
+    let http = start_http();
+    let mut stream_bytes = b"GET /healthz HTTP/1.1\r\n\r\n".to_vec();
+    stream_bytes.extend_from_slice(&post_classify(&classify_body(DIM, 4, 77, None)));
+    let want_class = expected_class(4);
+    let total = stream_bytes.len();
+    prop::check(
+        "http-read-boundary-chunking",
+        10,
+        |r: &mut Pcg32| {
+            let mut cuts: Vec<usize> =
+                (0..3).map(|_| 1 + r.below(total as u32 - 1) as usize).collect();
+            cuts.sort_unstable();
+            cuts.dedup();
+            cuts
+        },
+        |cuts| {
+            let mut c = Client::connect(&http);
+            let mut start = 0usize;
+            for &cut in cuts.iter().chain(std::iter::once(&total)) {
+                c.send(&stream_bytes[start..cut]);
+                std::thread::sleep(Duration::from_millis(3));
+                start = cut;
+            }
+            let r = c.read_response();
+            if r.status != 200 {
+                return Err(format!("healthz got {} (cuts {cuts:?})", r.status));
+            }
+            let r = c.read_response();
+            if r.status != 200 {
+                return Err(format!("classify got {} (cuts {cuts:?})", r.status));
+            }
+            let class = r.json().get("class").and_then(Json::as_usize);
+            if class != Some(want_class) {
+                return Err(format!("class {class:?} != {want_class} (cuts {cuts:?})"));
+            }
+            Ok(())
+        },
+    );
+    http.shutdown();
+}
+
+#[test]
+fn expired_deadline_maps_to_504_and_counts() {
+    let http = start_http();
+    let mut c = Client::connect(&http);
+    c.send(&post_classify(&classify_body(DIM, 1, 5, Some(0.0))));
+    let r = c.read_response();
+    assert_eq!(r.status, 504, "body: {}", r.body);
+    assert!(r.body.contains("deadline"), "body: {}", r.body);
+    // the expired counter is visible both in-process and over the wire
+    assert_eq!(http.metrics().expired, 1);
+    c.send(b"GET /v1/metrics HTTP/1.1\r\n\r\n");
+    let r = c.read_response();
+    assert_eq!(r.status, 200);
+    assert_eq!(r.json().get("expired").and_then(Json::as_usize), Some(1));
+    // the connection still serves fresh work after a 504
+    c.send(&post_classify(&classify_body(DIM, 6, 6, None)));
+    assert_eq!(c.read_response().status, 200);
+    let m = http.shutdown();
+    assert_eq!(m.expired, 1);
+}
+
+#[test]
+fn concurrent_connections_all_served() {
+    let http = start_http();
+    std::thread::scope(|scope| {
+        for t in 0..4u64 {
+            let http = &http;
+            scope.spawn(move || {
+                let mut c = Client::connect(http);
+                for i in 0..10u64 {
+                    let seed = t * 100 + i;
+                    c.send(&post_classify(&classify_body(DIM, seed, seed, None)));
+                    let r = c.read_response();
+                    assert_eq!(r.status, 200, "thread {t} req {i}: {}", r.body);
+                }
+            });
+        }
+    });
+    let m = http.shutdown();
+    assert_eq!(m.requests, 40);
+    assert_eq!(m.errors, 0);
+    assert_eq!(m.expired, 0);
+}

@@ -1,14 +1,22 @@
 //! Serving-runtime tests that run WITHOUT artifacts: a tiny synthetic
 //! `PqswModel` exercises the persistent `Server` (backpressure, per-request
-//! errors, draining shutdown), the engine's parallel forward path, the
-//! exact `limit` semantics, and the sorted1 counting/radix pairing contract.
+//! errors, deadlines/cancellation, draining shutdown), the engine's
+//! parallel forward path, the exact `limit` semantics, and the sorted1
+//! counting/radix pairing contract.
+//!
+//! Every blocking receive goes through `wait()` below (a bounded
+//! `wait_timeout`), so a queue-logic regression fails the suite fast
+//! instead of hanging it.
 
 mod common;
 
 use std::time::Duration;
 
 use pqs::accum::{self, Policy};
-use pqs::coordinator::{serve_requests, EvalService, Request, ServeError, Server, ServerConfig, SubmitError};
+use pqs::coordinator::{
+    serve_requests, EvalService, PendingResponse, Request, ServeError, ServeResponse, Server,
+    ServerConfig, SubmitError,
+};
 use pqs::data::Dataset;
 use pqs::dot::DotEngine;
 use pqs::nn::engine::{Engine, EngineConfig};
@@ -24,11 +32,18 @@ fn scfg(threads: usize, max_batch: usize, queue_cap: usize) -> ServerConfig {
         queue_cap,
         linger: Duration::from_micros(50),
         engine_threads: 1,
+        default_deadline: None,
     }
 }
 
 fn img(seed: u64) -> Vec<f32> {
     common::synth_images(1, DIM, seed)
+}
+
+/// Bounded wait: a response must arrive within 60s or the test fails fast
+/// (instead of `PendingResponse::wait` hanging the whole suite).
+fn wait(p: PendingResponse) -> ServeResponse {
+    p.wait_timeout(Duration::from_secs(60)).expect("response within 60s (queue regression?)")
 }
 
 #[test]
@@ -39,11 +54,11 @@ fn server_serves_and_matches_offline_engine() {
     let n = 100;
     let mut pending = Vec::new();
     for i in 0..n {
-        pending.push(srv.submit(i as u64, img(i as u64)).expect("submit"));
+        pending.push(srv.submit(i as u64, img(i as u64), None).expect("submit"));
     }
     let mut eng = Engine::new(&model, cfg);
     for p in pending {
-        let r = p.wait();
+        let r = wait(p);
         let want = eng.forward(&img(r.id), 1).unwrap().argmax(0);
         assert_eq!(r.result, Ok(want), "request {}", r.id);
         assert!(r.latency_us > 0.0);
@@ -56,6 +71,7 @@ fn server_serves_and_matches_offline_engine() {
     let m = srv.shutdown();
     assert_eq!(m.requests, n);
     assert_eq!(m.errors, 0);
+    assert_eq!(m.expired, 0);
     assert_eq!(m.latency.count(), n);
     assert!(m.batches >= 1);
     assert!(m.mean_batch >= 1.0);
@@ -67,18 +83,18 @@ fn bad_size_request_yields_error_response_not_panic() {
     let cfg = EngineConfig::default();
     let srv = Server::start(&model, cfg, scfg(2, 4, 64));
     // interleave good and malformed requests
-    let good1 = srv.submit(1, img(1)).unwrap();
-    let bad = srv.submit(2, vec![0.25; DIM / 2]).unwrap();
-    let bad_empty = srv.submit(3, Vec::new()).unwrap();
-    let good2 = srv.submit(4, img(4)).unwrap();
-    assert!(good1.wait().result.is_ok());
-    match bad.wait().result {
+    let good1 = srv.submit(1, img(1), None).unwrap();
+    let bad = srv.submit(2, vec![0.25; DIM / 2], None).unwrap();
+    let bad_empty = srv.submit(3, Vec::new(), None).unwrap();
+    let good2 = srv.submit(4, img(4), None).unwrap();
+    assert!(wait(good1).result.is_ok());
+    match wait(bad).result {
         Err(ServeError::BadRequest(msg)) => assert!(msg.contains("32"), "msg: {msg}"),
         other => panic!("expected BadRequest, got {other:?}"),
     }
-    assert!(matches!(bad_empty.wait().result, Err(ServeError::BadRequest(_))));
+    assert!(matches!(wait(bad_empty).result, Err(ServeError::BadRequest(_))));
     // the service survived and still answers correctly
-    assert!(good2.wait().result.is_ok());
+    assert!(wait(good2).result.is_ok());
     let m = srv.shutdown();
     assert_eq!(m.requests, 4);
     assert_eq!(m.errors, 2);
@@ -96,7 +112,7 @@ fn backpressure_bound_is_respected() {
     let mut accepted = Vec::new();
     let mut fulls = 0usize;
     for i in 0..(cap + 12) as u64 {
-        match srv.try_submit(i, image.clone()) {
+        match srv.try_submit(i, image.clone(), None) {
             Ok(p) => accepted.push(p),
             Err(SubmitError::Full(returned)) => {
                 fulls += 1;
@@ -110,7 +126,7 @@ fn backpressure_bound_is_respected() {
     assert!(fulls > 0, "queue never filled: backpressure untested");
     // every accepted request still completes
     for p in accepted {
-        assert!(p.wait().result.is_ok());
+        assert!(wait(p).result.is_ok());
     }
     srv.shutdown();
 }
@@ -122,13 +138,13 @@ fn shutdown_drains_the_queue() {
     let srv = Server::start(&model, cfg, scfg(2, 8, 256));
     let n = 200;
     let pending: Vec<_> =
-        (0..n).map(|i| srv.submit(i as u64, img(i as u64)).expect("submit")).collect();
+        (0..n).map(|i| srv.submit(i as u64, img(i as u64), None).expect("submit")).collect();
     // close immediately: every queued request must still be answered
     let m = srv.shutdown();
     assert_eq!(m.requests, n);
     assert_eq!(m.errors, 0);
     for p in pending {
-        assert!(p.wait().result.is_ok());
+        assert!(wait(p).result.is_ok());
     }
 }
 
@@ -138,15 +154,88 @@ fn metrics_snapshot_and_server_restart() {
     let srv = Server::start(&model, EngineConfig::default(), scfg(1, 4, 16));
     let metrics_before = srv.metrics();
     assert_eq!(metrics_before.requests, 0);
-    let probe = srv.submit(0, img(0)).unwrap();
-    assert!(probe.wait().result.is_ok());
+    let probe = srv.submit(0, img(0), None).unwrap();
+    assert!(wait(probe).result.is_ok());
     let m = srv.shutdown();
     assert_eq!(m.requests, 1);
     // the server is gone; a fresh one still works (no global state)
     let model2 = common::tiny_linear_model(DIM, CLASSES);
     let srv2 = Server::start(&model2, EngineConfig::default(), scfg(1, 4, 16));
-    assert!(srv2.submit(9, img(9)).unwrap().wait().result.is_ok());
+    assert!(wait(srv2.submit(9, img(9), None).unwrap()).result.is_ok());
     srv2.shutdown();
+}
+
+#[test]
+fn expired_request_answers_without_touching_an_engine() {
+    let model = common::tiny_linear_model(DIM, CLASSES);
+    let srv = Server::start(&model, EngineConfig::default(), scfg(1, 4, 16));
+    // a zero deadline is already expired when the worker assembles it
+    let p = srv.submit(7, img(7), Some(Duration::ZERO)).unwrap();
+    let r = wait(p);
+    match r.result {
+        Err(ServeError::Expired { .. }) => {}
+        other => panic!("expected Expired, got {other:?}"),
+    }
+    assert_eq!(r.batch_size, 0, "expired requests must never ride an engine batch");
+    assert_eq!(r.compute_us, 0.0, "expired requests must never touch an engine");
+    let m = srv.shutdown();
+    assert_eq!(m.expired, 1, "expired counter must increment");
+    assert_eq!(m.errors, 0, "expiry is accounted separately from errors");
+    assert_eq!(m.requests, 1);
+}
+
+#[test]
+fn default_deadline_from_config_applies_and_is_overridable() {
+    let model = common::tiny_linear_model(DIM, CLASSES);
+    let mut cfg = scfg(1, 4, 16);
+    cfg.default_deadline = Some(Duration::ZERO);
+    let srv = Server::start(&model, EngineConfig::default(), cfg);
+    // no explicit deadline: the config default (already expired) applies
+    let expired = srv.submit(1, img(1), None).unwrap();
+    assert!(matches!(wait(expired).result, Err(ServeError::Expired { .. })));
+    // an explicit generous deadline overrides the default
+    let alive = srv.submit(2, img(2), Some(Duration::from_secs(60))).unwrap();
+    assert!(wait(alive).result.is_ok());
+    let m = srv.shutdown();
+    assert_eq!(m.expired, 1);
+    assert_eq!(m.requests, 2);
+}
+
+#[test]
+fn expired_requests_do_not_poison_batchmates() {
+    let model = common::tiny_linear_model(DIM, CLASSES);
+    let srv = Server::start(&model, EngineConfig::default(), scfg(1, 8, 32));
+    let e1 = srv.submit(1, img(1), Some(Duration::ZERO)).unwrap();
+    let g1 = srv.submit(2, img(2), None).unwrap();
+    let e2 = srv.submit(3, img(3), Some(Duration::ZERO)).unwrap();
+    let g2 = srv.submit(4, img(4), Some(Duration::from_secs(60))).unwrap();
+    assert!(matches!(wait(e1).result, Err(ServeError::Expired { .. })));
+    assert!(wait(g1).result.is_ok(), "live batch-mate must still classify");
+    assert!(matches!(wait(e2).result, Err(ServeError::Expired { .. })));
+    assert!(wait(g2).result.is_ok(), "live batch-mate must still classify");
+    let m = srv.shutdown();
+    assert_eq!(m.expired, 2);
+    assert_eq!(m.requests, 4);
+}
+
+#[test]
+fn inflight_requests_with_deadlines_complete_during_shutdown_drain() {
+    let model = common::tiny_linear_model(DIM, CLASSES);
+    let srv = Server::start(&model, EngineConfig::default(), scfg(2, 8, 256));
+    let n = 100;
+    // generous deadlines: the drain must answer them all, not expire them
+    let pending: Vec<_> = (0..n)
+        .map(|i| {
+            srv.submit(i as u64, img(i as u64), Some(Duration::from_secs(60))).expect("submit")
+        })
+        .collect();
+    let m = srv.shutdown();
+    assert_eq!(m.requests, n);
+    assert_eq!(m.expired, 0, "draining shutdown must not expire generous deadlines");
+    assert_eq!(m.errors, 0);
+    for p in pending {
+        assert!(wait(p).result.is_ok());
+    }
 }
 
 #[test]
