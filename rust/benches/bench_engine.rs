@@ -5,13 +5,15 @@
 //!
 //!     cargo bench --offline --bench bench_engine
 
+use std::sync::Arc;
+
 use pqs::accum::Policy;
 use pqs::data::Dataset;
 use pqs::formats::manifest::Manifest;
 use pqs::models;
 use pqs::nn::engine::{Engine, EngineConfig};
 use pqs::util::bench::{bench_cfg, black_box};
-use pqs::util::pool;
+use pqs::util::pool::{self, ComputePool};
 use pqs::util::rng::Pcg32;
 
 fn real_model_benches(man: &Manifest) -> anyhow::Result<()> {
@@ -112,6 +114,48 @@ fn threads_sweep(
     }
 }
 
+/// Batch-1 forward latency: serial vs scoped spawns vs the persistent
+/// shared [`ComputePool`] (the serving hot path this repo optimizes for).
+fn batch1_pool_sweep(model: &pqs::formats::pqsw::PqswModel, policy: Policy) {
+    println!("# batch-1 forward: serial vs scoped vs persistent pool ({})", model.name);
+    let dim: usize = model.input_shape.iter().product();
+    let mut rng = Pcg32::new(0xB1);
+    let img: Vec<f32> = (0..dim).map(|_| rng.f32()).collect();
+    let cfg = EngineConfig { policy, acc_bits: 16, ..Default::default() };
+    let mut serial = Engine::new(model, cfg);
+    let base = bench_cfg("batch1 serial", 1, 5, &mut || {
+        black_box(serial.forward(black_box(&img), 1).unwrap());
+    });
+    println!("{:<48} {:>10.1} us", "batch-1 serial", base.mean_ns / 1e3);
+    let hw = pool::default_threads();
+    let mut sweep = vec![2usize, 4];
+    if !sweep.contains(&hw) {
+        sweep.push(hw);
+    }
+    for &t in &sweep {
+        let mut scoped = Engine::new(model, cfg).with_threads(t);
+        let r = bench_cfg("batch1 scoped", 1, 5, &mut || {
+            black_box(scoped.forward(black_box(&img), 1).unwrap());
+        });
+        println!(
+            "{:<48} {:>10.1} us   speedup {:.2}x",
+            format!("batch-1 scoped spawns T={t}"),
+            r.mean_ns / 1e3,
+            base.mean_ns / r.mean_ns.max(1.0),
+        );
+        let mut pooled = Engine::new(model, cfg).with_pool(Arc::new(ComputePool::new(t)));
+        let r = bench_cfg("batch1 pooled", 1, 5, &mut || {
+            black_box(pooled.forward(black_box(&img), 1).unwrap());
+        });
+        println!(
+            "{:<48} {:>10.1} us   speedup {:.2}x",
+            format!("batch-1 persistent pool T={t}"),
+            r.mean_ns / 1e3,
+            base.mean_ns / r.mean_ns.max(1.0),
+        );
+    }
+}
+
 fn main() -> anyhow::Result<()> {
     println!("# bench_engine — images/s through the bit-accurate engine\n");
     match Manifest::load_default() {
@@ -139,5 +183,12 @@ fn main() -> anyhow::Result<()> {
     }
     println!();
     threads_sweep(&model, &imgs, batch, Policy::Sorted1);
+
+    // batch-1 serving hot path: position-parallel conv + oc-parallel linear
+    // over the persistent pool (vs per-layer scoped spawns)
+    println!();
+    batch1_pool_sweep(&model, Policy::Sorted1);
+    println!();
+    batch1_pool_sweep(&models::synthetic_conv(3, 28, 28, 8, 10), Policy::Sorted1);
     Ok(())
 }

@@ -1,0 +1,492 @@
+//! Machine-readable performance snapshots (`pqs bench --json PATH`).
+//!
+//! One invocation measures the three layers of the inference hot path and
+//! writes a single JSON report, so the repository can carry a perf
+//! trajectory (`BENCH_PR*.json`) that CI and reviewers diff across PRs:
+//!
+//! * **dot** — ns/call and overflow events per accumulation policy,
+//!   including the tiled path with the fused per-tile histogram pairing;
+//! * **pool** — dispatch cost of a scoped `parallel_map` vs the persistent
+//!   [`ComputePool`] at small and large index ranges (the per-layer
+//!   dispatch overhead batch-1 serving pays);
+//! * **forward** — batch-1 engine forward latency across thread counts on
+//!   synthetic linear and CNN models, with a bit-identity check (logits,
+//!   predicted class, overflow counters must match the serial path
+//!   exactly — the report records the comparison, and `run` fails if it
+//!   does not hold);
+//! * **serve** — end-to-end `POST /v1/classify` latency through the real
+//!   HTTP front-end + serving runtime over a loopback connection, with the
+//!   shared engine pool off (`engine_threads = 1`, the pre-refactor
+//!   behaviour) and on (`engine_threads = hw`).
+//!
+//! Everything runs on synthetic models so the report is reproducible on
+//! any checkout, artifacts or not. `quick: true` shrinks sample counts and
+//! request volumes for CI smoke runs.
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::time::{Duration, Instant, SystemTime, UNIX_EPOCH};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::accum::Policy;
+use crate::coordinator::{Server, ServerConfig};
+use crate::dot::{tiled_sorted_dot, DotEngine};
+use crate::http::{HttpConfig, HttpServer};
+use crate::models;
+use crate::nn::engine::{Engine, EngineConfig};
+use crate::util::bench::{bench_cfg, black_box};
+use crate::util::json::{self, Json};
+use crate::util::pool::{self, ComputePool};
+use crate::util::rng::Pcg32;
+
+/// Knobs for one report run.
+pub struct BenchOptions {
+    /// shrink sample counts / request volumes (CI smoke)
+    pub quick: bool,
+    /// engine thread counts swept in the forward section
+    pub threads: Vec<usize>,
+}
+
+impl Default for BenchOptions {
+    fn default() -> Self {
+        BenchOptions { quick: false, threads: vec![1, 2, 8] }
+    }
+}
+
+impl BenchOptions {
+    fn samples(&self) -> u32 {
+        if self.quick {
+            2
+        } else {
+            5
+        }
+    }
+
+    fn warmup(&self) -> u32 {
+        u32::from(!self.quick)
+    }
+}
+
+/// Run every section and assemble the report. Fails if any bit-identity
+/// check fails — a perf number from a wrong computation is worthless.
+pub fn run(opts: &BenchOptions) -> Result<Json> {
+    let unix_s = SystemTime::now().duration_since(UNIX_EPOCH).map(|d| d.as_secs()).unwrap_or(0);
+    Ok(json::obj(vec![
+        (
+            "meta",
+            json::obj(vec![
+                ("unix_time_s", json::num(unix_s as f64)),
+                ("hw_threads", json::num(pool::default_threads() as f64)),
+                ("quick", Json::Bool(opts.quick)),
+            ]),
+        ),
+        ("dot", dot_section(opts)),
+        ("pool", pool_section(opts)),
+        ("forward", forward_section(opts)?),
+        ("serve", serve_section(opts)?),
+    ]))
+}
+
+/// Run and write the report to `path` (pretty enough: one JSON document +
+/// trailing newline).
+pub fn run_to_file(path: &str, opts: &BenchOptions) -> Result<Json> {
+    let report = run(opts)?;
+    std::fs::write(path, report.to_string() + "\n")
+        .with_context(|| format!("writing bench report to {path}"))?;
+    Ok(report)
+}
+
+// ---- dot ------------------------------------------------------------------
+
+fn dot_row<F: FnMut() -> (i64, u32)>(
+    opts: &BenchOptions,
+    name: &str,
+    len: usize,
+    mut f: F,
+) -> Json {
+    let (_, events) = f();
+    let r = bench_cfg(&format!("dot {name} k={len}"), opts.warmup(), opts.samples(), &mut || {
+        black_box(f());
+    });
+    json::obj(vec![
+        ("name", json::s(name)),
+        ("k", json::num(len as f64)),
+        ("mean_ns", json::num(r.mean_ns)),
+        ("products_per_s", json::num(len as f64 / (r.mean_ns / 1e9))),
+        ("overflow_events", json::num(events as f64)),
+    ])
+}
+
+fn dot_section(opts: &BenchOptions) -> Json {
+    let mut rng = Pcg32::new(0xD07);
+    let lens: &[usize] = if opts.quick { &[256] } else { &[64, 256, 1024] };
+    let mut rows = Vec::new();
+    for &len in lens {
+        // 8-bit product domain (|w·x| <= 127*128 with centered activations)
+        let prods = rng.ivec(len, -16256, 16256);
+        for policy in [Policy::Exact, Policy::Clip, Policy::Sorted, Policy::Sorted1] {
+            let mut e = DotEngine::new();
+            rows.push(dot_row(opts, policy.name(), len, || e.dot(&prods, 16, policy)));
+        }
+        for tile in [64usize, 256] {
+            let mut e = DotEngine::new();
+            rows.push(dot_row(opts, &format!("sorted1_tile{tile}"), len, || {
+                tiled_sorted_dot(&mut e, &prods, 16, tile)
+            }));
+        }
+    }
+    Json::Arr(rows)
+}
+
+// ---- pool -----------------------------------------------------------------
+
+fn pool_section(opts: &BenchOptions) -> Json {
+    let threads = pool::default_threads().clamp(2, 8);
+    let cpool = ComputePool::new(threads);
+    let mut rows = Vec::new();
+    for &n in if opts.quick { &[256usize][..] } else { &[64usize, 4096][..] } {
+        let scoped = bench_cfg(
+            &format!("scoped parallel_map n={n}"),
+            opts.warmup(),
+            opts.samples(),
+            &mut || {
+                black_box(pool::parallel_map(n, threads, |i| i as u64 * 31));
+            },
+        );
+        let persistent = bench_cfg(
+            &format!("ComputePool::map n={n}"),
+            opts.warmup(),
+            opts.samples(),
+            &mut || {
+                black_box(cpool.map(n, |i| i as u64 * 31));
+            },
+        );
+        rows.push(json::obj(vec![
+            ("n", json::num(n as f64)),
+            ("threads", json::num(threads as f64)),
+            ("scoped_mean_ns", json::num(scoped.mean_ns)),
+            ("persistent_mean_ns", json::num(persistent.mean_ns)),
+            (
+                "dispatch_speedup",
+                json::num(if persistent.mean_ns > 0.0 {
+                    scoped.mean_ns / persistent.mean_ns
+                } else {
+                    0.0
+                }),
+            ),
+        ]));
+    }
+    Json::Arr(rows)
+}
+
+// ---- forward --------------------------------------------------------------
+
+struct ForwardCase {
+    label: &'static str,
+    model: crate::formats::pqsw::PqswModel,
+    policy: Policy,
+}
+
+fn forward_cases(opts: &BenchOptions) -> Vec<ForwardCase> {
+    if opts.quick {
+        vec![ForwardCase {
+            label: "synthetic_conv_small",
+            model: models::synthetic_conv(2, 12, 12, 4, 10),
+            policy: Policy::Sorted1,
+        }]
+    } else {
+        vec![
+            ForwardCase {
+                label: "synthetic_linear_784x128",
+                model: models::synthetic_linear(784, 128),
+                policy: Policy::Sorted1,
+            },
+            ForwardCase {
+                label: "synthetic_conv_3x28x28",
+                model: models::synthetic_conv(3, 28, 28, 8, 10),
+                policy: Policy::Sorted1,
+            },
+            ForwardCase {
+                label: "synthetic_conv_3x28x28_sorted",
+                model: models::synthetic_conv(3, 28, 28, 8, 10),
+                policy: Policy::Sorted,
+            },
+        ]
+    }
+}
+
+fn forward_section(opts: &BenchOptions) -> Result<Json> {
+    let mut rows = Vec::new();
+    for case in forward_cases(opts) {
+        let dim: usize = case.model.input_shape.iter().product();
+        let mut rng = Pcg32::new(0xF0);
+        let img: Vec<f32> = (0..dim).map(|_| rng.f32()).collect();
+        let cfg = EngineConfig { policy: case.policy, acc_bits: 16, tile: 0, collect_stats: false };
+        let stats_cfg = EngineConfig { collect_stats: true, ..cfg };
+
+        // serial reference: logits, class, overflow counters
+        let mut serial = Engine::new(&case.model, stats_cfg);
+        let ref_out = serial.forward(&img, 1)?;
+        let ref_total = ref_out.report.total();
+
+        let mut measured: Vec<(usize, f64)> = Vec::new();
+        for &t in &opts.threads {
+            let cpool = (t > 1).then(|| std::sync::Arc::new(ComputePool::new(t)));
+            // bit-identity first: logits, predicted class and overflow
+            // counters must equal the serial reference exactly
+            let mut check = Engine::new(&case.model, stats_cfg);
+            if let Some(p) = &cpool {
+                check.set_pool(std::sync::Arc::clone(p));
+            }
+            let out = check.forward(&img, 1)?;
+            let total = out.report.total();
+            if out.logits != ref_out.logits
+                || out.argmax(0) != ref_out.argmax(0)
+                || total != ref_total
+            {
+                return Err(anyhow!(
+                    "{} T={t}: parallel forward diverged from the serial path",
+                    case.label
+                ));
+            }
+            // then the timing run (stats off: the serving configuration)
+            let mut eng = Engine::new(&case.model, cfg);
+            if let Some(p) = &cpool {
+                eng.set_pool(std::sync::Arc::clone(p));
+            }
+            let r = bench_cfg(
+                &format!("forward {} T={t}", case.label),
+                opts.warmup(),
+                opts.samples(),
+                &mut || {
+                    black_box(eng.forward(black_box(&img), 1).unwrap());
+                },
+            );
+            measured.push((t, r.mean_ns));
+        }
+        // speedups are computed after the sweep so they do not depend on
+        // the order (or presence) of 1 in --threads; without a T=1 row the
+        // baseline is the slowest measured configuration
+        let base_ns = measured
+            .iter()
+            .find(|(t, _)| *t == 1)
+            .map(|&(_, ns)| ns)
+            .or_else(|| measured.iter().map(|&(_, ns)| ns).max_by(f64::total_cmp))
+            .unwrap_or(0.0);
+        let threads_rows: Vec<Json> = measured
+            .iter()
+            .map(|&(t, mean_ns)| {
+                json::obj(vec![
+                    ("threads", json::num(t as f64)),
+                    ("mean_us", json::num(mean_ns / 1e3)),
+                    ("images_per_s", json::num(1e9 / mean_ns)),
+                    (
+                        "speedup_vs_t1",
+                        json::num(if mean_ns > 0.0 && base_ns > 0.0 {
+                            base_ns / mean_ns
+                        } else {
+                            0.0
+                        }),
+                    ),
+                    ("bit_identical_to_serial", Json::Bool(true)),
+                ])
+            })
+            .collect();
+        rows.push(json::obj(vec![
+            ("model", json::s(case.label)),
+            ("policy", json::s(case.policy.name())),
+            ("batch", json::num(1.0)),
+            ("overflow_dots", json::num(ref_total.dots as f64)),
+            ("overflow_naive_events", json::num(ref_total.naive_events as f64)),
+            ("overflow_policy_event_dots", json::num(ref_total.policy_event_dots as f64)),
+            ("predicted_class", json::num(ref_out.argmax(0) as f64)),
+            ("threads", Json::Arr(threads_rows)),
+        ]));
+    }
+    Ok(Json::Arr(rows))
+}
+
+// ---- serve ----------------------------------------------------------------
+
+/// Minimal blocking HTTP/1.1 client for the loopback latency measurement.
+struct LoopbackClient {
+    stream: TcpStream,
+    buf: Vec<u8>,
+}
+
+impl LoopbackClient {
+    fn connect(addr: &str) -> Result<LoopbackClient> {
+        let stream = TcpStream::connect(addr).context("connecting to the bench http server")?;
+        stream.set_nodelay(true).ok();
+        stream.set_read_timeout(Some(Duration::from_secs(30))).ok();
+        Ok(LoopbackClient { stream, buf: Vec::new() })
+    }
+
+    /// POST one classify request and block for the full response; returns
+    /// the status code.
+    fn classify(&mut self, body: &str) -> Result<u16> {
+        let req = format!(
+            "POST /v1/classify HTTP/1.1\r\nHost: bench\r\nContent-Type: application/json\r\nContent-Length: {}\r\n\r\n{}",
+            body.len(),
+            body
+        );
+        self.stream.write_all(req.as_bytes())?;
+        self.read_response()
+    }
+
+    fn read_response(&mut self) -> Result<u16> {
+        let mut chunk = [0u8; 8192];
+        loop {
+            if let Some(head_end) = find_crlf2(&self.buf) {
+                let head = std::str::from_utf8(&self.buf[..head_end]).unwrap_or("");
+                let status: u16 = head
+                    .split_whitespace()
+                    .nth(1)
+                    .and_then(|s| s.parse().ok())
+                    .ok_or_else(|| anyhow!("malformed status line: {head:.60}"))?;
+                let clen: usize = head
+                    .lines()
+                    .find_map(|l| {
+                        let (k, v) = l.split_once(':')?;
+                        k.eq_ignore_ascii_case("content-length")
+                            .then(|| v.trim().parse().ok())?
+                    })
+                    .ok_or_else(|| anyhow!("response without content-length"))?;
+                let total = head_end + 4 + clen;
+                while self.buf.len() < total {
+                    let n = self.stream.read(&mut chunk)?;
+                    if n == 0 {
+                        return Err(anyhow!("server closed mid-body"));
+                    }
+                    self.buf.extend_from_slice(&chunk[..n]);
+                }
+                self.buf.drain(..total);
+                return Ok(status);
+            }
+            let n = self.stream.read(&mut chunk)?;
+            if n == 0 {
+                return Err(anyhow!("server closed mid-head"));
+            }
+            self.buf.extend_from_slice(&chunk[..n]);
+        }
+    }
+}
+
+fn find_crlf2(buf: &[u8]) -> Option<usize> {
+    buf.windows(4).position(|w| w == b"\r\n\r\n")
+}
+
+fn serve_section(opts: &BenchOptions) -> Result<Json> {
+    let (model, policy) = if opts.quick {
+        (models::synthetic_conv(2, 12, 12, 4, 10), Policy::Sorted1)
+    } else {
+        (models::synthetic_conv(3, 28, 28, 8, 10), Policy::Sorted1)
+    };
+    let dim: usize = model.input_shape.iter().product();
+    let mut rng = Pcg32::new(0x5E4E);
+    let requests = if opts.quick { 25 } else { 150 };
+    // one image reused for every request (latency, not cache variety, is
+    // what this section measures)
+    let img: Vec<f32> = (0..dim).map(|_| (rng.below(1000) as f32) / 1000.0).collect();
+    let body = {
+        let pixels: Vec<Json> = img.iter().map(|&v| json::num(v as f64)).collect();
+        json::obj(vec![("image", Json::Arr(pixels))]).to_string()
+    };
+
+    let hw = pool::default_threads().max(2);
+    let mut rows = Vec::new();
+    for engine_threads in [1usize, hw] {
+        let cfg = EngineConfig { policy, acc_bits: 16, tile: 0, collect_stats: false };
+        let scfg = ServerConfig {
+            threads: 2,
+            max_batch: 8,
+            queue_cap: 256,
+            linger: Duration::from_micros(100),
+            engine_threads,
+            default_deadline: None,
+        };
+        let srv = Server::start(&model, cfg, scfg);
+        let http = HttpServer::start(srv, "127.0.0.1:0", HttpConfig::default())
+            .context("binding the bench http server")?;
+        let addr = http.local_addr().to_string();
+        let mut client = LoopbackClient::connect(&addr)?;
+        // warm the engines (first forward pays allocations)
+        for _ in 0..3 {
+            let status = client.classify(&body)?;
+            if status != 200 {
+                return Err(anyhow!("bench classify returned {status}"));
+            }
+        }
+        let t0 = Instant::now();
+        let mut client_us = Vec::with_capacity(requests);
+        for _ in 0..requests {
+            let r0 = Instant::now();
+            let status = client.classify(&body)?;
+            if status != 200 {
+                return Err(anyhow!("bench classify returned {status}"));
+            }
+            client_us.push(r0.elapsed().as_secs_f64() * 1e6);
+        }
+        let wall_s = t0.elapsed().as_secs_f64();
+        let metrics = http.shutdown();
+        client_us.sort_by(f64::total_cmp);
+        let mean = client_us.iter().sum::<f64>() / client_us.len() as f64;
+        let p50 = client_us[client_us.len() / 2];
+        let p95 = client_us[(client_us.len() * 95 / 100).min(client_us.len() - 1)];
+        rows.push(json::obj(vec![
+            ("engine_threads", json::num(engine_threads as f64)),
+            ("requests", json::num(requests as f64)),
+            ("client_mean_us", json::num(mean)),
+            ("client_p50_us", json::num(p50)),
+            ("client_p95_us", json::num(p95)),
+            ("throughput_rps", json::num(requests as f64 / wall_s)),
+            ("server_latency_p50_us", json::num(metrics.latency.p50_us())),
+            ("server_latency_p95_us", json::num(metrics.latency.p95_us())),
+            ("server_compute_mean_us", json::num(metrics.compute.mean_us())),
+            (
+                "pool_jobs",
+                json::num(metrics.pool.as_ref().map(|p| p.jobs as f64).unwrap_or(0.0)),
+            ),
+            (
+                "pool_inline_jobs",
+                json::num(metrics.pool.as_ref().map(|p| p.inline_jobs as f64).unwrap_or(0.0)),
+            ),
+            (
+                "pool_chunks",
+                json::num(metrics.pool.as_ref().map(|p| p.chunks as f64).unwrap_or(0.0)),
+            ),
+        ]));
+    }
+    Ok(Json::Arr(rows))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quick_report_is_well_formed() {
+        // the CI smoke contract: a quick run produces a parseable report
+        // with every section present and the forward bit-identity holding
+        let opts = BenchOptions { quick: true, threads: vec![1, 2] };
+        let report = run(&opts).expect("quick bench run");
+        let txt = report.to_string();
+        let parsed = Json::parse(&txt).expect("report round-trips");
+        for key in ["meta", "dot", "pool", "forward", "serve"] {
+            assert!(parsed.get(key).is_some(), "missing section {key}");
+        }
+        let fwd = parsed.get("forward").unwrap().as_arr().unwrap();
+        assert!(!fwd.is_empty());
+        for case in fwd {
+            for t in case.get("threads").unwrap().as_arr().unwrap() {
+                assert_eq!(
+                    t.get("bit_identical_to_serial").unwrap().as_bool(),
+                    Some(true)
+                );
+            }
+        }
+        let serve = parsed.get("serve").unwrap().as_arr().unwrap();
+        assert_eq!(serve.len(), 2, "engine_threads off + on");
+    }
+}

@@ -1,5 +1,6 @@
 //! Latency/throughput metrics for the serving front-end.
 
+use crate::util::pool::PoolStats;
 use crate::util::stats;
 
 /// Reservoir size: memory stays bounded (~512 KiB of f64) no matter how
@@ -103,6 +104,9 @@ pub struct ServeMetrics {
     /// per-request engine invocation wall time; excludes pre-engine
     /// rejections so it describes real engine invocations only
     pub compute: LatencyRecorder,
+    /// utilization of the shared intra-forward compute pool (`None` when
+    /// the server runs engines single-threaded)
+    pub pool: Option<PoolStats>,
 }
 
 impl ServeMetrics {
@@ -133,6 +137,12 @@ impl ServeMetrics {
             self.compute.p95_us(),
             self.compute.p99_us(),
         );
+        if let Some(p) = &self.pool {
+            println!(
+                "  compute pool threads={} busy={} jobs={} inline_jobs={} chunks={}",
+                p.threads, p.busy, p.jobs, p.inline_jobs, p.chunks,
+            );
+        }
     }
 }
 

@@ -36,7 +36,7 @@ use std::time::{Duration, Instant};
 
 use crate::formats::pqsw::PqswModel;
 use crate::nn::engine::{Engine, EngineConfig};
-use crate::util::pool;
+use crate::util::pool::{self, ComputePool};
 
 use super::metrics::{LatencyRecorder, ServeMetrics};
 
@@ -154,8 +154,12 @@ pub struct ServerConfig {
     /// how long a worker lingers for stragglers once it holds a partial
     /// batch (0 = never wait; serve whatever is immediately available)
     pub linger: Duration,
-    /// intra-forward engine threads per worker (keep 1 unless workers are
-    /// fewer than cores: inter-batch parallelism is usually better)
+    /// width of the *shared* intra-forward compute pool. With a value > 1
+    /// the server builds one persistent [`ComputePool`] of this many
+    /// threads and every worker's engine dispatches into it — batch-1
+    /// requests get intra-layer parallelism without N workers × T threads
+    /// oversubscribing the machine (keep 1 when worker-level parallelism
+    /// already saturates the cores)
     pub engine_threads: usize,
     /// deadline applied to requests submitted without one (`None` =
     /// requests never expire). Expired requests are skipped by workers and
@@ -210,6 +214,9 @@ struct Shared {
     not_full: Condvar,
     metrics: Mutex<MetricsState>,
     started: Instant,
+    /// one persistent compute pool shared by every worker's engine
+    /// (`None` when `engine_threads <= 1`)
+    pool: Option<Arc<ComputePool>>,
 }
 
 /// Persistent worker-pool serving runtime. See the module docs.
@@ -243,6 +250,8 @@ impl Server {
             not_full: Condvar::new(),
             metrics: Mutex::new(MetricsState::default()),
             started: Instant::now(),
+            pool: (scfg.engine_threads > 1)
+                .then(|| Arc::new(ComputePool::new(scfg.engine_threads))),
         });
         let workers = (0..scfg.threads)
             .map(|_| {
@@ -365,12 +374,16 @@ fn snapshot(shared: &Shared) -> ServeMetrics {
         latency: m.latency.clone(),
         queue: m.queue.clone(),
         compute: m.compute.clone(),
+        pool: shared.pool.as_ref().map(|p| p.stats()),
     }
 }
 
 fn worker_loop(shared: &Shared) {
-    let mut engine =
-        Engine::new(&shared.model, shared.cfg).with_threads(shared.scfg.engine_threads);
+    let mut engine = Engine::new(&shared.model, shared.cfg);
+    match &shared.pool {
+        Some(p) => engine.set_pool(Arc::clone(p)),
+        None => engine.set_threads(shared.scfg.engine_threads),
+    }
     let dim: usize = shared.model.input_shape.iter().product();
     loop {
         let mut batch: Vec<Job> = Vec::new();

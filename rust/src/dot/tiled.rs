@@ -9,10 +9,35 @@
 //! Semantics: each tile is sorted+paired independently (exact temporaries);
 //! the paired sequences are pushed tile-after-tile through the *single*
 //! running p-bit accumulator.
+//!
+//! ### Fused per-tile histogram pairing
+//! Tiles are short (the paper studies k=256), so the adaptive
+//! counting/radix/comparison gate inside `sorted1_pair_into` mostly
+//! resolves to two comparison sorts plus a pairing pass plus a sequence
+//! scan. When the tile's observed value window is narrow (the common case
+//! for low-bit quantized products), [`tiled_sorted_dot`] instead builds one
+//! counting-sort histogram of the tile and *emits the paired sequence
+//! straight out of the bucket walk into the running accumulator* — no
+//! sorts, no pos/neg buffers, no materialized sequence. The emitted order
+//! is exactly `pos_desc[i] + neg_asc[i]` followed by the leftover
+//! single-sign tail in sorted order, so values and overflow-event counts
+//! are bit-identical to the sorted pairing (property-tested below). Tiles
+//! whose span is too wide for the bucket walk to pay off fall back to
+//! `sorted1_pair_into`.
 
 use super::sorted::sorted1_pair_into;
 use super::DotEngine;
 use crate::accum;
+
+/// The fused histogram walk costs O(span); fuse only when the observed
+/// value window is at most this many times the tile length…
+const FUSED_SPAN_FACTOR: u64 = 4;
+/// …with a floor so short tiles with modest spans (where `sorted1_pair_into`
+/// would fall back to comparison sorts) still take the fused path. The floor
+/// bounds the worst-case bucket walk per tile to ~a comparison sort of a
+/// few dozen elements, so fusing is never much slower than the gate it
+/// replaces.
+const FUSED_SPAN_MIN: u64 = 256;
 
 /// Tiled single-round sorted dot product. `tile == 0` or `tile >= K` means
 /// one full-width tile (identical to `sorted1_dot`).
@@ -26,22 +51,136 @@ pub fn tiled_sorted_dot(eng: &mut DotEngine, prods: &[i32], p: u32, tile: usize)
     let mut start = 0;
     while start < k {
         let end = (start + tile).min(k);
-        sorted1_pair_into(eng, &prods[start..end], true);
-        for &v in &eng.seq {
-            let t = acc + v as i64;
-            acc = if t < lo {
-                ovf += 1;
-                lo
-            } else if t > hi {
-                ovf += 1;
-                hi
-            } else {
-                t
-            };
+        let t = &prods[start..end];
+        if !fused_tile_accumulate(&mut eng.counts, t, lo, hi, &mut acc, &mut ovf) {
+            // wide-span tile: the general sorted pairing
+            sorted1_pair_into(eng, t, true);
+            for &v in &eng.seq {
+                let s = acc + v as i64;
+                acc = if s < lo {
+                    ovf += 1;
+                    lo
+                } else if s > hi {
+                    ovf += 1;
+                    hi
+                } else {
+                    s
+                };
+            }
         }
         start = end;
     }
     (acc, ovf)
+}
+
+/// Fused counting-sort pairing for one tile: histogram the nonzero values,
+/// then walk positives downward and negatives upward, pushing each paired
+/// sum (and the single-sign tail) straight through the clipped accumulator.
+/// Returns `false` — leaving `counts`, `acc` and `ovf` untouched — when the
+/// value span is too wide for the walk to pay off. `counts` is persistent
+/// scratch and is left all-zero (the walk consumes every bucket it filled).
+fn fused_tile_accumulate(
+    counts: &mut Vec<u32>,
+    tile: &[i32],
+    lo: i64,
+    hi: i64,
+    acc: &mut i64,
+    ovf: &mut u32,
+) -> bool {
+    let mut vmin = i32::MAX;
+    let mut vmax = i32::MIN;
+    let mut npos = 0u32;
+    let mut nneg = 0u32;
+    for &v in tile {
+        if v > 0 {
+            npos += 1;
+        } else if v < 0 {
+            nneg += 1;
+        } else {
+            continue;
+        }
+        if v < vmin {
+            vmin = v;
+        }
+        if v > vmax {
+            vmax = v;
+        }
+    }
+    if npos == 0 && nneg == 0 {
+        return true; // all zeros: the pairing contributes nothing
+    }
+    let span = (vmax as i64 - vmin as i64) as u64 + 1;
+    if span > (tile.len() as u64).saturating_mul(FUSED_SPAN_FACTOR).max(FUSED_SPAN_MIN) {
+        return false;
+    }
+    let span = span as usize;
+    if counts.len() < span {
+        counts.resize(span, 0);
+    }
+    for &v in tile {
+        if v != 0 {
+            counts[(v - vmin) as usize] += 1;
+        }
+    }
+    let mut clip = |s: i32| {
+        let t = *acc + s as i64;
+        *acc = if t < lo {
+            *ovf += 1;
+            lo
+        } else if t > hi {
+            *ovf += 1;
+            hi
+        } else {
+            t
+        };
+    };
+    // paired phase: i-th largest positive + i-th most-negative value. The
+    // scans can never cross zero: `npos > 0` guarantees a positive bucket
+    // below `pcur`, `nneg > 0` a negative bucket above `ncur`.
+    let mut pcur = vmax;
+    let mut ncur = vmin;
+    while npos > 0 && nneg > 0 {
+        while counts[(pcur - vmin) as usize] == 0 {
+            pcur -= 1;
+        }
+        while counts[(ncur - vmin) as usize] == 0 {
+            ncur += 1;
+        }
+        let m = counts[(pcur - vmin) as usize].min(counts[(ncur - vmin) as usize]);
+        let s = pcur + ncur;
+        for _ in 0..m {
+            clip(s);
+        }
+        counts[(pcur - vmin) as usize] -= m;
+        counts[(ncur - vmin) as usize] -= m;
+        npos -= m;
+        nneg -= m;
+    }
+    // single-sign tail, still in pairing order: descending positives or
+    // ascending negatives
+    while npos > 0 {
+        while counts[(pcur - vmin) as usize] == 0 {
+            pcur -= 1;
+        }
+        let c = counts[(pcur - vmin) as usize];
+        for _ in 0..c {
+            clip(pcur);
+        }
+        counts[(pcur - vmin) as usize] = 0;
+        npos -= c;
+    }
+    while nneg > 0 {
+        while counts[(ncur - vmin) as usize] == 0 {
+            ncur += 1;
+        }
+        let c = counts[(ncur - vmin) as usize];
+        for _ in 0..c {
+            clip(ncur);
+        }
+        counts[(ncur - vmin) as usize] = 0;
+        nneg -= c;
+    }
+    true
 }
 
 #[cfg(test)]
@@ -144,6 +283,89 @@ mod tests {
                 Ok(())
             },
         );
+    }
+
+    /// The pre-fusion implementation: per tile, `sorted1_pair_into` + a
+    /// scan of the materialized sequence. The fused histogram must match
+    /// this bit-for-bit (value AND event count).
+    fn reference_tiled(prods: &[i32], p: u32, tile: usize) -> (i64, u32) {
+        let k = prods.len();
+        let tile = if tile == 0 { k.max(1) } else { tile };
+        let (lo, hi) = crate::accum::acc_range(p);
+        let mut eng = DotEngine::new();
+        let mut acc = 0i64;
+        let mut ovf = 0u32;
+        let mut start = 0;
+        while start < k {
+            let end = (start + tile).min(k);
+            sorted1_pair_into(&mut eng, &prods[start..end], true);
+            for &v in &eng.seq {
+                let t = acc + v as i64;
+                acc = if t < lo {
+                    ovf += 1;
+                    lo
+                } else if t > hi {
+                    ovf += 1;
+                    hi
+                } else {
+                    t
+                };
+            }
+            start = end;
+        }
+        (acc, ovf)
+    }
+
+    #[test]
+    fn fused_histogram_bit_identical_to_sorted_pairing() {
+        // the ISSUE contract: random bounded-domain products across value
+        // profiles that hit the fused path (narrow span), the fallback
+        // (wide span + short tiles) and the boundary between them
+        prop::check(
+            "tiled-fused-bit-identical",
+            400,
+            |r: &mut Pcg32| {
+                let len = 1 + r.below(512) as usize;
+                let bound = [8i32, 40, 500, 5000, 32385][r.below(5) as usize];
+                let prods = r.ivec(len, -bound, bound);
+                let tile = [1usize, 3, 8, 32, 64, 256, 0][r.below(7) as usize];
+                (prods, 10 + r.below(14), tile)
+            },
+            |(prods, p, tile)| {
+                let mut e = DotEngine::new();
+                let got = tiled_sorted_dot(&mut e, prods, *p, *tile);
+                let want = reference_tiled(prods, *p, *tile);
+                if got != want {
+                    return Err(format!(
+                        "fused {got:?} != reference {want:?} (len {}, tile {tile}, p {p})",
+                        prods.len()
+                    ));
+                }
+                if e.counts.iter().any(|&c| c != 0) {
+                    return Err("fused walk left the counts scratch dirty".into());
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn fused_histogram_handles_degenerate_tiles() {
+        let mut e = DotEngine::new();
+        // all zeros, single signs, zero-interleaved, span-1
+        for (prods, tile) in [
+            (vec![0i32; 16], 4usize),
+            (vec![7i32; 16], 4),
+            (vec![-7i32; 16], 4),
+            (vec![5, 0, -5, 0, 5, 0, -5, 0], 3),
+            (vec![1, -1, 1, -1], 2),
+        ] {
+            for p in [8u32, 12, 16] {
+                let got = tiled_sorted_dot(&mut e, &prods, p, tile);
+                let want = reference_tiled(&prods, p, tile);
+                assert_eq!(got, want, "prods {prods:?} tile {tile} p {p}");
+            }
+        }
     }
 
     #[test]

@@ -446,6 +446,18 @@ fn metrics_json(m: &ServeMetrics) -> String {
             ("max_us", json::num(r.max_us())),
         ])
     }
+    // pool utilization of the shared intra-forward compute pool; `null`
+    // when the server runs engines single-threaded
+    let pool = match &m.pool {
+        Some(p) => json::obj(vec![
+            ("threads", json::num(p.threads as f64)),
+            ("busy", json::num(p.busy as f64)),
+            ("jobs", json::num(p.jobs as f64)),
+            ("inline_jobs", json::num(p.inline_jobs as f64)),
+            ("chunks", json::num(p.chunks as f64)),
+        ]),
+        None => Json::Null,
+    };
     json::obj(vec![
         ("requests", json::num(m.requests as f64)),
         ("errors", json::num(m.errors as f64)),
@@ -457,6 +469,7 @@ fn metrics_json(m: &ServeMetrics) -> String {
         ("latency", recorder(&m.latency)),
         ("queue", recorder(&m.queue)),
         ("compute", recorder(&m.compute)),
+        ("pool", pool),
     ])
     .to_string()
 }

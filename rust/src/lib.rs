@@ -17,6 +17,7 @@
 //!   artifacts and runs every experiment in the paper.
 
 pub mod accum;
+pub mod benchreport;
 pub mod coordinator;
 pub mod data;
 pub mod dot;

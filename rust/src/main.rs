@@ -10,12 +10,20 @@
 //!   runtime --hlo PATH [--n N]   run an AOT HLO artifact through PJRT
 //!   figures [--fig 2|3|4|5|6]    regenerate the paper figures
 //!   serve-http [--addr HOST:PORT] [--model NAME] [--threads N]
-//!        [--max-batch B] [--queue-cap Q] [--deadline-ms MS]
-//!        [--for-secs S]
+//!        [--engine-threads T] [--max-batch B] [--queue-cap Q]
+//!        [--deadline-ms MS] [--for-secs S]
 //!        HTTP/1.1 front-end over the persistent serving runtime
 //!        (POST /v1/classify, GET /v1/metrics, GET /healthz — see the
 //!        `pqs::http` module docs for the wire protocol); serves a
-//!        synthetic model when artifacts are absent
+//!        synthetic model when artifacts are absent. `--engine-threads`
+//!        sizes the shared intra-forward compute pool (default: hw
+//!        threads, with workers defaulting to 2 so pool and workers
+//!        never oversubscribe; `--engine-threads 1` restores the
+//!        worker-parallel topology with hw workers)
+//!   bench [--json PATH] [--quick] [--threads "1,2,8"]
+//!        machine-readable perf report (dot kernels, pool dispatch,
+//!        batch-1 forward scaling with bit-identity checks, HTTP serve
+//!        latency); see `pqs::benchreport`
 //!
 //! Run from the repo root (or set PQS_ARTIFACTS).
 
@@ -188,12 +196,23 @@ fn run() -> Result<()> {
                 }
             };
             let deadline_ms = args.get_f64("deadline-ms", 0.0);
+            // Default topology: a wide shared compute pool (batch-1 latency)
+            // fed by few workers — with the pool on, intra-forward
+            // parallelism replaces worker-level parallelism even for
+            // batches (image-parallel over the pool), so more workers
+            // would only contend the dispatch and oversubscribe cores.
+            // `--engine-threads 1` restores the worker-parallel topology
+            // (workers then default to the hw thread count).
+            let engine_threads = args.get_usize("engine-threads", pool::default_threads());
             let scfg = ServerConfig {
-                threads: args.get_usize("threads", pool::default_threads()),
+                threads: args.get_usize(
+                    "threads",
+                    if engine_threads > 1 { 2 } else { pool::default_threads() },
+                ),
                 max_batch: args.get_usize("max-batch", 32),
                 queue_cap: args.get_usize("queue-cap", 1024),
                 linger: Duration::from_micros(200),
-                engine_threads: 1,
+                engine_threads,
                 default_deadline: if deadline_ms > 0.0 {
                     Some(Duration::from_secs_f64(deadline_ms / 1e3))
                 } else {
@@ -217,9 +236,31 @@ fn run() -> Result<()> {
                 }
             }
         }
+        "bench" => {
+            let threads: Vec<usize> = args
+                .get_or("threads", "1,2,8")
+                .split(',')
+                .filter_map(|t| t.trim().parse().ok())
+                .filter(|&t| t >= 1)
+                .collect();
+            let opts = pqs::benchreport::BenchOptions {
+                quick: args.has("quick"),
+                threads: if threads.is_empty() { vec![1, 2, 8] } else { threads },
+            };
+            match args.get("json") {
+                Some(path) => {
+                    let path = path.to_string();
+                    pqs::benchreport::run_to_file(&path, &opts)?;
+                    println!("wrote bench report to {path}");
+                }
+                None => println!("{}", pqs::benchreport::run(&opts)?.to_string()),
+            }
+        }
         "help" => {
             println!("pqs — Prune, Quantize, and Sort (paper reproduction)");
-            println!("commands: list | describe | eval | profile | runtime | figures | serve-http");
+            println!(
+                "commands: list | describe | eval | profile | runtime | figures | serve-http | bench"
+            );
             println!("see rust/src/main.rs doc comment for flags");
         }
         other => bail!("unknown command {other:?} (try `pqs help`)"),

@@ -65,6 +65,92 @@ pub fn synthetic_linear(dim: usize, classes: usize) -> PqswModel {
     }
 }
 
+/// Build a tiny deterministic synthetic CNN (no artifacts needed):
+/// `QConv(3x3, pad 1) -> ReLU -> QDwConv(3x3, pad 1) -> ReLU -> Flatten ->
+/// QLinear(classes)`. The graph exercises every parallel split of the
+/// engine offline — the conv position loop, the depthwise channel loop and
+/// the linear output-row loop — which is what the batch-1 serving path and
+/// its benches need on checkouts without artifacts.
+pub fn synthetic_conv(c: usize, h: usize, w: usize, oc: usize, classes: usize) -> PqswModel {
+    let conv_k = c * 9;
+    let wq_conv: Vec<i8> = (0..oc * conv_k).map(|i| ((i * 13 + 5) % 15) as i8 - 7).collect();
+    let q_conv = QLayerMeta {
+        name: "conv1".into(),
+        oc,
+        ic: c,
+        kh: 3,
+        kw: 3,
+        stride: 1,
+        pad: 1,
+        prune: false,
+        w_scale: 0.02,
+        x_scale: 1.0 / 255.0,
+        x_offset: -128,
+        wq: wq_conv,
+        k: conv_k,
+        bias: vec![0.02; oc],
+    };
+    let wq_dw: Vec<i8> = (0..oc * 9).map(|i| ((i * 7 + 3) % 13) as i8 - 6).collect();
+    let q_dw = QLayerMeta {
+        name: "dw2".into(),
+        oc,
+        ic: oc,
+        kh: 3,
+        kw: 3,
+        stride: 1,
+        pad: 1,
+        prune: false,
+        w_scale: 0.03,
+        x_scale: 0.02,
+        x_offset: -128,
+        wq: wq_dw,
+        k: 9,
+        bias: vec![0.01; oc],
+    };
+    let fc_k = oc * h * w;
+    let wq_fc: Vec<i8> = (0..classes * fc_k).map(|i| ((i * 31 + 11) % 11) as i8 - 5).collect();
+    let q_fc = QLayerMeta {
+        name: "fc".into(),
+        oc: classes,
+        ic: fc_k,
+        kh: 1,
+        kw: 1,
+        stride: 1,
+        pad: 0,
+        prune: false,
+        w_scale: 0.05,
+        x_scale: 0.05,
+        x_offset: -128,
+        wq: wq_fc,
+        k: fc_k,
+        bias: vec![0.0; classes],
+    };
+    PqswModel {
+        name: format!("synthetic_conv_{c}x{h}x{w}_oc{oc}x{classes}"),
+        arch: "cnn_tiny".into(),
+        schedule: "pq".into(),
+        wbits: 8,
+        abits: 8,
+        nm_m: 0,
+        target_sparsity: 0.0,
+        achieved_sparsity: 0.0,
+        acc_bits_trained: None,
+        lowrank_k: None,
+        acc_q: 0.0,
+        acc_fp32: 0.0,
+        input_shape: vec![c, h, w],
+        graph: vec![
+            GraphNode { id: 0, op: Op::Input, inputs: vec![], q: None },
+            GraphNode { id: 1, op: Op::QConv, inputs: vec![0], q: Some(q_conv) },
+            GraphNode { id: 2, op: Op::Relu, inputs: vec![1], q: None },
+            GraphNode { id: 3, op: Op::QDwConv, inputs: vec![2], q: Some(q_dw) },
+            GraphNode { id: 4, op: Op::Relu, inputs: vec![3], q: None },
+            GraphNode { id: 5, op: Op::Flatten, inputs: vec![4], q: None },
+            GraphNode { id: 6, op: Op::QLinear, inputs: vec![5], q: Some(q_fc) },
+        ],
+    }
+}
+
 /// Human-readable one-line summary.
 pub fn describe(m: &PqswModel) -> String {
     let layers = m.q_layers().count();
@@ -123,5 +209,21 @@ mod tests {
         let out = eng.forward(&vec![0.5; 2 * 64], 2).unwrap();
         assert_eq!(out.classes, 10);
         assert_eq!(out.logits.len(), 20);
+    }
+
+    #[test]
+    fn synthetic_conv_is_well_formed() {
+        let m = synthetic_conv(2, 8, 8, 4, 10);
+        assert_eq!(m.q_layers().count(), 3);
+        assert_eq!(m.input_shape.iter().product::<usize>(), 2 * 8 * 8);
+        let mut eng = crate::nn::Engine::new(&m, crate::nn::EngineConfig::default());
+        let out = eng.forward(&vec![0.5; 2 * 8 * 8], 1).unwrap();
+        assert_eq!(out.classes, 10);
+        assert_eq!(out.logits.len(), 10);
+        // predictions depend on the input (weights are mixed-sign)
+        let mut rng = crate::util::rng::Pcg32::new(3);
+        let img: Vec<f32> = (0..2 * 8 * 8).map(|_| rng.f32()).collect();
+        let out2 = eng.forward(&img, 1).unwrap();
+        assert_ne!(out.logits, out2.logits);
     }
 }

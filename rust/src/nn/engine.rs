@@ -22,12 +22,19 @@
 //! interpreter allocates one tensor per producing node and nothing else.
 //!
 //! ### Intra-forward parallelism
-//! `Engine::with_threads(n)` parallelizes the per-row (linear) and
-//! per-image (conv) loops over `util::pool` with per-worker scratch.
-//! Results are bit-identical to the serial path: every dot product is an
-//! independent computation and overflow statistics merge commutatively.
+//! `Engine::with_threads(n)` parallelizes the hot loops over `util::pool`
+//! with per-worker scratch; `Engine::with_pool` serves the same splits from
+//! a shared persistent [`ComputePool`] (no per-layer thread spawns, and N
+//! engines sharing one pool cannot oversubscribe the machine). The split
+//! adapts to the batch: large batches go image-/row-parallel, while small
+//! batches — the batch-1 serving hot path — split *inside* the layer
+//! (conv output positions in blocks, depthwise channels, linear output
+//! rows). Results are bit-identical to the serial path on every split:
+//! every dot product is an independent computation and overflow statistics
+//! merge commutatively.
 
 use std::collections::BTreeMap;
+use std::sync::Arc;
 
 use anyhow::{anyhow, bail, Result};
 
@@ -37,7 +44,7 @@ use crate::formats::pqsw::{Op, PqswModel};
 use crate::overflow::{OverflowReport, OverflowStats};
 use crate::quant;
 use crate::tensor::{conv_out_dim, im2col, im2col_grouped, TensorF};
-use crate::util::pool;
+use crate::util::pool::{self, ComputePool};
 
 use super::layer::QLayer;
 
@@ -113,6 +120,30 @@ pub struct Engine {
     out_slot: usize,
     scratch: Scratch,
     threads: usize,
+    /// shared persistent pool for the parallel splits (scoped spawns when
+    /// absent)
+    pool: Option<Arc<ComputePool>>,
+}
+
+/// Dispatch an index-range map on the engine's shared persistent pool when
+/// it has one, else on per-call scoped threads. Same chunked claiming,
+/// same index-order stitching — bit-identical either way.
+fn pmap_init<T, S, I, F>(
+    pool: Option<&ComputePool>,
+    n: usize,
+    threads: usize,
+    init: I,
+    f: F,
+) -> Vec<T>
+where
+    T: Send,
+    I: Fn() -> S + Sync,
+    F: Fn(&mut S, usize) -> T + Sync,
+{
+    match pool {
+        Some(p) => p.map_init(n, init, f),
+        None => pool::parallel_map_init(n, threads, init, f),
+    }
 }
 
 struct EngineNode {
@@ -280,14 +311,28 @@ impl Engine {
             out_slot,
             scratch: Scratch::default(),
             threads: 1,
+            pool: None,
         }
     }
 
-    /// Parallelize the per-row / per-image loops of `forward` over `n`
-    /// pool workers (1 = serial). Results are bit-identical to serial.
+    /// Parallelize the hot loops of `forward` over `n` scoped pool workers
+    /// (1 = serial). Results are bit-identical to serial.
     pub fn with_threads(mut self, threads: usize) -> Engine {
         self.set_threads(threads);
         self
+    }
+
+    /// Serve the parallel splits from a shared persistent [`ComputePool`]
+    /// instead of spawning scoped threads per layer call. Overrides the
+    /// thread count with the pool's width; results stay bit-identical.
+    pub fn with_pool(mut self, pool: Arc<ComputePool>) -> Engine {
+        self.set_pool(pool);
+        self
+    }
+
+    pub fn set_pool(&mut self, pool: Arc<ComputePool>) {
+        self.threads = pool.threads().max(1);
+        self.pool = Some(pool);
     }
 
     pub fn set_threads(&mut self, threads: usize) {
@@ -357,17 +402,18 @@ impl Engine {
                     let layer = self.nodes[ni].layer.as_ref().unwrap();
                     let mut stats = OverflowStats::default();
                     let collect = self.cfg.collect_stats;
+                    let pool = self.pool.as_deref();
                     let out = match node.op {
                         Op::QLinear => qlinear_forward(
-                            layer, &self.cfg, &mut self.scratch, self.threads, x,
+                            layer, &self.cfg, &mut self.scratch, self.threads, pool, x,
                             collect.then_some(&mut stats),
                         ),
                         Op::QConv => qconv_forward(
-                            layer, &self.cfg, &mut self.scratch, self.threads, x, false,
+                            layer, &self.cfg, &mut self.scratch, self.threads, pool, x, false,
                             collect.then_some(&mut stats),
                         ),
                         _ => qconv_forward(
-                            layer, &self.cfg, &mut self.scratch, self.threads, x, true,
+                            layer, &self.cfg, &mut self.scratch, self.threads, pool, x, true,
                             collect.then_some(&mut stats),
                         ),
                     };
@@ -431,23 +477,26 @@ impl Engine {
 }
 
 /// Quantized linear layer over (n, d) input.
+#[allow(clippy::too_many_arguments)]
 fn qlinear_forward(
     layer: &QLayer,
     cfg: &EngineConfig,
     s: &mut Scratch,
     threads: usize,
+    pool: Option<&ComputePool>,
     x: &TensorF,
     mut stats: Option<&mut OverflowStats>,
 ) -> TensorF {
     let n = x.shape[0];
     let d = x.numel() / n;
     debug_assert_eq!(d, layer.k, "linear input dim");
+    let collect = stats.is_some();
 
     if threads > 1 && n > 1 {
         // row-parallel: each worker quantizes and evaluates whole rows with
         // its own scratch; chunks are contiguous (row i -> out[i*oc..])
-        let collect = stats.is_some();
-        let rows = pool::parallel_map_init(
+        let rows = pmap_init(
+            pool,
             n,
             threads,
             || (RowScratch::default(), Vec::<i32>::new()),
@@ -477,6 +526,27 @@ fn qlinear_forward(
             }
         }
         return TensorF::from_vec(&[n, layer.oc], out);
+    }
+
+    if threads > 1 && n == 1 && layer.oc > 1 {
+        // batch-1 serving hot path: quantize the single row once, then
+        // split the output-row loop across workers
+        quant::quantize_centered_slice_into(&x.data[..d], &layer.x_qp, &mut s.qbuf);
+        let qbuf = &s.qbuf;
+        let rows = pmap_init(pool, layer.oc, threads, RowScratch::default, |rs, o| {
+            let mut st = OverflowStats::default();
+            let acc =
+                eval_row(layer, cfg, rs, o, qbuf, if collect { Some(&mut st) } else { None });
+            (layer.dequant(o, acc), st)
+        });
+        let mut out = Vec::with_capacity(layer.oc);
+        for (v, st) in rows {
+            out.push(v);
+            if let Some(stats) = stats.as_deref_mut() {
+                stats.merge(&st);
+            }
+        }
+        return TensorF::from_vec(&[1, layer.oc], out);
     }
 
     let mut out = vec![0f32; n * layer.oc];
@@ -543,12 +613,127 @@ fn qconv_image(
     (out, st)
 }
 
+/// One image of a standard conv with the *position loop* split across
+/// workers: quantize + im2col run once on the caller, then each worker
+/// evaluates a contiguous block of output positions with its own row
+/// scratch against the shared im2col matrix. This is what gives a single
+/// image (batch-1 serving) intra-conv parallelism. Bit-identical to
+/// `qconv_image`: same dot products, commutative stat merges, results
+/// stitched back in position order.
+#[allow(clippy::too_many_arguments)]
+fn qconv_image_positions(
+    layer: &QLayer,
+    cfg: &EngineConfig,
+    s: &mut Scratch,
+    threads: usize,
+    pool: Option<&ComputePool>,
+    x_img: &[f32],
+    dims: (usize, usize, usize, usize),
+    collect: bool,
+) -> (Vec<f32>, OverflowStats) {
+    let (c, h, w, l) = dims;
+    quant::quantize_centered_slice_into(x_img, &layer.x_qp, &mut s.qbuf);
+    let (li, k) = im2col(
+        &s.qbuf, c, h, w, layer.kh, layer.kw, layer.stride, layer.pad, layer.pad_q,
+        &mut s.colbuf,
+    );
+    debug_assert_eq!((li, k), (l, layer.k));
+    let cols = &s.colbuf[..];
+    let oc = layer.oc;
+    // blocks of contiguous positions: enough per-worker work to amortize
+    // dispatch, enough blocks to balance ragged position costs
+    let blocks = (threads * 4).clamp(1, l.max(1));
+    let bs = l.div_ceil(blocks);
+    let results = pmap_init(pool, blocks, threads, RowScratch::default, |rs, b| {
+        // ragged tail: the last blocks may be empty when bs rounds up
+        let start = (b * bs).min(l);
+        let end = ((b + 1) * bs).min(l);
+        let mut st = OverflowStats::default();
+        let mut vals = vec![0f32; (end - start) * oc];
+        for pos in start..end {
+            let col = &cols[pos * k..(pos + 1) * k];
+            for o in 0..oc {
+                let acc = eval_row(
+                    layer, cfg, rs, o, col,
+                    if collect { Some(&mut st) } else { None },
+                );
+                vals[(pos - start) * oc + o] = layer.dequant(o, acc);
+            }
+        }
+        (start, vals, st)
+    });
+    let mut out = vec![0f32; oc * l];
+    let mut stats = OverflowStats::default();
+    for (start, vals, st) in results {
+        for (j, &v) in vals.iter().enumerate() {
+            let pos = start + j / oc;
+            let o = j % oc;
+            out[o * l + pos] = v;
+        }
+        stats.merge(&st);
+    }
+    (out, stats)
+}
+
+/// One image of a depthwise conv with the *channel loop* split across
+/// workers: quantize runs once on the caller, then each worker owns
+/// im2col + positions for the channels it claims. Bit-identical to the
+/// serial path (channels are independent, stats merge commutatively).
+#[allow(clippy::too_many_arguments)]
+fn qconv_image_channels(
+    layer: &QLayer,
+    cfg: &EngineConfig,
+    s: &mut Scratch,
+    threads: usize,
+    pool: Option<&ComputePool>,
+    x_img: &[f32],
+    dims: (usize, usize, usize, usize),
+    collect: bool,
+) -> (Vec<f32>, OverflowStats) {
+    let (c, h, w, l) = dims;
+    quant::quantize_centered_slice_into(x_img, &layer.x_qp, &mut s.qbuf);
+    let q = &s.qbuf[..];
+    let k = layer.k;
+    let results = pmap_init(
+        pool,
+        c,
+        threads,
+        || (RowScratch::default(), Vec::<i32>::new()),
+        |(rs, colbuf), ch| {
+            let (li, kk) = im2col_grouped(
+                q, c, h, w, ch, layer.kh, layer.kw, layer.stride, layer.pad, layer.pad_q,
+                colbuf,
+            );
+            debug_assert_eq!((li, kk), (l, k));
+            let mut st = OverflowStats::default();
+            let mut vals = vec![0f32; l];
+            for (pos, val) in vals.iter_mut().enumerate() {
+                let acc = eval_row(
+                    layer, cfg, rs, ch, &colbuf[pos * k..(pos + 1) * k],
+                    if collect { Some(&mut st) } else { None },
+                );
+                *val = layer.dequant(ch, acc);
+            }
+            (vals, st)
+        },
+    );
+    let mut out = Vec::with_capacity(c * l);
+    let mut stats = OverflowStats::default();
+    for (vals, st) in results {
+        out.extend_from_slice(&vals);
+        stats.merge(&st);
+    }
+    (out, stats)
+}
+
 /// Quantized (depthwise-)conv layer over (n, c, h, w) input via im2col.
+#[allow(clippy::too_many_arguments)]
 fn qconv_forward(
     layer: &QLayer,
     cfg: &EngineConfig,
     s: &mut Scratch,
     threads: usize,
+    pool: Option<&ComputePool>,
     x: &TensorF,
     depthwise: bool,
     mut stats: Option<&mut OverflowStats>,
@@ -561,9 +746,12 @@ fn qconv_forward(
     let chw = c * h * w;
     let collect = stats.is_some();
 
-    if threads > 1 && n > 1 {
+    // is there exploitable parallelism *inside* one image?
+    let intra = if depthwise { c > 1 } else { l > 1 };
+    if threads > 1 && n > 1 && (n >= threads || !intra) {
         // image-parallel: each worker owns quantize + im2col + row scratch
-        let chunks = pool::parallel_map_init(
+        let chunks = pmap_init(
+            pool,
             n,
             threads,
             || (RowScratch::default(), Vec::<i32>::new(), Vec::<i32>::new()),
@@ -579,6 +767,26 @@ fn qconv_forward(
         );
         let mut out = Vec::with_capacity(n * layer.oc * l);
         for (chunk, st) in chunks {
+            out.extend_from_slice(&chunk);
+            if let Some(stats) = stats.as_deref_mut() {
+                stats.merge(&st);
+            }
+        }
+        return TensorF::from_vec(&[n, layer.oc, oh, ow], out);
+    }
+
+    if threads > 1 && intra {
+        // fewer images than workers (batch-1 serving): split inside each
+        // image instead — output positions for standard conv, channels for
+        // depthwise
+        let mut out = Vec::with_capacity(n * layer.oc * l);
+        for i in 0..n {
+            let img = &x.data[i * chw..(i + 1) * chw];
+            let (chunk, st) = if depthwise {
+                qconv_image_channels(layer, cfg, s, threads, pool, img, (c, h, w, l), collect)
+            } else {
+                qconv_image_positions(layer, cfg, s, threads, pool, img, (c, h, w, l), collect)
+            };
             out.extend_from_slice(&chunk);
             if let Some(stats) = stats.as_deref_mut() {
                 stats.merge(&st);

@@ -37,6 +37,22 @@ pub fn im2col(
     let k = c * kh * kw;
     out.clear();
     out.reserve(oh * ow * k);
+    if pad == 0 && stride == 1 {
+        // fast path: no bounds checks and every kernel row is a contiguous
+        // kw-run of the input, copied whole instead of per element
+        for oy in 0..oh {
+            for ox in 0..ow {
+                for ch in 0..c {
+                    let base = ch * h * w;
+                    for ky in 0..kh {
+                        let row = base + (oy + ky) * w + ox;
+                        out.extend_from_slice(&x[row..row + kw]);
+                    }
+                }
+            }
+        }
+        return (oh * ow, k);
+    }
     for oy in 0..oh {
         for ox in 0..ow {
             let iy0 = (oy * stride) as isize - pad as isize;
@@ -82,6 +98,18 @@ pub fn im2col_grouped(
     out.clear();
     out.reserve(oh * ow * k);
     let base = ch * h * w;
+    if pad == 0 && stride == 1 {
+        // fast path: contiguous kw-runs (see `im2col`)
+        for oy in 0..oh {
+            for ox in 0..ow {
+                for ky in 0..kh {
+                    let row = base + (oy + ky) * w + ox;
+                    out.extend_from_slice(&x[row..row + kw]);
+                }
+            }
+        }
+        return (oh * ow, k);
+    }
     for oy in 0..oh {
         for ox in 0..ow {
             let iy0 = (oy * stride) as isize - pad as isize;
@@ -171,6 +199,87 @@ mod tests {
         let (l, k) = im2col_grouped(&x, c, h, w, 1, 3, 3, 1, 1, 0, &mut grp);
         assert_eq!((l, k), (16, 9));
         assert_eq!(full, grp);
+    }
+
+    /// The general gather loop (the pre-fast-path implementation), used to
+    /// prove the contiguous-run fast path is bit-identical.
+    #[allow(clippy::too_many_arguments)]
+    fn reference_im2col(
+        x: &[i32],
+        c: usize,
+        h: usize,
+        w: usize,
+        kh: usize,
+        kw: usize,
+        stride: usize,
+        pad: usize,
+        pad_q: i32,
+    ) -> Vec<i32> {
+        let oh = conv_out_dim(h, kh, stride, pad);
+        let ow = conv_out_dim(w, kw, stride, pad);
+        let mut out = Vec::new();
+        for oy in 0..oh {
+            for ox in 0..ow {
+                let iy0 = (oy * stride) as isize - pad as isize;
+                let ix0 = (ox * stride) as isize - pad as isize;
+                for ch in 0..c {
+                    let base = ch * h * w;
+                    for ky in 0..kh {
+                        let iy = iy0 + ky as isize;
+                        for kx in 0..kw {
+                            let ix = ix0 + kx as isize;
+                            if iy < 0 || iy >= h as isize || ix < 0 || ix >= w as isize {
+                                out.push(pad_q);
+                            } else {
+                                out.push(x[base + iy as usize * w + ix as usize]);
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn fast_path_bit_identical_to_general_gather() {
+        // the ISSUE contract: the pad==0 && stride==1 contiguous-run copy
+        // must equal the general per-element gather exactly
+        let mut rng = crate::util::rng::Pcg32::new(0x132C);
+        for case in 0..50 {
+            let c = 1 + rng.below(4) as usize;
+            let h = 3 + rng.below(8) as usize;
+            let w = 3 + rng.below(8) as usize;
+            let kh = 1 + rng.below(3.min(h as u32)) as usize;
+            let kw = 1 + rng.below(3.min(w as u32)) as usize;
+            let x = rng.ivec(c * h * w, -120, 120);
+            let mut fast = Vec::new();
+            let (l, k) = im2col(&x, c, h, w, kh, kw, 1, 0, 7, &mut fast);
+            let want = reference_im2col(&x, c, h, w, kh, kw, 1, 0, 7);
+            assert_eq!(fast.len(), l * k, "case {case}");
+            assert_eq!(fast, want, "case {case}: c={c} h={h} w={w} kh={kh} kw={kw}");
+        }
+    }
+
+    #[test]
+    fn grouped_fast_path_bit_identical_to_general_gather() {
+        let mut rng = crate::util::rng::Pcg32::new(0x6270);
+        for case in 0..50 {
+            let c = 1 + rng.below(4) as usize;
+            let ch = rng.below(c as u32) as usize;
+            let h = 3 + rng.below(8) as usize;
+            let w = 3 + rng.below(8) as usize;
+            let kh = 1 + rng.below(3.min(h as u32)) as usize;
+            let kw = 1 + rng.below(3.min(w as u32)) as usize;
+            let x = rng.ivec(c * h * w, -120, 120);
+            let mut fast = Vec::new();
+            let (l, k) = im2col_grouped(&x, c, h, w, ch, kh, kw, 1, 0, 7, &mut fast);
+            // general gather over the single channel == grouped fast path
+            let img = &x[ch * h * w..(ch + 1) * h * w];
+            let want = reference_im2col(img, 1, h, w, kh, kw, 1, 0, 7);
+            assert_eq!(fast.len(), l * k, "case {case}");
+            assert_eq!(fast, want, "case {case}: c={c} ch={ch} h={h} w={w} kh={kh} kw={kw}");
+        }
     }
 
     #[test]

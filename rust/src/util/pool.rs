@@ -1,20 +1,50 @@
 //! Thread-pool helpers (no tokio/rayon offline).
 //!
-//! `parallel_map` splits the index range `0..n` across `n_threads` scoped
-//! workers. Workers claim *chunks* of consecutive indices from a shared
-//! atomic cursor (one fetch-add per chunk, not per item), compute results
-//! into a private buffer, and the buffers are stitched back into index
-//! order after the scope joins — no per-item locking anywhere. The
-//! evaluation coordinator and the engine's intra-forward parallelism build
-//! on this.
+//! Three dispatch modes, one claiming discipline:
 //!
-//! [`WorkerPool`] is the persistent counterpart: long-lived workers drain
-//! a bounded queue of dispatched items, with `try_dispatch` handing the
-//! item back when the queue is full so callers can shed load. The HTTP
-//! front-end (`crate::http`) uses it as its bounded connection pool.
+//! * **Scoped index-range maps** — [`parallel_map`]/[`parallel_map_init`]
+//!   split the index range `0..n` across `n_threads` scoped workers spawned
+//!   per call. Workers claim *chunks* of consecutive indices from a shared
+//!   atomic cursor (one fetch-add per chunk, not per item), compute results
+//!   into a private buffer, and the buffers are stitched back into index
+//!   order after the scope joins — no per-item locking anywhere. This is
+//!   the fallback path: correct anywhere, but it pays a thread spawn+join
+//!   per call, which dominates for small per-call work (one conv layer at
+//!   batch 1).
+//! * **Persistent index-range maps** — [`ComputePool`] keeps the same
+//!   chunked-claiming semantics but serves them from long-lived workers.
+//!   Workers park on a condvar between jobs; a dispatched job is an
+//!   epoch-numbered broadcast (every worker runs the job body once, the
+//!   body loops claiming chunks until the cursor is exhausted), and the
+//!   dispatching caller participates as one more worker, so a pool sized
+//!   `threads` applies exactly `threads` threads to each job. Per-layer
+//!   dispatch cost is one lock round-trip + a condvar wakeup instead of
+//!   `threads` thread spawns. One pool is meant to be *shared* (via `Arc`)
+//!   by every engine in a process — N engines dispatching into one pool
+//!   cannot oversubscribe the machine the way N private scoped maps can.
+//!   Results are bit-identical to the scoped and serial paths: the same
+//!   per-index closure runs exactly once per index and results are
+//!   stitched in index order.
+//!
+//!   *Sizing*: `ComputePool::new(threads)` spawns `threads - 1` background
+//!   workers (the caller is the remaining thread). *Contention*: jobs are
+//!   serialized; a caller that finds the pool busy runs its job body
+//!   inline (claiming every chunk itself — the serial path) instead of
+//!   convoying behind the other job. *Shutdown*: dropping the pool parks
+//!   no new jobs, wakes every worker and joins them; in-flight jobs finish
+//!   first because the dispatcher holds the job until all workers
+//!   acknowledge. *Panics*: a panicking job body is caught in the worker,
+//!   re-raised on the dispatching caller after the job drains, and never
+//!   kills a pool thread. Utilization counters (busy workers, dispatched
+//!   jobs/chunks) are exported via [`ComputePool::stats`] — the serving
+//!   stack surfaces them on `GET /v1/metrics`.
+//! * **Item queues** — [`WorkerPool`]: long-lived workers drain a bounded
+//!   queue of dispatched items, with `try_dispatch` handing the item back
+//!   when the queue is full so callers can shed load. The HTTP front-end
+//!   (`crate::http`) uses it as its bounded connection pool.
 
 use std::collections::VecDeque;
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 
@@ -84,7 +114,11 @@ where
             parts.push(h.join().expect("pool worker panicked"));
         }
     });
-    // stitch the per-worker runs back into index order
+    stitch(parts, n)
+}
+
+/// Reassemble per-worker `(index, value)` runs into index order.
+fn stitch<T>(parts: Vec<Vec<(usize, T)>>, n: usize) -> Vec<T> {
     let mut out: Vec<Option<T>> = (0..n).map(|_| None).collect();
     for part in parts {
         for (i, v) in part {
@@ -93,6 +127,273 @@ where
         }
     }
     out.into_iter().map(|v| v.expect("pool missed an index")).collect()
+}
+
+// ---- persistent compute pool ----------------------------------------------
+
+/// Snapshot of a [`ComputePool`]'s utilization counters.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PoolStats {
+    /// threads the pool applies to a job (background workers + the
+    /// participating dispatcher)
+    pub threads: usize,
+    /// threads currently executing a job body
+    pub busy: usize,
+    /// jobs broadcast to the workers since the pool started (one per
+    /// `map`/`map_init` call that actually went parallel)
+    pub jobs: u64,
+    /// jobs that found the pool busy (or worker-less) and ran inline on
+    /// the caller instead — the serialized fallback under contention
+    pub inline_jobs: u64,
+    /// index chunks claimed from job cursors since the pool started
+    pub chunks: u64,
+}
+
+/// Type-erased pointer to a dispatched job body. Only valid while the
+/// dispatching [`ComputePool::run`] call is blocked waiting for every
+/// worker to finish — see the SAFETY notes at the two uses.
+struct RawJob {
+    body: *const (dyn Fn() + Sync),
+}
+
+// SAFETY: workers only ever take a `&dyn Fn` to the (Sync) pointee, and the
+// dispatch protocol guarantees the pointee outlives every worker's use.
+unsafe impl Send for RawJob {}
+
+struct ComputeState {
+    /// bumped per dispatched job; workers run each epoch exactly once
+    epoch: u64,
+    /// the current job; `Some` from dispatch until every worker finished
+    job: Option<RawJob>,
+    /// workers that have not yet finished the current epoch
+    remaining: usize,
+    /// a worker caught a panic from the current job body
+    panicked: bool,
+    shutdown: bool,
+}
+
+struct ComputeShared {
+    state: Mutex<ComputeState>,
+    /// workers park here between jobs
+    work: Condvar,
+    /// the dispatcher parks here until `remaining == 0`
+    done: Condvar,
+    busy: AtomicUsize,
+    jobs: AtomicU64,
+    inline_jobs: AtomicU64,
+    chunks: AtomicU64,
+}
+
+/// Persistent, shareable worker pool for index-range maps. See the module
+/// docs for the architecture (dispatch modes, sizing, contention,
+/// shutdown). Cheap to share: wrap it in an `Arc` and hand one instance to
+/// every engine in the process.
+pub struct ComputePool {
+    shared: Arc<ComputeShared>,
+    handles: Vec<JoinHandle<()>>,
+    /// serializes jobs; `try_lock` contention makes the caller run inline
+    dispatch: Mutex<()>,
+    threads: usize,
+}
+
+impl ComputePool {
+    /// Build a pool that applies `threads` threads to each job:
+    /// `threads - 1` parked background workers plus the dispatching caller.
+    pub fn new(threads: usize) -> ComputePool {
+        let threads = threads.max(1);
+        let shared = Arc::new(ComputeShared {
+            state: Mutex::new(ComputeState {
+                epoch: 0,
+                job: None,
+                remaining: 0,
+                panicked: false,
+                shutdown: false,
+            }),
+            work: Condvar::new(),
+            done: Condvar::new(),
+            busy: AtomicUsize::new(0),
+            jobs: AtomicU64::new(0),
+            inline_jobs: AtomicU64::new(0),
+            chunks: AtomicU64::new(0),
+        });
+        let handles = (0..threads - 1)
+            .map(|_| {
+                let sh = Arc::clone(&shared);
+                std::thread::spawn(move || compute_worker(&sh))
+            })
+            .collect();
+        ComputePool { shared, handles, dispatch: Mutex::new(()), threads }
+    }
+
+    /// Threads applied to each job (background workers + caller).
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Current utilization counters.
+    pub fn stats(&self) -> PoolStats {
+        PoolStats {
+            threads: self.threads,
+            busy: self.shared.busy.load(Ordering::Relaxed),
+            jobs: self.shared.jobs.load(Ordering::Relaxed),
+            inline_jobs: self.shared.inline_jobs.load(Ordering::Relaxed),
+            chunks: self.shared.chunks.load(Ordering::Relaxed),
+        }
+    }
+
+    /// [`parallel_map`] served from the persistent workers.
+    pub fn map<T: Send, F: Fn(usize) -> T + Sync>(&self, n: usize, f: F) -> Vec<T> {
+        self.map_init(n, || (), |_, i| f(i))
+    }
+
+    /// [`parallel_map_init`] served from the persistent workers: apply `f`
+    /// to every index in `0..n`, collecting results in index order, with
+    /// per-worker state from `init`. Bit-identical to the scoped and
+    /// serial paths.
+    pub fn map_init<T, S, I, F>(&self, n: usize, init: I, f: F) -> Vec<T>
+    where
+        T: Send,
+        I: Fn() -> S + Sync,
+        F: Fn(&mut S, usize) -> T + Sync,
+    {
+        if n == 0 {
+            return Vec::new();
+        }
+        if self.threads == 1 || n == 1 {
+            let mut st = init();
+            return (0..n).map(|i| f(&mut st, i)).collect();
+        }
+        let chunk = chunk_size(n, self.threads.min(n));
+        let next = AtomicUsize::new(0);
+        let parts: Mutex<Vec<Vec<(usize, T)>>> = Mutex::new(Vec::with_capacity(self.threads));
+        let chunks = &self.shared.chunks;
+        let body = || {
+            let mut st = init();
+            let mut local: Vec<(usize, T)> = Vec::new();
+            loop {
+                let start = next.fetch_add(chunk, Ordering::Relaxed);
+                if start >= n {
+                    break;
+                }
+                chunks.fetch_add(1, Ordering::Relaxed);
+                let end = (start + chunk).min(n);
+                if local.capacity() == 0 {
+                    local.reserve(n / self.threads + chunk);
+                }
+                for i in start..end {
+                    local.push((i, f(&mut st, i)));
+                }
+            }
+            if !local.is_empty() {
+                parts.lock().unwrap().push(local);
+            }
+        };
+        self.run(&body);
+        stitch(parts.into_inner().unwrap(), n)
+    }
+
+    /// Broadcast `body` to every pool thread (workers + this caller) and
+    /// block until all of them finished running it.
+    fn run(&self, body: &(dyn Fn() + Sync)) {
+        // Serialize jobs. A contended (or poisoned) dispatch runs the body
+        // inline on the caller — the body claims every chunk itself, which
+        // is exactly the serial path — instead of convoying callers. The
+        // two cases are counted separately so `jobs` vs `inline_jobs` on
+        // the metrics surface shows how often contention serialized work.
+        let guard = match self.dispatch.try_lock() {
+            Ok(g) if !self.handles.is_empty() => g,
+            _ => {
+                self.shared.inline_jobs.fetch_add(1, Ordering::Relaxed);
+                self.shared.busy.fetch_add(1, Ordering::Relaxed);
+                body();
+                self.shared.busy.fetch_sub(1, Ordering::Relaxed);
+                return;
+            }
+        };
+        self.shared.jobs.fetch_add(1, Ordering::Relaxed);
+        {
+            // SAFETY: the body pointer is only dereferenced by workers
+            // between this publish and the `remaining == 0` acknowledgment
+            // below; we do not return (or unwind) past that wait, so the
+            // borrow never outlives the caller's frame.
+            let body_static: &'static (dyn Fn() + Sync) =
+                unsafe { std::mem::transmute::<&(dyn Fn() + Sync), _>(body) };
+            let mut st = self.shared.state.lock().unwrap();
+            st.epoch = st.epoch.wrapping_add(1);
+            st.job = Some(RawJob { body: body_static });
+            st.remaining = self.handles.len();
+            st.panicked = false;
+        }
+        self.shared.work.notify_all();
+        // the dispatcher participates in its own job
+        self.shared.busy.fetch_add(1, Ordering::Relaxed);
+        let caller = std::panic::catch_unwind(std::panic::AssertUnwindSafe(body));
+        self.shared.busy.fetch_sub(1, Ordering::Relaxed);
+        let worker_panicked = {
+            let mut st = self.shared.state.lock().unwrap();
+            while st.remaining > 0 {
+                st = self.shared.done.wait(st).unwrap();
+            }
+            st.job = None;
+            st.panicked
+        };
+        drop(guard);
+        if let Err(p) = caller {
+            std::panic::resume_unwind(p);
+        }
+        if worker_panicked {
+            panic!("compute pool worker panicked");
+        }
+    }
+}
+
+impl Drop for ComputePool {
+    fn drop(&mut self) {
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.shutdown = true;
+        }
+        self.shared.work.notify_all();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn compute_worker(shared: &ComputeShared) {
+    let mut seen = 0u64;
+    loop {
+        let body = {
+            let mut st = shared.state.lock().unwrap();
+            loop {
+                if st.shutdown {
+                    return;
+                }
+                if st.epoch != seen {
+                    if let Some(job) = &st.job {
+                        seen = st.epoch;
+                        break job.body;
+                    }
+                }
+                st = shared.work.wait(st).unwrap();
+            }
+        };
+        shared.busy.fetch_add(1, Ordering::Relaxed);
+        // SAFETY: the dispatcher blocks until every worker decremented
+        // `remaining` for this epoch, so the pointee is alive for the
+        // whole call. Panics are caught so a bad job body cannot kill a
+        // pool thread or poison the state lock.
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| unsafe { (*body)() }));
+        shared.busy.fetch_sub(1, Ordering::Relaxed);
+        let mut st = shared.state.lock().unwrap();
+        if r.is_err() {
+            st.panicked = true;
+        }
+        st.remaining -= 1;
+        if st.remaining == 0 {
+            shared.done.notify_one();
+        }
+    }
 }
 
 struct PoolState<T> {
@@ -307,6 +608,116 @@ mod tests {
     fn worker_pool_drop_joins_without_hanging() {
         let pool = WorkerPool::new(2, 8, |_: usize| {});
         pool.try_dispatch(1).unwrap();
+        drop(pool);
+    }
+
+    // ---- ComputePool ------------------------------------------------------
+
+    #[test]
+    fn compute_pool_matches_serial_across_thread_counts() {
+        // the ISSUE contract: pool results are bit-identical to the serial
+        // path for every thread count and ragged n
+        for threads in [1usize, 2, 3, 8] {
+            let pool = ComputePool::new(threads);
+            for n in [0usize, 1, 7, 64, 1000, 1025] {
+                let want: Vec<usize> = (0..n).map(|i| i * i + 3).collect();
+                let got = pool.map(n, |i| i * i + 3);
+                assert_eq!(got, want, "threads={threads} n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn compute_pool_every_index_computed_exactly_once() {
+        let pool = ComputePool::new(4);
+        for &n in &[1usize, 7, 64, 1000, 1025] {
+            let calls = AtomicU64::new(0);
+            let v = pool.map(n, |i| {
+                calls.fetch_add(1, Ordering::Relaxed);
+                i
+            });
+            assert_eq!(v, (0..n).collect::<Vec<_>>(), "n={n}");
+            assert_eq!(calls.load(Ordering::Relaxed), n as u64, "n={n}");
+        }
+    }
+
+    #[test]
+    fn compute_pool_init_state_is_per_worker() {
+        let pool = ComputePool::new(4);
+        let counts = pool.map_init(
+            1000,
+            || 0usize,
+            |st, i| {
+                *st += 1;
+                (i, *st)
+            },
+        );
+        assert_eq!(counts.len(), 1000);
+        assert!(counts.iter().all(|&(_, c)| c >= 1 && c <= 1000));
+    }
+
+    #[test]
+    fn compute_pool_reusable_across_many_jobs() {
+        // persistent workers must serve many back-to-back jobs without
+        // leaking state between them
+        let pool = ComputePool::new(4);
+        for round in 0..50usize {
+            let v = pool.map(round + 1, move |i| i + round);
+            assert_eq!(v.len(), round + 1);
+            assert_eq!(v[0], round);
+        }
+        let s = pool.stats();
+        assert_eq!(s.threads, 4);
+        assert!(s.jobs >= 49, "jobs dispatched: {}", s.jobs);
+        assert_eq!(s.inline_jobs, 0, "a single caller can never contend the dispatch");
+        assert!(s.chunks >= s.jobs, "chunks claimed: {}", s.chunks);
+        assert_eq!(s.busy, 0, "idle pool must report zero busy workers");
+    }
+
+    #[test]
+    fn compute_pool_concurrent_callers_all_complete() {
+        // several threads share one pool; contended dispatches fall back to
+        // inline execution and every caller still gets exact results
+        let pool = Arc::new(ComputePool::new(4));
+        let mut joins = Vec::new();
+        for t in 0..6u64 {
+            let p = Arc::clone(&pool);
+            joins.push(std::thread::spawn(move || {
+                for n in [5usize, 117, 1000] {
+                    let v = p.map(n, move |i| i as u64 * 2 + t);
+                    assert_eq!(v.len(), n);
+                    for (i, &x) in v.iter().enumerate() {
+                        assert_eq!(x, i as u64 * 2 + t);
+                    }
+                }
+            }));
+        }
+        for j in joins {
+            j.join().expect("caller thread panicked");
+        }
+    }
+
+    #[test]
+    fn compute_pool_propagates_job_panics_and_survives() {
+        let pool = ComputePool::new(4);
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            pool.map(100, |i| {
+                if i == 57 {
+                    panic!("boom");
+                }
+                i
+            })
+        }));
+        assert!(r.is_err(), "panic in the job body must reach the caller");
+        // the pool still works after a panicked job
+        let v = pool.map(10, |i| i);
+        assert_eq!(v, (0..10).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn compute_pool_drop_joins_without_hanging() {
+        let pool = ComputePool::new(8);
+        let _ = pool.map(100, |i| i);
         drop(pool);
     }
 }

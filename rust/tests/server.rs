@@ -281,6 +281,112 @@ fn parallel_forward_bit_identical_on_synthetic_model() {
 }
 
 #[test]
+fn pooled_forward_bit_identical_across_thread_counts() {
+    // the ISSUE contract: ComputePool-backed forwards produce bit-identical
+    // logits AND overflow counters vs the serial path for threads in
+    // {1, 2, 8}, across batch sizes (batch-1 takes the position/channel/
+    // row-parallel splits; larger batches the image/row-parallel ones),
+    // on both a linear model and a CNN with conv + depthwise layers
+    let models: Vec<pqs::formats::pqsw::PqswModel> = vec![
+        common::tiny_linear_model(DIM, CLASSES),
+        pqs::models::synthetic_conv(2, 9, 9, 4, CLASSES),
+    ];
+    for model in &models {
+        let dim: usize = model.input_shape.iter().product();
+        for policy in [Policy::Exact, Policy::Clip, Policy::Sorted, Policy::Sorted1] {
+            let cfg = EngineConfig { policy, acc_bits: 14, collect_stats: true, tile: 0 };
+            for batch in [1usize, 3, 16] {
+                let imgs = common::synth_images(batch, dim, 42 + batch as u64);
+                let mut serial = Engine::new(model, cfg);
+                let a = serial.forward(&imgs, batch).unwrap();
+                for threads in [1usize, 2, 8] {
+                    let pool = std::sync::Arc::new(pqs::util::pool::ComputePool::new(threads));
+                    let mut pooled = Engine::new(model, cfg).with_pool(pool);
+                    let b = pooled.forward(&imgs, batch).unwrap();
+                    let ctx = format!("{} {policy:?} batch={batch} threads={threads}", model.name);
+                    assert_eq!(a.logits, b.logits, "logits diverged: {ctx}");
+                    assert_eq!(a.report.total(), b.report.total(), "stats diverged: {ctx}");
+                    for i in 0..batch {
+                        assert_eq!(a.argmax(i), b.argmax(i), "class diverged: {ctx}");
+                    }
+                    // scoped-thread fallback agrees too
+                    let mut scoped = Engine::new(model, cfg).with_threads(threads);
+                    let c = scoped.forward(&imgs, batch).unwrap();
+                    assert_eq!(a.logits, c.logits, "scoped diverged: {ctx}");
+                    assert_eq!(a.report.total(), c.report.total(), "scoped stats: {ctx}");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn one_pool_shared_by_many_engines_stays_bit_identical() {
+    // N engines over ONE pool (the Server topology): concurrent forwards
+    // through the shared pool must all match the serial reference
+    let model = pqs::models::synthetic_conv(2, 8, 8, 4, CLASSES);
+    let dim: usize = model.input_shape.iter().product();
+    let cfg = EngineConfig { policy: Policy::Sorted1, acc_bits: 14, collect_stats: true, tile: 0 };
+    let imgs = common::synth_images(1, dim, 7);
+    let mut serial = Engine::new(&model, cfg);
+    let want = serial.forward(&imgs, 1).unwrap();
+    let pool = std::sync::Arc::new(pqs::util::pool::ComputePool::new(4));
+    std::thread::scope(|scope| {
+        for _ in 0..4 {
+            let pool = std::sync::Arc::clone(&pool);
+            let (model, imgs, want_logits, want_total) =
+                (&model, &imgs, &want.logits, want.report.total());
+            scope.spawn(move || {
+                let mut eng = Engine::new(model, cfg).with_pool(pool);
+                for _ in 0..10 {
+                    let got = eng.forward(imgs, 1).unwrap();
+                    assert_eq!(&got.logits, want_logits);
+                    assert_eq!(got.report.total(), want_total);
+                }
+            });
+        }
+    });
+    let s = pool.stats();
+    assert!(s.jobs > 0, "shared pool must have served jobs");
+}
+
+#[test]
+fn server_with_shared_engine_pool_matches_single_threaded_server() {
+    // end-to-end: a Server with engine_threads > 1 (one shared ComputePool
+    // across workers) classifies exactly like the engine_threads = 1 one,
+    // and its metrics expose the pool utilization
+    let model = pqs::models::synthetic_conv(2, 8, 8, 4, CLASSES);
+    let dim: usize = model.input_shape.iter().product();
+    let cfg = EngineConfig { policy: Policy::Sorted1, acc_bits: 16, ..Default::default() };
+    let mut pooled_cfg = scfg(2, 4, 64);
+    pooled_cfg.engine_threads = 4;
+    let srv = Server::start(&model, cfg, pooled_cfg);
+    let mut eng = Engine::new(&model, cfg);
+    let n = 40;
+    let pending: Vec<_> = (0..n)
+        .map(|i| {
+            srv.submit(i as u64, common::synth_images(1, dim, i as u64), None).expect("submit")
+        })
+        .collect();
+    for p in pending {
+        let r = wait(p);
+        let want = eng.forward(&common::synth_images(1, dim, r.id), 1).unwrap().argmax(0);
+        assert_eq!(r.result, Ok(want), "request {}", r.id);
+    }
+    let m = srv.shutdown();
+    assert_eq!(m.requests, n);
+    assert_eq!(m.errors, 0);
+    let pool = m.pool.expect("engine_threads > 1 must expose pool stats");
+    assert_eq!(pool.threads, 4);
+    assert!(pool.jobs > 0, "batch-1 conv requests must dispatch pool jobs");
+    assert!(pool.chunks >= pool.jobs + pool.inline_jobs, "every job claims at least one chunk");
+    // engine_threads = 1 exposes no pool
+    let srv1 = Server::start(&model, cfg, scfg(1, 4, 16));
+    assert!(wait(srv1.submit(0, common::synth_images(1, dim, 0), None).unwrap()).result.is_ok());
+    assert!(srv1.shutdown().pool.is_none());
+}
+
+#[test]
 fn forward_rejects_wrong_size_without_panic() {
     let model = common::tiny_linear_model(DIM, CLASSES);
     let mut eng = Engine::new(&model, EngineConfig::default());
