@@ -8,11 +8,14 @@
 //! 2. **soak** — a 10k-synthetic-request flood through the bounded queue
 //!    (backpressure + dynamic batching under load, no panics, per-request
 //!    latency percentiles);
-//! 3. **HTTP front-end** — the same engine behind the hand-rolled
-//!    HTTP/1.1 server: keep-alive `POST /v1/classify` over loopback TCP,
-//!    a malformed request answered with 400, an already-expired deadline
-//!    answered with 504 (the `expired` metric increments), all without
-//!    killing the listener;
+//! 3. **HTTP front-end** — a TWO-model router behind the hand-rolled
+//!    HTTP/1.1 server: keep-alive `POST /v1/classify` over loopback TCP
+//!    hitting the default model, `"model"`-routed requests hitting the
+//!    second (lazily loaded) model, `GET /v1/models` reflecting load
+//!    state, an unknown model answered with 404, a malformed request
+//!    answered with 400, an already-expired deadline answered with 504
+//!    (the `expired` metric increments), all without killing the
+//!    listener;
 //! 4. **PJRT cross-check** — the same batch through the AOT-compiled HLO
 //!    (Layer-1 Pallas kernel), proving all three layers compose. Skipped
 //!    gracefully when the build has no PJRT backend or artifacts are
@@ -30,7 +33,10 @@ use std::time::Duration;
 
 use anyhow::{anyhow, bail};
 use pqs::accum::Policy;
-use pqs::coordinator::{Server, ServerConfig, SubmitError};
+use pqs::coordinator::{
+    ModelRegistry, ModelSource, Router, RouterConfig, Server, ServerConfig, SubmitError,
+    SyntheticSpec,
+};
 use pqs::data::Dataset;
 use pqs::formats::manifest::Manifest;
 use pqs::http::{HttpConfig, HttpServer};
@@ -97,9 +103,19 @@ impl MiniClient {
 }
 
 fn classify_request(image: &[f32], id: u64, deadline_ms: Option<f64>) -> Vec<u8> {
+    classify_request_for(image, id, deadline_ms, None)
+}
+
+fn classify_request_for(
+    image: &[f32],
+    id: u64,
+    deadline_ms: Option<f64>,
+    model: Option<&str>,
+) -> Vec<u8> {
     let nums: Vec<String> = image.iter().map(|v| format!("{v}")).collect();
     let deadline = deadline_ms.map(|d| format!(",\"deadline_ms\":{d}")).unwrap_or_default();
-    let body = format!("{{\"id\":{id},\"image\":[{}]{deadline}}}", nums.join(","));
+    let model = model.map(|m| format!(",\"model\":\"{m}\"")).unwrap_or_default();
+    let body = format!("{{\"id\":{id},\"image\":[{}]{deadline}{model}}}", nums.join(","));
     format!(
         "POST /v1/classify HTTP/1.1\r\nHost: serve\r\nContent-Type: application/json\r\nContent-Length: {}\r\n\r\n{body}",
         body.len()
@@ -214,12 +230,25 @@ fn main() -> anyhow::Result<()> {
     );
     assert_eq!(ok, soak_n, "soak must answer every request");
 
-    // ---- phase 3: HTTP/1.1 front-end over loopback TCP ------------------
-    println!("\n-- HTTP front-end: keep-alive POST /v1/classify over loopback --");
-    let srv = Server::start(&model, cfg, scfg);
-    let http = HttpServer::start(srv, "127.0.0.1:0", HttpConfig::default())?;
+    // ---- phase 3: two-model router behind the HTTP/1.1 front-end --------
+    println!("\n-- HTTP front-end: 2-model router, keep-alive POST /v1/classify --");
+    let aux_spec = SyntheticSpec::Conv { c: 2, h: 8, w: 8, oc: 4, classes: 10 };
+    let aux_model = pqs::models::synthetic_conv(2, 8, 8, 4, 10);
+    let aux_dim: usize = aux_model.input_shape.iter().product();
+    let mut registry = ModelRegistry::new();
+    registry.register("primary", ModelSource::Memory(model.clone()));
+    registry.register("aux", ModelSource::Synthetic(aux_spec));
+    let router =
+        Router::new(registry, RouterConfig { max_loaded: 0, engine: cfg, server: scfg })?;
+    let http = HttpServer::start(router, "127.0.0.1:0", HttpConfig::default())?;
     println!("bound http://{}", http.local_addr());
     let mut client = MiniClient::connect(http.local_addr())?;
+    // the fleet listing knows both models before anything is loaded
+    let (status, body) = client.request(b"GET /v1/models HTTP/1.1\r\nHost: serve\r\n\r\n")?;
+    assert_eq!(status, 200);
+    assert_eq!(body.get("default").and_then(Json::as_str), Some("primary"));
+    let listed = body.get("models").and_then(Json::as_arr).map(|a| a.len()).unwrap_or(0);
+    assert_eq!(listed, 2, "GET /v1/models must list the registered fleet");
     let http_n = 16.min(n);
     let mut agree = 0usize;
     for i in 0..http_n {
@@ -236,6 +265,24 @@ fn main() -> anyhow::Result<()> {
     }
     println!("HTTP<->engine agreement over one keep-alive connection: {agree}/{http_n}");
     assert_eq!(agree, http_n, "HTTP path must match the engine-path classes");
+    // "model"-routed request: the aux CNN loads lazily and classifies like
+    // a dedicated offline engine
+    let mut rng = Pcg32::new(0xA0A);
+    let aux_img: Vec<f32> = (0..aux_dim).map(|_| rng.f32()).collect();
+    let (status, body) =
+        client.request(&classify_request_for(&aux_img, 500, None, Some("aux")))?;
+    assert_eq!(status, 200, "routed request must classify");
+    let aux_class = body.get("class").and_then(Json::as_usize);
+    let mut aux_eng = Engine::new(&aux_model, cfg);
+    let want = aux_eng.forward(&aux_img, 1)?.argmax(0);
+    assert_eq!(aux_class, Some(want), "routed class must match the dedicated engine");
+    println!("model-routed request served by the lazily loaded aux model (class {want})");
+    // unknown model: 404 naming the fleet, connection survives
+    let (status, body) =
+        client.request(&classify_request_for(&aux_img, 501, None, Some("nope")))?;
+    assert_eq!(status, 404, "unknown model must answer 404");
+    let err = body.get("error").and_then(Json::as_str).unwrap_or("");
+    assert!(err.contains("aux"), "404 body must list the registered models: {err}");
     // malformed body: 400, and the connection/listener survive
     let bad = b"POST /v1/classify HTTP/1.1\r\nContent-Length: 9\r\n\r\n{not json";
     let (status, _) = client.request(bad)?;
@@ -248,9 +295,11 @@ fn main() -> anyhow::Result<()> {
         "expired-deadline request answered 504 ({})",
         body.get("error").and_then(Json::as_str).unwrap_or("?")
     );
-    let http_metrics = http.shutdown();
-    http_metrics.print();
-    assert!(http_metrics.expired >= 1, "expired counter must increment");
+    let report = http.shutdown();
+    report.print();
+    let total = report.router.aggregate();
+    assert!(total.expired >= 1, "expired counter must increment");
+    assert_eq!(report.router.unknown_model, 1, "unknown-model counter must increment");
 
     // ---- phase 4: PJRT path (AOT artifact around the Pallas kernel) -----
     println!("\n-- PJRT path (artifacts/model.hlo.txt: Pallas sorted1 kernel, p=16) --");

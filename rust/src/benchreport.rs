@@ -17,7 +17,13 @@
 //! * **serve** — end-to-end `POST /v1/classify` latency through the real
 //!   HTTP front-end + serving runtime over a loopback connection, with the
 //!   shared engine pool off (`engine_threads = 1`, the pre-refactor
-//!   behaviour) and on (`engine_threads = hw`).
+//!   behaviour) and on (`engine_threads = hw`);
+//! * **router** — a TWO-model router in one process: both models hit over
+//!   one loopback connection (routed by the `"model"` field), an unknown
+//!   model answered 404, then `GET /v1/metrics` fetched over the wire and
+//!   its per-model sections parsed back — the smoke proof that the
+//!   multi-model surface works end to end (`requests` per model, lazy
+//!   `loads`, `unknown_model`, `load_latency`).
 //!
 //! Everything runs on synthetic models so the report is reproducible on
 //! any checkout, artifacts or not. `quick: true` shrinks sample counts and
@@ -30,7 +36,9 @@ use std::time::{Duration, Instant, SystemTime, UNIX_EPOCH};
 use anyhow::{anyhow, Context, Result};
 
 use crate::accum::Policy;
-use crate::coordinator::{Server, ServerConfig};
+use crate::coordinator::{
+    ModelRegistry, ModelSource, Router, RouterConfig, ServerConfig, SyntheticSpec,
+};
 use crate::dot::{tiled_sorted_dot, DotEngine};
 use crate::http::{HttpConfig, HttpServer};
 use crate::models;
@@ -85,6 +93,7 @@ pub fn run(opts: &BenchOptions) -> Result<Json> {
         ("pool", pool_section(opts)),
         ("forward", forward_section(opts)?),
         ("serve", serve_section(opts)?),
+        ("router", router_section(opts)?),
     ]))
 }
 
@@ -332,10 +341,19 @@ impl LoopbackClient {
             body
         );
         self.stream.write_all(req.as_bytes())?;
-        self.read_response()
+        Ok(self.read_response()?.0)
     }
 
-    fn read_response(&mut self) -> Result<u16> {
+    /// GET `path` and return the status plus the parsed JSON body.
+    fn get_json(&mut self, path: &str) -> Result<(u16, Json)> {
+        let req = format!("GET {path} HTTP/1.1\r\nHost: bench\r\n\r\n");
+        self.stream.write_all(req.as_bytes())?;
+        let (status, body) = self.read_response()?;
+        let json = Json::parse_bytes(&body).map_err(|e| anyhow!("bad json from {path}: {e}"))?;
+        Ok((status, json))
+    }
+
+    fn read_response(&mut self) -> Result<(u16, Vec<u8>)> {
         let mut chunk = [0u8; 8192];
         loop {
             if let Some(head_end) = find_crlf2(&self.buf) {
@@ -361,8 +379,9 @@ impl LoopbackClient {
                     }
                     self.buf.extend_from_slice(&chunk[..n]);
                 }
+                let body = self.buf[head_end + 4..total].to_vec();
                 self.buf.drain(..total);
-                return Ok(status);
+                return Ok((status, body));
             }
             let n = self.stream.read(&mut chunk)?;
             if n == 0 {
@@ -406,8 +425,8 @@ fn serve_section(opts: &BenchOptions) -> Result<Json> {
             engine_threads,
             default_deadline: None,
         };
-        let srv = Server::start(&model, cfg, scfg);
-        let http = HttpServer::start(srv, "127.0.0.1:0", HttpConfig::default())
+        let router = Router::single("default", &model, cfg, scfg);
+        let http = HttpServer::start(router, "127.0.0.1:0", HttpConfig::default())
             .context("binding the bench http server")?;
         let addr = http.local_addr().to_string();
         let mut client = LoopbackClient::connect(&addr)?;
@@ -429,7 +448,7 @@ fn serve_section(opts: &BenchOptions) -> Result<Json> {
             client_us.push(r0.elapsed().as_secs_f64() * 1e6);
         }
         let wall_s = t0.elapsed().as_secs_f64();
-        let metrics = http.shutdown();
+        let metrics = http.shutdown().router.aggregate();
         client_us.sort_by(f64::total_cmp);
         let mean = client_us.iter().sum::<f64>() / client_us.len() as f64;
         let p50 = client_us[client_us.len() / 2];
@@ -461,6 +480,109 @@ fn serve_section(opts: &BenchOptions) -> Result<Json> {
     Ok(Json::Arr(rows))
 }
 
+// ---- router ---------------------------------------------------------------
+
+/// Two-model router smoke through the real HTTP front-end: route requests
+/// to both models over one connection, hit an unknown name (404), then
+/// parse the nested per-model sections out of `GET /v1/metrics` fetched
+/// over the wire. Fails unless both per-model sections parse with the
+/// exact request counts — a multi-model metrics regression breaks the
+/// bench, not just a dashboard.
+fn router_section(opts: &BenchOptions) -> Result<Json> {
+    let lin_dim = if opts.quick { 64 } else { 256 };
+    let requests_per_model = if opts.quick { 10 } else { 50 };
+    let mut registry = ModelRegistry::new();
+    registry.register(
+        "lin",
+        ModelSource::Synthetic(SyntheticSpec::Linear { dim: lin_dim, classes: 10 }),
+    );
+    registry.register(
+        "cnn",
+        ModelSource::Synthetic(SyntheticSpec::Conv { c: 2, h: 8, w: 8, oc: 4, classes: 10 }),
+    );
+    let cfg = EngineConfig { policy: Policy::Sorted1, acc_bits: 16, tile: 0, collect_stats: false };
+    let scfg = ServerConfig {
+        threads: 2,
+        max_batch: 8,
+        queue_cap: 256,
+        linger: Duration::from_micros(100),
+        engine_threads: 2,
+        default_deadline: None,
+    };
+    let rcfg = RouterConfig { max_loaded: 0, engine: cfg, server: scfg };
+    let router = Router::new(registry, rcfg).context("building the bench router")?;
+    let http = HttpServer::start(router, "127.0.0.1:0", HttpConfig::default())
+        .context("binding the bench router http server")?;
+    let addr = http.local_addr().to_string();
+    let mut client = LoopbackClient::connect(&addr)?;
+
+    let mut rng = Pcg32::new(0x7007);
+    let body_for = |rng: &mut Pcg32, dim: usize, model: &str| {
+        let pixels: Vec<Json> =
+            (0..dim).map(|_| json::num((rng.below(1000) as f64) / 1000.0)).collect();
+        json::obj(vec![("model", json::s(model)), ("image", Json::Arr(pixels))]).to_string()
+    };
+    let cnn_dim = 2 * 8 * 8;
+    let t0 = Instant::now();
+    for _ in 0..requests_per_model {
+        for (model, dim) in [("lin", lin_dim), ("cnn", cnn_dim)] {
+            let status = client.classify(&body_for(&mut rng, dim, model))?;
+            if status != 200 {
+                return Err(anyhow!("router bench classify({model}) returned {status}"));
+            }
+        }
+    }
+    let wall_s = t0.elapsed().as_secs_f64();
+    // unknown model: must be answered 404 without disturbing the fleet
+    let status = client.classify(&body_for(&mut rng, lin_dim, "missing-model"))?;
+    if status != 404 {
+        return Err(anyhow!("unknown model returned {status}, want 404"));
+    }
+    // the per-model metrics sections must round-trip over the wire
+    let (status, metrics) = client.get_json("/v1/metrics")?;
+    if status != 200 {
+        return Err(anyhow!("GET /v1/metrics returned {status}"));
+    }
+    let mut model_rows = Vec::new();
+    for name in ["lin", "cnn"] {
+        let section = metrics
+            .get("models")
+            .and_then(|m| m.get(name))
+            .ok_or_else(|| anyhow!("metrics missing the per-model section for {name}"))?;
+        let served = section.get("requests").and_then(Json::as_usize).unwrap_or(0);
+        if served != requests_per_model {
+            return Err(anyhow!("model {name} served {served}, want {requests_per_model}"));
+        }
+        model_rows.push(json::obj(vec![
+            ("name", json::s(name)),
+            ("requests", json::num(served as f64)),
+            (
+                "latency_p50_us",
+                section
+                    .get("latency")
+                    .and_then(|l| l.get("p50_us"))
+                    .cloned()
+                    .unwrap_or(Json::Null),
+            ),
+        ]));
+    }
+    let router_counters = metrics
+        .get("router")
+        .ok_or_else(|| anyhow!("metrics missing the router section"))?
+        .clone();
+    let report = http.shutdown();
+    Ok(json::obj(vec![
+        ("models", Json::Arr(model_rows)),
+        ("requests_per_model", json::num(requests_per_model as f64)),
+        ("throughput_rps", json::num(2.0 * requests_per_model as f64 / wall_s.max(1e-9))),
+        ("loads", json::num(report.router.loads as f64)),
+        ("evictions", json::num(report.router.evictions as f64)),
+        ("unknown_model", json::num(report.router.unknown_model as f64)),
+        ("load_latency_mean_us", json::num(report.router.load_latency.mean_us())),
+        ("wire_router_section", router_counters),
+    ]))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -473,7 +595,7 @@ mod tests {
         let report = run(&opts).expect("quick bench run");
         let txt = report.to_string();
         let parsed = Json::parse(&txt).expect("report round-trips");
-        for key in ["meta", "dot", "pool", "forward", "serve"] {
+        for key in ["meta", "dot", "pool", "forward", "serve", "router"] {
             assert!(parsed.get(key).is_some(), "missing section {key}");
         }
         let fwd = parsed.get("forward").unwrap().as_arr().unwrap();
@@ -488,5 +610,15 @@ mod tests {
         }
         let serve = parsed.get("serve").unwrap().as_arr().unwrap();
         assert_eq!(serve.len(), 2, "engine_threads off + on");
+        // the router section carries BOTH per-model rows with exact counts
+        let router = parsed.get("router").unwrap();
+        let models = router.get("models").unwrap().as_arr().unwrap();
+        assert_eq!(models.len(), 2, "two registered models");
+        let want = router.get("requests_per_model").unwrap().as_usize().unwrap();
+        for m in models {
+            assert_eq!(m.get("requests").and_then(Json::as_usize), Some(want));
+        }
+        assert_eq!(router.get("unknown_model").and_then(Json::as_usize), Some(1));
+        assert_eq!(router.get("loads").and_then(Json::as_usize), Some(2));
     }
 }

@@ -73,6 +73,21 @@ impl LatencyRecorder {
     pub fn max_us(&self) -> f64 {
         self.max
     }
+
+    /// Fold `other` into this recorder. `count`, `mean` and `max` stay
+    /// exact; the percentile reservoir is spliced (other's samples are
+    /// appended up to the cap), so post-merge percentiles are approximate
+    /// once the combined streams exceed the reservoir. Used by the router
+    /// to carry a model's metrics across load/evict incarnations.
+    pub fn merge(&mut self, other: &LatencyRecorder) {
+        self.sum += other.sum;
+        self.seen += other.seen;
+        if other.max > self.max {
+            self.max = other.max;
+        }
+        let room = RESERVOIR_CAP.saturating_sub(self.samples.len());
+        self.samples.extend(other.samples.iter().take(room));
+    }
 }
 
 /// Aggregate serving metrics.
@@ -110,6 +125,35 @@ pub struct ServeMetrics {
 }
 
 impl ServeMetrics {
+    /// Fold `other` into this snapshot: counters sum, recorders merge (see
+    /// [`LatencyRecorder::merge`]), `mean_batch` is re-weighted by batch
+    /// count, and `wall_s` accumulates (incarnations of one model are
+    /// sequential in time, so their wall clocks add). `throughput_rps` is
+    /// recomputed from the merged totals. The router uses this to carry a
+    /// model's serving history across lazy-load/evict cycles and to build
+    /// fleet-wide aggregates.
+    pub fn merge_from(&mut self, other: &ServeMetrics) {
+        let batched =
+            self.mean_batch * self.batches as f64 + other.mean_batch * other.batches as f64;
+        self.requests += other.requests;
+        self.errors += other.errors;
+        self.expired += other.expired;
+        self.batches += other.batches;
+        self.mean_batch = if self.batches == 0 {
+            0.0
+        } else {
+            batched / self.batches as f64
+        };
+        self.wall_s += other.wall_s;
+        self.throughput_rps = self.requests as f64 / self.wall_s.max(1e-9);
+        self.latency.merge(&other.latency);
+        self.queue.merge(&other.queue);
+        self.compute.merge(&other.compute);
+        if self.pool.is_none() {
+            self.pool = other.pool;
+        }
+    }
+
     pub fn print(&self) {
         println!(
             "requests={} errors={} expired={} wall={:.2}s throughput={:.1} req/s  batches={} (mean {:.1} req/batch)",
@@ -238,6 +282,65 @@ mod tests {
             r.record(1.0);
         }
         assert_eq!(r.samples.len(), RESERVOIR_CAP);
+    }
+
+    #[test]
+    fn recorder_merge_keeps_exact_count_mean_max() {
+        let mut a = LatencyRecorder::default();
+        let mut b = LatencyRecorder::default();
+        for i in 1..=100 {
+            a.record(i as f64);
+        }
+        for i in 101..=300 {
+            b.record(i as f64);
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), 300);
+        assert!((a.mean_us() - 150.5).abs() < 1e-9);
+        assert_eq!(a.max_us(), 300.0);
+        // below the reservoir cap the merge keeps every sample: exact p50
+        let all: Vec<f64> = (1..=300).map(|i| i as f64).collect();
+        assert_eq!(a.p50_us(), stats::percentile(&all, 50.0));
+        // merging an empty recorder is a no-op
+        let before = (a.count(), a.mean_us(), a.max_us());
+        a.merge(&LatencyRecorder::default());
+        assert_eq!((a.count(), a.mean_us(), a.max_us()), before);
+    }
+
+    #[test]
+    fn serve_metrics_merge_sums_counters_and_reweights_batches() {
+        let mut a = ServeMetrics {
+            requests: 10,
+            errors: 1,
+            expired: 2,
+            batches: 5,
+            mean_batch: 2.0, // 10 batched requests
+            wall_s: 1.0,
+            ..Default::default()
+        };
+        for _ in 0..10 {
+            a.latency.record(100.0);
+        }
+        let mut b = ServeMetrics {
+            requests: 30,
+            batches: 5,
+            mean_batch: 6.0, // 30 batched requests
+            wall_s: 3.0,
+            ..Default::default()
+        };
+        for _ in 0..30 {
+            b.latency.record(200.0);
+        }
+        a.merge_from(&b);
+        assert_eq!(a.requests, 40);
+        assert_eq!(a.errors, 1);
+        assert_eq!(a.expired, 2);
+        assert_eq!(a.batches, 10);
+        assert!((a.mean_batch - 4.0).abs() < 1e-9, "40 batched over 10 batches");
+        assert!((a.wall_s - 4.0).abs() < 1e-9);
+        assert!((a.throughput_rps - 10.0).abs() < 1e-9);
+        assert_eq!(a.latency.count(), 40);
+        assert!((a.latency.mean_us() - 175.0).abs() < 1e-9);
     }
 
     #[test]

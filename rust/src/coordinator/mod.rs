@@ -3,19 +3,27 @@
 //! The paper's contribution lives at the numeric level, so L3 coordination
 //! provides the deployment-shaped fronts around the engine:
 //!
-//! * [`server::Server`] — the persistent serving runtime: long-lived
-//!   workers with pinned engines, a bounded request queue with
+//! * [`registry::Router`] + [`registry::ModelRegistry`] — the multi-model
+//!   serving surface: named model sources loaded lazily on first request,
+//!   LRU eviction under a loaded-model cap, one [`server::Server`] per
+//!   loaded model over ONE shared compute pool, per-model metrics that
+//!   survive eviction, and router-level counters (routed / unknown-model /
+//!   loads / evictions / load latency). The HTTP/1.1 front-end
+//!   (`crate::http`) routes `POST /v1/classify {"model": ...}` through it;
+//! * [`server::Server`] — the per-model persistent serving runtime:
+//!   long-lived workers with pinned engines, a bounded request queue with
 //!   backpressure, streaming dynamic batching with a linger window,
 //!   per-request deadlines (expired jobs are skipped before reaching an
 //!   engine), per-request error responses and latency accounting,
-//!   graceful draining shutdown. The HTTP/1.1 front-end (`crate::http`)
-//!   puts a network protocol in front of it;
+//!   graceful draining shutdown. Built through [`server::ServerBuilder`]
+//!   (which is how the router injects the shared pool);
 //! * `EvalService::evaluate` — whole-dataset sweeps used by the figure
 //!   harnesses (shards batches over a scoped pool);
 //! * `serve_requests` — the legacy one-shot request/response front-end,
 //!   kept as a thin compatibility shim over [`server::Server`].
 
 pub mod metrics;
+pub mod registry;
 pub mod server;
 
 use anyhow::Result;
@@ -27,8 +35,12 @@ use crate::overflow::OverflowReport;
 use crate::util::pool;
 
 pub use metrics::{LatencyRecorder, ServeMetrics};
+pub use registry::{
+    ClassifyRequest, ModelRegistry, ModelSource, ModelStatus, RouteError, Router, RouterConfig,
+    RouterMetrics, SyntheticSpec,
+};
 pub use server::{
-    PendingResponse, ServeError, ServeResponse, Server, ServerConfig, SubmitError,
+    PendingResponse, ServeError, ServeResponse, Server, ServerBuilder, ServerConfig, SubmitError,
 };
 
 /// Outcome of a coordinated evaluation.

@@ -1,0 +1,731 @@
+//! Multi-model serving: [`ModelRegistry`] (named model sources) +
+//! [`Router`] (one process, many engines, one shared compute pool).
+//!
+//! PQS models are small by construction — pruned, ≤8-bit weights, short
+//! dot products — so the natural production shape is *many* models served
+//! from one process: several accumulator-bitwidth/accuracy variants of one
+//! task (A2Q, A2Q+, different `acc_bits` budgets) live side by side and
+//! requests pick one per call. The registry names the fleet; the router
+//! owns it:
+//!
+//! * **Sources, not models** — a registered [`ModelSource`] is *how to get*
+//!   the model (an in-memory [`PqswModel`], a synthetic builder, a manifest
+//!   entry, a `.pqsw` path). Nothing is loaded at registration time.
+//! * **Lazy load** — the first request naming a model pays its load (timed
+//!   into `load_latency`); everyone after routes to the live server. Loads
+//!   run *outside* the router lock: a slow disk read for one cold model
+//!   never stalls traffic to the loaded fleet, and a per-name in-flight
+//!   marker dedups concurrent loads of the same model.
+//! * **LRU eviction** — with [`RouterConfig::max_loaded`] set, loading a
+//!   model past the cap drains the least-recently-used server first
+//!   (graceful: queued requests are answered, not dropped). A model's
+//!   [`ServeMetrics`] survive eviction: the final snapshot of each
+//!   incarnation is folded into a per-model accumulator, so
+//!   [`Router::metrics`] always reports lifetime totals.
+//! * **One compute pool** — with `server.engine_threads > 1` the router
+//!   builds ONE [`ComputePool`] and injects it into every per-model
+//!   [`Server`] (via [`crate::coordinator::ServerBuilder::shared_pool`]),
+//!   so N loaded models never oversubscribe the machine.
+//! * **Routing** — [`ClassifyRequest`] carries an optional model name;
+//!   `None` routes to the default (first registered unless overridden).
+//!   Unknown names fail fast with [`RouteError::UnknownModel`] carrying a
+//!   message that lists the registered fleet — the HTTP front-end returns
+//!   it verbatim as the 404 body.
+//!
+//! The HTTP front-end (`crate::http`) exposes all of this as
+//! `POST /v1/classify {"model": ...}`, `GET /v1/models` and the nested
+//! per-model sections of `GET /v1/metrics`.
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::path::PathBuf;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::formats::manifest::Manifest;
+use crate::formats::pqsw::PqswModel;
+use crate::models;
+use crate::nn::engine::EngineConfig;
+use crate::util::pool::{ComputePool, PoolStats};
+
+use super::metrics::{LatencyRecorder, ServeMetrics};
+use super::server::{PendingResponse, Server, ServerConfig, SubmitError};
+
+/// Deterministic synthetic architectures buildable without artifacts.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum SyntheticSpec {
+    /// `models::synthetic_linear(dim, classes)`
+    Linear { dim: usize, classes: usize },
+    /// `models::synthetic_conv(c, h, w, oc, classes)`
+    Conv { c: usize, h: usize, w: usize, oc: usize, classes: usize },
+}
+
+impl SyntheticSpec {
+    fn build(&self) -> PqswModel {
+        match *self {
+            SyntheticSpec::Linear { dim, classes } => models::synthetic_linear(dim, classes),
+            SyntheticSpec::Conv { c, h, w, oc, classes } => {
+                models::synthetic_conv(c, h, w, oc, classes)
+            }
+        }
+    }
+
+    fn input_shape(&self) -> Vec<usize> {
+        match *self {
+            SyntheticSpec::Linear { dim, .. } => vec![1, dim, 1],
+            SyntheticSpec::Conv { c, h, w, .. } => vec![c, h, w],
+        }
+    }
+}
+
+/// Where a registered model comes from. Loading is deferred until the
+/// router needs the model (first request naming it, or a reload after
+/// eviction); `Memory` sources only pay a clone.
+#[derive(Clone, Debug)]
+pub enum ModelSource {
+    /// An already-built model held in memory.
+    Memory(PqswModel),
+    /// A synthetic model built on demand (no artifacts needed).
+    Synthetic(SyntheticSpec),
+    /// A named entry of an artifacts manifest (`<dir>/models/<name>.pqsw`),
+    /// read from disk on first use via [`models::load`] — unknown names
+    /// produce its manifest-dir + available-entries error.
+    Manifest { manifest: Manifest, name: String },
+    /// A `.pqsw` file path, read from disk on first use.
+    Path(PathBuf),
+}
+
+impl ModelSource {
+    /// Materialize the model (disk read for `Manifest`/`Path` sources).
+    pub fn load(&self) -> Result<PqswModel> {
+        match self {
+            ModelSource::Memory(m) => Ok(m.clone()),
+            ModelSource::Synthetic(spec) => Ok(spec.build()),
+            ModelSource::Manifest { manifest, name } => models::load(manifest, name),
+            ModelSource::Path(p) => PqswModel::load(p)
+                .with_context(|| format!("loading model file {}", p.display())),
+        }
+    }
+
+    /// Input shape when it is knowable without touching disk.
+    pub fn input_shape(&self) -> Option<Vec<usize>> {
+        match self {
+            ModelSource::Memory(m) => Some(m.input_shape.clone()),
+            ModelSource::Synthetic(spec) => Some(spec.input_shape()),
+            ModelSource::Manifest { .. } | ModelSource::Path(_) => None,
+        }
+    }
+
+    /// Parse a CLI model spec (`pqs serve-http --model name[=SPEC]`):
+    ///
+    /// * `linear:<dim>x<classes>` — synthetic linear model;
+    /// * `conv:<c>x<h>x<w>x<oc>x<classes>` — synthetic CNN;
+    /// * anything containing `/` or ending in `.pqsw` — a model file path;
+    /// * anything else — a manifest entry name (requires artifacts).
+    pub fn parse(spec: &str, manifest: Option<&Manifest>) -> Result<ModelSource> {
+        fn dims(s: &str, n: usize, spec: &str) -> Result<Vec<usize>> {
+            let parts: Vec<usize> = s.split('x').map(|p| p.trim().parse().unwrap_or(0)).collect();
+            if parts.len() != n || parts.iter().any(|&v| v == 0) {
+                return Err(anyhow!(
+                    "bad synthetic model spec {spec:?}: want {n} positive dims separated by 'x'"
+                ));
+            }
+            Ok(parts)
+        }
+        if let Some(rest) = spec.strip_prefix("linear:") {
+            let d = dims(rest, 2, spec)?;
+            return Ok(ModelSource::Synthetic(SyntheticSpec::Linear { dim: d[0], classes: d[1] }));
+        }
+        if let Some(rest) = spec.strip_prefix("conv:") {
+            let d = dims(rest, 5, spec)?;
+            return Ok(ModelSource::Synthetic(SyntheticSpec::Conv {
+                c: d[0],
+                h: d[1],
+                w: d[2],
+                oc: d[3],
+                classes: d[4],
+            }));
+        }
+        if spec.contains('/') || spec.ends_with(".pqsw") {
+            return Ok(ModelSource::Path(PathBuf::from(spec)));
+        }
+        match manifest {
+            Some(man) => Ok(ModelSource::Manifest { manifest: man.clone(), name: spec.into() }),
+            None => Err(anyhow!(
+                "model spec {spec:?} names a manifest entry but no artifacts manifest is \
+                 available (run `make artifacts`, set PQS_ARTIFACTS, or use a \
+                 linear:/conv:/path spec)"
+            )),
+        }
+    }
+}
+
+/// Named model sources plus a default. Registration order is preserved
+/// (it drives `GET /v1/models` and the default choice).
+#[derive(Clone, Debug, Default)]
+pub struct ModelRegistry {
+    entries: BTreeMap<String, ModelSource>,
+    order: Vec<String>,
+    default: Option<String>,
+}
+
+impl ModelRegistry {
+    pub fn new() -> ModelRegistry {
+        ModelRegistry::default()
+    }
+
+    /// Register `source` under `name`. The first registered model is the
+    /// default unless [`ModelRegistry::set_default`] overrides it.
+    /// Re-registering a name replaces its source (order position kept).
+    pub fn register(&mut self, name: &str, source: ModelSource) -> &mut ModelRegistry {
+        if self.entries.insert(name.to_string(), source).is_none() {
+            self.order.push(name.to_string());
+        }
+        self
+    }
+
+    /// Make `name` the default route for requests without a model field.
+    pub fn set_default(&mut self, name: &str) -> Result<()> {
+        if !self.entries.contains_key(name) {
+            return Err(anyhow!(self.unknown_message(name)));
+        }
+        self.default = Some(name.to_string());
+        Ok(())
+    }
+
+    /// The default model name (explicit, else first registered).
+    pub fn default_name(&self) -> Option<&str> {
+        self.default.as_deref().or_else(|| self.order.first().map(|s| s.as_str()))
+    }
+
+    /// Registered names in registration order.
+    pub fn names(&self) -> impl Iterator<Item = &str> {
+        self.order.iter().map(|s| s.as_str())
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn source(&self, name: &str) -> Option<&ModelSource> {
+        self.entries.get(name)
+    }
+
+    /// The message an unknown name routes back to the client (the HTTP
+    /// front-end serves it verbatim in the 404 body): names the miss and
+    /// lists the registered fleet.
+    pub fn unknown_message(&self, name: &str) -> String {
+        let avail: Vec<&str> = self.names().collect();
+        let fleet = if avail.is_empty() {
+            "(none)".to_string()
+        } else {
+            avail.join(", ")
+        };
+        format!("unknown model {name:?}; registered models: {fleet}")
+    }
+}
+
+/// Router tuning knobs.
+#[derive(Clone, Debug, Default)]
+pub struct RouterConfig {
+    /// How many models may be loaded (live `Server` + pinned engines) at
+    /// once; loading past the cap evicts the least-recently-used model
+    /// first. `0` = unlimited.
+    pub max_loaded: usize,
+    /// Engine configuration applied to every model's workers.
+    pub engine: EngineConfig,
+    /// Per-model server template (worker threads, batching, queue bound,
+    /// deadlines). `engine_threads > 1` sizes the ONE compute pool the
+    /// router shares across every loaded model's engines.
+    pub server: ServerConfig,
+}
+
+/// One classification request at the routing surface.
+#[derive(Clone, Debug)]
+pub struct ClassifyRequest {
+    pub id: u64,
+    /// Route target; `None` uses the registry default.
+    pub model: Option<String>,
+    pub image: Vec<f32>,
+    /// Per-request deadline (falls back to the server template's
+    /// `default_deadline`).
+    pub deadline: Option<Duration>,
+}
+
+/// Why a request could not be routed.
+#[derive(Debug)]
+pub enum RouteError {
+    /// The name is not registered. Carries the client-facing message
+    /// (miss + registered fleet) — HTTP maps this to `404`.
+    UnknownModel(String),
+    /// The model is registered but its source failed to load (missing
+    /// file, bad manifest entry). HTTP maps this to `500`.
+    LoadFailed(String),
+    /// The target model's queue rejected the submission (full / shutting
+    /// down). HTTP maps this to `503`.
+    Rejected(SubmitError),
+}
+
+impl std::fmt::Display for RouteError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            RouteError::UnknownModel(m) => write!(f, "{m}"),
+            RouteError::LoadFailed(m) => write!(f, "model load failed: {m}"),
+            RouteError::Rejected(SubmitError::Full(_)) => {
+                write!(f, "request queue is full; retry later")
+            }
+            RouteError::Rejected(SubmitError::Closed(_)) => {
+                write!(f, "server is shutting down")
+            }
+        }
+    }
+}
+
+impl std::error::Error for RouteError {}
+
+/// One model's row in [`RouterMetrics`] and `GET /v1/models`.
+#[derive(Clone, Debug)]
+pub struct ModelStatus {
+    pub name: String,
+    /// Whether this is the default route.
+    pub default: bool,
+    /// Whether a live `Server` currently holds the model.
+    pub loaded: bool,
+    /// Input shape when known (always known once loaded; known without
+    /// loading for in-memory and synthetic sources).
+    pub input_shape: Option<Vec<usize>>,
+    /// Lifetime serving metrics: the live incarnation merged with every
+    /// evicted one.
+    pub metrics: ServeMetrics,
+}
+
+/// Router-level counters + the per-model fleet snapshot.
+#[derive(Clone, Debug, Default)]
+pub struct RouterMetrics {
+    /// Requests routed to a loaded model server (known names only).
+    pub routed: u64,
+    /// Requests naming an unregistered model (answered 404, never queued).
+    pub unknown_model: u64,
+    /// Lazy loads performed (first requests + post-eviction reloads).
+    pub loads: u64,
+    /// Models drained out under the `max_loaded` cap.
+    pub evictions: u64,
+    /// Wall time of each lazy load (source read + server spawn), µs.
+    pub load_latency: LatencyRecorder,
+    pub wall_s: f64,
+    /// Per-model rows in registration order.
+    pub models: Vec<ModelStatus>,
+    /// The shared compute pool's counters (`None` when engines run
+    /// single-threaded).
+    pub pool: Option<PoolStats>,
+}
+
+impl RouterMetrics {
+    /// Row for one model, if registered.
+    pub fn model(&self, name: &str) -> Option<&ModelStatus> {
+        self.models.iter().find(|m| m.name == name)
+    }
+
+    /// Fleet-wide totals: every model's metrics folded into one
+    /// [`ServeMetrics`] (counters sum; `wall_s` is the router's wall
+    /// clock, so `throughput_rps` is fleet throughput).
+    pub fn aggregate(&self) -> ServeMetrics {
+        let mut out = ServeMetrics::default();
+        for m in &self.models {
+            out.merge_from(&m.metrics);
+        }
+        out.wall_s = self.wall_s;
+        out.throughput_rps = out.requests as f64 / out.wall_s.max(1e-9);
+        out.pool = self.pool;
+        out
+    }
+
+    pub fn print(&self) {
+        println!(
+            "router: routed={} unknown_model={} loads={} evictions={} \
+             load mean={:.1}us max={:.1}us",
+            self.routed,
+            self.unknown_model,
+            self.loads,
+            self.evictions,
+            self.load_latency.mean_us(),
+            self.load_latency.max_us(),
+        );
+        for m in &self.models {
+            println!(
+                "model {}{}{}: requests={} errors={} expired={} \
+                 p50={:.1}us p99={:.1}us",
+                m.name,
+                if m.default { " (default)" } else { "" },
+                if m.loaded { " [loaded]" } else { "" },
+                m.metrics.requests,
+                m.metrics.errors,
+                m.metrics.expired,
+                m.metrics.latency.p50_us(),
+                m.metrics.latency.p99_us(),
+            );
+        }
+        if let Some(p) = &self.pool {
+            println!(
+                "  compute pool threads={} busy={} jobs={} inline_jobs={} chunks={}",
+                p.threads, p.busy, p.jobs, p.inline_jobs, p.chunks,
+            );
+        }
+    }
+}
+
+struct LoadedModel {
+    server: Arc<Server>,
+    input_shape: Vec<usize>,
+    /// monotone use tick; smallest = least recently used
+    last_used: u64,
+}
+
+#[derive(Default)]
+struct RouterInner {
+    loaded: BTreeMap<String, LoadedModel>,
+    /// names whose lazy load is in flight on some thread — other requests
+    /// for the *same* name wait on `load_done`; every other model keeps
+    /// routing (the load itself happens outside the router lock)
+    loading: BTreeSet<String>,
+    /// evicted servers still answering their queued requests; kept
+    /// visible here so metrics snapshots never lose a model's traffic
+    /// mid-drain (folded into `past` when the drain completes)
+    draining: Vec<(String, Arc<Server>)>,
+    /// accumulated metrics of evicted incarnations, per model
+    past: BTreeMap<String, ServeMetrics>,
+    tick: u64,
+    routed: u64,
+    unknown: u64,
+    loads: u64,
+    evictions: u64,
+    load_latency: LatencyRecorder,
+}
+
+/// Multi-model request router. Owns one [`Server`] per *loaded* model (all
+/// dispatching into one shared [`ComputePool`]) and routes
+/// [`ClassifyRequest`]s by name. See the module docs for the lifecycle
+/// (lazy load, LRU eviction, metrics continuity).
+pub struct Router {
+    registry: ModelRegistry,
+    cfg: RouterConfig,
+    pool: Option<Arc<ComputePool>>,
+    inner: Mutex<RouterInner>,
+    /// signalled when an in-flight lazy load finishes (either way)
+    load_done: Condvar,
+    started: Instant,
+}
+
+impl Router {
+    /// Build a router over `registry`. Nothing is loaded yet — the first
+    /// request for each model pays its load. Fails on an empty registry.
+    pub fn new(registry: ModelRegistry, cfg: RouterConfig) -> Result<Router> {
+        if registry.is_empty() {
+            return Err(anyhow!("router needs at least one registered model"));
+        }
+        let pool = (cfg.server.engine_threads > 1)
+            .then(|| Arc::new(ComputePool::new(cfg.server.engine_threads)));
+        Ok(Router {
+            registry,
+            cfg,
+            pool,
+            inner: Mutex::new(RouterInner::default()),
+            load_done: Condvar::new(),
+            started: Instant::now(),
+        })
+    }
+
+    /// Convenience: a single-model router (the pre-multi-model surface).
+    pub fn single(
+        name: &str,
+        model: &PqswModel,
+        engine: EngineConfig,
+        server: ServerConfig,
+    ) -> Router {
+        let mut registry = ModelRegistry::new();
+        registry.register(name, ModelSource::Memory(model.clone()));
+        Router::new(registry, RouterConfig { max_loaded: 0, engine, server })
+            .expect("registry has one model")
+    }
+
+    /// The name requests without a model field route to.
+    pub fn default_model(&self) -> &str {
+        self.registry.default_name().expect("router registry is never empty")
+    }
+
+    /// The registry this router serves.
+    pub fn registry(&self) -> &ModelRegistry {
+        &self.registry
+    }
+
+    /// Route and enqueue, blocking while the target queue is full
+    /// (backpressure). Loads the model first if needed.
+    ///
+    /// A `Closed` rejection from the resolved server usually means the
+    /// model was LRU-evicted between resolve and submit, not that the
+    /// process is shutting down — so the route is retried once (the
+    /// second resolve reloads the model); only a second `Closed` is
+    /// reported to the caller.
+    pub fn submit(&self, req: ClassifyRequest) -> Result<PendingResponse, RouteError> {
+        let ClassifyRequest { id, model, mut image, deadline } = req;
+        let mut retried = false;
+        loop {
+            // the retry resolve must not re-count `routed`: one request,
+            // one tally, even when an eviction race makes it route twice
+            let server = self.resolve_counted(model.as_deref(), !retried)?;
+            match server.submit(id, image, deadline) {
+                Ok(p) => return Ok(p),
+                Err(SubmitError::Closed(img)) if !retried => {
+                    retried = true;
+                    image = img;
+                }
+                Err(e) => return Err(RouteError::Rejected(e)),
+            }
+        }
+    }
+
+    /// Route and enqueue without blocking; `Rejected(Full)` sheds when the
+    /// target queue is at capacity. Loads the model first if needed.
+    /// Eviction races retry once, as in [`Router::submit`].
+    pub fn try_submit(&self, req: ClassifyRequest) -> Result<PendingResponse, RouteError> {
+        let ClassifyRequest { id, model, mut image, deadline } = req;
+        let mut retried = false;
+        loop {
+            let server = self.resolve_counted(model.as_deref(), !retried)?;
+            match server.try_submit(id, image, deadline) {
+                Ok(p) => return Ok(p),
+                Err(SubmitError::Closed(img)) if !retried => {
+                    retried = true;
+                    image = img;
+                }
+                Err(e) => return Err(RouteError::Rejected(e)),
+            }
+        }
+    }
+
+    /// Resolve `name` (default when `None`) to a live server, lazily
+    /// loading and LRU-evicting as needed.
+    ///
+    /// The load itself runs WITHOUT the router lock: a slow disk read for
+    /// one cold model never stalls traffic to loaded models. A per-name
+    /// `loading` marker plus the `load_done` condvar dedups concurrent
+    /// loads of the same model. The request that triggers an eviction
+    /// pays the victim's graceful drain before its own submit — a
+    /// deliberate pacing choice so evictions cannot pile up faster than
+    /// queues empty.
+    ///
+    /// `count_routed` controls the `routed` tally: the submit retry after
+    /// an eviction race resolves again but must not count the same
+    /// request twice.
+    fn resolve_counted(
+        &self,
+        name: Option<&str>,
+        count_routed: bool,
+    ) -> Result<Arc<Server>, RouteError> {
+        let name = match name {
+            Some(n) => n,
+            None => self.default_model(),
+        };
+        // fast path: route to a loaded server, or claim the load
+        let mut guard = self.inner.lock().unwrap();
+        loop {
+            let inner = &mut *guard;
+            if !self.registry.entries.contains_key(name) {
+                inner.unknown += 1;
+                return Err(RouteError::UnknownModel(self.registry.unknown_message(name)));
+            }
+            if let Some(lm) = inner.loaded.get_mut(name) {
+                inner.tick += 1;
+                lm.last_used = inner.tick;
+                if count_routed {
+                    inner.routed += 1;
+                }
+                return Ok(Arc::clone(&lm.server));
+            }
+            if inner.loading.contains(name) {
+                // someone else is loading this very model: wait for their
+                // result instead of loading it twice
+                guard = self.load_done.wait(guard).unwrap();
+                continue;
+            }
+            inner.loading.insert(name.to_string());
+            break;
+        }
+        drop(guard);
+
+        // Unwind safety: if the load below panics (e.g. a worker thread
+        // fails to spawn), the `loading` marker MUST still come out and
+        // waiters MUST be woken, or every future request for this name
+        // would block forever on `load_done`. The guard does exactly that
+        // on drop; the normal paths disarm it and clean up themselves.
+        struct LoadGuard<'a> {
+            router: &'a Router,
+            name: &'a str,
+            armed: bool,
+        }
+        impl Drop for LoadGuard<'_> {
+            fn drop(&mut self) {
+                if self.armed {
+                    let mut inner = self.router.inner.lock().unwrap();
+                    inner.loading.remove(self.name);
+                    drop(inner);
+                    self.router.load_done.notify_all();
+                }
+            }
+        }
+        let mut load_guard = LoadGuard { router: self, name, armed: true };
+
+        // the load, unlocked: every other model keeps routing meanwhile
+        let t0 = Instant::now();
+        let built = self.registry.entries[name].load().map(|model| {
+            let server = Server::builder()
+                .engine(self.cfg.engine)
+                .config(self.cfg.server)
+                .maybe_shared_pool(self.pool.clone())
+                .start(&model);
+            (Arc::new(server), model.input_shape.clone())
+        });
+        let load_us = t0.elapsed().as_secs_f64() * 1e6;
+
+        let mut guard = self.inner.lock().unwrap();
+        let inner = &mut *guard;
+        load_guard.armed = false;
+        inner.loading.remove(name);
+        let (server, input_shape) = match built {
+            Ok(v) => v,
+            Err(e) => {
+                // wake same-name waiters so one of them can retry the load
+                self.load_done.notify_all();
+                return Err(RouteError::LoadFailed(format!("{e:#}")));
+            }
+        };
+        inner.load_latency.record(load_us);
+        inner.loads += 1;
+        if count_routed {
+            inner.routed += 1;
+        }
+        inner.tick += 1;
+        let tick = inner.tick;
+        // over the cap: move LRU victims into `draining` (still visible
+        // to metrics snapshots) before inserting the newcomer
+        let mut evicted: Vec<(String, Arc<Server>)> = Vec::new();
+        if self.cfg.max_loaded > 0 {
+            while inner.loaded.len() + 1 > self.cfg.max_loaded {
+                let victim = inner
+                    .loaded
+                    .iter()
+                    .min_by_key(|(_, lm)| lm.last_used)
+                    .map(|(n, _)| n.clone());
+                match victim {
+                    Some(v) => {
+                        let lm = inner.loaded.remove(&v).expect("victim is loaded");
+                        inner.evictions += 1;
+                        inner.draining.push((v.clone(), Arc::clone(&lm.server)));
+                        evicted.push((v, lm.server));
+                    }
+                    None => break,
+                }
+            }
+        }
+        inner.loaded.insert(
+            name.to_string(),
+            LoadedModel { server: Arc::clone(&server), input_shape, last_used: tick },
+        );
+        self.load_done.notify_all();
+        drop(guard);
+
+        // drain victims outside the lock (graceful: their queued requests
+        // are answered; racing submits fail with Closed → 503). Only once
+        // the final metrics are folded into `past` does the victim leave
+        // `draining`, so snapshots never under-report a model mid-drain.
+        for (victim, srv) in evicted {
+            let final_metrics = srv.drain();
+            let mut inner = self.inner.lock().unwrap();
+            inner.past.entry(victim).or_default().merge_from(&final_metrics);
+            inner.draining.retain(|(_, a)| !Arc::ptr_eq(a, &srv));
+        }
+        Ok(server)
+    }
+
+    /// Snapshot of router counters + the per-model fleet.
+    pub fn metrics(&self) -> RouterMetrics {
+        let inner = self.inner.lock().unwrap();
+        snapshot_metrics(&self.registry, self.pool.as_deref(), self.started, &inner)
+    }
+
+    /// Per-model rows only (the `GET /v1/models` payload).
+    pub fn models(&self) -> Vec<ModelStatus> {
+        self.metrics().models
+    }
+
+    /// Graceful shutdown: drain every loaded model's server (queued
+    /// requests are answered), fold final metrics, and return the lifetime
+    /// [`RouterMetrics`].
+    pub fn shutdown(self) -> RouterMetrics {
+        let Router { registry, cfg: _, pool, inner, load_done: _, started } = self;
+        let mut inner = inner.into_inner().unwrap();
+        // `shutdown(self)` cannot race a `resolve(&self)`, so `draining`
+        // is normally empty here; fold defensively anyway
+        for (name, srv) in std::mem::take(&mut inner.draining) {
+            let final_metrics = srv.drain();
+            inner.past.entry(name).or_default().merge_from(&final_metrics);
+        }
+        let loaded = std::mem::take(&mut inner.loaded);
+        for (name, lm) in loaded {
+            let final_metrics = lm.server.drain();
+            inner.past.entry(name).or_default().merge_from(&final_metrics);
+        }
+        snapshot_metrics(&registry, pool.as_deref(), started, &inner)
+    }
+}
+
+fn snapshot_metrics(
+    registry: &ModelRegistry,
+    pool: Option<&ComputePool>,
+    started: Instant,
+    inner: &RouterInner,
+) -> RouterMetrics {
+    let default = registry.default_name().unwrap_or_default().to_string();
+    let models = registry
+        .names()
+        .map(|name| {
+            let mut metrics = inner.past.get(name).cloned().unwrap_or_default();
+            // evicted-but-still-draining incarnations stay visible, so a
+            // model's counters never dip mid-eviction
+            for (n, srv) in &inner.draining {
+                if n == name {
+                    metrics.merge_from(&srv.metrics());
+                }
+            }
+            let (loaded, input_shape) = match inner.loaded.get(name) {
+                Some(lm) => {
+                    metrics.merge_from(&lm.server.metrics());
+                    (true, Some(lm.input_shape.clone()))
+                }
+                None => (false, registry.entries[name].input_shape()),
+            };
+            ModelStatus {
+                name: name.to_string(),
+                default: name == default,
+                loaded,
+                input_shape,
+                metrics,
+            }
+        })
+        .collect();
+    RouterMetrics {
+        routed: inner.routed,
+        unknown_model: inner.unknown,
+        loads: inner.loads,
+        evictions: inner.evictions,
+        load_latency: inner.load_latency.clone(),
+        wall_s: started.elapsed().as_secs_f64(),
+        models,
+        pool: pool.map(|p| p.stats()),
+    }
+}

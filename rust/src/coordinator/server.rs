@@ -222,7 +222,99 @@ struct Shared {
 /// Persistent worker-pool serving runtime. See the module docs.
 pub struct Server {
     shared: Arc<Shared>,
-    workers: Vec<JoinHandle<()>>,
+    /// behind a mutex so [`Server::drain`] can close and join from
+    /// `&self` (the router drains evicted servers it only holds in an
+    /// `Arc`); a second concurrent drainer blocks until the first one
+    /// finished joining, so post-drain metrics are always final
+    workers: Mutex<Vec<JoinHandle<()>>>,
+}
+
+/// Builds a [`Server`]. This is the primary construction surface: the
+/// multi-model [`crate::coordinator::Router`] drives it to put N servers
+/// over ONE shared [`ComputePool`] (`shared_pool`), and single-model
+/// callers get the same defaults through the [`Server::start`] shorthand.
+///
+/// ```ignore
+/// let srv = Server::builder()
+///     .engine(engine_cfg)
+///     .config(server_cfg)
+///     .shared_pool(pool)       // optional: share one pool across servers
+///     .start(&model);
+/// ```
+#[derive(Default)]
+pub struct ServerBuilder {
+    cfg: EngineConfig,
+    scfg: ServerConfig,
+    pool: Option<Arc<ComputePool>>,
+}
+
+impl ServerBuilder {
+    pub fn new() -> ServerBuilder {
+        ServerBuilder { cfg: EngineConfig::default(), scfg: ServerConfig::default(), pool: None }
+    }
+
+    /// Engine configuration every pinned worker engine is built from.
+    pub fn engine(mut self, cfg: EngineConfig) -> ServerBuilder {
+        self.cfg = cfg;
+        self
+    }
+
+    /// Server tuning knobs (threads, batching, queue bound, deadlines).
+    pub fn config(mut self, scfg: ServerConfig) -> ServerBuilder {
+        self.scfg = scfg;
+        self
+    }
+
+    /// Dispatch every worker engine into an externally owned compute pool
+    /// instead of building a private one. This is how the router keeps N
+    /// model servers from oversubscribing the machine: they all share one
+    /// pool. Overrides `ServerConfig::engine_threads` (the pool's own
+    /// width applies).
+    pub fn shared_pool(mut self, pool: Arc<ComputePool>) -> ServerBuilder {
+        self.pool = Some(pool);
+        self
+    }
+
+    /// [`ServerBuilder::shared_pool`] when the caller may or may not have
+    /// a pool (the router's engines run single-threaded without one).
+    pub fn maybe_shared_pool(mut self, pool: Option<Arc<ComputePool>>) -> ServerBuilder {
+        self.pool = pool;
+        self
+    }
+
+    /// Spawn the worker pool. The model is copied once into the server;
+    /// each worker builds its own pinned `Engine` from it.
+    pub fn start(self, model: &PqswModel) -> Server {
+        let scfg = ServerConfig {
+            threads: self.scfg.threads.max(1),
+            max_batch: self.scfg.max_batch.max(1),
+            queue_cap: self.scfg.queue_cap.max(1),
+            engine_threads: self.scfg.engine_threads.max(1),
+            ..self.scfg
+        };
+        let mut pool = self.pool;
+        if pool.is_none() && scfg.engine_threads > 1 {
+            pool = Some(Arc::new(ComputePool::new(scfg.engine_threads)));
+        }
+        let shared = Arc::new(Shared {
+            model: model.clone(),
+            cfg: self.cfg,
+            scfg,
+            queue: Mutex::new(QueueState { jobs: VecDeque::new(), closed: false }),
+            not_empty: Condvar::new(),
+            not_full: Condvar::new(),
+            metrics: Mutex::new(MetricsState::default()),
+            started: Instant::now(),
+            pool,
+        });
+        let workers = (0..scfg.threads)
+            .map(|_| {
+                let sh = Arc::clone(&shared);
+                std::thread::spawn(move || worker_loop(&sh))
+            })
+            .collect();
+        Server { shared, workers: Mutex::new(workers) }
+    }
 }
 
 #[inline]
@@ -231,35 +323,25 @@ fn dur_us(d: Duration) -> f64 {
 }
 
 impl Server {
-    /// Spawn the worker pool. The model is copied once into the server;
-    /// each worker builds its own pinned `Engine` from it.
+    /// Start building a server (the full construction surface).
+    pub fn builder() -> ServerBuilder {
+        ServerBuilder::new()
+    }
+
+    /// Shorthand for the common single-model case:
+    /// `Server::builder().engine(cfg).config(scfg).start(model)`.
     pub fn start(model: &PqswModel, cfg: EngineConfig, scfg: ServerConfig) -> Server {
-        let scfg = ServerConfig {
-            threads: scfg.threads.max(1),
-            max_batch: scfg.max_batch.max(1),
-            queue_cap: scfg.queue_cap.max(1),
-            engine_threads: scfg.engine_threads.max(1),
-            ..scfg
-        };
-        let shared = Arc::new(Shared {
-            model: model.clone(),
-            cfg,
-            scfg,
-            queue: Mutex::new(QueueState { jobs: VecDeque::new(), closed: false }),
-            not_empty: Condvar::new(),
-            not_full: Condvar::new(),
-            metrics: Mutex::new(MetricsState::default()),
-            started: Instant::now(),
-            pool: (scfg.engine_threads > 1)
-                .then(|| Arc::new(ComputePool::new(scfg.engine_threads))),
-        });
-        let workers = (0..scfg.threads)
-            .map(|_| {
-                let sh = Arc::clone(&shared);
-                std::thread::spawn(move || worker_loop(&sh))
-            })
-            .collect();
-        Server { shared, workers }
+        Server::builder().engine(cfg).config(scfg).start(model)
+    }
+
+    /// Input dimension (flattened) the served model expects.
+    pub fn input_dim(&self) -> usize {
+        self.shared.model.input_shape.iter().product()
+    }
+
+    /// Input shape of the served model.
+    pub fn input_shape(&self) -> &[usize] {
+        &self.shared.model.input_shape
     }
 
     /// Enqueue a request, blocking while the bounded queue is full
@@ -331,19 +413,32 @@ impl Server {
 
     /// Graceful shutdown: stop accepting work, let workers drain every
     /// queued request, join them, and return the final metrics.
-    pub fn shutdown(mut self) -> ServeMetrics {
+    pub fn shutdown(self) -> ServeMetrics {
         self.close_and_join();
         snapshot(&self.shared)
     }
 
-    fn close_and_join(&mut self) {
+    /// [`Server::shutdown`] through a shared handle: closes the queue,
+    /// drains it, joins the workers and returns the final metrics — but
+    /// takes `&self`, so the multi-model router can drain an evicted
+    /// server it only holds in an `Arc` (no busy-wait for uniqueness).
+    /// Afterwards `submit`/`try_submit` fail with `Closed`.
+    pub fn drain(&self) -> ServeMetrics {
+        self.close_and_join();
+        snapshot(&self.shared)
+    }
+
+    fn close_and_join(&self) {
         {
             let mut q = self.shared.queue.lock().unwrap();
             q.closed = true;
         }
         self.shared.not_empty.notify_all();
         self.shared.not_full.notify_all();
-        for h in self.workers.drain(..) {
+        // joining under the lock makes concurrent drainers wait for the
+        // first one to finish, so everyone observes fully-final metrics
+        let mut workers = self.workers.lock().unwrap();
+        for h in workers.drain(..) {
             let _ = h.join();
         }
     }

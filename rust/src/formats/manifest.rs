@@ -116,6 +116,12 @@ impl Manifest {
         self.dir.join("models").join(format!("{name}.pqsw"))
     }
 
+    /// Every model name in the manifest (sorted; `BTreeMap` order). Used
+    /// by error messages and the multi-model registry.
+    pub fn model_names(&self) -> Vec<&str> {
+        self.models.keys().map(|k| k.as_str()).collect()
+    }
+
     pub fn dataset_path(&self, file: &str) -> PathBuf {
         self.dir.join("datasets").join(file)
     }

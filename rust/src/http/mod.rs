@@ -1,40 +1,51 @@
 //! Hand-rolled HTTP/1.1 serving front-end (no hyper/tonic/tokio offline).
 //!
-//! This is the network boundary in front of the persistent serving runtime
-//! [`crate::coordinator::Server`]: a [`server::HttpServer`] accepts loopback
-//! or LAN TCP connections, parses requests incrementally and zero-copy
-//! ([`parser`]), decodes classification payloads into `Server::submit`
-//! calls with per-request deadlines, and streams back JSON built with
-//! [`crate::util::json`]. Connection handling rides the bounded
-//! [`crate::util::pool::WorkerPool`]; saturated pools shed with `503`
-//! instead of queueing without bound.
+//! This is the network boundary in front of the multi-model serving
+//! [`crate::coordinator::Router`]: a [`server::HttpServer`] accepts
+//! loopback or LAN TCP connections, parses requests incrementally and
+//! zero-copy ([`parser`]), decodes classification payloads into routed
+//! `Router::try_submit` calls with per-request deadlines, and streams back
+//! JSON built with [`crate::util::json`]. Connection handling rides the
+//! bounded [`crate::util::pool::WorkerPool`]; saturated pools shed with
+//! `503` instead of queueing without bound.
 //!
 //! # Wire protocol
 //!
 //! Only HTTP/1.1 and HTTP/1.0 are spoken. Persistent connections follow
 //! the usual defaults (1.1 keep-alive unless `Connection: close`; 1.0
 //! close unless `Connection: keep-alive`) and pipelined requests on one
-//! connection are answered in order. Request bodies require
-//! `Content-Length`; `Transfer-Encoding` (chunked) is rejected with `400`
-//! rather than ignored, closing a request-smuggling vector.
+//! connection are answered in order. Request bodies are framed by
+//! `Content-Length` or `Transfer-Encoding: chunked` (sizes in hex,
+//! extensions ignored, trailers validated then discarded; the *decoded*
+//! body honours the body limit). Any other transfer coding — or chunked
+//! combined with `Content-Length` — is rejected with `400`, closing the
+//! request-smuggling vectors.
 //!
 //! ## `POST /v1/classify`
 //!
 //! Request body (`Content-Type: application/json`):
 //!
 //! ```json
-//! {"image": [0.1, 0.5, ...], "id": 7, "deadline_ms": 50.0}
+//! {"image": [0.1, 0.5, ...], "model": "mlp1_w8a8", "id": 7,
+//!  "deadline_ms": 50.0}
 //! ```
 //!
-//! * `image` — required; flat row-major pixel array matching the model's
-//!   input dimension.
+//! * `image` — required; flat row-major pixel array matching the target
+//!   model's input dimension.
+//! * `model` — optional model name to route to. Absent = the default
+//!   model (so pre-multi-model clients keep working unchanged). An
+//!   unregistered name is answered `404` with an `"error"` body naming
+//!   the miss and listing the registered fleet; a registered model is
+//!   loaded lazily on its first request (and may be LRU-evicted under the
+//!   router's `max_loaded` cap — the next request reloads it). A
+//!   present-but-non-string `model` is `400`.
 //! * `id` — optional client request id, echoed back verbatim;
 //!   auto-assigned when absent. A present but non-integer or negative
 //!   `id` is rejected with `400` (never silently replaced).
 //! * `deadline_ms` — optional per-request deadline. If the request is
 //!   still queued when it expires, workers skip it *before* it touches an
 //!   engine and the response is `504` with an `"error"` body. Without it
-//!   the coordinator's `ServerConfig::default_deadline` applies.
+//!   the router's `ServerConfig::default_deadline` applies.
 //!
 //! `200` response body:
 //!
@@ -43,12 +54,30 @@
 //!  "latency_us": 990.0, "batch_size": 8}
 //! ```
 //!
+//! ## `GET /v1/models`
+//!
+//! `200` with the registered fleet: the default route plus one row per
+//! model — `name`, `default`, `loaded` (is a live server holding it right
+//! now), `input_shape` (`null` until knowable), and the model's lifetime
+//! `metrics` (which survive LRU eviction):
+//!
+//! ```json
+//! {"default": "a",
+//!  "models": [{"name": "a", "default": true, "loaded": true,
+//!              "input_shape": [1, 64, 1],
+//!              "metrics": {"requests": 12, "...": "..."}}]}
+//! ```
+//!
 //! ## `GET /v1/metrics`
 //!
-//! `200` with the live [`crate::coordinator::ServeMetrics`] snapshot:
-//! request/error/expired counters, batch stats, and
-//! mean/p50/p95/p99/max summaries for the end-to-end latency, queue-wait
-//! and compute recorders.
+//! `200` with the full metrics tree: fleet-wide aggregate counters and
+//! latency/queue/compute summaries at the top level (single-model clients
+//! keep working), a `router` section (`routed`, `unknown_model`, `loads`,
+//! `evictions`, `load_latency`), per-model [`crate::coordinator::ServeMetrics`]
+//! sections under `models` keyed by name, the front-end's own `http`
+//! counters (`accepted`/`shed`/`read_timeouts` connections), and the
+//! shared compute `pool` utilization (`null` when engines run
+//! single-threaded).
 //!
 //! ## `GET /healthz`
 //!
@@ -59,13 +88,13 @@
 //! | code | meaning |
 //! |------|---------|
 //! | 200  | classified / snapshot served |
-//! | 400  | malformed HTTP (bad request line, header, `Content-Length`, chunked), invalid JSON, missing/wrong-size `image` |
-//! | 404  | unknown path |
+//! | 400  | malformed HTTP (bad request line, header, `Content-Length`, chunk framing, unsupported transfer coding), invalid JSON, missing/wrong-size `image`, non-string `model` |
+//! | 404  | unknown path, or `model` names an unregistered model (body lists the registered fleet) |
 //! | 405  | wrong method on a known path (`Allow` header lists the right one) |
-//! | 408  | a partial request stalled past the keep-alive timeout |
-//! | 413  | head or declared body over the configured limits |
-//! | 500  | engine failure on the batch the request rode in |
-//! | 503  | request queue full, connection backlog full, or shutting down |
+//! | 408  | a partial request stalled past the keep-alive timeout (counted in `http.read_timeouts`) |
+//! | 413  | head, declared body, or decoded chunked body over the configured limits |
+//! | 500  | engine failure on the batch the request rode in, or a registered model's source failed to load |
+//! | 503  | target model's queue full, connection backlog full, or shutting down |
 //! | 504  | per-request deadline expired in queue, or the response-wait backstop fired |
 //!
 //! All error bodies are `{"error": "<message>"}`. Protocol-level errors
@@ -76,4 +105,4 @@ pub mod parser;
 pub mod server;
 
 pub use parser::{parse_request, Limits, ParseError, Request, Version};
-pub use server::{HttpConfig, HttpServer};
+pub use server::{FrontendReport, HttpConfig, HttpMetrics, HttpServer};

@@ -10,11 +10,22 @@
 //! and the exhaustive prefix test below both pin this down).
 //!
 //! Strictness follows RFC 9112 where it prevents request smuggling:
-//! whitespace before the header colon, obsolete line folding,
-//! `Transfer-Encoding` (chunked is not implemented), conflicting or
-//! non-numeric `Content-Length` values are all rejected with a 400-class
-//! error. Line endings are lenient: both CRLF and bare LF terminate lines.
+//! whitespace before the header colon, obsolete line folding, conflicting
+//! or non-numeric `Content-Length` values, and any `Transfer-Encoding`
+//! other than exactly `chunked` are all rejected with a 400-class error.
+//! Line endings are lenient: both CRLF and bare LF terminate lines.
 //! Head/body size limits map to 413.
+//!
+//! `Transfer-Encoding: chunked` bodies are decoded in place: chunk sizes
+//! (hex, optional `;extension` ignored), per-chunk CRLF framing, and a
+//! trailer section validated with the same header-field rules as the head
+//! then discarded. The *decoded* body honours `Limits::max_body`; a
+//! request carrying both `Transfer-Encoding` and `Content-Length` is
+//! rejected (the classic smuggling vector). A chunked body is the one
+//! case where [`Request::body`] is owned rather than borrowed (the chunk
+//! data is not contiguous in the connection buffer) — hence the `Cow`.
+
+use std::borrow::Cow;
 
 /// Limits enforced while parsing. Exceeding a size limit maps to
 /// `413 Content Too Large`.
@@ -74,7 +85,8 @@ pub enum Version {
 }
 
 /// One parsed request. Every field borrows the connection buffer
-/// (zero-copy); drop the request before draining consumed bytes.
+/// (zero-copy) except a chunked body, which is decoded into an owned
+/// buffer; drop the request before draining consumed bytes.
 #[derive(Debug)]
 pub struct Request<'a> {
     pub method: &'a str,
@@ -83,7 +95,9 @@ pub struct Request<'a> {
     /// header fields in wire order, names *not* normalized — use
     /// [`Request::header`] for case-insensitive lookup
     pub headers: Vec<(&'a str, &'a str)>,
-    pub body: &'a [u8],
+    /// `Borrowed` for `Content-Length` framing (zero-copy), `Owned` for a
+    /// decoded chunked body
+    pub body: std::borrow::Cow<'a, [u8]>,
 }
 
 impl<'a> Request<'a> {
@@ -231,10 +245,18 @@ pub fn parse_request<'a>(
     }
 
     // ---- body framing ----------------------------------------------------
-    // chunked (or any transfer coding) is not implemented; ignoring the
-    // header instead of rejecting it would be a request-smuggling vector
-    if headers.iter().any(|(k, _)| k.eq_ignore_ascii_case("transfer-encoding")) {
-        return Err(ParseError::Bad("transfer-encoding not supported"));
+    // the only transfer coding implemented is exactly `chunked`; anything
+    // else (gzip, chained codings) is rejected — ignoring an unknown
+    // coding instead of rejecting it would be a request-smuggling vector
+    let mut chunked = false;
+    for (k, v) in &headers {
+        if !k.eq_ignore_ascii_case("transfer-encoding") {
+            continue;
+        }
+        if chunked || !v.eq_ignore_ascii_case("chunked") {
+            return Err(ParseError::Bad("unsupported transfer-encoding"));
+        }
+        chunked = true;
     }
     let mut content_length: Option<usize> = None;
     for (k, v) in &headers {
@@ -253,6 +275,19 @@ pub fn parse_request<'a>(
             _ => content_length = Some(n),
         }
     }
+    if chunked {
+        // both framings at once is the classic smuggling vector
+        if content_length.is_some() {
+            return Err(ParseError::Bad("transfer-encoding with content-length"));
+        }
+        return match parse_chunked_body(buf, head_end, limits)? {
+            Some((body, total)) => Ok(Some((
+                Request { method, target, version, headers, body: Cow::Owned(body) },
+                total,
+            ))),
+            None => Ok(None),
+        };
+    }
     let content_length = content_length.unwrap_or(0);
     if content_length > limits.max_body {
         return Err(ParseError::TooLarge("declared body exceeds limit"));
@@ -261,8 +296,170 @@ pub fn parse_request<'a>(
     if buf.len() < total {
         return Ok(None);
     }
-    let body = &buf[head_end..total];
+    let body = Cow::Borrowed(&buf[head_end..total]);
     Ok(Some((Request { method, target, version, headers, body }, total)))
+}
+
+/// Longest chunk-size line tolerated while waiting for its terminator
+/// (16 hex digits + generous extension room); prevents an attacker from
+/// growing the connection buffer without ever sending a newline.
+const MAX_CHUNK_SIZE_LINE: usize = 256;
+
+/// The end of the line starting at `i`: `(content_end, next)` where
+/// `content` excludes the `\r?\n` terminator and `next` indexes past it.
+fn find_line(buf: &[u8], i: usize) -> Option<(usize, usize)> {
+    let nl = buf[i..].iter().position(|&b| b == b'\n')? + i;
+    let content_end = if nl > i && buf[nl - 1] == b'\r' { nl - 1 } else { nl };
+    Some((content_end, nl + 1))
+}
+
+/// Decode a `Transfer-Encoding: chunked` body starting at `head_end`.
+///
+/// Incremental like the head parse: `Ok(None)` until the full chunk
+/// stream (terminal chunk + trailer section) is buffered, `Err` the
+/// moment the framing can never become valid. Returns the decoded body
+/// and the total consumed length (head included). Trailer fields are
+/// validated with the same syntax rules as headers, counted against
+/// `max_headers`, then discarded.
+///
+/// Two passes so incomplete bodies cost no allocation: a framing *scan*
+/// runs on every call (and is what returns `Ok(None)`/`Err`), and only
+/// once the stream is complete does a second walk copy the chunk data
+/// into an exactly-sized buffer. A trickled upload therefore re-scans
+/// bytes but never re-copies them, and the connection's keep-alive hard
+/// cap bounds how long an attacker can drag the re-scans out.
+fn parse_chunked_body(
+    buf: &[u8],
+    head_end: usize,
+    limits: &Limits,
+) -> Result<Option<(Vec<u8>, usize)>, ParseError> {
+    let (total, decoded_len) = match walk_chunks(buf, head_end, limits, None)? {
+        Some(v) => v,
+        None => return Ok(None),
+    };
+    let mut body = Vec::with_capacity(decoded_len);
+    let done = walk_chunks(buf, head_end, limits, Some(&mut body))?;
+    debug_assert_eq!(done, Some((total, decoded_len)));
+    Ok(Some((body, total)))
+}
+
+/// One walk over a chunked stream: validates framing and, when `body` is
+/// given, copies the chunk data into it. Returns `Ok(None)` while the
+/// stream is incomplete, else `(consumed_total, decoded_len)`.
+fn walk_chunks(
+    buf: &[u8],
+    head_end: usize,
+    limits: &Limits,
+    mut body: Option<&mut Vec<u8>>,
+) -> Result<Option<(usize, usize)>, ParseError> {
+    // Raw-stream budget: the decoded cap alone would let an attacker
+    // buffer ~256x max_body of pure framing (1-byte chunks, each padded
+    // with a fat extension) without ever finishing the request. 8x
+    // decoded leaves room for the worst *legitimate* framing (1-byte
+    // chunks cost 6x) while bounding the connection buffer.
+    let raw_budget = limits.max_body.saturating_mul(8).max(1024);
+    let mut i = head_end;
+    let mut decoded = 0usize;
+    loop {
+        if i - head_end > raw_budget {
+            return Err(ParseError::TooLarge("chunked framing exceeds limit"));
+        }
+        // ---- chunk-size line: HEX[;extension] ----------------------------
+        let (line_end, next) = match find_line(buf, i) {
+            Some(p) => p,
+            None => {
+                if buf.len() - i > MAX_CHUNK_SIZE_LINE {
+                    return Err(ParseError::Bad("chunk size line too long"));
+                }
+                return Ok(None);
+            }
+        };
+        if line_end - i > MAX_CHUNK_SIZE_LINE {
+            return Err(ParseError::Bad("chunk size line too long"));
+        }
+        let line = &buf[i..line_end];
+        let (size_hex, ext) = match line.iter().position(|&b| b == b';') {
+            Some(p) => (&line[..p], &line[p + 1..]),
+            None => (line, &line[..0]),
+        };
+        if size_hex.is_empty()
+            || size_hex.len() > 16
+            || !size_hex.iter().all(u8::is_ascii_hexdigit)
+        {
+            return Err(ParseError::Bad("malformed chunk size"));
+        }
+        if ext.iter().any(|&b| (b < 0x20 && b != b'\t') || b == 0x7f) {
+            return Err(ParseError::Bad("malformed chunk extension"));
+        }
+        // 16 hex digits always fit u64; the size itself is still checked
+        // against max_body before any data is accepted
+        let size = u64::from_str_radix(std::str::from_utf8(size_hex).unwrap(), 16).unwrap();
+        if size as u128 + decoded as u128 > limits.max_body as u128 {
+            return Err(ParseError::TooLarge("decoded chunked body exceeds limit"));
+        }
+        i = next;
+        if size == 0 {
+            break;
+        }
+        // ---- chunk data + its CRLF terminator ----------------------------
+        let size = size as usize;
+        if buf.len() < i + size + 1 {
+            return Ok(None); // data (or its terminator) not buffered yet
+        }
+        if let Some(out) = body.as_mut() {
+            out.extend_from_slice(&buf[i..i + size]);
+        }
+        decoded += size;
+        i += size;
+        match buf[i] {
+            b'\n' => i += 1,
+            b'\r' => match buf.get(i + 1) {
+                Some(&b'\n') => i += 2,
+                Some(_) => return Err(ParseError::Bad("malformed chunk framing")),
+                None => return Ok(None),
+            },
+            _ => return Err(ParseError::Bad("malformed chunk framing")),
+        }
+    }
+    // ---- trailer section: header-syntax lines up to a blank line ---------
+    let trailer_start = i;
+    let mut fields = 0usize;
+    loop {
+        let (line_end, next) = match find_line(buf, i) {
+            Some(p) => p,
+            None => {
+                if buf.len() - trailer_start > limits.max_head {
+                    return Err(ParseError::TooLarge("trailer section exceeds limit"));
+                }
+                return Ok(None);
+            }
+        };
+        if next - trailer_start > limits.max_head {
+            return Err(ParseError::TooLarge("trailer section exceeds limit"));
+        }
+        let line = &buf[i..line_end];
+        i = next;
+        if line.is_empty() {
+            return Ok(Some((i, decoded)));
+        }
+        fields += 1;
+        if fields > limits.max_headers {
+            return Err(ParseError::TooLarge("too many header fields"));
+        }
+        let line = std::str::from_utf8(line)
+            .map_err(|_| ParseError::Bad("trailer is not valid utf-8"))?;
+        if line.starts_with(' ') || line.starts_with('\t') {
+            return Err(ParseError::Bad("obsolete header line folding"));
+        }
+        let (name, value) =
+            line.split_once(':').ok_or(ParseError::Bad("trailer line without ':'"))?;
+        if name.is_empty() || !name.bytes().all(is_tchar) {
+            return Err(ParseError::Bad("invalid trailer name"));
+        }
+        if value.bytes().any(|b| (b < 0x20 && b != b'\t') || b == 0x7f) {
+            return Err(ParseError::Bad("invalid trailer value"));
+        }
+    }
 }
 
 #[cfg(test)]
@@ -298,7 +495,7 @@ mod tests {
         let raw = b"POST /v1/classify HTTP/1.1\r\nContent-Length: 5\r\n\r\nhelloGET / HTTP/1.1\r\n\r\n";
         let (req, consumed) = full(raw);
         assert_eq!(req.method, "POST");
-        assert_eq!(req.body, b"hello");
+        assert_eq!(&req.body[..], b"hello");
         // the pipelined second request is untouched past `consumed`
         assert!(raw[consumed..].starts_with(b"GET / "));
         let (req2, consumed2) = full(&raw[consumed..]);
@@ -310,7 +507,7 @@ mod tests {
     fn bare_lf_line_endings_accepted() {
         let raw = b"POST /x HTTP/1.1\nContent-Length: 2\n\nok";
         let (req, consumed) = full(raw);
-        assert_eq!(req.body, b"ok");
+        assert_eq!(&req.body[..], b"ok");
         assert_eq!(consumed, raw.len());
     }
 
@@ -330,7 +527,7 @@ mod tests {
         }
         let (req, consumed) = full(raw);
         assert_eq!(consumed, raw.len());
-        assert_eq!(req.body, b"{\"image\":1}");
+        assert_eq!(&req.body[..], b"{\"image\":1}");
     }
 
     #[test]
@@ -361,7 +558,13 @@ mod tests {
         bad(b"POST / HTTP/1.1\r\nContent-Length: abc\r\n\r\n");
         bad(b"POST / HTTP/1.1\r\nContent-Length: -1\r\n\r\n");
         bad(b"POST / HTTP/1.1\r\nContent-Length: 1\r\nContent-Length: 2\r\n\r\n");
-        bad(b"POST / HTTP/1.1\r\nTransfer-Encoding: chunked\r\n\r\n");
+        // only *exactly* `chunked` is an implemented transfer coding
+        bad(b"POST / HTTP/1.1\r\nTransfer-Encoding: gzip\r\n\r\n");
+        bad(b"POST / HTTP/1.1\r\nTransfer-Encoding: chunked, gzip\r\n\r\n");
+        // chunked alongside content-length is the classic smuggling vector
+        bad(b"POST / HTTP/1.1\r\nTransfer-Encoding: chunked\r\nContent-Length: 3\r\n\r\n");
+        // duplicate TE headers are rejected even when both say chunked
+        bad(b"POST / HTTP/1.1\r\nTransfer-Encoding: chunked\r\nTransfer-Encoding: chunked\r\n\r\n");
         bad(b"\r\nGET / HTTP/1.1\r\n\r\n"); // leading blank line
     }
 
@@ -369,7 +572,7 @@ mod tests {
     fn duplicate_equal_content_lengths_are_tolerated() {
         let raw = b"POST / HTTP/1.1\r\nContent-Length: 2\r\nContent-Length: 2\r\n\r\nhi";
         let (req, _) = full(raw);
-        assert_eq!(req.body, b"hi");
+        assert_eq!(&req.body[..], b"hi");
     }
 
     #[test]
@@ -396,5 +599,134 @@ mod tests {
     fn empty_buffer_is_incomplete() {
         assert!(matches!(parse(b""), Ok(None)));
         assert!(matches!(parse(b"GET"), Ok(None)));
+    }
+
+    // ---- chunked bodies ---------------------------------------------------
+
+    #[test]
+    fn chunked_body_decodes_and_preserves_pipelined_bytes() {
+        let raw =
+            b"POST /v1/classify HTTP/1.1\r\nTransfer-Encoding: chunked\r\n\r\n\
+              5\r\nhello\r\n6\r\n world\r\n0\r\n\r\nGET / HTTP/1.1\r\n\r\n";
+        let (req, consumed) = full(raw);
+        assert_eq!(req.method, "POST");
+        assert_eq!(&req.body[..], b"hello world");
+        assert!(matches!(req.body, std::borrow::Cow::Owned(_)));
+        // the pipelined second request is untouched past `consumed`
+        assert!(raw[consumed..].starts_with(b"GET / "));
+        let (req2, consumed2) = full(&raw[consumed..]);
+        assert_eq!(req2.method, "GET");
+        assert_eq!(consumed + consumed2, raw.len());
+    }
+
+    #[test]
+    fn chunked_empty_body_and_bare_lf_framing() {
+        let raw = b"POST /x HTTP/1.1\nTransfer-Encoding: chunked\n\n0\n\n";
+        let (req, consumed) = full(raw);
+        assert!(req.body.is_empty());
+        assert_eq!(consumed, raw.len());
+    }
+
+    #[test]
+    fn chunked_extensions_ignored_and_trailers_validated_then_discarded() {
+        let raw = b"POST /x HTTP/1.1\r\nTransfer-Encoding: chunked\r\n\r\n\
+                    4;name=value\r\nabcd\r\n0\r\nX-Sum: 7\r\nX-Trace: t\r\n\r\n";
+        let (req, consumed) = full(raw);
+        assert_eq!(&req.body[..], b"abcd");
+        assert_eq!(consumed, raw.len());
+        // trailers are framing, not headers: they never join the header map
+        assert_eq!(req.header("x-sum"), None);
+    }
+
+    #[test]
+    fn chunked_hex_sizes_parse_as_hex() {
+        // 0x10 = 16 data bytes
+        let raw = b"POST /x HTTP/1.1\r\nTransfer-Encoding: chunked\r\n\r\n\
+                    10\r\nABCDEFGHIJKLMNOP\r\n0\r\n\r\n";
+        let (req, _) = full(raw);
+        assert_eq!(&req.body[..], b"ABCDEFGHIJKLMNOP");
+    }
+
+    #[test]
+    fn every_prefix_of_a_valid_chunked_request_is_incomplete_not_an_error() {
+        let raw: &[u8] = b"POST /c HTTP/1.1\r\nHost: t\r\nTransfer-Encoding: chunked\r\n\r\n\
+                           3\r\nabc\r\n2;x=y\r\nde\r\n0\r\nX-T: v\r\n\r\n";
+        for cut in 0..raw.len() {
+            match parse(&raw[..cut]) {
+                Ok(None) => {}
+                other => panic!("prefix {cut} must be incomplete, got {other:?}"),
+            }
+        }
+        let (req, consumed) = full(raw);
+        assert_eq!(consumed, raw.len());
+        assert_eq!(&req.body[..], b"abcde");
+    }
+
+    #[test]
+    fn malformed_chunked_framing_rejected() {
+        let bad = |raw: &[u8]| match parse(raw) {
+            Err(ParseError::Bad(m)) => m,
+            other => panic!("expected Bad, got {other:?}"),
+        };
+        let req = |tail: &str| {
+            let mut v = b"POST /x HTTP/1.1\r\nTransfer-Encoding: chunked\r\n\r\n".to_vec();
+            v.extend_from_slice(tail.as_bytes());
+            v
+        };
+        bad(&req("zz\r\nab\r\n0\r\n\r\n")); // non-hex size
+        bad(&req("\r\nab\r\n0\r\n\r\n")); // empty size line
+        bad(&req("2\r\nabXX")); // data not followed by CRLF
+        bad(&req("2\r\nab\rX")); // CR followed by non-LF
+        bad(&req("0\r\n folded\r\n\r\n")); // trailer obs-fold
+        bad(&req("0\r\nNoColon\r\n\r\n")); // trailer without ':'
+        bad(&req("0\r\nBad Name: v\r\n\r\n")); // trailer name with space
+        // size line that can never terminate
+        let mut long = req("");
+        long.extend_from_slice(&vec![b'1'; 300]);
+        bad(&long);
+    }
+
+    #[test]
+    fn chunked_framing_amplification_is_bounded() {
+        // an attacker drip-feeding 1-byte chunks padded with fat
+        // extensions must hit the raw-framing budget (8x max_body) long
+        // before the connection buffer grows without bound — even though
+        // the *decoded* size stays tiny and the stream never completes
+        let limits = Limits { max_head: 1024, max_headers: 16, max_body: 16 };
+        let mut raw = b"POST /x HTTP/1.1\r\nTransfer-Encoding: chunked\r\n\r\n".to_vec();
+        let padded_chunk = format!("1;{}\r\nX\r\n", "a".repeat(200));
+        for _ in 0..8 {
+            raw.extend_from_slice(padded_chunk.as_bytes());
+        }
+        // 8 chunks x ~208 raw bytes for 8 decoded bytes: over the budget
+        assert!(matches!(
+            parse_request(&raw, &limits),
+            Err(ParseError::TooLarge("chunked framing exceeds limit"))
+        ));
+        // minimal framing for a full-size body stays comfortably legal
+        let mut ok = b"POST /x HTTP/1.1\r\nTransfer-Encoding: chunked\r\n\r\n".to_vec();
+        for _ in 0..16 {
+            ok.extend_from_slice(b"1\r\nX\r\n");
+        }
+        ok.extend_from_slice(b"0\r\n\r\n");
+        let (req, _) = parse_request(&ok, &limits).unwrap().unwrap();
+        assert_eq!(&req.body[..], b"XXXXXXXXXXXXXXXX");
+    }
+
+    #[test]
+    fn chunked_body_over_limit_is_too_large() {
+        let limits = Limits { max_head: 1024, max_headers: 16, max_body: 8 };
+        // declared chunk alone exceeds the cap: rejected before any data
+        let raw = b"POST /x HTTP/1.1\r\nTransfer-Encoding: chunked\r\n\r\n9\r\n";
+        assert!(matches!(parse_request(raw, &limits), Err(ParseError::TooLarge(_))));
+        // cumulative decoded size crosses the cap on a later chunk
+        let raw = b"POST /x HTTP/1.1\r\nTransfer-Encoding: chunked\r\n\r\n\
+                    6\r\nabcdef\r\n6\r\nghijkl\r\n0\r\n\r\n";
+        assert!(matches!(parse_request(raw, &limits), Err(ParseError::TooLarge(_))));
+        // within the cap parses fine
+        let raw = b"POST /x HTTP/1.1\r\nTransfer-Encoding: chunked\r\n\r\n\
+                    4\r\nabcd\r\n4\r\nefgh\r\n0\r\n\r\n";
+        let (req, _) = parse_request(raw, &limits).unwrap().unwrap();
+        assert_eq!(&req.body[..], b"abcdefgh");
     }
 }

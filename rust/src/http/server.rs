@@ -1,4 +1,4 @@
-//! HTTP/1.1 front-end over [`crate::coordinator::Server`].
+//! HTTP/1.1 front-end over the multi-model [`Router`].
 //!
 //! Plain `std::net` blocking I/O: a nonblocking `TcpListener` accept loop
 //! feeds accepted sockets into a bounded [`WorkerPool`] (the connection
@@ -7,7 +7,11 @@
 //! the pool and its backlog are saturated the accept loop sheds the
 //! connection with `503` instead of queueing without bound.
 //!
-//! See the module docs in `crate::http` for the wire protocol.
+//! Requests are routed by the optional `"model"` field of
+//! `POST /v1/classify`; `GET /v1/models` lists the registered fleet and
+//! `GET /v1/metrics` nests per-model serving metrics under router- and
+//! connection-level counters. See the module docs in `crate::http` for
+//! the wire protocol.
 
 use std::io::{Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
@@ -16,7 +20,10 @@ use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::Duration;
 
-use crate::coordinator::{LatencyRecorder, ServeError, ServeMetrics, Server, SubmitError};
+use crate::coordinator::{
+    ClassifyRequest, LatencyRecorder, ModelStatus, RouteError, Router, RouterMetrics, ServeError,
+    ServeMetrics, SubmitError,
+};
 use crate::util::json::{self, Json};
 use crate::util::pool::{self, WorkerPool};
 
@@ -59,16 +66,68 @@ impl Default for HttpConfig {
     }
 }
 
+/// Per-connection counters of the front-end itself (the coordinator's
+/// [`ServeMetrics`] only see requests that reached a model queue).
+/// Exported as the `http` section of `GET /v1/metrics`.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct HttpMetrics {
+    /// connections handed to the connection pool
+    pub accepted: u64,
+    /// connections shed with 503 because the pool + backlog were saturated
+    pub shed: u64,
+    /// requests answered 408 because a partial request stalled or overran
+    /// the keep-alive budget
+    pub read_timeouts: u64,
+}
+
+#[derive(Default)]
+struct HttpCounters {
+    accepted: AtomicU64,
+    shed: AtomicU64,
+    read_timeouts: AtomicU64,
+}
+
+impl HttpCounters {
+    fn snapshot(&self) -> HttpMetrics {
+        HttpMetrics {
+            accepted: self.accepted.load(Ordering::Relaxed),
+            shed: self.shed.load(Ordering::Relaxed),
+            read_timeouts: self.read_timeouts.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Everything [`HttpServer::shutdown`] has to say: the router's lifetime
+/// metrics (per-model sections included) plus the front-end's own
+/// connection counters.
+#[derive(Clone, Debug, Default)]
+pub struct FrontendReport {
+    pub router: RouterMetrics,
+    pub http: HttpMetrics,
+}
+
+impl FrontendReport {
+    pub fn print(&self) {
+        self.router.print();
+        println!(
+            "http: accepted={} shed={} read_timeouts={}",
+            self.http.accepted, self.http.shed, self.http.read_timeouts
+        );
+    }
+}
+
 struct Ctx {
-    srv: Server,
+    router: Router,
     cfg: HttpConfig,
     next_id: AtomicU64,
     stop: Arc<AtomicBool>,
+    http: HttpCounters,
 }
 
-/// The HTTP/1.1 serving front-end. Owns the coordinator [`Server`] it
-/// forwards classification requests into; [`HttpServer::shutdown`] drains
-/// the connection pool, then the coordinator, and returns final metrics.
+/// The HTTP/1.1 serving front-end. Owns the [`Router`] it forwards
+/// classification requests into; [`HttpServer::shutdown`] drains the
+/// connection pool, then every model server, and returns the final
+/// [`FrontendReport`].
 pub struct HttpServer {
     addr: SocketAddr,
     stop: Arc<AtomicBool>,
@@ -78,14 +137,19 @@ pub struct HttpServer {
 
 impl HttpServer {
     /// Bind `addr` (e.g. `"127.0.0.1:0"` for an ephemeral port) and serve
-    /// requests into `srv`.
-    pub fn start(srv: Server, addr: &str, cfg: HttpConfig) -> std::io::Result<HttpServer> {
+    /// requests into `router`.
+    pub fn start(router: Router, addr: &str, cfg: HttpConfig) -> std::io::Result<HttpServer> {
         let listener = TcpListener::bind(addr)?;
         listener.set_nonblocking(true)?;
         let local = listener.local_addr()?;
         let stop = Arc::new(AtomicBool::new(false));
-        let ctx =
-            Arc::new(Ctx { srv, cfg, next_id: AtomicU64::new(1), stop: Arc::clone(&stop) });
+        let ctx = Arc::new(Ctx {
+            router,
+            cfg,
+            next_id: AtomicU64::new(1),
+            stop: Arc::clone(&stop),
+            http: HttpCounters::default(),
+        });
 
         let hctx = Arc::clone(&ctx);
         let conn_pool = WorkerPool::new(
@@ -97,6 +161,7 @@ impl HttpServer {
         // the accept thread owns the pool and hands it back on exit so
         // shutdown can drain it after joining the loop
         let astop = Arc::clone(&stop);
+        let actx = Arc::clone(&ctx);
         let accept = std::thread::spawn(move || {
             let mut accept_err_reported = false;
             loop {
@@ -105,17 +170,15 @@ impl HttpServer {
                 }
                 match listener.accept() {
                     Ok((stream, _peer)) => {
-                        if let Err(mut shed) = conn_pool.try_dispatch(stream) {
-                            // connection pool + backlog saturated: best-effort
-                            // 503. Clear any inherited O_NONBLOCK and bound the
-                            // write so a dead peer cannot stall the accept loop.
-                            let _ = shed.set_nonblocking(false);
-                            let _ = shed.set_write_timeout(Some(Duration::from_millis(50)));
-                            let body =
-                                json::obj(vec![("error", json::s("connection backlog full"))])
-                                    .to_string();
-                            let _ = shed.write_all(&response_bytes(503, &[], &body, false));
-                            let _ = shed.shutdown(std::net::Shutdown::Write);
+                        // counted BEFORE dispatch: a handler can finish a
+                        // whole request round-trip before this thread runs
+                        // again, and that response must already see itself
+                        // in `accepted` (shedding takes the count back)
+                        actx.http.accepted.fetch_add(1, Ordering::Relaxed);
+                        if let Err(shed) = conn_pool.try_dispatch(stream) {
+                            actx.http.accepted.fetch_sub(1, Ordering::Relaxed);
+                            actx.http.shed.fetch_add(1, Ordering::Relaxed);
+                            shed_connection(shed);
                         }
                     }
                     Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
@@ -144,23 +207,37 @@ impl HttpServer {
         self.addr
     }
 
-    /// Snapshot of the coordinator's serving metrics.
-    pub fn metrics(&self) -> ServeMetrics {
+    /// Snapshot of the router's metrics (per-model sections included).
+    pub fn metrics(&self) -> RouterMetrics {
         match &self.ctx {
-            Some(ctx) => ctx.srv.metrics(),
-            None => ServeMetrics::default(),
+            Some(ctx) => ctx.router.metrics(),
+            None => RouterMetrics::default(),
         }
     }
 
-    /// Stop accepting connections, drain the connection pool, shut the
-    /// coordinator down (draining its queue), and return final metrics.
-    pub fn shutdown(mut self) -> ServeMetrics {
+    /// Snapshot of the front-end's own connection counters.
+    pub fn http_metrics(&self) -> HttpMetrics {
+        match &self.ctx {
+            Some(ctx) => ctx.http.snapshot(),
+            None => HttpMetrics::default(),
+        }
+    }
+
+    /// Stop accepting connections, drain the connection pool, shut every
+    /// model server down (draining their queues), and return the final
+    /// report.
+    pub fn shutdown(mut self) -> FrontendReport {
         self.stop_and_drain();
         match self.ctx.take().map(Arc::try_unwrap) {
-            Some(Ok(ctx)) => ctx.srv.shutdown(),
+            Some(Ok(ctx)) => {
+                let http = ctx.http.snapshot();
+                FrontendReport { router: ctx.router.shutdown(), http }
+            }
             // a handler leaked its context somehow: best-effort snapshot
-            Some(Err(ctx)) => ctx.srv.metrics(),
-            None => ServeMetrics::default(),
+            Some(Err(ctx)) => {
+                FrontendReport { router: ctx.router.metrics(), http: ctx.http.snapshot() }
+            }
+            None => FrontendReport::default(),
         }
     }
 
@@ -181,6 +258,17 @@ impl Drop for HttpServer {
 }
 
 // ---- connection handling --------------------------------------------------
+
+/// Best-effort 503 for a connection the saturated pool + backlog cannot
+/// take. Clears any inherited O_NONBLOCK and bounds the write so a dead
+/// peer cannot stall the accept loop.
+fn shed_connection(mut stream: TcpStream) {
+    let _ = stream.set_nonblocking(false);
+    let _ = stream.set_write_timeout(Some(Duration::from_millis(50)));
+    let body = json::obj(vec![("error", json::s("connection backlog full"))]).to_string();
+    let _ = stream.write_all(&response_bytes(503, &[], &body, false));
+    let _ = stream.shutdown(std::net::Shutdown::Write);
+}
 
 fn handle_connection(ctx: &Ctx, mut stream: TcpStream) {
     // accepted sockets can inherit the listener's nonblocking flag on some
@@ -233,6 +321,7 @@ fn handle_connection(ctx: &Ctx, mut stream: TcpStream) {
             partial_since = None;
         } else if let Some(t0) = partial_since {
             if t0.elapsed() >= ctx.cfg.keep_alive_timeout {
+                ctx.http.read_timeouts.fetch_add(1, Ordering::Relaxed);
                 let body = json::obj(vec![("error", json::s("request incomplete"))]).to_string();
                 let _ = stream.write_all(&response_bytes(408, &[], &body, false));
                 return;
@@ -259,6 +348,7 @@ fn handle_connection(ctx: &Ctx, mut stream: TcpStream) {
                 if idle >= ctx.cfg.keep_alive_timeout {
                     if !buf.is_empty() {
                         // a partial request stalled mid-flight
+                        ctx.http.read_timeouts.fetch_add(1, Ordering::Relaxed);
                         let body =
                             json::obj(vec![("error", json::s("request incomplete"))]).to_string();
                         let _ = stream.write_all(&response_bytes(408, &[], &body, false));
@@ -282,18 +372,24 @@ fn route(ctx: &Ctx, req: &Request<'_>) -> (Vec<u8>, bool) {
             (response_bytes(200, &[], &body, keep), keep)
         }
         ("GET", "/v1/metrics") => {
-            let body = metrics_json(&ctx.srv.metrics());
+            let body = metrics_json(&ctx.router.metrics(), &ctx.http.snapshot());
+            (response_bytes(200, &[], &body, keep), keep)
+        }
+        ("GET", "/v1/models") => {
+            let body = models_json(ctx.router.default_model(), &ctx.router.models());
             (response_bytes(200, &[], &body, keep), keep)
         }
         ("POST", "/v1/classify") => classify(ctx, req, keep),
-        (_, "/healthz") | (_, "/v1/metrics") => method_not_allowed("GET", keep),
+        (_, "/healthz") | (_, "/v1/metrics") | (_, "/v1/models") => {
+            method_not_allowed("GET", keep)
+        }
         (_, "/v1/classify") => method_not_allowed("POST", keep),
         _ => (error_response(404, "no such endpoint", keep), keep),
     }
 }
 
 fn classify(ctx: &Ctx, req: &Request<'_>, keep: bool) -> (Vec<u8>, bool) {
-    let payload = match Json::parse_bytes(req.body) {
+    let payload = match Json::parse_bytes(&req.body) {
         Ok(j) => j,
         Err(e) => return (error_response(400, &format!("invalid json body: {e}"), keep), keep),
     };
@@ -336,6 +432,15 @@ fn classify(ctx: &Ctx, req: &Request<'_>, keep: bool) -> (Vec<u8>, bool) {
             }
         },
     };
+    // route target: a present-but-non-string model is a 400 (a typo must
+    // not silently fall through to the default model); absent = default
+    let model: Option<String> = match payload.get("model") {
+        None => None,
+        Some(v) => match v.as_str() {
+            Some(s) => Some(s.to_string()),
+            None => return (error_response(400, "\"model\" must be a string", keep), keep),
+        },
+    };
     // clamp to [0, 1 day] and reject non-finite values so a hostile
     // payload can never panic Duration::from_secs_f64 (which would kill a
     // pool worker)
@@ -345,13 +450,17 @@ fn classify(ctx: &Ctx, req: &Request<'_>, keep: bool) -> (Vec<u8>, bool) {
         .filter(|ms| ms.is_finite())
         .map(|ms| Duration::from_secs_f64(ms.clamp(0.0, 86_400_000.0) / 1e3));
 
-    let pending = match ctx.srv.try_submit(id, image, deadline) {
+    let request = ClassifyRequest { id, model, image, deadline };
+    let pending = match ctx.router.try_submit(request) {
         Ok(p) => p,
-        Err(SubmitError::Full(_)) => {
-            return (error_response(503, "request queue is full; retry later", keep), keep)
-        }
-        Err(SubmitError::Closed(_)) => {
-            return (error_response(503, "server is shutting down", false), false)
+        Err(RouteError::UnknownModel(msg)) => return (error_response(404, &msg, keep), keep),
+        Err(RouteError::LoadFailed(msg)) => return (error_response(500, &msg, keep), keep),
+        Err(RouteError::Rejected(e)) => {
+            // a closing server also closes the connection; a full queue is
+            // transient, so the connection stays usable for a retry
+            let keep = keep && !matches!(e, SubmitError::Closed(_));
+            let msg = RouteError::Rejected(e).to_string();
+            return (error_response(503, &msg, keep), keep);
         }
     };
     let resp = match pending.wait_timeout(ctx.cfg.response_timeout) {
@@ -435,20 +544,65 @@ fn response_bytes(status: u16, extra: &[(&str, &str)], body: &str, keep: bool) -
     out.into_bytes()
 }
 
-fn metrics_json(m: &ServeMetrics) -> String {
-    fn recorder(r: &LatencyRecorder) -> Json {
-        json::obj(vec![
-            ("count", json::num(r.count() as f64)),
-            ("mean_us", json::num(r.mean_us())),
-            ("p50_us", json::num(r.p50_us())),
-            ("p95_us", json::num(r.p95_us())),
-            ("p99_us", json::num(r.p99_us())),
-            ("max_us", json::num(r.max_us())),
-        ])
+// ---- JSON serialization of the metrics surfaces ---------------------------
+
+fn recorder_json(r: &LatencyRecorder) -> Json {
+    json::obj(vec![
+        ("count", json::num(r.count() as f64)),
+        ("mean_us", json::num(r.mean_us())),
+        ("p50_us", json::num(r.p50_us())),
+        ("p95_us", json::num(r.p95_us())),
+        ("p99_us", json::num(r.p99_us())),
+        ("max_us", json::num(r.max_us())),
+    ])
+}
+
+fn serve_metrics_json(m: &ServeMetrics) -> Json {
+    json::obj(vec![
+        ("requests", json::num(m.requests as f64)),
+        ("errors", json::num(m.errors as f64)),
+        ("expired", json::num(m.expired as f64)),
+        ("batches", json::num(m.batches as f64)),
+        ("mean_batch", json::num(m.mean_batch)),
+        ("throughput_rps", json::num(m.throughput_rps)),
+        ("wall_s", json::num(m.wall_s)),
+        ("latency", recorder_json(&m.latency)),
+        ("queue", recorder_json(&m.queue)),
+        ("compute", recorder_json(&m.compute)),
+    ])
+}
+
+fn shape_json(shape: &Option<Vec<usize>>) -> Json {
+    match shape {
+        Some(s) => Json::Arr(s.iter().map(|&d| json::num(d as f64)).collect()),
+        None => Json::Null,
     }
+}
+
+/// The `GET /v1/metrics` document: aggregate counters at the top level
+/// (old single-model clients keep working), then `router` counters,
+/// per-model sections under `models`, the front-end's `http` counters,
+/// and the shared compute pool (`null` when engines run single-threaded).
+fn metrics_json(rm: &RouterMetrics, hm: &HttpMetrics) -> String {
+    let agg = rm.aggregate();
+    let models = Json::Obj(
+        rm.models
+            .iter()
+            .map(|m| {
+                let mut obj = match serve_metrics_json(&m.metrics) {
+                    Json::Obj(o) => o,
+                    _ => unreachable!("serve_metrics_json returns an object"),
+                };
+                obj.insert("loaded".into(), Json::Bool(m.loaded));
+                obj.insert("default".into(), Json::Bool(m.default));
+                obj.insert("input_shape".into(), shape_json(&m.input_shape));
+                (m.name.clone(), Json::Obj(obj))
+            })
+            .collect(),
+    );
     // pool utilization of the shared intra-forward compute pool; `null`
-    // when the server runs engines single-threaded
-    let pool = match &m.pool {
+    // when every engine runs single-threaded
+    let pool = match &rm.pool {
         Some(p) => json::obj(vec![
             ("threads", json::num(p.threads as f64)),
             ("busy", json::num(p.busy as f64)),
@@ -459,17 +613,54 @@ fn metrics_json(m: &ServeMetrics) -> String {
         None => Json::Null,
     };
     json::obj(vec![
-        ("requests", json::num(m.requests as f64)),
-        ("errors", json::num(m.errors as f64)),
-        ("expired", json::num(m.expired as f64)),
-        ("batches", json::num(m.batches as f64)),
-        ("mean_batch", json::num(m.mean_batch)),
-        ("throughput_rps", json::num(m.throughput_rps)),
-        ("wall_s", json::num(m.wall_s)),
-        ("latency", recorder(&m.latency)),
-        ("queue", recorder(&m.queue)),
-        ("compute", recorder(&m.compute)),
+        ("requests", json::num(agg.requests as f64)),
+        ("errors", json::num(agg.errors as f64)),
+        ("expired", json::num(agg.expired as f64)),
+        ("batches", json::num(agg.batches as f64)),
+        ("mean_batch", json::num(agg.mean_batch)),
+        ("throughput_rps", json::num(agg.throughput_rps)),
+        ("wall_s", json::num(agg.wall_s)),
+        ("latency", recorder_json(&agg.latency)),
+        ("queue", recorder_json(&agg.queue)),
+        ("compute", recorder_json(&agg.compute)),
+        (
+            "router",
+            json::obj(vec![
+                ("routed", json::num(rm.routed as f64)),
+                ("unknown_model", json::num(rm.unknown_model as f64)),
+                ("loads", json::num(rm.loads as f64)),
+                ("evictions", json::num(rm.evictions as f64)),
+                ("load_latency", recorder_json(&rm.load_latency)),
+            ]),
+        ),
+        ("models", models),
+        (
+            "http",
+            json::obj(vec![
+                ("accepted", json::num(hm.accepted as f64)),
+                ("shed", json::num(hm.shed as f64)),
+                ("read_timeouts", json::num(hm.read_timeouts as f64)),
+            ]),
+        ),
         ("pool", pool),
     ])
     .to_string()
+}
+
+/// The `GET /v1/models` document: the default route and one row per
+/// registered model (load state, input shape, per-model metrics).
+fn models_json(default: &str, models: &[ModelStatus]) -> String {
+    let rows: Vec<Json> = models
+        .iter()
+        .map(|m| {
+            json::obj(vec![
+                ("name", json::s(&m.name)),
+                ("default", Json::Bool(m.default)),
+                ("loaded", Json::Bool(m.loaded)),
+                ("input_shape", shape_json(&m.input_shape)),
+                ("metrics", serve_metrics_json(&m.metrics)),
+            ])
+        })
+        .collect();
+    json::obj(vec![("default", json::s(default)), ("models", Json::Arr(rows))]).to_string()
 }

@@ -9,15 +9,22 @@
 //!        per-layer transient/persistent overflow profile
 //!   runtime --hlo PATH [--n N]   run an AOT HLO artifact through PJRT
 //!   figures [--fig 2|3|4|5|6]    regenerate the paper figures
-//!   serve-http [--addr HOST:PORT] [--model NAME] [--threads N]
-//!        [--engine-threads T] [--max-batch B] [--queue-cap Q]
-//!        [--deadline-ms MS] [--for-secs S]
-//!        HTTP/1.1 front-end over the persistent serving runtime
-//!        (POST /v1/classify, GET /v1/metrics, GET /healthz — see the
-//!        `pqs::http` module docs for the wire protocol); serves a
-//!        synthetic model when artifacts are absent. `--engine-threads`
-//!        sizes the shared intra-forward compute pool (default: hw
-//!        threads, with workers defaulting to 2 so pool and workers
+//!   serve-http [--addr HOST:PORT] [--model NAME[=SPEC]]... [--max-loaded M]
+//!        [--threads N] [--engine-threads T] [--max-batch B]
+//!        [--queue-cap Q] [--deadline-ms MS] [--for-secs S]
+//!        multi-model HTTP/1.1 front-end over the serving router
+//!        (POST /v1/classify with an optional "model" field,
+//!        GET /v1/models, GET /v1/metrics, GET /healthz — see the
+//!        `pqs::http` module docs for the wire protocol).
+//!        `--model` repeats; the first is the default route. Each SPEC is
+//!        `linear:<dim>x<classes>`, `conv:<c>x<h>x<w>x<oc>x<classes>`, a
+//!        `.pqsw` path, or (bare name / no SPEC) a manifest entry loaded
+//!        lazily on first request. Without any `--model`: every manifest
+//!        model is registered (artifacts present), else two synthetic
+//!        models. `--max-loaded` caps simultaneously-loaded models (LRU
+//!        eviction; 0 = unlimited). `--engine-threads` sizes the ONE
+//!        compute pool shared by every loaded model's engines (default:
+//!        hw threads, with workers defaulting to 2 so pool and workers
 //!        never oversubscribe; `--engine-threads 1` restores the
 //!        worker-parallel topology with hw workers)
 //!   bench [--json PATH] [--quick] [--threads "1,2,8"]
@@ -32,7 +39,9 @@ use std::time::Duration;
 use anyhow::{anyhow, bail, Result};
 
 use pqs::accum::Policy;
-use pqs::coordinator::{EvalService, Server, ServerConfig};
+use pqs::coordinator::{
+    EvalService, ModelRegistry, ModelSource, Router, RouterConfig, ServerConfig, SyntheticSpec,
+};
 use pqs::data::Dataset;
 use pqs::figures;
 use pqs::formats::manifest::Manifest;
@@ -172,37 +181,79 @@ fn run() -> Result<()> {
         "serve-http" => {
             let addr = args.get_or("addr", "127.0.0.1:8090").to_string();
             let cfg = engine_cfg(&args)?;
-            // artifacts when present; otherwise a synthetic model keeps the
-            // front-end fully demonstrable offline
-            let model = match Manifest::load_default() {
-                Ok(man) => {
-                    let name = match args.get("model") {
-                        Some(n) => n.to_string(),
-                        None => man
-                            .experiments
-                            .get("fig2")
-                            .and_then(|v| v.first())
-                            .cloned()
-                            .ok_or_else(|| anyhow!("no model in manifest; pass --model"))?,
+            let manifest = Manifest::load_default().ok();
+            // build the model fleet: repeated --model name[=SPEC] flags, or
+            // a whole-manifest / synthetic default so the front-end is
+            // always demonstrable (artifacts or not)
+            let mut registry = ModelRegistry::new();
+            let specs = args.get_all("model");
+            if specs.is_empty() {
+                match &manifest {
+                    Some(man) => {
+                        // default route: the fig2 lead model when present
+                        for name in man.model_names() {
+                            let src = ModelSource::Manifest {
+                                manifest: man.clone(),
+                                name: name.to_string(),
+                            };
+                            registry.register(name, src);
+                        }
+                        let lead = man.experiments.get("fig2").and_then(|v| v.first());
+                        if let Some(first) = lead {
+                            if let Err(e) = registry.set_default(first) {
+                                // a manifest whose fig2 lead is not among its
+                                // models is suspicious — say which model will
+                                // serve default traffic instead of silently
+                                // picking one
+                                eprintln!(
+                                    "warning: fig2 lead model is not registered ({e:#}); \
+                                     default route is {:?}",
+                                    registry.default_name().unwrap_or("?")
+                                );
+                            }
+                        }
+                    }
+                    None => {
+                        eprintln!("(artifacts not available — serving synthetic models)");
+                        let dim = args.get_usize("dim", 784);
+                        let classes = args.get_usize("classes", 10);
+                        registry.register(
+                            "default",
+                            ModelSource::Synthetic(SyntheticSpec::Linear { dim, classes }),
+                        );
+                        registry.register(
+                            "cnn",
+                            ModelSource::Synthetic(SyntheticSpec::Conv {
+                                c: 3,
+                                h: 28,
+                                w: 28,
+                                oc: 8,
+                                classes,
+                            }),
+                        );
+                    }
+                }
+            } else {
+                for spec in specs {
+                    let (name, src) = match spec.split_once('=') {
+                        Some((name, s)) => (name, ModelSource::parse(s, manifest.as_ref())?),
+                        None => (spec, ModelSource::parse(spec, manifest.as_ref())?),
                     };
-                    models::load(&man, &name)?
+                    registry.register(name, src);
                 }
-                Err(_) => {
-                    eprintln!("(artifacts not available — serving the synthetic linear model)");
-                    models::synthetic_linear(
-                        args.get_usize("dim", 784),
-                        args.get_usize("classes", 10),
-                    )
-                }
-            };
+            }
+            if registry.is_empty() {
+                bail!("no models registered; pass --model");
+            }
             let deadline_ms = args.get_f64("deadline-ms", 0.0);
             // Default topology: a wide shared compute pool (batch-1 latency)
-            // fed by few workers — with the pool on, intra-forward
+            // fed by few workers per model — with the pool on, intra-forward
             // parallelism replaces worker-level parallelism even for
             // batches (image-parallel over the pool), so more workers
             // would only contend the dispatch and oversubscribe cores.
             // `--engine-threads 1` restores the worker-parallel topology
-            // (workers then default to the hw thread count).
+            // (workers then default to the hw thread count). The pool is
+            // ONE per process, shared by every loaded model.
             let engine_threads = args.get_usize("engine-threads", pool::default_threads());
             let scfg = ServerConfig {
                 threads: args.get_usize(
@@ -219,12 +270,32 @@ fn run() -> Result<()> {
                     None
                 },
             };
-            println!("serving model: {}", models::describe(&model));
-            let srv = Server::start(&model, cfg, scfg);
-            let http = HttpServer::start(srv, &addr, HttpConfig::default())?;
+            let rcfg = RouterConfig {
+                max_loaded: args.get_usize("max-loaded", 8),
+                engine: cfg,
+                server: scfg,
+            };
+            let names: Vec<&str> = registry.names().collect();
+            let cap = if rcfg.max_loaded == 0 {
+                "unlimited".to_string()
+            } else {
+                rcfg.max_loaded.to_string()
+            };
+            println!(
+                "serving {} model(s): {} (default {}, max loaded {cap})",
+                names.len(),
+                names.join(", "),
+                registry.default_name().unwrap_or("?"),
+            );
+            let router = Router::new(registry, rcfg)?;
+            let http = HttpServer::start(router, &addr, HttpConfig::default())?;
             println!("listening on http://{}", http.local_addr());
-            println!("  POST /v1/classify  {{\"image\":[...], \"id\":N?, \"deadline_ms\":MS?}}");
-            println!("  GET  /v1/metrics   serving metrics snapshot");
+            println!(
+                "  POST /v1/classify  {{\"image\":[...], \"model\":NAME?, \"id\":N?, \
+                 \"deadline_ms\":MS?}}"
+            );
+            println!("  GET  /v1/models    registered models, load state, per-model metrics");
+            println!("  GET  /v1/metrics   serving metrics snapshot (per-model sections)");
             println!("  GET  /healthz      liveness");
             let secs = args.get_f64("for-secs", 0.0);
             if secs > 0.0 {

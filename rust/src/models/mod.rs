@@ -5,13 +5,30 @@
 //! generic graphs — the engine interprets whatever graph the artifact
 //! carries, so this module is lookup + summary convenience.
 
-use anyhow::{Context, Result};
+use anyhow::{anyhow, Context, Result};
 
 use crate::formats::manifest::Manifest;
 use crate::formats::pqsw::{GraphNode, Op, PqswModel, QLayerMeta};
 
 /// Load a model by manifest name.
+///
+/// An unknown name fails *before* touching the filesystem, with an error
+/// that names the manifest directory and lists the available entries —
+/// the multi-model router serves this message verbatim as its 404 body,
+/// so a client typo surfaces the fix, not just "not found".
 pub fn load(manifest: &Manifest, name: &str) -> Result<PqswModel> {
+    if !manifest.models.contains_key(name) {
+        let avail = manifest.model_names();
+        let listing = if avail.is_empty() {
+            "none".to_string()
+        } else {
+            avail.join(", ")
+        };
+        return Err(anyhow!(
+            "model {name:?} not found in manifest {} (available: {listing})",
+            manifest.dir.display(),
+        ));
+    }
     PqswModel::load(manifest.model_path(name)).with_context(|| format!("loading model {name}"))
 }
 
@@ -209,6 +226,23 @@ mod tests {
         let out = eng.forward(&vec![0.5; 2 * 64], 2).unwrap();
         assert_eq!(out.classes, 10);
         assert_eq!(out.logits.len(), 20);
+    }
+
+    #[test]
+    fn load_unknown_model_names_manifest_dir_and_entries() {
+        let dir = std::env::temp_dir().join("pqs_test_models_load_err");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{"models":[{"name":"mlp1_w8a8","file":"mlp1_w8a8.pqsw","arch":"mlp1",
+                          "schedule":"pq"}]}"#,
+        )
+        .unwrap();
+        let man = Manifest::load_dir(&dir).unwrap();
+        let err = format!("{:#}", load(&man, "mlp1_w9a9").unwrap_err());
+        assert!(err.contains("mlp1_w9a9"), "names the miss: {err}");
+        assert!(err.contains("mlp1_w8a8"), "lists the available entries: {err}");
+        assert!(err.contains("pqs_test_models_load_err"), "names the manifest dir: {err}");
     }
 
     #[test]

@@ -1,30 +1,39 @@
 //! Tiny CLI argument parser (no clap offline).
 //!
-//! Supports `--key value`, `--key=value`, boolean `--flag`, and positional
-//! arguments. Used by the `pqs` binary and the examples.
+//! Supports `--key value`, `--key=value`, boolean `--flag`, *repeated*
+//! flags (`--model a --model b`, read back with [`Args::get_all`]), and
+//! positional arguments. Used by the `pqs` binary and the examples.
 
 use std::collections::BTreeMap;
 
 #[derive(Debug, Default, Clone)]
 pub struct Args {
     pub positional: Vec<String>,
+    /// last-wins view of the flags (the single-value accessors)
     pub flags: BTreeMap<String, String>,
+    /// every flag occurrence in command-line order, for repeatable flags
+    /// like `serve-http --model a --model b`
+    pub occurrences: Vec<(String, String)>,
 }
 
 impl Args {
     /// Parse from an explicit iterator (tests) — `std::env::args().skip(1)`.
     pub fn parse<I: IntoIterator<Item = String>>(it: I) -> Args {
+        fn set(out: &mut Args, k: String, v: String) {
+            out.flags.insert(k.clone(), v.clone());
+            out.occurrences.push((k, v));
+        }
         let mut out = Args::default();
         let mut it = it.into_iter().peekable();
         while let Some(a) = it.next() {
             if let Some(rest) = a.strip_prefix("--") {
                 if let Some((k, v)) = rest.split_once('=') {
-                    out.flags.insert(k.to_string(), v.to_string());
+                    set(&mut out, k.to_string(), v.to_string());
                 } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
                     let v = it.next().unwrap();
-                    out.flags.insert(rest.to_string(), v);
+                    set(&mut out, rest.to_string(), v);
                 } else {
-                    out.flags.insert(rest.to_string(), "true".to_string());
+                    set(&mut out, rest.to_string(), "true".to_string());
                 }
             } else {
                 out.positional.push(a);
@@ -60,6 +69,16 @@ impl Args {
     pub fn has(&self, key: &str) -> bool {
         self.flags.contains_key(key)
     }
+
+    /// Every value a repeatable flag was given, in command-line order
+    /// (`--model a --model b` → `["a", "b"]`). Empty when absent.
+    pub fn get_all(&self, key: &str) -> Vec<&str> {
+        self.occurrences
+            .iter()
+            .filter(|(k, _)| k == key)
+            .map(|(_, v)| v.as_str())
+            .collect()
+    }
 }
 
 #[cfg(test)]
@@ -94,5 +113,15 @@ mod tests {
     fn trailing_flag_is_boolean() {
         let a = parse(&["--last"]);
         assert_eq!(a.get("last"), Some("true"));
+    }
+
+    #[test]
+    fn repeated_flags_keep_every_occurrence_in_order() {
+        let a = parse(&["serve-http", "--model", "a", "--model=b=conv:2x8x8x4x10", "--model", "c"]);
+        // single-value accessors see the last occurrence
+        assert_eq!(a.get("model"), Some("c"));
+        // get_all sees them all, in command-line order, '=' payload intact
+        assert_eq!(a.get_all("model"), vec!["a", "b=conv:2x8x8x4x10", "c"]);
+        assert!(a.get_all("missing").is_empty());
     }
 }

@@ -1,11 +1,15 @@
 //! HTTP/1.1 protocol-conformance suite for the hand-rolled front-end —
-//! all on loopback TCP against a tiny synthetic model, fully offline.
+//! all on loopback TCP against tiny synthetic models, fully offline.
 //!
 //! Covers: a table-driven torture corpus of valid/malformed raw byte
 //! requests (exact status codes, listener survival), keep-alive and
-//! pipelined sequences, a chunking property test that splits request
-//! bytes across arbitrary write boundaries, and the deadline path
-//! (`deadline_ms: 0` → 504 + the `expired` metric).
+//! pipelined sequences, `Transfer-Encoding: chunked` request bodies
+//! (valid + malformed framing), a chunking property test that splits
+//! request bytes across arbitrary write boundaries, the deadline path
+//! (`deadline_ms: 0` → 504 + the `expired` metric), and the multi-model
+//! surface: `"model"`-routed classification, `GET /v1/models`, nested
+//! per-model `GET /v1/metrics` sections, unknown-model 404s, and the
+//! front-end's own `http` counters.
 
 mod common;
 
@@ -13,7 +17,9 @@ use std::io::{Read, Write};
 use std::net::TcpStream;
 use std::time::Duration;
 
-use pqs::coordinator::{Server, ServerConfig};
+use pqs::coordinator::{
+    ModelRegistry, ModelSource, Router, RouterConfig, ServerConfig, SyntheticSpec,
+};
 use pqs::http::{HttpConfig, HttpServer};
 use pqs::nn::engine::{Engine, EngineConfig};
 use pqs::util::json::Json;
@@ -23,24 +29,53 @@ use pqs::util::rng::Pcg32;
 const DIM: usize = 16;
 const CLASSES: usize = 4;
 
-fn start_http() -> HttpServer {
-    let model = common::tiny_linear_model(DIM, CLASSES);
-    let scfg = ServerConfig {
+/// Conv dims of the second registered model (input 2*6*6 = 72 != DIM, so
+/// a misrouted request cannot accidentally classify).
+const AUX_DIM: usize = 2 * 6 * 6;
+
+fn scfg() -> ServerConfig {
+    ServerConfig {
         threads: 2,
         max_batch: 8,
         queue_cap: 64,
         linger: Duration::from_micros(50),
         engine_threads: 1,
         default_deadline: None,
-    };
-    let srv = Server::start(&model, EngineConfig::default(), scfg);
-    let hcfg = HttpConfig {
+    }
+}
+
+fn hcfg() -> HttpConfig {
+    HttpConfig {
         conn_threads: 4,
         conn_backlog: 16,
         keep_alive_timeout: Duration::from_millis(500),
         ..HttpConfig::default()
-    };
-    HttpServer::start(srv, "127.0.0.1:0", hcfg).expect("bind loopback")
+    }
+}
+
+fn start_http() -> HttpServer {
+    let model = common::tiny_linear_model(DIM, CLASSES);
+    let router = Router::single("tiny", &model, EngineConfig::default(), scfg());
+    HttpServer::start(router, "127.0.0.1:0", hcfg()).expect("bind loopback")
+}
+
+fn aux_model() -> pqs::formats::pqsw::PqswModel {
+    pqs::models::synthetic_conv(2, 6, 6, 4, CLASSES)
+}
+
+/// Two registered models: "tiny" (default, in-memory) and "aux" (a
+/// synthetic-source CNN, lazily loaded on first request).
+fn start_http_multi() -> HttpServer {
+    let model = common::tiny_linear_model(DIM, CLASSES);
+    let mut registry = ModelRegistry::new();
+    registry.register("tiny", ModelSource::Memory(model));
+    registry.register(
+        "aux",
+        ModelSource::Synthetic(SyntheticSpec::Conv { c: 2, h: 6, w: 6, oc: 4, classes: CLASSES }),
+    );
+    let rcfg = RouterConfig { max_loaded: 0, engine: EngineConfig::default(), server: scfg() };
+    let router = Router::new(registry, rcfg).expect("registry is non-empty");
+    HttpServer::start(router, "127.0.0.1:0", hcfg()).expect("bind loopback")
 }
 
 // ---- tiny raw-TCP client --------------------------------------------------
@@ -147,12 +182,31 @@ fn classify_body(dim: usize, seed: u64, id: u64, deadline_ms: Option<f64>) -> St
     format!("{{\"id\":{id},\"image\":{}{deadline}}}", image_json(dim, seed))
 }
 
+fn classify_body_for(dim: usize, seed: u64, id: u64, model: &str) -> String {
+    format!("{{\"id\":{id},\"model\":\"{model}\",\"image\":{}}}", image_json(dim, seed))
+}
+
 fn post_classify(body: &str) -> Vec<u8> {
     format!(
         "POST /v1/classify HTTP/1.1\r\nHost: t\r\nContent-Type: application/json\r\nContent-Length: {}\r\n\r\n{body}",
         body.len()
     )
     .into_bytes()
+}
+
+/// The same classify POST framed as a chunked body split at `split`.
+fn post_classify_chunked(body: &str, split: usize) -> Vec<u8> {
+    let split = split.min(body.len());
+    let (a, b) = body.split_at(split);
+    let mut chunks = String::new();
+    for part in [a, b] {
+        if !part.is_empty() {
+            chunks.push_str(&format!("{:x}\r\n{part}\r\n", part.len()));
+        }
+    }
+    chunks.push_str("0\r\nX-Checksum: none\r\n\r\n");
+    format!("POST /v1/classify HTTP/1.1\r\nHost: t\r\nTransfer-Encoding: chunked\r\n\r\n{chunks}")
+        .into_bytes()
 }
 
 fn expected_class(seed: u64) -> usize {
@@ -220,10 +274,40 @@ fn conformance_corpus_exact_statuses() {
             400,
         ),
         (
-            "chunked rejected",
+            // valid chunked framing, but the decoded (empty) body is not JSON
+            "chunked empty body invalid json",
             b"POST /v1/classify HTTP/1.1\r\nTransfer-Encoding: chunked\r\n\r\n0\r\n\r\n"
                 .to_vec(),
             400,
+        ),
+        (
+            "unsupported transfer coding",
+            b"POST /v1/classify HTTP/1.1\r\nTransfer-Encoding: gzip\r\n\r\n".to_vec(),
+            400,
+        ),
+        (
+            "chunked with content-length",
+            b"POST /v1/classify HTTP/1.1\r\nTransfer-Encoding: chunked\r\nContent-Length: 3\r\n\r\n0\r\n\r\n"
+                .to_vec(),
+            400,
+        ),
+        (
+            "malformed chunk size",
+            b"POST /v1/classify HTTP/1.1\r\nTransfer-Encoding: chunked\r\n\r\nzz\r\nab\r\n0\r\n\r\n"
+                .to_vec(),
+            400,
+        ),
+        (
+            "chunk data without terminator",
+            b"POST /v1/classify HTTP/1.1\r\nTransfer-Encoding: chunked\r\n\r\n2\r\nabXX0\r\n\r\n"
+                .to_vec(),
+            400,
+        ),
+        (
+            "oversized decoded chunked body",
+            b"POST /v1/classify HTTP/1.1\r\nTransfer-Encoding: chunked\r\n\r\nffffffff\r\n"
+                .to_vec(),
+            413,
         ),
         (
             "oversized declared body",
@@ -357,7 +441,7 @@ fn expired_deadline_maps_to_504_and_counts() {
     assert_eq!(r.status, 504, "body: {}", r.body);
     assert!(r.body.contains("deadline"), "body: {}", r.body);
     // the expired counter is visible both in-process and over the wire
-    assert_eq!(http.metrics().expired, 1);
+    assert_eq!(http.metrics().aggregate().expired, 1);
     c.send(b"GET /v1/metrics HTTP/1.1\r\n\r\n");
     let r = c.read_response();
     assert_eq!(r.status, 200);
@@ -365,8 +449,205 @@ fn expired_deadline_maps_to_504_and_counts() {
     // the connection still serves fresh work after a 504
     c.send(&post_classify(&classify_body(DIM, 6, 6, None)));
     assert_eq!(c.read_response().status, 200);
-    let m = http.shutdown();
-    assert_eq!(m.expired, 1);
+    let report = http.shutdown();
+    assert_eq!(report.router.aggregate().expired, 1);
+}
+
+#[test]
+fn chunked_classify_end_to_end_matches_content_length_framing() {
+    // the same JSON body framed chunked (split at several points, with an
+    // extension-free terminal chunk and a trailer) must classify exactly
+    // like Content-Length framing, on a keep-alive connection
+    let http = start_http();
+    let mut c = Client::connect(&http);
+    let body = classify_body(DIM, 11, 70, None);
+    c.send(&post_classify(&body));
+    let want = c.read_response();
+    assert_eq!(want.status, 200, "reference: {}", want.body);
+    let want_class = want.json().get("class").and_then(Json::as_usize);
+    assert_eq!(want_class, Some(expected_class(11)));
+    for split in [0, 1, body.len() / 2, body.len()] {
+        c.send(&post_classify_chunked(&body, split));
+        let r = c.read_response();
+        assert_eq!(r.status, 200, "chunked split {split}: {}", r.body);
+        assert_eq!(
+            r.json().get("class").and_then(Json::as_usize),
+            want_class,
+            "chunked split {split} must classify identically"
+        );
+    }
+    // a malformed chunked request on a FRESH connection answers 400 and
+    // the listener survives
+    let mut bad = Client::connect(&http);
+    bad.send(
+        b"POST /v1/classify HTTP/1.1\r\nTransfer-Encoding: chunked\r\n\r\n3\r\nab\rX0\r\n\r\n",
+    );
+    assert_eq!(bad.read_response().status, 400);
+    c.send(&post_classify(&body));
+    assert_eq!(c.read_response().status, 200, "listener survives malformed chunking");
+    http.shutdown();
+}
+
+#[test]
+fn model_field_routes_and_unknown_model_is_404() {
+    let http = start_http_multi();
+    let mut c = Client::connect(&http);
+    // no model field: the default ("tiny") serves it
+    c.send(&post_classify(&classify_body(DIM, 3, 1, None)));
+    let r = c.read_response();
+    assert_eq!(r.status, 200, "default-model request: {}", r.body);
+    assert_eq!(r.json().get("class").and_then(Json::as_usize), Some(expected_class(3)));
+    // explicit default name routes identically
+    c.send(&post_classify(&classify_body_for(DIM, 3, 2, "tiny")));
+    let r = c.read_response();
+    assert_eq!(r.status, 200);
+    assert_eq!(r.json().get("class").and_then(Json::as_usize), Some(expected_class(3)));
+    // "aux" routes to the CNN (different input dim proves the routing: the
+    // same payload would be a 400 size mismatch on "tiny")
+    let aux = aux_model();
+    let img = common::synth_images(1, AUX_DIM, 9);
+    let mut eng = Engine::new(&aux, EngineConfig::default());
+    let want = eng.forward(&img, 1).expect("forward").argmax(0);
+    c.send(&post_classify(&classify_body_for(AUX_DIM, 9, 3, "aux")));
+    let r = c.read_response();
+    assert_eq!(r.status, 200, "aux-routed request: {}", r.body);
+    assert_eq!(r.json().get("class").and_then(Json::as_usize), Some(want));
+    // unknown model: 404, JSON error listing the registered fleet, and
+    // the keep-alive connection stays usable
+    c.send(&post_classify(&classify_body_for(DIM, 1, 4, "nope")));
+    let r = c.read_response();
+    assert_eq!(r.status, 404, "unknown model: {}", r.body);
+    let msg = r.json().get("error").and_then(Json::as_str).unwrap_or("").to_string();
+    assert!(msg.contains("nope"), "404 names the miss: {msg}");
+    assert!(msg.contains("tiny") && msg.contains("aux"), "404 lists the fleet: {msg}");
+    // a non-string model is a 400, not a silent fallthrough to the default
+    c.send(&post_classify(&format!("{{\"model\":7,\"image\":{}}}", image_json(DIM, 1))));
+    assert_eq!(c.read_response().status, 400);
+    c.send(&post_classify(&classify_body(DIM, 5, 5, None)));
+    assert_eq!(c.read_response().status, 200, "connection survives the 404/400s");
+    let report = http.shutdown();
+    assert_eq!(report.router.unknown_model, 1);
+    let tiny = report.router.model("tiny").expect("tiny is registered");
+    assert_eq!(tiny.metrics.requests, 3);
+    let aux = report.router.model("aux").expect("aux is registered");
+    assert_eq!(aux.metrics.requests, 1);
+}
+
+#[test]
+fn models_endpoint_reflects_lazy_load_state() {
+    let http = start_http_multi();
+    let mut c = Client::connect(&http);
+    let models_of = |c: &mut Client| -> Vec<(String, bool, bool)> {
+        c.send(b"GET /v1/models HTTP/1.1\r\n\r\n");
+        let r = c.read_response();
+        assert_eq!(r.status, 200);
+        let j = r.json();
+        assert_eq!(j.get("default").and_then(Json::as_str), Some("tiny"));
+        j.get("models")
+            .and_then(Json::as_arr)
+            .expect("models array")
+            .iter()
+            .map(|m| {
+                (
+                    m.get("name").and_then(Json::as_str).unwrap_or("").to_string(),
+                    m.get("loaded").and_then(Json::as_bool).unwrap_or(false),
+                    m.get("default").and_then(Json::as_bool).unwrap_or(false),
+                )
+            })
+            .collect()
+    };
+    // nothing loaded before the first request; both rows listed anyway
+    let rows = models_of(&mut c);
+    assert_eq!(rows.len(), 2);
+    assert!(rows.iter().all(|(_, loaded, _)| !loaded), "lazy: nothing loads at startup");
+    assert_eq!(rows.iter().filter(|(_, _, default)| *default).count(), 1);
+    // hit the default model only: tiny loads, aux stays cold
+    c.send(&post_classify(&classify_body(DIM, 2, 1, None)));
+    assert_eq!(c.read_response().status, 200);
+    let rows = models_of(&mut c);
+    let loaded: Vec<&str> =
+        rows.iter().filter(|(_, l, _)| *l).map(|(n, _, _)| n.as_str()).collect();
+    assert_eq!(loaded, vec!["tiny"], "only the requested model loads");
+    // per-model metrics ride the same payload
+    c.send(b"GET /v1/models HTTP/1.1\r\n\r\n");
+    let j = c.read_response().json();
+    let tiny = j
+        .get("models")
+        .and_then(Json::as_arr)
+        .and_then(|a| {
+            a.iter().find(|m| m.get("name").and_then(Json::as_str) == Some("tiny"))
+        })
+        .expect("tiny row")
+        .clone();
+    assert_eq!(
+        tiny.get("metrics").and_then(|m| m.get("requests")).and_then(Json::as_usize),
+        Some(1)
+    );
+    assert_eq!(
+        tiny.get("input_shape").and_then(Json::as_arr).map(|a| a.len()),
+        Some(3),
+        "loaded model reports its input shape"
+    );
+    http.shutdown();
+}
+
+#[test]
+fn metrics_endpoint_nests_router_models_and_http_sections() {
+    let http = start_http_multi();
+    let mut c = Client::connect(&http);
+    c.send(&post_classify(&classify_body(DIM, 1, 1, None)));
+    assert_eq!(c.read_response().status, 200);
+    c.send(&post_classify(&classify_body_for(AUX_DIM, 2, 2, "aux")));
+    assert_eq!(c.read_response().status, 200);
+    c.send(&post_classify(&classify_body_for(DIM, 1, 3, "ghost")));
+    assert_eq!(c.read_response().status, 404);
+    c.send(b"GET /v1/metrics HTTP/1.1\r\n\r\n");
+    let r = c.read_response();
+    assert_eq!(r.status, 200);
+    let j = r.json();
+    // aggregate counters stay at the top level (old single-model clients)
+    assert_eq!(j.get("requests").and_then(Json::as_usize), Some(2));
+    // router section
+    let router = j.get("router").expect("router section");
+    assert_eq!(router.get("routed").and_then(Json::as_usize), Some(2));
+    assert_eq!(router.get("unknown_model").and_then(Json::as_usize), Some(1));
+    assert_eq!(router.get("loads").and_then(Json::as_usize), Some(2));
+    assert_eq!(router.get("evictions").and_then(Json::as_usize), Some(0));
+    assert!(
+        router.get("load_latency").and_then(|l| l.get("count")).and_then(Json::as_usize)
+            == Some(2),
+        "both lazy loads timed"
+    );
+    // per-model sections keyed by name
+    let models = j.get("models").expect("models section");
+    for name in ["tiny", "aux"] {
+        let m = models.get(name).unwrap_or_else(|| panic!("missing section {name}"));
+        assert_eq!(m.get("requests").and_then(Json::as_usize), Some(1), "{name}");
+        assert_eq!(m.get("loaded").and_then(Json::as_bool), Some(true), "{name}");
+        assert!(m.get("latency").and_then(|l| l.get("count")).is_some(), "{name}");
+    }
+    let tiny_default = models.get("tiny").and_then(|m| m.get("default"));
+    assert_eq!(tiny_default.and_then(Json::as_bool), Some(true));
+    // http section: this one connection was accepted, nothing shed
+    let http_section = j.get("http").expect("http section");
+    assert_eq!(http_section.get("accepted").and_then(Json::as_usize), Some(1));
+    assert_eq!(http_section.get("shed").and_then(Json::as_usize), Some(0));
+    assert_eq!(http_section.get("read_timeouts").and_then(Json::as_usize), Some(0));
+    http.shutdown();
+}
+
+#[test]
+fn stalled_partial_request_answers_408_and_counts_read_timeout() {
+    let http = start_http();
+    let mut c = Client::connect(&http);
+    // half a request, then silence: the keep-alive budget (500ms in this
+    // suite) expires and the server answers 408
+    c.send(b"POST /v1/classify HTTP/1.1\r\nContent-Le");
+    let r = c.read_response();
+    assert_eq!(r.status, 408, "body: {}", r.body);
+    let report = http.shutdown();
+    assert_eq!(report.http.read_timeouts, 1);
+    assert_eq!(report.http.accepted, 1);
 }
 
 #[test]
@@ -386,8 +667,13 @@ fn concurrent_connections_all_served() {
             });
         }
     });
-    let m = http.shutdown();
-    assert_eq!(m.requests, 40);
-    assert_eq!(m.errors, 0);
-    assert_eq!(m.expired, 0);
+    let report = http.shutdown();
+    let total = report.router.aggregate();
+    assert_eq!(total.requests, 40);
+    assert_eq!(total.errors, 0);
+    assert_eq!(total.expired, 0);
+    // every connection was accepted, none shed, none timed out
+    assert_eq!(report.http.accepted, 4);
+    assert_eq!(report.http.shed, 0);
+    assert_eq!(report.http.read_timeouts, 0);
 }

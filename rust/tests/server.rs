@@ -1,8 +1,10 @@
-//! Serving-runtime tests that run WITHOUT artifacts: a tiny synthetic
-//! `PqswModel` exercises the persistent `Server` (backpressure, per-request
-//! errors, deadlines/cancellation, draining shutdown), the engine's
-//! parallel forward path, the exact `limit` semantics, and the sorted1
-//! counting/radix pairing contract.
+//! Serving-runtime tests that run WITHOUT artifacts: tiny synthetic
+//! `PqswModel`s exercise the persistent `Server` (backpressure, per-request
+//! errors, deadlines/cancellation, draining shutdown), the multi-model
+//! `Router` (lazy loads, LRU eviction with metrics continuity, unknown-name
+//! fleet listings, two models bit-identical over one shared compute pool),
+//! the engine's parallel forward path, the exact `limit` semantics, and the
+//! sorted1 counting/radix pairing contract.
 //!
 //! Every blocking receive goes through `wait()` below (a bounded
 //! `wait_timeout`), so a queue-logic regression fails the suite fast
@@ -14,8 +16,9 @@ use std::time::Duration;
 
 use pqs::accum::{self, Policy};
 use pqs::coordinator::{
-    serve_requests, EvalService, PendingResponse, Request, ServeError, ServeResponse, Server,
-    ServerConfig, SubmitError,
+    serve_requests, ClassifyRequest, EvalService, ModelRegistry, ModelSource, PendingResponse,
+    Request, RouteError, Router, RouterConfig, ServeError, ServeResponse, Server, ServerConfig,
+    SubmitError, SyntheticSpec,
 };
 use pqs::data::Dataset;
 use pqs::dot::DotEngine;
@@ -384,6 +387,227 @@ fn server_with_shared_engine_pool_matches_single_threaded_server() {
     let srv1 = Server::start(&model, cfg, scfg(1, 4, 16));
     assert!(wait(srv1.submit(0, common::synth_images(1, dim, 0), None).unwrap()).result.is_ok());
     assert!(srv1.shutdown().pool.is_none());
+}
+
+// ---- multi-model router ---------------------------------------------------
+
+fn req(id: u64, model: Option<&str>, image: Vec<f32>) -> ClassifyRequest {
+    ClassifyRequest { id, model: model.map(String::from), image, deadline: None }
+}
+
+fn three_model_registry() -> ModelRegistry {
+    let mut registry = ModelRegistry::new();
+    registry.register("m1", ModelSource::Memory(common::tiny_linear_model(DIM, CLASSES)));
+    registry.register(
+        "m2",
+        ModelSource::Synthetic(SyntheticSpec::Linear { dim: DIM * 2, classes: CLASSES }),
+    );
+    registry.register(
+        "m3",
+        ModelSource::Synthetic(SyntheticSpec::Conv { c: 2, h: 5, w: 5, oc: 4, classes: CLASSES }),
+    );
+    registry
+}
+
+#[test]
+fn router_loads_lazily_and_routes_to_the_default() {
+    let registry = three_model_registry();
+    let rcfg =
+        RouterConfig { max_loaded: 0, engine: EngineConfig::default(), server: scfg(1, 4, 16) };
+    let router = Router::new(registry, rcfg).unwrap();
+    assert_eq!(router.default_model(), "m1");
+    // registration loads nothing
+    let m = router.metrics();
+    assert_eq!(m.loads, 0);
+    assert!(m.models.iter().all(|s| !s.loaded), "lazy: no model loads at startup");
+    assert_eq!(m.models.len(), 3);
+    // in-memory and synthetic sources know their shapes without loading
+    assert_eq!(m.models[0].input_shape.as_deref(), Some(&[1, DIM, 1][..]));
+    assert_eq!(m.models[2].input_shape.as_deref(), Some(&[2, 5, 5][..]));
+    // the first request loads exactly the default model
+    let r = wait(router.submit(req(1, None, img(1))).expect("routes to default"));
+    let mut eng = Engine::new(&common::tiny_linear_model(DIM, CLASSES), EngineConfig::default());
+    let want = eng.forward(&img(1), 1).unwrap().argmax(0);
+    assert_eq!(r.result, Ok(want));
+    let m = router.metrics();
+    assert_eq!(m.loads, 1);
+    assert_eq!(m.routed, 1);
+    assert_eq!(m.load_latency.count(), 1);
+    let loaded: Vec<&str> =
+        m.models.iter().filter(|s| s.loaded).map(|s| s.name.as_str()).collect();
+    assert_eq!(loaded, vec!["m1"], "only the requested model loads");
+    let final_m = router.shutdown();
+    assert_eq!(final_m.model("m1").unwrap().metrics.requests, 1);
+    assert_eq!(final_m.model("m2").unwrap().metrics.requests, 0);
+}
+
+#[test]
+fn router_unknown_model_fails_fast_with_fleet_listing() {
+    let registry = three_model_registry();
+    let rcfg =
+        RouterConfig { max_loaded: 0, engine: EngineConfig::default(), server: scfg(1, 4, 16) };
+    let router = Router::new(registry, rcfg).unwrap();
+    match router.submit(req(1, Some("m9"), img(1))) {
+        Err(RouteError::UnknownModel(msg)) => {
+            assert!(msg.contains("m9"), "names the miss: {msg}");
+            for name in ["m1", "m2", "m3"] {
+                assert!(msg.contains(name), "lists {name}: {msg}");
+            }
+        }
+        Err(other) => panic!("expected UnknownModel, got {other:?}"),
+        Ok(_) => panic!("expected UnknownModel, got an accepted submission"),
+    }
+    let m = router.shutdown();
+    assert_eq!(m.unknown_model, 1);
+    assert_eq!(m.routed, 0);
+    assert_eq!(m.loads, 0, "an unknown name must not trigger a load");
+}
+
+#[test]
+fn router_lru_eviction_under_max_loaded_preserves_metrics() {
+    let registry = three_model_registry();
+    let rcfg =
+        RouterConfig { max_loaded: 2, engine: EngineConfig::default(), server: scfg(1, 4, 16) };
+    let router = Router::new(registry, rcfg).unwrap();
+    let dim2 = DIM * 2;
+    let img2 = common::synth_images(1, dim2, 2);
+    let img3 = common::synth_images(1, 2 * 5 * 5, 3);
+    // load m1 then m2 (cap 2: both stay)
+    assert!(wait(router.submit(req(1, Some("m1"), img(1))).unwrap()).result.is_ok());
+    assert!(wait(router.submit(req(2, Some("m2"), img2.clone())).unwrap()).result.is_ok());
+    let m = router.metrics();
+    assert_eq!(m.loads, 2);
+    assert_eq!(m.evictions, 0);
+    // touch m1 so m2 becomes the LRU, then load m3: m2 must be evicted
+    assert!(wait(router.submit(req(3, Some("m1"), img(3))).unwrap()).result.is_ok());
+    assert!(wait(router.submit(req(4, Some("m3"), img3)).unwrap()).result.is_ok());
+    let m = router.metrics();
+    assert_eq!(m.loads, 3);
+    assert_eq!(m.evictions, 1);
+    let loaded: Vec<&str> =
+        m.models.iter().filter(|s| s.loaded).map(|s| s.name.as_str()).collect();
+    assert_eq!(loaded, vec!["m1", "m3"], "the LRU model (m2) is evicted");
+    // m2's history survived eviction
+    assert_eq!(m.model("m2").unwrap().metrics.requests, 1);
+    // requesting m2 again reloads it and evicts m1 (LRU now)
+    assert!(wait(router.submit(req(5, Some("m2"), img2)).unwrap()).result.is_ok());
+    let m = router.metrics();
+    assert_eq!(m.loads, 4);
+    assert_eq!(m.evictions, 2);
+    let loaded: Vec<&str> =
+        m.models.iter().filter(|s| s.loaded).map(|s| s.name.as_str()).collect();
+    assert_eq!(loaded, vec!["m2", "m3"]);
+    // lifetime metrics: m2 across two incarnations
+    let final_m = router.shutdown();
+    assert_eq!(final_m.model("m1").unwrap().metrics.requests, 2);
+    assert_eq!(final_m.model("m2").unwrap().metrics.requests, 2);
+    assert_eq!(final_m.model("m3").unwrap().metrics.requests, 1);
+    assert_eq!(final_m.routed, 5);
+}
+
+#[test]
+fn router_two_models_one_pool_bit_identical_to_dedicated_servers() {
+    // the ISSUE acceptance contract: two models served concurrently from
+    // ONE shared ComputePool classify exactly like two dedicated
+    // single-model servers fed the same requests
+    let linear = common::tiny_linear_model(DIM, CLASSES);
+    let conv = pqs::models::synthetic_conv(2, 8, 8, 4, CLASSES);
+    let conv_dim: usize = conv.input_shape.iter().product();
+    let cfg = EngineConfig { policy: Policy::Sorted1, acc_bits: 16, ..Default::default() };
+    let mut sc = scfg(2, 4, 64);
+    sc.engine_threads = 4; // ONE pool of 4, shared by both models' engines
+    let n = 30u64;
+
+    // dedicated single-model reference servers
+    let ded_lin = Server::start(&linear, cfg, sc);
+    let ded_conv = Server::start(&conv, cfg, sc);
+    let mut want_lin = Vec::new();
+    let mut want_conv = Vec::new();
+    for i in 0..n {
+        let p = ded_lin.submit(i, img(i), None).unwrap();
+        want_lin.push(wait(p).result.expect("dedicated linear serves"));
+        let p = ded_conv.submit(i, common::synth_images(1, conv_dim, i), None).unwrap();
+        want_conv.push(wait(p).result.expect("dedicated conv serves"));
+    }
+    ded_lin.shutdown();
+    ded_conv.shutdown();
+
+    // the same requests through one router, interleaved from two threads
+    let mut registry = ModelRegistry::new();
+    registry.register("lin", ModelSource::Memory(linear));
+    registry.register("conv", ModelSource::Memory(conv));
+    let router =
+        Router::new(registry, RouterConfig { max_loaded: 0, engine: cfg, server: sc }).unwrap();
+    std::thread::scope(|scope| {
+        let router = &router;
+        let want_lin = &want_lin;
+        let want_conv = &want_conv;
+        scope.spawn(move || {
+            for i in 0..n {
+                let p = router.submit(req(i, Some("lin"), img(i))).expect("routes");
+                assert_eq!(wait(p).result, Ok(want_lin[i as usize]), "lin request {i}");
+            }
+        });
+        scope.spawn(move || {
+            for i in 0..n {
+                let image = common::synth_images(1, conv_dim, i);
+                let p = router.submit(req(i, Some("conv"), image)).expect("routes");
+                assert_eq!(wait(p).result, Ok(want_conv[i as usize]), "conv request {i}");
+            }
+        });
+    });
+    let m = router.shutdown();
+    assert_eq!(m.routed, 2 * n);
+    assert_eq!(m.model("lin").unwrap().metrics.requests, n as usize);
+    assert_eq!(m.model("conv").unwrap().metrics.requests, n as usize);
+    let pool = m.pool.expect("engine_threads > 1 must expose the shared pool");
+    assert_eq!(pool.threads, 4);
+    assert!(pool.jobs + pool.inline_jobs > 0, "conv forwards must dispatch pool jobs");
+}
+
+#[test]
+fn server_drain_via_shared_handle_is_final_and_idempotent() {
+    // the router's eviction path: close + drain a Server through an Arc
+    // (&self), no ownership needed; afterwards submits are refused and a
+    // second drain observes the same final counters
+    let model = common::tiny_linear_model(DIM, CLASSES);
+    let srv =
+        std::sync::Arc::new(Server::start(&model, EngineConfig::default(), scfg(2, 4, 32)));
+    let pending: Vec<_> =
+        (0..20u64).map(|i| srv.submit(i, img(i), None).expect("submit while open")).collect();
+    let m1 = srv.drain();
+    assert_eq!(m1.requests, 20, "drain answers every queued request first");
+    assert_eq!(m1.errors, 0);
+    for p in pending {
+        assert!(wait(p).result.is_ok());
+    }
+    assert!(
+        matches!(srv.try_submit(99, img(0), None), Err(SubmitError::Closed(_))),
+        "post-drain submissions are refused"
+    );
+    let m2 = srv.drain();
+    assert_eq!(m2.requests, 20, "a second drain is a no-op with final counters");
+}
+
+#[test]
+fn router_default_and_wrong_size_semantics() {
+    let registry = three_model_registry();
+    let rcfg =
+        RouterConfig { max_loaded: 0, engine: EngineConfig::default(), server: scfg(1, 4, 16) };
+    let router = Router::new(registry, rcfg).unwrap();
+    // wrong-sized image for the ROUTED model is a per-request BadRequest
+    // from that model's server (never a panic, never misrouted)
+    let r = wait(router.submit(req(1, Some("m2"), img(1))).unwrap());
+    match r.result {
+        Err(ServeError::BadRequest(msg)) => {
+            assert!(msg.contains(&(DIM * 2).to_string()), "names m2's dim: {msg}")
+        }
+        other => panic!("expected BadRequest, got {other:?}"),
+    }
+    // try_submit routes too
+    let r = wait(router.try_submit(req(2, None, img(2))).unwrap());
+    assert!(r.result.is_ok());
+    router.shutdown();
 }
 
 #[test]
