@@ -238,8 +238,8 @@ fn main() -> anyhow::Result<()> {
     let mut registry = ModelRegistry::new();
     registry.register("primary", ModelSource::Memory(model.clone()));
     registry.register("aux", ModelSource::Synthetic(aux_spec));
-    let router =
-        Router::new(registry, RouterConfig { max_loaded: 0, engine: cfg, server: scfg })?;
+    let rcfg = RouterConfig { max_loaded: 0, engine: cfg, server: scfg, preload: Vec::new() };
+    let router = Router::new(registry, rcfg)?;
     let http = HttpServer::start(router, "127.0.0.1:0", HttpConfig::default())?;
     println!("bound http://{}", http.local_addr());
     let mut client = MiniClient::connect(http.local_addr())?;

@@ -101,6 +101,24 @@ pub fn exact_dot(prods: &[i32]) -> i64 {
     prods.iter().map(|&v| v as i64).sum()
 }
 
+/// Smallest signed accumulator width that holds `v`: the minimal `p` with
+/// `-2^(p-1) <= v <= 2^(p-1)-1`, floored at 2. This is the per-dot
+/// "required width" the accumulator-bitwidth planner histograms
+/// (`crate::plan`).
+#[inline]
+pub fn bits_for_value(v: i64) -> u32 {
+    // two's complement: a non-negative v needs its magnitude bits + sign;
+    // a negative v needs the bits of !v (its offset-by-one magnitude) + sign
+    let mag = if v >= 0 { v as u64 } else { !(v as u64) };
+    (64 - mag.leading_zeros() + 1).max(2)
+}
+
+/// Smallest signed accumulator width whose range contains `[lo, hi]`.
+#[inline]
+pub fn bits_for_range(lo: i64, hi: i64) -> u32 {
+    bits_for_value(lo).max(bits_for_value(hi))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -170,6 +188,47 @@ mod tests {
                 let (lo, hi) = acc_range(*p);
                 if v < lo || v > hi {
                     return Err(format!("{v} outside [{lo},{hi}]"));
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn bits_for_value_boundaries() {
+        assert_eq!(bits_for_value(0), 2);
+        assert_eq!(bits_for_value(1), 2);
+        assert_eq!(bits_for_value(-1), 2);
+        assert_eq!(bits_for_value(-2), 2);
+        assert_eq!(bits_for_value(2), 3);
+        assert_eq!(bits_for_value(-3), 3);
+        assert_eq!(bits_for_value(127), 8);
+        assert_eq!(bits_for_value(128), 9);
+        assert_eq!(bits_for_value(-128), 8);
+        assert_eq!(bits_for_value(-129), 9);
+        assert_eq!(bits_for_value(i32::MAX as i64), 32);
+        assert_eq!(bits_for_value(i32::MIN as i64), 32);
+        assert_eq!(bits_for_range(-128, 127), 8);
+        assert_eq!(bits_for_range(-129, 0), 9);
+    }
+
+    #[test]
+    fn bits_for_value_matches_acc_range_prop() {
+        prop::check(
+            "bits-for-value",
+            500,
+            |r: &mut Pcg32| r.range_i64(-(1 << 40), 1 << 40),
+            |&v| {
+                let p = bits_for_value(v);
+                let (lo, hi) = acc_range(p);
+                if v < lo || v > hi {
+                    return Err(format!("{v} does not fit its own width {p}"));
+                }
+                if p > 2 {
+                    let (plo, phi) = acc_range(p - 1);
+                    if v >= plo && v <= phi {
+                        return Err(format!("{v} also fits {} bits, width {p} not minimal", p - 1));
+                    }
                 }
                 Ok(())
             },

@@ -23,7 +23,12 @@
 //!   model answered 404, then `GET /v1/metrics` fetched over the wire and
 //!   its per-model sections parsed back — the smoke proof that the
 //!   multi-model surface works end to end (`requests` per model, lazy
-//!   `loads`, `unknown_model`, `load_latency`).
+//!   `loads`, `unknown_model`, `load_latency`);
+//! * **plan** — the accumulator-bitwidth planner on both synthetic
+//!   models: analytic + calibrated planner runtimes and the planned
+//!   per-layer widths vs the 32-bit baseline. The section *fails* if any
+//!   calibrated width exceeds its analytic bound, so planner soundness is
+//!   smoke-gated in CI alongside the perf numbers.
 //!
 //! Everything runs on synthetic models so the report is reproducible on
 //! any checkout, artifacts or not. `quick: true` shrinks sample counts and
@@ -94,6 +99,7 @@ pub fn run(opts: &BenchOptions) -> Result<Json> {
         ("forward", forward_section(opts)?),
         ("serve", serve_section(opts)?),
         ("router", router_section(opts)?),
+        ("plan", plan_section(opts)?),
     ]))
 }
 
@@ -460,9 +466,9 @@ fn serve_section(opts: &BenchOptions) -> Result<Json> {
             ("client_p50_us", json::num(p50)),
             ("client_p95_us", json::num(p95)),
             ("throughput_rps", json::num(requests as f64 / wall_s)),
-            ("server_latency_p50_us", json::num(metrics.latency.p50_us())),
-            ("server_latency_p95_us", json::num(metrics.latency.p95_us())),
-            ("server_compute_mean_us", json::num(metrics.compute.mean_us())),
+            ("server_latency_p50_us", json::num(metrics.latency.p50_us)),
+            ("server_latency_p95_us", json::num(metrics.latency.p95_us)),
+            ("server_compute_mean_us", json::num(metrics.compute.mean_us)),
             (
                 "pool_jobs",
                 json::num(metrics.pool.as_ref().map(|p| p.jobs as f64).unwrap_or(0.0)),
@@ -509,7 +515,7 @@ fn router_section(opts: &BenchOptions) -> Result<Json> {
         engine_threads: 2,
         default_deadline: None,
     };
-    let rcfg = RouterConfig { max_loaded: 0, engine: cfg, server: scfg };
+    let rcfg = RouterConfig { max_loaded: 0, engine: cfg, server: scfg, preload: Vec::new() };
     let router = Router::new(registry, rcfg).context("building the bench router")?;
     let http = HttpServer::start(router, "127.0.0.1:0", HttpConfig::default())
         .context("binding the bench router http server")?;
@@ -578,9 +584,88 @@ fn router_section(opts: &BenchOptions) -> Result<Json> {
         ("loads", json::num(report.router.loads as f64)),
         ("evictions", json::num(report.router.evictions as f64)),
         ("unknown_model", json::num(report.router.unknown_model as f64)),
-        ("load_latency_mean_us", json::num(report.router.load_latency.mean_us())),
+        ("load_latency_mean_us", json::num(report.router.load_latency.mean_us)),
         ("wire_router_section", router_counters),
     ]))
+}
+
+// ---- plan -----------------------------------------------------------------
+
+/// Accumulator-bitwidth planner section: planner runtimes and
+/// planned-vs-default widths for the two synthetic models. Fails — not
+/// just reports — if a calibrated width exceeds its analytic bound, so a
+/// planner soundness regression breaks the bench (and the CI smoke that
+/// runs it), not just a table.
+fn plan_section(opts: &BenchOptions) -> Result<Json> {
+    use crate::plan::{plan_model, PlannerConfig};
+    let samples = if opts.quick { 32 } else { 256 };
+    let cases: Vec<(&str, crate::formats::pqsw::PqswModel)> = if opts.quick {
+        vec![
+            ("lin", models::synthetic_linear(64, 10)),
+            ("cnn", models::synthetic_conv(2, 8, 8, 4, 10)),
+        ]
+    } else {
+        vec![
+            ("lin", models::synthetic_linear(784, 128)),
+            ("cnn", models::synthetic_conv(3, 28, 28, 8, 10)),
+        ]
+    };
+    let mut rows = Vec::new();
+    for (label, model) in &cases {
+        let t0 = Instant::now();
+        let analytic = plan_model(model, &PlannerConfig::default())?;
+        let analytic_ms = t0.elapsed().as_secs_f64() * 1e3;
+        let t0 = Instant::now();
+        let calibrated = plan_model(
+            model,
+            &PlannerConfig { calibrate_samples: samples, ..Default::default() },
+        )?;
+        let calibrated_ms = t0.elapsed().as_secs_f64() * 1e3;
+        for (a, c) in analytic.per_layer.iter().zip(calibrated.per_layer.iter()) {
+            if c.acc_bits > a.analytic_bits {
+                return Err(anyhow!(
+                    "{label} layer {}: calibrated {} exceeds the analytic bound {}",
+                    a.name,
+                    c.acc_bits,
+                    a.analytic_bits
+                ));
+            }
+        }
+        let asum = analytic.summary();
+        let csum = calibrated.summary();
+        rows.push(json::obj(vec![
+            ("model", json::s(label)),
+            ("layers", json::num(asum.layers as f64)),
+            ("samples", json::num(samples as f64)),
+            ("analytic_ms", json::num(analytic_ms)),
+            ("calibrated_ms", json::num(calibrated_ms)),
+            (
+                "analytic_bits",
+                json::obj(vec![
+                    ("min", json::num(asum.min_bits as f64)),
+                    ("max", json::num(asum.max_bits as f64)),
+                    ("mean", json::num(asum.mean_bits)),
+                ]),
+            ),
+            (
+                "planned_bits",
+                json::obj(vec![
+                    ("min", json::num(csum.min_bits as f64)),
+                    ("max", json::num(csum.max_bits as f64)),
+                    ("mean", json::num(csum.mean_bits)),
+                ]),
+            ),
+            ("total_bits_planned", json::num(calibrated.total_bits() as f64)),
+            ("total_bits_baseline32", json::num(calibrated.baseline_bits() as f64)),
+            (
+                "reduction_vs_32",
+                json::num(
+                    calibrated.baseline_bits() as f64 / calibrated.total_bits().max(1) as f64,
+                ),
+            ),
+        ]));
+    }
+    Ok(Json::Arr(rows))
 }
 
 #[cfg(test)]
@@ -595,7 +680,7 @@ mod tests {
         let report = run(&opts).expect("quick bench run");
         let txt = report.to_string();
         let parsed = Json::parse(&txt).expect("report round-trips");
-        for key in ["meta", "dot", "pool", "forward", "serve", "router"] {
+        for key in ["meta", "dot", "pool", "forward", "serve", "router", "plan"] {
             assert!(parsed.get(key).is_some(), "missing section {key}");
         }
         let fwd = parsed.get("forward").unwrap().as_arr().unwrap();
@@ -620,5 +705,21 @@ mod tests {
         }
         assert_eq!(router.get("unknown_model").and_then(Json::as_usize), Some(1));
         assert_eq!(router.get("loads").and_then(Json::as_usize), Some(2));
+        // the plan section carries BOTH synthetic-model rows with
+        // calibrated widths no wider than the analytic bound (the
+        // generator fails otherwise; this re-checks over the wire format)
+        let plan = parsed.get("plan").unwrap().as_arr().unwrap();
+        assert_eq!(plan.len(), 2, "lin + cnn planner rows");
+        for row in plan {
+            let a = row.get("analytic_bits").unwrap();
+            let p = row.get("planned_bits").unwrap();
+            assert!(
+                p.get("max").unwrap().as_f64().unwrap() <= a.get("max").unwrap().as_f64().unwrap(),
+                "planned max must not exceed analytic max: {row:?}"
+            );
+            assert!(row.get("reduction_vs_32").unwrap().as_f64().unwrap() >= 1.0);
+            assert!(row.get("analytic_ms").unwrap().as_f64().unwrap() >= 0.0);
+            assert!(row.get("calibrated_ms").unwrap().as_f64().unwrap() >= 0.0);
+        }
     }
 }

@@ -88,6 +88,61 @@ impl LatencyRecorder {
         let room = RESERVOIR_CAP.saturating_sub(self.samples.len());
         self.samples.extend(other.samples.iter().take(room));
     }
+
+    /// Six-number summary of the stream so far. This is what metrics
+    /// *snapshots* carry (`/v1/metrics` scrapes, per-model fleet rows):
+    /// a `Copy` struct instead of a reservoir clone, so assembling a
+    /// snapshot never copies or splices up to 64Ki samples per recorder.
+    pub fn summary(&self) -> LatencySummary {
+        LatencySummary {
+            count: self.count(),
+            mean_us: self.mean_us(),
+            p50_us: self.p50_us(),
+            p95_us: self.p95_us(),
+            p99_us: self.p99_us(),
+            max_us: self.max_us(),
+        }
+    }
+}
+
+/// Quantile summary of one latency stream (microseconds). `Copy`, so
+/// fleet snapshots move six floats per recorder instead of reservoirs.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct LatencySummary {
+    pub count: usize,
+    pub mean_us: f64,
+    pub p50_us: f64,
+    pub p95_us: f64,
+    pub p99_us: f64,
+    pub max_us: f64,
+}
+
+impl LatencySummary {
+    /// Fold `other` in: `count`, `mean` and `max` stay exact; quantiles
+    /// are count-weighted averages — NOT pooled quantiles. That is the
+    /// accepted trade for never touching reservoirs on the snapshot path
+    /// (the spliced-reservoir merge this replaces was approximate past
+    /// the cap too). It is a tight approximation when the merged streams
+    /// are near-identically distributed (incarnations of one model
+    /// across evict/reload cycles) and a coarse one when they are not
+    /// (fleet-wide totals over heterogeneous models, where a true pooled
+    /// p99 can sit anywhere between the per-model p99s — read the
+    /// per-model sections for real tails). `max_us` is exact either way
+    /// and is the trustworthy fleet-wide tail bound.
+    pub fn merge_from(&mut self, other: &LatencySummary) {
+        let (a, b) = (self.count as f64, other.count as f64);
+        if a + b == 0.0 {
+            return;
+        }
+        self.mean_us = (self.mean_us * a + other.mean_us * b) / (a + b);
+        self.p50_us = (self.p50_us * a + other.p50_us * b) / (a + b);
+        self.p95_us = (self.p95_us * a + other.p95_us * b) / (a + b);
+        self.p99_us = (self.p99_us * a + other.p99_us * b) / (a + b);
+        if other.max_us > self.max_us {
+            self.max_us = other.max_us;
+        }
+        self.count += other.count;
+    }
 }
 
 /// Aggregate serving metrics.
@@ -154,6 +209,23 @@ impl ServeMetrics {
         }
     }
 
+    /// The snapshot form fleet surfaces carry (see [`ServeSummary`]).
+    pub fn summary(&self) -> ServeSummary {
+        ServeSummary {
+            requests: self.requests,
+            errors: self.errors,
+            expired: self.expired,
+            wall_s: self.wall_s,
+            throughput_rps: self.throughput_rps,
+            batches: self.batches,
+            mean_batch: self.mean_batch,
+            latency: self.latency.summary(),
+            queue: self.queue.summary(),
+            compute: self.compute.summary(),
+            pool: self.pool,
+        }
+    }
+
     pub fn print(&self) {
         println!(
             "requests={} errors={} expired={} wall={:.2}s throughput={:.1} req/s  batches={} (mean {:.1} req/batch)",
@@ -186,6 +258,55 @@ impl ServeMetrics {
                 "  compute pool threads={} busy={} jobs={} inline_jobs={} chunks={}",
                 p.threads, p.busy, p.jobs, p.inline_jobs, p.chunks,
             );
+        }
+    }
+}
+
+/// Snapshot form of [`ServeMetrics`]: same counters, latency streams as
+/// [`LatencySummary`] six-number summaries. `Copy`, cheap to hold under
+/// locks — the router's per-model fleet rows, `aggregate()` totals and
+/// the evicted-incarnation accumulator all use this, so a `/v1/metrics`
+/// scrape never clones or splices a reservoir while holding the router
+/// lock (ROADMAP follow-on from PR 4).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ServeSummary {
+    pub requests: usize,
+    pub errors: usize,
+    pub expired: usize,
+    pub wall_s: f64,
+    pub throughput_rps: f64,
+    pub batches: usize,
+    pub mean_batch: f64,
+    pub latency: LatencySummary,
+    pub queue: LatencySummary,
+    pub compute: LatencySummary,
+    pub pool: Option<PoolStats>,
+}
+
+impl ServeSummary {
+    /// Fold `other` in: counters sum, `mean_batch` re-weights by batch
+    /// count, `wall_s` accumulates (incarnations are sequential in time),
+    /// throughput is recomputed, summaries merge per
+    /// [`LatencySummary::merge_from`].
+    pub fn merge_from(&mut self, other: &ServeSummary) {
+        let batched =
+            self.mean_batch * self.batches as f64 + other.mean_batch * other.batches as f64;
+        self.requests += other.requests;
+        self.errors += other.errors;
+        self.expired += other.expired;
+        self.batches += other.batches;
+        self.mean_batch = if self.batches == 0 {
+            0.0
+        } else {
+            batched / self.batches as f64
+        };
+        self.wall_s += other.wall_s;
+        self.throughput_rps = self.requests as f64 / self.wall_s.max(1e-9);
+        self.latency.merge_from(&other.latency);
+        self.queue.merge_from(&other.queue);
+        self.compute.merge_from(&other.compute);
+        if self.pool.is_none() {
+            self.pool = other.pool;
         }
     }
 }
@@ -341,6 +462,72 @@ mod tests {
         assert!((a.throughput_rps - 10.0).abs() < 1e-9);
         assert_eq!(a.latency.count(), 40);
         assert!((a.latency.mean_us() - 175.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn summary_matches_recorder_and_merges_sanely() {
+        let mut r = LatencyRecorder::default();
+        for i in 1..=100 {
+            r.record(i as f64);
+        }
+        let s = r.summary();
+        assert_eq!(s.count, 100);
+        assert_eq!(s.mean_us, r.mean_us());
+        assert_eq!(s.p50_us, r.p50_us());
+        assert_eq!(s.p99_us, r.p99_us());
+        assert_eq!(s.max_us, 100.0);
+        // merge: exact count/mean/max, count-weighted quantiles
+        let mut a = LatencySummary { count: 10, mean_us: 100.0, p50_us: 100.0, p95_us: 110.0, p99_us: 120.0, max_us: 150.0 };
+        let b = LatencySummary { count: 30, mean_us: 200.0, p50_us: 200.0, p95_us: 210.0, p99_us: 220.0, max_us: 400.0 };
+        a.merge_from(&b);
+        assert_eq!(a.count, 40);
+        assert!((a.mean_us - 175.0).abs() < 1e-9);
+        assert!((a.p50_us - 175.0).abs() < 1e-9);
+        assert_eq!(a.max_us, 400.0);
+        // merging an empty summary is a no-op
+        let before = a;
+        a.merge_from(&LatencySummary::default());
+        assert_eq!(a, before);
+        // into-empty adopts the other side
+        let mut e = LatencySummary::default();
+        e.merge_from(&b);
+        assert_eq!(e, b);
+    }
+
+    #[test]
+    fn serve_summary_merge_mirrors_serve_metrics_merge() {
+        let mut a = ServeMetrics {
+            requests: 10,
+            errors: 1,
+            batches: 5,
+            mean_batch: 2.0,
+            wall_s: 1.0,
+            ..Default::default()
+        };
+        for _ in 0..10 {
+            a.latency.record(100.0);
+        }
+        let mut b = ServeMetrics {
+            requests: 30,
+            batches: 5,
+            mean_batch: 6.0,
+            wall_s: 3.0,
+            ..Default::default()
+        };
+        for _ in 0..30 {
+            b.latency.record(200.0);
+        }
+        let mut sum = a.summary();
+        sum.merge_from(&b.summary());
+        a.merge_from(&b);
+        assert_eq!(sum.requests, a.requests);
+        assert_eq!(sum.errors, a.errors);
+        assert_eq!(sum.batches, a.batches);
+        assert!((sum.mean_batch - a.mean_batch).abs() < 1e-9);
+        assert!((sum.wall_s - a.wall_s).abs() < 1e-9);
+        assert!((sum.throughput_rps - a.throughput_rps).abs() < 1e-9);
+        assert_eq!(sum.latency.count, a.latency.count());
+        assert!((sum.latency.mean_us - a.latency.mean_us()).abs() < 1e-9);
     }
 
     #[test]

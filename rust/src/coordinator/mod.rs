@@ -34,10 +34,10 @@ use crate::nn::engine::{Engine, EngineConfig};
 use crate::overflow::OverflowReport;
 use crate::util::pool;
 
-pub use metrics::{LatencyRecorder, ServeMetrics};
+pub use metrics::{LatencyRecorder, LatencySummary, ServeMetrics, ServeSummary};
 pub use registry::{
     ClassifyRequest, ModelRegistry, ModelSource, ModelStatus, RouteError, Router, RouterConfig,
-    RouterMetrics, SyntheticSpec,
+    RouterMetrics, SourceFactory, SyntheticSpec,
 };
 pub use server::{
     PendingResponse, ServeError, ServeResponse, Server, ServerBuilder, ServerConfig, SubmitError,

@@ -19,9 +19,17 @@
 //! * **LRU eviction** — with [`RouterConfig::max_loaded`] set, loading a
 //!   model past the cap drains the least-recently-used server first
 //!   (graceful: queued requests are answered, not dropped). A model's
-//!   [`ServeMetrics`] survive eviction: the final snapshot of each
+//!   metrics survive eviction: the final [`ServeSummary`] of each
 //!   incarnation is folded into a per-model accumulator, so
 //!   [`Router::metrics`] always reports lifetime totals.
+//! * **Eager preload** — [`RouterConfig::preload`] names models to load
+//!   at construction time (hot models skip the first-request latency);
+//!   each preload flows through the regular load path and counters.
+//! * **Cheap snapshots** — [`Router::metrics`] assembles the fleet view
+//!   in two phases: counters + `Copy` summaries under the router lock,
+//!   per-server quantile summaries outside it. A `/v1/metrics` scrape
+//!   never clones a latency reservoir under the lock and never blocks
+//!   (or is blocked by) an in-flight model load.
 //! * **One compute pool** — with `server.engine_threads > 1` the router
 //!   builds ONE [`ComputePool`] and injects it into every per-model
 //!   [`Server`] (via [`crate::coordinator::ServerBuilder::shared_pool`]),
@@ -47,9 +55,10 @@ use crate::formats::manifest::Manifest;
 use crate::formats::pqsw::PqswModel;
 use crate::models;
 use crate::nn::engine::EngineConfig;
+use crate::plan::PlanSummary;
 use crate::util::pool::{ComputePool, PoolStats};
 
-use super::metrics::{LatencyRecorder, ServeMetrics};
+use super::metrics::{LatencyRecorder, LatencySummary, ServeSummary};
 use super::server::{PendingResponse, Server, ServerConfig, SubmitError};
 
 /// Deterministic synthetic architectures buildable without artifacts.
@@ -79,9 +88,23 @@ impl SyntheticSpec {
     }
 }
 
+/// Build-on-demand model source backed by an arbitrary closure. Mainly a
+/// test fixture: the scrape-vs-load isolation tests use it to make a load
+/// block on a barrier and prove metrics snapshots never serialize behind
+/// it.
+pub struct SourceFactory {
+    build: Box<dyn Fn() -> Result<PqswModel> + Send + Sync>,
+}
+
+impl std::fmt::Debug for SourceFactory {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "SourceFactory(<closure>)")
+    }
+}
+
 /// Where a registered model comes from. Loading is deferred until the
-/// router needs the model (first request naming it, or a reload after
-/// eviction); `Memory` sources only pay a clone.
+/// router needs the model (first request naming it, a preload at startup,
+/// or a reload after eviction); `Memory` sources only pay a clone.
 #[derive(Clone, Debug)]
 pub enum ModelSource {
     /// An already-built model held in memory.
@@ -94,9 +117,19 @@ pub enum ModelSource {
     Manifest { manifest: Manifest, name: String },
     /// A `.pqsw` file path, read from disk on first use.
     Path(PathBuf),
+    /// A closure invoked on every load (see [`SourceFactory`]).
+    Factory(Arc<SourceFactory>),
 }
 
 impl ModelSource {
+    /// A [`ModelSource::Factory`] from a closure.
+    pub fn factory<F>(build: F) -> ModelSource
+    where
+        F: Fn() -> Result<PqswModel> + Send + Sync + 'static,
+    {
+        ModelSource::Factory(Arc::new(SourceFactory { build: Box::new(build) }))
+    }
+
     /// Materialize the model (disk read for `Manifest`/`Path` sources).
     pub fn load(&self) -> Result<PqswModel> {
         match self {
@@ -105,6 +138,7 @@ impl ModelSource {
             ModelSource::Manifest { manifest, name } => models::load(manifest, name),
             ModelSource::Path(p) => PqswModel::load(p)
                 .with_context(|| format!("loading model file {}", p.display())),
+            ModelSource::Factory(f) => (f.build)(),
         }
     }
 
@@ -113,7 +147,16 @@ impl ModelSource {
         match self {
             ModelSource::Memory(m) => Some(m.input_shape.clone()),
             ModelSource::Synthetic(spec) => Some(spec.input_shape()),
-            ModelSource::Manifest { .. } | ModelSource::Path(_) => None,
+            ModelSource::Manifest { .. } | ModelSource::Path(_) | ModelSource::Factory(_) => None,
+        }
+    }
+
+    /// Embedded accumulator-plan summary when knowable without touching
+    /// disk (loaded models report their live plan instead).
+    pub fn plan_summary(&self) -> Option<PlanSummary> {
+        match self {
+            ModelSource::Memory(m) => m.plan.as_ref().map(|p| p.summary()),
+            _ => None,
         }
     }
 
@@ -243,6 +286,12 @@ pub struct RouterConfig {
     /// deadlines). `engine_threads > 1` sizes the ONE compute pool the
     /// router shares across every loaded model's engines.
     pub server: ServerConfig,
+    /// Model names to load eagerly at router construction instead of on
+    /// first request (hot-model preload; CLI `serve-http --preload`).
+    /// Each preload counts in `RouterMetrics::loads` like a lazy load;
+    /// an unknown name fails [`Router::new`]. Preloading more names than
+    /// `max_loaded` LRU-evicts the earliest ones, like any other load.
+    pub preload: Vec<String>,
 }
 
 /// One classification request at the routing surface.
@@ -299,9 +348,14 @@ pub struct ModelStatus {
     /// Input shape when known (always known once loaded; known without
     /// loading for in-memory and synthetic sources).
     pub input_shape: Option<Vec<usize>>,
+    /// The model's embedded accumulator-bitwidth plan summary, when known
+    /// (always known once loaded; known without loading for in-memory
+    /// sources). `None` = no plan: the global `acc_bits` applies.
+    pub plan: Option<PlanSummary>,
     /// Lifetime serving metrics: the live incarnation merged with every
-    /// evicted one.
-    pub metrics: ServeMetrics,
+    /// evicted one. A quantile *summary* — snapshots never carry
+    /// reservoirs (see [`ServeSummary`]).
+    pub metrics: ServeSummary,
 }
 
 /// Router-level counters + the per-model fleet snapshot.
@@ -311,12 +365,13 @@ pub struct RouterMetrics {
     pub routed: u64,
     /// Requests naming an unregistered model (answered 404, never queued).
     pub unknown_model: u64,
-    /// Lazy loads performed (first requests + post-eviction reloads).
+    /// Lazy + preload loads performed (first requests, preloads,
+    /// post-eviction reloads).
     pub loads: u64,
     /// Models drained out under the `max_loaded` cap.
     pub evictions: u64,
-    /// Wall time of each lazy load (source read + server spawn), µs.
-    pub load_latency: LatencyRecorder,
+    /// Wall time of each load (source read + server spawn), µs.
+    pub load_latency: LatencySummary,
     pub wall_s: f64,
     /// Per-model rows in registration order.
     pub models: Vec<ModelStatus>,
@@ -331,11 +386,15 @@ impl RouterMetrics {
         self.models.iter().find(|m| m.name == name)
     }
 
-    /// Fleet-wide totals: every model's metrics folded into one
-    /// [`ServeMetrics`] (counters sum; `wall_s` is the router's wall
-    /// clock, so `throughput_rps` is fleet throughput).
-    pub fn aggregate(&self) -> ServeMetrics {
-        let mut out = ServeMetrics::default();
+    /// Fleet-wide totals: every model's summary folded into one
+    /// [`ServeSummary`] (counters sum; `wall_s` is the router's wall
+    /// clock, so `throughput_rps` is fleet throughput). Counters, means
+    /// and maxima are exact; the aggregate p50/p95/p99 are count-weighted
+    /// averages of per-model quantiles, not pooled quantiles — on a
+    /// heterogeneous fleet read the per-model rows for real tails (see
+    /// [`LatencySummary::merge_from`]).
+    pub fn aggregate(&self) -> ServeSummary {
+        let mut out = ServeSummary::default();
         for m in &self.models {
             out.merge_from(&m.metrics);
         }
@@ -353,12 +412,21 @@ impl RouterMetrics {
             self.unknown_model,
             self.loads,
             self.evictions,
-            self.load_latency.mean_us(),
-            self.load_latency.max_us(),
+            self.load_latency.mean_us,
+            self.load_latency.max_us,
         );
         for m in &self.models {
+            let plan = match &m.plan {
+                Some(p) => format!(
+                    " plan[{} {}..{} bits]",
+                    p.planner.name(),
+                    p.min_bits,
+                    p.max_bits
+                ),
+                None => String::new(),
+            };
             println!(
-                "model {}{}{}: requests={} errors={} expired={} \
+                "model {}{}{}{plan}: requests={} errors={} expired={} \
                  p50={:.1}us p99={:.1}us",
                 m.name,
                 if m.default { " (default)" } else { "" },
@@ -366,8 +434,8 @@ impl RouterMetrics {
                 m.metrics.requests,
                 m.metrics.errors,
                 m.metrics.expired,
-                m.metrics.latency.p50_us(),
-                m.metrics.latency.p99_us(),
+                m.metrics.latency.p50_us,
+                m.metrics.latency.p99_us,
             );
         }
         if let Some(p) = &self.pool {
@@ -382,6 +450,8 @@ impl RouterMetrics {
 struct LoadedModel {
     server: Arc<Server>,
     input_shape: Vec<usize>,
+    /// the loaded model's embedded plan summary (reported per fleet row)
+    plan: Option<PlanSummary>,
     /// monotone use tick; smallest = least recently used
     last_used: u64,
 }
@@ -397,8 +467,9 @@ struct RouterInner {
     /// visible here so metrics snapshots never lose a model's traffic
     /// mid-drain (folded into `past` when the drain completes)
     draining: Vec<(String, Arc<Server>)>,
-    /// accumulated metrics of evicted incarnations, per model
-    past: BTreeMap<String, ServeMetrics>,
+    /// accumulated metrics of evicted incarnations, per model — `Copy`
+    /// summaries, so snapshots read them without reservoir clones
+    past: BTreeMap<String, ServeSummary>,
     tick: u64,
     routed: u64,
     unknown: u64,
@@ -422,22 +493,34 @@ pub struct Router {
 }
 
 impl Router {
-    /// Build a router over `registry`. Nothing is loaded yet — the first
-    /// request for each model pays its load. Fails on an empty registry.
+    /// Build a router over `registry`. Models named in
+    /// [`RouterConfig::preload`] are loaded eagerly before this returns
+    /// (each counted in `loads`; an unknown preload name is an error);
+    /// everything else loads lazily on its first request. Fails on an
+    /// empty registry.
     pub fn new(registry: ModelRegistry, cfg: RouterConfig) -> Result<Router> {
         if registry.is_empty() {
             return Err(anyhow!("router needs at least one registered model"));
         }
         let pool = (cfg.server.engine_threads > 1)
             .then(|| Arc::new(ComputePool::new(cfg.server.engine_threads)));
-        Ok(Router {
+        let preload = cfg.preload.clone();
+        let router = Router {
             registry,
             cfg,
             pool,
             inner: Mutex::new(RouterInner::default()),
             load_done: Condvar::new(),
             started: Instant::now(),
-        })
+        };
+        for name in &preload {
+            // the regular load path (so dedup/eviction/metrics semantics
+            // are identical to a lazy load), without counting a route
+            router
+                .resolve_counted(Some(name.as_str()), false)
+                .map_err(|e| anyhow!("preloading model {name:?}: {e}"))?;
+        }
+        Ok(router)
     }
 
     /// Convenience: a single-model router (the pre-multi-model surface).
@@ -449,8 +532,11 @@ impl Router {
     ) -> Router {
         let mut registry = ModelRegistry::new();
         registry.register(name, ModelSource::Memory(model.clone()));
-        Router::new(registry, RouterConfig { max_loaded: 0, engine, server })
-            .expect("registry has one model")
+        Router::new(
+            registry,
+            RouterConfig { max_loaded: 0, engine, server, preload: Vec::new() },
+        )
+        .expect("registry has one model")
     }
 
     /// The name requests without a model field route to.
@@ -588,7 +674,8 @@ impl Router {
                 .config(self.cfg.server)
                 .maybe_shared_pool(self.pool.clone())
                 .start(&model);
-            (Arc::new(server), model.input_shape.clone())
+            let plan = model.plan.as_ref().map(|p| p.summary());
+            (Arc::new(server), model.input_shape.clone(), plan)
         });
         let load_us = t0.elapsed().as_secs_f64() * 1e6;
 
@@ -596,7 +683,7 @@ impl Router {
         let inner = &mut *guard;
         load_guard.armed = false;
         inner.loading.remove(name);
-        let (server, input_shape) = match built {
+        let (server, input_shape, plan) = match built {
             Ok(v) => v,
             Err(e) => {
                 // wake same-name waiters so one of them can retry the load
@@ -634,7 +721,7 @@ impl Router {
         }
         inner.loaded.insert(
             name.to_string(),
-            LoadedModel { server: Arc::clone(&server), input_shape, last_used: tick },
+            LoadedModel { server: Arc::clone(&server), input_shape, plan, last_used: tick },
         );
         self.load_done.notify_all();
         drop(guard);
@@ -643,19 +730,99 @@ impl Router {
         // are answered; racing submits fail with Closed → 503). Only once
         // the final metrics are folded into `past` does the victim leave
         // `draining`, so snapshots never under-report a model mid-drain.
+        // The summary of the final metrics is computed before re-taking
+        // the lock: `past` holds `Copy` summaries only.
         for (victim, srv) in evicted {
-            let final_metrics = srv.drain();
+            let final_summary = srv.drain().summary();
             let mut inner = self.inner.lock().unwrap();
-            inner.past.entry(victim).or_default().merge_from(&final_metrics);
+            inner.past.entry(victim).or_default().merge_from(&final_summary);
             inner.draining.retain(|(_, a)| !Arc::ptr_eq(a, &srv));
         }
         Ok(server)
     }
 
     /// Snapshot of router counters + the per-model fleet.
+    ///
+    /// Two phases, so a scrape never does reservoir work — or *any*
+    /// per-server locking — while holding the router lock (routing and
+    /// lazy loads proceed concurrently with a scrape; see the
+    /// `metrics_scrape_does_not_serialize_behind_a_blocked_load` test):
+    ///
+    /// 1. **Under the router lock**: plain counters, the `Copy`
+    ///    per-model summaries of evicted incarnations, and `Arc` handles
+    ///    to live/draining servers. Nothing here clones a sample
+    ///    reservoir or touches a server's own metrics mutex.
+    /// 2. **Unlocked**: each live/draining server is asked for its
+    ///    summary (the one place recorder reservoirs are read) and the
+    ///    fleet rows are assembled.
     pub fn metrics(&self) -> RouterMetrics {
-        let inner = self.inner.lock().unwrap();
-        snapshot_metrics(&self.registry, self.pool.as_deref(), self.started, &inner)
+        struct RowSeed {
+            name: String,
+            past: ServeSummary,
+            live: Option<(Arc<Server>, Vec<usize>, Option<PlanSummary>)>,
+            draining: Vec<Arc<Server>>,
+        }
+        // phase 1: under the lock — counters and handles only
+        let (mut rm, seeds) = {
+            let inner = self.inner.lock().unwrap();
+            let rm = RouterMetrics {
+                routed: inner.routed,
+                unknown_model: inner.unknown,
+                loads: inner.loads,
+                evictions: inner.evictions,
+                // loads are rare (each pays a model read), so this
+                // recorder stays tiny; summarizing it here is O(loads)
+                load_latency: inner.load_latency.summary(),
+                wall_s: self.started.elapsed().as_secs_f64(),
+                models: Vec::new(),
+                pool: self.pool.as_deref().map(|p| p.stats()),
+            };
+            let seeds: Vec<RowSeed> = self
+                .registry
+                .names()
+                .map(|name| RowSeed {
+                    name: name.to_string(),
+                    past: inner.past.get(name).copied().unwrap_or_default(),
+                    live: inner.loaded.get(name).map(|lm| {
+                        (Arc::clone(&lm.server), lm.input_shape.clone(), lm.plan)
+                    }),
+                    // evicted-but-still-draining incarnations stay
+                    // visible, so a model's counters never dip
+                    // mid-eviction
+                    draining: inner
+                        .draining
+                        .iter()
+                        .filter(|(n, _)| *n == name)
+                        .map(|(_, s)| Arc::clone(s))
+                        .collect(),
+                })
+                .collect();
+            (rm, seeds)
+        };
+        // phase 2: unlocked — summarize servers, assemble rows
+        let default = self.registry.default_name().unwrap_or_default().to_string();
+        for seed in seeds {
+            let mut metrics = seed.past;
+            for srv in &seed.draining {
+                metrics.merge_from(&srv.metrics_summary());
+            }
+            let (loaded, known) = match seed.live {
+                Some((srv, shape, plan)) => {
+                    metrics.merge_from(&srv.metrics_summary());
+                    (true, Some((shape, plan)))
+                }
+                None => (false, None),
+            };
+            rm.models.push(model_status(
+                &self.registry,
+                &default,
+                seed.name,
+                loaded,
+                known,
+                metrics,
+            ));
+        }
+        rm
     }
 
     /// Per-model rows only (the `GET /v1/models` payload).
@@ -672,60 +839,62 @@ impl Router {
         // `shutdown(self)` cannot race a `resolve(&self)`, so `draining`
         // is normally empty here; fold defensively anyway
         for (name, srv) in std::mem::take(&mut inner.draining) {
-            let final_metrics = srv.drain();
-            inner.past.entry(name).or_default().merge_from(&final_metrics);
+            let final_summary = srv.drain().summary();
+            inner.past.entry(name).or_default().merge_from(&final_summary);
         }
-        let loaded = std::mem::take(&mut inner.loaded);
-        for (name, lm) in loaded {
-            let final_metrics = lm.server.drain();
-            inner.past.entry(name).or_default().merge_from(&final_metrics);
+        // remember what the loaded incarnations knew (shape, plan) so the
+        // final report keeps reporting it
+        let mut known: BTreeMap<String, (Vec<usize>, Option<PlanSummary>)> = BTreeMap::new();
+        for (name, lm) in std::mem::take(&mut inner.loaded) {
+            let final_summary = lm.server.drain().summary();
+            inner.past.entry(name.clone()).or_default().merge_from(&final_summary);
+            known.insert(name, (lm.input_shape, lm.plan));
         }
-        snapshot_metrics(&registry, pool.as_deref(), started, &inner)
+        let default = registry.default_name().unwrap_or_default().to_string();
+        let names: Vec<String> = registry.names().map(|n| n.to_string()).collect();
+        let models = names
+            .into_iter()
+            .map(|name| {
+                let metrics = inner.past.get(&name).copied().unwrap_or_default();
+                let known = known.remove(&name);
+                model_status(&registry, &default, name, false, known, metrics)
+            })
+            .collect();
+        RouterMetrics {
+            routed: inner.routed,
+            unknown_model: inner.unknown,
+            loads: inner.loads,
+            evictions: inner.evictions,
+            load_latency: inner.load_latency.summary(),
+            wall_s: started.elapsed().as_secs_f64(),
+            models,
+            pool: pool.as_deref().map(|p| p.stats()),
+        }
     }
 }
 
-fn snapshot_metrics(
+/// Assemble one fleet row. `known` carries what a live (or
+/// just-drained) incarnation knew — input shape + plan summary;
+/// otherwise fall back to what the source can say without loading.
+/// Shared by [`Router::metrics`] and [`Router::shutdown`] so the two
+/// snapshot paths cannot drift as `ModelStatus` grows fields.
+fn model_status(
     registry: &ModelRegistry,
-    pool: Option<&ComputePool>,
-    started: Instant,
-    inner: &RouterInner,
-) -> RouterMetrics {
-    let default = registry.default_name().unwrap_or_default().to_string();
-    let models = registry
-        .names()
-        .map(|name| {
-            let mut metrics = inner.past.get(name).cloned().unwrap_or_default();
-            // evicted-but-still-draining incarnations stay visible, so a
-            // model's counters never dip mid-eviction
-            for (n, srv) in &inner.draining {
-                if n == name {
-                    metrics.merge_from(&srv.metrics());
-                }
-            }
-            let (loaded, input_shape) = match inner.loaded.get(name) {
-                Some(lm) => {
-                    metrics.merge_from(&lm.server.metrics());
-                    (true, Some(lm.input_shape.clone()))
-                }
-                None => (false, registry.entries[name].input_shape()),
-            };
-            ModelStatus {
-                name: name.to_string(),
-                default: name == default,
-                loaded,
-                input_shape,
-                metrics,
-            }
-        })
-        .collect();
-    RouterMetrics {
-        routed: inner.routed,
-        unknown_model: inner.unknown,
-        loads: inner.loads,
-        evictions: inner.evictions,
-        load_latency: inner.load_latency.clone(),
-        wall_s: started.elapsed().as_secs_f64(),
-        models,
-        pool: pool.map(|p| p.stats()),
-    }
+    default: &str,
+    name: String,
+    loaded: bool,
+    known: Option<(Vec<usize>, Option<PlanSummary>)>,
+    metrics: ServeSummary,
+) -> ModelStatus {
+    let (input_shape, plan) = match known {
+        Some((shape, plan)) => (Some(shape), plan),
+        None => {
+            let src = registry.entries.get(&name);
+            (
+                src.and_then(|s| s.input_shape()),
+                src.and_then(|s| s.plan_summary()),
+            )
+        }
+    };
+    ModelStatus { default: name == default, name, loaded, input_shape, plan, metrics }
 }

@@ -411,6 +411,14 @@ impl Server {
         snapshot(&self.shared)
     }
 
+    /// Quantile-summary snapshot (`Copy`, no reservoirs). The recorder
+    /// copies happen under this server's own metrics mutex (a memcpy) and
+    /// the percentile sorts outside any lock — this is what the router's
+    /// fleet snapshot calls per model, *after* releasing the router lock.
+    pub fn metrics_summary(&self) -> crate::coordinator::ServeSummary {
+        snapshot(&self.shared).summary()
+    }
+
     /// Graceful shutdown: stop accepting work, let workers drain every
     /// queued request, join them, and return the final metrics.
     pub fn shutdown(self) -> ServeMetrics {

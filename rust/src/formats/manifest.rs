@@ -6,6 +6,7 @@ use anyhow::{anyhow, Context, Result};
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
 
+use crate::plan::{PlanSummary, PlannerKind};
 use crate::util::json::Json;
 
 /// Summary of one trained model.
@@ -23,6 +24,26 @@ pub struct ModelEntry {
     pub lowrank_k: Option<usize>,
     pub acc_q: f64,
     pub acc_fp32: f64,
+    /// Accumulator-bitwidth plan summary of the exported `.pqsw`, when
+    /// the manifest carries one (optional `"plan"` object per model:
+    /// `{"planner", "layers", "min_bits", "max_bits", "mean_bits"}`).
+    /// Lets `pqs list` and the registry surface planned widths without
+    /// opening every model file.
+    pub plan: Option<PlanSummary>,
+}
+
+/// Parse the optional per-model `"plan"` summary object. Malformed or
+/// absent objects yield `None` (the manifest stays loadable).
+fn parse_plan_summary(j: Option<&Json>) -> Option<PlanSummary> {
+    let j = j?;
+    let planner = PlannerKind::from_name(j.get("planner").and_then(Json::as_str)?)?;
+    Some(PlanSummary {
+        layers: j.get("layers").and_then(Json::as_usize)?,
+        min_bits: j.get("min_bits").and_then(Json::as_usize)? as u32,
+        max_bits: j.get("max_bits").and_then(Json::as_usize)? as u32,
+        mean_bits: j.get("mean_bits").and_then(Json::as_f64)?,
+        planner,
+    })
 }
 
 /// Dataset pointers.
@@ -76,6 +97,7 @@ impl Manifest {
                 lowrank_k: m.get("lowrank_k").and_then(Json::as_usize),
                 acc_q: m.get("acc_q").and_then(Json::as_f64).unwrap_or(0.0),
                 acc_fp32: m.get("acc_fp32").and_then(Json::as_f64).unwrap_or(0.0),
+                plan: parse_plan_summary(m.get("plan")),
             };
             models.insert(e.name.clone(), e);
         }
@@ -166,8 +188,34 @@ mod tests {
         let e = &m.models["m1"];
         assert_eq!(e.arch, "mlp1");
         assert_eq!(e.acc_bits_trained, None);
+        assert_eq!(e.plan, None, "entries without a plan object parse plan-free");
         assert_eq!(m.test_dataset_for("mlp1").unwrap().test, "b.bin");
         assert_eq!(m.experiment_models("fig2").len(), 1);
         assert!(m.model_path("m1").ends_with("models/m1.pqsw"));
+    }
+
+    #[test]
+    fn parse_model_entry_plan_summary() {
+        let dir = std::env::temp_dir().join("pqs_test_manifest_plan");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{"models":[
+                 {"name":"p1","file":"p1.pqsw","arch":"mlp1","schedule":"pq",
+                  "plan":{"planner":"calibrated","layers":3,"min_bits":11,
+                          "max_bits":14,"mean_bits":12.5}},
+                 {"name":"p2","file":"p2.pqsw","arch":"mlp1","schedule":"pq",
+                  "plan":{"planner":"martian","layers":1,"min_bits":8,
+                          "max_bits":8,"mean_bits":8}}]}"#,
+        )
+        .unwrap();
+        let m = Manifest::load_dir(&dir).unwrap();
+        let p = m.models["p1"].plan.expect("plan summary parses");
+        assert_eq!(p.planner, PlannerKind::Calibrated);
+        assert_eq!((p.layers, p.min_bits, p.max_bits), (3, 11, 14));
+        assert!((p.mean_bits - 12.5).abs() < 1e-12);
+        // an unknown planner degrades to plan-free instead of failing the
+        // whole manifest
+        assert_eq!(m.models["p2"].plan, None);
     }
 }

@@ -1,15 +1,34 @@
-//! `.pqsw` model container reader (written by `python/compile/pqsw.py`).
+//! `.pqsw` model container reader/writer (format shared with
+//! `python/compile/pqsw.py`).
 //!
 //! Layout: magic `PQSW1\0\0\0`, u32le header length, JSON header, zero pad
 //! to 8 bytes, then 8-aligned blobs. The header carries the model graph IR
 //! shared with `python/compile/model.py` (see that module's docstring).
+//!
+//! ### Versioned optional sections (format version 2)
+//! The header may carry a `"format_version"` (absent = 1) and a
+//! `"sections"` array of tagged objects. Known tags are parsed into the
+//! model; an **unknown** tag fails the load with an error naming the tag
+//! and the file's format version, so future format evolutions fail
+//! diagnosably instead of being silently dropped. Version-1 files (no
+//! sections) load exactly as before. The only tag this build understands
+//! is `"plan"` — a per-layer accumulator-bitwidth plan
+//! ([`crate::plan::AccumPlan`]) that `nn::Engine` applies automatically.
 
 use anyhow::{anyhow, bail, Context, Result};
+use std::collections::BTreeMap;
 use std::path::Path;
 
-use crate::util::json::Json;
+use crate::plan::AccumPlan;
+use crate::util::json::{self, Json};
 
 pub const MAGIC: &[u8; 8] = b"PQSW1\x00\x00\x00";
+
+/// Newest header format this build writes/understands.
+pub const FORMAT_VERSION: i64 = 2;
+
+/// Section tags this build can parse.
+pub const KNOWN_SECTION_TAGS: &[&str] = &["plan"];
 
 /// Graph operation kinds (mirrors the python IR).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -41,6 +60,20 @@ impl Op {
 
     pub fn is_q_layer(&self) -> bool {
         matches!(self, Op::QLinear | Op::QConv | Op::QDwConv)
+    }
+
+    /// The IR string this op serializes as (inverse of [`Op::from_str`]).
+    pub fn name(&self) -> &'static str {
+        match self {
+            Op::Input => "input",
+            Op::Relu => "relu",
+            Op::Add => "add",
+            Op::Gap => "gap",
+            Op::Flatten => "flatten",
+            Op::QLinear => "qlinear",
+            Op::QConv => "qconv",
+            Op::QDwConv => "qdwconv",
+        }
     }
 }
 
@@ -91,6 +124,10 @@ pub struct PqswModel {
     pub acc_fp32: f64,
     pub input_shape: Vec<usize>,
     pub graph: Vec<GraphNode>,
+    /// Embedded per-layer accumulator-bitwidth plan (format-version-2
+    /// `"plan"` section; `None` for plan-free files). `nn::Engine` applies
+    /// it automatically on construction.
+    pub plan: Option<AccumPlan>,
 }
 
 struct Blob {
@@ -185,6 +222,38 @@ impl PqswModel {
             graph.push(GraphNode { id, op, inputs, q });
         }
 
+        // versioned optional sections (format version 2+). Unknown tags
+        // fail the load *naming the tag and the file's format version*:
+        // a future format evolution must surface as a diagnosable error,
+        // never as silently dropped data.
+        let format_version = h.get("format_version").and_then(Json::as_i64).unwrap_or(1);
+        let mut plan = None;
+        if let Some(sections) = h.get("sections").and_then(Json::as_arr) {
+            for sec in sections {
+                match sec.get("tag").and_then(Json::as_str) {
+                    Some("plan") => {
+                        plan = Some(AccumPlan::from_json(sec).with_context(|| {
+                            format!(
+                                "parsing the plan section of {:?} (format version \
+                                 {format_version})",
+                                path.as_ref()
+                            )
+                        })?);
+                    }
+                    Some(other) => bail!(
+                        "unknown .pqsw section tag {other:?} in {:?} (file format version \
+                         {format_version}; this build understands: {})",
+                        path.as_ref(),
+                        KNOWN_SECTION_TAGS.join(", "),
+                    ),
+                    None => bail!(
+                        "untagged .pqsw section in {:?} (file format version {format_version})",
+                        path.as_ref()
+                    ),
+                }
+            }
+        }
+
         let gets = |k: &str| h.get(k).and_then(Json::as_str).unwrap_or("").to_string();
         Ok(PqswModel {
             name: gets("name"),
@@ -208,7 +277,104 @@ impl PqswModel {
                 .map(|a| a.iter().filter_map(Json::as_usize).collect())
                 .unwrap_or_default(),
             graph,
+            plan,
         })
+    }
+
+    /// Write the model as a `.pqsw` file the loader (and the python
+    /// toolchain) accepts: same magic/header/blob layout as
+    /// `python/compile/pqsw.py`, plus — when a plan is embedded — the
+    /// format-version-2 `"sections"` array. Plan-free models are written
+    /// as plain version-1 files, indistinguishable from python exports.
+    pub fn save<P: AsRef<Path>>(&self, path: P) -> Result<()> {
+        let align8 = |n: usize| (n + 7) & !7;
+        // (dtype, raw bytes) per blob, indexed by the graph nodes
+        let mut blobs: Vec<(&'static str, Vec<u8>)> = Vec::new();
+        let mut graph_rows: Vec<Json> = Vec::new();
+        for n in &self.graph {
+            let mut row: BTreeMap<String, Json> = BTreeMap::new();
+            row.insert("id".into(), json::num(n.id as f64));
+            row.insert("op".into(), json::s(n.op.name()));
+            row.insert(
+                "inputs".into(),
+                Json::Arr(n.inputs.iter().map(|&i| json::num(i as f64)).collect()),
+            );
+            if let Some(q) = &n.q {
+                row.insert("name".into(), json::s(&q.name));
+                row.insert("oc".into(), json::num(q.oc as f64));
+                row.insert("ic".into(), json::num(q.ic as f64));
+                row.insert("kh".into(), json::num(q.kh as f64));
+                row.insert("kw".into(), json::num(q.kw as f64));
+                row.insert("stride".into(), json::num(q.stride as f64));
+                row.insert("pad".into(), json::num(q.pad as f64));
+                row.insert("prune".into(), Json::Bool(q.prune));
+                row.insert("w_scale".into(), json::num(q.w_scale as f64));
+                row.insert("x_scale".into(), json::num(q.x_scale as f64));
+                row.insert("x_offset".into(), json::num(q.x_offset as f64));
+                row.insert("wq_blob".into(), json::num(blobs.len() as f64));
+                blobs.push(("i8", q.wq.iter().map(|&v| v as u8).collect()));
+                row.insert("bias_blob".into(), json::num(blobs.len() as f64));
+                blobs.push((
+                    "f32",
+                    q.bias.iter().flat_map(|v| v.to_le_bytes()).collect(),
+                ));
+            }
+            graph_rows.push(Json::Obj(row));
+        }
+        // blob offsets are relative to the 8-aligned blob-section start
+        let mut blobs_meta: Vec<Json> = Vec::new();
+        let mut off = 0usize;
+        for (dtype, raw) in &blobs {
+            blobs_meta.push(json::obj(vec![
+                ("offset", json::num(off as f64)),
+                ("len", json::num(raw.len() as f64)),
+                ("dtype", json::s(dtype)),
+            ]));
+            off = align8(off + raw.len());
+        }
+        let opt_num = |v: Option<f64>| match v {
+            Some(x) => json::num(x),
+            None => Json::Null,
+        };
+        let mut header: BTreeMap<String, Json> = BTreeMap::new();
+        header.insert("name".into(), json::s(&self.name));
+        header.insert("arch".into(), json::s(&self.arch));
+        header.insert("schedule".into(), json::s(&self.schedule));
+        header.insert("wbits".into(), json::num(self.wbits as f64));
+        header.insert("abits".into(), json::num(self.abits as f64));
+        header.insert("nm_m".into(), json::num(self.nm_m as f64));
+        header.insert("target_sparsity".into(), json::num(self.target_sparsity));
+        header.insert("achieved_sparsity".into(), json::num(self.achieved_sparsity));
+        header.insert(
+            "acc_bits_trained".into(),
+            opt_num(self.acc_bits_trained.map(|v| v as f64)),
+        );
+        header.insert("lowrank_k".into(), opt_num(self.lowrank_k.map(|v| v as f64)));
+        header.insert("acc_q".into(), json::num(self.acc_q));
+        header.insert("acc_fp32".into(), json::num(self.acc_fp32));
+        header.insert(
+            "input_shape".into(),
+            Json::Arr(self.input_shape.iter().map(|&d| json::num(d as f64)).collect()),
+        );
+        header.insert("graph".into(), Json::Arr(graph_rows));
+        header.insert("blobs".into(), Json::Arr(blobs_meta));
+        if let Some(plan) = &self.plan {
+            header.insert("format_version".into(), json::num(FORMAT_VERSION as f64));
+            header.insert("sections".into(), Json::Arr(vec![plan.to_json()]));
+        }
+        let hdr = Json::Obj(header).to_string().into_bytes();
+
+        let mut out: Vec<u8> = Vec::with_capacity(12 + hdr.len() + off + 16);
+        out.extend_from_slice(MAGIC);
+        out.extend_from_slice(&(hdr.len() as u32).to_le_bytes());
+        out.extend_from_slice(&hdr);
+        out.resize(align8(out.len()), 0); // pad header to the blob base
+        for (_, raw) in &blobs {
+            out.extend_from_slice(raw);
+            out.resize(align8(out.len()), 0); // keep every blob 8-aligned
+        }
+        std::fs::write(path.as_ref(), &out)
+            .with_context(|| format!("writing model {:?}", path.as_ref()))
     }
 
     /// All quantized layers in graph order.
@@ -255,5 +421,81 @@ mod tests {
         let p = dir.join("bad.pqsw");
         std::fs::write(&p, b"NOTPQSW0rest").unwrap();
         assert!(PqswModel::load(&p).is_err());
+    }
+
+    fn write_header_only(path: &std::path::Path, header: &str) {
+        let hdr = header.as_bytes();
+        let mut raw = Vec::new();
+        raw.extend_from_slice(MAGIC);
+        raw.extend_from_slice(&(hdr.len() as u32).to_le_bytes());
+        raw.extend_from_slice(hdr);
+        std::fs::write(path, raw).unwrap();
+    }
+
+    #[test]
+    fn unknown_section_tag_errors_with_the_format_version() {
+        let dir = std::env::temp_dir().join("pqs_test_pqsw_sections");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("future.pqsw");
+        write_header_only(
+            &p,
+            r#"{"name":"f","graph":[],"blobs":[],
+                "format_version":7,"sections":[{"tag":"wibble"}]}"#,
+        );
+        let err = format!("{:#}", PqswModel::load(&p).unwrap_err());
+        assert!(err.contains("wibble"), "names the unknown tag: {err}");
+        assert!(err.contains('7'), "includes the file's format version: {err}");
+        assert!(err.contains("plan"), "lists the known tags: {err}");
+        // an untagged section is just as diagnosable
+        let p2 = dir.join("untagged.pqsw");
+        write_header_only(&p2, r#"{"name":"f","graph":[],"blobs":[],"sections":[{}]}"#);
+        let err = format!("{:#}", PqswModel::load(&p2).unwrap_err());
+        assert!(err.contains("untagged"), "{err}");
+        assert!(err.contains('1'), "sections without a version default to 1: {err}");
+    }
+
+    #[test]
+    fn save_load_roundtrip_preserves_model_and_plan() {
+        let dir = std::env::temp_dir().join("pqs_test_pqsw_roundtrip");
+        std::fs::create_dir_all(&dir).unwrap();
+        let mut model = crate::models::synthetic_conv(2, 6, 6, 4, 10);
+        // plan-free files round-trip as version-1 (no sections key at all)
+        let p0 = dir.join("planfree.pqsw");
+        model.save(&p0).unwrap();
+        let raw = std::fs::read(&p0).unwrap();
+        let hlen = u32::from_le_bytes(raw[8..12].try_into().unwrap()) as usize;
+        let hdr = std::str::from_utf8(&raw[12..12 + hlen]).unwrap();
+        assert!(!hdr.contains("sections"), "plan-free writes stay version 1");
+        let back = PqswModel::load(&p0).unwrap();
+        assert_eq!(back.plan, None);
+        assert_eq!(back.name, model.name);
+        assert_eq!(back.input_shape, model.input_shape);
+        assert_eq!(back.graph.len(), model.graph.len());
+        for (a, b) in back.graph.iter().zip(model.graph.iter()) {
+            assert_eq!(a.op, b.op);
+            assert_eq!(a.inputs, b.inputs);
+            match (&a.q, &b.q) {
+                (Some(qa), Some(qb)) => {
+                    assert_eq!(qa.wq, qb.wq);
+                    assert_eq!(qa.bias, qb.bias);
+                    assert_eq!(qa.name, qb.name);
+                    assert_eq!((qa.oc, qa.ic, qa.kh, qa.kw), (qb.oc, qb.ic, qb.kh, qb.kw));
+                    assert_eq!((qa.stride, qa.pad, qa.k), (qb.stride, qb.pad, qb.k));
+                    assert_eq!(qa.w_scale, qb.w_scale);
+                    assert_eq!(qa.x_scale, qb.x_scale);
+                    assert_eq!(qa.x_offset, qb.x_offset);
+                }
+                (None, None) => {}
+                other => panic!("q mismatch: {other:?}"),
+            }
+        }
+        // a planned model round-trips its section
+        let plan =
+            crate::plan::plan_model(&model, &crate::plan::PlannerConfig::default()).unwrap();
+        model.plan = Some(plan.clone());
+        let p1 = dir.join("planned.pqsw");
+        model.save(&p1).unwrap();
+        let back = PqswModel::load(&p1).unwrap();
+        assert_eq!(back.plan.as_ref(), Some(&plan));
     }
 }

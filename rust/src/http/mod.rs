@@ -58,26 +58,45 @@
 //!
 //! `200` with the registered fleet: the default route plus one row per
 //! model — `name`, `default`, `loaded` (is a live server holding it right
-//! now), `input_shape` (`null` until knowable), and the model's lifetime
-//! `metrics` (which survive LRU eviction):
+//! now), `input_shape` (`null` until knowable), the model's embedded
+//! accumulator-bitwidth `plan` summary (`null` for plan-free models;
+//! populated once loaded, and pre-load for in-memory sources), and the
+//! model's lifetime `metrics` (which survive LRU eviction):
 //!
 //! ```json
 //! {"default": "a",
 //!  "models": [{"name": "a", "default": true, "loaded": true,
 //!              "input_shape": [1, 64, 1],
+//!              "plan": {"planner": "calibrated", "layers": 3,
+//!                       "min_bits": 11, "max_bits": 14,
+//!                       "mean_bits": 12.3},
 //!              "metrics": {"requests": 12, "...": "..."}}]}
 //! ```
+//!
+//! The `plan` fields mirror [`crate::plan::PlanSummary`]: `planner` is
+//! `"analytic"` (worst-case guaranteed widths) or `"calibrated"`
+//! (empirically tightened, capped at the analytic bound), and
+//! `min`/`max`/`mean_bits` summarize the enforced per-layer accumulator
+//! widths the engine runs this model at.
 //!
 //! ## `GET /v1/metrics`
 //!
 //! `200` with the full metrics tree: fleet-wide aggregate counters and
 //! latency/queue/compute summaries at the top level (single-model clients
 //! keep working), a `router` section (`routed`, `unknown_model`, `loads`,
-//! `evictions`, `load_latency`), per-model [`crate::coordinator::ServeMetrics`]
+//! `evictions`, `load_latency`), per-model [`crate::coordinator::ServeSummary`]
 //! sections under `models` keyed by name, the front-end's own `http`
 //! counters (`accepted`/`shed`/`read_timeouts` connections), and the
 //! shared compute `pool` utilization (`null` when engines run
-//! single-threaded).
+//! single-threaded). Latency objects carry quantile *summaries*
+//! (`count`/`mean_us`/`p50_us`/`p95_us`/`p99_us`/`max_us`); scrapes are
+//! cheap by construction — assembling one never copies a latency
+//! reservoir or blocks request routing behind the router lock. The
+//! top-level (fleet-aggregate) p50/p95/p99 are count-weighted averages
+//! of the per-model quantiles, not pooled quantiles: on a fleet of
+//! models with very different latency profiles, read the per-model
+//! `models.*` sections for real tails (`count`/`mean_us`/`max_us` are
+//! exact at every level).
 //!
 //! ## `GET /healthz`
 //!

@@ -21,9 +21,10 @@ use std::thread::JoinHandle;
 use std::time::Duration;
 
 use crate::coordinator::{
-    ClassifyRequest, LatencyRecorder, ModelStatus, RouteError, Router, RouterMetrics, ServeError,
-    ServeMetrics, SubmitError,
+    ClassifyRequest, LatencySummary, ModelStatus, RouteError, Router, RouterMetrics, ServeError,
+    ServeSummary, SubmitError,
 };
+use crate::plan::PlanSummary;
 use crate::util::json::{self, Json};
 use crate::util::pool::{self, WorkerPool};
 
@@ -67,7 +68,8 @@ impl Default for HttpConfig {
 }
 
 /// Per-connection counters of the front-end itself (the coordinator's
-/// [`ServeMetrics`] only see requests that reached a model queue).
+/// [`crate::coordinator::ServeMetrics`] only see requests that reached a
+/// model queue).
 /// Exported as the `http` section of `GET /v1/metrics`.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct HttpMetrics {
@@ -546,18 +548,31 @@ fn response_bytes(status: u16, extra: &[(&str, &str)], body: &str, keep: bool) -
 
 // ---- JSON serialization of the metrics surfaces ---------------------------
 
-fn recorder_json(r: &LatencyRecorder) -> Json {
+fn summary_json(r: &LatencySummary) -> Json {
     json::obj(vec![
-        ("count", json::num(r.count() as f64)),
-        ("mean_us", json::num(r.mean_us())),
-        ("p50_us", json::num(r.p50_us())),
-        ("p95_us", json::num(r.p95_us())),
-        ("p99_us", json::num(r.p99_us())),
-        ("max_us", json::num(r.max_us())),
+        ("count", json::num(r.count as f64)),
+        ("mean_us", json::num(r.mean_us)),
+        ("p50_us", json::num(r.p50_us)),
+        ("p95_us", json::num(r.p95_us)),
+        ("p99_us", json::num(r.p99_us)),
+        ("max_us", json::num(r.max_us)),
     ])
 }
 
-fn serve_metrics_json(m: &ServeMetrics) -> Json {
+fn plan_json(plan: &Option<PlanSummary>) -> Json {
+    match plan {
+        Some(p) => json::obj(vec![
+            ("planner", json::s(p.planner.name())),
+            ("layers", json::num(p.layers as f64)),
+            ("min_bits", json::num(p.min_bits as f64)),
+            ("max_bits", json::num(p.max_bits as f64)),
+            ("mean_bits", json::num(p.mean_bits)),
+        ]),
+        None => Json::Null,
+    }
+}
+
+fn serve_metrics_json(m: &ServeSummary) -> Json {
     json::obj(vec![
         ("requests", json::num(m.requests as f64)),
         ("errors", json::num(m.errors as f64)),
@@ -566,9 +581,9 @@ fn serve_metrics_json(m: &ServeMetrics) -> Json {
         ("mean_batch", json::num(m.mean_batch)),
         ("throughput_rps", json::num(m.throughput_rps)),
         ("wall_s", json::num(m.wall_s)),
-        ("latency", recorder_json(&m.latency)),
-        ("queue", recorder_json(&m.queue)),
-        ("compute", recorder_json(&m.compute)),
+        ("latency", summary_json(&m.latency)),
+        ("queue", summary_json(&m.queue)),
+        ("compute", summary_json(&m.compute)),
     ])
 }
 
@@ -596,6 +611,7 @@ fn metrics_json(rm: &RouterMetrics, hm: &HttpMetrics) -> String {
                 obj.insert("loaded".into(), Json::Bool(m.loaded));
                 obj.insert("default".into(), Json::Bool(m.default));
                 obj.insert("input_shape".into(), shape_json(&m.input_shape));
+                obj.insert("plan".into(), plan_json(&m.plan));
                 (m.name.clone(), Json::Obj(obj))
             })
             .collect(),
@@ -620,9 +636,9 @@ fn metrics_json(rm: &RouterMetrics, hm: &HttpMetrics) -> String {
         ("mean_batch", json::num(agg.mean_batch)),
         ("throughput_rps", json::num(agg.throughput_rps)),
         ("wall_s", json::num(agg.wall_s)),
-        ("latency", recorder_json(&agg.latency)),
-        ("queue", recorder_json(&agg.queue)),
-        ("compute", recorder_json(&agg.compute)),
+        ("latency", summary_json(&agg.latency)),
+        ("queue", summary_json(&agg.queue)),
+        ("compute", summary_json(&agg.compute)),
         (
             "router",
             json::obj(vec![
@@ -630,7 +646,7 @@ fn metrics_json(rm: &RouterMetrics, hm: &HttpMetrics) -> String {
                 ("unknown_model", json::num(rm.unknown_model as f64)),
                 ("loads", json::num(rm.loads as f64)),
                 ("evictions", json::num(rm.evictions as f64)),
-                ("load_latency", recorder_json(&rm.load_latency)),
+                ("load_latency", summary_json(&rm.load_latency)),
             ]),
         ),
         ("models", models),
@@ -648,7 +664,8 @@ fn metrics_json(rm: &RouterMetrics, hm: &HttpMetrics) -> String {
 }
 
 /// The `GET /v1/models` document: the default route and one row per
-/// registered model (load state, input shape, per-model metrics).
+/// registered model (load state, input shape, embedded accumulator-plan
+/// summary, per-model metrics).
 fn models_json(default: &str, models: &[ModelStatus]) -> String {
     let rows: Vec<Json> = models
         .iter()
@@ -658,6 +675,7 @@ fn models_json(default: &str, models: &[ModelStatus]) -> String {
                 ("default", Json::Bool(m.default)),
                 ("loaded", Json::Bool(m.loaded)),
                 ("input_shape", shape_json(&m.input_shape)),
+                ("plan", plan_json(&m.plan)),
                 ("metrics", serve_metrics_json(&m.metrics)),
             ])
         })

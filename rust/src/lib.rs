@@ -27,6 +27,7 @@ pub mod http;
 pub mod models;
 pub mod nn;
 pub mod overflow;
+pub mod plan;
 pub mod quant;
 pub mod runtime;
 pub mod sparse;

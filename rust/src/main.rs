@@ -9,9 +9,22 @@
 //!        per-layer transient/persistent overflow profile
 //!   runtime --hlo PATH [--n N]   run an AOT HLO artifact through PJRT
 //!   figures [--fig 2|3|4|5|6]    regenerate the paper figures
+//!   plan [--model SPEC] [--policy P] [--calibrate N] [--budget F]
+//!        [--margin B] [--batch B] [--seed S] [--emit PATH.pqsw]
+//!        accumulator-bitwidth planner: per-layer analytic worst-case
+//!        widths (guaranteed overflow-free, see pqs::plan) plus — with
+//!        --calibrate N — empirically tightened widths from N sample
+//!        inputs (binary-searched against --budget, padded by --margin
+//!        safety bits, capped at the analytic bound). Prints the
+//!        per-layer table and the total accumulator-bit savings vs a
+//!        32-bit baseline. SPEC is as for serve-http --model (default:
+//!        a synthetic CNN, so the command runs without artifacts).
+//!        --emit writes a .pqsw with the plan embedded as a versioned
+//!        section; serving that file enforces the per-layer widths and
+//!        reports the plan in GET /v1/models.
 //!   serve-http [--addr HOST:PORT] [--model NAME[=SPEC]]... [--max-loaded M]
-//!        [--threads N] [--engine-threads T] [--max-batch B]
-//!        [--queue-cap Q] [--deadline-ms MS] [--for-secs S]
+//!        [--preload NAME]... [--threads N] [--engine-threads T]
+//!        [--max-batch B] [--queue-cap Q] [--deadline-ms MS] [--for-secs S]
 //!        multi-model HTTP/1.1 front-end over the serving router
 //!        (POST /v1/classify with an optional "model" field,
 //!        GET /v1/models, GET /v1/metrics, GET /healthz — see the
@@ -22,7 +35,10 @@
 //!        lazily on first request. Without any `--model`: every manifest
 //!        model is registered (artifacts present), else two synthetic
 //!        models. `--max-loaded` caps simultaneously-loaded models (LRU
-//!        eviction; 0 = unlimited). `--engine-threads` sizes the ONE
+//!        eviction; 0 = unlimited). `--preload NAME` (repeatable) loads
+//!        the named models eagerly at startup instead of on first
+//!        request (counted in the router's `loads`; unknown names fail
+//!        startup). `--engine-threads` sizes the ONE
 //!        compute pool shared by every loaded model's engines (default:
 //!        hw threads, with workers defaulting to 2 so pool and workers
 //!        never oversubscribe; `--engine-threads 1` restores the
@@ -75,11 +91,19 @@ fn run() -> Result<()> {
     match cmd {
         "list" => {
             let man = Manifest::load_default()?;
-            println!("{:<46} {:<8} {:>6} {:>8} {:>8}", "name", "schedule", "w/a", "sparsity", "acc(py)");
+            println!(
+                "{:<46} {:<8} {:>6} {:>8} {:>8} {:>10}",
+                "name", "schedule", "w/a", "sparsity", "acc(py)", "plan"
+            );
             for (_, e) in &man.models {
+                let plan = match &e.plan {
+                    Some(p) => format!("{}..{}b", p.min_bits, p.max_bits),
+                    None => "-".to_string(),
+                };
                 println!(
-                    "{:<46} {:<8} {:>3}/{:<3} {:>7.1}% {:>8.3}",
-                    e.name, e.schedule, e.wbits, e.abits, 100.0 * e.achieved_sparsity, e.acc_q
+                    "{:<46} {:<8} {:>3}/{:<3} {:>7.1}% {:>8.3} {:>10}",
+                    e.name, e.schedule, e.wbits, e.abits, 100.0 * e.achieved_sparsity, e.acc_q,
+                    plan
                 );
             }
             for (exp, names) in &man.experiments {
@@ -178,6 +202,40 @@ fn run() -> Result<()> {
                 }
             }
         }
+        "plan" => {
+            let manifest = Manifest::load_default().ok();
+            let model = match args.get("model") {
+                Some(spec) => ModelSource::parse(spec, manifest.as_ref())?.load()?,
+                // default: the synthetic CNN — the planner is demonstrable
+                // on any checkout, artifacts or not
+                None => pqs::models::synthetic_conv(3, 28, 28, 8, 10),
+            };
+            let policy = Policy::from_name(args.get_or("policy", "sorted")).ok_or_else(|| {
+                anyhow!("unknown policy (use one of exact|clip|wrap|sorted1|sorted|oracle)")
+            })?;
+            let pcfg = pqs::plan::PlannerConfig {
+                policy,
+                calibrate_samples: args.get_usize("calibrate", 0),
+                budget: args.get_f64("budget", 0.0),
+                margin: args.get_u32("margin", 1),
+                batch: args.get_usize("batch", 32),
+                seed: args.get_u32("seed", 0x9A17) as u64,
+            };
+            println!("planning {} ({} q-layers)", model.name, model.q_layers().count());
+            let t0 = std::time::Instant::now();
+            let plan = pqs::plan::plan_model(&model, &pcfg)?;
+            println!("planner ran in {:.1} ms", t0.elapsed().as_secs_f64() * 1e3);
+            plan.print();
+            if let Some(path) = args.get("emit") {
+                let mut planned = model.clone();
+                planned.plan = Some(plan);
+                planned.save(path)?;
+                println!(
+                    "wrote {path} with the plan embedded (a router serving it enforces \
+                     the per-layer widths and reports them in GET /v1/models)"
+                );
+            }
+        }
         "serve-http" => {
             let addr = args.get_or("addr", "127.0.0.1:8090").to_string();
             let cfg = engine_cfg(&args)?;
@@ -274,6 +332,8 @@ fn run() -> Result<()> {
                 max_loaded: args.get_usize("max-loaded", 8),
                 engine: cfg,
                 server: scfg,
+                // eager hot-model loads (repeatable --preload NAME)
+                preload: args.get_all("preload").iter().map(|s| s.to_string()).collect(),
             };
             let names: Vec<&str> = registry.names().collect();
             let cap = if rcfg.max_loaded == 0 {
@@ -330,7 +390,8 @@ fn run() -> Result<()> {
         "help" => {
             println!("pqs — Prune, Quantize, and Sort (paper reproduction)");
             println!(
-                "commands: list | describe | eval | profile | runtime | figures | serve-http | bench"
+                "commands: list | describe | eval | profile | runtime | figures | plan | \
+                 serve-http | bench"
             );
             println!("see rust/src/main.rs doc comment for flags");
         }

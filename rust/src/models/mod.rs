@@ -79,6 +79,7 @@ pub fn synthetic_linear(dim: usize, classes: usize) -> PqswModel {
             GraphNode { id: 1, op: Op::Flatten, inputs: vec![0], q: None },
             GraphNode { id: 2, op: Op::QLinear, inputs: vec![1], q: Some(q) },
         ],
+        plan: None,
     }
 }
 
@@ -165,6 +166,7 @@ pub fn synthetic_conv(c: usize, h: usize, w: usize, oc: usize, classes: usize) -
             GraphNode { id: 5, op: Op::Flatten, inputs: vec![4], q: None },
             GraphNode { id: 6, op: Op::QLinear, inputs: vec![5], q: Some(q_fc) },
         ],
+        plan: None,
     }
 }
 

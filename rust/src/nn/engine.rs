@@ -32,6 +32,17 @@
 //! rows). Results are bit-identical to the serial path on every split:
 //! every dot product is an independent computation and overflow statistics
 //! merge commutatively.
+//!
+//! ### Per-layer accumulator widths
+//! A model carrying an embedded accumulator-bitwidth plan
+//! ([`crate::plan::AccumPlan`], matched to q-layers by name) is enforced
+//! automatically: each planned layer runs at its own `acc_bits`,
+//! overriding the global [`EngineConfig::acc_bits`] default. Plan-free
+//! models are bit-identical to the pre-plan engine — the override table
+//! is all-`None` and the global config flows through untouched.
+//! [`Engine::apply_plan`] / [`Engine::clear_plan`] adjust the overrides
+//! after construction (the calibration planner uses `clear_plan` to
+//! measure a model at the wide reference width).
 
 use std::collections::BTreeMap;
 use std::sync::Arc;
@@ -42,6 +53,7 @@ use crate::accum::{self, Policy};
 use crate::dot::{tiled_sorted_dot, DotEngine};
 use crate::formats::pqsw::{Op, PqswModel};
 use crate::overflow::{OverflowReport, OverflowStats};
+use crate::plan::AccumPlan;
 use crate::quant;
 use crate::tensor::{conv_out_dim, im2col, im2col_grouped, TensorF};
 use crate::util::pool::{self, ComputePool};
@@ -117,6 +129,10 @@ pub struct Engine {
     /// node index of the last consumer of each slot's value
     /// (`usize::MAX` for the output slot: never freed mid-run)
     last_use: Vec<usize>,
+    /// per-node accumulator-width override from the model's embedded plan
+    /// (`None` = the global `cfg.acc_bits` applies; always `None` for
+    /// non-q nodes and plan-free models)
+    layer_bits: Vec<Option<u32>>,
     out_slot: usize,
     scratch: Scratch,
     threads: usize,
@@ -169,12 +185,21 @@ fn eval_dot(
     let (lo, hi) = accum::acc_range(p);
 
     if let Some(st) = stats {
-        // fused exact + naive-clip scan
+        // fused exact + naive-clip scan, also tracking the index-order
+        // prefix extremes of the exact sum (the width requirement of the
+        // order-dependent policies)
         let mut exact = 0i64;
+        let mut prefix_lo = 0i64;
+        let mut prefix_hi = 0i64;
         let mut acc = 0i64;
         let mut naive_events = 0u32;
         for &v in prods {
             exact += v as i64;
+            if exact < prefix_lo {
+                prefix_lo = exact;
+            } else if exact > prefix_hi {
+                prefix_hi = exact;
+            }
             let t = acc + v as i64;
             acc = if t < lo {
                 naive_events += 1;
@@ -204,6 +229,20 @@ fn eval_dot(
         };
         st.dots += 1;
         st.products += prods.len() as u64;
+        // per-dot required width (drives the calibration planner): the
+        // width at which THIS policy's accumulation of this dot is
+        // event-free. The sorting/exact policies return clamp(exact), so
+        // the final value's width suffices; Clip/Wrap accumulate in index
+        // order, so every prefix must fit — a final-value width would let
+        // a cancelling dot (e.g. [+20000, -20000]) saturate mid-sum and
+        // silently corrupt the output while reporting zero persistent
+        // overflows. Mirrors the per-policy analytic bound
+        // (`plan::analytic_layer_range`).
+        let required = match cfg.policy {
+            Policy::Clip | Policy::Wrap => accum::bits_for_range(prefix_lo, prefix_hi),
+            _ => accum::bits_for_value(exact),
+        };
+        st.record_required_bits(required);
         if naive_events > 0 {
             st.naive_event_dots += 1;
         }
@@ -302,17 +341,59 @@ impl Engine {
         if !nodes.is_empty() {
             last_use[out_slot] = usize::MAX;
         }
-        Engine {
+        let mut eng = Engine {
             cfg,
             model_name: model.name.clone(),
             input_shape: model.input_shape.clone(),
+            layer_bits: vec![None; nodes.len()],
             nodes,
             last_use,
             out_slot,
             scratch: Scratch::default(),
             threads: 1,
             pool: None,
+        };
+        // a model carrying an embedded plan is enforced from the start;
+        // plan-free models keep the all-None table (bit-identical to the
+        // pre-plan engine)
+        if let Some(plan) = &model.plan {
+            eng.apply_plan(plan);
         }
+        eng
+    }
+
+    /// Enforce `plan`'s per-layer accumulator widths (matched to q-layers
+    /// by name; layers the plan does not mention keep the global
+    /// `cfg.acc_bits`). Replaces any previously applied plan.
+    pub fn apply_plan(&mut self, plan: &AccumPlan) {
+        for (ni, n) in self.nodes.iter().enumerate() {
+            self.layer_bits[ni] = match &n.layer {
+                Some(l) => plan.bits_for_layer(&l.name),
+                None => None,
+            };
+        }
+    }
+
+    /// Drop every per-layer width override; all layers run at the global
+    /// `cfg.acc_bits` again (what a plan-free model does).
+    pub fn clear_plan(&mut self) {
+        for b in self.layer_bits.iter_mut() {
+            *b = None;
+        }
+    }
+
+    /// The effective accumulator width of every q-layer, in graph order
+    /// (the plan override where present, else the global default).
+    pub fn effective_layer_bits(&self) -> Vec<(String, u32)> {
+        self.nodes
+            .iter()
+            .enumerate()
+            .filter_map(|(ni, n)| {
+                n.layer.as_ref().map(|l| {
+                    (l.name.clone(), self.layer_bits[ni].unwrap_or(self.cfg.acc_bits))
+                })
+            })
+            .collect()
     }
 
     /// Parallelize the hot loops of `forward` over `n` scoped pool workers
@@ -403,17 +484,23 @@ impl Engine {
                     let mut stats = OverflowStats::default();
                     let collect = self.cfg.collect_stats;
                     let pool = self.pool.as_deref();
+                    // the layer's planned accumulator width (when a plan
+                    // is applied) overrides the global default
+                    let lcfg = match self.layer_bits[ni] {
+                        Some(bits) => EngineConfig { acc_bits: bits, ..self.cfg },
+                        None => self.cfg,
+                    };
                     let out = match node.op {
                         Op::QLinear => qlinear_forward(
-                            layer, &self.cfg, &mut self.scratch, self.threads, pool, x,
+                            layer, &lcfg, &mut self.scratch, self.threads, pool, x,
                             collect.then_some(&mut stats),
                         ),
                         Op::QConv => qconv_forward(
-                            layer, &self.cfg, &mut self.scratch, self.threads, pool, x, false,
+                            layer, &lcfg, &mut self.scratch, self.threads, pool, x, false,
                             collect.then_some(&mut stats),
                         ),
                         _ => qconv_forward(
-                            layer, &self.cfg, &mut self.scratch, self.threads, pool, x, true,
+                            layer, &lcfg, &mut self.scratch, self.threads, pool, x, true,
                             collect.then_some(&mut stats),
                         ),
                     };
@@ -863,6 +950,34 @@ mod tests {
     }
 
     #[test]
+    fn required_bits_are_policy_order_aware() {
+        // a cancelling dot: exact = 0 (2 bits), but the index-order
+        // prefix reaches 16129 (15 bits). The sorting policies need only
+        // the final value; Clip/Wrap must record the prefix requirement,
+        // or a calibrated plan would saturate them mid-sum.
+        let prods = [16129, -16129];
+        let prefix_bits = accum::bits_for_value(16129);
+        for (policy, want) in [
+            (Policy::Sorted, 2),
+            (Policy::Exact, 2),
+            (Policy::Clip, prefix_bits),
+            (Policy::Wrap, prefix_bits),
+        ] {
+            let cfg = EngineConfig { policy, acc_bits: 32, collect_stats: true, ..Default::default() };
+            let mut d = DotEngine::new();
+            let mut st = OverflowStats::default();
+            eval_dot(&mut d, &cfg, &prods, Some(&mut st));
+            assert_eq!(st.hist_dots(), 1);
+            assert_eq!(
+                st.max_required_bits(),
+                want,
+                "{}: required-width recording",
+                policy.name()
+            );
+        }
+    }
+
+    #[test]
     fn argmax_and_accuracy() {
         let r = EvalResult {
             logits: vec![0.1, 0.9, 0.0, 0.8, 0.1, 0.1],
@@ -873,6 +988,65 @@ mod tests {
         assert_eq!(r.argmax(0), 1);
         assert_eq!(r.argmax(1), 0);
         assert!((r.accuracy(&[1, 2]) - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn plan_overrides_are_per_layer_and_clearable() {
+        let mut model = crate::models::synthetic_conv(2, 6, 6, 4, 10);
+        let cfg = EngineConfig { policy: Policy::Sorted, acc_bits: 16, ..Default::default() };
+        // no plan: every q-layer runs at the global default
+        let eng = Engine::new(&model, cfg);
+        let bits = eng.effective_layer_bits();
+        assert_eq!(bits.len(), 3);
+        assert!(bits.iter().all(|(_, b)| *b == 16));
+        // embed a plan: the engine applies it automatically
+        let plan = crate::plan::plan_model(&model, &crate::plan::PlannerConfig::default())
+            .expect("planner runs");
+        model.plan = Some(plan.clone());
+        let mut eng = Engine::new(&model, cfg);
+        for (name, b) in eng.effective_layer_bits() {
+            assert_eq!(Some(b), plan.bits_for_layer(&name), "layer {name}");
+        }
+        // clear_plan restores the global default (the calibration path)
+        eng.clear_plan();
+        assert!(eng.effective_layer_bits().iter().all(|(_, b)| *b == 16));
+        // re-applying after construction matches the embedded behaviour
+        eng.apply_plan(&plan);
+        for (name, b) in eng.effective_layer_bits() {
+            assert_eq!(Some(b), plan.bits_for_layer(&name), "layer {name}");
+        }
+    }
+
+    #[test]
+    fn plan_at_global_width_is_bit_identical_to_plan_free() {
+        // a plan that sets every layer to the global width must not change
+        // a single logit or stat — the override path is exactly the
+        // default path then
+        let mut model = crate::models::synthetic_conv(2, 6, 6, 4, 10);
+        let cfg = EngineConfig {
+            policy: Policy::Clip,
+            acc_bits: 14,
+            collect_stats: true,
+            ..Default::default()
+        };
+        let mut rng = Pcg32::new(0xB17);
+        let img: Vec<f32> = (0..2 * 6 * 6).map(|_| rng.f32()).collect();
+        let mut plain = Engine::new(&model, cfg);
+        let want = plain.forward(&img, 1).unwrap();
+        let base = crate::plan::plan_model(&model, &crate::plan::PlannerConfig::default()).unwrap();
+        let pinned = crate::plan::AccumPlan {
+            per_layer: base
+                .per_layer
+                .iter()
+                .map(|l| crate::plan::LayerPlan { acc_bits: 14, ..l.clone() })
+                .collect(),
+            ..base
+        };
+        model.plan = Some(pinned);
+        let mut planned = Engine::new(&model, cfg);
+        let got = planned.forward(&img, 1).unwrap();
+        assert_eq!(got.logits, want.logits);
+        assert_eq!(got.report.total(), want.report.total());
     }
 
     // Parallel-vs-serial bit-identity over a synthetic model is covered in

@@ -6,8 +6,15 @@
 //! persistent (the result itself cannot fit). Reports aggregate per layer
 //! and over a whole evaluation.
 
+/// Buckets of the per-dot required-width histogram: index = the minimal
+/// signed accumulator width (`accum::bits_for_value`) of a dot's EXACT
+/// value, clamped into the last bucket. 8-bit products over dots of
+/// length <= 65535 (`u16` sparse columns) never need more than 33 bits,
+/// so 40 buckets leave headroom.
+pub const BITS_HIST_BUCKETS: usize = 40;
+
 /// Counters over a set of dot products at one accumulator width.
-#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct OverflowStats {
     /// dot products evaluated
     pub dots: u64,
@@ -23,6 +30,29 @@ pub struct OverflowStats {
     pub policy_event_dots: u64,
     /// partial products processed (dot lengths summed, zeros skipped)
     pub products: u64,
+    /// histogram of the accumulator width each dot requires to run
+    /// *event-free under the engine's configured policy* (`bits_hist[p]`
+    /// = dots needing exactly `p` signed bits): the final exact value's
+    /// width for the sorting/exact policies, the index-order prefix
+    /// extremes for `Clip`/`Wrap` (see `nn::engine`'s stats path).
+    /// The calibration planner (`crate::plan`) binary-searches it for
+    /// the smallest width within an overflow budget.
+    pub bits_hist: [u64; BITS_HIST_BUCKETS],
+}
+
+impl Default for OverflowStats {
+    fn default() -> Self {
+        OverflowStats {
+            dots: 0,
+            naive_event_dots: 0,
+            naive_events: 0,
+            transient_dots: 0,
+            persistent_dots: 0,
+            policy_event_dots: 0,
+            products: 0,
+            bits_hist: [0; BITS_HIST_BUCKETS],
+        }
+    }
 }
 
 impl OverflowStats {
@@ -34,6 +64,60 @@ impl OverflowStats {
         self.persistent_dots += o.persistent_dots;
         self.policy_event_dots += o.policy_event_dots;
         self.products += o.products;
+        for (a, b) in self.bits_hist.iter_mut().zip(o.bits_hist.iter()) {
+            *a += *b;
+        }
+    }
+
+    /// Record that one dot's exact value needs `bits` signed accumulator
+    /// bits (see [`crate::accum::bits_for_value`]).
+    #[inline]
+    pub fn record_required_bits(&mut self, bits: u32) {
+        self.bits_hist[(bits as usize).min(BITS_HIST_BUCKETS - 1)] += 1;
+    }
+
+    /// Dots recorded in the required-width histogram.
+    pub fn hist_dots(&self) -> u64 {
+        self.bits_hist.iter().sum()
+    }
+
+    /// Widest requirement observed (0 when the histogram is empty).
+    pub fn max_required_bits(&self) -> u32 {
+        self.bits_hist
+            .iter()
+            .rposition(|&c| c > 0)
+            .map(|p| p as u32)
+            .unwrap_or(0)
+    }
+
+    /// Dots whose recorded requirement does NOT fit a `p`-bit accumulator
+    /// (i.e. would overflow at width `p` under the policy the histogram
+    /// was collected for).
+    pub fn dots_over_width(&self, p: u32) -> u64 {
+        self.bits_hist.iter().skip(p as usize + 1).sum()
+    }
+
+    /// Smallest accumulator width whose observed persistent-overflow
+    /// fraction stays within `budget` (0.0 = no observed overflow at all).
+    /// Binary search over the monotone predicate
+    /// `dots_over_width(p) <= budget * dots`; `None` when the histogram
+    /// is empty.
+    pub fn calibrated_bits(&self, budget: f64) -> Option<u32> {
+        let total = self.hist_dots();
+        if total == 0 {
+            return None;
+        }
+        let allowed = (budget.max(0.0) * total as f64).floor() as u64;
+        let (mut lo, mut hi) = (2u32, (BITS_HIST_BUCKETS - 1) as u32);
+        while lo < hi {
+            let mid = (lo + hi) / 2;
+            if self.dots_over_width(mid) <= allowed {
+                hi = mid;
+            } else {
+                lo = mid + 1;
+            }
+        }
+        Some(lo)
     }
 
     /// Fraction of overflowing dots that are transient (Fig. 2a).
@@ -66,6 +150,11 @@ pub struct OverflowReport {
 }
 
 impl OverflowReport {
+    /// Stats of one layer, if present.
+    pub fn layer(&self, name: &str) -> Option<&OverflowStats> {
+        self.layers.iter().find(|(n, _)| n == name).map(|(_, s)| s)
+    }
+
     pub fn layer_mut(&mut self, name: &str) -> &mut OverflowStats {
         if let Some(i) = self.layers.iter().position(|(n, _)| n == name) {
             &mut self.layers[i].1
@@ -131,6 +220,38 @@ mod tests {
         let clean = OverflowStats::default();
         assert_eq!(clean.transient_fraction(), 0.0);
         assert_eq!(clean.resolved_transient_fraction(), 1.0);
+    }
+
+    #[test]
+    fn required_bits_histogram_and_budget_search() {
+        let mut s = OverflowStats::default();
+        // 90 dots fit 12 bits, 9 need 14, 1 needs 20
+        for _ in 0..90 {
+            s.record_required_bits(12);
+        }
+        for _ in 0..9 {
+            s.record_required_bits(14);
+        }
+        s.record_required_bits(20);
+        assert_eq!(s.hist_dots(), 100);
+        assert_eq!(s.max_required_bits(), 20);
+        assert_eq!(s.dots_over_width(20), 0);
+        assert_eq!(s.dots_over_width(14), 1);
+        assert_eq!(s.dots_over_width(12), 10);
+        assert_eq!(s.dots_over_width(11), 100);
+        // zero budget: the width that holds everything observed
+        assert_eq!(s.calibrated_bits(0.0), Some(20));
+        // 1% budget tolerates the single 20-bit dot
+        assert_eq!(s.calibrated_bits(0.01), Some(14));
+        // 10% budget also tolerates the 14-bit dots
+        assert_eq!(s.calibrated_bits(0.10), Some(12));
+        assert_eq!(OverflowStats::default().calibrated_bits(0.0), None);
+        // merge adds histograms elementwise
+        let mut t = OverflowStats::default();
+        t.record_required_bits(12);
+        t.merge(&s);
+        assert_eq!(t.bits_hist[12], 91);
+        assert_eq!(t.hist_dots(), 101);
     }
 
     #[test]

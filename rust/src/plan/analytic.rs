@@ -1,0 +1,214 @@
+//! Analytic per-layer accumulator bound (A2Q-style, generalized).
+//!
+//! For a quantized layer the engine accumulates offset-free products
+//! `w_j * x~_j` where `x~_j = x_q - o_x` ranges over the *centered* input
+//! window `[xlo, xhi]` (see `quant::quantize_centered_slice_into`; the
+//! window always contains 0 because FP32 zero quantizes to integer 0).
+//! Treating every input coordinate adversarially and independently, the
+//! worst-case contribution of weight `w_j` to the running sum is
+//!
+//! ```text
+//!   m_j = max(w_j * xlo, w_j * xhi)   (>= 0 when 0 in [xlo, xhi])
+//!   n_j = min(w_j * xlo, w_j * xhi)   (<= 0 when 0 in [xlo, xhi])
+//! ```
+//!
+//! * **Final-sum bound** (policies `Exact`/`Sorted`/`Sorted1`/`Oracle`):
+//!   the exact dot product lies in `[Σ n_j, Σ m_j]`; a width holding that
+//!   interval guarantees **zero persistent overflows** — and since the
+//!   sorted policies return `clamp(exact)`, their outputs are then exact.
+//!   For ReLU-positive inputs (`[0, 2^a - 1]`) this reduces to the A2Q
+//!   ℓ1-norm-over-rows bound: `Σ m_j = (2^a - 1) * Σ w_j^+`,
+//!   `Σ n_j = -(2^a - 1) * Σ w_j^-`.
+//! * **Prefix bound** (policies `Clip`/`Wrap`, which accumulate in index
+//!   order): every index-order prefix sum lies in
+//!   `[min_i Σ_{j<=i} n_j, max_i Σ_{j<=i} m_j]`; a width holding that
+//!   interval guarantees **zero overflow events of any kind**, so the
+//!   clipped/wrapped value equals the exact sum. Because the centered
+//!   window spans zero (`m_j >= 0 >= n_j`), the prefix extremes coincide
+//!   with the final sums — the code still tracks true prefixes so the
+//!   guarantee is honest for any window.
+//!
+//! Pruning only removes terms (a zero weight contributes `m_j = n_j = 0`),
+//! so both bounds are monotone non-increasing in sparsity: prune more,
+//! plan a narrower accumulator (property-tested below).
+
+use crate::accum::{self, Policy};
+use crate::nn::QLayer;
+use crate::quant::QParams;
+
+/// The centered integer window `[qlo - o, qhi - o]` the accumulator sees.
+pub fn centered_input_range(qp: &QParams) -> (i64, i64) {
+    let (qlo, qhi) = qp.qrange();
+    ((qlo - qp.offset) as i64, (qhi - qp.offset) as i64)
+}
+
+/// Worst-case accumulator interval of `layer` under `policy` (see the
+/// module docs: final-sum interval for the sorting policies, index-order
+/// prefix interval for `Clip`/`Wrap`). Always contains 0 (the
+/// accumulator's start value).
+pub fn analytic_layer_range(layer: &QLayer, policy: Policy) -> (i64, i64) {
+    let (xlo, xhi) = centered_input_range(&layer.x_qp);
+    let sequential = matches!(policy, Policy::Clip | Policy::Wrap);
+    let (mut worst_lo, mut worst_hi) = (0i64, 0i64);
+    for r in 0..layer.w.rows {
+        let (_, vals) = layer.w.row(r);
+        // running worst-case sums over the row's nonzero products, in the
+        // exact order the engine accumulates them (dense column order)
+        let (mut lo, mut hi) = (0i64, 0i64);
+        let (mut row_lo, mut row_hi) = (0i64, 0i64);
+        for &v in vals {
+            let a = v as i64 * xlo;
+            let b = v as i64 * xhi;
+            hi += a.max(b);
+            lo += a.min(b);
+            if sequential {
+                row_hi = row_hi.max(hi);
+                row_lo = row_lo.min(lo);
+            }
+        }
+        if !sequential {
+            row_lo = lo.min(0);
+            row_hi = hi.max(0);
+        }
+        worst_lo = worst_lo.min(row_lo);
+        worst_hi = worst_hi.max(row_hi);
+    }
+    (worst_lo, worst_hi)
+}
+
+/// Minimal accumulator width with the per-policy guarantee of
+/// [`analytic_layer_range`]: zero persistent overflows for the sorting
+/// policies, zero overflow events at all for `Clip`/`Wrap`.
+pub fn analytic_layer_bits(layer: &QLayer, policy: Policy) -> u32 {
+    let (lo, hi) = analytic_layer_range(layer, policy);
+    accum::bits_for_range(lo, hi)
+}
+
+/// Largest number of nonzero weights any single output row (dot product)
+/// of `layer` carries — the effective dot length after pruning.
+pub fn max_row_nnz(layer: &QLayer) -> usize {
+    (0..layer.w.rows).map(|r| layer.w.row(r).0.len()).max().unwrap_or(0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dot::DotEngine;
+    use crate::formats::pqsw::QLayerMeta;
+    use crate::util::rng::Pcg32;
+
+    fn layer_from(wq: Vec<i8>, oc: usize, k: usize, x_offset: i32, abits: u8) -> QLayer {
+        let meta = QLayerMeta {
+            name: "t".into(),
+            oc,
+            ic: k,
+            kh: 1,
+            kw: 1,
+            stride: 1,
+            pad: 0,
+            prune: true,
+            w_scale: 0.1,
+            x_scale: 0.01,
+            x_offset,
+            wq,
+            k,
+            bias: vec![0.0; oc],
+        };
+        QLayer::from_meta(&meta, abits, 0)
+    }
+
+    #[test]
+    fn hand_computed_relu_bound_matches_l1_norm() {
+        // ReLU window [0, 255]: hi = 255 * sum(w+), lo = -255 * sum(w-)
+        let l = layer_from(vec![3, -2, 0, 5], 1, 4, -128, 8);
+        let (lo, hi) = analytic_layer_range(&l, Policy::Sorted);
+        assert_eq!(hi, 255 * (3 + 5));
+        assert_eq!(lo, -255 * 2);
+        assert_eq!(analytic_layer_bits(&l, Policy::Sorted), accum::bits_for_range(lo, hi));
+        // clip's prefix bound coincides when the window spans zero
+        assert_eq!(analytic_layer_range(&l, Policy::Clip), (lo, hi));
+        assert_eq!(max_row_nnz(&l), 3);
+    }
+
+    #[test]
+    fn planned_width_has_zero_persistent_and_clean_clip_prop() {
+        // random sparse layers x random inputs in the centered window:
+        // at the analytic width, the exact value always fits (no
+        // persistent overflow) for every policy, and Clip/Wrap see zero
+        // events (their prefix guarantee)
+        let mut rng = Pcg32::new(0x9_1A_17);
+        let mut eng = DotEngine::new();
+        for case in 0..60 {
+            let k = 8 + rng.below(96) as usize;
+            let oc = 1 + rng.below(4) as usize;
+            let wq: Vec<i8> = (0..oc * k)
+                .map(|_| {
+                    if rng.below(3) == 0 {
+                        0
+                    } else {
+                        rng.range_i64(-127, 127) as i8
+                    }
+                })
+                .collect();
+            let x_offset = if rng.below(2) == 0 { -128 } else { 0 };
+            let l = layer_from(wq, oc, k, x_offset, 8);
+            let (xlo, xhi) = centered_input_range(&l.x_qp);
+            for policy in Policy::ALL {
+                let p = analytic_layer_bits(&l, policy);
+                let (lo, hi) = accum::acc_range(p);
+                for trial in 0..20 {
+                    let x: Vec<i32> =
+                        (0..k).map(|_| rng.range_i64(xlo, xhi) as i32).collect();
+                    for o in 0..oc {
+                        let mut prods = Vec::new();
+                        l.w.dot_products_into(o, &x, &mut prods);
+                        let exact = accum::exact_dot(&prods);
+                        assert!(
+                            exact >= lo && exact <= hi,
+                            "case {case} trial {trial} {}: exact {exact} escapes \
+                             [{lo},{hi}] at planned p={p}",
+                            policy.name()
+                        );
+                        if matches!(policy, Policy::Clip | Policy::Wrap) {
+                            let (v, ev) = eng.dot(&prods, p, policy);
+                            assert_eq!(ev, 0, "case {case}: {} events at p={p}", policy.name());
+                            assert_eq!(v, exact, "case {case}: clean {} must be exact", policy.name());
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn planned_width_is_monotone_in_sparsity() {
+        // zeroing weights (pruning harder) never widens the plan
+        let mut rng = Pcg32::new(0x5_9A_25);
+        for _ in 0..40 {
+            let k = 16 + rng.below(64) as usize;
+            let mut wq: Vec<i8> = (0..2 * k).map(|_| rng.range_i64(-127, 127) as i8).collect();
+            let l = layer_from(wq.clone(), 2, k, -128, 8);
+            let mut prev: Vec<u32> =
+                Policy::ALL.iter().map(|&p| analytic_layer_bits(&l, p)).collect();
+            // prune in 4 rounds, checking monotonicity at each step
+            for _ in 0..4 {
+                for v in wq.iter_mut() {
+                    if rng.below(3) == 0 {
+                        *v = 0;
+                    }
+                }
+                let l = layer_from(wq.clone(), 2, k, -128, 8);
+                let now: Vec<u32> =
+                    Policy::ALL.iter().map(|&p| analytic_layer_bits(&l, p)).collect();
+                for (i, (&n, &pv)) in now.iter().zip(prev.iter()).enumerate() {
+                    assert!(
+                        n <= pv,
+                        "{}: pruning widened the plan {pv} -> {n}",
+                        Policy::ALL[i].name()
+                    );
+                }
+                prev = now;
+            }
+        }
+    }
+}

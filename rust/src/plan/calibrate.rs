@@ -1,0 +1,131 @@
+//! Calibration runs for the accumulator-bitwidth planner.
+//!
+//! Protocol: stream a deterministic sample set through the instrumented
+//! engine at a **wide reference width** ([`CALIBRATION_BITS`]) with the
+//! target policy. At that width nothing overflows, so every layer's
+//! activations match the overflow-free behaviour the planned model should
+//! exhibit — and the stats path records, per layer, the histogram of the
+//! signed width each dot product requires to run *event-free under that
+//! policy* (`OverflowStats::bits_hist`): the final exact value's width
+//! for the sorting/exact policies, the index-order prefix extremes for
+//! `Clip`/`Wrap` (whose saturation is order-dependent — a cancelling dot
+//! can need a far wider accumulator than its final value suggests). The
+//! planner then binary-searches each histogram for the smallest width
+//! whose observed overflow fraction stays within the configured budget
+//! (`OverflowStats::calibrated_bits`). With a zero budget, replaying the
+//! calibration inputs at the calibrated widths is therefore event-free
+//! end to end, for every policy.
+//!
+//! Samples are uniform pixels in `[0, 1]` from a seeded PCG stream, so a
+//! calibration run is reproducible on any checkout without artifacts.
+//! Callers with real data can pass their own batches through
+//! [`observe_batches`].
+
+use anyhow::Result;
+
+use crate::accum::Policy;
+use crate::formats::pqsw::PqswModel;
+use crate::nn::engine::{Engine, EngineConfig};
+use crate::overflow::OverflowReport;
+use crate::util::rng::Pcg32;
+
+/// Wide reference width used during calibration: comfortably above the
+/// 33-bit worst case of 8-bit products over `u16`-indexed dots, so the
+/// observation run itself never overflows.
+pub const CALIBRATION_BITS: u32 = 40;
+
+/// Build the instrumented wide-reference engine for `model`.
+fn reference_engine(model: &PqswModel, policy: Policy) -> Engine {
+    let cfg = EngineConfig {
+        policy,
+        acc_bits: CALIBRATION_BITS,
+        tile: 0,
+        collect_stats: true,
+    };
+    let mut eng = Engine::new(model, cfg);
+    // calibration measures the model itself, not a previously embedded
+    // plan: drop any per-layer overrides so the run is genuinely wide
+    eng.clear_plan();
+    eng
+}
+
+/// Stream `samples` deterministic uniform-random inputs through the
+/// instrumented engine and return the merged per-layer report (with the
+/// required-width histograms populated).
+pub fn observe(
+    model: &PqswModel,
+    policy: Policy,
+    samples: usize,
+    batch: usize,
+    seed: u64,
+) -> Result<OverflowReport> {
+    let dim: usize = model.input_shape.iter().product();
+    let mut rng = Pcg32::new(seed);
+    let batch = batch.max(1);
+    let mut eng = reference_engine(model, policy);
+    let mut report = OverflowReport::default();
+    let mut done = 0usize;
+    while done < samples {
+        let n = batch.min(samples - done);
+        let imgs: Vec<f32> = (0..n * dim).map(|_| rng.f32()).collect();
+        let out = eng.forward(&imgs, n)?;
+        report.merge(&out.report);
+        done += n;
+    }
+    Ok(report)
+}
+
+/// [`observe`] over caller-provided image batches (each `(images, n)` with
+/// `images.len() == n * input_dim`) — the real-data calibration path.
+pub fn observe_batches<'a, I>(
+    model: &PqswModel,
+    policy: Policy,
+    batches: I,
+) -> Result<OverflowReport>
+where
+    I: IntoIterator<Item = (&'a [f32], usize)>,
+{
+    let mut eng = reference_engine(model, policy);
+    let mut report = OverflowReport::default();
+    for (imgs, n) in batches {
+        let out = eng.forward(imgs, n)?;
+        report.merge(&out.report);
+    }
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models;
+
+    #[test]
+    fn observation_is_deterministic_and_wide() {
+        let model = models::synthetic_linear(32, 4);
+        let a = observe(&model, Policy::Sorted, 20, 8, 7).unwrap();
+        let b = observe(&model, Policy::Sorted, 20, 8, 7).unwrap();
+        assert_eq!(a.layers, b.layers, "same seed, same observation");
+        let t = a.total();
+        assert_eq!(t.dots, 20 * 4);
+        assert_eq!(t.persistent_dots, 0, "the reference run must be overflow-free");
+        assert_eq!(t.hist_dots(), t.dots, "every dot lands in the width histogram");
+        assert!(t.max_required_bits() >= 2);
+    }
+
+    #[test]
+    fn batches_path_matches_generated_path() {
+        let model = models::synthetic_linear(16, 3);
+        let dim = 16;
+        let mut rng = Pcg32::new(3);
+        let imgs: Vec<f32> = (0..10 * dim).map(|_| rng.f32()).collect();
+        let via_batches = observe_batches(
+            &model,
+            Policy::Clip,
+            [(&imgs[..4 * dim], 4usize), (&imgs[4 * dim..], 6usize)],
+        )
+        .unwrap();
+        let mut eng = reference_engine(&model, Policy::Clip);
+        let whole = eng.forward(&imgs, 10).unwrap();
+        assert_eq!(via_batches.total(), whole.report.total());
+    }
+}

@@ -1,0 +1,428 @@
+//! Accumulator-bitwidth planning (the paper's headline 2.5× accumulator
+//! reduction as a first-class, serving-integrated subsystem).
+//!
+//! `EngineConfig::acc_bits` is one global number; this module derives a
+//! **per-layer** width plan with explicit guarantees and threads it
+//! through the whole stack:
+//!
+//! * [`analytic`] — the worst-case bound. Given the quantized weights and
+//!   the layer's centered input window, it computes the minimal width
+//!   that *guarantees* no persistent overflow (sorting policies) or no
+//!   overflow events at all (`Clip`/`Wrap`, via an index-order prefix
+//!   bound). See the module docs there for the derivation; for
+//!   ReLU-positive inputs it reduces to the A2Q ℓ1-norm-over-rows bound.
+//! * [`calibrate`] — the empirical tightener. A deterministic sample set
+//!   streams through the instrumented engine at a wide reference width;
+//!   each layer's stats record a histogram of the width every dot needs
+//!   to run event-free under the target policy (final exact value for
+//!   the sorting policies, index-order prefix extremes for `Clip`/`Wrap`
+//!   — mirroring the per-policy analytic guarantee), and the planner
+//!   binary-searches it for the smallest width whose observed overflow
+//!   fraction stays within
+//!   [`PlannerConfig::budget`]. [`PlannerConfig::margin`] safety bits are
+//!   then added on top (headroom for inputs the sample set missed), and
+//!   the result is capped at the analytic width — calibration can only
+//!   ever *tighten* the guarantee, never loosen it. PQS's sort-then-clip
+//!   policies make this empirical width markedly tighter than the
+//!   worst-case bound (transient overflows are resolved by sorting, so
+//!   only the final-sum distribution matters).
+//!
+//! The output [`AccumPlan`] is persisted as a versioned optional section
+//! of the `.pqsw` container (old files keep loading; see
+//! `formats::pqsw`), surfaced in manifests, applied automatically by
+//! `nn::Engine` (per-layer widths override the global `acc_bits`;
+//! behaviour is bit-identical when no plan is present), and reported per
+//! model by `GET /v1/models`. The `pqs plan` CLI subcommand runs both
+//! planners and prints the per-layer table plus the total
+//! accumulator-bit savings versus a 32-bit baseline.
+
+pub mod analytic;
+pub mod calibrate;
+
+use anyhow::{anyhow, Result};
+
+use crate::accum::Policy;
+use crate::formats::pqsw::PqswModel;
+use crate::nn::QLayer;
+use crate::util::json::{self, Json};
+
+pub use analytic::{analytic_layer_bits, analytic_layer_range, centered_input_range, max_row_nnz};
+pub use calibrate::{observe, observe_batches, CALIBRATION_BITS};
+
+/// Which planner produced a plan's enforced widths.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PlannerKind {
+    /// Worst-case widths only (guaranteed, input-independent).
+    Analytic,
+    /// Calibrated widths (empirical + margin, capped at the analytic
+    /// bound).
+    Calibrated,
+}
+
+impl PlannerKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            PlannerKind::Analytic => "analytic",
+            PlannerKind::Calibrated => "calibrated",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<PlannerKind> {
+        match s {
+            "analytic" => Some(PlannerKind::Analytic),
+            "calibrated" => Some(PlannerKind::Calibrated),
+            _ => None,
+        }
+    }
+}
+
+/// One layer's row in an [`AccumPlan`].
+#[derive(Clone, Debug, PartialEq)]
+pub struct LayerPlan {
+    /// q-layer name (plans match engine layers by name).
+    pub name: String,
+    /// contraction length (dot-product length before pruning)
+    pub k: usize,
+    /// largest effective (post-pruning) dot length of any output row
+    pub nnz_max: usize,
+    /// worst-case analytic width (the guarantee)
+    pub analytic_bits: u32,
+    /// calibrated width incl. safety margin (`None` = analytic-only plan)
+    pub calibrated_bits: Option<u32>,
+    /// the width the engine enforces for this layer
+    pub acc_bits: u32,
+}
+
+/// Compact per-model plan description for the serving surfaces
+/// (`GET /v1/models`, manifests, `RouterMetrics`).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct PlanSummary {
+    pub layers: usize,
+    pub min_bits: u32,
+    pub max_bits: u32,
+    pub mean_bits: f64,
+    pub planner: PlannerKind,
+}
+
+/// A per-layer accumulator-bitwidth plan (see the module docs).
+#[derive(Clone, Debug, PartialEq)]
+pub struct AccumPlan {
+    /// accumulation policy the widths were planned for
+    pub policy: Policy,
+    pub planner: PlannerKind,
+    /// allowed fraction of dots overflowing at the calibrated width
+    pub budget: f64,
+    /// safety bits added on top of the raw calibrated width
+    pub margin: u32,
+    /// calibration samples observed (0 for analytic-only plans)
+    pub samples: usize,
+    /// rows in model graph order
+    pub per_layer: Vec<LayerPlan>,
+}
+
+impl AccumPlan {
+    /// Enforced width for layer `name`, if planned.
+    pub fn bits_for_layer(&self, name: &str) -> Option<u32> {
+        self.per_layer.iter().find(|l| l.name == name).map(|l| l.acc_bits)
+    }
+
+    /// Sum of enforced per-layer widths.
+    pub fn total_bits(&self) -> u64 {
+        self.per_layer.iter().map(|l| l.acc_bits as u64).sum()
+    }
+
+    /// The 32-bit-per-layer baseline the savings are quoted against.
+    pub fn baseline_bits(&self) -> u64 {
+        32 * self.per_layer.len() as u64
+    }
+
+    pub fn summary(&self) -> PlanSummary {
+        let n = self.per_layer.len();
+        PlanSummary {
+            layers: n,
+            min_bits: self.per_layer.iter().map(|l| l.acc_bits).min().unwrap_or(0),
+            max_bits: self.per_layer.iter().map(|l| l.acc_bits).max().unwrap_or(0),
+            mean_bits: if n == 0 {
+                0.0
+            } else {
+                self.total_bits() as f64 / n as f64
+            },
+            planner: self.planner,
+        }
+    }
+
+    /// The per-layer table + savings line the `pqs plan` CLI prints.
+    pub fn print(&self) {
+        println!(
+            "plan: policy={} planner={} samples={} budget={} margin={}",
+            self.policy.name(),
+            self.planner.name(),
+            self.samples,
+            self.budget,
+            self.margin,
+        );
+        println!(
+            "{:<14} {:>8} {:>8} {:>9} {:>11} {:>8}",
+            "layer", "k", "nnz/row", "analytic", "calibrated", "planned"
+        );
+        for l in &self.per_layer {
+            let cal = match l.calibrated_bits {
+                Some(c) => c.to_string(),
+                None => "-".to_string(),
+            };
+            println!(
+                "{:<14} {:>8} {:>8} {:>9} {:>11} {:>8}",
+                l.name, l.k, l.nnz_max, l.analytic_bits, cal, l.acc_bits
+            );
+        }
+        let total = self.total_bits();
+        let base = self.baseline_bits();
+        if base > 0 {
+            println!(
+                "total accumulator bits: {total} planned vs {base} at the 32-bit baseline \
+                 ({:.2}x reduction, mean {:.1} bits/layer)",
+                base as f64 / total.max(1) as f64,
+                self.summary().mean_bits,
+            );
+        }
+    }
+
+    /// Serialize as the `.pqsw` `"plan"` section (tag included).
+    pub fn to_json(&self) -> Json {
+        let layers: Vec<Json> = self
+            .per_layer
+            .iter()
+            .map(|l| {
+                json::obj(vec![
+                    ("name", json::s(&l.name)),
+                    ("k", json::num(l.k as f64)),
+                    ("nnz_max", json::num(l.nnz_max as f64)),
+                    ("analytic_bits", json::num(l.analytic_bits as f64)),
+                    (
+                        "calibrated_bits",
+                        match l.calibrated_bits {
+                            Some(c) => json::num(c as f64),
+                            None => Json::Null,
+                        },
+                    ),
+                    ("acc_bits", json::num(l.acc_bits as f64)),
+                ])
+            })
+            .collect();
+        json::obj(vec![
+            ("tag", json::s("plan")),
+            ("v", json::num(1.0)),
+            ("policy", json::s(self.policy.name())),
+            ("planner", json::s(self.planner.name())),
+            ("budget", json::num(self.budget)),
+            ("margin", json::num(self.margin as f64)),
+            ("samples", json::num(self.samples as f64)),
+            ("layers", Json::Arr(layers)),
+        ])
+    }
+
+    /// Parse a `"plan"` section back (inverse of [`AccumPlan::to_json`]).
+    pub fn from_json(j: &Json) -> Result<AccumPlan> {
+        let policy_name = j.get("policy").and_then(Json::as_str).unwrap_or("");
+        let policy = Policy::from_name(policy_name)
+            .ok_or_else(|| anyhow!("plan section: unknown policy {policy_name:?}"))?;
+        let planner_name = j.get("planner").and_then(Json::as_str).unwrap_or("");
+        let planner = PlannerKind::from_name(planner_name)
+            .ok_or_else(|| anyhow!("plan section: unknown planner {planner_name:?}"))?;
+        let mut per_layer = Vec::new();
+        for l in j
+            .get("layers")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("plan section: missing layers array"))?
+        {
+            let name = l
+                .get("name")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow!("plan layer: missing name"))?
+                .to_string();
+            let acc_bits = l
+                .get("acc_bits")
+                .and_then(Json::as_usize)
+                .ok_or_else(|| anyhow!("plan layer {name:?}: missing acc_bits"))?
+                as u32;
+            per_layer.push(LayerPlan {
+                name,
+                k: l.get("k").and_then(Json::as_usize).unwrap_or(0),
+                nnz_max: l.get("nnz_max").and_then(Json::as_usize).unwrap_or(0),
+                analytic_bits: l
+                    .get("analytic_bits")
+                    .and_then(Json::as_usize)
+                    .unwrap_or(acc_bits as usize) as u32,
+                calibrated_bits: l
+                    .get("calibrated_bits")
+                    .and_then(Json::as_usize)
+                    .map(|v| v as u32),
+                acc_bits,
+            });
+        }
+        Ok(AccumPlan {
+            policy,
+            planner,
+            budget: j.get("budget").and_then(Json::as_f64).unwrap_or(0.0),
+            margin: j.get("margin").and_then(Json::as_usize).unwrap_or(0) as u32,
+            samples: j.get("samples").and_then(Json::as_usize).unwrap_or(0),
+            per_layer,
+        })
+    }
+}
+
+/// Planner knobs (see the module docs for semantics).
+#[derive(Clone, Copy, Debug)]
+pub struct PlannerConfig {
+    /// accumulation policy the plan targets
+    pub policy: Policy,
+    /// calibration samples to stream (0 = analytic-only plan)
+    pub calibrate_samples: usize,
+    /// allowed fraction of dots whose exact value may exceed the
+    /// calibrated width (0.0 = no observed overflow tolerated)
+    pub budget: f64,
+    /// safety bits added to the raw calibrated width (headroom for inputs
+    /// the sample set missed); never pushes past the analytic bound
+    pub margin: u32,
+    /// calibration forward batch size
+    pub batch: usize,
+    /// calibration input stream seed
+    pub seed: u64,
+}
+
+impl Default for PlannerConfig {
+    fn default() -> Self {
+        PlannerConfig {
+            policy: Policy::Sorted,
+            calibrate_samples: 0,
+            budget: 0.0,
+            margin: 1,
+            batch: 32,
+            seed: 0x9A17,
+        }
+    }
+}
+
+/// Run the planner(s) over `model` and assemble its [`AccumPlan`]:
+/// analytic widths always, calibrated widths when
+/// `cfg.calibrate_samples > 0` (capped at the analytic bound, floored at
+/// 2 bits). Layers are matched by q-layer name, in graph order.
+pub fn plan_model(model: &PqswModel, cfg: &PlannerConfig) -> Result<AccumPlan> {
+    let mut per_layer = Vec::new();
+    for (_, meta) in model.q_layers() {
+        let ql = QLayer::from_meta(meta, model.abits, model.nm_m);
+        let analytic_bits = analytic_layer_bits(&ql, cfg.policy);
+        per_layer.push(LayerPlan {
+            name: ql.name.clone(),
+            k: ql.k,
+            nnz_max: max_row_nnz(&ql),
+            analytic_bits,
+            calibrated_bits: None,
+            acc_bits: analytic_bits,
+        });
+    }
+    if per_layer.is_empty() {
+        return Err(anyhow!("model {:?} has no quantized layers to plan", model.name));
+    }
+    let mut planner = PlannerKind::Analytic;
+    if cfg.calibrate_samples > 0 {
+        planner = PlannerKind::Calibrated;
+        let report = calibrate::observe(
+            model,
+            cfg.policy,
+            cfg.calibrate_samples,
+            cfg.batch,
+            cfg.seed,
+        )?;
+        for lp in per_layer.iter_mut() {
+            let observed = report
+                .layer(&lp.name)
+                .and_then(|st| st.calibrated_bits(cfg.budget))
+                .ok_or_else(|| {
+                    anyhow!(
+                        "calibration observed no dots for layer {:?} (duplicate or \
+                         renamed layer?)",
+                        lp.name
+                    )
+                })?;
+            let cal = (observed + cfg.margin).clamp(2, lp.analytic_bits);
+            lp.calibrated_bits = Some(cal);
+            lp.acc_bits = cal;
+        }
+    }
+    Ok(AccumPlan {
+        policy: cfg.policy,
+        planner,
+        budget: cfg.budget,
+        margin: cfg.margin,
+        samples: cfg.calibrate_samples,
+        per_layer,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models;
+
+    #[test]
+    fn analytic_plan_covers_every_q_layer_in_order() {
+        let model = models::synthetic_conv(2, 8, 8, 4, 10);
+        let plan = plan_model(&model, &PlannerConfig::default()).unwrap();
+        let names: Vec<&str> = plan.per_layer.iter().map(|l| l.name.as_str()).collect();
+        assert_eq!(names, vec!["conv1", "dw2", "fc"]);
+        assert_eq!(plan.planner, PlannerKind::Analytic);
+        for l in &plan.per_layer {
+            assert!(l.analytic_bits >= 2 && l.analytic_bits <= 33, "{:?}", l);
+            assert_eq!(l.acc_bits, l.analytic_bits);
+            assert_eq!(l.calibrated_bits, None);
+            assert!(l.nnz_max <= l.k);
+        }
+        let s = plan.summary();
+        assert_eq!(s.layers, 3);
+        assert!(s.min_bits <= s.max_bits);
+        assert!(s.mean_bits >= s.min_bits as f64 && s.mean_bits <= s.max_bits as f64);
+    }
+
+    #[test]
+    fn calibrated_plan_is_at_most_the_analytic_bound() {
+        let model = models::synthetic_linear(64, 10);
+        let cfg = PlannerConfig { calibrate_samples: 64, ..Default::default() };
+        let plan = plan_model(&model, &cfg).unwrap();
+        assert_eq!(plan.planner, PlannerKind::Calibrated);
+        for l in &plan.per_layer {
+            let cal = l.calibrated_bits.expect("calibration ran");
+            assert!(cal <= l.analytic_bits, "calibrated {cal} > analytic {}", l.analytic_bits);
+            assert_eq!(l.acc_bits, cal);
+            assert!(cal >= 2);
+        }
+    }
+
+    #[test]
+    fn plan_json_roundtrips() {
+        let model = models::synthetic_conv(2, 6, 6, 4, 10);
+        let cfg = PlannerConfig { calibrate_samples: 16, margin: 2, budget: 0.001, ..Default::default() };
+        let plan = plan_model(&model, &cfg).unwrap();
+        let txt = plan.to_json().to_string();
+        let back = AccumPlan::from_json(&Json::parse(&txt).unwrap()).unwrap();
+        assert_eq!(back, plan);
+        // bits_for_layer resolves by name
+        assert_eq!(plan.bits_for_layer("fc"), Some(plan.per_layer[2].acc_bits));
+        assert_eq!(plan.bits_for_layer("nope"), None);
+        // savings arithmetic
+        assert_eq!(plan.baseline_bits(), 96);
+        assert!(plan.total_bits() < plan.baseline_bits());
+    }
+
+    #[test]
+    fn bad_plan_sections_are_rejected() {
+        let bad = Json::parse(r#"{"tag":"plan","policy":"bogus","planner":"analytic","layers":[]}"#)
+            .unwrap();
+        assert!(AccumPlan::from_json(&bad).is_err());
+        let bad = Json::parse(r#"{"tag":"plan","policy":"sorted","planner":"x","layers":[]}"#)
+            .unwrap();
+        assert!(AccumPlan::from_json(&bad).is_err());
+        let bad = Json::parse(r#"{"tag":"plan","policy":"sorted","planner":"analytic"}"#).unwrap();
+        assert!(AccumPlan::from_json(&bad).is_err());
+    }
+}

@@ -73,7 +73,12 @@ fn start_http_multi() -> HttpServer {
         "aux",
         ModelSource::Synthetic(SyntheticSpec::Conv { c: 2, h: 6, w: 6, oc: 4, classes: CLASSES }),
     );
-    let rcfg = RouterConfig { max_loaded: 0, engine: EngineConfig::default(), server: scfg() };
+    let rcfg = RouterConfig {
+        max_loaded: 0,
+        engine: EngineConfig::default(),
+        server: scfg(),
+        preload: Vec::new(),
+    };
     let router = Router::new(registry, rcfg).expect("registry is non-empty");
     HttpServer::start(router, "127.0.0.1:0", hcfg()).expect("bind loopback")
 }
@@ -633,6 +638,68 @@ fn metrics_endpoint_nests_router_models_and_http_sections() {
     assert_eq!(http_section.get("accepted").and_then(Json::as_usize), Some(1));
     assert_eq!(http_section.get("shed").and_then(Json::as_usize), Some(0));
     assert_eq!(http_section.get("read_timeouts").and_then(Json::as_usize), Some(0));
+    http.shutdown();
+}
+
+#[test]
+fn models_endpoint_reports_the_embedded_plan() {
+    // a Memory-source model with an embedded accumulator plan reports its
+    // summary in GET /v1/models (pre-load for in-memory sources); a
+    // plan-free model reports null
+    let mut model = common::tiny_linear_model(DIM, CLASSES);
+    let plan = pqs::plan::plan_model(&model, &pqs::plan::PlannerConfig::default())
+        .expect("planner runs on the synthetic model");
+    model.plan = Some(plan.clone());
+    let mut registry = ModelRegistry::new();
+    registry.register("planned", ModelSource::Memory(model));
+    registry.register("planfree", ModelSource::Memory(common::tiny_linear_model(DIM, CLASSES)));
+    let rcfg = RouterConfig {
+        max_loaded: 0,
+        engine: EngineConfig::default(),
+        server: scfg(),
+        preload: Vec::new(),
+    };
+    let router = Router::new(registry, rcfg).expect("registry is non-empty");
+    let http = HttpServer::start(router, "127.0.0.1:0", hcfg()).expect("bind loopback");
+    let mut c = Client::connect(&http);
+    let fetch_plan = |c: &mut Client, name: &str| -> Json {
+        c.send(b"GET /v1/models HTTP/1.1\r\n\r\n");
+        let r = c.read_response();
+        assert_eq!(r.status, 200);
+        r.json()
+            .get("models")
+            .and_then(Json::as_arr)
+            .expect("models array")
+            .iter()
+            .find(|m| m.get("name").and_then(Json::as_str) == Some(name))
+            .unwrap_or_else(|| panic!("{name} row missing"))
+            .get("plan")
+            .expect("plan field present on every row")
+            .clone()
+    };
+    let want = plan.summary();
+    let pj = fetch_plan(&mut c, "planned");
+    assert_eq!(pj.get("planner").and_then(Json::as_str), Some("analytic"));
+    assert_eq!(pj.get("layers").and_then(Json::as_usize), Some(want.layers));
+    assert_eq!(
+        pj.get("min_bits").and_then(Json::as_usize),
+        Some(want.min_bits as usize)
+    );
+    assert_eq!(
+        pj.get("max_bits").and_then(Json::as_usize),
+        Some(want.max_bits as usize)
+    );
+    assert!(fetch_plan(&mut c, "planfree").is_null(), "plan-free models report null");
+    // serve one routed request so "planned" loads, then re-fetch: the
+    // live incarnation reports the same summary
+    c.send(&post_classify(&classify_body_for(DIM, 1, 1, "planned")));
+    assert_eq!(c.read_response().status, 200);
+    let pj = fetch_plan(&mut c, "planned");
+    assert_eq!(pj.get("layers").and_then(Json::as_usize), Some(want.layers));
+    assert_eq!(
+        pj.get("min_bits").and_then(Json::as_usize),
+        Some(want.min_bits as usize)
+    );
     http.shutdown();
 }
 

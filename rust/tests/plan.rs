@@ -1,0 +1,253 @@
+//! Accumulator-bitwidth planner acceptance suite (artifact-free).
+//!
+//! The ISSUE 5 contract, end to end on `models::synthetic_conv`:
+//! every layer's analytic width is <= 32, the calibrated width is <= the
+//! analytic width, an engine forward at the planned widths reports ZERO
+//! persistent overflows across a 1k-input sweep, a `.pqsw` round-trip
+//! (save with plan -> load -> serve via Router) applies the plan and
+//! reports it in the fleet listing, and plan-free `.pqsw` files remain
+//! bit-identical to the unplanned engine.
+
+mod common;
+
+use pqs::accum::Policy;
+use pqs::coordinator::{
+    ClassifyRequest, ModelRegistry, ModelSource, Router, RouterConfig, ServerConfig,
+};
+use pqs::formats::pqsw::PqswModel;
+use pqs::nn::engine::{Engine, EngineConfig};
+use pqs::plan::{plan_model, PlannerConfig, PlannerKind};
+use pqs::util::rng::Pcg32;
+use std::time::Duration;
+
+/// The 1k-input sweep of the acceptance criterion, batched.
+fn sweep(eng: &mut Engine, dim: usize, inputs: usize, seed: u64) -> pqs::overflow::OverflowStats {
+    let mut rng = Pcg32::new(seed);
+    let batch = 50;
+    let mut total = pqs::overflow::OverflowStats::default();
+    let mut done = 0;
+    while done < inputs {
+        let n = batch.min(inputs - done);
+        let imgs: Vec<f32> = (0..n * dim).map(|_| rng.f32()).collect();
+        let out = eng.forward(&imgs, n).expect("forward");
+        total.merge(&out.report.total());
+        done += n;
+    }
+    total
+}
+
+#[test]
+fn acceptance_planned_synthetic_conv_has_zero_persistent_overflows() {
+    let model = pqs::models::synthetic_conv(2, 8, 8, 4, 10);
+    let dim: usize = model.input_shape.iter().product();
+    let cfg = PlannerConfig {
+        policy: Policy::Sorted,
+        calibrate_samples: 256,
+        ..Default::default()
+    };
+    let plan = plan_model(&model, &cfg).expect("planner runs");
+    assert_eq!(plan.planner, PlannerKind::Calibrated);
+    assert_eq!(plan.per_layer.len(), 3);
+    for l in &plan.per_layer {
+        assert!(l.analytic_bits <= 32, "layer {}: analytic {} > 32", l.name, l.analytic_bits);
+        let cal = l.calibrated_bits.expect("calibration ran");
+        assert!(
+            cal <= l.analytic_bits,
+            "layer {}: calibrated {cal} > analytic {}",
+            l.name,
+            l.analytic_bits
+        );
+        assert_eq!(l.acc_bits, cal);
+    }
+    assert!(plan.total_bits() < plan.baseline_bits(), "plan must beat the 32-bit baseline");
+
+    // enforcement: run the planned model with a deliberately absurd
+    // GLOBAL width (6 bits). If the per-layer overrides are applied, the
+    // global never matters and the 1k-input sweep stays persistent-free.
+    let mut planned = model.clone();
+    planned.plan = Some(plan.clone());
+    let ecfg = EngineConfig {
+        policy: Policy::Sorted,
+        acc_bits: 6,
+        collect_stats: true,
+        ..Default::default()
+    };
+    let mut eng = Engine::new(&planned, ecfg);
+    for (name, bits) in eng.effective_layer_bits() {
+        assert_eq!(Some(bits), plan.bits_for_layer(&name), "layer {name} enforced");
+    }
+    let total = sweep(&mut eng, dim, 1000, 0xACC);
+    assert!(total.dots >= 1000, "the sweep really ran");
+    assert_eq!(
+        total.persistent_dots, 0,
+        "zero persistent overflows at the planned widths over 1k inputs"
+    );
+
+    // control: the SAME global 6-bit config without a plan must overflow
+    // persistently — proving the zero above comes from the plan, not from
+    // the model being trivially narrow
+    let mut control = Engine::new(&model, ecfg);
+    let control_total = sweep(&mut control, dim, 50, 0xACC);
+    assert!(
+        control_total.persistent_dots > 0,
+        "a 6-bit global accumulator must persistently overflow without the plan"
+    );
+}
+
+#[test]
+fn analytic_only_plan_also_guarantees_the_sweep() {
+    // without calibration the enforced widths are the analytic bounds;
+    // the guarantee is unconditional, so the sweep must be event-free for
+    // the sequential policies too
+    let model = pqs::models::synthetic_conv(2, 8, 8, 4, 10);
+    let dim: usize = model.input_shape.iter().product();
+    for policy in [Policy::Clip, Policy::Sorted1] {
+        let plan =
+            plan_model(&model, &PlannerConfig { policy, ..Default::default() }).unwrap();
+        let mut planned = model.clone();
+        planned.plan = Some(plan);
+        let ecfg = EngineConfig { policy, acc_bits: 8, collect_stats: true, ..Default::default() };
+        let mut eng = Engine::new(&planned, ecfg);
+        let total = sweep(&mut eng, dim, 200, 0xA11);
+        assert_eq!(total.persistent_dots, 0, "{}: persistent at analytic width", policy.name());
+        if policy == Policy::Clip {
+            // Clip's analytic bound is the prefix bound: zero EVENTS, so
+            // the clipped values are exact
+            assert_eq!(total.policy_event_dots, 0, "clip events at the prefix bound");
+        }
+    }
+}
+
+#[test]
+fn calibrated_clip_plan_replays_the_calibration_set_event_free() {
+    // Clip's saturation is order-dependent, so its calibrated widths come
+    // from index-order prefix extremes, not final values. With a zero
+    // budget, replaying the exact calibration input stream at the
+    // calibrated widths must therefore produce ZERO events (values stay
+    // exact layer by layer, so the replay is self-consistent end to end).
+    let model = pqs::models::synthetic_conv(2, 8, 8, 4, 10);
+    let dim: usize = model.input_shape.iter().product();
+    let cfg = PlannerConfig {
+        policy: Policy::Clip,
+        calibrate_samples: 192,
+        budget: 0.0,
+        margin: 0, // no slack: the guarantee must come from the histogram
+        ..Default::default()
+    };
+    let plan = plan_model(&model, &cfg).unwrap();
+    let mut planned = model.clone();
+    planned.plan = Some(plan);
+    let ecfg = EngineConfig {
+        policy: Policy::Clip,
+        acc_bits: 6,
+        collect_stats: true,
+        ..Default::default()
+    };
+    let mut eng = Engine::new(&planned, ecfg);
+    // regenerate the identical input stream the planner observed (same
+    // seed, same batch size => same Pcg32 draws in the same order)
+    let mut rng = Pcg32::new(cfg.seed);
+    let mut total = pqs::overflow::OverflowStats::default();
+    let mut done = 0;
+    while done < cfg.calibrate_samples {
+        let n = cfg.batch.min(cfg.calibrate_samples - done);
+        let imgs: Vec<f32> = (0..n * dim).map(|_| rng.f32()).collect();
+        total.merge(&eng.forward(&imgs, n).unwrap().report.total());
+        done += n;
+    }
+    assert!(total.dots > 0);
+    assert_eq!(total.policy_event_dots, 0, "replayed calibration inputs must be event-free");
+    assert_eq!(total.persistent_dots, 0);
+}
+
+#[test]
+fn pqsw_roundtrip_applies_and_reports_the_plan_via_the_router() {
+    let dir = std::env::temp_dir().join("pqs_test_plan_roundtrip");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("planned_conv.pqsw");
+
+    let model = pqs::models::synthetic_conv(2, 8, 8, 4, 10);
+    let dim: usize = model.input_shape.iter().product();
+    let cfg = PlannerConfig { calibrate_samples: 64, ..Default::default() };
+    let plan = plan_model(&model, &cfg).unwrap();
+    let mut planned = model.clone();
+    planned.plan = Some(plan.clone());
+    planned.save(&path).expect("save planned .pqsw");
+
+    // load -> the plan rides along and the engine enforces it
+    let loaded = PqswModel::load(&path).expect("load planned .pqsw");
+    assert_eq!(loaded.plan.as_ref(), Some(&plan));
+    let ecfg = EngineConfig { policy: Policy::Sorted, acc_bits: 16, ..Default::default() };
+    let eng = Engine::new(&loaded, ecfg);
+    for (name, bits) in eng.effective_layer_bits() {
+        assert_eq!(Some(bits), plan.bits_for_layer(&name), "layer {name}");
+    }
+
+    // serve the FILE via the router (a Path source, loaded lazily) and
+    // check the fleet row reports the plan summary
+    let mut registry = ModelRegistry::new();
+    registry.register("planned", ModelSource::Path(path.clone()));
+    let rcfg = RouterConfig {
+        max_loaded: 0,
+        engine: ecfg,
+        server: ServerConfig {
+            threads: 1,
+            max_batch: 4,
+            queue_cap: 16,
+            linger: Duration::from_micros(50),
+            engine_threads: 1,
+            default_deadline: None,
+        },
+        preload: Vec::new(),
+    };
+    let router = Router::new(registry, rcfg).unwrap();
+    // before the lazy load a Path source cannot know the plan
+    assert_eq!(router.metrics().model("planned").unwrap().plan, None);
+    let image = common::synth_images(1, dim, 42);
+    let p = router
+        .submit(ClassifyRequest { id: 1, model: None, image: image.clone(), deadline: None })
+        .expect("routes");
+    let r = p.wait_timeout(Duration::from_secs(60)).expect("response");
+    // the routed class matches a dedicated engine over the planned model
+    let mut offline = Engine::new(&loaded, ecfg);
+    let want = offline.forward(&image, 1).unwrap().argmax(0);
+    assert_eq!(r.result, Ok(want));
+    // after the load the live incarnation reports the summary
+    let m = router.shutdown();
+    let row = m.model("planned").unwrap();
+    let got = row.plan.expect("loaded model reports its plan");
+    let want_sum = plan.summary();
+    assert_eq!(got.layers, want_sum.layers);
+    assert_eq!(got.min_bits, want_sum.min_bits);
+    assert_eq!(got.max_bits, want_sum.max_bits);
+    assert_eq!(got.planner, want_sum.planner);
+    assert_eq!(row.metrics.requests, 1);
+}
+
+#[test]
+fn planfree_pqsw_files_stay_bit_identical() {
+    // a model saved WITHOUT a plan must load into an engine whose logits
+    // and overflow stats equal the never-serialized original exactly
+    let dir = std::env::temp_dir().join("pqs_test_plan_free");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("planfree_conv.pqsw");
+    let model = pqs::models::synthetic_conv(2, 8, 8, 4, 10);
+    let dim: usize = model.input_shape.iter().product();
+    model.save(&path).unwrap();
+    let loaded = PqswModel::load(&path).unwrap();
+    assert_eq!(loaded.plan, None);
+    let ecfg = EngineConfig {
+        policy: Policy::Sorted1,
+        acc_bits: 14,
+        collect_stats: true,
+        ..Default::default()
+    };
+    let mut a = Engine::new(&model, ecfg);
+    let mut b = Engine::new(&loaded, ecfg);
+    let mut rng = Pcg32::new(0xF2EE);
+    let imgs: Vec<f32> = (0..4 * dim).map(|_| rng.f32()).collect();
+    let ra = a.forward(&imgs, 4).unwrap();
+    let rb = b.forward(&imgs, 4).unwrap();
+    assert_eq!(ra.logits, rb.logits, "logits bit-identical through the container");
+    assert_eq!(ra.report.total(), rb.report.total(), "stats bit-identical");
+}

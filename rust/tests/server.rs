@@ -412,8 +412,12 @@ fn three_model_registry() -> ModelRegistry {
 #[test]
 fn router_loads_lazily_and_routes_to_the_default() {
     let registry = three_model_registry();
-    let rcfg =
-        RouterConfig { max_loaded: 0, engine: EngineConfig::default(), server: scfg(1, 4, 16) };
+    let rcfg = RouterConfig {
+        max_loaded: 0,
+        engine: EngineConfig::default(),
+        server: scfg(1, 4, 16),
+        preload: Vec::new(),
+    };
     let router = Router::new(registry, rcfg).unwrap();
     assert_eq!(router.default_model(), "m1");
     // registration loads nothing
@@ -432,7 +436,7 @@ fn router_loads_lazily_and_routes_to_the_default() {
     let m = router.metrics();
     assert_eq!(m.loads, 1);
     assert_eq!(m.routed, 1);
-    assert_eq!(m.load_latency.count(), 1);
+    assert_eq!(m.load_latency.count, 1);
     let loaded: Vec<&str> =
         m.models.iter().filter(|s| s.loaded).map(|s| s.name.as_str()).collect();
     assert_eq!(loaded, vec!["m1"], "only the requested model loads");
@@ -444,8 +448,12 @@ fn router_loads_lazily_and_routes_to_the_default() {
 #[test]
 fn router_unknown_model_fails_fast_with_fleet_listing() {
     let registry = three_model_registry();
-    let rcfg =
-        RouterConfig { max_loaded: 0, engine: EngineConfig::default(), server: scfg(1, 4, 16) };
+    let rcfg = RouterConfig {
+        max_loaded: 0,
+        engine: EngineConfig::default(),
+        server: scfg(1, 4, 16),
+        preload: Vec::new(),
+    };
     let router = Router::new(registry, rcfg).unwrap();
     match router.submit(req(1, Some("m9"), img(1))) {
         Err(RouteError::UnknownModel(msg)) => {
@@ -466,8 +474,12 @@ fn router_unknown_model_fails_fast_with_fleet_listing() {
 #[test]
 fn router_lru_eviction_under_max_loaded_preserves_metrics() {
     let registry = three_model_registry();
-    let rcfg =
-        RouterConfig { max_loaded: 2, engine: EngineConfig::default(), server: scfg(1, 4, 16) };
+    let rcfg = RouterConfig {
+        max_loaded: 2,
+        engine: EngineConfig::default(),
+        server: scfg(1, 4, 16),
+        preload: Vec::new(),
+    };
     let router = Router::new(registry, rcfg).unwrap();
     let dim2 = DIM * 2;
     let img2 = common::synth_images(1, dim2, 2);
@@ -536,8 +548,8 @@ fn router_two_models_one_pool_bit_identical_to_dedicated_servers() {
     let mut registry = ModelRegistry::new();
     registry.register("lin", ModelSource::Memory(linear));
     registry.register("conv", ModelSource::Memory(conv));
-    let router =
-        Router::new(registry, RouterConfig { max_loaded: 0, engine: cfg, server: sc }).unwrap();
+    let rcfg = RouterConfig { max_loaded: 0, engine: cfg, server: sc, preload: Vec::new() };
+    let router = Router::new(registry, rcfg).unwrap();
     std::thread::scope(|scope| {
         let router = &router;
         let want_lin = &want_lin;
@@ -563,6 +575,106 @@ fn router_two_models_one_pool_bit_identical_to_dedicated_servers() {
     let pool = m.pool.expect("engine_threads > 1 must expose the shared pool");
     assert_eq!(pool.threads, 4);
     assert!(pool.jobs + pool.inline_jobs > 0, "conv forwards must dispatch pool jobs");
+}
+
+#[test]
+fn router_preload_loads_eagerly_and_counts() {
+    let rcfg = RouterConfig {
+        max_loaded: 0,
+        engine: EngineConfig::default(),
+        server: scfg(1, 4, 16),
+        preload: vec!["m2".to_string(), "m3".to_string()],
+    };
+    let router = Router::new(three_model_registry(), rcfg).unwrap();
+    let m = router.metrics();
+    assert_eq!(m.loads, 2, "each preload counts as a load");
+    assert_eq!(m.routed, 0, "preloads are not routed requests");
+    assert_eq!(m.load_latency.count, 2);
+    let loaded: Vec<&str> =
+        m.models.iter().filter(|s| s.loaded).map(|s| s.name.as_str()).collect();
+    assert_eq!(loaded, vec!["m2", "m3"], "exactly the preloaded models are live");
+    // a request to a preloaded model rides the live server (no new load)
+    let r = wait(router.submit(req(1, Some("m2"), common::synth_images(1, DIM * 2, 1))).unwrap());
+    assert!(r.result.is_ok());
+    let m = router.shutdown();
+    assert_eq!(m.loads, 2, "serving a preloaded model must not reload it");
+    assert_eq!(m.routed, 1);
+    assert_eq!(m.model("m2").unwrap().metrics.requests, 1);
+    // an unknown preload name fails router construction, naming the miss
+    let rcfg = RouterConfig {
+        max_loaded: 0,
+        engine: EngineConfig::default(),
+        server: scfg(1, 4, 16),
+        preload: vec!["m9".to_string()],
+    };
+    let err = Router::new(three_model_registry(), rcfg).unwrap_err();
+    assert!(format!("{err:#}").contains("m9"), "err: {err:#}");
+}
+
+#[test]
+fn metrics_scrape_does_not_serialize_behind_a_blocked_load() {
+    // the cheap-snapshot contract: a /v1/metrics-style scrape must
+    // complete while a model load is in flight (loads run outside the
+    // router lock; snapshots take it only for counters + Copy summaries).
+    // A Factory source blocks its load on a barrier, deterministically
+    // pinning the load mid-flight while the scrape runs.
+    use std::sync::atomic::{AtomicBool, Ordering};
+    use std::sync::{Arc, Barrier};
+    let gate = Arc::new(Barrier::new(2));
+    let started = Arc::new(AtomicBool::new(false));
+    let mut registry = ModelRegistry::new();
+    registry.register("fast", ModelSource::Memory(common::tiny_linear_model(DIM, CLASSES)));
+    let (g, st) = (Arc::clone(&gate), Arc::clone(&started));
+    registry.register(
+        "slow",
+        ModelSource::factory(move || {
+            st.store(true, Ordering::Release);
+            g.wait(); // held here until the test releases the load
+            Ok(pqs::models::synthetic_linear(DIM, CLASSES))
+        }),
+    );
+    let rcfg = RouterConfig {
+        max_loaded: 0,
+        engine: EngineConfig::default(),
+        server: scfg(1, 4, 16),
+        preload: Vec::new(),
+    };
+    let router = Arc::new(Router::new(registry, rcfg).unwrap());
+    // kick the slow load off and wait until it is genuinely in flight
+    let r2 = Arc::clone(&router);
+    let loader = std::thread::spawn(move || {
+        let p = r2.submit(req(1, Some("slow"), img(1))).expect("routes once loaded");
+        wait(p)
+    });
+    while !started.load(Ordering::Acquire) {
+        std::thread::yield_now();
+    }
+    // the scrape must return NOW, with the load still blocked on the
+    // barrier; a bounded wait turns a serialization regression into a
+    // fast failure instead of a suite deadlock
+    let r3 = Arc::clone(&router);
+    let (tx, rx) = std::sync::mpsc::channel();
+    let scraper = std::thread::spawn(move || {
+        let _ = tx.send(r3.metrics());
+    });
+    let m = rx
+        .recv_timeout(Duration::from_secs(10))
+        .expect("metrics scrape must not wait for an in-flight load");
+    assert_eq!(m.loads, 0, "the blocked load has not completed yet");
+    assert!(!m.model("slow").unwrap().loaded);
+    // routing to the OTHER model also proceeds during the blocked load
+    let p = router.submit(req(2, Some("fast"), img(2))).expect("fast model routes");
+    assert!(wait(p).result.is_ok());
+    // release the load: the blocked request completes normally
+    gate.wait();
+    let r = loader.join().expect("loader thread");
+    assert!(r.result.is_ok());
+    scraper.join().expect("scraper thread");
+    let router = Arc::try_unwrap(router).ok().expect("threads joined; sole owner");
+    let m = router.shutdown();
+    assert_eq!(m.loads, 2, "fast + slow both loaded in the end");
+    assert_eq!(m.model("slow").unwrap().metrics.requests, 1);
+    assert_eq!(m.model("fast").unwrap().metrics.requests, 1);
 }
 
 #[test]
@@ -592,8 +704,12 @@ fn server_drain_via_shared_handle_is_final_and_idempotent() {
 #[test]
 fn router_default_and_wrong_size_semantics() {
     let registry = three_model_registry();
-    let rcfg =
-        RouterConfig { max_loaded: 0, engine: EngineConfig::default(), server: scfg(1, 4, 16) };
+    let rcfg = RouterConfig {
+        max_loaded: 0,
+        engine: EngineConfig::default(),
+        server: scfg(1, 4, 16),
+        preload: Vec::new(),
+    };
     let router = Router::new(registry, rcfg).unwrap();
     // wrong-sized image for the ROUTED model is a per-request BadRequest
     // from that model's server (never a panic, never misrouted)
