@@ -28,7 +28,12 @@
 //!   models: analytic + calibrated planner runtimes and the planned
 //!   per-layer widths vs the 32-bit baseline. The section *fails* if any
 //!   calibrated width exceeds its analytic bound, so planner soundness is
-//!   smoke-gated in CI alongside the perf numbers.
+//!   smoke-gated in CI alongside the perf numbers;
+//! * **memory** — zero-copy `.pqsw` loading: eager vs lazy load latency
+//!   of one saved file, measured resident bytes in both modes, a
+//!   two-entry router blob-dedup smoke (two registry names over one file
+//!   must share one weight blob), and a lazy-vs-eager bit-identity check
+//!   (logits AND overflow counters; the section fails on divergence).
 //!
 //! Everything runs on synthetic models so the report is reproducible on
 //! any checkout, artifacts or not. `quick: true` shrinks sample counts and
@@ -100,6 +105,7 @@ pub fn run(opts: &BenchOptions) -> Result<Json> {
         ("serve", serve_section(opts)?),
         ("router", router_section(opts)?),
         ("plan", plan_section(opts)?),
+        ("memory", memory_section(opts)?),
     ]))
 }
 
@@ -515,7 +521,13 @@ fn router_section(opts: &BenchOptions) -> Result<Json> {
         engine_threads: 2,
         default_deadline: None,
     };
-    let rcfg = RouterConfig { max_loaded: 0, engine: cfg, server: scfg, preload: Vec::new() };
+    let rcfg = RouterConfig {
+        max_loaded: 0,
+        max_bytes: 0,
+        engine: cfg,
+        server: scfg,
+        preload: Vec::new(),
+    };
     let router = Router::new(registry, rcfg).context("building the bench router")?;
     let http = HttpServer::start(router, "127.0.0.1:0", HttpConfig::default())
         .context("binding the bench router http server")?;
@@ -668,6 +680,126 @@ fn plan_section(opts: &BenchOptions) -> Result<Json> {
     Ok(Json::Arr(rows))
 }
 
+// ---- memory ---------------------------------------------------------------
+
+/// Zero-copy loading + byte-budget section: eager vs lazy load times over a
+/// saved `.pqsw`, measured resident bytes per mode, forward bit-identity
+/// between the two, and blob dedup across two fleet entries of the same
+/// file. Fails — not just reports — on any divergence, so a lazy-loading
+/// regression breaks the bench (and the CI smoke that runs it), not just a
+/// table.
+fn memory_section(opts: &BenchOptions) -> Result<Json> {
+    use crate::formats::pqsw::PqswModel;
+    let model = if opts.quick {
+        models::synthetic_conv(2, 8, 8, 4, 10)
+    } else {
+        models::synthetic_conv(3, 28, 28, 8, 10)
+    };
+    let dim: usize = model.input_shape.iter().product();
+    let path = std::env::temp_dir().join(format!("pqs_bench_mem_{}.pqsw", std::process::id()));
+    model.save(&path)?;
+    let file_bytes = std::fs::metadata(&path)?.len();
+
+    // load-time sweep: eager decodes every blob up front; lazy parses the
+    // header and borrows the weight sections from the shared file buffer
+    let reps = opts.samples().max(2);
+    let mut eager_us = 0.0;
+    let mut lazy_us = 0.0;
+    for _ in 0..reps {
+        let t0 = Instant::now();
+        black_box(PqswModel::load_eager(&path)?);
+        eager_us += t0.elapsed().as_secs_f64() * 1e6;
+        let t0 = Instant::now();
+        black_box(PqswModel::load(&path)?);
+        lazy_us += t0.elapsed().as_secs_f64() * 1e6;
+    }
+    let eager = PqswModel::load_eager(&path)?;
+    let lazy = PqswModel::load(&path)?;
+    if lazy.content_hash() != eager.content_hash() {
+        return Err(anyhow!("lazy and eager content hashes diverge"));
+    }
+
+    // forward bit-identity: same logits AND the same overflow counters
+    let ecfg = EngineConfig { policy: Policy::Sorted, acc_bits: 12, tile: 0, collect_stats: true };
+    let mut rng = Pcg32::new(0x3E80);
+    let imgs: Vec<f32> = (0..4 * dim).map(|_| rng.f32()).collect();
+    let ra = Engine::new(&eager, ecfg).forward(&imgs, 4)?;
+    let rb = Engine::new(&lazy, ecfg).forward(&imgs, 4)?;
+    if ra.logits != rb.logits || ra.report.total() != rb.report.total() {
+        return Err(anyhow!("lazy-loaded forward diverges from the eager load"));
+    }
+
+    // dedup: two fleet entries over the SAME file must share one blob
+    let mut registry = ModelRegistry::new();
+    registry.register("a", ModelSource::Path(path.clone()));
+    registry.register("b", ModelSource::Path(path.clone()));
+    let scfg = ServerConfig {
+        threads: 1,
+        max_batch: 4,
+        queue_cap: 16,
+        linger: Duration::from_micros(50),
+        engine_threads: 1,
+        default_deadline: None,
+    };
+    let rcfg = RouterConfig {
+        max_loaded: 0,
+        max_bytes: 0,
+        engine: ecfg,
+        server: scfg,
+        preload: vec!["a".into(), "b".into()],
+    };
+    let router = Router::new(registry, rcfg).context("building the memory bench router")?;
+    let rm = router.metrics();
+    router.shutdown();
+    std::fs::remove_file(&path).ok();
+    if rm.dedup_hits != 1 {
+        return Err(anyhow!(
+            "two loads of one file produced {} dedup hits, want 1",
+            rm.dedup_hits
+        ));
+    }
+    if rm.resident_bytes >= 2 * lazy.resident_bytes() {
+        return Err(anyhow!(
+            "deduped fleet holds {} bytes, not less than two full copies",
+            rm.resident_bytes
+        ));
+    }
+
+    Ok(json::obj(vec![
+        (
+            "load",
+            Json::Arr(vec![
+                json::obj(vec![
+                    ("mode", json::s("eager")),
+                    ("mean_us", json::num(eager_us / reps as f64)),
+                ]),
+                json::obj(vec![
+                    ("mode", json::s("lazy")),
+                    ("mean_us", json::num(lazy_us / reps as f64)),
+                ]),
+            ]),
+        ),
+        (
+            "resident_bytes",
+            json::obj(vec![
+                ("file", json::num(file_bytes as f64)),
+                ("eager", json::num(eager.resident_bytes() as f64)),
+                ("lazy", json::num(lazy.resident_bytes() as f64)),
+            ]),
+        ),
+        (
+            "dedup",
+            json::obj(vec![
+                ("entries", json::num(2.0)),
+                ("dedup_hits", json::num(rm.dedup_hits as f64)),
+                ("resident_bytes", json::num(rm.resident_bytes as f64)),
+                ("single_load_bytes", json::num(lazy.resident_bytes() as f64)),
+            ]),
+        ),
+        ("bit_identical_lazy_vs_eager", Json::Bool(true)),
+    ]))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -680,7 +812,7 @@ mod tests {
         let report = run(&opts).expect("quick bench run");
         let txt = report.to_string();
         let parsed = Json::parse(&txt).expect("report round-trips");
-        for key in ["meta", "dot", "pool", "forward", "serve", "router", "plan"] {
+        for key in ["meta", "dot", "pool", "forward", "serve", "router", "plan", "memory"] {
             assert!(parsed.get(key).is_some(), "missing section {key}");
         }
         let fwd = parsed.get("forward").unwrap().as_arr().unwrap();

@@ -22,6 +22,20 @@
 //!   metrics survive eviction: the final [`ServeSummary`] of each
 //!   incarnation is folded into a per-model accumulator, so
 //!   [`Router::metrics`] always reports lifetime totals.
+//! * **Byte-budgeted memory** — with [`RouterConfig::max_bytes`] set the
+//!   router charges every loaded model its measured
+//!   [`PqswModel::resident_bytes`] and LRU-evicts until a newcomer fits
+//!   (a model too large for even an empty fleet is refused, not
+//!   admitted). Identical weight content — matched by
+//!   [`PqswModel::content_hash`], verified byte-for-byte — is rehosted
+//!   onto one canonical `Arc<[u8]>` blob across entries, so N registry
+//!   names over one file cost one buffer; `resident_bytes` / `budget` /
+//!   `dedup_hits` are reported in [`RouterMetrics`] and `GET /v1/models`.
+//! * **Per-model engine overrides** — [`ModelRegistry::set_overrides`]
+//!   attaches a [`ModelOverrides`] (accumulator width, engine threads) to
+//!   one name; its server is built with those instead of the fleet-wide
+//!   [`RouterConfig::engine`] template (CLI:
+//!   `--model name=spec,acc_bits=N,threads=M`).
 //! * **Eager preload** — [`RouterConfig::preload`] names models to load
 //!   at construction time (hot models skip the first-request latency);
 //!   each preload flows through the regular load path and counters.
@@ -204,6 +218,27 @@ impl ModelSource {
     }
 }
 
+/// Per-model engine knobs overriding the fleet-wide
+/// [`RouterConfig::engine`] / [`RouterConfig::server`] templates for one
+/// registered name (CLI: `--model name=spec,acc_bits=N,threads=M`).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ModelOverrides {
+    /// Global accumulator width for this model's engines (an embedded
+    /// plan still takes per-layer precedence, exactly as with the fleet
+    /// template).
+    pub acc_bits: Option<u32>,
+    /// Intra-layer engine threads for this model. `> 1` gives the model
+    /// its OWN compute pool of that size instead of the router-shared
+    /// one; `1` forces single-threaded engines.
+    pub engine_threads: Option<usize>,
+}
+
+impl ModelOverrides {
+    pub fn is_default(&self) -> bool {
+        *self == ModelOverrides::default()
+    }
+}
+
 /// Named model sources plus a default. Registration order is preserved
 /// (it drives `GET /v1/models` and the default choice).
 #[derive(Clone, Debug, Default)]
@@ -211,6 +246,7 @@ pub struct ModelRegistry {
     entries: BTreeMap<String, ModelSource>,
     order: Vec<String>,
     default: Option<String>,
+    overrides: BTreeMap<String, ModelOverrides>,
 }
 
 impl ModelRegistry {
@@ -259,6 +295,21 @@ impl ModelRegistry {
         self.entries.get(name)
     }
 
+    /// Attach per-model engine overrides to a registered name (replacing
+    /// any previous overrides for it).
+    pub fn set_overrides(&mut self, name: &str, overrides: ModelOverrides) -> Result<()> {
+        if !self.entries.contains_key(name) {
+            return Err(anyhow!(self.unknown_message(name)));
+        }
+        self.overrides.insert(name.to_string(), overrides);
+        Ok(())
+    }
+
+    /// The overrides for `name` (default = inherit the fleet templates).
+    pub fn overrides(&self, name: &str) -> ModelOverrides {
+        self.overrides.get(name).copied().unwrap_or_default()
+    }
+
     /// The message an unknown name routes back to the client (the HTTP
     /// front-end serves it verbatim in the 404 body): names the miss and
     /// lists the registered fleet.
@@ -280,6 +331,12 @@ pub struct RouterConfig {
     /// once; loading past the cap evicts the least-recently-used model
     /// first. `0` = unlimited.
     pub max_loaded: usize,
+    /// Resident weight-byte budget for the loaded fleet (measured
+    /// [`PqswModel::resident_bytes`], deduped blobs counted once);
+    /// loading past it LRU-evicts until the newcomer fits, and a model
+    /// that cannot fit even alone is refused with `LoadFailed`.
+    /// `0` = unlimited. CLI: `serve-http --max-bytes`.
+    pub max_bytes: u64,
     /// Engine configuration applied to every model's workers.
     pub engine: EngineConfig,
     /// Per-model server template (worker threads, batching, queue bound,
@@ -304,6 +361,12 @@ pub struct ClassifyRequest {
     /// Per-request deadline (falls back to the server template's
     /// `default_deadline`).
     pub deadline: Option<Duration>,
+    /// Per-request accumulator operating point: run this request's batch
+    /// at accumulator width `min(acc_bits, analytic bound)` per layer
+    /// instead of the embedded plan's widths. Requires the target model
+    /// to carry a plan, and `acc_bits` must cover the plan's widest
+    /// layer; otherwise the request fails with `BadRequest` (HTTP 400).
+    pub acc_bits: Option<u32>,
 }
 
 /// Why a request could not be routed.
@@ -352,6 +415,9 @@ pub struct ModelStatus {
     /// (always known once loaded; known without loading for in-memory
     /// sources). `None` = no plan: the global `acc_bits` applies.
     pub plan: Option<PlanSummary>,
+    /// Measured resident weight bytes of the live incarnation (owned
+    /// weights + its shared file blob), `None` while unloaded.
+    pub resident_bytes: Option<u64>,
     /// Lifetime serving metrics: the live incarnation merged with every
     /// evicted one. A quantile *summary* — snapshots never carry
     /// reservoirs (see [`ServeSummary`]).
@@ -368,8 +434,16 @@ pub struct RouterMetrics {
     /// Lazy + preload loads performed (first requests, preloads,
     /// post-eviction reloads).
     pub loads: u64,
-    /// Models drained out under the `max_loaded` cap.
+    /// Models drained out under the `max_loaded` / `max_bytes` caps.
     pub evictions: u64,
+    /// Resident weight bytes currently charged to the loaded fleet
+    /// (deduped: each shared blob counted once).
+    pub resident_bytes: u64,
+    /// The configured `max_bytes` budget (`0` = unlimited).
+    pub budget: u64,
+    /// Loads that found byte-identical weights already resident and
+    /// rehosted onto the canonical blob instead of keeping their own.
+    pub dedup_hits: u64,
     /// Wall time of each load (source read + server spawn), µs.
     pub load_latency: LatencySummary,
     pub wall_s: f64,
@@ -407,11 +481,14 @@ impl RouterMetrics {
     pub fn print(&self) {
         println!(
             "router: routed={} unknown_model={} loads={} evictions={} \
-             load mean={:.1}us max={:.1}us",
+             resident={}B budget={} dedup_hits={} load mean={:.1}us max={:.1}us",
             self.routed,
             self.unknown_model,
             self.loads,
             self.evictions,
+            self.resident_bytes,
+            if self.budget == 0 { "unlimited".to_string() } else { format!("{}B", self.budget) },
+            self.dedup_hits,
             self.load_latency.mean_us,
             self.load_latency.max_us,
         );
@@ -454,10 +531,39 @@ struct LoadedModel {
     plan: Option<PlanSummary>,
     /// monotone use tick; smallest = least recently used
     last_used: u64,
+    /// bytes this model is charged beyond its shared blob (owned weight
+    /// vectors + biases)
+    own_bytes: u64,
+    /// measured `resident_bytes()` at load time (own + backing blob),
+    /// reported per fleet row
+    bytes: u64,
+    /// key into `RouterInner::blobs` when the model borrows a shared
+    /// file blob
+    blob_ptr: Option<usize>,
+}
+
+/// One refcounted shared weight blob in the router's dedup map.
+struct BlobEntry {
+    data: Arc<[u8]>,
+    /// content hash of the (sole) model content these bytes back —
+    /// dedup lookups match on it, then verify bytes before rehosting
+    hash: u64,
+    /// loaded models borrowing this blob
+    refs: usize,
 }
 
 #[derive(Default)]
 struct RouterInner {
+    /// shared weight blobs keyed by buffer address; each is charged to
+    /// `resident` exactly once while any loaded model borrows it
+    blobs: BTreeMap<usize, BlobEntry>,
+    /// resident weight bytes currently charged to the loaded fleet
+    /// (`own_bytes` of every loaded model + each blob once). Eviction
+    /// decrements at the *decision*, while the victim drains shortly
+    /// after — the counter tracks the budget commitment, not the
+    /// instantaneous allocator state.
+    resident: u64,
+    dedup_hits: u64,
     loaded: BTreeMap<String, LoadedModel>,
     /// names whose lazy load is in flight on some thread — other requests
     /// for the *same* name wait on `load_done`; every other model keeps
@@ -534,7 +640,7 @@ impl Router {
         registry.register(name, ModelSource::Memory(model.clone()));
         Router::new(
             registry,
-            RouterConfig { max_loaded: 0, engine, server, preload: Vec::new() },
+            RouterConfig { max_loaded: 0, max_bytes: 0, engine, server, preload: Vec::new() },
         )
         .expect("registry has one model")
     }
@@ -558,13 +664,13 @@ impl Router {
     /// second resolve reloads the model); only a second `Closed` is
     /// reported to the caller.
     pub fn submit(&self, req: ClassifyRequest) -> Result<PendingResponse, RouteError> {
-        let ClassifyRequest { id, model, mut image, deadline } = req;
+        let ClassifyRequest { id, model, mut image, deadline, acc_bits } = req;
         let mut retried = false;
         loop {
             // the retry resolve must not re-count `routed`: one request,
             // one tally, even when an eviction race makes it route twice
             let server = self.resolve_counted(model.as_deref(), !retried)?;
-            match server.submit(id, image, deadline) {
+            match server.submit_with(id, image, deadline, acc_bits) {
                 Ok(p) => return Ok(p),
                 Err(SubmitError::Closed(img)) if !retried => {
                     retried = true;
@@ -579,11 +685,11 @@ impl Router {
     /// target queue is at capacity. Loads the model first if needed.
     /// Eviction races retry once, as in [`Router::submit`].
     pub fn try_submit(&self, req: ClassifyRequest) -> Result<PendingResponse, RouteError> {
-        let ClassifyRequest { id, model, mut image, deadline } = req;
+        let ClassifyRequest { id, model, mut image, deadline, acc_bits } = req;
         let mut retried = false;
         loop {
             let server = self.resolve_counted(model.as_deref(), !retried)?;
-            match server.try_submit(id, image, deadline) {
+            match server.try_submit_with(id, image, deadline, acc_bits) {
                 Ok(p) => return Ok(p),
                 Err(SubmitError::Closed(img)) if !retried => {
                     retried = true;
@@ -668,14 +774,50 @@ impl Router {
 
         // the load, unlocked: every other model keeps routing meanwhile
         let t0 = Instant::now();
-        let built = self.registry.entries[name].load().map(|model| {
+        let overrides = self.registry.overrides(name);
+        let mut engine_cfg = self.cfg.engine;
+        if let Some(bits) = overrides.acc_bits {
+            engine_cfg.acc_bits = bits;
+        }
+        let (server_cfg, model_pool) = match overrides.engine_threads {
+            // a per-model thread override gives this model its OWN pool
+            // (or none) instead of the router-shared one
+            Some(t) => (
+                ServerConfig { engine_threads: t, ..self.cfg.server },
+                (t > 1).then(|| Arc::new(ComputePool::new(t))),
+            ),
+            None => (self.cfg.server, self.pool.clone()),
+        };
+        let built = self.registry.entries[name].load().map(|mut model| {
+            let hash = model.content_hash();
+            // dedup: when byte-identical weights are already resident,
+            // re-point this model's borrowed views at the canonical blob
+            // BEFORE the server clones the model into its workers
+            let mut deduped = false;
+            if model.backing_blob().is_some() {
+                let canonical = {
+                    let inner = self.inner.lock().unwrap();
+                    inner
+                        .blobs
+                        .values()
+                        .find(|e| e.hash == hash)
+                        .map(|e| Arc::clone(&e.data))
+                };
+                if let Some(canonical) = canonical {
+                    deduped = model.rehost(&canonical);
+                }
+            }
+            let bytes = model.resident_bytes();
+            let blob = model.backing_blob();
+            let own_bytes = bytes - blob.as_ref().map_or(0, |b| b.len() as u64);
             let server = Server::builder()
-                .engine(self.cfg.engine)
-                .config(self.cfg.server)
-                .maybe_shared_pool(self.pool.clone())
+                .engine(engine_cfg)
+                .config(server_cfg)
+                .maybe_shared_pool(model_pool)
                 .start(&model);
             let plan = model.plan.as_ref().map(|p| p.summary());
-            (Arc::new(server), model.input_shape.clone(), plan)
+            let shape = model.input_shape.clone();
+            (Arc::new(server), shape, plan, hash, bytes, own_bytes, blob, deduped)
         });
         let load_us = t0.elapsed().as_secs_f64() * 1e6;
 
@@ -683,7 +825,7 @@ impl Router {
         let inner = &mut *guard;
         load_guard.armed = false;
         inner.loading.remove(name);
-        let (server, input_shape, plan) = match built {
+        let (server, input_shape, plan, hash, bytes, own_bytes, blob, deduped) = match built {
             Ok(v) => v,
             Err(e) => {
                 // wake same-name waiters so one of them can retry the load
@@ -691,54 +833,122 @@ impl Router {
                 return Err(RouteError::LoadFailed(format!("{e:#}")));
             }
         };
+        // bytes the newcomer would add to `resident` right now: its own
+        // bytes, plus its blob unless that exact buffer is already charged
+        let needed = |inner: &RouterInner| -> u64 {
+            own_bytes
+                + blob.as_ref().map_or(0, |b| {
+                    if inner.blobs.contains_key(&(b.as_ptr() as usize)) {
+                        0
+                    } else {
+                        b.len() as u64
+                    }
+                })
+        };
+        // over a cap: move LRU victims into `draining` (still visible to
+        // metrics snapshots) until the newcomer fits by count AND bytes
+        let mut evicted: Vec<(String, Arc<Server>)> = Vec::new();
+        loop {
+            let count_over =
+                self.cfg.max_loaded > 0 && inner.loaded.len() + 1 > self.cfg.max_loaded;
+            let bytes_over =
+                self.cfg.max_bytes > 0 && inner.resident + needed(inner) > self.cfg.max_bytes;
+            if !count_over && !bytes_over {
+                break;
+            }
+            let victim = inner
+                .loaded
+                .iter()
+                .min_by_key(|(_, lm)| lm.last_used)
+                .map(|(n, _)| n.clone());
+            match victim {
+                Some(v) => {
+                    let lm = inner.loaded.remove(&v).expect("victim is loaded");
+                    inner.evictions += 1;
+                    inner.resident -= lm.own_bytes;
+                    if let Some(p) = lm.blob_ptr {
+                        if let Some(entry) = inner.blobs.get_mut(&p) {
+                            entry.refs -= 1;
+                            if entry.refs == 0 {
+                                inner.resident -= entry.data.len() as u64;
+                                inner.blobs.remove(&p);
+                            }
+                        }
+                    }
+                    inner.draining.push((v.clone(), Arc::clone(&lm.server)));
+                    evicted.push((v, lm.server));
+                }
+                None => break,
+            }
+        }
+        if self.cfg.max_bytes > 0 && inner.resident + needed(inner) > self.cfg.max_bytes {
+            // even an empty fleet cannot host this model within the
+            // budget: refuse it (never admit past `max_bytes`)
+            let total = own_bytes + blob.as_ref().map_or(0, |b| b.len() as u64);
+            self.load_done.notify_all();
+            drop(guard);
+            let _ = server.drain();
+            self.drain_evicted(evicted);
+            return Err(RouteError::LoadFailed(format!(
+                "model {name:?} needs {total} resident bytes but --max-bytes is {}",
+                self.cfg.max_bytes
+            )));
+        }
         inner.load_latency.record(load_us);
         inner.loads += 1;
+        if deduped {
+            inner.dedup_hits += 1;
+        }
         if count_routed {
             inner.routed += 1;
         }
         inner.tick += 1;
         let tick = inner.tick;
-        // over the cap: move LRU victims into `draining` (still visible
-        // to metrics snapshots) before inserting the newcomer
-        let mut evicted: Vec<(String, Arc<Server>)> = Vec::new();
-        if self.cfg.max_loaded > 0 {
-            while inner.loaded.len() + 1 > self.cfg.max_loaded {
-                let victim = inner
-                    .loaded
-                    .iter()
-                    .min_by_key(|(_, lm)| lm.last_used)
-                    .map(|(n, _)| n.clone());
-                match victim {
-                    Some(v) => {
-                        let lm = inner.loaded.remove(&v).expect("victim is loaded");
-                        inner.evictions += 1;
-                        inner.draining.push((v.clone(), Arc::clone(&lm.server)));
-                        evicted.push((v, lm.server));
-                    }
-                    None => break,
+        // charge the newcomer: own bytes always; the blob once per buffer
+        inner.resident += own_bytes;
+        let blob_ptr = blob.as_ref().map(|b| b.as_ptr() as usize);
+        if let Some(b) = &blob {
+            let p = b.as_ptr() as usize;
+            match inner.blobs.get_mut(&p) {
+                Some(entry) => entry.refs += 1,
+                None => {
+                    inner.resident += b.len() as u64;
+                    inner.blobs.insert(p, BlobEntry { data: Arc::clone(b), hash, refs: 1 });
                 }
             }
         }
         inner.loaded.insert(
             name.to_string(),
-            LoadedModel { server: Arc::clone(&server), input_shape, plan, last_used: tick },
+            LoadedModel {
+                server: Arc::clone(&server),
+                input_shape,
+                plan,
+                last_used: tick,
+                own_bytes,
+                bytes,
+                blob_ptr,
+            },
         );
         self.load_done.notify_all();
         drop(guard);
 
-        // drain victims outside the lock (graceful: their queued requests
-        // are answered; racing submits fail with Closed → 503). Only once
-        // the final metrics are folded into `past` does the victim leave
-        // `draining`, so snapshots never under-report a model mid-drain.
-        // The summary of the final metrics is computed before re-taking
-        // the lock: `past` holds `Copy` summaries only.
+        self.drain_evicted(evicted);
+        Ok(server)
+    }
+
+    /// Drain evicted servers outside the lock (graceful: their queued
+    /// requests are answered; racing submits fail with Closed → 503).
+    /// Only once the final metrics are folded into `past` does a victim
+    /// leave `draining`, so snapshots never under-report a model
+    /// mid-drain. The summary is computed before re-taking the lock:
+    /// `past` holds `Copy` summaries only.
+    fn drain_evicted(&self, evicted: Vec<(String, Arc<Server>)>) {
         for (victim, srv) in evicted {
             let final_summary = srv.drain().summary();
             let mut inner = self.inner.lock().unwrap();
             inner.past.entry(victim).or_default().merge_from(&final_summary);
             inner.draining.retain(|(_, a)| !Arc::ptr_eq(a, &srv));
         }
-        Ok(server)
     }
 
     /// Snapshot of router counters + the per-model fleet.
@@ -759,7 +969,7 @@ impl Router {
         struct RowSeed {
             name: String,
             past: ServeSummary,
-            live: Option<(Arc<Server>, Vec<usize>, Option<PlanSummary>)>,
+            live: Option<(Arc<Server>, Vec<usize>, Option<PlanSummary>, u64)>,
             draining: Vec<Arc<Server>>,
         }
         // phase 1: under the lock — counters and handles only
@@ -770,6 +980,9 @@ impl Router {
                 unknown_model: inner.unknown,
                 loads: inner.loads,
                 evictions: inner.evictions,
+                resident_bytes: inner.resident,
+                budget: self.cfg.max_bytes,
+                dedup_hits: inner.dedup_hits,
                 // loads are rare (each pays a model read), so this
                 // recorder stays tiny; summarizing it here is O(loads)
                 load_latency: inner.load_latency.summary(),
@@ -784,7 +997,7 @@ impl Router {
                     name: name.to_string(),
                     past: inner.past.get(name).copied().unwrap_or_default(),
                     live: inner.loaded.get(name).map(|lm| {
-                        (Arc::clone(&lm.server), lm.input_shape.clone(), lm.plan)
+                        (Arc::clone(&lm.server), lm.input_shape.clone(), lm.plan, lm.bytes)
                     }),
                     // evicted-but-still-draining incarnations stay
                     // visible, so a model's counters never dip
@@ -807,9 +1020,9 @@ impl Router {
                 metrics.merge_from(&srv.metrics_summary());
             }
             let (loaded, known) = match seed.live {
-                Some((srv, shape, plan)) => {
+                Some((srv, shape, plan, bytes)) => {
                     metrics.merge_from(&srv.metrics_summary());
-                    (true, Some((shape, plan)))
+                    (true, Some((shape, plan, bytes)))
                 }
                 None => (false, None),
             };
@@ -834,7 +1047,7 @@ impl Router {
     /// requests are answered), fold final metrics, and return the lifetime
     /// [`RouterMetrics`].
     pub fn shutdown(self) -> RouterMetrics {
-        let Router { registry, cfg: _, pool, inner, load_done: _, started } = self;
+        let Router { registry, cfg, pool, inner, load_done: _, started } = self;
         let mut inner = inner.into_inner().unwrap();
         // `shutdown(self)` cannot race a `resolve(&self)`, so `draining`
         // is normally empty here; fold defensively anyway
@@ -844,11 +1057,11 @@ impl Router {
         }
         // remember what the loaded incarnations knew (shape, plan) so the
         // final report keeps reporting it
-        let mut known: BTreeMap<String, (Vec<usize>, Option<PlanSummary>)> = BTreeMap::new();
+        let mut known: BTreeMap<String, (Vec<usize>, Option<PlanSummary>, u64)> = BTreeMap::new();
         for (name, lm) in std::mem::take(&mut inner.loaded) {
             let final_summary = lm.server.drain().summary();
             inner.past.entry(name.clone()).or_default().merge_from(&final_summary);
-            known.insert(name, (lm.input_shape, lm.plan));
+            known.insert(name, (lm.input_shape, lm.plan, lm.bytes));
         }
         let default = registry.default_name().unwrap_or_default().to_string();
         let names: Vec<String> = registry.names().map(|n| n.to_string()).collect();
@@ -865,6 +1078,10 @@ impl Router {
             unknown_model: inner.unknown,
             loads: inner.loads,
             evictions: inner.evictions,
+            // every incarnation was just drained: nothing stays resident
+            resident_bytes: 0,
+            budget: cfg.max_bytes,
+            dedup_hits: inner.dedup_hits,
             load_latency: inner.load_latency.summary(),
             wall_s: started.elapsed().as_secs_f64(),
             models,
@@ -883,18 +1100,28 @@ fn model_status(
     default: &str,
     name: String,
     loaded: bool,
-    known: Option<(Vec<usize>, Option<PlanSummary>)>,
+    known: Option<(Vec<usize>, Option<PlanSummary>, u64)>,
     metrics: ServeSummary,
 ) -> ModelStatus {
-    let (input_shape, plan) = match known {
-        Some((shape, plan)) => (Some(shape), plan),
+    let (input_shape, plan, bytes) = match known {
+        // a drained incarnation still reports shape/plan, but holds no bytes
+        Some((shape, plan, bytes)) => (Some(shape), plan, loaded.then_some(bytes)),
         None => {
             let src = registry.entries.get(&name);
             (
                 src.and_then(|s| s.input_shape()),
                 src.and_then(|s| s.plan_summary()),
+                None,
             )
         }
     };
-    ModelStatus { default: name == default, name, loaded, input_shape, plan, metrics }
+    ModelStatus {
+        default: name == default,
+        name,
+        loaded,
+        input_shape,
+        plan,
+        resident_bytes: bytes,
+        metrics,
+    }
 }

@@ -29,7 +29,7 @@
 //! The legacy one-shot front-ends (`coordinator::serve_requests`) are thin
 //! shims over this type.
 
-use std::collections::VecDeque;
+use std::collections::{BTreeMap, VecDeque};
 use std::sync::{mpsc, Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
@@ -185,6 +185,9 @@ struct Job {
     image: Vec<f32>,
     enqueued: Instant,
     deadline: Option<Instant>,
+    /// per-request accumulator operating point (validated against the
+    /// model's embedded plan at batch-assembly time)
+    acc_bits: Option<u32>,
     tx: mpsc::Sender<ServeResponse>,
 }
 
@@ -357,6 +360,21 @@ impl Server {
         image: Vec<f32>,
         deadline: Option<Duration>,
     ) -> Result<PendingResponse, SubmitError> {
+        self.submit_with(id, image, deadline, None)
+    }
+
+    /// [`Server::submit`] with a per-request accumulator operating point:
+    /// the request's batch group runs at `min(acc_bits, analytic bound)`
+    /// per layer instead of the embedded plan's widths. Validation happens
+    /// at batch-assembly time — a plan-free model, or an `acc_bits` below
+    /// the plan's widest layer, answers with [`ServeError::BadRequest`].
+    pub fn submit_with(
+        &self,
+        id: u64,
+        image: Vec<f32>,
+        deadline: Option<Duration>,
+        acc_bits: Option<u32>,
+    ) -> Result<PendingResponse, SubmitError> {
         let deadline = self.resolve_deadline(deadline);
         let (tx, rx) = mpsc::channel();
         let mut q = self.shared.queue.lock().unwrap();
@@ -365,7 +383,14 @@ impl Server {
                 return Err(SubmitError::Closed(image));
             }
             if q.jobs.len() < self.shared.scfg.queue_cap {
-                q.jobs.push_back(Job { id, image, enqueued: Instant::now(), deadline, tx });
+                q.jobs.push_back(Job {
+                    id,
+                    image,
+                    enqueued: Instant::now(),
+                    deadline,
+                    acc_bits,
+                    tx,
+                });
                 drop(q);
                 self.shared.not_empty.notify_one();
                 return Ok(PendingResponse { id, rx });
@@ -382,6 +407,18 @@ impl Server {
         image: Vec<f32>,
         deadline: Option<Duration>,
     ) -> Result<PendingResponse, SubmitError> {
+        self.try_submit_with(id, image, deadline, None)
+    }
+
+    /// [`Server::try_submit`] with a per-request accumulator operating
+    /// point (see [`Server::submit_with`]).
+    pub fn try_submit_with(
+        &self,
+        id: u64,
+        image: Vec<f32>,
+        deadline: Option<Duration>,
+        acc_bits: Option<u32>,
+    ) -> Result<PendingResponse, SubmitError> {
         let deadline = self.resolve_deadline(deadline);
         let (tx, rx) = mpsc::channel();
         let mut q = self.shared.queue.lock().unwrap();
@@ -391,7 +428,7 @@ impl Server {
         if q.jobs.len() >= self.shared.scfg.queue_cap {
             return Err(SubmitError::Full(image));
         }
-        q.jobs.push_back(Job { id, image, enqueued: Instant::now(), deadline, tx });
+        q.jobs.push_back(Job { id, image, enqueued: Instant::now(), deadline, acc_bits, tx });
         drop(q);
         self.shared.not_empty.notify_one();
         Ok(PendingResponse { id, rx })
@@ -534,9 +571,12 @@ fn worker_loop(shared: &Shared) {
 fn process_batch(engine: &mut Engine, shared: &Shared, dim: usize, jobs: Vec<Job>) {
     // per-request validation: an expired or malformed request answers with
     // an error and never reaches the engine (one bad request cannot hurt
-    // batch-mates, and a dead client cannot pin an engine)
+    // batch-mates, and a dead client cannot pin an engine). Requests that
+    // survive are grouped by their accumulator operating point — `None`
+    // (the embedded plan / global width) plus one group per requested
+    // `acc_bits` — and each group gets its own engine invocation.
     let now = Instant::now();
-    let mut valid: Vec<Job> = Vec::with_capacity(jobs.len());
+    let mut groups: BTreeMap<Option<u32>, Vec<Job>> = BTreeMap::new();
     for j in jobs {
         if j.deadline.is_some_and(|d| now >= d) {
             let waited_us = dur_us(j.enqueued.elapsed()) as u64;
@@ -547,16 +587,57 @@ fn process_batch(engine: &mut Engine, shared: &Shared, dim: usize, jobs: Vec<Job
                 j.image.len()
             ));
             respond(shared, &j, Err(err), 0.0, 0);
+        } else if let Some(w) = j.acc_bits {
+            match &shared.model.plan {
+                None => {
+                    let err = ServeError::BadRequest(
+                        "acc_bits override requires a model with an embedded \
+                         accumulator plan (save one with `pqs plan`)"
+                            .into(),
+                    );
+                    respond(shared, &j, Err(err), 0.0, 0);
+                }
+                Some(plan) if w < plan.min_safe_bits() => {
+                    let err = ServeError::BadRequest(format!(
+                        "acc_bits {w} is below the plan's safe minimum {} \
+                         (widest planned layer)",
+                        plan.min_safe_bits()
+                    ));
+                    respond(shared, &j, Err(err), 0.0, 0);
+                }
+                Some(_) => groups.entry(Some(w)).or_default().push(j),
+            }
         } else {
-            valid.push(j);
+            groups.entry(None).or_default().push(j);
         }
     }
+    // `None` sorts first, so plan-width requests run before any override
+    // re-programs the engine's per-layer widths
+    let mut overridden = false;
+    for (width, valid) in groups {
+        if let Some(w) = width {
+            let plan = shared.model.plan.as_ref().expect("validated above");
+            engine.apply_layer_bits(&plan.operating_point(w));
+            overridden = true;
+        }
+        run_group(engine, shared, dim, &valid);
+    }
+    if overridden {
+        // restore the embedded plan for the next batch on this engine
+        if let Some(plan) = &shared.model.plan {
+            engine.apply_plan(plan);
+        }
+    }
+}
+
+/// One engine invocation over an already-validated group of jobs.
+fn run_group(engine: &mut Engine, shared: &Shared, dim: usize, valid: &[Job]) {
     if valid.is_empty() {
         return;
     }
     let n = valid.len();
     let mut flat = Vec::with_capacity(n * dim);
-    for j in &valid {
+    for j in valid {
         flat.extend_from_slice(&j.image);
     }
     let t0 = Instant::now();
@@ -576,7 +657,7 @@ fn process_batch(engine: &mut Engine, shared: &Shared, dim: usize, jobs: Vec<Job
         Err(e) => {
             // engine failure: per-request error responses, service survives
             let msg = format!("forward failed: {e:#}");
-            for j in &valid {
+            for j in valid {
                 respond(shared, j, Err(ServeError::Internal(msg.clone())), compute_us, n);
             }
         }

@@ -14,10 +14,25 @@
 //! sections) load exactly as before. The only tag this build understands
 //! is `"plan"` — a per-layer accumulator-bitwidth plan
 //! ([`crate::plan::AccumPlan`]) that `nn::Engine` applies automatically.
+//!
+//! ### Zero-copy loading
+//! [`PqswModel::load`] keeps the raw file bytes alive as one shared
+//! `Arc<[u8]>`, parses only the JSON header, and hands each quantized
+//! layer a [`Weights::Borrowed`] view straight into the 8-aligned blob
+//! section — no per-layer copy, and the layout is mmap-friendly should a
+//! platform mmap backend land later. [`PqswModel::load_eager`] is the old
+//! decode-everything path; both are bit-identical through the engine
+//! because [`Weights`] derefs to the same `[i8]` either way. Every model
+//! additionally exposes [`PqswModel::content_hash`] (an FNV-1a digest of
+//! its quantized layers, independent of how the bytes are hosted) and
+//! [`PqswModel::resident_bytes`] (exact owned-plus-shared accounting,
+//! each distinct backing blob counted once) so callers like the fleet
+//! router can budget and dedup resident weight memory.
 
 use anyhow::{anyhow, bail, Context, Result};
 use std::collections::BTreeMap;
 use std::path::Path;
+use std::sync::Arc;
 
 use crate::plan::AccumPlan;
 use crate::util::json::{self, Json};
@@ -77,6 +92,132 @@ impl Op {
     }
 }
 
+/// Streaming FNV-1a (64-bit) — the dependency-free content digest used
+/// for [`PqswModel::content_hash`] and the router's blob dedup map.
+#[derive(Clone, Copy, Debug)]
+pub struct Fnv1a(u64);
+
+impl Fnv1a {
+    const OFFSET: u64 = 0xcbf29ce484222325;
+    const PRIME: u64 = 0x100000001b3;
+
+    pub fn new() -> Fnv1a {
+        Fnv1a(Self::OFFSET)
+    }
+
+    pub fn write(&mut self, bytes: &[u8]) {
+        for &b in bytes {
+            self.0 ^= b as u64;
+            self.0 = self.0.wrapping_mul(Self::PRIME);
+        }
+    }
+
+    pub fn finish(&self) -> u64 {
+        self.0
+    }
+}
+
+impl Default for Fnv1a {
+    fn default() -> Fnv1a {
+        Fnv1a::new()
+    }
+}
+
+/// A layer's int8 weights: either an owned `Vec<i8>` (eager loads,
+/// programmatic models) or a borrowed window into a shared `Arc<[u8]>`
+/// file blob (lazy loads). Both deref to `&[i8]`, so every consumer —
+/// the engine, `save`, sparsity stats — sees the identical slice either
+/// way; the variant only changes who owns the bytes.
+#[derive(Clone)]
+pub enum Weights {
+    Owned(Vec<i8>),
+    Borrowed {
+        blob: Arc<[u8]>,
+        offset: usize,
+        len: usize,
+    },
+}
+
+impl Weights {
+    pub fn as_slice(&self) -> &[i8] {
+        match self {
+            Weights::Owned(v) => v,
+            Weights::Borrowed { blob, offset, len } => {
+                let bytes = &blob[*offset..*offset + *len];
+                // SAFETY: i8 and u8 have identical size, alignment, and
+                // validity; reinterpreting a byte slice is lossless.
+                unsafe { std::slice::from_raw_parts(bytes.as_ptr() as *const i8, bytes.len()) }
+            }
+        }
+    }
+
+    pub fn is_borrowed(&self) -> bool {
+        matches!(self, Weights::Borrowed { .. })
+    }
+
+    /// The shared file blob backing a borrowed view (`None` when owned).
+    pub fn backing_blob(&self) -> Option<&Arc<[u8]>> {
+        match self {
+            Weights::Owned(_) => None,
+            Weights::Borrowed { blob, .. } => Some(blob),
+        }
+    }
+
+    pub fn to_owned_vec(&self) -> Vec<i8> {
+        self.as_slice().to_vec()
+    }
+
+    /// Re-point a borrowed view at `canonical` when the backing bytes are
+    /// byte-identical, so duplicate loads share one allocation. Returns
+    /// whether the view now borrows from `canonical`.
+    pub fn rehost(&mut self, canonical: &Arc<[u8]>) -> bool {
+        match self {
+            Weights::Owned(_) => false,
+            Weights::Borrowed { blob, .. } => {
+                if Arc::ptr_eq(blob, canonical) {
+                    return true;
+                }
+                if **blob == **canonical {
+                    *blob = Arc::clone(canonical);
+                    return true;
+                }
+                false
+            }
+        }
+    }
+}
+
+impl std::ops::Deref for Weights {
+    type Target = [i8];
+
+    fn deref(&self) -> &[i8] {
+        self.as_slice()
+    }
+}
+
+impl From<Vec<i8>> for Weights {
+    fn from(v: Vec<i8>) -> Weights {
+        Weights::Owned(v)
+    }
+}
+
+impl PartialEq for Weights {
+    fn eq(&self, other: &Weights) -> bool {
+        self.as_slice() == other.as_slice()
+    }
+}
+
+impl std::fmt::Debug for Weights {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Weights::Owned(v) => write!(f, "Weights::Owned({} values)", v.len()),
+            Weights::Borrowed { len, offset, .. } => {
+                write!(f, "Weights::Borrowed({len} values @ blob+{offset})")
+            }
+        }
+    }
+}
+
 /// Quantized-layer metadata + weights.
 #[derive(Clone, Debug)]
 pub struct QLayerMeta {
@@ -92,7 +233,7 @@ pub struct QLayerMeta {
     pub x_scale: f32,
     pub x_offset: i32,
     /// int8 weights, (oc, K) row-major; K = ic*kh*kw (kh*kw for depthwise)
-    pub wq: Vec<i8>,
+    pub wq: Weights,
     /// contraction length
     pub k: usize,
     pub bias: Vec<f32>,
@@ -137,11 +278,28 @@ struct Blob {
 }
 
 impl PqswModel {
+    /// Parse a `.pqsw` file *lazily*: the JSON header is decoded, but each
+    /// layer's int8 weights stay in the shared file blob (`Arc<[u8]>`) as
+    /// [`Weights::Borrowed`] views — one allocation for the whole file,
+    /// no per-layer copies.
     pub fn load<P: AsRef<Path>>(path: P) -> Result<PqswModel> {
-        let raw = std::fs::read(path.as_ref())
-            .with_context(|| format!("reading model {:?}", path.as_ref()))?;
+        Self::load_impl(path.as_ref(), false)
+    }
+
+    /// Parse a `.pqsw` file *eagerly*: every layer's weights are decoded
+    /// into owned `Vec<i8>`s and the file buffer is dropped. Bit-identical
+    /// to [`PqswModel::load`]; kept for callers that want to release the
+    /// (padded, header-carrying) file bytes after load.
+    pub fn load_eager<P: AsRef<Path>>(path: P) -> Result<PqswModel> {
+        Self::load_impl(path.as_ref(), true)
+    }
+
+    fn load_impl(path: &Path, eager: bool) -> Result<PqswModel> {
+        let raw: Arc<[u8]> = std::fs::read(path)
+            .with_context(|| format!("reading model {path:?}"))?
+            .into();
         if raw.len() < 12 || &raw[0..8] != MAGIC {
-            bail!("bad PQSW magic in {:?}", path.as_ref());
+            bail!("bad PQSW magic in {path:?}");
         }
         let hlen = u32::from_le_bytes(raw[8..12].try_into().unwrap()) as usize;
         let hdr_txt = std::str::from_utf8(&raw[12..12 + hlen]).context("header utf8")?;
@@ -162,10 +320,18 @@ impl PqswModel {
             })
             .collect::<Result<_>>()?;
 
-        let blob_bytes = |i: usize| -> Result<&[u8]> {
+        // absolute (offset, len) of blob i, bounds-checked against the file
+        let blob_span = |i: usize| -> Result<(usize, usize)> {
             let b = blobs.get(i).ok_or_else(|| anyhow!("blob index {i}"))?;
             let a = blob_base + b.offset;
-            raw.get(a..a + b.len).ok_or_else(|| anyhow!("blob {i} out of bounds"))
+            if raw.get(a..a + b.len).is_none() {
+                bail!("blob {i} out of bounds");
+            }
+            Ok((a, b.len))
+        };
+        let blob_bytes = |i: usize| -> Result<&[u8]> {
+            let (a, len) = blob_span(i)?;
+            Ok(&raw[a..a + len])
         };
 
         let mut graph = Vec::new();
@@ -183,12 +349,16 @@ impl PqswModel {
                 let ic = geti("ic", 0);
                 let kh = geti("kh", 1);
                 let kw = geti("kw", 1);
-                let wq_raw = blob_bytes(geti("wq_blob", usize::MAX))?;
+                let (wq_off, wq_len) = blob_span(geti("wq_blob", usize::MAX))?;
                 let bias_raw = blob_bytes(geti("bias_blob", usize::MAX))?;
                 if blobs[geti("wq_blob", 0)].dtype != "i8" {
                     bail!("weight blob dtype");
                 }
-                let wq: Vec<i8> = wq_raw.iter().map(|&b| b as i8).collect();
+                let wq: Weights = if eager {
+                    Weights::Owned(raw[wq_off..wq_off + wq_len].iter().map(|&b| b as i8).collect())
+                } else {
+                    Weights::Borrowed { blob: Arc::clone(&raw), offset: wq_off, len: wq_len }
+                };
                 let bias: Vec<f32> = bias_raw
                     .chunks_exact(4)
                     .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
@@ -398,6 +568,85 @@ impl PqswModel {
             z as f64 / t as f64
         }
     }
+
+    /// FNV-1a digest over the quantized layers — shape, weights, bias —
+    /// independent of whether the weights are owned or borrowed (and of
+    /// header padding, scales cosmetics, or an embedded plan), so two
+    /// loads of byte-identical weight content hash equal.
+    pub fn content_hash(&self) -> u64 {
+        let mut h = Fnv1a::new();
+        for (_, q) in self.q_layers() {
+            h.write(&(q.oc as u64).to_le_bytes());
+            h.write(&(q.k as u64).to_le_bytes());
+            let w = q.wq.as_slice();
+            // SAFETY: i8 and u8 have identical size, alignment, validity.
+            let bytes =
+                unsafe { std::slice::from_raw_parts(w.as_ptr() as *const u8, w.len()) };
+            h.write(bytes);
+            for b in &q.bias {
+                h.write(&b.to_le_bytes());
+            }
+        }
+        h.finish()
+    }
+
+    /// Exact bytes this model keeps resident: owned weights + biases in
+    /// full, plus each *distinct* shared backing blob counted once (so a
+    /// lazily-loaded model is charged its whole file buffer exactly once,
+    /// and models rehosted onto a common blob can be net-charged zero by
+    /// a caller that tracks blobs separately).
+    pub fn resident_bytes(&self) -> u64 {
+        let mut total = 0u64;
+        let mut seen: Vec<*const u8> = Vec::new();
+        for (_, q) in self.q_layers() {
+            match &q.wq {
+                Weights::Owned(v) => total += v.len() as u64,
+                Weights::Borrowed { blob, .. } => {
+                    let p = blob.as_ptr();
+                    if !seen.contains(&p) {
+                        seen.push(p);
+                        total += blob.len() as u64;
+                    }
+                }
+            }
+            total += (q.bias.len() * 4) as u64;
+        }
+        total
+    }
+
+    /// The shared file blob backing this model's borrowed weights, if any
+    /// (the first one found; a single `load` only ever creates one).
+    pub fn backing_blob(&self) -> Option<Arc<[u8]>> {
+        self.graph
+            .iter()
+            .filter_map(|n| n.q.as_ref())
+            .find_map(|q| q.wq.backing_blob().map(Arc::clone))
+    }
+
+    /// Convert every borrowed weight view into an owned copy, releasing
+    /// the shared file blob.
+    pub fn materialize(&mut self) {
+        for n in &mut self.graph {
+            if let Some(q) = &mut n.q {
+                if q.wq.is_borrowed() {
+                    q.wq = Weights::Owned(q.wq.to_owned_vec());
+                }
+            }
+        }
+    }
+
+    /// Re-point every borrowed weight view at `canonical` when byte-
+    /// identical (see [`Weights::rehost`]); returns whether any view now
+    /// borrows from `canonical`.
+    pub fn rehost(&mut self, canonical: &Arc<[u8]>) -> bool {
+        let mut any = false;
+        for n in &mut self.graph {
+            if let Some(q) = &mut n.q {
+                any |= q.wq.rehost(canonical);
+            }
+        }
+        any
+    }
 }
 
 #[cfg(test)]
@@ -497,5 +746,92 @@ mod tests {
         model.save(&p1).unwrap();
         let back = PqswModel::load(&p1).unwrap();
         assert_eq!(back.plan.as_ref(), Some(&plan));
+    }
+
+    #[test]
+    fn lazy_load_borrows_eager_load_owns_both_identical() {
+        let dir = std::env::temp_dir().join("pqs_test_pqsw_lazy");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("lazy.pqsw");
+        let model = crate::models::synthetic_conv(2, 6, 6, 4, 10);
+        model.save(&p).unwrap();
+
+        let lazy = PqswModel::load(&p).unwrap();
+        let eager = PqswModel::load_eager(&p).unwrap();
+        let blob = lazy.backing_blob().expect("lazy load keeps a shared blob");
+        assert!(eager.backing_blob().is_none(), "eager load owns everything");
+        for ((_, ql), (_, qe)) in lazy.q_layers().zip(eager.q_layers()) {
+            assert!(ql.wq.is_borrowed());
+            assert!(!qe.wq.is_borrowed());
+            assert_eq!(ql.wq, qe.wq, "weight views bit-identical");
+            assert!(
+                Arc::ptr_eq(ql.wq.backing_blob().unwrap(), &blob),
+                "one blob backs every layer"
+            );
+        }
+        assert_eq!(lazy.content_hash(), eager.content_hash());
+        assert_eq!(lazy.content_hash(), model.content_hash(), "hash is storage-independent");
+
+        // resident accounting: lazy is charged the file once; eager the
+        // decoded vectors
+        let bias: u64 = model.q_layers().map(|(_, q)| q.bias.len() as u64 * 4).sum();
+        let wq: u64 = model.q_layers().map(|(_, q)| q.wq.len() as u64).sum();
+        assert_eq!(lazy.resident_bytes(), blob.len() as u64 + bias);
+        assert_eq!(eager.resident_bytes(), wq + bias);
+
+        // materialize releases the blob and changes nothing observable
+        let mut owned = lazy.clone();
+        owned.materialize();
+        assert!(owned.backing_blob().is_none());
+        assert_eq!(owned.content_hash(), lazy.content_hash());
+        assert_eq!(owned.resident_bytes(), eager.resident_bytes());
+    }
+
+    #[test]
+    fn rehost_dedups_byte_identical_blobs() {
+        let dir = std::env::temp_dir().join("pqs_test_pqsw_rehost");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("rehost.pqsw");
+        let model = crate::models::synthetic_linear(32, 8);
+        model.save(&p).unwrap();
+        let canonical = PqswModel::load(&p).unwrap();
+        let canon_blob = canonical.backing_blob().unwrap();
+        let mut dup = PqswModel::load(&p).unwrap();
+        let dup_blob = dup.backing_blob().unwrap();
+        assert!(!Arc::ptr_eq(&canon_blob, &dup_blob), "separate loads, separate buffers");
+        assert!(dup.rehost(&canon_blob), "byte-identical bytes rehost");
+        assert!(Arc::ptr_eq(&dup.backing_blob().unwrap(), &canon_blob));
+        for ((_, qa), (_, qb)) in dup.q_layers().zip(canonical.q_layers()) {
+            assert_eq!(qa.wq, qb.wq);
+        }
+        // a different file must refuse
+        let other = crate::models::synthetic_linear(32, 9);
+        let p2 = dir.join("other.pqsw");
+        other.save(&p2).unwrap();
+        let mut other = PqswModel::load(&p2).unwrap();
+        assert!(!other.rehost(&canon_blob), "different bytes must not rehost");
+        // owned weights never rehost
+        let mut owned = canonical.clone();
+        owned.materialize();
+        assert!(!owned.rehost(&canon_blob));
+    }
+
+    #[test]
+    fn planfree_lazy_load_resaves_byte_identical() {
+        // v1 files (no plan) round-trip byte-for-byte through a *lazy*
+        // load + save: borrowed weight views must serialize exactly like
+        // the owned originals
+        let dir = std::env::temp_dir().join("pqs_test_pqsw_resave");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p0 = dir.join("orig.pqsw");
+        let p1 = dir.join("resaved.pqsw");
+        let model = crate::models::synthetic_conv(2, 6, 6, 4, 10);
+        model.save(&p0).unwrap();
+        let loaded = PqswModel::load(&p0).unwrap();
+        assert!(loaded.q_layers().all(|(_, q)| q.wq.is_borrowed()));
+        loaded.save(&p1).unwrap();
+        let a = std::fs::read(&p0).unwrap();
+        let b = std::fs::read(&p1).unwrap();
+        assert_eq!(a, b, "plan-free lazy round-trip is byte-identical");
     }
 }

@@ -27,7 +27,7 @@
 //!
 //! ```json
 //! {"image": [0.1, 0.5, ...], "model": "mlp1_w8a8", "id": 7,
-//!  "deadline_ms": 50.0}
+//!  "deadline_ms": 50.0, "acc_bits": 24}
 //! ```
 //!
 //! * `image` — required; flat row-major pixel array matching the target
@@ -46,6 +46,16 @@
 //!   still queued when it expires, workers skip it *before* it touches an
 //!   engine and the response is `504` with an `"error"` body. Without it
 //!   the router's `ServerConfig::default_deadline` applies.
+//! * `acc_bits` (alias `operating_point`; giving both is `400`) —
+//!   optional accumulator operating point: a positive integer width the
+//!   routed model should run THIS request at, against the same resident
+//!   weights. Each layer runs at `min(acc_bits, analytic_bits)` — at
+//!   least its planned width, never past its analytic guarantee — so a
+//!   wide request (e.g. `32`) buys overflow headroom without loading a
+//!   second model. Requires a model with an embedded accumulator plan;
+//!   a plan-free model, or a width below the plan's safe minimum (its
+//!   widest planned layer), is answered `400` per-request without
+//!   disturbing batch-mates. Absent = the embedded plan's own widths.
 //!
 //! `200` response body:
 //!
@@ -60,8 +70,10 @@
 //! model — `name`, `default`, `loaded` (is a live server holding it right
 //! now), `input_shape` (`null` until knowable), the model's embedded
 //! accumulator-bitwidth `plan` summary (`null` for plan-free models;
-//! populated once loaded, and pre-load for in-memory sources), and the
-//! model's lifetime `metrics` (which survive LRU eviction):
+//! populated once loaded, and pre-load for in-memory sources),
+//! `resident_bytes` (the live incarnation's measured weight bytes —
+//! owned weights plus its shared file blob; `null` while unloaded), and
+//! the model's lifetime `metrics` (which survive LRU eviction):
 //!
 //! ```json
 //! {"default": "a",
@@ -70,6 +82,7 @@
 //!              "plan": {"planner": "calibrated", "layers": 3,
 //!                       "min_bits": 11, "max_bits": 14,
 //!                       "mean_bits": 12.3},
+//!              "resident_bytes": 51240,
 //!              "metrics": {"requests": 12, "...": "..."}}]}
 //! ```
 //!
@@ -84,7 +97,10 @@
 //! `200` with the full metrics tree: fleet-wide aggregate counters and
 //! latency/queue/compute summaries at the top level (single-model clients
 //! keep working), a `router` section (`routed`, `unknown_model`, `loads`,
-//! `evictions`, `load_latency`), per-model [`crate::coordinator::ServeSummary`]
+//! `evictions`, `resident_bytes` — deduped fleet-wide weight bytes, each
+//! shared blob counted once — the configured byte `budget` (`0` =
+//! unlimited), `dedup_hits`, `load_latency`), per-model
+//! [`crate::coordinator::ServeSummary`]
 //! sections under `models` keyed by name, the front-end's own `http`
 //! counters (`accepted`/`shed`/`read_timeouts` connections), and the
 //! shared compute `pool` utilization (`null` when engines run
@@ -107,12 +123,12 @@
 //! | code | meaning |
 //! |------|---------|
 //! | 200  | classified / snapshot served |
-//! | 400  | malformed HTTP (bad request line, header, `Content-Length`, chunk framing, unsupported transfer coding), invalid JSON, missing/wrong-size `image`, non-string `model` |
+//! | 400  | malformed HTTP (bad request line, header, `Content-Length`, chunk framing, unsupported transfer coding), invalid JSON, missing/wrong-size `image`, non-string `model`, malformed `acc_bits` (non-positive, non-integer, or given together with `operating_point`), an `acc_bits` below the plan's safe minimum, or an `acc_bits` override on a plan-free model |
 //! | 404  | unknown path, or `model` names an unregistered model (body lists the registered fleet) |
 //! | 405  | wrong method on a known path (`Allow` header lists the right one) |
 //! | 408  | a partial request stalled past the keep-alive timeout (counted in `http.read_timeouts`) |
 //! | 413  | head, declared body, or decoded chunked body over the configured limits |
-//! | 500  | engine failure on the batch the request rode in, or a registered model's source failed to load |
+//! | 500  | engine failure on the batch the request rode in, or a registered model's source failed to load (including a model whose measured bytes cannot fit the router's `--max-bytes` budget even on an empty fleet) |
 //! | 503  | target model's queue full, connection backlog full, or shutting down |
 //! | 504  | per-request deadline expired in queue, or the response-wait backstop fired |
 //!

@@ -451,8 +451,34 @@ fn classify(ctx: &Ctx, req: &Request<'_>, keep: bool) -> (Vec<u8>, bool) {
         .and_then(Json::as_f64)
         .filter(|ms| ms.is_finite())
         .map(|ms| Duration::from_secs_f64(ms.clamp(0.0, 86_400_000.0) / 1e3));
+    // per-request accumulator operating point ("operating_point" is an
+    // accepted alias). Only the field's shape is checked here; the width
+    // itself is validated against the routed model's embedded plan by its
+    // server, which answers an under-bound or plan-free override with
+    // BadRequest → 400
+    let acc_field = match (payload.get("acc_bits"), payload.get("operating_point")) {
+        (Some(_), Some(_)) => {
+            return (
+                error_response(400, "use \"acc_bits\" or \"operating_point\", not both", keep),
+                keep,
+            )
+        }
+        (v, None) | (None, v) => v,
+    };
+    let acc_bits: Option<u32> = match acc_field {
+        None => None,
+        Some(v) => match v.as_i64().and_then(|i| u32::try_from(i).ok()).filter(|&b| b > 0) {
+            Some(b) => Some(b),
+            None => {
+                return (
+                    error_response(400, "\"acc_bits\" must be a positive integer", keep),
+                    keep,
+                )
+            }
+        },
+    };
 
-    let request = ClassifyRequest { id, model, image, deadline };
+    let request = ClassifyRequest { id, model, image, deadline, acc_bits };
     let pending = match ctx.router.try_submit(request) {
         Ok(p) => p,
         Err(RouteError::UnknownModel(msg)) => return (error_response(404, &msg, keep), keep),
@@ -646,6 +672,9 @@ fn metrics_json(rm: &RouterMetrics, hm: &HttpMetrics) -> String {
                 ("unknown_model", json::num(rm.unknown_model as f64)),
                 ("loads", json::num(rm.loads as f64)),
                 ("evictions", json::num(rm.evictions as f64)),
+                ("resident_bytes", json::num(rm.resident_bytes as f64)),
+                ("budget", json::num(rm.budget as f64)),
+                ("dedup_hits", json::num(rm.dedup_hits as f64)),
                 ("load_latency", summary_json(&rm.load_latency)),
             ]),
         ),
@@ -676,6 +705,10 @@ fn models_json(default: &str, models: &[ModelStatus]) -> String {
                 ("loaded", Json::Bool(m.loaded)),
                 ("input_shape", shape_json(&m.input_shape)),
                 ("plan", plan_json(&m.plan)),
+                (
+                    "resident_bytes",
+                    m.resident_bytes.map_or(Json::Null, |b| json::num(b as f64)),
+                ),
                 ("metrics", serve_metrics_json(&m.metrics)),
             ])
         })

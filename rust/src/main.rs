@@ -2,6 +2,7 @@
 //!
 //! Subcommands:
 //!   list                         list trained models from the manifest
+//!        (with each entry's on-disk byte size and weight content hash)
 //!   describe --model NAME        model summary (layers, dot lengths, sparsity)
 //!   eval --model NAME [--policy sorted|clip|wrap|sorted1|oracle|exact]
 //!        [--acc-bits P] [--tile K] [--limit N] [--stats] [--batch B]
@@ -15,27 +16,35 @@
 //!        widths (guaranteed overflow-free, see pqs::plan) plus — with
 //!        --calibrate N — empirically tightened widths from N sample
 //!        inputs (binary-searched against --budget, padded by --margin
-//!        safety bits, capped at the analytic bound). Prints the
+//!        safety bits, capped at the analytic bound). Calibration uses
+//!        the real test set when the artifacts provide one matching the
+//!        model's input shape, else deterministic synthetic inputs.
+//!        Prints the
 //!        per-layer table and the total accumulator-bit savings vs a
 //!        32-bit baseline. SPEC is as for serve-http --model (default:
 //!        a synthetic CNN, so the command runs without artifacts).
 //!        --emit writes a .pqsw with the plan embedded as a versioned
 //!        section; serving that file enforces the per-layer widths and
 //!        reports the plan in GET /v1/models.
-//!   serve-http [--addr HOST:PORT] [--model NAME[=SPEC]]... [--max-loaded M]
-//!        [--preload NAME]... [--threads N] [--engine-threads T]
+//!   serve-http [--addr HOST:PORT] [--model NAME[=SPEC[,OPTS]]]...
+//!        [--max-loaded M] [--max-bytes B] [--preload NAME]...
+//!        [--threads N] [--engine-threads T]
 //!        [--max-batch B] [--queue-cap Q] [--deadline-ms MS] [--for-secs S]
 //!        multi-model HTTP/1.1 front-end over the serving router
-//!        (POST /v1/classify with an optional "model" field,
+//!        (POST /v1/classify with optional "model" and "acc_bits" fields,
 //!        GET /v1/models, GET /v1/metrics, GET /healthz — see the
 //!        `pqs::http` module docs for the wire protocol).
 //!        `--model` repeats; the first is the default route. Each SPEC is
 //!        `linear:<dim>x<classes>`, `conv:<c>x<h>x<w>x<oc>x<classes>`, a
 //!        `.pqsw` path, or (bare name / no SPEC) a manifest entry loaded
-//!        lazily on first request. Without any `--model`: every manifest
-//!        model is registered (artifacts present), else two synthetic
-//!        models. `--max-loaded` caps simultaneously-loaded models (LRU
-//!        eviction; 0 = unlimited). `--preload NAME` (repeatable) loads
+//!        lazily on first request; trailing `,acc_bits=N` / `,threads=M`
+//!        OPTS attach per-model engine overrides. Without any `--model`:
+//!        every manifest model is registered (artifacts present), else
+//!        two synthetic models. `--max-loaded` caps simultaneously-loaded
+//!        models (LRU eviction; 0 = unlimited); `--max-bytes` budgets the
+//!        fleet's resident weight bytes (measured, blob-deduped; loading
+//!        past it LRU-evicts, a model that cannot fit alone is refused;
+//!        0 = unlimited). `--preload NAME` (repeatable) loads
 //!        the named models eagerly at startup instead of on first
 //!        request (counted in the router's `loads`; unknown names fail
 //!        startup). `--engine-threads` sizes the ONE
@@ -56,7 +65,8 @@ use anyhow::{anyhow, bail, Result};
 
 use pqs::accum::Policy;
 use pqs::coordinator::{
-    EvalService, ModelRegistry, ModelSource, Router, RouterConfig, ServerConfig, SyntheticSpec,
+    EvalService, ModelOverrides, ModelRegistry, ModelSource, Router, RouterConfig, ServerConfig,
+    SyntheticSpec,
 };
 use pqs::data::Dataset;
 use pqs::figures;
@@ -92,18 +102,27 @@ fn run() -> Result<()> {
         "list" => {
             let man = Manifest::load_default()?;
             println!(
-                "{:<46} {:<8} {:>6} {:>8} {:>8} {:>10}",
-                "name", "schedule", "w/a", "sparsity", "acc(py)", "plan"
+                "{:<46} {:<8} {:>6} {:>8} {:>8} {:>10} {:>10} {:<16}",
+                "name", "schedule", "w/a", "sparsity", "acc(py)", "plan", "bytes", "hash"
             );
             for (_, e) in &man.models {
                 let plan = match &e.plan {
                     Some(p) => format!("{}..{}b", p.min_bits, p.max_bits),
                     None => "-".to_string(),
                 };
+                // on-disk size + weight content hash ("-" when the file is
+                // missing or unreadable; the hash pays one lazy load)
+                let path = man.model_path(&e.name);
+                let bytes = std::fs::metadata(&path)
+                    .map(|md| md.len().to_string())
+                    .unwrap_or_else(|_| "-".to_string());
+                let hash = pqs::formats::pqsw::PqswModel::load(&path)
+                    .map(|m| format!("{:016x}", m.content_hash()))
+                    .unwrap_or_else(|_| "-".to_string());
                 println!(
-                    "{:<46} {:<8} {:>3}/{:<3} {:>7.1}% {:>8.3} {:>10}",
+                    "{:<46} {:<8} {:>3}/{:<3} {:>7.1}% {:>8.3} {:>10} {:>10} {:<16}",
                     e.name, e.schedule, e.wbits, e.abits, 100.0 * e.achieved_sparsity, e.acc_q,
-                    plan
+                    plan, bytes, hash
                 );
             }
             for (exp, names) in &man.experiments {
@@ -222,8 +241,44 @@ fn run() -> Result<()> {
                 seed: args.get_u32("seed", 0x9A17) as u64,
             };
             println!("planning {} ({} q-layers)", model.name, model.q_layers().count());
+            // calibrate on the real test set when the artifacts provide one
+            // that fits this model; otherwise plan_model_observed falls
+            // back to the planner's deterministic synthetic probe
+            let dim: usize = model.input_shape.iter().product();
+            let observed = if pcfg.calibrate_samples > 0 {
+                let real = manifest.as_ref().and_then(|man| {
+                    let entry = man.test_dataset_for(&model.arch).ok()?;
+                    let ds = Dataset::load(man.dataset_path(&entry.test)).ok()?;
+                    (ds.dim() == dim && ds.n > 0).then_some((entry.test.clone(), ds))
+                });
+                match real {
+                    Some((file, ds)) => {
+                        let n = pcfg.calibrate_samples.min(ds.n);
+                        let batch = pcfg.batch.max(1);
+                        let mut batches: Vec<(Vec<f32>, usize)> = Vec::new();
+                        let mut off = 0;
+                        while off < n {
+                            let b = batch.min(n - off);
+                            batches.push((ds.images_f32(off, b), b));
+                            off += b;
+                        }
+                        println!("calibrating on {n} real samples from {file}");
+                        Some(pqs::plan::observe_batches(
+                            &model,
+                            policy,
+                            batches.iter().map(|(v, b)| (v.as_slice(), *b)),
+                        )?)
+                    }
+                    None => {
+                        println!("(no matching real dataset; calibrating on synthetic inputs)");
+                        None
+                    }
+                }
+            } else {
+                None
+            };
             let t0 = std::time::Instant::now();
-            let plan = pqs::plan::plan_model(&model, &pcfg)?;
+            let plan = pqs::plan::plan_model_observed(&model, &pcfg, observed.as_ref())?;
             println!("planner ran in {:.1} ms", t0.elapsed().as_secs_f64() * 1e3);
             plan.print();
             if let Some(path) = args.get("emit") {
@@ -293,11 +348,44 @@ fn run() -> Result<()> {
                 }
             } else {
                 for spec in specs {
-                    let (name, src) = match spec.split_once('=') {
-                        Some((name, s)) => (name, ModelSource::parse(s, manifest.as_ref())?),
-                        None => (spec, ModelSource::parse(spec, manifest.as_ref())?),
+                    // --model name=SPEC[,acc_bits=N][,threads=M]: the part
+                    // before the first ',' is the model spec; the rest are
+                    // per-model engine overrides
+                    let (name, src, ov) = match spec.split_once('=') {
+                        Some((name, payload)) => {
+                            let mut parts = payload.split(',');
+                            let s = parts.next().unwrap_or_default();
+                            let mut ov = ModelOverrides::default();
+                            for kv in parts {
+                                match kv.split_once('=').map(|(k, v)| (k.trim(), v.trim())) {
+                                    Some(("acc_bits", v)) => {
+                                        ov.acc_bits = Some(v.parse().map_err(|_| {
+                                            anyhow!("bad acc_bits {v:?} in --model {spec:?}")
+                                        })?);
+                                    }
+                                    Some(("threads", v)) => {
+                                        ov.engine_threads = Some(v.parse().map_err(|_| {
+                                            anyhow!("bad threads {v:?} in --model {spec:?}")
+                                        })?);
+                                    }
+                                    _ => bail!(
+                                        "unknown option {kv:?} in --model {spec:?} \
+                                         (supported: acc_bits=N, threads=M)"
+                                    ),
+                                }
+                            }
+                            (name, ModelSource::parse(s, manifest.as_ref())?, ov)
+                        }
+                        None => (
+                            spec,
+                            ModelSource::parse(spec, manifest.as_ref())?,
+                            ModelOverrides::default(),
+                        ),
                     };
                     registry.register(name, src);
+                    if !ov.is_default() {
+                        registry.set_overrides(name, ov)?;
+                    }
                 }
             }
             if registry.is_empty() {
@@ -330,6 +418,9 @@ fn run() -> Result<()> {
             };
             let rcfg = RouterConfig {
                 max_loaded: args.get_usize("max-loaded", 8),
+                // resident weight-byte budget for the loaded fleet
+                // (0 = unlimited)
+                max_bytes: args.get_usize("max-bytes", 0) as u64,
                 engine: cfg,
                 server: scfg,
                 // eager hot-model loads (repeatable --preload NAME)
@@ -341,8 +432,13 @@ fn run() -> Result<()> {
             } else {
                 rcfg.max_loaded.to_string()
             };
+            let budget = if rcfg.max_bytes == 0 {
+                "unlimited".to_string()
+            } else {
+                format!("{}B", rcfg.max_bytes)
+            };
             println!(
-                "serving {} model(s): {} (default {}, max loaded {cap})",
+                "serving {} model(s): {} (default {}, max loaded {cap}, byte budget {budget})",
                 names.len(),
                 names.join(", "),
                 registry.default_name().unwrap_or("?"),
@@ -352,7 +448,7 @@ fn run() -> Result<()> {
             println!("listening on http://{}", http.local_addr());
             println!(
                 "  POST /v1/classify  {{\"image\":[...], \"model\":NAME?, \"id\":N?, \
-                 \"deadline_ms\":MS?}}"
+                 \"deadline_ms\":MS?, \"acc_bits\":P?}}"
             );
             println!("  GET  /v1/models    registered models, load state, per-model metrics");
             println!("  GET  /v1/metrics   serving metrics snapshot (per-model sections)");

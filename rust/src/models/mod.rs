@@ -56,7 +56,7 @@ pub fn synthetic_linear(dim: usize, classes: usize) -> PqswModel {
         w_scale: 0.05,
         x_scale: 1.0 / 255.0,
         x_offset: -128,
-        wq,
+        wq: wq.into(),
         k: dim,
         bias: vec![0.0; classes],
     };
@@ -104,7 +104,7 @@ pub fn synthetic_conv(c: usize, h: usize, w: usize, oc: usize, classes: usize) -
         w_scale: 0.02,
         x_scale: 1.0 / 255.0,
         x_offset: -128,
-        wq: wq_conv,
+        wq: wq_conv.into(),
         k: conv_k,
         bias: vec![0.02; oc],
     };
@@ -121,7 +121,7 @@ pub fn synthetic_conv(c: usize, h: usize, w: usize, oc: usize, classes: usize) -
         w_scale: 0.03,
         x_scale: 0.02,
         x_offset: -128,
-        wq: wq_dw,
+        wq: wq_dw.into(),
         k: 9,
         bias: vec![0.01; oc],
     };
@@ -139,7 +139,7 @@ pub fn synthetic_conv(c: usize, h: usize, w: usize, oc: usize, classes: usize) -
         w_scale: 0.05,
         x_scale: 0.05,
         x_offset: -128,
-        wq: wq_fc,
+        wq: wq_fc.into(),
         k: fc_k,
         bias: vec![0.0; classes],
     };

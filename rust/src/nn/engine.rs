@@ -374,6 +374,21 @@ impl Engine {
         }
     }
 
+    /// Enforce explicit per-layer accumulator widths (matched to q-layers
+    /// by name, like [`Engine::apply_plan`]; unmentioned layers keep the
+    /// global `cfg.acc_bits`). This is the per-request operating-point
+    /// hook: the serving layer derives `widths` from the embedded plan
+    /// via [`AccumPlan::operating_point`] and restores the plan after the
+    /// request group runs.
+    pub fn apply_layer_bits(&mut self, widths: &[(String, u32)]) {
+        for (ni, n) in self.nodes.iter().enumerate() {
+            self.layer_bits[ni] = match &n.layer {
+                Some(l) => widths.iter().find(|(name, _)| *name == l.name).map(|&(_, b)| b),
+                None => None,
+            };
+        }
+    }
+
     /// Drop every per-layer width override; all layers run at the global
     /// `cfg.acc_bits` again (what a plan-free model does).
     pub fn clear_plan(&mut self) {

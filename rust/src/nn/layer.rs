@@ -83,7 +83,7 @@ mod tests {
             w_scale: 0.5,
             x_scale: 0.25,
             x_offset: -8,
-            wq: vec![1, 0, -2, 3, 0, 0, 4, -1],
+            wq: vec![1, 0, -2, 3, 0, 0, 4, -1].into(),
             k: 4,
             bias: vec![0.5, -0.5],
         }

@@ -110,7 +110,7 @@ mod tests {
             w_scale: 0.1,
             x_scale: 0.01,
             x_offset,
-            wq,
+            wq: wq.into(),
             k,
             bias: vec![0.0; oc],
         };

@@ -126,6 +126,26 @@ impl AccumPlan {
         self.per_layer.iter().find(|l| l.name == name).map(|l| l.acc_bits)
     }
 
+    /// Smallest request-level `acc_bits` that covers every planned layer
+    /// (the widest enforced width). A per-request operating point below
+    /// this would narrow some layer past its planned guarantee, so the
+    /// serving layer rejects it with `BadRequest`.
+    pub fn min_safe_bits(&self) -> u32 {
+        self.per_layer.iter().map(|l| l.acc_bits).max().unwrap_or(2)
+    }
+
+    /// Per-layer widths for a requested operating point `width` (>=
+    /// [`AccumPlan::min_safe_bits`]): each layer runs at
+    /// `min(width, analytic_bits)` — at least its planned width, never
+    /// past its analytic guarantee, so wider requests trade accumulator
+    /// narrowness for overflow headroom on the SAME resident weights.
+    pub fn operating_point(&self, width: u32) -> Vec<(String, u32)> {
+        self.per_layer
+            .iter()
+            .map(|l| (l.name.clone(), width.min(l.analytic_bits)))
+            .collect()
+    }
+
     /// Sum of enforced per-layer widths.
     pub fn total_bits(&self) -> u64 {
         self.per_layer.iter().map(|l| l.acc_bits as u64).sum()
@@ -306,8 +326,24 @@ impl Default for PlannerConfig {
 /// Run the planner(s) over `model` and assemble its [`AccumPlan`]:
 /// analytic widths always, calibrated widths when
 /// `cfg.calibrate_samples > 0` (capped at the analytic bound, floored at
-/// 2 bits). Layers are matched by q-layer name, in graph order.
+/// 2 bits). Layers are matched by q-layer name, in graph order. The
+/// calibration stream is the synthetic seeded-uniform one; callers with
+/// real data observe it themselves ([`calibrate::observe_batches`]) and
+/// pass the report to [`plan_model_observed`].
 pub fn plan_model(model: &PqswModel, cfg: &PlannerConfig) -> Result<AccumPlan> {
+    plan_model_observed(model, cfg, None)
+}
+
+/// [`plan_model`] with an externally observed calibration report (real
+/// data fed through [`calibrate::observe_batches`]); set
+/// `cfg.calibrate_samples` to the number of samples the report saw. With
+/// `report = None` and `cfg.calibrate_samples > 0` the synthetic uniform
+/// stream is observed here (the offline fallback).
+pub fn plan_model_observed(
+    model: &PqswModel,
+    cfg: &PlannerConfig,
+    report: Option<&crate::overflow::OverflowReport>,
+) -> Result<AccumPlan> {
     let mut per_layer = Vec::new();
     for (_, meta) in model.q_layers() {
         let ql = QLayer::from_meta(meta, model.abits, model.nm_m);
@@ -325,15 +361,23 @@ pub fn plan_model(model: &PqswModel, cfg: &PlannerConfig) -> Result<AccumPlan> {
         return Err(anyhow!("model {:?} has no quantized layers to plan", model.name));
     }
     let mut planner = PlannerKind::Analytic;
-    if cfg.calibrate_samples > 0 {
+    let observed_report;
+    let report = match report {
+        Some(r) => Some(r),
+        None if cfg.calibrate_samples > 0 => {
+            observed_report = calibrate::observe(
+                model,
+                cfg.policy,
+                cfg.calibrate_samples,
+                cfg.batch,
+                cfg.seed,
+            )?;
+            Some(&observed_report)
+        }
+        None => None,
+    };
+    if let Some(report) = report {
         planner = PlannerKind::Calibrated;
-        let report = calibrate::observe(
-            model,
-            cfg.policy,
-            cfg.calibrate_samples,
-            cfg.batch,
-            cfg.seed,
-        )?;
         for lp in per_layer.iter_mut() {
             let observed = report
                 .layer(&lp.name)

@@ -8,8 +8,10 @@
 //! request bytes across arbitrary write boundaries, the deadline path
 //! (`deadline_ms: 0` → 504 + the `expired` metric), and the multi-model
 //! surface: `"model"`-routed classification, `GET /v1/models`, nested
-//! per-model `GET /v1/metrics` sections, unknown-model 404s, and the
-//! front-end's own `http` counters.
+//! per-model `GET /v1/metrics` sections, unknown-model 404s, per-request
+//! `"acc_bits"` operating-point overrides (valid, under-bound, plan-free,
+//! malformed), the fleet-memory counters on the wire, and the front-end's
+//! own `http` counters.
 
 mod common;
 
@@ -75,6 +77,7 @@ fn start_http_multi() -> HttpServer {
     );
     let rcfg = RouterConfig {
         max_loaded: 0,
+        max_bytes: 0,
         engine: EngineConfig::default(),
         server: scfg(),
         preload: Vec::new(),
@@ -655,6 +658,7 @@ fn models_endpoint_reports_the_embedded_plan() {
     registry.register("planfree", ModelSource::Memory(common::tiny_linear_model(DIM, CLASSES)));
     let rcfg = RouterConfig {
         max_loaded: 0,
+        max_bytes: 0,
         engine: EngineConfig::default(),
         server: scfg(),
         preload: Vec::new(),
@@ -700,6 +704,132 @@ fn models_endpoint_reports_the_embedded_plan() {
         pj.get("min_bits").and_then(Json::as_usize),
         Some(want.min_bits as usize)
     );
+    http.shutdown();
+}
+
+#[test]
+fn acc_bits_override_serves_and_validates_over_http() {
+    // one resident planned model answering at several accumulator widths,
+    // plus every 400 path of the override field — all on one keep-alive
+    // connection that must survive each rejection
+    let mut model = common::tiny_linear_model(DIM, CLASSES);
+    let plan = pqs::plan::plan_model(
+        &model,
+        &pqs::plan::PlannerConfig { calibrate_samples: 64, ..Default::default() },
+    )
+    .expect("planner runs");
+    let min_safe = plan.min_safe_bits();
+    model.plan = Some(plan.clone());
+    let mut registry = ModelRegistry::new();
+    registry.register("planned", ModelSource::Memory(model.clone()));
+    registry.register("planfree", ModelSource::Memory(common::tiny_linear_model(DIM, CLASSES)));
+    let rcfg = RouterConfig {
+        max_loaded: 0,
+        max_bytes: 0,
+        engine: EngineConfig::default(),
+        server: scfg(),
+        preload: Vec::new(),
+    };
+    let router = Router::new(registry, rcfg).expect("registry is non-empty");
+    let http = HttpServer::start(router, "127.0.0.1:0", hcfg()).expect("bind loopback");
+    let mut c = Client::connect(&http);
+
+    let img = image_json(DIM, 21);
+    let offline = |widths: Option<&[(String, u32)]>| -> usize {
+        let mut eng = Engine::new(&model, EngineConfig::default());
+        if let Some(w) = widths {
+            eng.apply_layer_bits(w);
+        }
+        eng.forward(&common::synth_images(1, DIM, 21), 1).expect("forward").argmax(0)
+    };
+    let want_strict = offline(None);
+    let want_wide = offline(Some(&plan.operating_point(32)));
+
+    let classify = |c: &mut Client, extra: &str| -> Resp {
+        c.send(&post_classify(&format!("{{\"id\":1,\"model\":\"planned\",\"image\":{img}{extra}")));
+        c.read_response()
+    };
+    // strict width (no override), then the wide point, then the alias
+    let r = classify(&mut c, "}");
+    assert_eq!(r.status, 200, "strict: {}", r.body);
+    assert_eq!(r.json().get("class").and_then(Json::as_usize), Some(want_strict));
+    let r = classify(&mut c, ",\"acc_bits\":32}");
+    assert_eq!(r.status, 200, "wide: {}", r.body);
+    assert_eq!(r.json().get("class").and_then(Json::as_usize), Some(want_wide));
+    let r = classify(&mut c, ",\"operating_point\":32}");
+    assert_eq!(r.status, 200, "alias: {}", r.body);
+    assert_eq!(r.json().get("class").and_then(Json::as_usize), Some(want_wide));
+
+    // malformed override shapes: rejected before routing
+    let r = classify(&mut c, ",\"acc_bits\":32,\"operating_point\":32}");
+    assert_eq!(r.status, 400, "both fields: {}", r.body);
+    assert!(r.body.contains("not both"), "{}", r.body);
+    let r = classify(&mut c, ",\"acc_bits\":0}");
+    assert_eq!(r.status, 400, "zero width: {}", r.body);
+    let r = classify(&mut c, ",\"acc_bits\":\"wide\"}");
+    assert_eq!(r.status, 400, "non-numeric width: {}", r.body);
+
+    // an under-bound width is refused by the model's own server
+    let r = classify(&mut c, &format!(",\"acc_bits\":{}}}", min_safe - 1));
+    assert_eq!(r.status, 400, "under-bound: {}", r.body);
+    assert!(r.body.contains("safe minimum"), "{}", r.body);
+
+    // a plan-free model has no operating points to offer
+    c.send(&post_classify(&format!(
+        "{{\"id\":2,\"model\":\"planfree\",\"image\":{img},\"acc_bits\":24}}"
+    )));
+    let r = c.read_response();
+    assert_eq!(r.status, 400, "plan-free: {}", r.body);
+    assert!(r.body.contains("plan"), "{}", r.body);
+
+    // the rejections poisoned nothing: strict still answers identically
+    let r = classify(&mut c, "}");
+    assert_eq!(r.status, 200);
+    assert_eq!(r.json().get("class").and_then(Json::as_usize), Some(want_strict));
+    http.shutdown();
+}
+
+#[test]
+fn wire_surfaces_report_fleet_memory_counters() {
+    let http = start_http_multi();
+    let mut c = Client::connect(&http);
+    // before any load: rows exist, nothing resident
+    c.send(b"GET /v1/models HTTP/1.1\r\n\r\n");
+    let j = c.read_response().json();
+    for m in j.get("models").and_then(Json::as_arr).expect("models array") {
+        assert!(
+            m.get("resident_bytes").expect("field present").is_null(),
+            "unloaded models report null resident_bytes"
+        );
+    }
+    c.send(b"GET /v1/metrics HTTP/1.1\r\n\r\n");
+    let j = c.read_response().json();
+    let router = j.get("router").expect("router section");
+    assert_eq!(router.get("resident_bytes").and_then(Json::as_usize), Some(0));
+    assert_eq!(router.get("budget").and_then(Json::as_usize), Some(0));
+    assert_eq!(router.get("dedup_hits").and_then(Json::as_usize), Some(0));
+    // load "tiny" and the measured bytes appear on both surfaces
+    c.send(&post_classify(&classify_body(DIM, 2, 1, None)));
+    assert_eq!(c.read_response().status, 200);
+    c.send(b"GET /v1/models HTTP/1.1\r\n\r\n");
+    let j = c.read_response().json();
+    let tiny = j
+        .get("models")
+        .and_then(Json::as_arr)
+        .and_then(|a| {
+            a.iter().find(|m| m.get("name").and_then(Json::as_str) == Some("tiny"))
+        })
+        .expect("tiny row")
+        .clone();
+    let row_bytes = tiny.get("resident_bytes").and_then(Json::as_usize);
+    assert!(row_bytes.unwrap_or(0) > 0, "loaded model reports measured bytes: {tiny:?}");
+    c.send(b"GET /v1/metrics HTTP/1.1\r\n\r\n");
+    let j = c.read_response().json();
+    let fleet = j
+        .get("router")
+        .and_then(|r| r.get("resident_bytes"))
+        .and_then(Json::as_usize);
+    assert_eq!(fleet, row_bytes, "one loaded model: fleet bytes == its row");
     http.shutdown();
 }
 

@@ -1,0 +1,291 @@
+//! Zero-copy loading + fleet-memory acceptance suite (artifact-free).
+//!
+//! The ISSUE 6 contract, end to end over synthetic models:
+//! lazy `.pqsw` loads are bit-identical to eager ones (logits AND
+//! overflow counters), a byte-budgeted router evicts LRU-first and never
+//! holds more than `max_bytes` resident, two fleet entries with
+//! byte-identical weights share ONE backing blob, and one resident
+//! planned model answers requests at several accumulator operating
+//! points (wide = overflow headroom, under the plan's safe minimum =
+//! refused, plan-free override = refused).
+
+mod common;
+
+use pqs::accum::Policy;
+use pqs::coordinator::{
+    ClassifyRequest, ModelRegistry, ModelSource, RouteError, Router, RouterConfig, ServeError,
+    ServerConfig,
+};
+use pqs::formats::pqsw::PqswModel;
+use pqs::nn::engine::{Engine, EngineConfig};
+use pqs::plan::{plan_model, PlannerConfig};
+use std::time::Duration;
+
+fn tmp_dir(name: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(name);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn server_cfg() -> ServerConfig {
+    ServerConfig {
+        threads: 1,
+        max_batch: 4,
+        queue_cap: 16,
+        linger: Duration::from_micros(50),
+        engine_threads: 1,
+        default_deadline: None,
+    }
+}
+
+fn req(id: u64, model: &str, image: Vec<f32>, acc_bits: Option<u32>) -> ClassifyRequest {
+    ClassifyRequest { id, model: Some(model.to_string()), image, deadline: None, acc_bits }
+}
+
+/// Route one request and wait for its response.
+fn ask(router: &Router, r: ClassifyRequest) -> pqs::coordinator::ServeResponse {
+    router.submit(r).expect("routes").wait_timeout(Duration::from_secs(60)).expect("response")
+}
+
+#[test]
+fn lazy_loads_serve_bit_identically_to_eager_loads() {
+    let dir = tmp_dir("pqs_test_mem_identity");
+    let cases = vec![
+        ("linear.pqsw", pqs::models::synthetic_linear(96, 10)),
+        ("conv.pqsw", pqs::models::synthetic_conv(2, 8, 8, 4, 10)),
+    ];
+    for (file, model) in cases {
+        let path = dir.join(file);
+        model.save(&path).unwrap();
+        let lazy = PqswModel::load(&path).unwrap();
+        let eager = PqswModel::load_eager(&path).unwrap();
+        assert!(lazy.backing_blob().is_some(), "{file}: lazy load borrows");
+        assert!(eager.backing_blob().is_none(), "{file}: eager load owns");
+        assert_eq!(lazy.content_hash(), eager.content_hash());
+        // a deliberately narrow accumulator makes the overflow machinery
+        // fire, so the counter comparison is not vacuous
+        let ecfg = EngineConfig {
+            policy: Policy::Sorted,
+            acc_bits: 8,
+            tile: 0,
+            collect_stats: true,
+        };
+        let dim: usize = model.input_shape.iter().product();
+        let imgs = common::synth_images(8, dim, 0xC0DE);
+        let ra = Engine::new(&eager, ecfg).forward(&imgs, 8).unwrap();
+        let rb = Engine::new(&lazy, ecfg).forward(&imgs, 8).unwrap();
+        assert_eq!(ra.logits, rb.logits, "{file}: logits bit-identical");
+        assert_eq!(ra.report.total(), rb.report.total(), "{file}: overflow counters identical");
+    }
+}
+
+#[test]
+fn byte_budget_evicts_lru_first_and_is_never_exceeded() {
+    let dir = tmp_dir("pqs_test_mem_budget");
+    // three models with pairwise-different weights (no dedup in this test)
+    let specs = [("a", 64usize), ("b", 80), ("c", 96)];
+    let mut bytes = std::collections::BTreeMap::new();
+    let mut dims = std::collections::BTreeMap::new();
+    for (name, dim) in specs {
+        let path = dir.join(format!("{name}.pqsw"));
+        pqs::models::synthetic_linear(dim, 10).save(&path).unwrap();
+        bytes.insert(name, PqswModel::load(&path).unwrap().resident_bytes());
+        dims.insert(name, dim);
+    }
+    let (ba, bb, bc) = (bytes["a"], bytes["b"], bytes["c"]);
+    // room for any two of the three, never all three
+    let budget = ba + bb + bc - 1;
+
+    let mut registry = ModelRegistry::new();
+    for (name, _) in specs {
+        registry.register(name, ModelSource::Path(dir.join(format!("{name}.pqsw"))));
+    }
+    let ecfg = EngineConfig { policy: Policy::Sorted, acc_bits: 16, tile: 0, collect_stats: false };
+    let rcfg = RouterConfig {
+        max_loaded: 0,
+        max_bytes: budget,
+        engine: ecfg,
+        server: server_cfg(),
+        preload: Vec::new(),
+    };
+    let router = Router::new(registry, rcfg).unwrap();
+
+    let mut id = 0;
+    let mut touch = |name: &str| {
+        id += 1;
+        let image = common::synth_images(1, dims[name], id);
+        let r = ask(&router, req(id, name, image, None));
+        assert!(r.result.is_ok(), "{name}: {:?}", r.result);
+        let m = router.metrics();
+        assert!(
+            m.resident_bytes <= budget,
+            "resident {} exceeds the budget {budget}",
+            m.resident_bytes
+        );
+        m
+    };
+    let m = touch("a");
+    assert_eq!(m.resident_bytes, ba);
+    let m = touch("b");
+    assert_eq!(m.resident_bytes, ba + bb);
+    assert_eq!(m.evictions, 0, "two models fit");
+    touch("a"); // refresh: "b" becomes the LRU victim
+    let m = touch("c");
+    assert_eq!(m.evictions, 1, "loading c had to evict exactly one model");
+    assert_eq!(m.resident_bytes, ba + bc);
+    let row = |m: &pqs::coordinator::RouterMetrics, n: &str| m.model(n).unwrap().loaded;
+    assert!(row(&m, "a"), "a was refreshed, so it survives");
+    assert!(!row(&m, "b"), "b was least-recently-used, so it went");
+    assert!(row(&m, "c"));
+    assert_eq!(m.budget, budget);
+
+    // a reload after eviction works and stays within the budget
+    let m = touch("b");
+    assert_eq!(m.evictions, 2);
+    assert!(row(&m, "b"));
+    router.shutdown();
+
+    // a model that cannot fit even an empty fleet is refused outright
+    let mut registry = ModelRegistry::new();
+    registry.register("big", ModelSource::Path(dir.join("c.pqsw")));
+    let rcfg = RouterConfig {
+        max_loaded: 0,
+        max_bytes: bc - 1,
+        engine: ecfg,
+        server: server_cfg(),
+        preload: Vec::new(),
+    };
+    let router = Router::new(registry, rcfg).unwrap();
+    let image = common::synth_images(1, dims["c"], 99);
+    match router.submit(req(99, "big", image, None)) {
+        Err(RouteError::LoadFailed(msg)) => {
+            assert!(msg.contains("max-bytes"), "names the budget flag: {msg}");
+        }
+        Err(e) => panic!("want LoadFailed, got {e:?}"),
+        Ok(_) => panic!("an over-budget model must be refused"),
+    }
+    let m = router.shutdown();
+    assert_eq!(m.loads, 0, "the refused load is not counted as a load");
+}
+
+#[test]
+fn byte_identical_fleet_entries_share_one_resident_blob() {
+    let dir = tmp_dir("pqs_test_mem_dedup");
+    // two DIFFERENT files with byte-identical weights: dedup must work by
+    // content, not by path
+    let model = pqs::models::synthetic_linear(128, 10);
+    let (p1, p2) = (dir.join("first.pqsw"), dir.join("second.pqsw"));
+    model.save(&p1).unwrap();
+    model.save(&p2).unwrap();
+    let single = PqswModel::load(&p1).unwrap();
+    let blob_len = single.backing_blob().unwrap().len() as u64;
+    let own = single.resident_bytes() - blob_len;
+
+    let mut registry = ModelRegistry::new();
+    registry.register("first", ModelSource::Path(p1));
+    registry.register("second", ModelSource::Path(p2));
+    let ecfg = EngineConfig { policy: Policy::Sorted, acc_bits: 16, tile: 0, collect_stats: false };
+    let rcfg = RouterConfig {
+        max_loaded: 0,
+        max_bytes: 0,
+        engine: ecfg,
+        server: server_cfg(),
+        preload: vec!["first".into(), "second".into()],
+    };
+    let router = Router::new(registry, rcfg).unwrap();
+    let m = router.metrics();
+    assert_eq!(m.loads, 2);
+    assert_eq!(m.dedup_hits, 1, "the second load rehosts onto the first's blob");
+    assert_eq!(
+        m.resident_bytes,
+        blob_len + 2 * own,
+        "one shared blob, two sets of owned bytes"
+    );
+    for name in ["first", "second"] {
+        let image = common::synth_images(1, 128, 7);
+        let r = ask(&router, req(1, name, image, None));
+        assert!(r.result.is_ok(), "{name} serves from the shared blob");
+    }
+    let m = router.shutdown();
+    assert_eq!(m.resident_bytes, 0, "shutdown drains every incarnation");
+}
+
+#[test]
+fn one_resident_model_serves_multiple_operating_points() {
+    let dir = tmp_dir("pqs_test_mem_opoints");
+    let model = pqs::models::synthetic_conv(2, 8, 8, 4, 10);
+    let dim: usize = model.input_shape.iter().product();
+    let plan = plan_model(&model, &PlannerConfig { calibrate_samples: 64, ..Default::default() })
+        .unwrap();
+    let min_safe = plan.min_safe_bits();
+    assert!(min_safe > 2, "the synthetic conv plan is not trivially narrow");
+    let mut planned = model.clone();
+    planned.plan = Some(plan.clone());
+    let planned_path = dir.join("planned.pqsw");
+    planned.save(&planned_path).unwrap();
+    let planfree_path = dir.join("planfree.pqsw");
+    model.save(&planfree_path).unwrap();
+
+    let mut registry = ModelRegistry::new();
+    registry.register("planned", ModelSource::Path(planned_path.clone()));
+    registry.register("planfree", ModelSource::Path(planfree_path));
+    let ecfg = EngineConfig { policy: Policy::Sorted, acc_bits: 16, tile: 0, collect_stats: false };
+    let rcfg = RouterConfig {
+        max_loaded: 0,
+        max_bytes: 0,
+        engine: ecfg,
+        server: server_cfg(),
+        preload: Vec::new(),
+    };
+    let router = Router::new(registry, rcfg).unwrap();
+
+    let loaded = PqswModel::load(&planned_path).unwrap();
+    let image = common::synth_images(1, dim, 0x0B17);
+    // expected classes at the plan's own widths and at the wide point
+    let mut strict = Engine::new(&loaded, ecfg);
+    let want_strict = strict.forward(&image, 1).unwrap().argmax(0);
+    let mut wide = Engine::new(&loaded, ecfg);
+    wide.apply_layer_bits(&plan.operating_point(32));
+    let want_wide = wide.forward(&image, 1).unwrap().argmax(0);
+
+    // the wide point clamps at each layer's analytic bound, so a sweep
+    // there is persistent-overflow-free by construction
+    let wcfg = EngineConfig { policy: Policy::Sorted, acc_bits: 16, tile: 0, collect_stats: true };
+    let mut sweep = Engine::new(&loaded, wcfg);
+    sweep.apply_layer_bits(&plan.operating_point(32));
+    let imgs = common::synth_images(50, dim, 0x5EED);
+    let out = sweep.forward(&imgs, 50).unwrap();
+    assert_eq!(out.report.total().persistent_dots, 0, "wide point never overflows persistently");
+
+    // one resident model, several widths — interleaved, over one server
+    let r = ask(&router, req(1, "planned", image.clone(), None));
+    assert_eq!(r.result, Ok(want_strict), "strict width");
+    let r = ask(&router, req(2, "planned", image.clone(), Some(32)));
+    assert_eq!(r.result, Ok(want_wide), "wide operating point");
+    let r = ask(&router, req(3, "planned", image.clone(), None));
+    assert_eq!(r.result, Ok(want_strict), "the override is undone after its batch");
+
+    // under the plan's safe minimum: refused per-request, service intact
+    let r = ask(&router, req(4, "planned", image.clone(), Some(min_safe - 1)));
+    match r.result {
+        Err(ServeError::BadRequest(msg)) => {
+            assert!(msg.contains("safe minimum"), "{msg}");
+        }
+        other => panic!("want BadRequest, got {other:?}"),
+    }
+
+    // a plan-free model has no operating points to offer
+    let r = ask(&router, req(5, "planfree", image.clone(), Some(24)));
+    match r.result {
+        Err(ServeError::BadRequest(msg)) => {
+            assert!(msg.contains("plan"), "{msg}");
+        }
+        other => panic!("want BadRequest, got {other:?}"),
+    }
+    let r = ask(&router, req(6, "planned", image, Some(32)));
+    assert_eq!(r.result, Ok(want_wide), "bad requests never poison the engines");
+
+    let m = router.shutdown();
+    assert_eq!(m.model("planned").unwrap().metrics.requests, 5);
+    assert_eq!(m.loads, 2, "every width was served by the SAME resident incarnations");
+}

@@ -189,6 +189,7 @@ fn pqsw_roundtrip_applies_and_reports_the_plan_via_the_router() {
     registry.register("planned", ModelSource::Path(path.clone()));
     let rcfg = RouterConfig {
         max_loaded: 0,
+        max_bytes: 0,
         engine: ecfg,
         server: ServerConfig {
             threads: 1,
@@ -205,7 +206,13 @@ fn pqsw_roundtrip_applies_and_reports_the_plan_via_the_router() {
     assert_eq!(router.metrics().model("planned").unwrap().plan, None);
     let image = common::synth_images(1, dim, 42);
     let p = router
-        .submit(ClassifyRequest { id: 1, model: None, image: image.clone(), deadline: None })
+        .submit(ClassifyRequest {
+            id: 1,
+            model: None,
+            image: image.clone(),
+            deadline: None,
+            acc_bits: None,
+        })
         .expect("routes");
     let r = p.wait_timeout(Duration::from_secs(60)).expect("response");
     // the routed class matches a dedicated engine over the planned model

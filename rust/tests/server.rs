@@ -392,7 +392,7 @@ fn server_with_shared_engine_pool_matches_single_threaded_server() {
 // ---- multi-model router ---------------------------------------------------
 
 fn req(id: u64, model: Option<&str>, image: Vec<f32>) -> ClassifyRequest {
-    ClassifyRequest { id, model: model.map(String::from), image, deadline: None }
+    ClassifyRequest { id, model: model.map(String::from), image, deadline: None, acc_bits: None }
 }
 
 fn three_model_registry() -> ModelRegistry {
@@ -414,6 +414,7 @@ fn router_loads_lazily_and_routes_to_the_default() {
     let registry = three_model_registry();
     let rcfg = RouterConfig {
         max_loaded: 0,
+        max_bytes: 0,
         engine: EngineConfig::default(),
         server: scfg(1, 4, 16),
         preload: Vec::new(),
@@ -450,6 +451,7 @@ fn router_unknown_model_fails_fast_with_fleet_listing() {
     let registry = three_model_registry();
     let rcfg = RouterConfig {
         max_loaded: 0,
+        max_bytes: 0,
         engine: EngineConfig::default(),
         server: scfg(1, 4, 16),
         preload: Vec::new(),
@@ -476,6 +478,7 @@ fn router_lru_eviction_under_max_loaded_preserves_metrics() {
     let registry = three_model_registry();
     let rcfg = RouterConfig {
         max_loaded: 2,
+        max_bytes: 0,
         engine: EngineConfig::default(),
         server: scfg(1, 4, 16),
         preload: Vec::new(),
@@ -548,7 +551,13 @@ fn router_two_models_one_pool_bit_identical_to_dedicated_servers() {
     let mut registry = ModelRegistry::new();
     registry.register("lin", ModelSource::Memory(linear));
     registry.register("conv", ModelSource::Memory(conv));
-    let rcfg = RouterConfig { max_loaded: 0, engine: cfg, server: sc, preload: Vec::new() };
+    let rcfg = RouterConfig {
+        max_loaded: 0,
+        max_bytes: 0,
+        engine: cfg,
+        server: sc,
+        preload: Vec::new(),
+    };
     let router = Router::new(registry, rcfg).unwrap();
     std::thread::scope(|scope| {
         let router = &router;
@@ -581,6 +590,7 @@ fn router_two_models_one_pool_bit_identical_to_dedicated_servers() {
 fn router_preload_loads_eagerly_and_counts() {
     let rcfg = RouterConfig {
         max_loaded: 0,
+        max_bytes: 0,
         engine: EngineConfig::default(),
         server: scfg(1, 4, 16),
         preload: vec!["m2".to_string(), "m3".to_string()],
@@ -603,6 +613,7 @@ fn router_preload_loads_eagerly_and_counts() {
     // an unknown preload name fails router construction, naming the miss
     let rcfg = RouterConfig {
         max_loaded: 0,
+        max_bytes: 0,
         engine: EngineConfig::default(),
         server: scfg(1, 4, 16),
         preload: vec!["m9".to_string()],
@@ -635,6 +646,7 @@ fn metrics_scrape_does_not_serialize_behind_a_blocked_load() {
     );
     let rcfg = RouterConfig {
         max_loaded: 0,
+        max_bytes: 0,
         engine: EngineConfig::default(),
         server: scfg(1, 4, 16),
         preload: Vec::new(),
@@ -706,6 +718,7 @@ fn router_default_and_wrong_size_semantics() {
     let registry = three_model_registry();
     let rcfg = RouterConfig {
         max_loaded: 0,
+        max_bytes: 0,
         engine: EngineConfig::default(),
         server: scfg(1, 4, 16),
         preload: Vec::new(),
