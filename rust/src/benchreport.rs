@@ -18,6 +18,12 @@
 //!   HTTP front-end + serving runtime over a loopback connection, with the
 //!   shared engine pool off (`engine_threads = 1`, the pre-refactor
 //!   behaviour) and on (`engine_threads = hw`);
+//! * **connections** — connection-scale tails: enqueue→response latency
+//!   of a probe client (p50/p99/p999, HDR-style log-linear buckets)
+//!   while N idle keep-alive connections are parked on the event loop,
+//!   swept over N. The section *fails* if the front-end sheds any
+//!   connection below its `max_connections` cap — the event-loop scaling
+//!   guarantee is smoke-gated in CI, not just reported;
 //! * **router** — a TWO-model router in one process: both models hit over
 //!   one loopback connection (routed by the `"model"` field), an unknown
 //!   model answered 404, then `GET /v1/metrics` fetched over the wire and
@@ -103,6 +109,7 @@ pub fn run(opts: &BenchOptions) -> Result<Json> {
         ("pool", pool_section(opts)),
         ("forward", forward_section(opts)?),
         ("serve", serve_section(opts)?),
+        ("connections", connections_section(opts)?),
         ("router", router_section(opts)?),
         ("plan", plan_section(opts)?),
         ("memory", memory_section(opts)?),
@@ -492,6 +499,129 @@ fn serve_section(opts: &BenchOptions) -> Result<Json> {
     Ok(Json::Arr(rows))
 }
 
+// ---- connections ----------------------------------------------------------
+
+/// Connection-scale section: park `open_connections` idle keep-alive
+/// sockets on the front-end, then measure probe-request
+/// enqueue→response latency through the same server — the event-loop
+/// promise is that parked connections are (nearly) free, so the tail
+/// must not grow with the fleet. Latencies are recorded into an
+/// [`HdrHistogram`] (log-linear buckets, ≈3% relative error) so p999 is
+/// honest without keeping every sample. Fails if the server sheds any
+/// connection below its `max_connections` cap.
+fn connections_section(opts: &BenchOptions) -> Result<Json> {
+    let event_loop = cfg!(target_os = "linux");
+    // without the event loop every parked connection pins a handler
+    // thread, so only the zero-idle baseline is meaningful
+    let idle_counts: &[usize] = if !event_loop {
+        &[0]
+    } else if opts.quick {
+        &[0, 64]
+    } else {
+        &[0, 1024, 4096]
+    };
+    let probes = if opts.quick { 50 } else { 400 };
+    let max_idle = idle_counts.iter().copied().max().unwrap_or(0);
+    // client + server side of every parked socket, plus headroom
+    let fd_limit = crate::http::server::raise_nofile_limit(max_idle as u64 * 2 + 512);
+    let fd_budget = (fd_limit.saturating_sub(512) / 2).min(usize::MAX as u64) as usize;
+
+    let model = models::synthetic_conv(2, 8, 8, 4, 10);
+    let dim: usize = model.input_shape.iter().product();
+    let mut rng = Pcg32::new(0xC0);
+    let body = {
+        let pixels: Vec<Json> =
+            (0..dim).map(|_| json::num((rng.below(1000) as f64) / 1000.0)).collect();
+        json::obj(vec![("image", Json::Arr(pixels))]).to_string()
+    };
+
+    let mut rows = Vec::new();
+    for &want_idle in idle_counts {
+        // scale down (with the row recording it) if the fd limit held
+        let idle = want_idle.min(fd_budget);
+        let ecfg =
+            EngineConfig { policy: Policy::Sorted1, acc_bits: 16, tile: 0, collect_stats: false };
+        let scfg = ServerConfig {
+            threads: 2,
+            max_batch: 8,
+            queue_cap: 256,
+            linger: Duration::from_micros(100),
+            engine_threads: 1,
+            default_deadline: None,
+        };
+        let router = Router::single("default", &model, ecfg, scfg);
+        let hcfg = HttpConfig {
+            // the parked fleet must stay open for the whole measurement
+            keep_alive_timeout: Duration::from_secs(120),
+            max_connections: idle + 64,
+            ..HttpConfig::default()
+        };
+        let http = HttpServer::start(router, "127.0.0.1:0", hcfg)
+            .context("binding the connections bench server")?;
+        let addr = http.local_addr().to_string();
+
+        let mut fleet = Vec::with_capacity(idle);
+        for i in 0..idle {
+            let s = TcpStream::connect(&addr)
+                .with_context(|| format!("parking idle connection {i}/{idle}"))?;
+            fleet.push(s);
+        }
+
+        let mut client = LoopbackClient::connect(&addr)?;
+        for _ in 0..3 {
+            let status = client.classify(&body)?;
+            if status != 200 {
+                return Err(anyhow!("connections bench warmup returned {status}"));
+            }
+        }
+        let mut hist = crate::util::stats::HdrHistogram::new();
+        let t0 = Instant::now();
+        for _ in 0..probes {
+            let r0 = Instant::now();
+            let status = client.classify(&body)?;
+            if status != 200 {
+                return Err(anyhow!("connections bench classify returned {status}"));
+            }
+            hist.record(r0.elapsed().as_micros() as u64);
+        }
+        let wall_s = t0.elapsed().as_secs_f64();
+        drop(fleet);
+        let report = http.shutdown();
+        // the scaling guarantee this section gates: every connection below
+        // the cap is accepted, none shed
+        if report.http.shed != 0 {
+            return Err(anyhow!(
+                "front-end shed {} connections below the {}-connection cap",
+                report.http.shed,
+                idle + 64
+            ));
+        }
+        let buckets: Vec<Json> = hist
+            .buckets()
+            .into_iter()
+            .map(|(lo, c)| Json::Arr(vec![json::num(lo as f64), json::num(c as f64)]))
+            .collect();
+        rows.push(json::obj(vec![
+            ("open_connections", json::num(idle as f64 + 1.0)),
+            ("requested_idle", json::num(want_idle as f64)),
+            ("probes", json::num(probes as f64)),
+            ("p50_us", json::num(hist.value_at(0.50) as f64)),
+            ("p99_us", json::num(hist.value_at(0.99) as f64)),
+            ("p999_us", json::num(hist.value_at(0.999) as f64)),
+            ("max_us", json::num(hist.max() as f64)),
+            ("throughput_rps", json::num(probes as f64 / wall_s.max(1e-9))),
+            ("accepted", json::num(report.http.accepted as f64)),
+            ("shed", json::num(report.http.shed as f64)),
+            ("hdr_buckets_us", Json::Arr(buckets)),
+        ]));
+    }
+    Ok(json::obj(vec![
+        ("event_loop", Json::Bool(event_loop)),
+        ("fd_limit", json::num(fd_limit as f64)),
+        ("rows", Json::Arr(rows)),
+    ]))
+}
+
 // ---- router ---------------------------------------------------------------
 
 /// Two-model router smoke through the real HTTP front-end: route requests
@@ -812,7 +942,9 @@ mod tests {
         let report = run(&opts).expect("quick bench run");
         let txt = report.to_string();
         let parsed = Json::parse(&txt).expect("report round-trips");
-        for key in ["meta", "dot", "pool", "forward", "serve", "router", "plan", "memory"] {
+        for key in
+            ["meta", "dot", "pool", "forward", "serve", "connections", "router", "plan", "memory"]
+        {
             assert!(parsed.get(key).is_some(), "missing section {key}");
         }
         let fwd = parsed.get("forward").unwrap().as_arr().unwrap();
@@ -827,6 +959,33 @@ mod tests {
         }
         let serve = parsed.get("serve").unwrap().as_arr().unwrap();
         assert_eq!(serve.len(), 2, "engine_threads off + on");
+        // the connections section carries the exact schema CI asserts on:
+        // one row per idle-fleet size, ordered tail quantiles, zero sheds,
+        // and non-empty HDR buckets that sum to the probe count
+        let conns = parsed.get("connections").unwrap();
+        assert!(conns.get("event_loop").unwrap().as_bool().is_some());
+        assert!(conns.get("fd_limit").unwrap().as_f64().is_some());
+        let rows = conns.get("rows").unwrap().as_arr().unwrap();
+        let expect_rows = if cfg!(target_os = "linux") { 2 } else { 1 };
+        assert_eq!(rows.len(), expect_rows, "one row per idle-fleet size");
+        for row in rows {
+            let probes = row.get("probes").unwrap().as_f64().unwrap();
+            let p50 = row.get("p50_us").unwrap().as_f64().unwrap();
+            let p99 = row.get("p99_us").unwrap().as_f64().unwrap();
+            let p999 = row.get("p999_us").unwrap().as_f64().unwrap();
+            let max = row.get("max_us").unwrap().as_f64().unwrap();
+            assert!(p50 <= p99 && p99 <= p999 && p999 <= max, "quantiles ordered: {row:?}");
+            assert_eq!(row.get("shed").and_then(Json::as_usize), Some(0), "no shedding");
+            assert!(row.get("open_connections").unwrap().as_f64().unwrap() >= 1.0);
+            assert!(row.get("throughput_rps").unwrap().as_f64().unwrap() > 0.0);
+            let buckets = row.get("hdr_buckets_us").unwrap().as_arr().unwrap();
+            assert!(!buckets.is_empty(), "HDR buckets present");
+            let total: f64 = buckets
+                .iter()
+                .map(|b| b.as_arr().unwrap()[1].as_f64().unwrap())
+                .sum();
+            assert_eq!(total, probes, "bucket counts sum to the probe count");
+        }
         // the router section carries BOTH per-model rows with exact counts
         let router = parsed.get("router").unwrap();
         let models = router.get("models").unwrap().as_arr().unwrap();

@@ -70,6 +70,10 @@ impl LatencyRecorder {
         stats::percentile(&self.samples, 99.0)
     }
 
+    pub fn p999_us(&self) -> f64 {
+        stats::percentile(&self.samples, 99.9)
+    }
+
     pub fn max_us(&self) -> f64 {
         self.max
     }
@@ -89,7 +93,7 @@ impl LatencyRecorder {
         self.samples.extend(other.samples.iter().take(room));
     }
 
-    /// Six-number summary of the stream so far. This is what metrics
+    /// Seven-number summary of the stream so far. This is what metrics
     /// *snapshots* carry (`/v1/metrics` scrapes, per-model fleet rows):
     /// a `Copy` struct instead of a reservoir clone, so assembling a
     /// snapshot never copies or splices up to 64Ki samples per recorder.
@@ -100,13 +104,14 @@ impl LatencyRecorder {
             p50_us: self.p50_us(),
             p95_us: self.p95_us(),
             p99_us: self.p99_us(),
+            p999_us: self.p999_us(),
             max_us: self.max_us(),
         }
     }
 }
 
 /// Quantile summary of one latency stream (microseconds). `Copy`, so
-/// fleet snapshots move six floats per recorder instead of reservoirs.
+/// fleet snapshots move seven floats per recorder instead of reservoirs.
 #[derive(Clone, Copy, Debug, Default, PartialEq)]
 pub struct LatencySummary {
     pub count: usize,
@@ -114,6 +119,9 @@ pub struct LatencySummary {
     pub p50_us: f64,
     pub p95_us: f64,
     pub p99_us: f64,
+    /// p99.9 — the connection-scale tail the event-loop bench gates on;
+    /// over a uniform reservoir it needs ~1000+ samples to be meaningful
+    pub p999_us: f64,
     pub max_us: f64,
 }
 
@@ -138,6 +146,7 @@ impl LatencySummary {
         self.p50_us = (self.p50_us * a + other.p50_us * b) / (a + b);
         self.p95_us = (self.p95_us * a + other.p95_us * b) / (a + b);
         self.p99_us = (self.p99_us * a + other.p99_us * b) / (a + b);
+        self.p999_us = (self.p999_us * a + other.p999_us * b) / (a + b);
         if other.max_us > self.max_us {
             self.max_us = other.max_us;
         }
@@ -233,25 +242,28 @@ impl ServeMetrics {
             self.batches, self.mean_batch,
         );
         println!(
-            "  e2e latency  mean={:.1}us p50={:.1}us p95={:.1}us p99={:.1}us",
+            "  e2e latency  mean={:.1}us p50={:.1}us p95={:.1}us p99={:.1}us p999={:.1}us",
             self.latency.mean_us(),
             self.latency.p50_us(),
             self.latency.p95_us(),
             self.latency.p99_us(),
+            self.latency.p999_us(),
         );
         println!(
-            "  queue wait   mean={:.1}us p50={:.1}us p95={:.1}us p99={:.1}us",
+            "  queue wait   mean={:.1}us p50={:.1}us p95={:.1}us p99={:.1}us p999={:.1}us",
             self.queue.mean_us(),
             self.queue.p50_us(),
             self.queue.p95_us(),
             self.queue.p99_us(),
+            self.queue.p999_us(),
         );
         println!(
-            "  compute      mean={:.1}us p50={:.1}us p95={:.1}us p99={:.1}us",
+            "  compute      mean={:.1}us p50={:.1}us p95={:.1}us p99={:.1}us p999={:.1}us",
             self.compute.mean_us(),
             self.compute.p50_us(),
             self.compute.p95_us(),
             self.compute.p99_us(),
+            self.compute.p999_us(),
         );
         if let Some(p) = &self.pool {
             println!(
@@ -477,12 +489,29 @@ mod tests {
         assert_eq!(s.p99_us, r.p99_us());
         assert_eq!(s.max_us, 100.0);
         // merge: exact count/mean/max, count-weighted quantiles
-        let mut a = LatencySummary { count: 10, mean_us: 100.0, p50_us: 100.0, p95_us: 110.0, p99_us: 120.0, max_us: 150.0 };
-        let b = LatencySummary { count: 30, mean_us: 200.0, p50_us: 200.0, p95_us: 210.0, p99_us: 220.0, max_us: 400.0 };
+        let mut a = LatencySummary {
+            count: 10,
+            mean_us: 100.0,
+            p50_us: 100.0,
+            p95_us: 110.0,
+            p99_us: 120.0,
+            p999_us: 130.0,
+            max_us: 150.0,
+        };
+        let b = LatencySummary {
+            count: 30,
+            mean_us: 200.0,
+            p50_us: 200.0,
+            p95_us: 210.0,
+            p99_us: 220.0,
+            p999_us: 230.0,
+            max_us: 400.0,
+        };
         a.merge_from(&b);
         assert_eq!(a.count, 40);
         assert!((a.mean_us - 175.0).abs() < 1e-9);
         assert!((a.p50_us - 175.0).abs() < 1e-9);
+        assert!((a.p999_us - 205.0).abs() < 1e-9);
         assert_eq!(a.max_us, 400.0);
         // merging an empty summary is a no-op
         let before = a;

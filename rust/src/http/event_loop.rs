@@ -1,0 +1,950 @@
+//! Readiness-driven connection backend: one thread multiplexing every
+//! socket over `epoll`.
+//!
+//! ## Architecture
+//!
+//! ```text
+//!            epoll_wait ── readiness ──┐
+//!   accept ──► slab slot (Conn state machine: buf ─ parser ─ out)
+//!                │   fast GET/HEAD: answered inline on the loop
+//!                │   POST /v1/classify: prepare inline, then
+//!                ▼
+//!        WorkerPool<Job> (blocking router submit + wait)
+//!                │
+//!        Completions queue ── self-pipe wake ──► loop writes response
+//! ```
+//!
+//! * **Vendored shim, no tokio**: the `sys` module declares the five
+//!   syscalls we need (`epoll_create1`/`epoll_ctl`/`epoll_wait`/`pipe`
+//!   plus `read`/`write`/`close`) as `extern "C"` into libc, which the
+//!   std runtime already links. Level-triggered mode everywhere.
+//! * **Per-connection state machine**: nonblocking reads append to
+//!   `Conn::buf`; the incremental parser is a pure function of that
+//!   buffered prefix, so it drops in unchanged. Encoded responses land
+//!   in `Conn::out`; a short write registers `EPOLLOUT` interest and the
+//!   remainder flushes when the socket drains.
+//! * **One in-flight classify per connection**: read interest is dropped
+//!   while a request is with the workers (the kernel socket buffer is
+//!   the backpressure), which trivially preserves pipelined response
+//!   ordering and mid-pipeline `Connection: close` semantics.
+//! * **Timer wheel** (512 slots × 16 ms): keep-alive idling, the
+//!   anti-slowloris partial-request hard cap, and the in-flight backstop
+//!   all collapse onto one deadline per connection, re-armed at state
+//!   transitions. Lazy deletion: each re-arm bumps `timer_seq`, stale
+//!   wheel entries no-op when they fire. Entries past the horizon clamp
+//!   to the last slot and cascade by re-scheduling.
+//! * **Self-pipe wakeups**: workers enqueue completions into a mutexed
+//!   vector and write one byte into a plain `pipe()` at most once per
+//!   drain cycle (a `wake_armed` flag bounds it), so the blocking pipe
+//!   ends can never fill and deadlock.
+//!
+//! The loop sustains tens of thousands of idle keep-alive connections
+//! with exactly `1 + conn_threads` threads; [`super::HttpConfig::max_connections`]
+//! bounds the slab, accepts past it shed with 503.
+
+use std::io::{Read, Write};
+use std::net::TcpListener;
+use std::os::raw::c_int;
+use std::os::unix::io::{AsRawFd, RawFd};
+use std::sync::atomic::Ordering;
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::coordinator::ClassifyRequest;
+use crate::util::pool::WorkerPool;
+
+use super::parser::{self, Version};
+use super::server::{
+    encode_reply, prepare_classify, route_fast, run_classify, shed_connection, Ctx, Reply,
+};
+
+// ---- raw epoll / pipe shim ------------------------------------------------
+
+mod sys {
+    use std::os::raw::c_int;
+
+    pub const EPOLLIN: u32 = 0x001;
+    pub const EPOLLOUT: u32 = 0x004;
+    pub const EPOLLERR: u32 = 0x008;
+    pub const EPOLLHUP: u32 = 0x010;
+
+    pub const EPOLL_CTL_ADD: c_int = 1;
+    pub const EPOLL_CTL_DEL: c_int = 2;
+    pub const EPOLL_CTL_MOD: c_int = 3;
+
+    /// Kernel ABI: packed on x86-64 (12 bytes), naturally aligned
+    /// (16 bytes) everywhere else. Read fields by value only — taking a
+    /// reference into a packed struct is undefined behavior.
+    #[derive(Clone, Copy)]
+    #[cfg_attr(target_arch = "x86_64", repr(C, packed))]
+    #[cfg_attr(not(target_arch = "x86_64"), repr(C))]
+    pub struct EpollEvent {
+        pub events: u32,
+        pub data: u64,
+    }
+
+    extern "C" {
+        pub fn epoll_create1(flags: c_int) -> c_int;
+        pub fn epoll_ctl(epfd: c_int, op: c_int, fd: c_int, event: *mut EpollEvent) -> c_int;
+        pub fn epoll_wait(
+            epfd: c_int,
+            events: *mut EpollEvent,
+            maxevents: c_int,
+            timeout: c_int,
+        ) -> c_int;
+        pub fn pipe(fds: *mut c_int) -> c_int;
+        pub fn read(fd: c_int, buf: *mut u8, count: usize) -> isize;
+        pub fn write(fd: c_int, buf: *const u8, count: usize) -> isize;
+        pub fn close(fd: c_int) -> c_int;
+    }
+}
+
+use sys::{EpollEvent, EPOLLERR, EPOLLHUP, EPOLLIN, EPOLLOUT};
+
+struct Epoll {
+    fd: RawFd,
+}
+
+impl Epoll {
+    fn new() -> std::io::Result<Epoll> {
+        let fd = unsafe { sys::epoll_create1(0) };
+        if fd < 0 {
+            return Err(std::io::Error::last_os_error());
+        }
+        Ok(Epoll { fd })
+    }
+
+    fn ctl(&self, op: c_int, fd: RawFd, events: u32, token: u64) -> std::io::Result<()> {
+        let mut ev = EpollEvent { events, data: token };
+        let arg = if op == sys::EPOLL_CTL_DEL { std::ptr::null_mut() } else { &mut ev };
+        if unsafe { sys::epoll_ctl(self.fd, op, fd, arg) } < 0 {
+            return Err(std::io::Error::last_os_error());
+        }
+        Ok(())
+    }
+
+    fn add(&self, fd: RawFd, events: u32, token: u64) -> std::io::Result<()> {
+        self.ctl(sys::EPOLL_CTL_ADD, fd, events, token)
+    }
+
+    fn modify(&self, fd: RawFd, events: u32, token: u64) -> std::io::Result<()> {
+        self.ctl(sys::EPOLL_CTL_MOD, fd, events, token)
+    }
+
+    fn del(&self, fd: RawFd) {
+        let _ = self.ctl(sys::EPOLL_CTL_DEL, fd, 0, 0);
+    }
+
+    /// `None` blocks indefinitely. EINTR reports as zero events.
+    fn wait(&self, events: &mut [EpollEvent], timeout: Option<Duration>) -> usize {
+        let millis: c_int = match timeout {
+            None => -1,
+            Some(d) => {
+                // round up so we never wake before the deadline and spin
+                let ms = d.as_millis().saturating_add(u128::from(d.subsec_nanos() % 1_000_000 > 0));
+                ms.min(c_int::MAX as u128) as c_int
+            }
+        };
+        let n = unsafe {
+            sys::epoll_wait(self.fd, events.as_mut_ptr(), events.len() as c_int, millis)
+        };
+        if n < 0 {
+            let e = std::io::Error::last_os_error();
+            if e.kind() != std::io::ErrorKind::Interrupted {
+                // nothing sane to do from the loop; surface and carry on
+                eprintln!("epoll_wait failed: {e}");
+            }
+            return 0;
+        }
+        n as usize
+    }
+}
+
+impl Drop for Epoll {
+    fn drop(&mut self) {
+        unsafe { sys::close(self.fd) };
+    }
+}
+
+/// Write end of the loop's self-pipe. Cloned into worker completions and
+/// held by [`super::HttpServer`] for shutdown.
+pub(crate) struct Waker {
+    fd: RawFd,
+}
+
+impl Waker {
+    pub(crate) fn wake(&self) {
+        let byte = 1u8;
+        let _ = unsafe { sys::write(self.fd, &byte, 1) };
+    }
+}
+
+impl Drop for Waker {
+    fn drop(&mut self) {
+        unsafe { sys::close(self.fd) };
+    }
+}
+
+// ---- worker completions ---------------------------------------------------
+
+struct Done {
+    idx: usize,
+    gen: u64,
+    reply: Reply,
+}
+
+struct CompletionState {
+    done: Vec<Done>,
+    /// a wake byte is already in the pipe; don't write another until the
+    /// loop drains — this bounds the pipe to one outstanding byte per
+    /// cycle so the blocking ends can never fill
+    wake_armed: bool,
+}
+
+struct Completions {
+    state: Mutex<CompletionState>,
+    waker: Arc<Waker>,
+}
+
+impl Completions {
+    fn push(&self, d: Done) {
+        let mut s = self.state.lock().unwrap();
+        s.done.push(d);
+        if !s.wake_armed {
+            s.wake_armed = true;
+            self.waker.wake();
+        }
+    }
+
+    fn take(&self) -> Vec<Done> {
+        let mut s = self.state.lock().unwrap();
+        s.wake_armed = false;
+        std::mem::take(&mut s.done)
+    }
+}
+
+// ---- timer wheel ----------------------------------------------------------
+
+const WHEEL_SLOTS: usize = 512;
+const WHEEL_TICK_MS: u64 = 16;
+
+/// Hashed timing wheel: 512 slots × 16 ms ≈ an 8 s horizon. Deadlines
+/// past the horizon clamp to the far edge and cascade (the driver
+/// re-schedules any entry whose real deadline hasn't passed when it
+/// fires). Deletion is lazy — the driver drops entries whose `seq` no
+/// longer matches the connection's live `timer_seq`.
+struct TimerWheel {
+    slots: Vec<Vec<(usize, u64)>>,
+    /// next tick to drain (everything below has been expired)
+    cursor: u64,
+    start: Instant,
+    scheduled: usize,
+}
+
+impl TimerWheel {
+    fn new(start: Instant) -> TimerWheel {
+        TimerWheel { slots: vec![Vec::new(); WHEEL_SLOTS], cursor: 0, start, scheduled: 0 }
+    }
+
+    fn tick_of(&self, t: Instant) -> u64 {
+        t.saturating_duration_since(self.start).as_millis() as u64 / WHEEL_TICK_MS
+    }
+
+    fn schedule(&mut self, idx: usize, seq: u64, deadline: Instant) {
+        let tick = self.tick_of(deadline).clamp(self.cursor, self.cursor + WHEEL_SLOTS as u64 - 1);
+        self.slots[(tick % WHEEL_SLOTS as u64) as usize].push((idx, seq));
+        self.scheduled += 1;
+    }
+
+    /// Drain every slot whose tick has passed and return the fired
+    /// entries. Advances the cursor *before* the caller re-schedules, so
+    /// cascading entries land at future ticks instead of spinning.
+    fn expire(&mut self, now: Instant) -> Vec<(usize, u64)> {
+        let current = self.tick_of(now);
+        if current < self.cursor || self.scheduled == 0 {
+            // keep the cursor abreast of time even while empty, so a new
+            // entry is never clamped onto a long-passed tick
+            self.cursor = self.cursor.max(current);
+            return Vec::new();
+        }
+        let span = (current - self.cursor + 1).min(WHEEL_SLOTS as u64);
+        let from = self.cursor;
+        self.cursor = current + 1;
+        let mut fired = Vec::new();
+        for i in 0..span {
+            let slot = ((from + i) % WHEEL_SLOTS as u64) as usize;
+            if !self.slots[slot].is_empty() {
+                self.scheduled -= self.slots[slot].len();
+                fired.append(&mut self.slots[slot]);
+            }
+        }
+        fired
+    }
+
+    /// How long `epoll_wait` may sleep: until just past the first
+    /// non-empty slot's tick boundary, or forever when nothing is armed.
+    fn next_timeout(&self, now: Instant) -> Option<Duration> {
+        if self.scheduled == 0 {
+            return None;
+        }
+        for i in 0..WHEEL_SLOTS as u64 {
+            let tick = self.cursor + i;
+            if !self.slots[(tick % WHEEL_SLOTS as u64) as usize].is_empty() {
+                let boundary =
+                    self.start + Duration::from_millis((tick + 1) * WHEEL_TICK_MS);
+                return Some(boundary.saturating_duration_since(now));
+            }
+        }
+        Some(Duration::from_millis(WHEEL_TICK_MS))
+    }
+}
+
+// ---- the driver -----------------------------------------------------------
+
+const TOKEN_LISTENER: u64 = u64::MAX;
+const TOKEN_WAKER: u64 = u64::MAX - 1;
+/// fairness cap: max reads per readiness event before yielding back to
+/// the loop (level-triggered epoll re-delivers whatever is left)
+const READS_PER_EVENT: usize = 16;
+
+struct Conn {
+    stream: std::net::TcpStream,
+    /// guards stale classify completions after slot reuse
+    gen: u64,
+    buf: Vec<u8>,
+    out: Vec<u8>,
+    written: usize,
+    inflight: bool,
+    close_after_flush: bool,
+    peer_closed: bool,
+    /// epoll events currently registered for this fd
+    interest: u32,
+    deadline: Instant,
+    timer_seq: u64,
+    /// a partial request is on the clock: answer 408 on expiry instead
+    /// of closing silently
+    timeout_408: bool,
+}
+
+struct Job {
+    idx: usize,
+    gen: u64,
+    request: ClassifyRequest,
+    keep: bool,
+    http11: bool,
+}
+
+enum Step {
+    Incomplete,
+    Reply(Reply, usize),
+    Dispatch(Box<ClassifyRequest>, bool, bool, usize),
+    Fatal(Reply),
+}
+
+struct Driver {
+    ctx: Arc<Ctx>,
+    epoll: Epoll,
+    listener: Option<TcpListener>,
+    slots: Vec<Option<Conn>>,
+    free: Vec<usize>,
+    /// slots closed during the current event batch; recycled only at the
+    /// top of the next iteration so a stale readiness event in this
+    /// batch can never alias a freshly accepted connection
+    dying: Vec<usize>,
+    live: usize,
+    wheel: TimerWheel,
+    next_seq: u64,
+    next_gen: u64,
+    pool: Option<WorkerPool<Job>>,
+    completions: Arc<Completions>,
+    pipe_read: RawFd,
+    accept_err_reported: bool,
+    draining: bool,
+    drain_deadline: Instant,
+    scratch: [u8; 8192],
+}
+
+/// Start the event-loop backend: returns the loop thread and the waker
+/// that interrupts its `epoll_wait` (used by shutdown and by classify
+/// workers delivering completions).
+pub(crate) fn spawn(
+    ctx: Arc<Ctx>,
+    listener: TcpListener,
+) -> std::io::Result<(JoinHandle<()>, Arc<Waker>)> {
+    let epoll = Epoll::new()?;
+    let mut fds = [0 as c_int; 2];
+    if unsafe { sys::pipe(fds.as_mut_ptr()) } < 0 {
+        return Err(std::io::Error::last_os_error());
+    }
+    let (pipe_read, pipe_write) = (fds[0], fds[1]);
+    let waker = Arc::new(Waker { fd: pipe_write });
+
+    epoll.add(listener.as_raw_fd(), EPOLLIN, TOKEN_LISTENER)?;
+    epoll.add(pipe_read, EPOLLIN, TOKEN_WAKER)?;
+
+    let completions = Arc::new(Completions {
+        state: Mutex::new(CompletionState { done: Vec::new(), wake_armed: false }),
+        waker: Arc::clone(&waker),
+    });
+
+    let wctx = Arc::clone(&ctx);
+    let wdone = Arc::clone(&completions);
+    let cfg = ctx.cfg;
+    let pool = WorkerPool::new(
+        cfg.conn_threads.max(1),
+        cfg.conn_backlog.max(1),
+        move |job: Job| {
+            let reply = run_classify(&wctx, job.request, job.keep, job.http11);
+            wdone.push(Done { idx: job.idx, gen: job.gen, reply });
+        },
+    );
+
+    let now = Instant::now();
+    let mut driver = Driver {
+        ctx,
+        epoll,
+        listener: Some(listener),
+        slots: Vec::new(),
+        free: Vec::new(),
+        dying: Vec::new(),
+        live: 0,
+        wheel: TimerWheel::new(now),
+        next_seq: 0,
+        next_gen: 0,
+        pool: Some(pool),
+        completions,
+        pipe_read,
+        accept_err_reported: false,
+        draining: false,
+        drain_deadline: now,
+        scratch: [0u8; 8192],
+    };
+    let handle = std::thread::Builder::new()
+        .name("http-event-loop".into())
+        .spawn(move || driver.run())?;
+    Ok((handle, waker))
+}
+
+impl Driver {
+    fn run(&mut self) {
+        let mut events = vec![EpollEvent { events: 0, data: 0 }; 1024];
+        loop {
+            self.free.append(&mut self.dying);
+            let now = Instant::now();
+            if self.ctx.stop.load(Ordering::Acquire) && !self.draining {
+                self.begin_drain(now);
+            }
+            if self.draining && (self.live == 0 || now >= self.drain_deadline) {
+                break;
+            }
+            let timeout = if self.draining {
+                // poll the drain exit condition even if no fd fires
+                Some(self.wheel.next_timeout(now).unwrap_or(Duration::from_millis(50)).min(
+                    Duration::from_millis(50),
+                ))
+            } else {
+                self.wheel.next_timeout(now)
+            };
+            let n = self.epoll.wait(&mut events, timeout);
+            let now = Instant::now();
+            for ev in &events[..n] {
+                let token = ev.data; // value copy: the struct may be packed
+                let flags = ev.events;
+                match token {
+                    TOKEN_WAKER => {
+                        let mut buf = [0u8; 64];
+                        let _ = unsafe { sys::read(self.pipe_read, buf.as_mut_ptr(), buf.len()) };
+                    }
+                    TOKEN_LISTENER => self.accept_ready(now),
+                    _ => {
+                        let idx = token as usize;
+                        if idx >= self.slots.len() || self.slots[idx].is_none() {
+                            continue; // closed earlier in this batch
+                        }
+                        if flags & (EPOLLERR | EPOLLHUP) != 0 {
+                            self.close(idx);
+                            continue;
+                        }
+                        if flags & EPOLLIN != 0 {
+                            self.on_readable(idx, now);
+                        }
+                        if flags & EPOLLOUT != 0 && self.slots[idx].is_some() {
+                            self.finish_io(idx, now);
+                        }
+                    }
+                }
+            }
+            for d in self.completions.take() {
+                self.complete(d, now);
+            }
+            for (idx, seq) in self.wheel.expire(now) {
+                self.on_timer(idx, seq, now);
+            }
+        }
+        // drain grace over (or everything closed): tear down
+        if let Some(l) = self.listener.take() {
+            self.epoll.del(l.as_raw_fd());
+        }
+        let open: Vec<usize> =
+            (0..self.slots.len()).filter(|&i| self.slots[i].is_some()).collect();
+        for idx in open {
+            self.close(idx);
+        }
+        if let Some(pool) = self.pool.take() {
+            // joins the classify workers, which drops their Arc<Ctx>
+            // clones so HttpServer::shutdown can unwrap the context
+            pool.shutdown();
+        }
+        unsafe { sys::close(self.pipe_read) };
+    }
+
+    fn begin_drain(&mut self, now: Instant) {
+        self.draining = true;
+        self.drain_deadline = now + self.ctx.cfg.response_timeout + Duration::from_secs(1);
+        if let Some(l) = self.listener.take() {
+            self.epoll.del(l.as_raw_fd());
+        }
+        let idxs: Vec<usize> =
+            (0..self.slots.len()).filter(|&i| self.slots[i].is_some()).collect();
+        for idx in idxs {
+            let (idle, flushed) = {
+                let c = self.slots[idx].as_ref().unwrap();
+                (!c.inflight, c.out.len() == c.written)
+            };
+            if idle && flushed {
+                self.close(idx);
+            } else if let Some(c) = &mut self.slots[idx] {
+                // flush what's pending (and any in-flight answer), then go
+                c.close_after_flush = true;
+            }
+        }
+    }
+
+    // -- accept path --
+
+    fn accept_ready(&mut self, now: Instant) {
+        // taken out for the duration so `install` can borrow self freely
+        let listener = match self.listener.take() {
+            Some(l) => l,
+            None => return,
+        };
+        loop {
+            match listener.accept() {
+                Ok((stream, _peer)) => {
+                    self.ctx.http.accepted.fetch_add(1, Ordering::Relaxed);
+                    if self.live >= self.ctx.cfg.max_connections {
+                        self.ctx.http.accepted.fetch_sub(1, Ordering::Relaxed);
+                        self.ctx.http.shed.fetch_add(1, Ordering::Relaxed);
+                        shed_connection(stream);
+                        continue;
+                    }
+                    if stream.set_nonblocking(true).is_err() {
+                        self.ctx.http.accepted.fetch_sub(1, Ordering::Relaxed);
+                        continue;
+                    }
+                    let _ = stream.set_nodelay(true);
+                    self.install(stream, now);
+                }
+                Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                Err(ref e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+                Err(e) => {
+                    // e.g. fd exhaustion: report once, back off briefly so a
+                    // level-triggered pending connection can't spin the loop
+                    if !self.accept_err_reported {
+                        self.accept_err_reported = true;
+                        eprintln!("http accept error (backing off): {e}");
+                    }
+                    std::thread::sleep(Duration::from_millis(10));
+                    break;
+                }
+            }
+        }
+        self.listener = Some(listener);
+    }
+
+    fn install(&mut self, stream: std::net::TcpStream, now: Instant) {
+        let idx = match self.free.pop() {
+            Some(i) => i,
+            None => {
+                self.slots.push(None);
+                self.slots.len() - 1
+            }
+        };
+        self.next_gen += 1;
+        let fd = stream.as_raw_fd();
+        let conn = Conn {
+            stream,
+            gen: self.next_gen,
+            buf: Vec::new(),
+            out: Vec::new(),
+            written: 0,
+            inflight: false,
+            close_after_flush: false,
+            peer_closed: false,
+            interest: EPOLLIN,
+            deadline: now,
+            timer_seq: 0,
+            timeout_408: false,
+        };
+        if self.epoll.add(fd, EPOLLIN, idx as u64).is_err() {
+            self.free.push(idx);
+            self.ctx.http.accepted.fetch_sub(1, Ordering::Relaxed);
+            return;
+        }
+        self.slots[idx] = Some(conn);
+        self.live += 1;
+        let ka = self.ctx.cfg.keep_alive_timeout;
+        self.arm(idx, now + ka, false);
+    }
+
+    // -- timers --
+
+    fn arm(&mut self, idx: usize, deadline: Instant, timeout_408: bool) {
+        self.next_seq += 1;
+        let seq = self.next_seq;
+        if let Some(c) = &mut self.slots[idx] {
+            c.deadline = deadline;
+            c.timer_seq = seq;
+            c.timeout_408 = timeout_408;
+            self.wheel.schedule(idx, seq, deadline);
+        }
+    }
+
+    fn on_timer(&mut self, idx: usize, seq: u64, now: Instant) {
+        let not_due_yet = match self.slots.get(idx).and_then(Option::as_ref) {
+            Some(c) if c.timer_seq == seq => (c.deadline > now).then_some(c.deadline),
+            _ => return, // slot reused or re-armed since: stale entry
+        };
+        if let Some(deadline) = not_due_yet {
+            // cascaded (past-horizon) or slot-aliased entry that fired
+            // early: push it back out toward its real deadline
+            self.wheel.schedule(idx, seq, deadline);
+            return;
+        }
+        let answer_408 = {
+            let c = self.slots[idx].as_ref().unwrap();
+            !c.inflight && !c.close_after_flush && c.timeout_408
+        };
+        if answer_408 {
+            self.ctx.http.read_timeouts.fetch_add(1, Ordering::Relaxed);
+            self.enqueue_reply(idx, Reply::error(408, "request incomplete", false), now);
+            self.finish_io(idx, now);
+        } else {
+            // idle expiry, a stuck in-flight backstop, or a peer too slow
+            // to read its response: nothing useful left to say
+            self.close(idx);
+        }
+    }
+
+    // -- I/O state machine --
+
+    fn on_readable(&mut self, idx: usize, now: Instant) {
+        let mut fatal = false;
+        let mut was_empty = false;
+        let mut grew = false;
+        if let Some(c) = &mut self.slots[idx] {
+            if c.inflight || c.close_after_flush {
+                // level-triggered race after interest change: ignore
+                self.finish_io(idx, now);
+                return;
+            }
+            was_empty = c.buf.is_empty();
+            for _ in 0..READS_PER_EVENT {
+                match c.stream.read(&mut self.scratch) {
+                    Ok(0) => {
+                        c.peer_closed = true;
+                        break;
+                    }
+                    Ok(n) => {
+                        c.buf.extend_from_slice(&self.scratch[..n]);
+                        grew = true;
+                    }
+                    Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                    Err(ref e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+                    Err(_) => {
+                        fatal = true;
+                        break;
+                    }
+                }
+            }
+        } else {
+            return;
+        }
+        if fatal {
+            self.close(idx);
+            return;
+        }
+        if was_empty && grew {
+            // first byte of a request: the whole head+body must arrive
+            // within the keep-alive budget (hard cap, never extended on
+            // read progress — a one-byte-per-tick drip can't hold a slot)
+            let ka = self.ctx.cfg.keep_alive_timeout;
+            self.arm(idx, now + ka, true);
+        }
+        self.advance(idx, now);
+        self.finish_io(idx, now);
+    }
+
+    /// Parse and answer every complete buffered request until the buffer
+    /// runs dry, a classify goes in flight, or the connection is closing.
+    fn advance(&mut self, idx: usize, now: Instant) {
+        loop {
+            let step = {
+                let stopping = self.draining || self.ctx.stop.load(Ordering::Acquire);
+                let c = match &mut self.slots[idx] {
+                    Some(c) => c,
+                    None => return,
+                };
+                if c.inflight || c.close_after_flush {
+                    return;
+                }
+                match parser::parse_request(&c.buf, &self.ctx.cfg.limits) {
+                    Ok(None) => Step::Incomplete,
+                    Err(e) => Step::Fatal(Reply::error(e.status(), e.message(), false)),
+                    Ok(Some((req, consumed))) => {
+                        let keep = req.keep_alive() && !stopping;
+                        let http11 = req.version == Version::Http11;
+                        match route_fast(&self.ctx, &req) {
+                            Some(reply) => Step::Reply(reply, consumed),
+                            None => match prepare_classify(&self.ctx, &req, keep) {
+                                Ok(request) => {
+                                    Step::Dispatch(Box::new(request), keep, http11, consumed)
+                                }
+                                Err(reply) => Step::Reply(reply, consumed),
+                            },
+                        }
+                    }
+                }
+            };
+            match step {
+                Step::Incomplete => return,
+                Step::Fatal(reply) => {
+                    self.enqueue_reply(idx, reply, now);
+                    return;
+                }
+                Step::Reply(reply, consumed) => {
+                    if let Some(c) = &mut self.slots[idx] {
+                        c.buf.drain(..consumed);
+                    }
+                    self.enqueue_reply(idx, reply, now);
+                    // keep going: more pipelined requests may be buffered
+                }
+                Step::Dispatch(request, keep, http11, consumed) => {
+                    let gen = {
+                        let c = self.slots[idx].as_mut().unwrap();
+                        c.buf.drain(..consumed);
+                        c.inflight = true;
+                        c.gen
+                    };
+                    let job = Job { idx, gen, request: *request, keep, http11 };
+                    let pool = self.pool.as_ref().expect("pool lives for the loop's life");
+                    if let Err(job) = pool.try_dispatch(job) {
+                        // classify backlog full: answer inline, keep the
+                        // connection (the condition is transient)
+                        if let Some(c) = &mut self.slots[idx] {
+                            c.inflight = false;
+                        }
+                        let mut reply = Reply::error(503, "server busy", job.keep);
+                        reply.http11 = job.http11;
+                        self.enqueue_reply(idx, reply, now);
+                    } else {
+                        // backstop only: the router's own deadline/timeout
+                        // machinery answers long before this fires
+                        let cap = self.ctx.cfg.response_timeout + self.ctx.cfg.keep_alive_timeout;
+                        self.arm(idx, now + cap, false);
+                        return;
+                    }
+                }
+            }
+        }
+    }
+
+    /// A worker finished a classify for slot `idx` (if the connection is
+    /// still the same generation and still waiting).
+    fn complete(&mut self, d: Done, now: Instant) {
+        let valid = matches!(
+            self.slots.get(d.idx).and_then(Option::as_ref),
+            Some(c) if c.gen == d.gen && c.inflight
+        );
+        if !valid {
+            return; // connection closed or slot reused while in flight
+        }
+        self.slots[d.idx].as_mut().unwrap().inflight = false;
+        self.enqueue_reply(d.idx, d.reply, now);
+        self.advance(d.idx, now); // pipelined follow-ups may be buffered
+        self.finish_io(d.idx, now);
+    }
+
+    /// Encode one response onto the connection's write buffer and re-arm
+    /// its deadline.
+    fn enqueue_reply(&mut self, idx: usize, reply: Reply, now: Instant) {
+        let threshold = self.ctx.cfg.stream_threshold;
+        let draining = self.draining;
+        let ka = self.ctx.cfg.keep_alive_timeout;
+        let (deadline, t408) = {
+            let c = match &mut self.slots[idx] {
+                Some(c) => c,
+                None => return,
+            };
+            let bytes = encode_reply(&reply, threshold);
+            c.out.extend_from_slice(&bytes);
+            if !reply.keep || draining {
+                c.close_after_flush = true;
+            }
+            if c.close_after_flush {
+                // flush deadline: close even if the peer won't read
+                (now + ka, false)
+            } else if c.buf.is_empty() {
+                (now + ka, false) // plain keep-alive idle
+            } else {
+                (now + ka, true) // partial pipelined request on the clock
+            }
+        };
+        self.arm(idx, deadline, t408);
+    }
+
+    /// Flush pending output, settle epoll interest, close if terminal.
+    fn finish_io(&mut self, idx: usize, _now: Instant) {
+        let mut fatal = false;
+        let mut desired = 0u32;
+        let mut should_close = false;
+        if let Some(c) = &mut self.slots[idx] {
+            while c.written < c.out.len() {
+                match c.stream.write(&c.out[c.written..]) {
+                    Ok(0) => {
+                        fatal = true;
+                        break;
+                    }
+                    Ok(n) => c.written += n,
+                    Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                    Err(ref e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+                    Err(_) => {
+                        // EPIPE and friends (std ignores SIGPIPE)
+                        fatal = true;
+                        break;
+                    }
+                }
+            }
+            if c.written == c.out.len() && !c.out.is_empty() {
+                c.out.clear();
+                c.written = 0;
+            }
+            let flushed = c.out.is_empty();
+            should_close = !fatal
+                && flushed
+                && (c.close_after_flush || (c.peer_closed && !c.inflight));
+            if !fatal && !should_close {
+                if !c.inflight && !c.close_after_flush && !c.peer_closed {
+                    desired |= EPOLLIN;
+                }
+                if !flushed {
+                    desired |= EPOLLOUT;
+                }
+                if desired != c.interest {
+                    let fd = c.stream.as_raw_fd();
+                    let token = idx as u64;
+                    if self.epoll.modify(fd, desired, token).is_err() {
+                        fatal = true;
+                    } else {
+                        c.interest = desired;
+                    }
+                }
+            }
+        } else {
+            return;
+        }
+        if fatal || should_close {
+            self.close(idx);
+        }
+    }
+
+    fn close(&mut self, idx: usize) {
+        if let Some(c) = self.slots[idx].take() {
+            self.epoll.del(c.stream.as_raw_fd());
+            drop(c.stream);
+            self.live -= 1;
+            self.dying.push(idx);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    #[cfg(target_arch = "x86_64")]
+    fn epoll_event_matches_kernel_abi() {
+        // x86-64 packs epoll_event to 12 bytes; anything else corrupts
+        // the event array the kernel writes into
+        assert_eq!(std::mem::size_of::<EpollEvent>(), 12);
+    }
+
+    #[test]
+    fn waker_interrupts_epoll_wait() {
+        let epoll = Epoll::new().expect("epoll_create1");
+        let mut fds = [0 as c_int; 2];
+        assert!(unsafe { sys::pipe(fds.as_mut_ptr()) } >= 0);
+        let waker = Waker { fd: fds[1] };
+        epoll.add(fds[0], EPOLLIN, TOKEN_WAKER).expect("add pipe");
+        waker.wake();
+        let mut events = [EpollEvent { events: 0, data: 0 }; 4];
+        let n = epoll.wait(&mut events, Some(Duration::from_secs(5)));
+        assert_eq!(n, 1);
+        let token = events[0].data;
+        assert_eq!(token, TOKEN_WAKER);
+        unsafe { sys::close(fds[0]) };
+    }
+
+    #[test]
+    fn wheel_fires_due_entries_in_order() {
+        let start = Instant::now();
+        let mut w = TimerWheel::new(start);
+        w.schedule(1, 10, start + Duration::from_millis(20));
+        w.schedule(2, 11, start + Duration::from_millis(200));
+        let fired = w.expire(start + Duration::from_millis(40));
+        assert_eq!(fired, vec![(1, 10)]);
+        let fired = w.expire(start + Duration::from_millis(40));
+        assert!(fired.is_empty(), "cursor advanced; nothing re-fires");
+        let fired = w.expire(start + Duration::from_millis(250));
+        assert_eq!(fired, vec![(2, 11)]);
+        assert_eq!(w.scheduled, 0);
+    }
+
+    #[test]
+    fn wheel_clamps_far_deadlines_to_horizon() {
+        let start = Instant::now();
+        let mut w = TimerWheel::new(start);
+        // deadline far past the 512-slot horizon: entry must land inside
+        // the wheel and fire (early), letting the driver cascade it
+        w.schedule(7, 1, start + Duration::from_secs(3600));
+        let horizon = Duration::from_millis(WHEEL_TICK_MS * WHEEL_SLOTS as u64 + 100);
+        let fired = w.expire(start + horizon);
+        assert_eq!(fired, vec![(7, 1)]);
+    }
+
+    #[test]
+    fn wheel_next_timeout_tracks_first_entry() {
+        let start = Instant::now();
+        let mut w = TimerWheel::new(start);
+        assert!(w.next_timeout(start).is_none(), "empty wheel sleeps forever");
+        w.schedule(3, 5, start + Duration::from_millis(100));
+        let t = w.next_timeout(start).expect("armed");
+        // wakes at the covering tick's far boundary: due <= wake <= due + tick
+        assert!(t >= Duration::from_millis(100), "woke before the deadline: {t:?}");
+        assert!(t <= Duration::from_millis(100 + WHEEL_TICK_MS), "overslept: {t:?}");
+    }
+
+    #[test]
+    fn wheel_lazy_deletion_leaves_stale_seqs_to_caller() {
+        let start = Instant::now();
+        let mut w = TimerWheel::new(start);
+        w.schedule(4, 1, start + Duration::from_millis(16));
+        w.schedule(4, 2, start + Duration::from_millis(32)); // re-arm, new seq
+        let fired = w.expire(start + Duration::from_millis(64));
+        // both entries fire; the driver drops seq 1 as stale
+        assert_eq!(fired.len(), 2);
+        assert!(fired.contains(&(4, 1)) && fired.contains(&(4, 2)));
+    }
+}

@@ -5,9 +5,25 @@
 //! loopback or LAN TCP connections, parses requests incrementally and
 //! zero-copy ([`parser`]), decodes classification payloads into routed
 //! `Router::try_submit` calls with per-request deadlines, and streams back
-//! JSON built with [`crate::util::json`]. Connection handling rides the
-//! bounded [`crate::util::pool::WorkerPool`]; saturated pools shed with
-//! `503` instead of queueing without bound.
+//! JSON built with [`crate::util::json`].
+//!
+//! # Connection backends
+//!
+//! On Linux (default; [`HttpConfig::event_loop`]) connections are served
+//! by a **readiness-driven event loop**: one thread multiplexes every
+//! socket over a vendored `epoll` shim (raw syscalls, no tokio) with
+//! per-connection state machines, write-interest registration for
+//! partially flushed responses, and a timer wheel for keep-alive /
+//! slow-drip deadlines. Tens of thousands of mostly idle keep-alive
+//! connections cost one loop thread plus `conn_threads` classify
+//! workers; [`HttpConfig::max_connections`] caps the open-socket count
+//! (accepts past it shed with `503`). Everywhere else — or with
+//! `event_loop` off — the **blocking fallback** runs: a bounded
+//! [`crate::util::pool::WorkerPool`] of connection-handler threads fed
+//! by an accept loop, shedding with `503` when pool + backlog saturate.
+//! Both backends share the parser, the routing layer, and the response
+//! encoder, so observable behaviour is identical below the
+//! concurrency-scale difference.
 //!
 //! # Wire protocol
 //!
@@ -20,6 +36,20 @@
 //! body honours the body limit). Any other transfer coding — or chunked
 //! combined with `Content-Length` — is rejected with `400`, closing the
 //! request-smuggling vectors.
+//!
+//! **Response framing**: bodies at or under
+//! [`HttpConfig::stream_threshold`] (default 64 KiB) are sent with
+//! `Content-Length`; larger bodies — `/v1/models` and `/v1/metrics` over
+//! a big fleet, batch classify results — stream to HTTP/1.1 clients as
+//! `Transfer-Encoding: chunked` (16 KiB chunks, no trailers), with a
+//! **byte-identical decoded payload** to the buffered path. HTTP/1.0
+//! clients and `HEAD` responses always get `Content-Length`.
+//!
+//! **`HEAD` semantics** (RFC 9110 §9.3.2): every `GET` endpoint answers
+//! `HEAD` with the same status and headers — including the
+//! `Content-Length` the `GET` body would have — and no body, so
+//! load-balancer health probes on `/healthz` see `200`. Wrong-method
+//! `405`s carry `Allow: GET, HEAD` (or `Allow: POST` on `/v1/classify`).
 //!
 //! ## `POST /v1/classify`
 //!
@@ -105,9 +135,12 @@
 //! counters (`accepted`/`shed`/`read_timeouts` connections), and the
 //! shared compute `pool` utilization (`null` when engines run
 //! single-threaded). Latency objects carry quantile *summaries*
-//! (`count`/`mean_us`/`p50_us`/`p95_us`/`p99_us`/`max_us`); scrapes are
+//! (`count`/`mean_us`/`p50_us`/`p95_us`/`p99_us`/`p999_us`/`max_us`);
+//! scrapes are
 //! cheap by construction — assembling one never copies a latency
-//! reservoir or blocks request routing behind the router lock. The
+//! reservoir or blocks request routing behind the router lock. (`p999_us`
+//! reads from the same uniform reservoir as the other quantiles; it needs
+//! roughly a thousand samples before it separates from `max_us`.) The
 //! top-level (fleet-aggregate) p50/p95/p99 are count-weighted averages
 //! of the per-model quantiles, not pooled quantiles: on a fleet of
 //! models with very different latency profiles, read the per-model
@@ -125,17 +158,19 @@
 //! | 200  | classified / snapshot served |
 //! | 400  | malformed HTTP (bad request line, header, `Content-Length`, chunk framing, unsupported transfer coding), invalid JSON, missing/wrong-size `image`, non-string `model`, malformed `acc_bits` (non-positive, non-integer, or given together with `operating_point`), an `acc_bits` below the plan's safe minimum, or an `acc_bits` override on a plan-free model |
 //! | 404  | unknown path, or `model` names an unregistered model (body lists the registered fleet) |
-//! | 405  | wrong method on a known path (`Allow` header lists the right one) |
-//! | 408  | a partial request stalled past the keep-alive timeout (counted in `http.read_timeouts`) |
+//! | 405  | wrong method on a known path (`Allow` header lists the right ones — `GET, HEAD` or `POST`) |
+//! | 408  | a partial request stalled past the keep-alive timeout, or a whole request failed to arrive within it (counted in `http.read_timeouts`) |
 //! | 413  | head, declared body, or decoded chunked body over the configured limits |
 //! | 500  | engine failure on the batch the request rode in, or a registered model's source failed to load (including a model whose measured bytes cannot fit the router's `--max-bytes` budget even on an empty fleet) |
-//! | 503  | target model's queue full, connection backlog full, or shutting down |
+//! | 503  | target model's queue full, classify worker backlog full, connection backlog/`max_connections` cap hit, or shutting down |
 //! | 504  | per-request deadline expired in queue, or the response-wait backstop fired |
 //!
 //! All error bodies are `{"error": "<message>"}`. Protocol-level errors
 //! (400/413/408) close the connection; semantic errors (404/405 and the
 //! JSON-level 400s) keep it open per the usual keep-alive rules.
 
+#[cfg(target_os = "linux")]
+mod event_loop;
 pub mod parser;
 pub mod server;
 

@@ -462,6 +462,21 @@ fn walk_chunks(
     }
 }
 
+/// Encode `body` as `Transfer-Encoding: chunked` framing onto `out`:
+/// hex-size line + data + CRLF per chunk of at most `chunk_size` bytes,
+/// then the terminal `0\r\n\r\n` (no trailers). The inverse of
+/// [`parse_chunked_body`]'s decoding — round-trips byte-identically —
+/// used by the server to stream large response bodies.
+pub fn encode_chunked(body: &[u8], chunk_size: usize, out: &mut Vec<u8>) {
+    let chunk_size = chunk_size.max(1);
+    for chunk in body.chunks(chunk_size) {
+        out.extend_from_slice(format!("{:x}\r\n", chunk.len()).as_bytes());
+        out.extend_from_slice(chunk);
+        out.extend_from_slice(b"\r\n");
+    }
+    out.extend_from_slice(b"0\r\n\r\n");
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -728,5 +743,34 @@ mod tests {
                     4\r\nabcd\r\n4\r\nefgh\r\n0\r\n\r\n";
         let (req, _) = parse_request(raw, &limits).unwrap().unwrap();
         assert_eq!(&req.body[..], b"abcdefgh");
+    }
+
+    #[test]
+    fn encode_chunked_roundtrips_through_the_parser() {
+        // every (body length, chunk size) combination must decode back
+        // byte-identically — including empty bodies (bare terminator) and
+        // chunk sizes larger than the body (single chunk)
+        for len in [0usize, 1, 5, 16, 17, 100] {
+            let body: Vec<u8> = (0..len).map(|i| (i % 251) as u8).collect();
+            for chunk in [1usize, 4, 16, 64] {
+                let mut framed =
+                    b"POST /x HTTP/1.1\r\nTransfer-Encoding: chunked\r\n\r\n".to_vec();
+                encode_chunked(&body, chunk, &mut framed);
+                let (req, consumed) = parse(&framed).expect("valid").expect("complete");
+                assert_eq!(consumed, framed.len(), "len={len} chunk={chunk}");
+                assert_eq!(&req.body[..], &body[..], "len={len} chunk={chunk}");
+            }
+        }
+    }
+
+    #[test]
+    fn encode_chunked_emits_hex_sizes() {
+        let mut out = Vec::new();
+        encode_chunked(&[b'a'; 26], 26, &mut out);
+        assert_eq!(&out[..], b"1a\r\naaaaaaaaaaaaaaaaaaaaaaaaaa\r\n0\r\n\r\n");
+        // a zero chunk size is clamped rather than looping forever
+        let mut out = Vec::new();
+        encode_chunked(b"xy", 0, &mut out);
+        assert_eq!(&out[..], b"1\r\nx\r\n1\r\ny\r\n0\r\n\r\n");
     }
 }

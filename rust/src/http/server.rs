@@ -1,24 +1,39 @@
 //! HTTP/1.1 front-end over the multi-model [`Router`].
 //!
-//! Plain `std::net` blocking I/O: a nonblocking `TcpListener` accept loop
-//! feeds accepted sockets into a bounded [`WorkerPool`] (the connection
-//! pool); each handler thread runs the keep-alive read loop, feeding bytes
-//! into the incremental parser and answering every complete request. When
-//! the pool and its backlog are saturated the accept loop sheds the
-//! connection with `503` instead of queueing without bound.
+//! Two connection backends share one request/response layer:
 //!
-//! Requests are routed by the optional `"model"` field of
-//! `POST /v1/classify`; `GET /v1/models` lists the registered fleet and
-//! `GET /v1/metrics` nests per-model serving metrics under router- and
-//! connection-level counters. See the module docs in `crate::http` for
-//! the wire protocol.
+//! * **Event loop** (Linux, [`HttpConfig::event_loop`], the default
+//!   there): a single readiness-driven thread multiplexes every
+//!   connection over `epoll` (`super::event_loop`) — nonblocking sockets,
+//!   per-connection state machines, write-interest registration for
+//!   partially flushed responses, and a timer wheel for keep-alive /
+//!   slow-drip deadlines. Blocking classify work runs on a bounded
+//!   [`WorkerPool`] of `conn_threads` workers; fast GET/HEAD endpoints
+//!   are answered inline on the loop. Tens of thousands of mostly idle
+//!   keep-alive connections cost one thread plus a few hundred bytes
+//!   each, bounded by [`HttpConfig::max_connections`] (accepts past the
+//!   cap shed with 503).
+//!
+//! * **Blocking fallback** (every platform): a nonblocking `TcpListener`
+//!   accept loop feeds accepted sockets into the bounded [`WorkerPool`]
+//!   (the connection pool); each handler thread runs the keep-alive read
+//!   loop. When the pool and its backlog are saturated the accept loop
+//!   sheds the connection with `503`.
+//!
+//! Both backends parse with the incremental [`super::parser`], route
+//! through [`route_fast`]/[`prepare_classify`]/[`run_classify`], and
+//! frame responses with [`encode_reply`] — large bodies stream as
+//! `Transfer-Encoding: chunked` to HTTP/1.1 clients past
+//! [`HttpConfig::stream_threshold`], byte-identical payload to the
+//! buffered path. See the module docs in `crate::http` for the wire
+//! protocol.
 
 use std::io::{Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Arc;
 use std::thread::JoinHandle;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use crate::coordinator::{
     ClassifyRequest, LatencySummary, ModelStatus, RouteError, Router, RouterMetrics, ServeError,
@@ -28,19 +43,25 @@ use crate::plan::PlanSummary;
 use crate::util::json::{self, Json};
 use crate::util::pool::{self, WorkerPool};
 
-use super::parser::{self, Limits, Request};
+use super::parser::{self, Limits, Request, Version};
 
-/// Granularity of the connection read loop: how often a blocked read wakes
-/// up to check the stop flag and the idle clock.
+/// Granularity of the blocking-backend connection read loop: how often a
+/// blocked read wakes up to check the stop flag and the idle deadline.
 const READ_TICK: Duration = Duration::from_millis(25);
+
+/// Chunk size used when a response body streams as
+/// `Transfer-Encoding: chunked`.
+pub(crate) const RESPONSE_CHUNK: usize = 16 * 1024;
 
 /// HTTP front-end tuning knobs.
 #[derive(Clone, Copy, Debug)]
 pub struct HttpConfig {
-    /// connection-handler threads (the bounded connection pool)
+    /// blocking workers: connection-handler threads under the fallback
+    /// backend, classify workers under the event loop
     pub conn_threads: usize,
-    /// accepted connections that may wait for a free handler before the
-    /// accept loop starts shedding with 503
+    /// items that may queue for a free worker before shedding with 503
+    /// (waiting connections on the fallback path, waiting classify jobs
+    /// on the event loop)
     pub conn_backlog: usize,
     /// idle keep-alive connections are closed after this long with no
     /// request bytes, and a single request must arrive *completely*
@@ -53,6 +74,19 @@ pub struct HttpConfig {
     /// hard cap on waiting for the engine's answer to one request; the
     /// per-request deadline usually fires long before this backstop
     pub response_timeout: Duration,
+    /// serve connections from the readiness-driven `epoll` event loop.
+    /// Linux only: elsewhere the flag is ignored and the blocking
+    /// fallback runs. Defaults on where supported.
+    pub event_loop: bool,
+    /// hard cap on concurrently open connections under the event loop;
+    /// accepts past it are shed with 503 (the blocking backend is bounded
+    /// by `conn_threads + conn_backlog` instead)
+    pub max_connections: usize,
+    /// response bodies larger than this stream as
+    /// `Transfer-Encoding: chunked` to HTTP/1.1 clients (HTTP/1.0 and
+    /// HEAD responses always use `Content-Length`); payload bytes are
+    /// identical either way
+    pub stream_threshold: usize,
 }
 
 impl Default for HttpConfig {
@@ -63,6 +97,9 @@ impl Default for HttpConfig {
             keep_alive_timeout: Duration::from_secs(5),
             limits: Limits::default(),
             response_timeout: Duration::from_secs(30),
+            event_loop: cfg!(target_os = "linux"),
+            max_connections: 16_384,
+            stream_threshold: 64 * 1024,
         }
     }
 }
@@ -73,9 +110,11 @@ impl Default for HttpConfig {
 /// Exported as the `http` section of `GET /v1/metrics`.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct HttpMetrics {
-    /// connections handed to the connection pool
+    /// connections handed to a backend (event loop slab or connection
+    /// pool)
     pub accepted: u64,
-    /// connections shed with 503 because the pool + backlog were saturated
+    /// connections shed with 503: pool + backlog saturated (blocking
+    /// backend) or the `max_connections` cap hit (event loop)
     pub shed: u64,
     /// requests answered 408 because a partial request stalled or overran
     /// the keep-alive budget
@@ -83,14 +122,14 @@ pub struct HttpMetrics {
 }
 
 #[derive(Default)]
-struct HttpCounters {
-    accepted: AtomicU64,
-    shed: AtomicU64,
-    read_timeouts: AtomicU64,
+pub(crate) struct HttpCounters {
+    pub(crate) accepted: AtomicU64,
+    pub(crate) shed: AtomicU64,
+    pub(crate) read_timeouts: AtomicU64,
 }
 
 impl HttpCounters {
-    fn snapshot(&self) -> HttpMetrics {
+    pub(crate) fn snapshot(&self) -> HttpMetrics {
         HttpMetrics {
             accepted: self.accepted.load(Ordering::Relaxed),
             shed: self.shed.load(Ordering::Relaxed),
@@ -118,22 +157,30 @@ impl FrontendReport {
     }
 }
 
-struct Ctx {
-    router: Router,
-    cfg: HttpConfig,
-    next_id: AtomicU64,
-    stop: Arc<AtomicBool>,
-    http: HttpCounters,
+pub(crate) struct Ctx {
+    pub(crate) router: Router,
+    pub(crate) cfg: HttpConfig,
+    pub(crate) next_id: AtomicU64,
+    pub(crate) stop: Arc<AtomicBool>,
+    pub(crate) http: HttpCounters,
+}
+
+enum Backend {
+    /// accept thread owning the connection pool (handed back on exit so
+    /// shutdown can drain it after joining the loop)
+    Blocking { accept: Option<JoinHandle<WorkerPool<TcpStream>>> },
+    #[cfg(target_os = "linux")]
+    Event { handle: Option<JoinHandle<()>>, waker: Arc<super::event_loop::Waker> },
 }
 
 /// The HTTP/1.1 serving front-end. Owns the [`Router`] it forwards
 /// classification requests into; [`HttpServer::shutdown`] drains the
-/// connection pool, then every model server, and returns the final
+/// active backend, then every model server, and returns the final
 /// [`FrontendReport`].
 pub struct HttpServer {
     addr: SocketAddr,
     stop: Arc<AtomicBool>,
-    accept: Option<JoinHandle<WorkerPool<TcpStream>>>,
+    backend: Backend,
     ctx: Option<Arc<Ctx>>,
 }
 
@@ -152,6 +199,17 @@ impl HttpServer {
             stop: Arc::clone(&stop),
             http: HttpCounters::default(),
         });
+
+        #[cfg(target_os = "linux")]
+        if cfg.event_loop {
+            let (handle, waker) = super::event_loop::spawn(Arc::clone(&ctx), listener)?;
+            return Ok(HttpServer {
+                addr: local,
+                stop,
+                backend: Backend::Event { handle: Some(handle), waker },
+                ctx: Some(ctx),
+            });
+        }
 
         let hctx = Arc::clone(&ctx);
         let conn_pool = WorkerPool::new(
@@ -201,7 +259,12 @@ impl HttpServer {
             conn_pool
         });
 
-        Ok(HttpServer { addr: local, stop, accept: Some(accept), ctx: Some(ctx) })
+        Ok(HttpServer {
+            addr: local,
+            stop,
+            backend: Backend::Blocking { accept: Some(accept) },
+            ctx: Some(ctx),
+        })
     }
 
     /// The bound address (useful with an ephemeral `:0` bind).
@@ -225,7 +288,7 @@ impl HttpServer {
         }
     }
 
-    /// Stop accepting connections, drain the connection pool, shut every
+    /// Stop accepting connections, drain the active backend, shut every
     /// model server down (draining their queues), and return the final
     /// report.
     pub fn shutdown(mut self) -> FrontendReport {
@@ -245,9 +308,20 @@ impl HttpServer {
 
     fn stop_and_drain(&mut self) {
         self.stop.store(true, Ordering::Release);
-        if let Some(h) = self.accept.take() {
-            if let Ok(conn_pool) = h.join() {
-                conn_pool.shutdown();
+        match &mut self.backend {
+            Backend::Blocking { accept } => {
+                if let Some(h) = accept.take() {
+                    if let Ok(conn_pool) = h.join() {
+                        conn_pool.shutdown();
+                    }
+                }
+            }
+            #[cfg(target_os = "linux")]
+            Backend::Event { handle, waker } => {
+                waker.wake();
+                if let Some(h) = handle.take() {
+                    let _ = h.join();
+                }
             }
         }
     }
@@ -259,16 +333,54 @@ impl Drop for HttpServer {
     }
 }
 
-// ---- connection handling --------------------------------------------------
+/// Best-effort raise of the process file-descriptor limit
+/// (`RLIMIT_NOFILE`) to at least `want`; returns the resulting soft
+/// limit. The event loop happily holds tens of thousands of sockets, but
+/// the default soft limit (often 1024) caps it first — the connection
+/// bench and the soak tests call this before opening large fleets.
+/// No-op off Linux (returns `u64::MAX`).
+pub fn raise_nofile_limit(want: u64) -> u64 {
+    #[cfg(target_os = "linux")]
+    {
+        #[repr(C)]
+        struct Rlimit {
+            cur: u64,
+            max: u64,
+        }
+        extern "C" {
+            fn getrlimit(resource: i32, rlim: *mut Rlimit) -> i32;
+            fn setrlimit(resource: i32, rlim: *const Rlimit) -> i32;
+        }
+        const RLIMIT_NOFILE: i32 = 7;
+        let mut rl = Rlimit { cur: 0, max: 0 };
+        if unsafe { getrlimit(RLIMIT_NOFILE, &mut rl) } != 0 {
+            return 0;
+        }
+        if rl.cur < want {
+            let bumped = Rlimit { cur: want.min(rl.max), max: rl.max };
+            if unsafe { setrlimit(RLIMIT_NOFILE, &bumped) } == 0 {
+                rl.cur = bumped.cur;
+            }
+        }
+        rl.cur
+    }
+    #[cfg(not(target_os = "linux"))]
+    {
+        let _ = want;
+        u64::MAX
+    }
+}
 
-/// Best-effort 503 for a connection the saturated pool + backlog cannot
-/// take. Clears any inherited O_NONBLOCK and bounds the write so a dead
-/// peer cannot stall the accept loop.
-fn shed_connection(mut stream: TcpStream) {
+// ---- blocking connection handling -----------------------------------------
+
+/// Best-effort 503 for a connection the saturated backend cannot take.
+/// Clears any inherited O_NONBLOCK and bounds the write so a dead peer
+/// cannot stall the accept path.
+pub(crate) fn shed_connection(mut stream: TcpStream) {
     let _ = stream.set_nonblocking(false);
     let _ = stream.set_write_timeout(Some(Duration::from_millis(50)));
-    let body = json::obj(vec![("error", json::s("connection backlog full"))]).to_string();
-    let _ = stream.write_all(&response_bytes(503, &[], &body, false));
+    let reply = Reply::error(503, "connection backlog full", false);
+    let _ = stream.write_all(&encode_reply(&reply, usize::MAX));
     let _ = stream.shutdown(std::net::Shutdown::Write);
 }
 
@@ -282,25 +394,30 @@ fn handle_connection(ctx: &Ctx, mut stream: TcpStream) {
     if stream.set_read_timeout(Some(READ_TICK)).is_err() {
         return;
     }
+    let threshold = ctx.cfg.stream_threshold;
     let mut buf: Vec<u8> = Vec::with_capacity(1024);
     let mut chunk = [0u8; 8192];
-    let mut idle = Duration::ZERO;
+    // idle is measured against a real clock, not accumulated read-timeout
+    // ticks: a blocked read may return early (signal, spurious wakeup,
+    // platform timeout slop), so counting `idle += READ_TICK` per
+    // WouldBlock overcounts and can fire a premature close/408
+    let mut last_activity = Instant::now();
     // first byte of the currently-buffered partial request: a request must
     // complete within keep_alive_timeout of it, so a slow-drip client
     // (one byte per tick) cannot pin a pool worker indefinitely
-    let mut partial_since: Option<std::time::Instant> = None;
+    let mut partial_since: Option<Instant> = None;
     loop {
         // answer every complete pipelined request already buffered
         loop {
             let step = match parser::parse_request(&buf, &ctx.cfg.limits) {
                 Ok(Some((req, consumed))) => {
-                    let (resp, keep) = route(ctx, &req);
-                    Some((resp, keep, consumed))
+                    let reply = route(ctx, &req);
+                    Some((encode_reply(&reply, threshold), reply.keep, consumed))
                 }
                 Ok(None) => None,
                 Err(e) => {
-                    let body = json::obj(vec![("error", json::s(e.message()))]).to_string();
-                    let _ = stream.write_all(&response_bytes(e.status(), &[], &body, false));
+                    let reply = Reply::error(e.status(), e.message(), false);
+                    let _ = stream.write_all(&encode_reply(&reply, threshold));
                     return;
                 }
             };
@@ -310,7 +427,7 @@ fn handle_connection(ctx: &Ctx, mut stream: TcpStream) {
                         return;
                     }
                     buf.drain(..consumed);
-                    idle = Duration::ZERO;
+                    last_activity = Instant::now();
                     partial_since = None;
                     if !keep {
                         return;
@@ -324,12 +441,12 @@ fn handle_connection(ctx: &Ctx, mut stream: TcpStream) {
         } else if let Some(t0) = partial_since {
             if t0.elapsed() >= ctx.cfg.keep_alive_timeout {
                 ctx.http.read_timeouts.fetch_add(1, Ordering::Relaxed);
-                let body = json::obj(vec![("error", json::s("request incomplete"))]).to_string();
-                let _ = stream.write_all(&response_bytes(408, &[], &body, false));
+                let reply = Reply::error(408, "request incomplete", false);
+                let _ = stream.write_all(&encode_reply(&reply, threshold));
                 return;
             }
         } else {
-            partial_since = Some(std::time::Instant::now());
+            partial_since = Some(Instant::now());
         }
         if ctx.stop.load(Ordering::Acquire) {
             return;
@@ -338,7 +455,7 @@ fn handle_connection(ctx: &Ctx, mut stream: TcpStream) {
             Ok(0) => return, // peer closed
             Ok(n) => {
                 buf.extend_from_slice(&chunk[..n]);
-                idle = Duration::ZERO;
+                last_activity = Instant::now();
             }
             Err(ref e)
                 if matches!(
@@ -346,14 +463,12 @@ fn handle_connection(ctx: &Ctx, mut stream: TcpStream) {
                     std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
                 ) =>
             {
-                idle += READ_TICK;
-                if idle >= ctx.cfg.keep_alive_timeout {
+                if last_activity.elapsed() >= ctx.cfg.keep_alive_timeout {
                     if !buf.is_empty() {
                         // a partial request stalled mid-flight
                         ctx.http.read_timeouts.fetch_add(1, Ordering::Relaxed);
-                        let body =
-                            json::obj(vec![("error", json::s("request incomplete"))]).to_string();
-                        let _ = stream.write_all(&response_bytes(408, &[], &body, false));
+                        let reply = Reply::error(408, "request incomplete", false);
+                        let _ = stream.write_all(&encode_reply(&reply, threshold));
                     }
                     return;
                 }
@@ -364,36 +479,108 @@ fn handle_connection(ctx: &Ctx, mut stream: TcpStream) {
     }
 }
 
-/// Dispatch one parsed request; returns the full response bytes and
-/// whether to keep the connection open.
-fn route(ctx: &Ctx, req: &Request<'_>) -> (Vec<u8>, bool) {
-    let keep = req.keep_alive() && !ctx.stop.load(Ordering::Acquire);
-    match (req.method, req.path()) {
-        ("GET", "/healthz") => {
-            let body = json::obj(vec![("status", json::s("ok"))]).to_string();
-            (response_bytes(200, &[], &body, keep), keep)
-        }
-        ("GET", "/v1/metrics") => {
-            let body = metrics_json(&ctx.router.metrics(), &ctx.http.snapshot());
-            (response_bytes(200, &[], &body, keep), keep)
-        }
-        ("GET", "/v1/models") => {
-            let body = models_json(ctx.router.default_model(), &ctx.router.models());
-            (response_bytes(200, &[], &body, keep), keep)
-        }
-        ("POST", "/v1/classify") => classify(ctx, req, keep),
-        (_, "/healthz") | (_, "/v1/metrics") | (_, "/v1/models") => {
-            method_not_allowed("GET", keep)
-        }
-        (_, "/v1/classify") => method_not_allowed("POST", keep),
-        _ => (error_response(404, "no such endpoint", keep), keep),
+// ---- request dispatch -----------------------------------------------------
+
+/// One response, ready for [`encode_reply`]. Carries framing context
+/// (HEAD, HTTP version) alongside the payload so both backends encode
+/// identically.
+pub(crate) struct Reply {
+    pub(crate) status: u16,
+    /// `Allow` header for 405s
+    pub(crate) allow: Option<&'static str>,
+    /// JSON payload text (the would-be payload for HEAD)
+    pub(crate) body: String,
+    /// keep the connection open after this response
+    pub(crate) keep: bool,
+    /// HEAD semantics: emit GET's status and headers (`Content-Length`
+    /// of the would-be body), no body
+    pub(crate) head_only: bool,
+    /// request was HTTP/1.1 (chunked streaming allowed); defaults true,
+    /// corrected from the request's version wherever one was parsed
+    pub(crate) http11: bool,
+}
+
+impl Reply {
+    pub(crate) fn new(status: u16, body: String, keep: bool) -> Reply {
+        Reply { status, allow: None, body, keep, head_only: false, http11: true }
+    }
+
+    pub(crate) fn error(status: u16, message: &str, keep: bool) -> Reply {
+        Reply::new(status, json::obj(vec![("error", json::s(message))]).to_string(), keep)
     }
 }
 
-fn classify(ctx: &Ctx, req: &Request<'_>, keep: bool) -> (Vec<u8>, bool) {
+fn method_not_allowed(allow: &'static str, keep: bool) -> Reply {
+    let mut r = Reply::error(405, "method not allowed", keep);
+    r.allow = Some(allow);
+    r
+}
+
+/// Answer everything that never touches an engine: the GET/HEAD
+/// endpoints, 404s and 405s. Cheap, lock-light CPU work — the event loop
+/// runs this inline. Returns `None` for `POST /v1/classify`, which needs
+/// the blocking [`prepare_classify`] + [`run_classify`] pair.
+///
+/// Per RFC 9110 §9.3.2 `HEAD` is supported wherever `GET` is: it returns
+/// GET's status and headers (`Content-Length` of the would-be body) with
+/// no body — load-balancer health probes on `/healthz` see 200, not 405.
+pub(crate) fn route_fast(ctx: &Ctx, req: &Request<'_>) -> Option<Reply> {
+    let keep = req.keep_alive() && !ctx.stop.load(Ordering::Acquire);
+    let mut reply = match (req.method, req.path()) {
+        ("GET" | "HEAD", "/healthz") => {
+            Reply::new(200, json::obj(vec![("status", json::s("ok"))]).to_string(), keep)
+        }
+        ("GET" | "HEAD", "/v1/metrics") => {
+            Reply::new(200, metrics_json(&ctx.router.metrics(), &ctx.http.snapshot()), keep)
+        }
+        ("GET" | "HEAD", "/v1/models") => {
+            Reply::new(200, models_json(ctx.router.default_model(), &ctx.router.models()), keep)
+        }
+        ("POST", "/v1/classify") => return None,
+        (_, "/healthz") | (_, "/v1/metrics") | (_, "/v1/models") => {
+            method_not_allowed("GET, HEAD", keep)
+        }
+        (_, "/v1/classify") => method_not_allowed("POST", keep),
+        _ => Reply::error(404, "no such endpoint", keep),
+    };
+    // a HEAD response never carries a body, whatever the status
+    reply.head_only = req.method == "HEAD";
+    reply.http11 = req.version == Version::Http11;
+    Some(reply)
+}
+
+/// Full blocking dispatch of one parsed request (the fallback backend's
+/// path; the event loop splits the same stages across loop and workers).
+fn route(ctx: &Ctx, req: &Request<'_>) -> Reply {
+    if let Some(reply) = route_fast(ctx, req) {
+        return reply;
+    }
+    let keep = req.keep_alive() && !ctx.stop.load(Ordering::Acquire);
+    let http11 = req.version == Version::Http11;
+    match prepare_classify(ctx, req, keep) {
+        Ok(request) => run_classify(ctx, request, keep, http11),
+        Err(reply) => reply,
+    }
+}
+
+/// Decode and validate a `POST /v1/classify` payload into an owned
+/// [`ClassifyRequest`]. Pure CPU work (JSON parse + shape checks), cheap
+/// enough for the event loop to run inline; the owned result lets the
+/// blocking router calls run on a worker thread afterwards.
+pub(crate) fn prepare_classify(
+    ctx: &Ctx,
+    req: &Request<'_>,
+    keep: bool,
+) -> Result<ClassifyRequest, Reply> {
+    let http11 = req.version == Version::Http11;
+    let fail = |msg: &str| {
+        let mut r = Reply::error(400, msg, keep);
+        r.http11 = http11;
+        r
+    };
     let payload = match Json::parse_bytes(&req.body) {
         Ok(j) => j,
-        Err(e) => return (error_response(400, &format!("invalid json body: {e}"), keep), keep),
+        Err(e) => return Err(fail(&format!("invalid json body: {e}"))),
     };
     // decode the pixels straight into the f32 batch buffer (one
     // allocation, not an intermediate Vec<f64>)
@@ -403,22 +590,12 @@ fn classify(ctx: &Ctx, req: &Request<'_>, keep: bool) -> (Vec<u8>, bool) {
             for v in arr {
                 match v.as_f64() {
                     Some(x) => img.push(x as f32),
-                    None => {
-                        return (
-                            error_response(400, "\"image\" must contain only numbers", keep),
-                            keep,
-                        )
-                    }
+                    None => return Err(fail("\"image\" must contain only numbers")),
                 }
             }
             img
         }
-        None => {
-            return (
-                error_response(400, "body must carry a numeric \"image\" array", keep),
-                keep,
-            )
-        }
+        None => return Err(fail("body must carry a numeric \"image\" array")),
     };
     // id is echoed back verbatim, so a present-but-invalid id is a 400,
     // never silently replaced; an absent id is auto-assigned
@@ -426,12 +603,7 @@ fn classify(ctx: &Ctx, req: &Request<'_>, keep: bool) -> (Vec<u8>, bool) {
         None => ctx.next_id.fetch_add(1, Ordering::Relaxed),
         Some(v) => match v.as_i64().and_then(|i| u64::try_from(i).ok()) {
             Some(i) => i,
-            None => {
-                return (
-                    error_response(400, "\"id\" must be a non-negative integer", keep),
-                    keep,
-                )
-            }
+            None => return Err(fail("\"id\" must be a non-negative integer")),
         },
     };
     // route target: a present-but-non-string model is a 400 (a typo must
@@ -440,7 +612,7 @@ fn classify(ctx: &Ctx, req: &Request<'_>, keep: bool) -> (Vec<u8>, bool) {
         None => None,
         Some(v) => match v.as_str() {
             Some(s) => Some(s.to_string()),
-            None => return (error_response(400, "\"model\" must be a string", keep), keep),
+            None => return Err(fail("\"model\" must be a string")),
         },
     };
     // clamp to [0, 1 day] and reject non-finite values so a hostile
@@ -458,10 +630,7 @@ fn classify(ctx: &Ctx, req: &Request<'_>, keep: bool) -> (Vec<u8>, bool) {
     // BadRequest → 400
     let acc_field = match (payload.get("acc_bits"), payload.get("operating_point")) {
         (Some(_), Some(_)) => {
-            return (
-                error_response(400, "use \"acc_bits\" or \"operating_point\", not both", keep),
-                keep,
-            )
+            return Err(fail("use \"acc_bits\" or \"operating_point\", not both"))
         }
         (v, None) | (None, v) => v,
     };
@@ -469,33 +638,43 @@ fn classify(ctx: &Ctx, req: &Request<'_>, keep: bool) -> (Vec<u8>, bool) {
         None => None,
         Some(v) => match v.as_i64().and_then(|i| u32::try_from(i).ok()).filter(|&b| b > 0) {
             Some(b) => Some(b),
-            None => {
-                return (
-                    error_response(400, "\"acc_bits\" must be a positive integer", keep),
-                    keep,
-                )
-            }
+            None => return Err(fail("\"acc_bits\" must be a positive integer")),
         },
     };
+    Ok(ClassifyRequest { id, model, image, deadline, acc_bits })
+}
 
-    let request = ClassifyRequest { id, model, image, deadline, acc_bits };
+/// Submit one validated request into the router and wait (blocking) for
+/// its response. Runs on a connection-pool thread under the blocking
+/// backend and on a classify worker under the event loop — never on the
+/// event loop thread itself (`Router::try_submit` may lazily load a
+/// model and `wait_timeout` parks for up to `response_timeout`).
+pub(crate) fn run_classify(
+    ctx: &Ctx,
+    request: ClassifyRequest,
+    keep: bool,
+    http11: bool,
+) -> Reply {
+    let mut reply = run_classify_inner(ctx, request, keep);
+    reply.http11 = http11;
+    reply
+}
+
+fn run_classify_inner(ctx: &Ctx, request: ClassifyRequest, keep: bool) -> Reply {
     let pending = match ctx.router.try_submit(request) {
         Ok(p) => p,
-        Err(RouteError::UnknownModel(msg)) => return (error_response(404, &msg, keep), keep),
-        Err(RouteError::LoadFailed(msg)) => return (error_response(500, &msg, keep), keep),
+        Err(RouteError::UnknownModel(msg)) => return Reply::error(404, &msg, keep),
+        Err(RouteError::LoadFailed(msg)) => return Reply::error(500, &msg, keep),
         Err(RouteError::Rejected(e)) => {
             // a closing server also closes the connection; a full queue is
             // transient, so the connection stays usable for a retry
             let keep = keep && !matches!(e, SubmitError::Closed(_));
-            let msg = RouteError::Rejected(e).to_string();
-            return (error_response(503, &msg, keep), keep);
+            return Reply::error(503, &RouteError::Rejected(e).to_string(), keep);
         }
     };
     let resp = match pending.wait_timeout(ctx.cfg.response_timeout) {
         Some(r) => r,
-        None => {
-            return (error_response(504, "timed out waiting for the engine", keep), keep)
-        }
+        None => return Reply::error(504, "timed out waiting for the engine", keep),
     };
     match resp.result {
         Ok(class) => {
@@ -508,7 +687,7 @@ fn classify(ctx: &Ctx, req: &Request<'_>, keep: bool) -> (Vec<u8>, bool) {
                 ("batch_size", json::num(resp.batch_size as f64)),
             ])
             .to_string();
-            (response_bytes(200, &[], &body, keep), keep)
+            Reply::new(200, body, keep)
         }
         Err(ServeError::Expired { waited_us }) => {
             let body = json::obj(vec![
@@ -517,22 +696,14 @@ fn classify(ctx: &Ctx, req: &Request<'_>, keep: bool) -> (Vec<u8>, bool) {
                 ("waited_us", json::num(waited_us as f64)),
             ])
             .to_string();
-            (response_bytes(504, &[], &body, keep), keep)
+            Reply::new(504, body, keep)
         }
-        Err(ServeError::BadRequest(m)) => (error_response(400, &m, keep), keep),
-        Err(ServeError::Internal(m)) => (error_response(500, &m, keep), keep),
+        Err(ServeError::BadRequest(m)) => Reply::error(400, &m, keep),
+        Err(ServeError::Internal(m)) => Reply::error(500, &m, keep),
     }
 }
 
-fn method_not_allowed(allow: &str, keep: bool) -> (Vec<u8>, bool) {
-    let body = json::obj(vec![("error", json::s("method not allowed"))]).to_string();
-    (response_bytes(405, &[("Allow", allow)], &body, keep), keep)
-}
-
-fn error_response(status: u16, message: &str, keep: bool) -> Vec<u8> {
-    let body = json::obj(vec![("error", json::s(message))]).to_string();
-    response_bytes(status, &[], &body, keep)
-}
+// ---- response framing -----------------------------------------------------
 
 fn status_reason(code: u16) -> &'static str {
     match code {
@@ -549,27 +720,46 @@ fn status_reason(code: u16) -> &'static str {
     }
 }
 
-/// Serialize one response. `body` must already be JSON text.
-fn response_bytes(status: u16, extra: &[(&str, &str)], body: &str, keep: bool) -> Vec<u8> {
-    let mut out = String::with_capacity(body.len() + 128);
-    out.push_str("HTTP/1.1 ");
-    out.push_str(&status.to_string());
-    out.push(' ');
-    out.push_str(status_reason(status));
-    out.push_str("\r\nContent-Type: application/json\r\nContent-Length: ");
-    out.push_str(&body.len().to_string());
-    out.push_str("\r\nConnection: ");
-    out.push_str(if keep { "keep-alive" } else { "close" });
-    out.push_str("\r\n");
-    for (k, v) in extra {
-        out.push_str(k);
-        out.push_str(": ");
-        out.push_str(v);
-        out.push_str("\r\n");
+/// Serialize one response. Bodies past `stream_threshold` stream as
+/// `Transfer-Encoding: chunked` when the request was HTTP/1.1 (a 1.0
+/// client cannot parse chunked framing, so it always gets
+/// `Content-Length`); the decoded payload is byte-identical either way.
+/// HEAD responses carry GET's headers — `Content-Length` of the would-be
+/// body — and no body at all.
+pub(crate) fn encode_reply(r: &Reply, stream_threshold: usize) -> Vec<u8> {
+    let body = r.body.as_bytes();
+    let chunked = r.http11 && !r.head_only && body.len() > stream_threshold;
+    let mut out = Vec::with_capacity(body.len() + 160);
+    out.extend_from_slice(b"HTTP/1.1 ");
+    out.extend_from_slice(r.status.to_string().as_bytes());
+    out.push(b' ');
+    out.extend_from_slice(status_reason(r.status).as_bytes());
+    out.extend_from_slice(b"\r\nContent-Type: application/json\r\n");
+    if chunked {
+        out.extend_from_slice(b"Transfer-Encoding: chunked\r\n");
+    } else {
+        out.extend_from_slice(b"Content-Length: ");
+        out.extend_from_slice(body.len().to_string().as_bytes());
+        out.extend_from_slice(b"\r\n");
     }
-    out.push_str("\r\n");
-    out.push_str(body);
-    out.into_bytes()
+    out.extend_from_slice(b"Connection: ");
+    out.extend_from_slice(if r.keep { b"keep-alive" as &[u8] } else { b"close" });
+    out.extend_from_slice(b"\r\n");
+    if let Some(allow) = r.allow {
+        out.extend_from_slice(b"Allow: ");
+        out.extend_from_slice(allow.as_bytes());
+        out.extend_from_slice(b"\r\n");
+    }
+    out.extend_from_slice(b"\r\n");
+    if r.head_only {
+        return out;
+    }
+    if chunked {
+        parser::encode_chunked(body, RESPONSE_CHUNK, &mut out);
+    } else {
+        out.extend_from_slice(body);
+    }
+    out
 }
 
 // ---- JSON serialization of the metrics surfaces ---------------------------
@@ -581,6 +771,7 @@ fn summary_json(r: &LatencySummary) -> Json {
         ("p50_us", json::num(r.p50_us)),
         ("p95_us", json::num(r.p95_us)),
         ("p99_us", json::num(r.p99_us)),
+        ("p999_us", json::num(r.p999_us)),
         ("max_us", json::num(r.max_us)),
     ])
 }
@@ -714,4 +905,80 @@ fn models_json(default: &str, models: &[ModelStatus]) -> String {
         })
         .collect();
     json::obj(vec![("default", json::s(default)), ("models", Json::Arr(rows))]).to_string()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn head_of(bytes: &[u8]) -> String {
+        let pos = bytes.windows(4).position(|w| w == b"\r\n\r\n").expect("head terminator");
+        String::from_utf8_lossy(&bytes[..pos + 4]).into_owned()
+    }
+
+    fn body_of(bytes: &[u8]) -> &[u8] {
+        let pos = bytes.windows(4).position(|w| w == b"\r\n\r\n").expect("head terminator");
+        &bytes[pos + 4..]
+    }
+
+    #[test]
+    fn small_bodies_use_content_length() {
+        let r = Reply::new(200, "{\"ok\":1}".into(), true);
+        let bytes = encode_reply(&r, 1024);
+        let head = head_of(&bytes);
+        assert!(head.starts_with("HTTP/1.1 200 OK\r\n"), "{head}");
+        assert!(head.contains("Content-Length: 8\r\n"), "{head}");
+        assert!(!head.contains("Transfer-Encoding"), "{head}");
+        assert!(head.contains("Connection: keep-alive\r\n"), "{head}");
+        assert_eq!(body_of(&bytes), b"{\"ok\":1}");
+    }
+
+    #[test]
+    fn large_bodies_stream_chunked_and_decode_byte_identically() {
+        let payload: String = "x".repeat(RESPONSE_CHUNK * 2 + 100);
+        let r = Reply::new(200, payload.clone(), true);
+        let bytes = encode_reply(&r, 64);
+        let head = head_of(&bytes);
+        assert!(head.contains("Transfer-Encoding: chunked\r\n"), "{head}");
+        assert!(!head.contains("Content-Length"), "{head}");
+        // decode the chunked framing back through the request parser
+        let mut fake = b"POST /x HTTP/1.1\r\nTransfer-Encoding: chunked\r\n\r\n".to_vec();
+        fake.extend_from_slice(body_of(&bytes));
+        let (req, consumed) =
+            parser::parse_request(&fake, &Limits::default()).expect("valid").expect("complete");
+        assert_eq!(consumed, fake.len());
+        assert_eq!(&req.body[..], payload.as_bytes());
+    }
+
+    #[test]
+    fn http10_never_gets_chunked_framing() {
+        let payload: String = "y".repeat(4096);
+        let mut r = Reply::new(200, payload.clone(), false);
+        r.http11 = false;
+        let bytes = encode_reply(&r, 64);
+        let head = head_of(&bytes);
+        assert!(head.contains(&format!("Content-Length: {}\r\n", payload.len())), "{head}");
+        assert!(!head.contains("Transfer-Encoding"), "{head}");
+        assert_eq!(body_of(&bytes), payload.as_bytes());
+    }
+
+    #[test]
+    fn head_only_reports_length_without_body_even_past_threshold() {
+        let payload: String = "z".repeat(4096);
+        let mut r = Reply::new(200, payload.clone(), true);
+        r.head_only = true;
+        let bytes = encode_reply(&r, 64);
+        let head = head_of(&bytes);
+        assert!(head.contains(&format!("Content-Length: {}\r\n", payload.len())), "{head}");
+        assert!(!head.contains("Transfer-Encoding"), "{head}");
+        assert!(body_of(&bytes).is_empty(), "HEAD response must not carry a body");
+    }
+
+    #[test]
+    fn allow_header_emitted_for_405() {
+        let mut r = Reply::error(405, "method not allowed", true);
+        r.allow = Some("GET, HEAD");
+        let bytes = encode_reply(&r, 1024);
+        assert!(head_of(&bytes).contains("Allow: GET, HEAD\r\n"));
+    }
 }

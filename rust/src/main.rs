@@ -30,6 +30,7 @@
 //!        [--max-loaded M] [--max-bytes B] [--preload NAME]...
 //!        [--threads N] [--engine-threads T]
 //!        [--max-batch B] [--queue-cap Q] [--deadline-ms MS] [--for-secs S]
+//!        [--event-loop on|off] [--max-connections N]
 //!        multi-model HTTP/1.1 front-end over the serving router
 //!        (POST /v1/classify with optional "model" and "acc_bits" fields,
 //!        GET /v1/models, GET /v1/metrics, GET /healthz — see the
@@ -51,7 +52,11 @@
 //!        compute pool shared by every loaded model's engines (default:
 //!        hw threads, with workers defaulting to 2 so pool and workers
 //!        never oversubscribe; `--engine-threads 1` restores the
-//!        worker-parallel topology with hw workers)
+//!        worker-parallel topology with hw workers). `--event-loop`
+//!        selects the connection backend (`on` = readiness-driven epoll
+//!        loop, Linux default; `off` = blocking worker pool) and
+//!        `--max-connections` caps concurrently open sockets under the
+//!        event loop (accepts past it shed with 503)
 //!   bench [--json PATH] [--quick] [--threads "1,2,8"]
 //!        machine-readable perf report (dot kernels, pool dispatch,
 //!        batch-1 forward scaling with bit-identity checks, HTTP serve
@@ -444,8 +449,37 @@ fn run() -> Result<()> {
                 registry.default_name().unwrap_or("?"),
             );
             let router = Router::new(registry, rcfg)?;
-            let http = HttpServer::start(router, &addr, HttpConfig::default())?;
-            println!("listening on http://{}", http.local_addr());
+            let mut hcfg = HttpConfig::default();
+            if let Some(v) = args.get("event-loop") {
+                hcfg.event_loop = match v {
+                    "on" | "true" | "1" => true,
+                    "off" | "false" | "0" => false,
+                    other => bail!("bad --event-loop {other:?} (use on|off)"),
+                };
+            }
+            hcfg.max_connections = args.get_usize("max-connections", hcfg.max_connections);
+            if hcfg.event_loop && cfg!(target_os = "linux") {
+                // one loop thread multiplexes every socket; lift the fd
+                // soft limit toward the connection cap so mostly idle
+                // keep-alive fleets aren't capped by the default 1024
+                let limit = pqs::http::server::raise_nofile_limit(
+                    hcfg.max_connections as u64 + 512,
+                );
+                if (limit as usize) < hcfg.max_connections + 64 {
+                    eprintln!(
+                        "warning: fd limit {limit} is below --max-connections {} + headroom; \
+                         accepts may fail early",
+                        hcfg.max_connections
+                    );
+                }
+            }
+            let http = HttpServer::start(router, &addr, hcfg)?;
+            let backend = if hcfg.event_loop && cfg!(target_os = "linux") {
+                "epoll event loop"
+            } else {
+                "blocking worker pool"
+            };
+            println!("listening on http://{} ({backend})", http.local_addr());
             println!(
                 "  POST /v1/classify  {{\"image\":[...], \"model\":NAME?, \"id\":N?, \
                  \"deadline_ms\":MS?, \"acc_bits\":P?}}"

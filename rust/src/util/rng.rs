@@ -55,12 +55,33 @@ impl Pcg32 {
         }
     }
 
-    /// Uniform integer in [lo, hi] inclusive.
+    /// Uniform in [0, n) without modulo bias (Lemire, 64-bit widening).
+    #[inline]
+    pub fn below_u64(&mut self, n: u64) -> u64 {
+        debug_assert!(n > 0);
+        loop {
+            let x = self.next_u64();
+            let m = (x as u128) * (n as u128);
+            let l = m as u64;
+            if l >= n || l >= (n.wrapping_neg() % n) {
+                return (m >> 64) as u64;
+            }
+        }
+    }
+
+    /// Uniform integer in [lo, hi] inclusive, via the same rejection
+    /// sampling as [`Self::below`] (no modulo bias).
     #[inline]
     pub fn range_i64(&mut self, lo: i64, hi: i64) -> i64 {
         debug_assert!(lo <= hi);
-        let span = (hi - lo) as u64 + 1;
-        lo + (self.next_u64() % span) as i64
+        // Span as an unsigned count; `hi - lo` is computed wrapping so the
+        // full-domain case (i64::MIN..=i64::MAX) doesn't overflow i64.
+        let span = hi.wrapping_sub(lo) as u64;
+        if span == u64::MAX {
+            // 2^64 values: every u64 is already uniform over the domain.
+            return self.next_u64() as i64;
+        }
+        lo.wrapping_add(self.below_u64(span + 1) as i64)
     }
 
     /// Uniform f64 in [0, 1).
@@ -126,6 +147,50 @@ mod tests {
         for _ in 0..1000 {
             let v = r.range_i64(-5, 5);
             assert!((-5..=5).contains(&v));
+        }
+    }
+
+    #[test]
+    fn below_u64_in_range() {
+        let mut r = Pcg32::new(13);
+        for _ in 0..1000 {
+            assert!(r.below_u64(10) < 10);
+        }
+        // Spans past u32 exercise the 128-bit widening path.
+        for _ in 0..1000 {
+            assert!(r.below_u64(1 << 40) < (1 << 40));
+        }
+    }
+
+    #[test]
+    fn range_i64_covers_small_domain_uniformly() {
+        // With rejection sampling every value of a tiny domain shows up,
+        // and no value hogs the distribution (the old `% span` path biased
+        // low residues for spans near a power-of-two boundary).
+        let mut r = Pcg32::new(17);
+        let mut counts = [0usize; 3];
+        for _ in 0..3000 {
+            counts[(r.range_i64(-1, 1) + 1) as usize] += 1;
+        }
+        for (i, c) in counts.iter().enumerate() {
+            assert!((800..=1200).contains(c), "bucket {i}: {c}");
+        }
+    }
+
+    #[test]
+    fn range_i64_extreme_domains() {
+        let mut r = Pcg32::new(19);
+        // Full domain: every draw is valid; exercise the span == 2^64 path.
+        for _ in 0..10 {
+            let _ = r.range_i64(i64::MIN, i64::MAX);
+        }
+        // Degenerate single-value span.
+        assert_eq!(r.range_i64(7, 7), 7);
+        assert_eq!(r.range_i64(i64::MIN, i64::MIN), i64::MIN);
+        // Spans wider than i64::MAX values (would overflow `hi - lo`).
+        for _ in 0..100 {
+            let v = r.range_i64(i64::MIN, 0);
+            assert!(v <= 0);
         }
     }
 

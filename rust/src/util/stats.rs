@@ -29,6 +29,116 @@ pub fn percentile(xs: &[f64], q: f64) -> f64 {
     v[rank.min(v.len() - 1)]
 }
 
+/// HDR-style latency histogram: log2 major buckets, each split into
+/// `SUB_BUCKETS` linear sub-buckets, so relative error is bounded at
+/// ~1/SUB_BUCKETS (±3%) across the whole range — record is O(1) with no
+/// allocation, unlike [`percentile`]'s sort-a-copy, and quantiles over
+/// millions of samples cost a single fixed-size scan. Values are
+/// unit-agnostic integers (the bench records microseconds).
+#[derive(Clone, Debug)]
+pub struct HdrHistogram {
+    counts: Vec<u64>,
+    total: u64,
+    max: u64,
+}
+
+/// Significant bits kept per value: the first 2^K values are exact, and
+/// every later power-of-two octave splits into 2^(K-1) linear
+/// sub-buckets, bounding relative error at 2^(1-K) ≈ 3%.
+const HDR_SUB_BITS: u32 = 6;
+const HDR_FIRST: usize = 1 << HDR_SUB_BITS; // exact range [0, 64)
+const HDR_HALF: usize = HDR_FIRST / 2; // sub-buckets per later octave
+const HDR_BUCKETS: usize = HDR_FIRST + (64 - HDR_SUB_BITS as usize) * HDR_HALF;
+
+impl Default for HdrHistogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl HdrHistogram {
+    pub fn new() -> HdrHistogram {
+        HdrHistogram { counts: vec![0u64; HDR_BUCKETS], total: 0, max: 0 }
+    }
+
+    fn index_of(value: u64) -> usize {
+        let msb = 63 - (value | 1).leading_zeros();
+        // how many low bits to drop so the value fits in SUB_BITS bits
+        let shift = (msb + 1).saturating_sub(HDR_SUB_BITS);
+        if shift == 0 {
+            value as usize // exact linear range
+        } else {
+            let top = (value >> shift) as usize; // in [HALF, FIRST)
+            HDR_FIRST + (shift as usize - 1) * HDR_HALF + (top - HDR_HALF)
+        }
+    }
+
+    /// Lowest value that maps into bucket `i` (the bucket's reported
+    /// representative — quantiles are therefore conservative, never
+    /// overstated).
+    fn value_of(i: usize) -> u64 {
+        if i < HDR_FIRST {
+            return i as u64;
+        }
+        let j = i - HDR_FIRST;
+        let shift = (j / HDR_HALF) as u32 + 1;
+        let top = (j % HDR_HALF + HDR_HALF) as u64;
+        top << shift
+    }
+
+    pub fn record(&mut self, value: u64) {
+        self.counts[Self::index_of(value)] += 1;
+        self.total += 1;
+        self.max = self.max.max(value);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.total
+    }
+
+    pub fn max(&self) -> u64 {
+        self.max
+    }
+
+    /// Value at quantile `q` in [0,1] (0 for an empty histogram). The
+    /// exact recorded max is returned for the top of the distribution.
+    pub fn value_at(&self, q: f64) -> u64 {
+        if self.total == 0 {
+            return 0;
+        }
+        let target = ((q.clamp(0.0, 1.0) * self.total as f64).ceil() as u64).max(1);
+        let mut seen = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen >= target {
+                return Self::value_of(i).min(self.max);
+            }
+        }
+        self.max
+    }
+
+    /// Merge another histogram into this one (bucket-exact, not an
+    /// approximation — both sides share the same fixed layout).
+    pub fn merge(&mut self, other: &HdrHistogram) {
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += b;
+        }
+        self.total += other.total;
+        self.max = self.max.max(other.max);
+    }
+
+    /// Non-empty buckets as `(lower_bound, count)` rows, for compact
+    /// JSON export.
+    pub fn buckets(&self) -> Vec<(u64, u64)> {
+        self.counts
+            .iter()
+            .enumerate()
+            .filter(|&(_, &c)| c > 0)
+            .map(|(i, &c)| (Self::value_of(i), c))
+            .collect()
+    }
+}
+
 /// Human-readable duration from nanoseconds.
 pub fn fmt_ns(ns: f64) -> String {
     if ns < 1e3 {
@@ -87,5 +197,62 @@ mod tests {
         assert_eq!(mean(&[]), 0.0);
         assert_eq!(stddev(&[1.0]), 0.0);
         assert_eq!(percentile(&[], 50.0), 0.0);
+    }
+
+    #[test]
+    fn hdr_buckets_are_a_partition() {
+        // index_of and value_of invert each other: value_of(i) is the
+        // smallest value in bucket i, and consecutive buckets tile the
+        // domain without gaps or overlaps
+        for i in 0..HDR_BUCKETS {
+            let lo = HdrHistogram::value_of(i);
+            assert_eq!(HdrHistogram::index_of(lo), i, "lower bound of bucket {i}");
+            if i + 1 < HDR_BUCKETS {
+                let next = HdrHistogram::value_of(i + 1);
+                assert!(next > lo, "bucket {i} not monotone");
+                assert_eq!(HdrHistogram::index_of(next - 1), i, "upper bound of bucket {i}");
+            }
+        }
+        assert_eq!(HdrHistogram::index_of(u64::MAX), HDR_BUCKETS - 1);
+    }
+
+    #[test]
+    fn hdr_quantiles_bound_relative_error() {
+        let mut h = HdrHistogram::new();
+        for v in 1..=100_000u64 {
+            h.record(v);
+        }
+        assert_eq!(h.count(), 100_000);
+        assert_eq!(h.max(), 100_000);
+        for (q, exact) in [(0.5, 50_000.0), (0.99, 99_000.0), (0.999, 99_900.0)] {
+            let got = h.value_at(q) as f64;
+            let rel = (got - exact).abs() / exact;
+            assert!(rel < 0.04, "q={q}: got {got}, exact {exact}, rel err {rel}");
+            assert!(got <= exact, "bucket lower bounds never overstate a quantile");
+        }
+        assert_eq!(h.value_at(1.0), 100_000, "top quantile reports the exact max");
+        assert_eq!(HdrHistogram::new().value_at(0.5), 0, "empty histogram");
+    }
+
+    #[test]
+    fn hdr_merge_equals_recording_into_one() {
+        let mut a = HdrHistogram::new();
+        let mut b = HdrHistogram::new();
+        let mut both = HdrHistogram::new();
+        for v in [3u64, 70, 900, 12_345, 1 << 40] {
+            a.record(v);
+            both.record(v);
+        }
+        for v in [5u64, 64, 100_000] {
+            b.record(v);
+            both.record(v);
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), both.count());
+        assert_eq!(a.max(), both.max());
+        assert_eq!(a.buckets(), both.buckets());
+        for q in [0.0, 0.25, 0.5, 0.9, 0.99, 1.0] {
+            assert_eq!(a.value_at(q), both.value_at(q), "q={q}");
+        }
     }
 }

@@ -12,6 +12,12 @@
 //! `"acc_bits"` operating-point overrides (valid, under-bound, plan-free,
 //! malformed), the fleet-memory counters on the wire, and the front-end's
 //! own `http` counters.
+//!
+//! On Linux the suite runs against the epoll event loop (the default
+//! backend); backend-sensitive cases — HEAD-mirrors-GET, chunked response
+//! framing, mid-pipeline `Connection: close` ordering — additionally run
+//! against the blocking fallback (`event_loop: false`), and a 10k idle
+//! keep-alive soak pins the event loop's no-shedding guarantee.
 
 mod common;
 
@@ -56,9 +62,13 @@ fn hcfg() -> HttpConfig {
 }
 
 fn start_http() -> HttpServer {
+    start_http_with(hcfg())
+}
+
+fn start_http_with(cfg: HttpConfig) -> HttpServer {
     let model = common::tiny_linear_model(DIM, CLASSES);
     let router = Router::single("tiny", &model, EngineConfig::default(), scfg());
-    HttpServer::start(router, "127.0.0.1:0", hcfg()).expect("bind loopback")
+    HttpServer::start(router, "127.0.0.1:0", cfg).expect("bind loopback")
 }
 
 fn aux_model() -> pqs::formats::pqsw::PqswModel {
@@ -68,6 +78,10 @@ fn aux_model() -> pqs::formats::pqsw::PqswModel {
 /// Two registered models: "tiny" (default, in-memory) and "aux" (a
 /// synthetic-source CNN, lazily loaded on first request).
 fn start_http_multi() -> HttpServer {
+    start_http_multi_with(hcfg())
+}
+
+fn start_http_multi_with(cfg: HttpConfig) -> HttpServer {
     let model = common::tiny_linear_model(DIM, CLASSES);
     let mut registry = ModelRegistry::new();
     registry.register("tiny", ModelSource::Memory(model));
@@ -83,7 +97,7 @@ fn start_http_multi() -> HttpServer {
         preload: Vec::new(),
     };
     let router = Router::new(registry, rcfg).expect("registry is non-empty");
-    HttpServer::start(router, "127.0.0.1:0", hcfg()).expect("bind loopback")
+    HttpServer::start(router, "127.0.0.1:0", cfg).expect("bind loopback")
 }
 
 // ---- tiny raw-TCP client --------------------------------------------------
@@ -121,11 +135,24 @@ impl Client {
     }
 
     fn read_response(&mut self) -> Resp {
-        self.try_read_response().expect("a response before timeout/eof")
+        self.try_read(false).expect("a response before timeout/eof")
+    }
+
+    /// Read a response to a `HEAD` request: the head is parsed and
+    /// consumed, and NO body bytes are read regardless of what
+    /// `Content-Length` advertises. If the server wrongly sent a body,
+    /// its bytes stay buffered and poison the next parse — which the
+    /// tests exploit by always following a HEAD with another request.
+    fn read_head_response(&mut self) -> Resp {
+        self.try_read(true).expect("a response before timeout/eof")
     }
 
     /// `None` on clean EOF before any response bytes (server closed).
     fn try_read_response(&mut self) -> Option<Resp> {
+        self.try_read(false)
+    }
+
+    fn try_read(&mut self, head_only: bool) -> Option<Resp> {
         let mut tmp = [0u8; 4096];
         loop {
             if let Some(pos) = self.buf.windows(4).position(|w| w == b"\r\n\r\n") {
@@ -141,6 +168,24 @@ impl Client {
                 for line in head.lines().skip(1) {
                     if let Some((k, v)) = line.split_once(':') {
                         headers.push((k.trim().to_ascii_lowercase(), v.trim().to_string()));
+                    }
+                }
+                if head_only {
+                    self.buf.drain(..head_end);
+                    return Some(Resp { status, headers, body: String::new() });
+                }
+                if headers.iter().any(|(k, v)| k == "transfer-encoding" && v == "chunked") {
+                    loop {
+                        if let Some((decoded, used)) = decode_chunked(&self.buf[head_end..]) {
+                            let body = String::from_utf8(decoded).expect("utf8 chunked body");
+                            self.buf.drain(..head_end + used);
+                            return Some(Resp { status, headers, body });
+                        }
+                        match self.stream.read(&mut tmp) {
+                            Ok(0) => panic!("eof mid-chunked-body"),
+                            Ok(n) => self.buf.extend_from_slice(&tmp[..n]),
+                            Err(e) => panic!("read mid-chunked-body: {e}"),
+                        }
                     }
                 }
                 let body_len: usize = headers
@@ -174,6 +219,36 @@ impl Client {
 
     fn assert_server_closed(&mut self) {
         assert!(self.try_read_response().is_none(), "expected the server to close");
+    }
+}
+
+/// Decode a `Transfer-Encoding: chunked` body from the front of `buf`:
+/// `Some((decoded_bytes, bytes_consumed))` once the terminal chunk and
+/// its blank trailer section are complete, `None` while incomplete.
+/// Panics on malformed framing — the server under test wrote it.
+fn decode_chunked(buf: &[u8]) -> Option<(Vec<u8>, usize)> {
+    let mut out = Vec::new();
+    let mut pos = 0usize;
+    loop {
+        let line_end = pos + buf[pos..].windows(2).position(|w| w == b"\r\n")?;
+        let size_line = std::str::from_utf8(&buf[pos..line_end]).expect("utf8 chunk size");
+        let size = usize::from_str_radix(size_line.trim(), 16)
+            .unwrap_or_else(|_| panic!("hex chunk size, got {size_line:?}"));
+        pos = line_end + 2;
+        if size == 0 {
+            // the server sends no trailers: the blank line follows directly
+            if buf.len() < pos + 2 {
+                return None;
+            }
+            assert_eq!(&buf[pos..pos + 2], b"\r\n", "trailer-free terminal chunk");
+            return Some((out, pos + 2));
+        }
+        if buf.len() < pos + size + 2 {
+            return None;
+        }
+        out.extend_from_slice(&buf[pos..pos + size]);
+        assert_eq!(&buf[pos + size..pos + size + 2], b"\r\n", "chunk data terminator");
+        pos += size + 2;
     }
 }
 
@@ -215,6 +290,15 @@ fn post_classify_chunked(body: &str, split: usize) -> Vec<u8> {
     chunks.push_str("0\r\nX-Checksum: none\r\n\r\n");
     format!("POST /v1/classify HTTP/1.1\r\nHost: t\r\nTransfer-Encoding: chunked\r\n\r\n{chunks}")
         .into_bytes()
+}
+
+/// The same classify POST asking the server to close after answering.
+fn post_classify_close(body: &str) -> Vec<u8> {
+    format!(
+        "POST /v1/classify HTTP/1.1\r\nHost: t\r\nConnection: close\r\nContent-Type: application/json\r\nContent-Length: {}\r\n\r\n{body}",
+        body.len()
+    )
+    .into_bytes()
 }
 
 fn expected_class(seed: u64) -> usize {
@@ -845,6 +929,212 @@ fn stalled_partial_request_answers_408_and_counts_read_timeout() {
     let report = http.shutdown();
     assert_eq!(report.http.read_timeouts, 1);
     assert_eq!(report.http.accepted, 1);
+}
+
+/// RFC 9110 §9.3.2 conformance, shared by both backends: every GET
+/// endpoint answers HEAD with GET's exact status, Content-Length, and
+/// Content-Type — and no body. A leaked HEAD body would sit buffered in
+/// the client and corrupt the next parse, which the trailing requests
+/// deliberately exercise.
+fn assert_head_mirrors_get(http: &HttpServer) {
+    let mut c = Client::connect(http);
+    for path in ["/healthz", "/v1/models", "/v1/metrics", "/nope"] {
+        c.send(format!("GET {path} HTTP/1.1\r\nHost: t\r\n\r\n").as_bytes());
+        let get = c.read_response();
+        c.send(format!("HEAD {path} HTTP/1.1\r\nHost: t\r\n\r\n").as_bytes());
+        let head = c.read_head_response();
+        assert_eq!(head.status, get.status, "{path}: HEAD mirrors GET's status");
+        assert_eq!(
+            head.header("content-length"),
+            Some(get.body.len().to_string().as_str()),
+            "{path}: HEAD advertises the GET body's exact length"
+        );
+        assert_eq!(head.header("content-type"), get.header("content-type"), "{path}");
+    }
+    // wrong-method 405s name the allowed methods; HEAD's no-body rule
+    // holds even for error statuses
+    c.send(b"PUT /healthz HTTP/1.1\r\nHost: t\r\n\r\n");
+    let r = c.read_response();
+    assert_eq!(r.status, 405);
+    assert_eq!(r.header("allow"), Some("GET, HEAD"));
+    c.send(b"HEAD /v1/classify HTTP/1.1\r\nHost: t\r\n\r\n");
+    let r = c.read_head_response();
+    assert_eq!(r.status, 405);
+    assert_eq!(r.header("allow"), Some("POST"));
+    // the canary: any stray HEAD body bytes would break this parse
+    c.send(b"GET /healthz HTTP/1.1\r\nHost: t\r\n\r\n");
+    let r = c.read_response();
+    assert_eq!(r.status, 200);
+    assert_eq!(r.json().get("status").and_then(Json::as_str), Some("ok"));
+}
+
+#[test]
+fn head_mirrors_get_on_every_endpoint() {
+    let http = start_http_multi();
+    assert_head_mirrors_get(&http);
+    http.shutdown();
+}
+
+#[test]
+fn chunked_response_decodes_byte_identical_to_buffered() {
+    // the same /v1/models payload served by a default-threshold server
+    // (buffered) and a threshold-1 server (chunked) must decode to
+    // identical bytes, with the framing each config promises
+    let buffered_srv = start_http_multi();
+    let mut bc = Client::connect(&buffered_srv);
+    bc.send(b"GET /v1/models HTTP/1.1\r\nHost: t\r\n\r\n");
+    let buffered = bc.read_response();
+    assert_eq!(buffered.status, 200);
+    assert!(buffered.header("content-length").is_some(), "under threshold: Content-Length");
+    assert!(buffered.header("transfer-encoding").is_none());
+
+    let chunked_srv = start_http_multi_with(HttpConfig { stream_threshold: 1, ..hcfg() });
+    let mut cc = Client::connect(&chunked_srv);
+    cc.send(b"GET /v1/models HTTP/1.1\r\nHost: t\r\n\r\n");
+    let chunked = cc.read_response();
+    assert_eq!(chunked.status, 200);
+    assert_eq!(chunked.header("transfer-encoding"), Some("chunked"));
+    assert!(chunked.header("content-length").is_none(), "chunked responses carry no length");
+    assert_eq!(chunked.body, buffered.body, "decoded chunked payload is byte-identical");
+
+    // HEAD never streams: it advertises the exact buffered length instead
+    cc.send(b"HEAD /v1/models HTTP/1.1\r\nHost: t\r\n\r\n");
+    let head = cc.read_head_response();
+    assert_eq!(head.status, 200);
+    assert_eq!(
+        head.header("content-length"),
+        Some(buffered.body.len().to_string().as_str())
+    );
+    assert!(head.header("transfer-encoding").is_none());
+
+    // HTTP/1.0 clients never get chunked framing either
+    cc.send(b"GET /v1/models HTTP/1.0\r\nHost: t\r\nConnection: keep-alive\r\n\r\n");
+    let old = cc.read_response();
+    assert_eq!(old.status, 200);
+    assert!(old.header("transfer-encoding").is_none());
+    assert_eq!(old.body, buffered.body);
+
+    // keep-alive survives streamed responses: classify still answers (and
+    // its own body, over the 1-byte threshold, streams and decodes too)
+    cc.send(&post_classify(&classify_body(DIM, 3, 9, None)));
+    let r = cc.read_response();
+    assert_eq!(r.status, 200, "after chunked responses: {}", r.body);
+    assert_eq!(r.json().get("class").and_then(Json::as_usize), Some(expected_class(3)));
+    chunked_srv.shutdown();
+    buffered_srv.shutdown();
+}
+
+#[test]
+fn blocking_fallback_matches_event_loop_semantics() {
+    // the fallback backend honours the same HEAD and framing contracts
+    // (on non-Linux hosts the suite's default IS this backend; on Linux
+    // this pins the path the other tests no longer take)
+    let srv = start_http_multi_with(HttpConfig { event_loop: false, ..hcfg() });
+    assert_head_mirrors_get(&srv);
+    let chunked_srv = start_http_multi_with(HttpConfig {
+        event_loop: false,
+        stream_threshold: 1,
+        ..hcfg()
+    });
+    let mut bc = Client::connect(&srv);
+    bc.send(b"GET /v1/models HTTP/1.1\r\nHost: t\r\n\r\n");
+    let buffered = bc.read_response();
+    let mut cc = Client::connect(&chunked_srv);
+    cc.send(b"GET /v1/models HTTP/1.1\r\nHost: t\r\n\r\n");
+    let chunked = cc.read_response();
+    assert_eq!(chunked.header("transfer-encoding"), Some("chunked"));
+    assert_eq!(chunked.body, buffered.body, "fallback streams byte-identically");
+    chunked_srv.shutdown();
+    srv.shutdown();
+}
+
+/// A pipelined burst where the SECOND request carries
+/// `Connection: close`: both answered in order, the close honoured after
+/// the second response, and the third (already-buffered) request never
+/// dispatched.
+fn assert_mid_pipeline_close_ordering(http: HttpServer) {
+    let mut c = Client::connect(&http);
+    let mut burst = Vec::new();
+    burst.extend_from_slice(&post_classify(&classify_body(DIM, 1, 1, None)));
+    burst.extend_from_slice(&post_classify_close(&classify_body(DIM, 2, 2, None)));
+    burst.extend_from_slice(&post_classify(&classify_body(DIM, 3, 3, None)));
+    c.send(&burst);
+    let r = c.read_response();
+    assert_eq!(r.status, 200, "first pipelined response: {}", r.body);
+    assert_eq!(r.json().get("id").and_then(Json::as_usize), Some(1));
+    assert_eq!(r.header("connection"), Some("keep-alive"));
+    let r = c.read_response();
+    assert_eq!(r.status, 200, "response carrying the close: {}", r.body);
+    assert_eq!(r.json().get("id").and_then(Json::as_usize), Some(2));
+    assert_eq!(r.header("connection"), Some("close"));
+    c.assert_server_closed();
+    let report = http.shutdown();
+    assert_eq!(report.router.aggregate().requests, 2, "request 3 never reached a model");
+}
+
+#[test]
+fn mid_pipeline_connection_close_answers_in_order_then_closes() {
+    assert_mid_pipeline_close_ordering(start_http());
+}
+
+#[test]
+fn mid_pipeline_connection_close_on_the_blocking_fallback() {
+    assert_mid_pipeline_close_ordering(start_http_with(HttpConfig {
+        event_loop: false,
+        ..hcfg()
+    }));
+}
+
+/// The tentpole gate: the event loop holds a 10k idle keep-alive fleet on
+/// one loop thread without shedding a single connection, and still
+/// answers classify probes while the fleet sits open.
+#[cfg(target_os = "linux")]
+#[test]
+fn idle_keep_alive_fleet_of_ten_thousand_is_not_shed() {
+    let want = 10_000usize;
+    // client and server ends both live in this process: 2 fds per
+    // connection, plus headroom for the suite's own files and sockets
+    let limit = pqs::http::server::raise_nofile_limit(2 * want as u64 + 1024);
+    let fleet = want.min((limit.saturating_sub(1024) / 2) as usize);
+    if fleet < want {
+        eprintln!("fd limit {limit}: scaling the idle soak down to {fleet} connections");
+    }
+    if fleet < 1024 {
+        // a host this constrained can't host a meaningful soak; the
+        // connections bench section still covers the no-shed guarantee
+        eprintln!("fd soft limit {limit} too low for the idle soak; skipping");
+        return;
+    }
+    let http = start_http_with(HttpConfig {
+        event_loop: true,
+        max_connections: fleet + 64,
+        keep_alive_timeout: Duration::from_secs(60),
+        ..hcfg()
+    });
+    let addr = http.local_addr();
+    let mut idle = Vec::with_capacity(fleet);
+    for i in 0..fleet {
+        match TcpStream::connect(addr) {
+            Ok(s) => idle.push(s),
+            Err(e) => panic!("connect {i}/{fleet}: {e}"),
+        }
+    }
+    // the loop still serves real work while every idle socket stays open
+    let mut c = Client::connect(&http);
+    for i in 0..5u64 {
+        c.send(&post_classify(&classify_body(DIM, i, i, None)));
+        let r = c.read_response();
+        assert_eq!(r.status, 200, "probe {i} with {fleet} idle connections: {}", r.body);
+    }
+    drop(idle);
+    let report = http.shutdown();
+    assert_eq!(report.http.shed, 0, "no connection below the cap may be shed");
+    assert!(
+        report.http.accepted as usize >= fleet + 1,
+        "every socket accepted: {} < {}",
+        report.http.accepted,
+        fleet + 1
+    );
 }
 
 #[test]
