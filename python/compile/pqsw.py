@@ -20,6 +20,9 @@ Header JSON schema:
           "w_scale": float, "x_scale": float, "x_offset": int,
           "wq_blob": int, "bias_blob": int
       "blobs": [{"offset": int, "len": int, "dtype": "i8"|"f32"|"i32"}]
+      "format_version": 2,
+      "sections": [{"tag": "checksums", "algo": "fnv1a64",
+                    "layers": ["%016x" FNV-1a per q-layer, graph order]}]
     }
 
 Weights are exported as int8 in (O, K) row-major layout where K is the
@@ -40,9 +43,34 @@ from . import quantize as Q
 
 MAGIC = b"PQSW1\x00\x00\x00"
 
+_FNV_OFFSET = 0xcbf29ce484222325
+_FNV_PRIME = 0x100000001b3
+_U64 = 0xFFFFFFFFFFFFFFFF
+
 
 def _align8(n: int) -> int:
     return (n + 7) & ~7
+
+
+def _fnv1a64(h: int, data: bytes) -> int:
+    for b in data:
+        h = ((h ^ b) * _FNV_PRIME) & _U64
+    return h
+
+
+def _layer_checksum(oc: int, k: int, wq: np.ndarray, bias: np.ndarray) -> int:
+    """FNV-1a digest of one q-layer's shape + weights + bias.
+
+    Mirrors `layer_checksum` in rust/src/formats/pqsw.rs exactly: oc and k
+    as u64 little-endian, then the int8 weight bytes in (O, K) row-major
+    order, then each bias value as f32 little-endian.
+    """
+    h = _FNV_OFFSET
+    h = _fnv1a64(h, struct.pack("<Q", oc))
+    h = _fnv1a64(h, struct.pack("<Q", k))
+    h = _fnv1a64(h, np.ascontiguousarray(wq, dtype=np.int8).tobytes())
+    h = _fnv1a64(h, np.ascontiguousarray(bias, dtype="<f4").tobytes())
+    return h
 
 
 def export_pqsw(
@@ -56,6 +84,7 @@ def export_pqsw(
     graph_out = []
     blobs_meta: list[dict] = []
     blob_data: list[bytes] = []
+    layer_sums: list[str] = []
 
     def add_blob(arr: np.ndarray, dtype: str) -> int:
         raw = arr.tobytes()
@@ -86,6 +115,8 @@ def export_pqsw(
             node["x_offset"] = qp_x.offset
             node["wq_blob"] = add_blob(wq, "i8")
             node["bias_blob"] = add_blob(bias, "f32")
+            oc, k = wq.shape
+            layer_sums.append("%016x" % _layer_checksum(oc, k, wq, bias))
         graph_out.append(node)
 
     header = {
@@ -104,6 +135,12 @@ def export_pqsw(
         "input_shape": input_shape,
         "graph": graph_out,
         "blobs": blobs_meta,
+        # end-to-end integrity: the Rust loader recomputes these digests
+        # from the live bytes and quarantines the model on any mismatch
+        "format_version": 2,
+        "sections": [
+            {"tag": "checksums", "algo": "fnv1a64", "layers": layer_sums}
+        ],
     }
 
     # lay out blob offsets relative to blob-section start

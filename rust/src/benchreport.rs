@@ -39,7 +39,15 @@
 //!   of one saved file, measured resident bytes in both modes, a
 //!   two-entry router blob-dedup smoke (two registry names over one file
 //!   must share one weight blob), and a lazy-vs-eager bit-identity check
-//!   (logits AND overflow counters; the section fails on divergence).
+//!   (logits AND overflow counters; the section fails on divergence);
+//! * **faults** — seeded fault injection against a live router: every
+//!   load fails until the circuit breaker opens (500s, then fast-fail
+//!   503s), the faults are disarmed and the time to the first healthy
+//!   200 is recorded (`recovery_ms`), then injected engine panics prove
+//!   the worker answers the batch 500 and survives. The section *fails*
+//!   if any request goes unanswered, the breaker never opens, or the
+//!   fleet never recovers — loss of a request under faults breaks the
+//!   bench, not just a dashboard.
 //!
 //! Everything runs on synthetic models so the report is reproducible on
 //! any checkout, artifacts or not. `quick: true` shrinks sample counts and
@@ -113,6 +121,7 @@ pub fn run(opts: &BenchOptions) -> Result<Json> {
         ("router", router_section(opts)?),
         ("plan", plan_section(opts)?),
         ("memory", memory_section(opts)?),
+        ("faults", faults_section(opts)?),
     ]))
 }
 
@@ -657,6 +666,7 @@ fn router_section(opts: &BenchOptions) -> Result<Json> {
         engine: cfg,
         server: scfg,
         preload: Vec::new(),
+        ..Default::default()
     };
     let router = Router::new(registry, rcfg).context("building the bench router")?;
     let http = HttpServer::start(router, "127.0.0.1:0", HttpConfig::default())
@@ -877,6 +887,7 @@ fn memory_section(opts: &BenchOptions) -> Result<Json> {
         engine: ecfg,
         server: scfg,
         preload: vec!["a".into(), "b".into()],
+        ..Default::default()
     };
     let router = Router::new(registry, rcfg).context("building the memory bench router")?;
     let rm = router.metrics();
@@ -930,6 +941,193 @@ fn memory_section(opts: &BenchOptions) -> Result<Json> {
     ]))
 }
 
+// ---- faults ---------------------------------------------------------------
+
+/// Fault-injection + self-healing section over a live router: arm a
+/// seeded [`FaultPlan`] that fails every load, drive requests until the
+/// load circuit breaker opens (500s from failed loads, then fast-fail
+/// 503s), disarm and measure the time to the first healthy 200, then
+/// re-arm so injected engine panics hit resident forwards — the worker
+/// must answer every rider 500 and keep serving. Fails — not just
+/// reports — if any request goes unanswered, the breaker never opens,
+/// or the fleet never recovers after the faults stop.
+fn faults_section(opts: &BenchOptions) -> Result<Json> {
+    use crate::coordinator::BreakerConfig;
+    use crate::faults::{FaultPlan, FaultSpec};
+    use std::sync::Arc;
+
+    let mut registry = ModelRegistry::new();
+    registry.register(
+        "m",
+        ModelSource::Synthetic(SyntheticSpec::Conv { c: 2, h: 8, w: 8, oc: 4, classes: 10 }),
+    );
+    // every load fails while armed; every 3rd resident forward panics
+    let plan = Arc::new(FaultPlan::new(FaultSpec {
+        seed: 0xFA17_BE4C,
+        load_error: 1.0,
+        panic_every: 3,
+        ..Default::default()
+    }));
+    let ecfg = EngineConfig { policy: Policy::Sorted1, acc_bits: 16, tile: 0, collect_stats: false };
+    let scfg = ServerConfig {
+        threads: 2,
+        max_batch: 4,
+        queue_cap: 64,
+        linger: Duration::from_micros(50),
+        engine_threads: 1,
+        default_deadline: None,
+    };
+    let rcfg = RouterConfig {
+        max_loaded: 0,
+        max_bytes: 0,
+        engine: ecfg,
+        server: scfg,
+        preload: Vec::new(),
+        // small windows so the whole open→half-open→closed round trip
+        // fits in a bench run
+        breaker: BreakerConfig {
+            threshold: 2,
+            base_backoff: Duration::from_millis(20),
+            max_backoff: Duration::from_millis(80),
+            ..Default::default()
+        },
+        faults: Some(Arc::clone(&plan)),
+    };
+    let router = Router::new(registry, rcfg).context("building the faults bench router")?;
+    let http = HttpServer::start(router, "127.0.0.1:0", HttpConfig::default())
+        .context("binding the faults bench server")?;
+    let addr = http.local_addr().to_string();
+    let mut client = LoopbackClient::connect(&addr)?;
+
+    let dim = 2 * 8 * 8;
+    let mut rng = Pcg32::new(0xFA17);
+    let body = {
+        let pixels: Vec<Json> =
+            (0..dim).map(|_| json::num((rng.below(1000) as f64) / 1000.0)).collect();
+        json::obj(vec![("image", Json::Arr(pixels))]).to_string()
+    };
+
+    let (mut sent, mut answered) = (0u64, 0u64);
+    let (mut s200, mut s500, mut s503) = (0u64, 0u64, 0u64);
+
+    // Phase 1: fault storm. Loads fail deterministically; after
+    // `threshold` consecutive failures the breaker must open and start
+    // fast-failing without touching the (still broken) source.
+    let storm = if opts.quick { 6 } else { 12 };
+    let mut breaker_opened = false;
+    for _ in 0..storm {
+        sent += 1;
+        let status = client.classify(&body)?;
+        answered += 1;
+        match status {
+            500 => s500 += 1,
+            503 => {
+                s503 += 1;
+                breaker_opened = true;
+            }
+            other => return Err(anyhow!("fault storm: unexpected status {other}")),
+        }
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    if !breaker_opened {
+        return Err(anyhow!(
+            "breaker never opened: {storm} failed loads produced {s500}x500 and no 503"
+        ));
+    }
+
+    // Phase 2: disarm and measure recovery — the next half-open probe
+    // load succeeds, the breaker closes, traffic flows again.
+    plan.disarm();
+    let t0 = Instant::now();
+    let mut recovery_ms = -1.0;
+    for _ in 0..400 {
+        sent += 1;
+        let status = client.classify(&body)?;
+        answered += 1;
+        match status {
+            200 => {
+                s200 += 1;
+                recovery_ms = t0.elapsed().as_secs_f64() * 1e3;
+            }
+            500 => s500 += 1,
+            503 => s503 += 1,
+            other => return Err(anyhow!("recovery: unexpected status {other}")),
+        }
+        if recovery_ms >= 0.0 {
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    if recovery_ms < 0.0 {
+        return Err(anyhow!("fleet never recovered after the faults were disarmed"));
+    }
+
+    // Phase 3: panic isolation. The model is resident, so re-arming only
+    // injects forward panics; every rider must still get a response and
+    // the worker must survive to serve the next request.
+    plan.rearm();
+    let volley = if opts.quick { 9 } else { 24 };
+    for _ in 0..volley {
+        sent += 1;
+        let status = client.classify(&body)?;
+        answered += 1;
+        match status {
+            200 => s200 += 1,
+            500 => s500 += 1,
+            other => return Err(anyhow!("panic volley: unexpected status {other}")),
+        }
+    }
+    plan.disarm();
+    sent += 1;
+    let status = client.classify(&body)?;
+    answered += 1;
+    if status != 200 {
+        return Err(anyhow!("worker did not survive injected panics: final status {status}"));
+    }
+    s200 += 1;
+
+    let report = http.shutdown();
+    let counts = plan.counts();
+    if counts.panics == 0 {
+        return Err(anyhow!("panic injection never fired over {volley} requests"));
+    }
+    let lost = sent - answered;
+    if lost != 0 {
+        return Err(anyhow!("{lost} of {sent} requests went unanswered under faults"));
+    }
+    Ok(json::obj(vec![
+        ("requests", json::num(sent as f64)),
+        ("responses", json::num(answered as f64)),
+        ("lost", json::num(lost as f64)),
+        ("status_200", json::num(s200 as f64)),
+        ("status_500", json::num(s500 as f64)),
+        ("status_503", json::num(s503 as f64)),
+        (
+            "injected",
+            json::obj(vec![
+                ("load_errors", json::num(counts.load_errors as f64)),
+                ("slow_loads", json::num(counts.slow_loads as f64)),
+                ("corruptions", json::num(counts.corruptions as f64)),
+                ("panics", json::num(counts.panics as f64)),
+                ("resets", json::num(counts.resets as f64)),
+            ]),
+        ),
+        (
+            "breaker",
+            json::obj(vec![
+                ("opens", json::num(report.router.breaker_opens as f64)),
+                ("fast_fails", json::num(report.router.breaker_fast_fails as f64)),
+                ("load_retries", json::num(report.router.load_retries as f64)),
+                // opened under faults, closed after disarm — both gated
+                // above, so a report that exists at all round-tripped
+                ("round_trip", Json::Bool(true)),
+            ]),
+        ),
+        ("recovery_ms", json::num(recovery_ms)),
+        ("worker_panics_survived", json::num(report.router.aggregate().panics as f64)),
+    ]))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -942,9 +1140,10 @@ mod tests {
         let report = run(&opts).expect("quick bench run");
         let txt = report.to_string();
         let parsed = Json::parse(&txt).expect("report round-trips");
-        for key in
-            ["meta", "dot", "pool", "forward", "serve", "connections", "router", "plan", "memory"]
-        {
+        for key in [
+            "meta", "dot", "pool", "forward", "serve", "connections", "router", "plan", "memory",
+            "faults",
+        ] {
             assert!(parsed.get(key).is_some(), "missing section {key}");
         }
         let fwd = parsed.get("forward").unwrap().as_arr().unwrap();
@@ -1012,5 +1211,24 @@ mod tests {
             assert!(row.get("analytic_ms").unwrap().as_f64().unwrap() >= 0.0);
             assert!(row.get("calibrated_ms").unwrap().as_f64().unwrap() >= 0.0);
         }
+        // the faults section gates the robustness invariants: zero lost
+        // requests, the breaker opened (and, because the section exists,
+        // closed again), panics injected and survived
+        let faults = parsed.get("faults").unwrap();
+        assert_eq!(faults.get("lost").and_then(Json::as_usize), Some(0), "no lost requests");
+        assert_eq!(
+            faults.get("requests").and_then(Json::as_usize),
+            faults.get("responses").and_then(Json::as_usize),
+            "every request answered exactly once"
+        );
+        assert!(
+            faults.get("breaker").unwrap().get("opens").unwrap().as_f64().unwrap() >= 1.0,
+            "breaker opened under the load-fault storm"
+        );
+        assert!(
+            faults.get("injected").unwrap().get("panics").unwrap().as_f64().unwrap() >= 1.0,
+            "engine panics were injected"
+        );
+        assert!(faults.get("recovery_ms").unwrap().as_f64().unwrap() >= 0.0);
     }
 }

@@ -169,6 +169,11 @@ pub struct ServeMetrics {
     /// skipped by the workers without touching an engine (counted in
     /// `requests`, separate from `errors`)
     pub expired: usize,
+    /// engine panics caught by the worker's `catch_unwind` isolation;
+    /// every job in the panicked batch was answered with an `Internal`
+    /// error (those responses are counted in `errors`), the engine was
+    /// rebuilt and the worker kept running
+    pub panics: usize,
     pub wall_s: f64,
     pub throughput_rps: f64,
     /// engine invocations (dynamic batches) executed
@@ -202,6 +207,7 @@ impl ServeMetrics {
         self.requests += other.requests;
         self.errors += other.errors;
         self.expired += other.expired;
+        self.panics += other.panics;
         self.batches += other.batches;
         self.mean_batch = if self.batches == 0 {
             0.0
@@ -224,6 +230,7 @@ impl ServeMetrics {
             requests: self.requests,
             errors: self.errors,
             expired: self.expired,
+            panics: self.panics,
             wall_s: self.wall_s,
             throughput_rps: self.throughput_rps,
             batches: self.batches,
@@ -237,9 +244,9 @@ impl ServeMetrics {
 
     pub fn print(&self) {
         println!(
-            "requests={} errors={} expired={} wall={:.2}s throughput={:.1} req/s  batches={} (mean {:.1} req/batch)",
-            self.requests, self.errors, self.expired, self.wall_s, self.throughput_rps,
-            self.batches, self.mean_batch,
+            "requests={} errors={} expired={} panics={} wall={:.2}s throughput={:.1} req/s  batches={} (mean {:.1} req/batch)",
+            self.requests, self.errors, self.expired, self.panics, self.wall_s,
+            self.throughput_rps, self.batches, self.mean_batch,
         );
         println!(
             "  e2e latency  mean={:.1}us p50={:.1}us p95={:.1}us p99={:.1}us p999={:.1}us",
@@ -285,6 +292,8 @@ pub struct ServeSummary {
     pub requests: usize,
     pub errors: usize,
     pub expired: usize,
+    /// engine panics caught and isolated (see [`ServeMetrics::panics`])
+    pub panics: usize,
     pub wall_s: f64,
     pub throughput_rps: f64,
     pub batches: usize,
@@ -306,6 +315,7 @@ impl ServeSummary {
         self.requests += other.requests;
         self.errors += other.errors;
         self.expired += other.expired;
+        self.panics += other.panics;
         self.batches += other.batches;
         self.mean_batch = if self.batches == 0 {
             0.0

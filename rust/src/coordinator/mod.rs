@@ -36,8 +36,9 @@ use crate::util::pool;
 
 pub use metrics::{LatencyRecorder, LatencySummary, ServeMetrics, ServeSummary};
 pub use registry::{
-    ClassifyRequest, ModelOverrides, ModelRegistry, ModelSource, ModelStatus, RouteError, Router,
-    RouterConfig, RouterMetrics, SourceFactory, SyntheticSpec,
+    BreakerConfig, BreakerSnapshot, ClassifyRequest, ModelHealth, ModelOverrides, ModelRegistry,
+    ModelSource, ModelStatus, RouteError, Router, RouterConfig, RouterMetrics, SourceFactory,
+    SyntheticSpec,
 };
 pub use server::{
     PendingResponse, ServeError, ServeResponse, Server, ServerBuilder, ServerConfig, SubmitError,

@@ -48,6 +48,26 @@
 //!   builds ONE [`ComputePool`] and injects it into every per-model
 //!   [`Server`] (via [`crate::coordinator::ServerBuilder::shared_pool`]),
 //!   so N loaded models never oversubscribe the machine.
+//! * **Self-healing** — every model load runs behind a per-name
+//!   **circuit breaker**: [`BreakerConfig::threshold`] consecutive
+//!   `LoadFailed`s trip it Open, and while Open requests fast-fail with
+//!   [`RouteError::BreakerOpen`] (HTTP `503` + `Retry-After`) instead of
+//!   hammering a broken source. The Open period backs off exponentially
+//!   with decorrelated jitter; once it elapses the breaker goes
+//!   Half-Open and admits exactly ONE probe load (the regular `loading`
+//!   marker serializes same-name requests behind it) — success closes
+//!   the breaker, failure re-opens it with a longer backoff. Integrity
+//!   failures (checksum mismatch, plan/graph inconsistency — see
+//!   [`crate::formats::pqsw::is_integrity_error`]) are different in
+//!   kind: time will not heal corrupted bytes, so the model is
+//!   **quarantined** ([`RouteError::Quarantined`], HTTP `503` with no
+//!   retry hint) until an explicit [`Router::reload`]. Breaker state and
+//!   counters ride each fleet row as [`ModelHealth`].
+//! * **Fault injection** — [`RouterConfig::faults`] optionally arms a
+//!   [`FaultPlan`] whose load seams (injected delay / error / bit-flip
+//!   corruption) run inside the router's load path, and which is handed
+//!   to every per-model server for forward-panic injection. `None` in
+//!   production: each seam is one skipped `if let`.
 //! * **Routing** — [`ClassifyRequest`] carries an optional model name;
 //!   `None` routes to the default (first registered unless overridden).
 //!   Unknown names fail fast with [`RouteError::UnknownModel`] carrying a
@@ -65,12 +85,14 @@ use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Context, Result};
 
+use crate::faults::{FaultPlan, LoadDecision};
 use crate::formats::manifest::Manifest;
-use crate::formats::pqsw::PqswModel;
+use crate::formats::pqsw::{is_integrity_error, PqswModel};
 use crate::models;
 use crate::nn::engine::EngineConfig;
 use crate::plan::PlanSummary;
 use crate::util::pool::{ComputePool, PoolStats};
+use crate::util::rng::Pcg32;
 
 use super::metrics::{LatencyRecorder, LatencySummary, ServeSummary};
 use super::server::{PendingResponse, Server, ServerConfig, SubmitError};
@@ -324,6 +346,34 @@ impl ModelRegistry {
     }
 }
 
+/// Per-model load circuit-breaker tuning (see the module docs'
+/// *Self-healing* bullet for the Closed → Open → Half-Open lifecycle).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct BreakerConfig {
+    /// Consecutive load failures that trip the breaker Open for a model.
+    /// `0` disables the breaker: every request retries the load.
+    pub threshold: u32,
+    /// Floor of the Open backoff window (the first trip waits at least
+    /// this long before admitting a probe).
+    pub base_backoff: Duration,
+    /// Ceiling of the Open backoff window: decorrelated jitter grows the
+    /// wait (`uniform[base, 3 * previous]`) but never past this.
+    pub max_backoff: Duration,
+    /// Seed of the jitter RNG, so a test's backoff schedule replays.
+    pub seed: u64,
+}
+
+impl Default for BreakerConfig {
+    fn default() -> BreakerConfig {
+        BreakerConfig {
+            threshold: 3,
+            base_backoff: Duration::from_millis(100),
+            max_backoff: Duration::from_secs(5),
+            seed: 0x5EED_0B0F,
+        }
+    }
+}
+
 /// Router tuning knobs.
 #[derive(Clone, Debug, Default)]
 pub struct RouterConfig {
@@ -349,6 +399,13 @@ pub struct RouterConfig {
     /// an unknown name fails [`Router::new`]. Preloading more names than
     /// `max_loaded` LRU-evicts the earliest ones, like any other load.
     pub preload: Vec<String>,
+    /// Per-model load circuit breaker (failure threshold + backoff
+    /// bounds). The default trips after 3 consecutive load failures.
+    pub breaker: BreakerConfig,
+    /// Optional fault-injection plan, threaded through the load path and
+    /// every per-model server. `None` (the default) is production: each
+    /// injection seam costs one skipped `if let`.
+    pub faults: Option<Arc<FaultPlan>>,
 }
 
 /// One classification request at the routing surface.
@@ -378,6 +435,16 @@ pub enum RouteError {
     /// The model is registered but its source failed to load (missing
     /// file, bad manifest entry). HTTP maps this to `500`.
     LoadFailed(String),
+    /// The model's load circuit breaker is Open: recent loads kept
+    /// failing, so requests fast-fail without touching the source until
+    /// the backoff elapses. HTTP maps this to `503` with a `Retry-After`
+    /// derived from `retry_after` (time remaining until the probe).
+    BreakerOpen { model: String, retry_after: Duration },
+    /// The model failed an integrity check (checksum mismatch,
+    /// plan/graph inconsistency) and is quarantined until an explicit
+    /// [`Router::reload`]. HTTP maps this to `503` *without* a
+    /// `Retry-After`: waiting will not fix corrupted bytes.
+    Quarantined { model: String, reason: String },
     /// The target model's queue rejected the submission (full / shutting
     /// down). HTTP maps this to `503`.
     Rejected(SubmitError),
@@ -388,6 +455,15 @@ impl std::fmt::Display for RouteError {
         match self {
             RouteError::UnknownModel(m) => write!(f, "{m}"),
             RouteError::LoadFailed(m) => write!(f, "model load failed: {m}"),
+            RouteError::BreakerOpen { model, retry_after } => write!(
+                f,
+                "model {model:?} load circuit breaker is open \
+                 (recent loads failed); retry in {:.3}s",
+                retry_after.as_secs_f64()
+            ),
+            RouteError::Quarantined { model, reason } => {
+                write!(f, "model {model:?} is quarantined: {reason}")
+            }
             RouteError::Rejected(SubmitError::Full(_)) => {
                 write!(f, "request queue is full; retry later")
             }
@@ -399,6 +475,108 @@ impl std::fmt::Display for RouteError {
 }
 
 impl std::error::Error for RouteError {}
+
+/// Circuit-breaker position as reported in snapshots. An Open breaker
+/// whose backoff has already elapsed still reports `Open` (with a zero
+/// `retry_after_s`) until the next request flips it Half-Open — the
+/// transition happens on the request path, not on a timer.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum BreakerSnapshot {
+    #[default]
+    Closed,
+    Open,
+    HalfOpen,
+}
+
+impl BreakerSnapshot {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            BreakerSnapshot::Closed => "closed",
+            BreakerSnapshot::Open => "open",
+            BreakerSnapshot::HalfOpen => "half-open",
+        }
+    }
+}
+
+/// One model's self-healing snapshot: breaker position + lifetime
+/// counters + quarantine. Rides every fleet row ([`ModelStatus::health`],
+/// `GET /v1/models`); the fleet totals are on [`RouterMetrics`].
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct ModelHealth {
+    pub breaker: BreakerSnapshot,
+    /// Seconds until an Open breaker admits its probe (`0` otherwise).
+    pub retry_after_s: f64,
+    /// Current failed-load streak (reset by any successful load).
+    pub consecutive_failures: u32,
+    /// Lifetime failed load attempts for this model.
+    pub load_retries: u64,
+    /// Lifetime Closed/Half-Open → Open transitions.
+    pub breaker_opens: u64,
+    /// Requests fast-failed while Open or quarantined.
+    pub fast_fails: u64,
+    /// The integrity failure that quarantined this model; `Some` until an
+    /// explicit [`Router::reload`].
+    pub quarantined: Option<String>,
+}
+
+/// Internal breaker position for one model (see [`BreakerSnapshot`] for
+/// the reported view).
+#[derive(Clone, Debug, Default, PartialEq)]
+enum BreakerState {
+    #[default]
+    Closed,
+    /// Fast-fail until `until`; `backoff` is this Open period's length
+    /// (feeds the next decorrelated-jitter draw).
+    Open { until: Instant, backoff: Duration },
+    /// Backoff elapsed: exactly one probe load is in (or about to be in)
+    /// flight. Its outcome closes or re-opens the breaker.
+    HalfOpen,
+}
+
+/// Per-model self-healing bookkeeping (lives in `RouterInner::health`,
+/// created lazily on a model's first load failure).
+#[derive(Clone, Debug, Default)]
+struct ModelHealthState {
+    state: BreakerState,
+    consecutive_failures: u32,
+    load_retries: u64,
+    opens: u64,
+    fast_fails: u64,
+    /// last Open period's backoff (decorrelated jitter's `previous`)
+    last_backoff: Option<Duration>,
+    quarantined: Option<String>,
+}
+
+impl ModelHealthState {
+    fn snapshot(&self) -> ModelHealth {
+        let (breaker, retry) = match self.state {
+            BreakerState::Closed => (BreakerSnapshot::Closed, Duration::ZERO),
+            BreakerState::HalfOpen => (BreakerSnapshot::HalfOpen, Duration::ZERO),
+            BreakerState::Open { until, .. } => {
+                (BreakerSnapshot::Open, until.saturating_duration_since(Instant::now()))
+            }
+        };
+        ModelHealth {
+            breaker,
+            retry_after_s: retry.as_secs_f64(),
+            consecutive_failures: self.consecutive_failures,
+            load_retries: self.load_retries,
+            breaker_opens: self.opens,
+            fast_fails: self.fast_fails,
+            quarantined: self.quarantined.clone(),
+        }
+    }
+}
+
+/// One decorrelated-jitter backoff draw: `uniform[base, 3 * previous]`
+/// clamped to `[base, max]` (the AWS "decorrelated jitter" schedule —
+/// grows exponentially in expectation, desynchronizes retry storms).
+fn next_backoff(cfg: &BreakerConfig, prev: Option<Duration>, rng: &mut Pcg32) -> Duration {
+    let base = cfg.base_backoff.as_secs_f64().max(1e-9);
+    let hi = (prev.unwrap_or(cfg.base_backoff).as_secs_f64() * 3.0).max(base);
+    let drawn = base + rng.f64() * (hi - base);
+    Duration::from_secs_f64(drawn.min(cfg.max_backoff.as_secs_f64()).max(base))
+}
 
 /// One model's row in [`RouterMetrics`] and `GET /v1/models`.
 #[derive(Clone, Debug)]
@@ -422,6 +600,9 @@ pub struct ModelStatus {
     /// evicted one. A quantile *summary* — snapshots never carry
     /// reservoirs (see [`ServeSummary`]).
     pub metrics: ServeSummary,
+    /// Self-healing state: breaker position, failure counters,
+    /// quarantine reason.
+    pub health: ModelHealth,
 }
 
 /// Router-level counters + the per-model fleet snapshot.
@@ -444,6 +625,15 @@ pub struct RouterMetrics {
     /// Loads that found byte-identical weights already resident and
     /// rehosted onto the canonical blob instead of keeping their own.
     pub dedup_hits: u64,
+    /// Failed load attempts across the fleet (lifetime; integrity
+    /// failures included).
+    pub load_retries: u64,
+    /// Circuit-breaker trips to Open across the fleet (lifetime).
+    pub breaker_opens: u64,
+    /// Requests fast-failed by an Open breaker or a quarantine.
+    pub breaker_fast_fails: u64,
+    /// Models currently quarantined by an integrity failure.
+    pub quarantined: u64,
     /// Wall time of each load (source read + server spawn), µs.
     pub load_latency: LatencySummary,
     pub wall_s: f64,
@@ -492,6 +682,12 @@ impl RouterMetrics {
             self.load_latency.mean_us,
             self.load_latency.max_us,
         );
+        if self.load_retries + self.breaker_opens + self.breaker_fast_fails + self.quarantined > 0 {
+            println!(
+                "  health: load_retries={} breaker_opens={} fast_fails={} quarantined={}",
+                self.load_retries, self.breaker_opens, self.breaker_fast_fails, self.quarantined,
+            );
+        }
         for m in &self.models {
             let plan = match &m.plan {
                 Some(p) => format!(
@@ -502,8 +698,15 @@ impl RouterMetrics {
                 ),
                 None => String::new(),
             };
+            let health = if m.health.quarantined.is_some() {
+                " [QUARANTINED]".to_string()
+            } else if m.health.breaker != BreakerSnapshot::Closed {
+                format!(" [breaker {}]", m.health.breaker.as_str())
+            } else {
+                String::new()
+            };
             println!(
-                "model {}{}{}{plan}: requests={} errors={} expired={} \
+                "model {}{}{}{health}{plan}: requests={} errors={} expired={} \
                  p50={:.1}us p99={:.1}us",
                 m.name,
                 if m.default { " (default)" } else { "" },
@@ -582,6 +785,12 @@ struct RouterInner {
     loads: u64,
     evictions: u64,
     load_latency: LatencyRecorder,
+    /// per-model breaker/quarantine state, created on first load failure
+    /// (absent = healthy, Closed breaker)
+    health: BTreeMap<String, ModelHealthState>,
+    /// decorrelated-jitter RNG for breaker backoffs; lazily seeded from
+    /// [`BreakerConfig::seed`] so `RouterInner` stays `Default`
+    breaker_rng: Option<Pcg32>,
 }
 
 /// Multi-model request router. Owns one [`Server`] per *loaded* model (all
@@ -640,7 +849,7 @@ impl Router {
         registry.register(name, ModelSource::Memory(model.clone()));
         Router::new(
             registry,
-            RouterConfig { max_loaded: 0, max_bytes: 0, engine, server, preload: Vec::new() },
+            RouterConfig { engine, server, ..RouterConfig::default() },
         )
         .expect("registry has one model")
     }
@@ -731,6 +940,31 @@ impl Router {
                 inner.unknown += 1;
                 return Err(RouteError::UnknownModel(self.registry.unknown_message(name)));
             }
+            // self-healing gate: a quarantined model never loads again
+            // until an explicit reload; an Open breaker fast-fails until
+            // its backoff elapses, then flips Half-Open and this request
+            // becomes the single probe (the `loading` marker below
+            // serializes everyone else behind it)
+            if let Some(h) = inner.health.get_mut(name) {
+                if let Some(reason) = &h.quarantined {
+                    h.fast_fails += 1;
+                    return Err(RouteError::Quarantined {
+                        model: name.to_string(),
+                        reason: reason.clone(),
+                    });
+                }
+                if let BreakerState::Open { until, .. } = h.state {
+                    let now = Instant::now();
+                    if now < until {
+                        h.fast_fails += 1;
+                        return Err(RouteError::BreakerOpen {
+                            model: name.to_string(),
+                            retry_after: until - now,
+                        });
+                    }
+                    h.state = BreakerState::HalfOpen;
+                }
+            }
             if let Some(lm) = inner.loaded.get_mut(name) {
                 inner.tick += 1;
                 lm.last_used = inner.tick;
@@ -788,7 +1022,7 @@ impl Router {
             ),
             None => (self.cfg.server, self.pool.clone()),
         };
-        let built = self.registry.entries[name].load().map(|mut model| {
+        let built = self.faulty_load(name).map(|mut model| {
             let hash = model.content_hash();
             // dedup: when byte-identical weights are already resident,
             // re-point this model's borrowed views at the canonical blob
@@ -814,6 +1048,7 @@ impl Router {
                 .engine(engine_cfg)
                 .config(server_cfg)
                 .maybe_shared_pool(model_pool)
+                .maybe_faults(self.cfg.faults.clone())
                 .start(&model);
             let plan = model.plan.as_ref().map(|p| p.summary());
             let shape = model.input_shape.clone();
@@ -826,11 +1061,22 @@ impl Router {
         load_guard.armed = false;
         inner.loading.remove(name);
         let (server, input_shape, plan, hash, bytes, own_bytes, blob, deduped) = match built {
-            Ok(v) => v,
+            Ok(v) => {
+                // a successful load (incl. a Half-Open probe) closes the
+                // breaker and clears the failure streak
+                if let Some(h) = inner.health.get_mut(name) {
+                    h.state = BreakerState::Closed;
+                    h.consecutive_failures = 0;
+                    h.last_backoff = None;
+                }
+                v
+            }
             Err(e) => {
-                // wake same-name waiters so one of them can retry the load
+                let err = self.record_load_failure(inner, name, &e);
+                // wake same-name waiters so one of them can retry the
+                // load (or observe the breaker/quarantine we just set)
                 self.load_done.notify_all();
-                return Err(RouteError::LoadFailed(format!("{e:#}")));
+                return Err(err);
             }
         };
         // bytes the newcomer would add to `resident` right now: its own
@@ -862,22 +1108,10 @@ impl Router {
                 .min_by_key(|(_, lm)| lm.last_used)
                 .map(|(n, _)| n.clone());
             match victim {
-                Some(v) => {
-                    let lm = inner.loaded.remove(&v).expect("victim is loaded");
-                    inner.evictions += 1;
-                    inner.resident -= lm.own_bytes;
-                    if let Some(p) = lm.blob_ptr {
-                        if let Some(entry) = inner.blobs.get_mut(&p) {
-                            entry.refs -= 1;
-                            if entry.refs == 0 {
-                                inner.resident -= entry.data.len() as u64;
-                                inner.blobs.remove(&p);
-                            }
-                        }
-                    }
-                    inner.draining.push((v.clone(), Arc::clone(&lm.server)));
-                    evicted.push((v, lm.server));
-                }
+                Some(v) => match evict_locked(inner, &v) {
+                    Some(pair) => evicted.push(pair),
+                    None => break,
+                },
                 None => break,
             }
         }
@@ -951,6 +1185,133 @@ impl Router {
         }
     }
 
+    /// Load `name` from its source through the fault plan's load seams
+    /// (injected delay / I/O error / bit-flip corruption), then through
+    /// the integrity gate: a model whose embedded checksums don't match
+    /// its bytes — or whose plan names layers its graph lacks — is never
+    /// hosted. File loads already verified themselves in
+    /// [`PqswModel::load`]; this re-check covers in-memory, synthetic
+    /// and factory sources plus anything the fault plan corrupted after
+    /// the read.
+    fn faulty_load(&self, name: &str) -> Result<PqswModel> {
+        let decision = match &self.cfg.faults {
+            Some(f) => f.on_load(),
+            None => LoadDecision::default(),
+        };
+        if let Some(delay) = decision.delay {
+            std::thread::sleep(delay);
+        }
+        if decision.error {
+            return Err(anyhow!("injected fault: load of model {name:?} failed"));
+        }
+        let mut model = self.registry.entries[name].load()?;
+        if decision.corrupt {
+            if let Some(f) = &self.cfg.faults {
+                f.corrupt_model(&mut model);
+            }
+        }
+        model.verify_integrity().with_context(|| format!("hosting model {name:?}"))?;
+        Ok(model)
+    }
+
+    /// Classify one load failure into the model's health state (under
+    /// the router lock) and build the client-facing error. Integrity
+    /// failures quarantine the model; anything else advances the
+    /// breaker, tripping it Open with a decorrelated-jitter backoff at
+    /// [`BreakerConfig::threshold`] consecutive failures (a failed
+    /// Half-Open probe is already past the threshold, so it re-opens
+    /// with a longer backoff).
+    fn record_load_failure(
+        &self,
+        inner: &mut RouterInner,
+        name: &str,
+        e: &anyhow::Error,
+    ) -> RouteError {
+        let cfg = &self.cfg.breaker;
+        let rng = inner.breaker_rng.get_or_insert_with(|| Pcg32::new(cfg.seed));
+        let health = inner.health.entry(name.to_string()).or_default();
+        health.load_retries += 1;
+        if is_integrity_error(e) {
+            let reason = format!("{e:#}");
+            health.quarantined = Some(reason.clone());
+            health.state = BreakerState::Closed;
+            health.consecutive_failures = 0;
+            health.last_backoff = None;
+            return RouteError::Quarantined { model: name.to_string(), reason };
+        }
+        health.consecutive_failures += 1;
+        if cfg.threshold > 0 && health.consecutive_failures >= cfg.threshold {
+            let backoff = next_backoff(cfg, health.last_backoff, rng);
+            health.state = BreakerState::Open { until: Instant::now() + backoff, backoff };
+            health.last_backoff = Some(backoff);
+            health.opens += 1;
+        }
+        RouteError::LoadFailed(format!("{e:#}"))
+    }
+
+    /// The router's fault-injection plan, when one is armed (`None` in
+    /// production). The HTTP accept loops consult it for connection
+    /// resets; `pqs bench` reads its counters.
+    pub fn faults(&self) -> Option<&Arc<FaultPlan>> {
+        self.cfg.faults.as_ref()
+    }
+
+    /// Self-healing snapshot for one registered model (`None` means
+    /// healthy: no failure has ever been recorded for it).
+    pub fn health(&self, name: &str) -> Option<ModelHealth> {
+        let inner = self.inner.lock().unwrap();
+        inner.health.get(name).map(|h| h.snapshot())
+    }
+
+    /// Clear `name`'s quarantine and breaker state, drop any stale
+    /// incarnation, and load it afresh from its source. This is the
+    /// explicit operator action that ends a quarantine — time alone
+    /// never does. Counts as a load (not a route) in the metrics.
+    pub fn reload(&self, name: &str) -> Result<(), RouteError> {
+        let evicted = {
+            let mut guard = self.inner.lock().unwrap();
+            let inner = &mut *guard;
+            if !self.registry.entries.contains_key(name) {
+                inner.unknown += 1;
+                return Err(RouteError::UnknownModel(self.registry.unknown_message(name)));
+            }
+            inner.health.remove(name);
+            evict_locked(inner, name).into_iter().collect::<Vec<_>>()
+        };
+        self.drain_evicted(evicted);
+        self.resolve_counted(Some(name), false).map(|_| ())
+    }
+
+    /// Whether the default model can take traffic: neither quarantined
+    /// nor behind an Open breaker that is still backing off. (Unloaded
+    /// but loadable is ready — the first request pays the load.) The
+    /// HTTP `GET /readyz` combines this with its own drain state and
+    /// queue high-watermark.
+    pub fn ready(&self) -> bool {
+        let name = self.default_model();
+        let inner = self.inner.lock().unwrap();
+        match inner.health.get(name) {
+            Some(h) => {
+                h.quarantined.is_none()
+                    && !matches!(h.state, BreakerState::Open { until, .. }
+                        if Instant::now() < until)
+            }
+            None => true,
+        }
+    }
+
+    /// Queue occupancy `(len, cap)` of the default model's live server;
+    /// `None` while it is not loaded. Feeds the readiness probe's
+    /// high-watermark check without snapshotting the whole fleet.
+    pub fn default_queue_depth(&self) -> Option<(usize, usize)> {
+        let name = self.default_model();
+        let server = {
+            let inner = self.inner.lock().unwrap();
+            inner.loaded.get(name).map(|lm| Arc::clone(&lm.server))
+        };
+        server.map(|s| (s.queue_len(), self.cfg.server.queue_cap))
+    }
+
     /// Snapshot of router counters + the per-model fleet.
     ///
     /// Two phases, so a scrape never does reservoir work — or *any*
@@ -971,10 +1332,12 @@ impl Router {
             past: ServeSummary,
             live: Option<(Arc<Server>, Vec<usize>, Option<PlanSummary>, u64)>,
             draining: Vec<Arc<Server>>,
+            health: ModelHealth,
         }
         // phase 1: under the lock — counters and handles only
         let (mut rm, seeds) = {
             let inner = self.inner.lock().unwrap();
+            let health_totals = health_totals(&inner.health);
             let rm = RouterMetrics {
                 routed: inner.routed,
                 unknown_model: inner.unknown,
@@ -983,6 +1346,10 @@ impl Router {
                 resident_bytes: inner.resident,
                 budget: self.cfg.max_bytes,
                 dedup_hits: inner.dedup_hits,
+                load_retries: health_totals.0,
+                breaker_opens: health_totals.1,
+                breaker_fast_fails: health_totals.2,
+                quarantined: health_totals.3,
                 // loads are rare (each pays a model read), so this
                 // recorder stays tiny; summarizing it here is O(loads)
                 load_latency: inner.load_latency.summary(),
@@ -1008,6 +1375,7 @@ impl Router {
                         .filter(|(n, _)| *n == name)
                         .map(|(_, s)| Arc::clone(s))
                         .collect(),
+                    health: inner.health.get(name).map(|h| h.snapshot()).unwrap_or_default(),
                 })
                 .collect();
             (rm, seeds)
@@ -1033,6 +1401,7 @@ impl Router {
                 loaded,
                 known,
                 metrics,
+                seed.health,
             ));
         }
         rm
@@ -1070,9 +1439,12 @@ impl Router {
             .map(|name| {
                 let metrics = inner.past.get(&name).copied().unwrap_or_default();
                 let known = known.remove(&name);
-                model_status(&registry, &default, name, false, known, metrics)
+                let health =
+                    inner.health.get(&name).map(|h| h.snapshot()).unwrap_or_default();
+                model_status(&registry, &default, name, false, known, metrics, health)
             })
             .collect();
+        let totals = health_totals(&inner.health);
         RouterMetrics {
             routed: inner.routed,
             unknown_model: inner.unknown,
@@ -1082,12 +1454,39 @@ impl Router {
             resident_bytes: 0,
             budget: cfg.max_bytes,
             dedup_hits: inner.dedup_hits,
+            load_retries: totals.0,
+            breaker_opens: totals.1,
+            breaker_fast_fails: totals.2,
+            quarantined: totals.3,
             load_latency: inner.load_latency.summary(),
             wall_s: started.elapsed().as_secs_f64(),
             models,
             pool: pool.as_deref().map(|p| p.stats()),
         }
     }
+}
+
+/// Remove `name` from the loaded fleet under the router lock, returning
+/// it for an unlocked graceful drain. Decrements `resident` and the
+/// blob refcount and parks the server in `draining` so metrics
+/// snapshots keep seeing its traffic mid-drain. Shared by the LRU
+/// eviction loop and [`Router::reload`] so the byte accounting cannot
+/// drift between the two paths. `None` when `name` is not loaded.
+fn evict_locked(inner: &mut RouterInner, name: &str) -> Option<(String, Arc<Server>)> {
+    let lm = inner.loaded.remove(name)?;
+    inner.evictions += 1;
+    inner.resident -= lm.own_bytes;
+    if let Some(p) = lm.blob_ptr {
+        if let Some(entry) = inner.blobs.get_mut(&p) {
+            entry.refs -= 1;
+            if entry.refs == 0 {
+                inner.resident -= entry.data.len() as u64;
+                inner.blobs.remove(&p);
+            }
+        }
+    }
+    inner.draining.push((name.to_string(), Arc::clone(&lm.server)));
+    Some((name.to_string(), lm.server))
 }
 
 /// Assemble one fleet row. `known` carries what a live (or
@@ -1102,6 +1501,7 @@ fn model_status(
     loaded: bool,
     known: Option<(Vec<usize>, Option<PlanSummary>, u64)>,
     metrics: ServeSummary,
+    health: ModelHealth,
 ) -> ModelStatus {
     let (input_shape, plan, bytes) = match known {
         // a drained incarnation still reports shape/plan, but holds no bytes
@@ -1123,5 +1523,19 @@ fn model_status(
         plan,
         resident_bytes: bytes,
         metrics,
+        health,
     }
+}
+
+/// Fleet-wide health sums for [`RouterMetrics`]:
+/// `(load_retries, breaker_opens, fast_fails, quarantined)`.
+fn health_totals(health: &BTreeMap<String, ModelHealthState>) -> (u64, u64, u64, u64) {
+    let mut totals = (0u64, 0u64, 0u64, 0u64);
+    for h in health.values() {
+        totals.0 += h.load_retries;
+        totals.1 += h.opens;
+        totals.2 += h.fast_fails;
+        totals.3 += u64::from(h.quarantined.is_some());
+    }
+    totals
 }

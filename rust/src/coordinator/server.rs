@@ -34,6 +34,7 @@ use std::sync::{mpsc, Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
+use crate::faults::FaultPlan;
 use crate::formats::pqsw::PqswModel;
 use crate::nn::engine::{Engine, EngineConfig};
 use crate::util::pool::{self, ComputePool};
@@ -201,6 +202,7 @@ struct MetricsState {
     completed: usize,
     errors: usize,
     expired: usize,
+    panics: usize,
     batches: usize,
     batched_requests: usize,
     latency: LatencyRecorder,
@@ -220,6 +222,9 @@ struct Shared {
     /// one persistent compute pool shared by every worker's engine
     /// (`None` when `engine_threads <= 1`)
     pool: Option<Arc<ComputePool>>,
+    /// injected-fault plan the workers consult before each forward
+    /// (`None` in production: the seam costs one `if let`)
+    faults: Option<Arc<FaultPlan>>,
 }
 
 /// Persistent worker-pool serving runtime. See the module docs.
@@ -249,11 +254,17 @@ pub struct ServerBuilder {
     cfg: EngineConfig,
     scfg: ServerConfig,
     pool: Option<Arc<ComputePool>>,
+    faults: Option<Arc<FaultPlan>>,
 }
 
 impl ServerBuilder {
     pub fn new() -> ServerBuilder {
-        ServerBuilder { cfg: EngineConfig::default(), scfg: ServerConfig::default(), pool: None }
+        ServerBuilder {
+            cfg: EngineConfig::default(),
+            scfg: ServerConfig::default(),
+            pool: None,
+            faults: None,
+        }
     }
 
     /// Engine configuration every pinned worker engine is built from.
@@ -285,6 +296,14 @@ impl ServerBuilder {
         self
     }
 
+    /// Arm a deterministic fault plan (chaos testing): workers consult it
+    /// before every forward, so injected engine panics exercise the same
+    /// `catch_unwind` isolation a real engine bug would hit.
+    pub fn maybe_faults(mut self, faults: Option<Arc<FaultPlan>>) -> ServerBuilder {
+        self.faults = faults;
+        self
+    }
+
     /// Spawn the worker pool. The model is copied once into the server;
     /// each worker builds its own pinned `Engine` from it.
     pub fn start(self, model: &PqswModel) -> Server {
@@ -309,6 +328,7 @@ impl ServerBuilder {
             metrics: Mutex::new(MetricsState::default()),
             started: Instant::now(),
             pool,
+            faults: self.faults,
         });
         let workers = (0..scfg.threads)
             .map(|_| {
@@ -503,6 +523,7 @@ fn snapshot(shared: &Shared) -> ServeMetrics {
         requests,
         errors: m.errors,
         expired: m.expired,
+        panics: m.panics,
         wall_s,
         throughput_rps: requests as f64 / wall_s.max(1e-9),
         batches: m.batches,
@@ -564,11 +585,38 @@ fn worker_loop(shared: &Shared) {
         }
         // queue capacity was freed
         shared.not_full.notify_all();
-        process_batch(&mut engine, shared, dim, batch);
+        // Panic isolation: a panicking engine (or any bug downstream of
+        // batch assembly) must cost exactly its own batch, never the
+        // worker thread — before this guard a single panic silently shrank
+        // the pool by one pinned engine forever. `process_batch` answers
+        // every job in the panicked group with an `Internal` error itself;
+        // if the unwind escaped it anyway, the dropped senders make each
+        // pending `wait()` synthesize the same error, so no client hangs.
+        let engine_ok =
+            match std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                process_batch(&mut engine, shared, dim, batch)
+            })) {
+                Ok(ok) => ok,
+                Err(_) => {
+                    shared.metrics.lock().unwrap().panics += 1;
+                    false
+                }
+            };
+        if !engine_ok {
+            // the unwound engine's scratch arena may hold arbitrary state:
+            // rebuild from the pristine model (re-applies any embedded plan)
+            engine = Engine::new(&shared.model, shared.cfg);
+            match &shared.pool {
+                Some(p) => engine.set_pool(Arc::clone(p)),
+                None => engine.set_threads(shared.scfg.engine_threads),
+            }
+        }
     }
 }
 
-fn process_batch(engine: &mut Engine, shared: &Shared, dim: usize, jobs: Vec<Job>) {
+/// Returns whether the engine is still trustworthy (`false` after a
+/// caught panic — the caller rebuilds it).
+fn process_batch(engine: &mut Engine, shared: &Shared, dim: usize, jobs: Vec<Job>) -> bool {
     // per-request validation: an expired or malformed request answers with
     // an error and never reaches the engine (one bad request cannot hurt
     // batch-mates, and a dead client cannot pin an engine). Requests that
@@ -614,26 +662,31 @@ fn process_batch(engine: &mut Engine, shared: &Shared, dim: usize, jobs: Vec<Job
     // `None` sorts first, so plan-width requests run before any override
     // re-programs the engine's per-layer widths
     let mut overridden = false;
+    let mut engine_ok = true;
     for (width, valid) in groups {
         if let Some(w) = width {
             let plan = shared.model.plan.as_ref().expect("validated above");
             engine.apply_layer_bits(&plan.operating_point(w));
             overridden = true;
         }
-        run_group(engine, shared, dim, &valid);
+        engine_ok &= run_group(engine, shared, dim, &valid);
     }
-    if overridden {
+    if overridden && engine_ok {
         // restore the embedded plan for the next batch on this engine
+        // (skipped after a panic: the caller rebuilds the engine anyway)
         if let Some(plan) = &shared.model.plan {
             engine.apply_plan(plan);
         }
     }
+    engine_ok
 }
 
 /// One engine invocation over an already-validated group of jobs.
-fn run_group(engine: &mut Engine, shared: &Shared, dim: usize, valid: &[Job]) {
+/// Returns whether the engine survived (`false` = it panicked and every
+/// job was answered with an `Internal` error).
+fn run_group(engine: &mut Engine, shared: &Shared, dim: usize, valid: &[Job]) -> bool {
     if valid.is_empty() {
-        return;
+        return true;
     }
     let n = valid.len();
     let mut flat = Vec::with_capacity(n * dim);
@@ -641,7 +694,15 @@ fn run_group(engine: &mut Engine, shared: &Shared, dim: usize, valid: &[Job]) {
         flat.extend_from_slice(&j.image);
     }
     let t0 = Instant::now();
-    let out = engine.forward(&flat, n);
+    // the forward itself runs under `catch_unwind` so a panicking kernel
+    // (or an injected chaos fault) is indistinguishable from an engine
+    // `Err` from the client's point of view: one 500 per batch-mate
+    let out = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        if let Some(f) = &shared.faults {
+            f.before_forward();
+        }
+        engine.forward(&flat, n)
+    }));
     let compute_us = dur_us(t0.elapsed());
     {
         let mut m = shared.metrics.lock().unwrap();
@@ -649,17 +710,34 @@ fn run_group(engine: &mut Engine, shared: &Shared, dim: usize, valid: &[Job]) {
         m.batched_requests += n;
     }
     match out {
-        Ok(out) => {
+        Ok(Ok(out)) => {
             for (bi, j) in valid.iter().enumerate() {
                 respond(shared, j, Ok(out.argmax(bi)), compute_us, n);
             }
+            true
         }
-        Err(e) => {
+        Ok(Err(e)) => {
             // engine failure: per-request error responses, service survives
             let msg = format!("forward failed: {e:#}");
             for j in valid {
                 respond(shared, j, Err(ServeError::Internal(msg.clone())), compute_us, n);
             }
+            true
+        }
+        Err(payload) => {
+            // engine panic: count it, answer every batch-mate, poison-flag
+            // the engine so the worker rebuilds it
+            let what = payload
+                .downcast_ref::<&str>()
+                .map(|s| s.to_string())
+                .or_else(|| payload.downcast_ref::<String>().cloned())
+                .unwrap_or_else(|| "unknown panic payload".into());
+            shared.metrics.lock().unwrap().panics += 1;
+            let msg = format!("engine panicked: {what}");
+            for j in valid {
+                respond(shared, j, Err(ServeError::Internal(msg.clone())), compute_us, n);
+            }
+            false
         }
     }
 }

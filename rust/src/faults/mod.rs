@@ -1,0 +1,391 @@
+//! Deterministic fault injection for the serving stack.
+//!
+//! A [`FaultPlan`] is a seeded source of *injected* failures threaded
+//! through the seams where real ones happen: model loads (I/O errors,
+//! slow disks, bit-flip corruption of weight bytes), engine forwards
+//! (panics), and socket accepts (resets). Everything a plan does is
+//! driven by one [`Pcg32`](crate::util::rng::Pcg32) stream seeded from
+//! [`FaultSpec::seed`], so a chaos run replays from its seed: the same
+//! decision sequence fires in the same call order.
+//!
+//! The plan is carried as an `Option<Arc<FaultPlan>>` on
+//! [`RouterConfig`](crate::coordinator::RouterConfig); when `None`
+//! (the default, and the only state production configs should ship)
+//! every seam is a skipped `if let` — zero work, zero allocation. When
+//! armed, each seam draws from the shared stream and counts what it
+//! injected, so a soak can assert "everything the plan fired was
+//! observed downstream" ([`FaultPlan::counts`]).
+//!
+//! The CLI exposes this as `pqs serve-http --fault-seed N
+//! --fault-spec "load_error=0.5,panic_every=100,..."` (see
+//! [`FaultSpec::parse`]); `rust/tests/chaos.rs` is the canonical
+//! consumer.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Duration;
+
+use anyhow::{bail, Result};
+
+use crate::formats::pqsw::PqswModel;
+use crate::util::rng::Pcg32;
+
+/// What a [`FaultPlan`] may inject, with what probability.
+///
+/// Probabilities are per-event in `[0, 1]`; `panic_every` is a period
+/// (every Nth forward panics, `0` = never).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct FaultSpec {
+    /// seed for the shared decision stream
+    pub seed: u64,
+    /// probability a model load fails with an injected I/O error
+    pub load_error: f64,
+    /// probability a model load sleeps `load_delay` first
+    pub slow_load: f64,
+    /// how long an injected slow load sleeps
+    pub load_delay: Duration,
+    /// probability a *successful* load comes back with one weight bit
+    /// flipped (caught by `.pqsw` checksum verification → quarantine)
+    pub corrupt: f64,
+    /// panic on every Nth engine forward (0 = never)
+    pub panic_every: u64,
+    /// probability an accepted connection is reset before being read
+    pub accept_reset: f64,
+}
+
+impl Default for FaultSpec {
+    fn default() -> FaultSpec {
+        FaultSpec {
+            seed: 0x5EED_FA17,
+            load_error: 0.0,
+            slow_load: 0.0,
+            load_delay: Duration::from_millis(10),
+            corrupt: 0.0,
+            panic_every: 0,
+            accept_reset: 0.0,
+        }
+    }
+}
+
+impl FaultSpec {
+    /// Parse a `--fault-spec` string: comma-separated `key=value` pairs.
+    ///
+    /// Keys: `seed=N`, `load_error=P`, `slow_load=P`, `load_delay_ms=N`,
+    /// `corrupt=P`, `panic_every=N`, `accept_reset=P`. Unknown keys fail
+    /// listing the supported ones (same contract as `--model` options).
+    pub fn parse(spec: &str) -> Result<FaultSpec> {
+        let mut out = FaultSpec::default();
+        for kv in spec.split(',').map(str::trim).filter(|s| !s.is_empty()) {
+            let (key, val) = kv
+                .split_once('=')
+                .ok_or_else(|| anyhow::anyhow!("fault-spec option {kv:?} is not key=value"))?;
+            let prob = |v: &str| -> Result<f64> {
+                let p: f64 = v.parse().map_err(|_| anyhow::anyhow!("bad probability {v:?}"))?;
+                if !(0.0..=1.0).contains(&p) {
+                    bail!("probability {p} outside [0, 1]");
+                }
+                Ok(p)
+            };
+            match key {
+                "seed" => out.seed = val.parse()?,
+                "load_error" => out.load_error = prob(val)?,
+                "slow_load" => out.slow_load = prob(val)?,
+                "load_delay_ms" => out.load_delay = Duration::from_millis(val.parse()?),
+                "corrupt" => out.corrupt = prob(val)?,
+                "panic_every" => out.panic_every = val.parse()?,
+                "accept_reset" => out.accept_reset = prob(val)?,
+                other => bail!(
+                    "unknown fault-spec option {other:?} (supported: seed=N, load_error=P, \
+                     slow_load=P, load_delay_ms=N, corrupt=P, panic_every=N, accept_reset=P)"
+                ),
+            }
+        }
+        Ok(out)
+    }
+
+    /// True when nothing can ever fire (the all-zero spec).
+    pub fn is_noop(&self) -> bool {
+        self.load_error == 0.0
+            && self.slow_load == 0.0
+            && self.corrupt == 0.0
+            && self.panic_every == 0
+            && self.accept_reset == 0.0
+    }
+}
+
+/// What [`FaultPlan::on_load`] decided for one load attempt.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct LoadDecision {
+    /// sleep this long before loading (injected slow disk)
+    pub delay: Option<Duration>,
+    /// fail the load with an injected I/O error
+    pub error: bool,
+    /// flip one weight bit in the loaded model (injected corruption)
+    pub corrupt: bool,
+}
+
+/// Counters of everything a plan actually injected.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct FaultCounts {
+    pub load_errors: u64,
+    pub slow_loads: u64,
+    pub corruptions: u64,
+    pub panics: u64,
+    pub resets: u64,
+}
+
+impl FaultCounts {
+    pub fn total(&self) -> u64 {
+        self.load_errors + self.slow_loads + self.corruptions + self.panics + self.resets
+    }
+}
+
+/// A live, seeded fault injector (see the module docs).
+///
+/// Thread-safe: decisions serialize on one internal RNG so the stream
+/// stays a pure function of the seed and the call sequence.
+pub struct FaultPlan {
+    spec: FaultSpec,
+    rng: Mutex<Pcg32>,
+    armed: AtomicBool,
+    forwards: AtomicU64,
+    load_errors: AtomicU64,
+    slow_loads: AtomicU64,
+    corruptions: AtomicU64,
+    panics: AtomicU64,
+    resets: AtomicU64,
+}
+
+impl FaultPlan {
+    pub fn new(spec: FaultSpec) -> FaultPlan {
+        FaultPlan {
+            rng: Mutex::new(Pcg32::new(spec.seed)),
+            spec,
+            armed: AtomicBool::new(true),
+            forwards: AtomicU64::new(0),
+            load_errors: AtomicU64::new(0),
+            slow_loads: AtomicU64::new(0),
+            corruptions: AtomicU64::new(0),
+            panics: AtomicU64::new(0),
+            resets: AtomicU64::new(0),
+        }
+    }
+
+    pub fn spec(&self) -> &FaultSpec {
+        &self.spec
+    }
+
+    /// Stop injecting (the chaos soak's "faults end, fleet must recover"
+    /// phase). Counters keep their values.
+    pub fn disarm(&self) {
+        self.armed.store(false, Ordering::SeqCst);
+    }
+
+    pub fn rearm(&self) {
+        self.armed.store(true, Ordering::SeqCst);
+    }
+
+    pub fn armed(&self) -> bool {
+        self.armed.load(Ordering::SeqCst)
+    }
+
+    /// Decide the fate of one model-load attempt. Always burns the same
+    /// three draws so the stream doesn't depend on which probabilities
+    /// are zero.
+    pub fn on_load(&self) -> LoadDecision {
+        if !self.armed() {
+            return LoadDecision::default();
+        }
+        let (u_slow, u_err, u_cor) = {
+            let mut rng = self.rng.lock().unwrap();
+            (rng.f64(), rng.f64(), rng.f64())
+        };
+        let d = LoadDecision {
+            delay: (u_slow < self.spec.slow_load).then_some(self.spec.load_delay),
+            error: u_err < self.spec.load_error,
+            corrupt: u_cor < self.spec.corrupt,
+        };
+        if d.delay.is_some() {
+            self.slow_loads.fetch_add(1, Ordering::SeqCst);
+        }
+        if d.error {
+            self.load_errors.fetch_add(1, Ordering::SeqCst);
+        }
+        if d.corrupt && !d.error {
+            self.corruptions.fetch_add(1, Ordering::SeqCst);
+        }
+        d
+    }
+
+    /// Flip one pseudo-random bit in one q-layer's weights. The model is
+    /// given fresh checksums *first* (when it carries none), so the
+    /// corruption is detectable by [`PqswModel::verify_integrity`]
+    /// exactly as post-checksum file corruption would be.
+    pub fn corrupt_model(&self, model: &mut PqswModel) {
+        if model.checksums.is_none() {
+            model.attach_checksums();
+        }
+        model.materialize(); // borrowed views are immutable shared bytes
+        let layers: Vec<usize> = model
+            .graph
+            .iter()
+            .enumerate()
+            .filter(|(_, n)| n.q.is_some())
+            .map(|(i, _)| i)
+            .collect();
+        if layers.is_empty() {
+            return;
+        }
+        let (li, byte, bit) = {
+            let mut rng = self.rng.lock().unwrap();
+            let li = layers[rng.below(layers.len() as u32) as usize];
+            let len = model.graph[li].q.as_ref().unwrap().wq.len().max(1);
+            (li, rng.below_u64(len as u64) as usize, rng.below(8) as u8)
+        };
+        let q = model.graph[li].q.as_mut().unwrap();
+        let mut w = q.wq.to_owned_vec();
+        if let Some(v) = w.get_mut(byte) {
+            *v = (*v as u8 ^ (1 << bit)) as i8;
+        }
+        q.wq = w.into();
+    }
+
+    /// Count and raise an injected engine panic when this is the Nth
+    /// forward. Call from inside the coordinator's `catch_unwind` scope.
+    pub fn before_forward(&self) {
+        if self.spec.panic_every == 0 || !self.armed() {
+            return;
+        }
+        let n = self.forwards.fetch_add(1, Ordering::SeqCst) + 1;
+        if n % self.spec.panic_every == 0 {
+            self.panics.fetch_add(1, Ordering::SeqCst);
+            panic!("injected fault: engine panic on forward #{n}");
+        }
+    }
+
+    /// Should this freshly accepted connection be reset before reading?
+    pub fn reset_accept(&self) -> bool {
+        if self.spec.accept_reset == 0.0 || !self.armed() {
+            return false;
+        }
+        let hit = self.rng.lock().unwrap().f64() < self.spec.accept_reset;
+        if hit {
+            self.resets.fetch_add(1, Ordering::SeqCst);
+        }
+        hit
+    }
+
+    /// Snapshot of everything injected so far.
+    pub fn counts(&self) -> FaultCounts {
+        FaultCounts {
+            load_errors: self.load_errors.load(Ordering::SeqCst),
+            slow_loads: self.slow_loads.load(Ordering::SeqCst),
+            corruptions: self.corruptions.load(Ordering::SeqCst),
+            panics: self.panics.load(Ordering::SeqCst),
+            resets: self.resets.load(Ordering::SeqCst),
+        }
+    }
+}
+
+impl std::fmt::Debug for FaultPlan {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("FaultPlan")
+            .field("spec", &self.spec)
+            .field("armed", &self.armed())
+            .field("counts", &self.counts())
+            .finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spec_parses_every_key_and_rejects_unknowns() {
+        let s = FaultSpec::parse(
+            "seed=7, load_error=0.5, slow_load=0.25, load_delay_ms=3, corrupt=0.1, \
+             panic_every=100, accept_reset=0.05",
+        )
+        .unwrap();
+        assert_eq!(s.seed, 7);
+        assert_eq!(s.load_error, 0.5);
+        assert_eq!(s.slow_load, 0.25);
+        assert_eq!(s.load_delay, Duration::from_millis(3));
+        assert_eq!(s.corrupt, 0.1);
+        assert_eq!(s.panic_every, 100);
+        assert_eq!(s.accept_reset, 0.05);
+        assert!(!s.is_noop());
+        assert!(FaultSpec::parse("").unwrap().is_noop());
+
+        let err = format!("{:#}", FaultSpec::parse("frobnicate=1").unwrap_err());
+        assert!(err.contains("frobnicate") && err.contains("panic_every"), "{err}");
+        assert!(FaultSpec::parse("load_error=1.5").is_err(), "probability range enforced");
+        assert!(FaultSpec::parse("load_error").is_err(), "key=value enforced");
+    }
+
+    #[test]
+    fn decisions_replay_from_the_seed() {
+        let spec = FaultSpec { load_error: 0.4, slow_load: 0.3, corrupt: 0.2, ..Default::default() };
+        let a = FaultPlan::new(spec);
+        let b = FaultPlan::new(spec);
+        let da: Vec<LoadDecision> = (0..256).map(|_| a.on_load()).collect();
+        let db: Vec<LoadDecision> = (0..256).map(|_| b.on_load()).collect();
+        assert_eq!(da, db, "same seed, same decision stream");
+        assert!(da.iter().any(|d| d.error) && da.iter().any(|d| !d.error));
+        assert_eq!(a.counts(), b.counts());
+        assert_eq!(a.counts().load_errors, da.iter().filter(|d| d.error).count() as u64);
+
+        let c = FaultPlan::new(FaultSpec { seed: spec.seed + 1, ..spec });
+        let dc: Vec<LoadDecision> = (0..256).map(|_| c.on_load()).collect();
+        assert_ne!(da, dc, "different seed, different stream");
+    }
+
+    #[test]
+    fn disarm_silences_every_seam() {
+        let plan = FaultPlan::new(FaultSpec {
+            load_error: 1.0,
+            slow_load: 1.0,
+            corrupt: 1.0,
+            panic_every: 1,
+            accept_reset: 1.0,
+            ..Default::default()
+        });
+        plan.disarm();
+        assert_eq!(plan.on_load(), LoadDecision::default());
+        assert!(!plan.reset_accept());
+        plan.before_forward(); // would panic if armed
+        assert_eq!(plan.counts().total(), 0);
+        plan.rearm();
+        assert!(plan.on_load().error);
+    }
+
+    #[test]
+    fn panic_every_fires_on_schedule() {
+        let plan = FaultPlan::new(FaultSpec { panic_every: 3, ..Default::default() });
+        let mut panicked = Vec::new();
+        for i in 1..=9u64 {
+            let hit = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                plan.before_forward();
+            }))
+            .is_err();
+            if hit {
+                panicked.push(i);
+            }
+        }
+        assert_eq!(panicked, vec![3, 6, 9]);
+        assert_eq!(plan.counts().panics, 3);
+    }
+
+    #[test]
+    fn corrupt_model_flips_exactly_one_bit_and_checksums_catch_it() {
+        let plan = FaultPlan::new(FaultSpec::default());
+        let pristine = crate::models::synthetic_linear(16, 4);
+        let mut model = pristine.clone();
+        plan.corrupt_model(&mut model);
+        assert!(model.checksums.is_some(), "corruption attaches pristine checksums first");
+        assert_ne!(model.content_hash(), pristine.content_hash(), "a weight changed");
+        let err = format!("{:#}", model.verify_integrity().unwrap_err());
+        assert!(err.contains("checksum mismatch"), "{err}");
+    }
+}

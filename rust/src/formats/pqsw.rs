@@ -11,9 +11,21 @@
 //! model; an **unknown** tag fails the load with an error naming the tag
 //! and the file's format version, so future format evolutions fail
 //! diagnosably instead of being silently dropped. Version-1 files (no
-//! sections) load exactly as before. The only tag this build understands
-//! is `"plan"` — a per-layer accumulator-bitwidth plan
-//! ([`crate::plan::AccumPlan`]) that `nn::Engine` applies automatically.
+//! sections) load exactly as before. This build understands two tags:
+//! `"plan"` — a per-layer accumulator-bitwidth plan
+//! ([`crate::plan::AccumPlan`]) that `nn::Engine` applies automatically —
+//! and `"checksums"` — per-q-layer FNV-1a digests of the weight+bias
+//! bytes, verified on **both** the lazy and eager load paths so a
+//! corrupted file surfaces as a diagnosable [`verify_integrity`]
+//! error (which the fleet router turns into a quarantine), never as a
+//! panic and never as silently wrong logits. Integrity errors carry the
+//! [`INTEGRITY_MARKER`] context so callers can classify them without
+//! downcasting ([`is_integrity_error`]); `save` refreshes the digests
+//! from the bytes it writes whenever it emits a version-2 header, and
+//! plan-free checksum-free models still serialize as version-1 files,
+//! byte-identical to python exports.
+//!
+//! [`verify_integrity`]: PqswModel::verify_integrity
 //!
 //! ### Zero-copy loading
 //! [`PqswModel::load`] keeps the raw file bytes alive as one shared
@@ -43,7 +55,21 @@ pub const MAGIC: &[u8; 8] = b"PQSW1\x00\x00\x00";
 pub const FORMAT_VERSION: i64 = 2;
 
 /// Section tags this build can parse.
-pub const KNOWN_SECTION_TAGS: &[&str] = &["plan"];
+pub const KNOWN_SECTION_TAGS: &[&str] = &["plan", "checksums"];
+
+/// The only checksum algorithm this build writes or verifies.
+pub const CHECKSUM_ALGO: &str = "fnv1a64";
+
+/// Context marker every integrity-failure error carries (the vendored
+/// `anyhow` shim has no downcasting, so classification is by marker).
+pub const INTEGRITY_MARKER: &str = "model integrity";
+
+/// Does this error chain contain an integrity failure (checksum
+/// mismatch, plan/shape inconsistency)? The fleet router quarantines on
+/// these instead of retrying: the bytes are bad, not the I/O.
+pub fn is_integrity_error(e: &anyhow::Error) -> bool {
+    e.chain().any(|m| m.contains(INTEGRITY_MARKER))
+}
 
 /// Graph operation kinds (mirrors the python IR).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -269,6 +295,11 @@ pub struct PqswModel {
     /// `"plan"` section; `None` for plan-free files). `nn::Engine` applies
     /// it automatically on construction.
     pub plan: Option<AccumPlan>,
+    /// Per-q-layer FNV-1a weight digests (format-version-2 `"checksums"`
+    /// section, graph order; `None` for files without one). Verified
+    /// against the decoded layers on load and by
+    /// [`PqswModel::verify_integrity`].
+    pub checksums: Option<Vec<u64>>,
 }
 
 struct Blob {
@@ -302,7 +333,12 @@ impl PqswModel {
             bail!("bad PQSW magic in {path:?}");
         }
         let hlen = u32::from_le_bytes(raw[8..12].try_into().unwrap()) as usize;
-        let hdr_txt = std::str::from_utf8(&raw[12..12 + hlen]).context("header utf8")?;
+        // a truncated file (or a corrupted length field) must surface as
+        // an error, never a slice panic
+        let hdr = raw.get(12..12 + hlen).ok_or_else(|| {
+            anyhow!("header length {hlen} overruns the {}-byte file {path:?}", raw.len())
+        })?;
+        let hdr_txt = std::str::from_utf8(hdr).context("header utf8")?;
         let h = Json::parse(hdr_txt).context("header json")?;
         let blob_base = (12 + hlen + 7) & !7;
 
@@ -323,8 +359,11 @@ impl PqswModel {
         // absolute (offset, len) of blob i, bounds-checked against the file
         let blob_span = |i: usize| -> Result<(usize, usize)> {
             let b = blobs.get(i).ok_or_else(|| anyhow!("blob index {i}"))?;
-            let a = blob_base + b.offset;
-            if raw.get(a..a + b.len).is_none() {
+            // header-supplied offsets/lengths are untrusted: checked
+            // arithmetic so corrupt values error instead of overflowing
+            let a = blob_base.checked_add(b.offset).ok_or_else(|| anyhow!("blob {i} offset"))?;
+            let end = a.checked_add(b.len).ok_or_else(|| anyhow!("blob {i} out of bounds"))?;
+            if raw.get(a..end).is_none() {
                 bail!("blob {i} out of bounds");
             }
             Ok((a, b.len))
@@ -363,9 +402,16 @@ impl PqswModel {
                     .chunks_exact(4)
                     .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
                     .collect();
-                let k = if op == Op::QDwConv { kh * kw } else { ic * kh * kw };
-                if wq.len() != oc * k {
-                    bail!("weight blob size {} != oc*k {}", wq.len(), oc * k);
+                let k = if op == Op::QDwConv {
+                    kh.checked_mul(kw)
+                } else {
+                    ic.checked_mul(kh).and_then(|v| v.checked_mul(kw))
+                }
+                .ok_or_else(|| anyhow!("layer {id}: shape overflow"))?;
+                let expect =
+                    oc.checked_mul(k).ok_or_else(|| anyhow!("layer {id}: shape overflow"))?;
+                if wq.len() != expect {
+                    bail!("weight blob size {} != oc*k {expect}", wq.len());
                 }
                 if bias.len() != oc {
                     bail!("bias blob size {} != oc {}", bias.len(), oc);
@@ -398,6 +444,7 @@ impl PqswModel {
         // never as silently dropped data.
         let format_version = h.get("format_version").and_then(Json::as_i64).unwrap_or(1);
         let mut plan = None;
+        let mut checksums = None;
         if let Some(sections) = h.get("sections").and_then(Json::as_arr) {
             for sec in sections {
                 match sec.get("tag").and_then(Json::as_str) {
@@ -405,6 +452,15 @@ impl PqswModel {
                         plan = Some(AccumPlan::from_json(sec).with_context(|| {
                             format!(
                                 "parsing the plan section of {:?} (format version \
+                                 {format_version})",
+                                path.as_ref()
+                            )
+                        })?);
+                    }
+                    Some("checksums") => {
+                        checksums = Some(parse_checksums_section(sec).with_context(|| {
+                            format!(
+                                "parsing the checksums section of {:?} (format version \
                                  {format_version})",
                                 path.as_ref()
                             )
@@ -425,7 +481,7 @@ impl PqswModel {
         }
 
         let gets = |k: &str| h.get(k).and_then(Json::as_str).unwrap_or("").to_string();
-        Ok(PqswModel {
+        let model = PqswModel {
             name: gets("name"),
             arch: gets("arch"),
             schedule: gets("schedule"),
@@ -448,7 +504,15 @@ impl PqswModel {
                 .unwrap_or_default(),
             graph,
             plan,
-        })
+            checksums,
+        };
+        // End-to-end integrity: both the lazy and the eager path funnel
+        // through here, so a checksum-carrying file is always verified
+        // against its decoded layers before anyone can run it.
+        model
+            .verify_integrity()
+            .with_context(|| format!("verifying model {path:?}"))?;
+        Ok(model)
     }
 
     /// Write the model as a `.pqsw` file the loader (and the python
@@ -528,9 +592,16 @@ impl PqswModel {
         );
         header.insert("graph".into(), Json::Arr(graph_rows));
         header.insert("blobs".into(), Json::Arr(blobs_meta));
-        if let Some(plan) = &self.plan {
+        if self.plan.is_some() || self.checksums.is_some() {
+            let mut sections = Vec::new();
+            if let Some(plan) = &self.plan {
+                sections.push(plan.to_json());
+            }
+            // checksums are a property of the bytes being written, so a
+            // version-2 save always refreshes them from the live weights
+            sections.push(checksums_section(&self.layer_checksums()));
             header.insert("format_version".into(), json::num(FORMAT_VERSION as f64));
-            header.insert("sections".into(), Json::Arr(vec![plan.to_json()]));
+            header.insert("sections".into(), Json::Arr(sections));
         }
         let hdr = Json::Obj(header).to_string().into_bytes();
 
@@ -550,6 +621,59 @@ impl PqswModel {
     /// All quantized layers in graph order.
     pub fn q_layers(&self) -> impl Iterator<Item = (&GraphNode, &QLayerMeta)> {
         self.graph.iter().filter_map(|n| n.q.as_ref().map(|q| (n, q)))
+    }
+
+    /// Fresh per-q-layer digests (graph order) of the live bytes — the
+    /// unit the `"checksums"` section stores.
+    pub fn layer_checksums(&self) -> Vec<u64> {
+        self.q_layers().map(|(_, q)| layer_checksum(q)).collect()
+    }
+
+    /// Stamp the model with digests of its current bytes, upgrading the
+    /// next [`PqswModel::save`] to a checksum-carrying version-2 file.
+    pub fn attach_checksums(&mut self) {
+        self.checksums = Some(self.layer_checksums());
+    }
+
+    /// Cross-check the model against its own metadata: every embedded
+    /// checksum must match the live layer bytes, and an embedded plan may
+    /// only reference layers the graph actually has. Failures carry
+    /// [`INTEGRITY_MARKER`] (classify with [`is_integrity_error`]); a
+    /// model without checksums or plan trivially passes. The fleet
+    /// router quarantines a model on any error from here — retrying
+    /// cannot fix bad bytes.
+    pub fn verify_integrity(&self) -> Result<()> {
+        if let Some(plan) = &self.plan {
+            for lp in &plan.per_layer {
+                if !self.q_layers().any(|(_, q)| q.name == lp.name) {
+                    bail!(
+                        "{INTEGRITY_MARKER}: plan references layer {:?} but the graph has no \
+                         such q-layer",
+                        lp.name
+                    );
+                }
+            }
+        }
+        if let Some(sums) = &self.checksums {
+            let n = self.q_layers().count();
+            if sums.len() != n {
+                bail!(
+                    "{INTEGRITY_MARKER}: header carries {} checksums for {n} q-layers",
+                    sums.len()
+                );
+            }
+            for (i, ((_, q), &want)) in self.q_layers().zip(sums.iter()).enumerate() {
+                let got = layer_checksum(q);
+                if got != want {
+                    bail!(
+                        "{INTEGRITY_MARKER}: checksum mismatch on q-layer {i} ({:?}): computed \
+                         {got:016x}, header says {want:016x}",
+                        q.name
+                    );
+                }
+            }
+        }
+        Ok(())
     }
 
     /// Total / nonzero weight counts over prunable layers.
@@ -649,6 +773,50 @@ impl PqswModel {
     }
 }
 
+/// FNV-1a digest of one q-layer's shape + weights + bias (the per-layer
+/// slice of [`PqswModel::content_hash`]; `python/compile/pqsw.py`
+/// computes the identical value when exporting).
+fn layer_checksum(q: &QLayerMeta) -> u64 {
+    let mut h = Fnv1a::new();
+    h.write(&(q.oc as u64).to_le_bytes());
+    h.write(&(q.k as u64).to_le_bytes());
+    let w = q.wq.as_slice();
+    // SAFETY: i8 and u8 have identical size, alignment, validity.
+    let bytes = unsafe { std::slice::from_raw_parts(w.as_ptr() as *const u8, w.len()) };
+    h.write(bytes);
+    for b in &q.bias {
+        h.write(&b.to_le_bytes());
+    }
+    h.finish()
+}
+
+/// The `"checksums"` section object for a header's `sections` array.
+fn checksums_section(sums: &[u64]) -> Json {
+    json::obj(vec![
+        ("tag", json::s("checksums")),
+        ("algo", json::s(CHECKSUM_ALGO)),
+        // hex strings: JSON numbers travel as f64 and would round 64-bit
+        // hashes above 2^53
+        ("layers", Json::Arr(sums.iter().map(|s| json::s(&format!("{s:016x}"))).collect())),
+    ])
+}
+
+fn parse_checksums_section(sec: &Json) -> Result<Vec<u64>> {
+    let algo = sec.get("algo").and_then(Json::as_str).unwrap_or("");
+    if algo != CHECKSUM_ALGO {
+        bail!("unknown checksum algorithm {algo:?} (this build understands: {CHECKSUM_ALGO})");
+    }
+    sec.get("layers")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| anyhow!("checksums section missing its layers array"))?
+        .iter()
+        .map(|v| {
+            let s = v.as_str().ok_or_else(|| anyhow!("checksum is not a hex string"))?;
+            u64::from_str_radix(s, 16).map_err(|_| anyhow!("bad checksum hex {s:?}"))
+        })
+        .collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -659,6 +827,30 @@ mod tests {
         assert!(Op::from_str("conv3d").is_err());
         assert!(Op::QLinear.is_q_layer());
         assert!(!Op::Relu.is_q_layer());
+    }
+
+    #[test]
+    fn layer_checksum_matches_the_python_exporter() {
+        // Known-answer vector shared with python/compile/pqsw.py
+        // (_layer_checksum): oc=2, k=2, wq=[[1,-2],[3,4]], bias=[0.5,-1.25].
+        // If either side changes its byte stream, this pin catches it.
+        let q = QLayerMeta {
+            name: "kat".into(),
+            oc: 2,
+            ic: 2,
+            kh: 1,
+            kw: 1,
+            stride: 1,
+            pad: 0,
+            prune: false,
+            w_scale: 1.0,
+            x_scale: 1.0,
+            x_offset: 0,
+            wq: Weights::Owned(vec![1, -2, 3, 4]),
+            k: 2,
+            bias: vec![0.5, -1.25],
+        };
+        assert_eq!(layer_checksum(&q), 0xf5235afad1153101);
     }
 
     // Full-file parsing is covered by integration tests against real
@@ -833,5 +1025,59 @@ mod tests {
         let a = std::fs::read(&p0).unwrap();
         let b = std::fs::read(&p1).unwrap();
         assert_eq!(a, b, "plan-free lazy round-trip is byte-identical");
+    }
+
+    #[test]
+    fn checksums_round_trip_and_catch_tampering() {
+        let dir = std::env::temp_dir().join("pqs_test_pqsw_checksums");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("summed.pqsw");
+        let mut model = crate::models::synthetic_conv(2, 6, 6, 4, 10);
+        model.attach_checksums();
+        model.save(&p).unwrap();
+
+        // both load paths verify and keep the section
+        let lazy = PqswModel::load(&p).unwrap();
+        let eager = PqswModel::load_eager(&p).unwrap();
+        assert_eq!(lazy.checksums, Some(model.layer_checksums()));
+        assert_eq!(lazy.checksums, eager.checksums);
+        lazy.verify_integrity().unwrap();
+
+        // flip one bit inside the first weight blob: the load must fail
+        // with a diagnosable integrity error, not wrong logits
+        let raw = std::fs::read(&p).unwrap();
+        let hlen = u32::from_le_bytes(raw[8..12].try_into().unwrap()) as usize;
+        let blob_base = (12 + hlen + 7) & !7;
+        let bp = dir.join("flipped.pqsw");
+        let mut bad = raw.clone();
+        bad[blob_base] ^= 0x10;
+        std::fs::write(&bp, &bad).unwrap();
+        let e = PqswModel::load(&bp).unwrap_err();
+        assert!(is_integrity_error(&e), "classified as integrity: {e:#}");
+        assert!(format!("{e:#}").contains("checksum mismatch"), "{e:#}");
+        let e = PqswModel::load_eager(&bp).unwrap_err();
+        assert!(is_integrity_error(&e), "eager path verifies too: {e:#}");
+
+        // planned saves get checksums refreshed automatically
+        let mut planned = crate::models::synthetic_linear(16, 4);
+        planned.plan = Some(
+            crate::plan::plan_model(&planned, &crate::plan::PlannerConfig::default()).unwrap(),
+        );
+        let p2 = dir.join("planned.pqsw");
+        planned.save(&p2).unwrap();
+        let back = PqswModel::load(&p2).unwrap();
+        assert_eq!(back.checksums, Some(planned.layer_checksums()));
+    }
+
+    #[test]
+    fn verify_integrity_rejects_plan_graph_mismatch() {
+        let mut model = crate::models::synthetic_linear(16, 4);
+        let mut plan =
+            crate::plan::plan_model(&model, &crate::plan::PlannerConfig::default()).unwrap();
+        plan.per_layer[0].name = "not_a_layer".into();
+        model.plan = Some(plan);
+        let e = model.verify_integrity().unwrap_err();
+        assert!(is_integrity_error(&e), "{e:#}");
+        assert!(format!("{e:#}").contains("not_a_layer"), "{e:#}");
     }
 }

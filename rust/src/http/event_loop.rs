@@ -532,6 +532,15 @@ impl Driver {
         loop {
             match listener.accept() {
                 Ok((stream, _peer)) => {
+                    // injected connection reset: drop before reading a
+                    // byte, like a peer RST between accept and first read
+                    // (counted by the fault plan, not in `accepted`)
+                    if let Some(f) = self.ctx.router.faults() {
+                        if f.reset_accept() {
+                            drop(stream);
+                            continue;
+                        }
+                    }
                     self.ctx.http.accepted.fetch_add(1, Ordering::Relaxed);
                     if self.live >= self.ctx.cfg.max_connections {
                         self.ctx.http.accepted.fetch_sub(1, Ordering::Relaxed);
@@ -745,7 +754,7 @@ impl Driver {
                         if let Some(c) = &mut self.slots[idx] {
                             c.inflight = false;
                         }
-                        let mut reply = Reply::error(503, "server busy", job.keep);
+                        let mut reply = Reply::retryable(503, "server busy", job.keep, 1);
                         reply.http11 = job.http11;
                         self.enqueue_reply(idx, reply, now);
                     } else {

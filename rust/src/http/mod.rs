@@ -147,23 +147,52 @@
 //! `models.*` sections for real tails (`count`/`mean_us`/`max_us` are
 //! exact at every level).
 //!
-//! ## `GET /healthz`
+//! Each per-model section (and each `/v1/models` row) also carries a
+//! `health` object — circuit-breaker position and self-healing counters
+//! (see below) — and the `router` section totals them as
+//! `load_retries` / `breaker_opens` / `breaker_fast_fails` /
+//! `quarantined`.
 //!
-//! `200` with `{"status":"ok"}` — liveness only.
+//! ## `GET /healthz` vs `GET /readyz`
 //!
-//! ## Status codes
+//! Two probes with different questions:
 //!
-//! | code | meaning |
-//! |------|---------|
-//! | 200  | classified / snapshot served |
-//! | 400  | malformed HTTP (bad request line, header, `Content-Length`, chunk framing, unsupported transfer coding), invalid JSON, missing/wrong-size `image`, non-string `model`, malformed `acc_bits` (non-positive, non-integer, or given together with `operating_point`), an `acc_bits` below the plan's safe minimum, or an `acc_bits` override on a plan-free model |
-//! | 404  | unknown path, or `model` names an unregistered model (body lists the registered fleet) |
-//! | 405  | wrong method on a known path (`Allow` header lists the right ones — `GET, HEAD` or `POST`) |
-//! | 408  | a partial request stalled past the keep-alive timeout, or a whole request failed to arrive within it (counted in `http.read_timeouts`) |
-//! | 413  | head, declared body, or decoded chunked body over the configured limits |
-//! | 500  | engine failure on the batch the request rode in, or a registered model's source failed to load (including a model whose measured bytes cannot fit the router's `--max-bytes` budget even on an empty fleet) |
-//! | 503  | target model's queue full, classify worker backlog full, connection backlog/`max_connections` cap hit, or shutting down |
-//! | 504  | per-request deadline expired in queue, or the response-wait backstop fired |
+//! * **`/healthz` — liveness.** "Is the process alive?" Always `200`
+//!   `{"status":"ok"}` while the front-end runs — even mid-drain, even
+//!   with every model broken. Restart-deciders point here: flapping it
+//!   on transient trouble turns a degraded fleet into a crash loop.
+//! * **`/readyz` — readiness.** "Should NEW traffic come here?" `200`
+//!   only when every gate holds, else `503` + `Retry-After: 1`; the
+//!   JSON body always reports the individual gates
+//!   (`ready`/`draining`/`default_model_ok`/`queue_len`/`queue_cap`):
+//!   1. not draining — [`HttpServer::set_draining`] (and shutdown,
+//!      which calls it first) flips this *before* any connection
+//!      closes, so a load balancer stops routing while in-flight
+//!      requests still finish;
+//!   2. the default model is serviceable — neither quarantined nor
+//!      behind an Open load circuit breaker (unloaded-but-loadable
+//!      counts as ready: the first request pays the load);
+//!   3. the default model's queue sits below a 90% high-watermark —
+//!      readiness sheds load *before* submissions start bouncing 503.
+//!
+//! ## Failure modes
+//!
+//! Every failure an operator can see on the wire, with its cause, extra
+//! headers, and the counter that records it:
+//!
+//! | code | cause | headers | counted in |
+//! |------|-------|---------|------------|
+//! | 400  | malformed HTTP (bad request line, header, `Content-Length`, chunk framing, unsupported transfer coding), invalid JSON, missing/wrong-size `image`, non-string `model`, malformed `acc_bits` (non-positive, non-integer, or given together with `operating_point`), an `acc_bits` below the plan's safe minimum, or an `acc_bits` override on a plan-free model | — | per-model `errors` (JSON-level only; protocol 400s never reach a queue) |
+//! | 404  | unknown path, or `model` names an unregistered model (body lists the registered fleet) | — | `router.unknown_model` |
+//! | 405  | wrong method on a known path | `Allow: GET, HEAD` or `Allow: POST` | — |
+//! | 408  | a partial request stalled past the keep-alive timeout, or a whole request failed to arrive within it | — | `http.read_timeouts` |
+//! | 413  | head, declared body, or decoded chunked body over the configured limits | — | — |
+//! | 500  | engine failure on the batch the request rode in — including a **worker panic**, which is caught per batch (`catch_unwind`): every rider is answered, the engine is rebuilt, the worker survives — or a registered model's load failed (missing file, injected fault, over the `--max-bytes` budget) | — | per-model `errors`; panics also in per-model `panics` |
+//! | 503  | **queue full** (target model's queue, classify worker backlog, connection backlog / `max_connections` cap) — transient, retry | `Retry-After: 1` | `http.shed` (connection-level) |
+//! | 503  | **breaker open**: the model's recent loads kept failing; requests fast-fail without touching the source until the backoff elapses | `Retry-After:` ceil of the remaining backoff | `router.breaker_fast_fails`, per-model `health.fast_fails` |
+//! | 503  | **quarantined**: the model failed an integrity check (checksum mismatch, plan/graph inconsistency); only an explicit reload ends it | — (no `Retry-After`: waiting cannot fix corrupt bytes) | `router.quarantined`, per-model `health` |
+//! | 503  | shutting down / draining | — | — |
+//! | 504  | per-request deadline expired in queue, or the response-wait backstop fired | `Retry-After: 1` | per-model `expired` |
 //!
 //! All error bodies are `{"error": "<message>"}`. Protocol-level errors
 //! (400/413/408) close the connection; semantic errors (404/405 and the

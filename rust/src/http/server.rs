@@ -36,8 +36,8 @@ use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use crate::coordinator::{
-    ClassifyRequest, LatencySummary, ModelStatus, RouteError, Router, RouterMetrics, ServeError,
-    ServeSummary, SubmitError,
+    ClassifyRequest, LatencySummary, ModelHealth, ModelStatus, RouteError, Router, RouterMetrics,
+    ServeError, ServeSummary, SubmitError,
 };
 use crate::plan::PlanSummary;
 use crate::util::json::{self, Json};
@@ -163,6 +163,10 @@ pub(crate) struct Ctx {
     pub(crate) next_id: AtomicU64,
     pub(crate) stop: Arc<AtomicBool>,
     pub(crate) http: HttpCounters,
+    /// readiness kill-switch: flipped (before any connection closes) by
+    /// [`HttpServer::set_draining`] / shutdown so `GET /readyz` reports
+    /// not-ready while in-flight requests still complete
+    pub(crate) draining: AtomicBool,
 }
 
 enum Backend {
@@ -198,6 +202,7 @@ impl HttpServer {
             next_id: AtomicU64::new(1),
             stop: Arc::clone(&stop),
             http: HttpCounters::default(),
+            draining: AtomicBool::new(false),
         });
 
         #[cfg(target_os = "linux")]
@@ -230,6 +235,15 @@ impl HttpServer {
                 }
                 match listener.accept() {
                     Ok((stream, _peer)) => {
+                        // injected connection reset: drop before reading a
+                        // byte, exactly like a peer RST between accept and
+                        // first read (counted by the fault plan, never here)
+                        if let Some(f) = actx.router.faults() {
+                            if f.reset_accept() {
+                                drop(stream);
+                                continue;
+                            }
+                        }
                         // counted BEFORE dispatch: a handler can finish a
                         // whole request round-trip before this thread runs
                         // again, and that response must already see itself
@@ -288,6 +302,24 @@ impl HttpServer {
         }
     }
 
+    /// The router's armed fault-injection plan, if any (`None` in
+    /// production). Lets a soak driver disarm faults or read injected
+    /// counts without keeping its own handle.
+    pub fn faults(&self) -> Option<Arc<crate::faults::FaultPlan>> {
+        self.ctx.as_ref().and_then(|c| c.router.faults().cloned())
+    }
+
+    /// Flip `GET /readyz` to not-ready WITHOUT closing anything: load
+    /// balancers see 503 and stop sending new traffic while in-flight
+    /// requests (and open keep-alive connections) keep working.
+    /// [`HttpServer::shutdown`] calls this before touching a single
+    /// connection; call it earlier yourself for a longer drain window.
+    pub fn set_draining(&self) {
+        if let Some(ctx) = &self.ctx {
+            ctx.draining.store(true, Ordering::Release);
+        }
+    }
+
     /// Stop accepting connections, drain the active backend, shut every
     /// model server down (draining their queues), and return the final
     /// report.
@@ -307,6 +339,9 @@ impl HttpServer {
     }
 
     fn stop_and_drain(&mut self) {
+        // readiness flips BEFORE any connection closes: a probe racing
+        // the shutdown sees not-ready first, closed sockets second
+        self.set_draining();
         self.stop.store(true, Ordering::Release);
         match &mut self.backend {
             Backend::Blocking { accept } => {
@@ -379,7 +414,7 @@ pub fn raise_nofile_limit(want: u64) -> u64 {
 pub(crate) fn shed_connection(mut stream: TcpStream) {
     let _ = stream.set_nonblocking(false);
     let _ = stream.set_write_timeout(Some(Duration::from_millis(50)));
-    let reply = Reply::error(503, "connection backlog full", false);
+    let reply = Reply::retryable(503, "connection backlog full", false, 1);
     let _ = stream.write_all(&encode_reply(&reply, usize::MAX));
     let _ = stream.shutdown(std::net::Shutdown::Write);
 }
@@ -488,6 +523,10 @@ pub(crate) struct Reply {
     pub(crate) status: u16,
     /// `Allow` header for 405s
     pub(crate) allow: Option<&'static str>,
+    /// `Retry-After` delta-seconds for 503/504s that are worth retrying
+    /// (full queue, Open breaker, missed deadline); `None` on errors
+    /// retrying cannot fix (quarantine, bad request)
+    pub(crate) retry_after: Option<u64>,
     /// JSON payload text (the would-be payload for HEAD)
     pub(crate) body: String,
     /// keep the connection open after this response
@@ -502,11 +541,27 @@ pub(crate) struct Reply {
 
 impl Reply {
     pub(crate) fn new(status: u16, body: String, keep: bool) -> Reply {
-        Reply { status, allow: None, body, keep, head_only: false, http11: true }
+        Reply {
+            status,
+            allow: None,
+            retry_after: None,
+            body,
+            keep,
+            head_only: false,
+            http11: true,
+        }
     }
 
     pub(crate) fn error(status: u16, message: &str, keep: bool) -> Reply {
         Reply::new(status, json::obj(vec![("error", json::s(message))]).to_string(), keep)
+    }
+
+    /// An error the client should retry `after_s` seconds later
+    /// (`Retry-After` is emitted on the wire).
+    pub(crate) fn retryable(status: u16, message: &str, keep: bool, after_s: u64) -> Reply {
+        let mut r = Reply::error(status, message, keep);
+        r.retry_after = Some(after_s.max(1));
+        r
     }
 }
 
@@ -530,6 +585,7 @@ pub(crate) fn route_fast(ctx: &Ctx, req: &Request<'_>) -> Option<Reply> {
         ("GET" | "HEAD", "/healthz") => {
             Reply::new(200, json::obj(vec![("status", json::s("ok"))]).to_string(), keep)
         }
+        ("GET" | "HEAD", "/readyz") => readyz_reply(ctx, keep),
         ("GET" | "HEAD", "/v1/metrics") => {
             Reply::new(200, metrics_json(&ctx.router.metrics(), &ctx.http.snapshot()), keep)
         }
@@ -537,7 +593,7 @@ pub(crate) fn route_fast(ctx: &Ctx, req: &Request<'_>) -> Option<Reply> {
             Reply::new(200, models_json(ctx.router.default_model(), &ctx.router.models()), keep)
         }
         ("POST", "/v1/classify") => return None,
-        (_, "/healthz") | (_, "/v1/metrics") | (_, "/v1/models") => {
+        (_, "/healthz") | (_, "/readyz") | (_, "/v1/metrics") | (_, "/v1/models") => {
             method_not_allowed("GET, HEAD", keep)
         }
         (_, "/v1/classify") => method_not_allowed("POST", keep),
@@ -547,6 +603,37 @@ pub(crate) fn route_fast(ctx: &Ctx, req: &Request<'_>) -> Option<Reply> {
     reply.head_only = req.method == "HEAD";
     reply.http11 = req.version == Version::Http11;
     Some(reply)
+}
+
+/// The `GET /readyz` answer: readiness, as distinct from `/healthz`
+/// liveness. Live = the process answers at all (always 200 while it
+/// runs). Ready = it should receive NEW traffic: not draining, default
+/// model neither quarantined nor behind an Open breaker
+/// ([`Router::ready`]), and the default queue below a 90% high
+/// watermark — readiness sheds load *before* the queue starts 503ing.
+/// Not-ready is `503` + `Retry-After: 1`; the body always carries the
+/// individual gates so an operator sees which one failed.
+fn readyz_reply(ctx: &Ctx, keep: bool) -> Reply {
+    let draining = ctx.draining.load(Ordering::Acquire) || ctx.stop.load(Ordering::Acquire);
+    let model_ok = ctx.router.ready();
+    let (qlen, qcap) = ctx.router.default_queue_depth().unwrap_or((0, 0));
+    let queue_ok = qcap == 0 || qlen * 10 < qcap * 9;
+    let ready = !draining && model_ok && queue_ok;
+    let body = json::obj(vec![
+        ("ready", Json::Bool(ready)),
+        ("draining", Json::Bool(draining)),
+        ("default_model_ok", Json::Bool(model_ok)),
+        ("queue_len", json::num(qlen as f64)),
+        ("queue_cap", json::num(qcap as f64)),
+    ])
+    .to_string();
+    if ready {
+        Reply::new(200, body, keep)
+    } else {
+        let mut r = Reply::new(503, body, keep);
+        r.retry_after = Some(1);
+        r
+    }
 }
 
 /// Full blocking dispatch of one parsed request (the fallback backend's
@@ -665,16 +752,30 @@ fn run_classify_inner(ctx: &Ctx, request: ClassifyRequest, keep: bool) -> Reply 
         Ok(p) => p,
         Err(RouteError::UnknownModel(msg)) => return Reply::error(404, &msg, keep),
         Err(RouteError::LoadFailed(msg)) => return Reply::error(500, &msg, keep),
+        Err(e @ RouteError::BreakerOpen { .. }) => {
+            // Retry-After = the breaker's remaining backoff, rounded up:
+            // a client honoring it lands just after the Half-Open probe
+            let after = match &e {
+                RouteError::BreakerOpen { retry_after, .. } => {
+                    retry_after.as_secs_f64().ceil() as u64
+                }
+                _ => 1,
+            };
+            return Reply::retryable(503, &e.to_string(), keep, after);
+        }
+        // no Retry-After: a quarantine outlives any client backoff (it
+        // ends only at an explicit operator reload)
+        Err(e @ RouteError::Quarantined { .. }) => return Reply::error(503, &e.to_string(), keep),
         Err(RouteError::Rejected(e)) => {
             // a closing server also closes the connection; a full queue is
             // transient, so the connection stays usable for a retry
             let keep = keep && !matches!(e, SubmitError::Closed(_));
-            return Reply::error(503, &RouteError::Rejected(e).to_string(), keep);
+            return Reply::retryable(503, &RouteError::Rejected(e).to_string(), keep, 1);
         }
     };
     let resp = match pending.wait_timeout(ctx.cfg.response_timeout) {
         Some(r) => r,
-        None => return Reply::error(504, "timed out waiting for the engine", keep),
+        None => return Reply::retryable(504, "timed out waiting for the engine", keep, 1),
     };
     match resp.result {
         Ok(class) => {
@@ -696,7 +797,11 @@ fn run_classify_inner(ctx: &Ctx, request: ClassifyRequest, keep: bool) -> Reply 
                 ("waited_us", json::num(waited_us as f64)),
             ])
             .to_string();
-            Reply::new(504, body, keep)
+            // retrying after the linger window is worthwhile: the queue
+            // that starved this request has (at least) batch-drained since
+            let mut r = Reply::new(504, body, keep);
+            r.retry_after = Some(1);
+            r
         }
         Err(ServeError::BadRequest(m)) => Reply::error(400, &m, keep),
         Err(ServeError::Internal(m)) => Reply::error(500, &m, keep),
@@ -750,6 +855,11 @@ pub(crate) fn encode_reply(r: &Reply, stream_threshold: usize) -> Vec<u8> {
         out.extend_from_slice(allow.as_bytes());
         out.extend_from_slice(b"\r\n");
     }
+    if let Some(after) = r.retry_after {
+        out.extend_from_slice(b"Retry-After: ");
+        out.extend_from_slice(after.to_string().as_bytes());
+        out.extend_from_slice(b"\r\n");
+    }
     out.extend_from_slice(b"\r\n");
     if r.head_only {
         return out;
@@ -794,6 +904,7 @@ fn serve_metrics_json(m: &ServeSummary) -> Json {
         ("requests", json::num(m.requests as f64)),
         ("errors", json::num(m.errors as f64)),
         ("expired", json::num(m.expired as f64)),
+        ("panics", json::num(m.panics as f64)),
         ("batches", json::num(m.batches as f64)),
         ("mean_batch", json::num(m.mean_batch)),
         ("throughput_rps", json::num(m.throughput_rps)),
@@ -801,6 +912,20 @@ fn serve_metrics_json(m: &ServeSummary) -> Json {
         ("latency", summary_json(&m.latency)),
         ("queue", summary_json(&m.queue)),
         ("compute", summary_json(&m.compute)),
+    ])
+}
+
+/// One model's self-healing state as it appears per row in
+/// `GET /v1/models` and per model section in `GET /v1/metrics`.
+fn health_json(h: &ModelHealth) -> Json {
+    json::obj(vec![
+        ("breaker", json::s(h.breaker.as_str())),
+        ("retry_after_s", json::num(h.retry_after_s)),
+        ("consecutive_failures", json::num(h.consecutive_failures as f64)),
+        ("load_retries", json::num(h.load_retries as f64)),
+        ("breaker_opens", json::num(h.breaker_opens as f64)),
+        ("fast_fails", json::num(h.fast_fails as f64)),
+        ("quarantined", h.quarantined.as_deref().map_or(Json::Null, json::s)),
     ])
 }
 
@@ -829,6 +954,7 @@ fn metrics_json(rm: &RouterMetrics, hm: &HttpMetrics) -> String {
                 obj.insert("default".into(), Json::Bool(m.default));
                 obj.insert("input_shape".into(), shape_json(&m.input_shape));
                 obj.insert("plan".into(), plan_json(&m.plan));
+                obj.insert("health".into(), health_json(&m.health));
                 (m.name.clone(), Json::Obj(obj))
             })
             .collect(),
@@ -849,6 +975,7 @@ fn metrics_json(rm: &RouterMetrics, hm: &HttpMetrics) -> String {
         ("requests", json::num(agg.requests as f64)),
         ("errors", json::num(agg.errors as f64)),
         ("expired", json::num(agg.expired as f64)),
+        ("panics", json::num(agg.panics as f64)),
         ("batches", json::num(agg.batches as f64)),
         ("mean_batch", json::num(agg.mean_batch)),
         ("throughput_rps", json::num(agg.throughput_rps)),
@@ -866,6 +993,10 @@ fn metrics_json(rm: &RouterMetrics, hm: &HttpMetrics) -> String {
                 ("resident_bytes", json::num(rm.resident_bytes as f64)),
                 ("budget", json::num(rm.budget as f64)),
                 ("dedup_hits", json::num(rm.dedup_hits as f64)),
+                ("load_retries", json::num(rm.load_retries as f64)),
+                ("breaker_opens", json::num(rm.breaker_opens as f64)),
+                ("breaker_fast_fails", json::num(rm.breaker_fast_fails as f64)),
+                ("quarantined", json::num(rm.quarantined as f64)),
                 ("load_latency", summary_json(&rm.load_latency)),
             ]),
         ),
@@ -900,6 +1031,7 @@ fn models_json(default: &str, models: &[ModelStatus]) -> String {
                     "resident_bytes",
                     m.resident_bytes.map_or(Json::Null, |b| json::num(b as f64)),
                 ),
+                ("health", health_json(&m.health)),
                 ("metrics", serve_metrics_json(&m.metrics)),
             ])
         })
@@ -972,6 +1104,16 @@ mod tests {
         assert!(head.contains(&format!("Content-Length: {}\r\n", payload.len())), "{head}");
         assert!(!head.contains("Transfer-Encoding"), "{head}");
         assert!(body_of(&bytes).is_empty(), "HEAD response must not carry a body");
+    }
+
+    #[test]
+    fn retry_after_header_emitted_and_floored_at_one_second() {
+        let r = Reply::retryable(503, "queue full", false, 2);
+        assert!(head_of(&encode_reply(&r, 1024)).contains("Retry-After: 2\r\n"));
+        let r = Reply::retryable(503, "queue full", false, 0);
+        assert!(head_of(&encode_reply(&r, 1024)).contains("Retry-After: 1\r\n"));
+        let r = Reply::error(503, "quarantined", false);
+        assert!(!head_of(&encode_reply(&r, 1024)).contains("Retry-After"), "no hint by default");
     }
 
     #[test]

@@ -21,6 +21,7 @@ pub mod benchreport;
 pub mod coordinator;
 pub mod data;
 pub mod dot;
+pub mod faults;
 pub mod figures;
 pub mod formats;
 pub mod http;

@@ -56,7 +56,12 @@
 //!        selects the connection backend (`on` = readiness-driven epoll
 //!        loop, Linux default; `off` = blocking worker pool) and
 //!        `--max-connections` caps concurrently open sockets under the
-//!        event loop (accepts past it shed with 503)
+//!        event loop (accepts past it shed with 503).
+//!        `--fault-spec "load_error=0.1,panic_every=50,..."` arms seeded
+//!        fault injection for chaos testing (`--fault-seed N` replays a
+//!        schedule); the self-healing surface — load circuit breakers,
+//!        integrity quarantine, panic isolation, `GET /readyz` — is
+//!        documented in the `pqs::http` and `pqs::faults` module docs
 //!   bench [--json PATH] [--quick] [--threads "1,2,8"]
 //!        machine-readable perf report (dot kernels, pool dispatch,
 //!        batch-1 forward scaling with bit-identity checks, HTTP serve
@@ -421,6 +426,23 @@ fn run() -> Result<()> {
                     None
                 },
             };
+            // --fault-spec "load_error=0.1,panic_every=50,..." arms seeded
+            // fault injection (chaos testing); --fault-seed N overrides
+            // the spec's seed. Production runs pass neither: the plan
+            // stays None and every seam is a skipped `if let`.
+            let faults = match (args.get("fault-spec"), args.get("fault-seed")) {
+                (None, None) => None,
+                (spec, seed) => {
+                    let mut fs = match spec {
+                        Some(s) => pqs::faults::FaultSpec::parse(s)?,
+                        None => pqs::faults::FaultSpec::default(),
+                    };
+                    if let Some(s) = seed {
+                        fs.seed = s.parse().map_err(|_| anyhow!("bad --fault-seed {s:?}"))?;
+                    }
+                    Some(std::sync::Arc::new(pqs::faults::FaultPlan::new(fs)))
+                }
+            };
             let rcfg = RouterConfig {
                 max_loaded: args.get_usize("max-loaded", 8),
                 // resident weight-byte budget for the loaded fleet
@@ -430,6 +452,8 @@ fn run() -> Result<()> {
                 server: scfg,
                 // eager hot-model loads (repeatable --preload NAME)
                 preload: args.get_all("preload").iter().map(|s| s.to_string()).collect(),
+                faults,
+                ..RouterConfig::default()
             };
             let names: Vec<&str> = registry.names().collect();
             let cap = if rcfg.max_loaded == 0 {
@@ -487,6 +511,10 @@ fn run() -> Result<()> {
             println!("  GET  /v1/models    registered models, load state, per-model metrics");
             println!("  GET  /v1/metrics   serving metrics snapshot (per-model sections)");
             println!("  GET  /healthz      liveness");
+            println!("  GET  /readyz       readiness (drain state, default model, queue)");
+            if let Some(f) = http.faults() {
+                println!("  FAULT INJECTION ARMED: {:?}", f.spec());
+            }
             let secs = args.get_f64("for-secs", 0.0);
             if secs > 0.0 {
                 std::thread::sleep(Duration::from_secs_f64(secs));

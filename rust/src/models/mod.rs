@@ -80,6 +80,7 @@ pub fn synthetic_linear(dim: usize, classes: usize) -> PqswModel {
             GraphNode { id: 2, op: Op::QLinear, inputs: vec![1], q: Some(q) },
         ],
         plan: None,
+        checksums: None,
     }
 }
 
@@ -167,6 +168,7 @@ pub fn synthetic_conv(c: usize, h: usize, w: usize, oc: usize, classes: usize) -
             GraphNode { id: 6, op: Op::QLinear, inputs: vec![5], q: Some(q_fc) },
         ],
         plan: None,
+        checksums: None,
     }
 }
 

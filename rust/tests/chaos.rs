@@ -1,0 +1,424 @@
+//! Seeded chaos soak: a three-model router behind the real HTTP
+//! front-end while a [`pqs::faults::FaultPlan`] fires — injected load
+//! delays, engine panics, and accept resets — alongside a flaky source
+//! (fails its first N loads) and a corrupt source (checksum mismatch).
+//!
+//! The soak gates the self-healing invariants end to end:
+//!
+//! * the process never dies and EVERY request gets exactly one response
+//!   (the client resends only when a connection is reset before any
+//!   response byte — injected accept resets happen at accept time,
+//!   before the request is read, so a resend never double-executes);
+//! * the flaky model drives the load circuit breaker through its full
+//!   Open (fast-fail 503 + `Retry-After`) → Half-Open (probe) → Closed
+//!   round trip and ends the soak serving 200s;
+//! * the corrupt model is quarantined on first touch (503, no
+//!   `Retry-After`) and STAYS quarantined after the faults are disarmed
+//!   — only an explicit reload ends quarantine, and waiting cannot fix
+//!   corrupt bytes;
+//! * injected engine panics answer their riders 500 and the worker
+//!   survives to serve the next request;
+//! * counts conserve: every response that reached a server is accounted
+//!   in exactly one per-model `requests` counter.
+//!
+//! Everything is seeded (`FaultSpec::seed`, the image generator) so a
+//! failure reproduces from the same build.
+
+mod common;
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::sync::atomic::{AtomicU32, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::anyhow;
+use pqs::coordinator::{
+    BreakerConfig, ModelRegistry, ModelSource, Router, RouterConfig, ServerConfig,
+};
+use pqs::faults::{FaultPlan, FaultSpec};
+use pqs::http::{HttpConfig, HttpServer};
+use pqs::util::json::Json;
+
+const DIM: usize = 16;
+const CLASSES: usize = 4;
+/// How many times the "flaky" source fails before loading cleanly. With
+/// `threshold: 2` the breaker opens after the second failure, re-opens
+/// off the failed half-open probe (the third), then closes on the next
+/// probe — the full round trip inside one soak.
+const FLAKY_FAILS: u32 = 3;
+
+// ---- chaos-tolerant raw-TCP client ----------------------------------------
+
+struct Resp {
+    status: u16,
+    headers: Vec<(String, String)>,
+    body: String,
+}
+
+impl Resp {
+    fn header(&self, name: &str) -> Option<&str> {
+        self.headers.iter().find(|(k, _)| k == name).map(|(_, v)| v.as_str())
+    }
+
+    fn closes(&self) -> bool {
+        self.header("connection").is_some_and(|v| v.eq_ignore_ascii_case("close"))
+    }
+
+    fn json(&self) -> Json {
+        Json::parse(&self.body).expect("json body")
+    }
+}
+
+/// Blocking HTTP/1.1 client that survives injected accept resets: when
+/// the connection dies before ANY response byte arrives, it reconnects
+/// and resends. Resets fire at accept time — before the server reads the
+/// request — so a resend can never execute a request twice.
+struct ChaosClient {
+    addr: SocketAddr,
+    stream: Option<TcpStream>,
+    resends: u64,
+}
+
+impl ChaosClient {
+    fn new(srv: &HttpServer) -> ChaosClient {
+        ChaosClient { addr: srv.local_addr(), stream: None, resends: 0 }
+    }
+
+    /// One request, exactly one response — retrying internally.
+    fn request(&mut self, raw: &[u8]) -> Resp {
+        for attempt in 0..200 {
+            if attempt > 0 {
+                self.resends += 1;
+                std::thread::sleep(Duration::from_millis(2));
+            }
+            if self.stream.is_none() {
+                match TcpStream::connect(self.addr) {
+                    Ok(s) => {
+                        s.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+                        s.set_nodelay(true).ok();
+                        self.stream = Some(s);
+                    }
+                    Err(_) => continue,
+                }
+            }
+            let s = self.stream.as_mut().unwrap();
+            if s.write_all(raw).is_err() {
+                self.stream = None;
+                continue;
+            }
+            match read_one_response(s) {
+                Some(resp) => {
+                    if resp.closes() {
+                        self.stream = None;
+                    }
+                    return resp;
+                }
+                None => {
+                    // connection died before a single response byte:
+                    // the request was never read — safe to resend
+                    self.stream = None;
+                }
+            }
+        }
+        panic!("no response after 200 attempts — the front-end is gone");
+    }
+
+    /// Drop the kept-alive connection so the next request re-accepts —
+    /// without this, one lucky initial accept would dodge the injected
+    /// accept resets for the entire soak.
+    fn fresh_connection(&mut self) {
+        self.stream = None;
+    }
+
+    fn post_classify(&mut self, model: &str, seed: u64) -> Resp {
+        let img = common::synth_images(1, DIM, seed);
+        let nums: Vec<String> = img.iter().map(|v| format!("{v}")).collect();
+        let body = format!("{{\"model\":\"{model}\",\"image\":[{}]}}", nums.join(","));
+        let raw = format!(
+            "POST /v1/classify HTTP/1.1\r\nHost: chaos\r\nContent-Type: application/json\r\nContent-Length: {}\r\n\r\n{body}",
+            body.len()
+        );
+        self.request(raw.as_bytes())
+    }
+
+    fn get(&mut self, path: &str) -> Resp {
+        self.request(format!("GET {path} HTTP/1.1\r\nHost: chaos\r\n\r\n").as_bytes())
+    }
+}
+
+/// `None` when the connection dies before any response byte.
+fn read_one_response(s: &mut TcpStream) -> Option<Resp> {
+    let mut buf = Vec::new();
+    let mut tmp = [0u8; 4096];
+    loop {
+        if let Some(pos) = buf.windows(4).position(|w| w == b"\r\n\r\n") {
+            let head_end = pos + 4;
+            let head = String::from_utf8(buf[..head_end].to_vec()).expect("utf8 head");
+            let status: u16 =
+                head.split(' ').nth(1).expect("status line").parse().expect("numeric status");
+            let mut headers = Vec::new();
+            for line in head.lines().skip(1) {
+                if let Some((k, v)) = line.split_once(':') {
+                    headers.push((k.trim().to_ascii_lowercase(), v.trim().to_string()));
+                }
+            }
+            let body_len: usize = headers
+                .iter()
+                .find(|(k, _)| k == "content-length")
+                .map(|(_, v)| v.parse().expect("content-length"))
+                .unwrap_or(0);
+            while buf.len() < head_end + body_len {
+                match s.read(&mut tmp) {
+                    Ok(0) => panic!("eof mid-body"),
+                    Ok(n) => buf.extend_from_slice(&tmp[..n]),
+                    Err(e) => panic!("read mid-body: {e}"),
+                }
+            }
+            let body = String::from_utf8(buf[head_end..head_end + body_len].to_vec())
+                .expect("utf8 body");
+            return Some(Resp { status, headers, body });
+        }
+        match s.read(&mut tmp) {
+            Ok(0) if buf.is_empty() => return None,
+            Ok(0) => panic!("eof mid-head"),
+            Ok(n) => buf.extend_from_slice(&tmp[..n]),
+            Err(_) if buf.is_empty() => return None,
+            Err(e) => panic!("read mid-head: {e}"),
+        }
+    }
+}
+
+// ---- fixture --------------------------------------------------------------
+
+/// good: always loads. flaky: fails its first [`FLAKY_FAILS`] loads.
+/// rotten: loads "successfully" but with a flipped weight bit under its
+/// embedded checksums — integrity verification quarantines it.
+fn chaos_registry() -> ModelRegistry {
+    let mut registry = ModelRegistry::new();
+    registry.register("good", ModelSource::Memory(common::tiny_linear_model(DIM, CLASSES)));
+    let fails = Arc::new(AtomicU32::new(0));
+    registry.register(
+        "flaky",
+        ModelSource::factory(move || {
+            if fails.fetch_add(1, Ordering::SeqCst) < FLAKY_FAILS {
+                Err(anyhow!("flaky: injected load failure"))
+            } else {
+                Ok(pqs::models::synthetic_linear(DIM, CLASSES))
+            }
+        }),
+    );
+    registry.register(
+        "rotten",
+        ModelSource::factory(|| {
+            let mut m = pqs::models::synthetic_linear(DIM, CLASSES);
+            m.attach_checksums();
+            let q = m.graph.iter_mut().find_map(|n| n.q.as_mut()).expect("a q-layer");
+            let mut w = q.wq.as_slice().to_vec();
+            w[0] ^= 1; // one flipped bit under the stamped digests
+            q.wq = w.into();
+            Ok(m)
+        }),
+    );
+    registry
+}
+
+// ---- the soak -------------------------------------------------------------
+
+#[test]
+fn chaos_soak_multi_model_router_self_heals() {
+    let plan = Arc::new(FaultPlan::new(FaultSpec {
+        seed: 0xC4A0_55EE,
+        slow_load: 1.0, // every load sleeps: breaker windows stay busy
+        load_delay: Duration::from_millis(2),
+        panic_every: 7,
+        accept_reset: 0.25,
+        ..Default::default()
+    }));
+    let rcfg = RouterConfig {
+        max_loaded: 0,
+        max_bytes: 0,
+        engine: Default::default(),
+        server: ServerConfig {
+            threads: 2,
+            max_batch: 4,
+            queue_cap: 64,
+            linger: Duration::from_micros(50),
+            engine_threads: 1,
+            default_deadline: None,
+        },
+        preload: Vec::new(),
+        breaker: BreakerConfig {
+            threshold: 2,
+            base_backoff: Duration::from_millis(30),
+            max_backoff: Duration::from_millis(120),
+            ..Default::default()
+        },
+        faults: Some(Arc::clone(&plan)),
+    };
+    let router = Router::new(chaos_registry(), rcfg).expect("registry is non-empty");
+    let http = HttpServer::start(
+        router,
+        "127.0.0.1:0",
+        HttpConfig { keep_alive_timeout: Duration::from_secs(5), ..HttpConfig::default() },
+    )
+    .expect("bind loopback");
+    let mut client = ChaosClient::new(&http);
+
+    let (mut sent, mut answered) = (0u64, 0u64);
+    let (mut ok_200, mut panic_500, mut load_500) = (0u64, 0u64, 0u64);
+    let (mut breaker_503, mut rotten_503) = (0u64, 0u64);
+
+    for round in 0..40u64 {
+        client.fresh_connection(); // re-accept: give the reset fault a shot
+        for model in ["good", "flaky", "rotten"] {
+            sent += 1;
+            let r = client.post_classify(model, round);
+            answered += 1;
+            match (model, r.status) {
+                (_, 200) => {
+                    ok_200 += 1;
+                    assert!(
+                        r.json().get("class").and_then(Json::as_usize).is_some(),
+                        "200 carries a class: {}",
+                        r.body
+                    );
+                }
+                (_, 500) if r.body.contains("panicked") => panic_500 += 1,
+                ("flaky", 500) => {
+                    assert!(r.body.contains("flaky"), "names the failed load: {}", r.body);
+                    load_500 += 1;
+                }
+                ("flaky", 503) => {
+                    assert!(
+                        r.body.contains("circuit breaker"),
+                        "flaky 503s come from the breaker: {}",
+                        r.body
+                    );
+                    assert!(
+                        r.header("retry-after").is_some(),
+                        "breaker-open 503 carries Retry-After"
+                    );
+                    breaker_503 += 1;
+                }
+                ("rotten", 503) => {
+                    assert!(r.body.contains("quarantined"), "body: {}", r.body);
+                    assert!(
+                        r.header("retry-after").is_none(),
+                        "waiting cannot fix corrupt bytes: no Retry-After"
+                    );
+                    rotten_503 += 1;
+                }
+                (m, s) => panic!("unexpected {s} from {m}: {}", r.body),
+            }
+        }
+        std::thread::sleep(Duration::from_millis(3));
+    }
+
+    // every request answered exactly once, and every phase of the chaos
+    // actually fired under this seed
+    assert_eq!(sent, answered, "exactly one response per request");
+    assert_eq!(rotten_503, 40, "the corrupt model never serves");
+    assert!(breaker_503 >= 1, "the breaker opened and fast-failed");
+    assert!(load_500 >= 2, "the flaky loads surfaced as 500s");
+    assert!(panic_500 >= 1, "injected engine panics answered their riders 500");
+    assert!(ok_200 >= 40, "the healthy model kept serving through the chaos");
+    let counts = plan.counts();
+    assert!(counts.panics >= 1 && counts.slow_loads >= 1, "injected: {counts:?}");
+
+    // disarm: the fleet must return to fully healthy — except quarantine,
+    // which no amount of waiting may clear
+    plan.disarm();
+    let mut recovered = false;
+    for seed in 0..200u64 {
+        let r = client.post_classify("flaky", seed);
+        sent += 1;
+        answered += 1;
+        match r.status {
+            200 => {
+                ok_200 += 1;
+                recovered = true;
+            }
+            503 => breaker_503 += 1, // backoff from the last armed failure
+            // a leftover injected failure: the source fails a fixed number
+            // of loads, and the last may land after disarm
+            500 => load_500 += 1,
+            other => panic!("recovery: unexpected {other}: {}", r.body),
+        }
+        if recovered {
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    assert!(recovered, "flaky model serves after faults are disarmed");
+    for seed in 0..5u64 {
+        let r = client.post_classify("good", seed);
+        sent += 1;
+        answered += 1;
+        assert_eq!(r.status, 200, "no faults, no failures: {}", r.body);
+        ok_200 += 1;
+        let r = client.post_classify("rotten", seed);
+        sent += 1;
+        answered += 1;
+        assert_eq!(r.status, 503, "quarantine survives disarm");
+        rotten_503 += 1;
+        assert!(r.body.contains("quarantined"), "body: {}", r.body);
+    }
+
+    // the control plane agrees with what the wire saw
+    let ready = client.get("/readyz");
+    assert_eq!(ready.status, 200, "default model healthy => ready: {}", ready.body);
+    let models = client.get("/v1/models").json();
+    let rotten_health = models
+        .get("models")
+        .and_then(Json::as_arr)
+        .and_then(|rows| {
+            rows.iter().find(|r| r.get("name").and_then(Json::as_str) == Some("rotten"))
+        })
+        .and_then(|r| r.get("health"))
+        .expect("rotten row carries health")
+        .clone();
+    assert!(
+        rotten_health.get("quarantined").and_then(Json::as_str).is_some(),
+        "quarantine reason on the wire: {rotten_health:?}"
+    );
+    let metrics = client.get("/v1/metrics").json();
+    let router_sec = metrics.get("router").expect("router section");
+    assert_eq!(router_sec.get("quarantined").and_then(Json::as_usize), Some(1));
+    assert!(router_sec.get("breaker_opens").and_then(Json::as_usize).unwrap_or(0) >= 1);
+    assert_eq!(
+        router_sec.get("breaker_fast_fails").and_then(Json::as_usize),
+        Some((breaker_503 + rotten_503 - 1) as usize),
+        "every fast-fail 503 counted (the first rotten hit is a load, not a fast-fail)"
+    );
+    let flaky_health = metrics
+        .get("models")
+        .and_then(|m| m.get("flaky"))
+        .and_then(|m| m.get("health"))
+        .expect("flaky health section")
+        .clone();
+    assert_eq!(
+        flaky_health.get("breaker").and_then(Json::as_str),
+        Some("closed"),
+        "round trip complete: {flaky_health:?}"
+    );
+    assert!(metrics.get("panics").and_then(Json::as_usize).unwrap_or(0) >= 1);
+
+    // conservation: every response that reached a server is accounted in
+    // exactly one per-model requests counter (200s + panic-500s; load
+    // failures and fast-fails never touch a server)
+    let served: usize = ["good", "flaky"]
+        .iter()
+        .filter_map(|n| {
+            metrics.get("models").and_then(|m| m.get(n)).and_then(|m| m.get("requests"))
+        })
+        .filter_map(|v| v.as_usize())
+        .sum();
+    assert_eq!(served as u64, ok_200 + panic_500, "server-side requests conserve");
+
+    let report = http.shutdown();
+    assert_eq!(report.router.quarantined, 1);
+    assert!(report.router.breaker_opens >= 1);
+    assert!(counts.resets >= 1, "accept resets fired under this seed: {counts:?}");
+    assert!(client.resends >= counts.resets, "every reset forced a resend");
+}

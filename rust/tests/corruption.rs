@@ -1,0 +1,192 @@
+//! Corruption corpus over the `.pqsw` loader: ~1k seeded bit-flips and
+//! truncations of a saved model, every one of which must come back as a
+//! clean `Err` (quarantine material) — never a panic, and never a
+//! "successful" load whose weights differ from what was written.
+//!
+//! The checksummed corpus is the integrity contract: a file that loads
+//! AND verifies must carry byte-identical q-layer digests. The
+//! version-1 corpus (no checksums) only pins panic-freedom — without
+//! digests a flipped weight bit is undetectable by design, which is
+//! exactly why the exporters now write the checksums section.
+
+mod common;
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::path::PathBuf;
+
+use pqs::formats::pqsw::PqswModel;
+use pqs::util::prop;
+use pqs::util::rng::Pcg32;
+
+/// One seeded mutation of the pristine byte image.
+#[derive(Debug)]
+enum Mutation {
+    /// flip these bit positions (bit i = byte i/8, bit i%8)
+    FlipBits(Vec<usize>),
+    /// keep only the first n bytes
+    Truncate(usize),
+    /// zero a run of bytes at (start, len)
+    ZeroRun(usize, usize),
+}
+
+impl Mutation {
+    fn gen(rng: &mut Pcg32, len: usize) -> Mutation {
+        match rng.below(4) {
+            0 => Mutation::FlipBits(vec![rng.below((len * 8) as u32) as usize]),
+            1 => {
+                let n = 1 + rng.below(8) as usize;
+                Mutation::FlipBits(
+                    (0..n).map(|_| rng.below((len * 8) as u32) as usize).collect(),
+                )
+            }
+            2 => Mutation::Truncate(rng.below(len as u32) as usize),
+            _ => {
+                let start = rng.below(len as u32) as usize;
+                let run = 1 + rng.below(32) as usize;
+                Mutation::ZeroRun(start, run.min(len - start))
+            }
+        }
+    }
+
+    fn apply(&self, pristine: &[u8]) -> Vec<u8> {
+        let mut bytes = pristine.to_vec();
+        match self {
+            Mutation::FlipBits(bits) => {
+                for &b in bits {
+                    bytes[b / 8] ^= 1 << (b % 8);
+                }
+            }
+            Mutation::Truncate(n) => bytes.truncate(*n),
+            Mutation::ZeroRun(start, run) => {
+                for b in &mut bytes[*start..*start + *run] {
+                    *b = 0;
+                }
+            }
+        }
+        bytes
+    }
+}
+
+fn corpus_dir() -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("pqs_corruption_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).expect("corpus dir");
+    dir
+}
+
+/// The shared property: write the mutated bytes, load under
+/// `catch_unwind`, and demand Err-or-faithful. `pristine_sums` is
+/// `Some(layer digests)` for the checksummed corpus — a load that
+/// succeeds there must reproduce the exact weights it was saved with.
+fn check_mutation(
+    path: &std::path::Path,
+    pristine: &[u8],
+    pristine_sums: Option<&[u64]>,
+    m: &Mutation,
+) -> Result<(), String> {
+    let bytes = m.apply(pristine);
+    std::fs::write(path, &bytes).map_err(|e| format!("writing corpus file: {e}"))?;
+    for eager in [false, true] {
+        let outcome = catch_unwind(AssertUnwindSafe(|| {
+            if eager {
+                PqswModel::load_eager(path)
+            } else {
+                PqswModel::load(path)
+            }
+        }));
+        let loaded = match outcome {
+            Ok(r) => r,
+            Err(_) => return Err(format!("loader PANICKED (eager={eager})")),
+        };
+        if let Ok(model) = loaded {
+            // the mutation may have missed anything load-bearing (padding,
+            // a metadata string) — but if checksums were written, a load
+            // that passed them must hold the exact original weights
+            if let Some(sums) = pristine_sums {
+                if model.layer_checksums() != sums {
+                    return Err(format!(
+                        "accepted altered weights (eager={eager}): a verified load must \
+                         be byte-faithful"
+                    ));
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+#[test]
+fn checksummed_corpus_errs_or_stays_faithful_never_panics() {
+    let dir = corpus_dir();
+    let path = dir.join("checksummed.pqsw");
+    let mut model = pqs::models::synthetic_conv(2, 6, 6, 4, 10);
+    model.attach_checksums();
+    model.save(&path).expect("save pristine");
+    let pristine = std::fs::read(&path).expect("read pristine back");
+    let sums = model.layer_checksums();
+    // the pristine image itself must round-trip before we corrupt it
+    assert_eq!(PqswModel::load(&path).expect("pristine loads").layer_checksums(), sums);
+
+    prop::check(
+        "pqsw-corruption-checksummed",
+        768,
+        |rng| Mutation::gen(rng, pristine.len()),
+        |m| check_mutation(&path, &pristine, Some(&sums), m),
+    );
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn version1_corpus_never_panics() {
+    // no checksums: silent weight damage is undetectable by design, but
+    // the loader must still never panic on arbitrary damage
+    let dir = corpus_dir();
+    let path = dir.join("v1.pqsw");
+    let model = pqs::models::synthetic_conv(2, 6, 6, 4, 10);
+    model.save(&path).expect("save pristine");
+    let pristine = std::fs::read(&path).expect("read pristine back");
+
+    prop::check(
+        "pqsw-corruption-v1",
+        256,
+        |rng| Mutation::gen(rng, pristine.len()),
+        |m| check_mutation(&path, &pristine, None, m),
+    );
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn every_single_weight_bit_flip_is_caught() {
+    // exhaustive over the weight blob of a tiny checksummed model: flip
+    // each bit of each weight byte in place — the loader must reject
+    // every single one (this is the integrity guarantee quarantine
+    // relies on, so it gets the exhaustive treatment, not sampling)
+    let dir = corpus_dir();
+    let path = dir.join("weights.pqsw");
+    let mut model = pqs::models::synthetic_linear(8, 3);
+    model.attach_checksums();
+    model.save(&path).expect("save pristine");
+    let pristine = std::fs::read(&path).expect("read pristine back");
+
+    // locate the weight bytes: the first blob starts at the 8-aligned
+    // end of the 12-byte magic+length prefix plus the JSON header
+    let hlen = u32::from_le_bytes(pristine[8..12].try_into().unwrap()) as usize;
+    let blob_base = (12 + hlen + 7) & !7;
+    let wq_len = 8 * 3; // dim * classes int8 weights, the first blob
+    assert!(blob_base + wq_len <= pristine.len());
+
+    for byte in blob_base..blob_base + wq_len {
+        for bit in 0..8 {
+            let mut bytes = pristine.clone();
+            bytes[byte] ^= 1 << bit;
+            std::fs::write(&path, &bytes).expect("write corpus file");
+            let err = PqswModel::load(&path).expect_err("flipped weight bit must not load");
+            let msg = format!("{err:#}");
+            assert!(
+                pqs::formats::pqsw::is_integrity_error(&err),
+                "classified as integrity damage: {msg}"
+            );
+            assert!(msg.contains("checksum mismatch"), "names the failure: {msg}");
+        }
+    }
+    std::fs::remove_file(&path).ok();
+}

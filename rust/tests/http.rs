@@ -13,6 +13,11 @@
 //! malformed), the fleet-memory counters on the wire, and the front-end's
 //! own `http` counters.
 //!
+//! Self-healing on the wire: `GET /readyz` (readiness gates, the drain
+//! flip, HEAD mirror, 405 + `Allow`), `Retry-After` on breaker-open 503s
+//! and expired 504s but never on quarantine 503s, and breaker/quarantine
+//! health riding the `GET /v1/models` fleet rows.
+//!
 //! On Linux the suite runs against the epoll event loop (the default
 //! backend); backend-sensitive cases — HEAD-mirrors-GET, chunked response
 //! framing, mid-pipeline `Connection: close` ordering — additionally run
@@ -95,6 +100,7 @@ fn start_http_multi_with(cfg: HttpConfig) -> HttpServer {
         engine: EngineConfig::default(),
         server: scfg(),
         preload: Vec::new(),
+        ..Default::default()
     };
     let router = Router::new(registry, rcfg).expect("registry is non-empty");
     HttpServer::start(router, "127.0.0.1:0", cfg).expect("bind loopback")
@@ -532,6 +538,8 @@ fn expired_deadline_maps_to_504_and_counts() {
     let r = c.read_response();
     assert_eq!(r.status, 504, "body: {}", r.body);
     assert!(r.body.contains("deadline"), "body: {}", r.body);
+    // a queue-starved request is worth retrying after the linger window
+    assert_eq!(r.header("retry-after"), Some("1"));
     // the expired counter is visible both in-process and over the wire
     assert_eq!(http.metrics().aggregate().expired, 1);
     c.send(b"GET /v1/metrics HTTP/1.1\r\n\r\n");
@@ -746,6 +754,7 @@ fn models_endpoint_reports_the_embedded_plan() {
         engine: EngineConfig::default(),
         server: scfg(),
         preload: Vec::new(),
+        ..Default::default()
     };
     let router = Router::new(registry, rcfg).expect("registry is non-empty");
     let http = HttpServer::start(router, "127.0.0.1:0", hcfg()).expect("bind loopback");
@@ -813,6 +822,7 @@ fn acc_bits_override_serves_and_validates_over_http() {
         engine: EngineConfig::default(),
         server: scfg(),
         preload: Vec::new(),
+        ..Default::default()
     };
     let router = Router::new(registry, rcfg).expect("registry is non-empty");
     let http = HttpServer::start(router, "127.0.0.1:0", hcfg()).expect("bind loopback");
@@ -1163,4 +1173,138 @@ fn concurrent_connections_all_served() {
     assert_eq!(report.http.accepted, 4);
     assert_eq!(report.http.shed, 0);
     assert_eq!(report.http.read_timeouts, 0);
+}
+
+// ---- self-healing on the wire: /readyz, Retry-After, quarantine -----------
+
+#[test]
+fn readyz_is_distinct_from_healthz_and_gates_on_drain() {
+    let http = start_http();
+    let mut c = Client::connect(&http);
+    // healthy + not draining: both probes answer 200, but readyz carries
+    // the individual gates so an operator can see WHY it is (not) ready
+    c.send(b"GET /readyz HTTP/1.1\r\nHost: t\r\n\r\n");
+    let r = c.read_response();
+    assert_eq!(r.status, 200, "body: {}", r.body);
+    let j = r.json();
+    assert_eq!(j.get("ready"), Some(&Json::Bool(true)));
+    assert_eq!(j.get("draining"), Some(&Json::Bool(false)));
+    assert_eq!(j.get("default_model_ok"), Some(&Json::Bool(true)));
+    assert!(j.get("queue_cap").and_then(Json::as_usize).is_some());
+    // HEAD mirrors GET's status with no body (probes often use HEAD); the
+    // follow-up request would choke on any stray body bytes
+    c.send(b"HEAD /readyz HTTP/1.1\r\nHost: t\r\n\r\n");
+    assert_eq!(c.read_head_response().status, 200);
+    // only GET/HEAD are allowed, and the 405 names them
+    c.send(b"POST /readyz HTTP/1.1\r\nHost: t\r\nContent-Length: 0\r\n\r\n");
+    let r = c.read_response();
+    assert_eq!(r.status, 405);
+    assert_eq!(r.header("allow"), Some("GET, HEAD"));
+    // draining: readiness drops (503 + Retry-After) while LIVENESS and
+    // the already-open connection keep working — that split is the whole
+    // point of having two probes
+    http.set_draining();
+    c.send(b"GET /readyz HTTP/1.1\r\nHost: t\r\n\r\n");
+    let r = c.read_response();
+    assert_eq!(r.status, 503, "body: {}", r.body);
+    assert_eq!(r.header("retry-after"), Some("1"));
+    let j = r.json();
+    assert_eq!(j.get("ready"), Some(&Json::Bool(false)));
+    assert_eq!(j.get("draining"), Some(&Json::Bool(true)));
+    c.send(b"GET /healthz HTTP/1.1\r\nHost: t\r\n\r\n");
+    assert_eq!(c.read_response().status, 200, "draining is not dead");
+    c.send(&post_classify(&classify_body(DIM, 2, 9, None)));
+    assert_eq!(c.read_response().status, 200, "in-flight traffic still serves while draining");
+    http.shutdown();
+}
+
+#[test]
+fn breaker_503_carries_retry_after_quarantine_503_does_not() {
+    use pqs::coordinator::BreakerConfig;
+    // default model "bad": every load fails; threshold 1 trips the
+    // breaker on the first touch. "rotten": checksummed weights with a
+    // flipped bit — the integrity gate quarantines it.
+    let mut registry = ModelRegistry::new();
+    registry.register(
+        "bad",
+        ModelSource::factory(|| Err(anyhow::anyhow!("bad: injected load failure"))),
+    );
+    registry.register(
+        "rotten",
+        ModelSource::factory(|| {
+            let mut m = common::tiny_linear_model(DIM, CLASSES);
+            m.attach_checksums();
+            let q = m.graph.iter_mut().find_map(|n| n.q.as_mut()).expect("a q-layer");
+            let mut w = q.wq.as_slice().to_vec();
+            w[0] ^= 1;
+            q.wq = w.into();
+            Ok(m)
+        }),
+    );
+    let rcfg = RouterConfig {
+        max_loaded: 0,
+        max_bytes: 0,
+        engine: EngineConfig::default(),
+        server: scfg(),
+        preload: Vec::new(),
+        breaker: BreakerConfig {
+            threshold: 1,
+            base_backoff: Duration::from_secs(30),
+            max_backoff: Duration::from_secs(30),
+            ..Default::default()
+        },
+        ..Default::default()
+    };
+    let router = Router::new(registry, rcfg).expect("registry is non-empty");
+    let http = HttpServer::start(router, "127.0.0.1:0", hcfg()).expect("bind loopback");
+    let mut c = Client::connect(&http);
+    // touch 1: the load itself fails → 500, and the breaker trips Open
+    c.send(&post_classify(&classify_body_for(DIM, 1, 1, "bad")));
+    let r = c.read_response();
+    assert_eq!(r.status, 500, "body: {}", r.body);
+    assert!(r.body.contains("bad"), "names the model: {}", r.body);
+    // touch 2: fast-fail with the remaining backoff as Retry-After
+    c.send(&post_classify(&classify_body_for(DIM, 1, 2, "bad")));
+    let r = c.read_response();
+    assert_eq!(r.status, 503, "body: {}", r.body);
+    assert!(r.body.contains("circuit breaker"), "body: {}", r.body);
+    let after: u64 = r
+        .header("retry-after")
+        .expect("a breaker 503 advertises when to come back")
+        .parse()
+        .expect("delta-seconds");
+    assert!((1..=30).contains(&after), "ceil of the remaining backoff, got {after}");
+    // the Open breaker sits on the DEFAULT model, so readiness drops too
+    c.send(b"GET /readyz HTTP/1.1\r\nHost: t\r\n\r\n");
+    let r = c.read_response();
+    assert_eq!(r.status, 503);
+    assert_eq!(r.json().get("default_model_ok"), Some(&Json::Bool(false)));
+    // quarantine: same status, but NO Retry-After — waiting cannot fix
+    // corrupt bytes, only an operator reload can
+    c.send(&post_classify(&classify_body_for(DIM, 1, 3, "rotten")));
+    let r = c.read_response();
+    assert_eq!(r.status, 503, "body: {}", r.body);
+    assert!(r.body.contains("quarantined"), "body: {}", r.body);
+    assert!(r.body.contains("checksum mismatch"), "body: {}", r.body);
+    assert!(r.header("retry-after").is_none(), "no Retry-After on a quarantine");
+    // both states are visible in the fleet listing
+    c.send(b"GET /v1/models HTTP/1.1\r\nHost: t\r\n\r\n");
+    let r = c.read_response();
+    assert_eq!(r.status, 200);
+    let j = r.json();
+    let rows = j.get("models").and_then(Json::as_arr).expect("fleet rows");
+    let health = |name: &str| -> &Json {
+        rows.iter()
+            .find(|m| m.get("name").and_then(Json::as_str) == Some(name))
+            .and_then(|m| m.get("health"))
+            .unwrap_or_else(|| panic!("row for {name}"))
+    };
+    assert_eq!(health("bad").get("breaker").and_then(Json::as_str), Some("open"));
+    assert!(health("bad").get("retry_after_s").and_then(Json::as_f64).unwrap_or(0.0) > 0.0);
+    assert!(
+        health("rotten").get("quarantined").and_then(Json::as_str).is_some(),
+        "the quarantine reason rides the fleet row"
+    );
+    assert_eq!(health("rotten").get("breaker").and_then(Json::as_str), Some("closed"));
+    http.shutdown();
 }

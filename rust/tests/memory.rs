@@ -107,6 +107,7 @@ fn byte_budget_evicts_lru_first_and_is_never_exceeded() {
         engine: ecfg,
         server: server_cfg(),
         preload: Vec::new(),
+        ..Default::default()
     };
     let router = Router::new(registry, rcfg).unwrap();
 
@@ -154,6 +155,7 @@ fn byte_budget_evicts_lru_first_and_is_never_exceeded() {
         engine: ecfg,
         server: server_cfg(),
         preload: Vec::new(),
+        ..Default::default()
     };
     let router = Router::new(registry, rcfg).unwrap();
     let image = common::synth_images(1, dims["c"], 99);
@@ -191,6 +193,7 @@ fn byte_identical_fleet_entries_share_one_resident_blob() {
         engine: ecfg,
         server: server_cfg(),
         preload: vec!["first".into(), "second".into()],
+        ..Default::default()
     };
     let router = Router::new(registry, rcfg).unwrap();
     let m = router.metrics();
@@ -236,6 +239,7 @@ fn one_resident_model_serves_multiple_operating_points() {
         engine: ecfg,
         server: server_cfg(),
         preload: Vec::new(),
+        ..Default::default()
     };
     let router = Router::new(registry, rcfg).unwrap();
 

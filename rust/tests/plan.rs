@@ -200,6 +200,7 @@ fn pqsw_roundtrip_applies_and_reports_the_plan_via_the_router() {
             default_deadline: None,
         },
         preload: Vec::new(),
+        ..Default::default()
     };
     let router = Router::new(registry, rcfg).unwrap();
     // before the lazy load a Path source cannot know the plan

@@ -16,9 +16,9 @@ use std::time::Duration;
 
 use pqs::accum::{self, Policy};
 use pqs::coordinator::{
-    serve_requests, ClassifyRequest, EvalService, ModelRegistry, ModelSource, PendingResponse,
-    Request, RouteError, Router, RouterConfig, ServeError, ServeResponse, Server, ServerConfig,
-    SubmitError, SyntheticSpec,
+    serve_requests, BreakerConfig, ClassifyRequest, EvalService, ModelRegistry, ModelSource,
+    PendingResponse, Request, RouteError, Router, RouterConfig, ServeError, ServeResponse, Server,
+    ServerConfig, SubmitError, SyntheticSpec,
 };
 use pqs::data::Dataset;
 use pqs::dot::DotEngine;
@@ -418,6 +418,7 @@ fn router_loads_lazily_and_routes_to_the_default() {
         engine: EngineConfig::default(),
         server: scfg(1, 4, 16),
         preload: Vec::new(),
+        ..Default::default()
     };
     let router = Router::new(registry, rcfg).unwrap();
     assert_eq!(router.default_model(), "m1");
@@ -455,6 +456,7 @@ fn router_unknown_model_fails_fast_with_fleet_listing() {
         engine: EngineConfig::default(),
         server: scfg(1, 4, 16),
         preload: Vec::new(),
+        ..Default::default()
     };
     let router = Router::new(registry, rcfg).unwrap();
     match router.submit(req(1, Some("m9"), img(1))) {
@@ -482,6 +484,7 @@ fn router_lru_eviction_under_max_loaded_preserves_metrics() {
         engine: EngineConfig::default(),
         server: scfg(1, 4, 16),
         preload: Vec::new(),
+        ..Default::default()
     };
     let router = Router::new(registry, rcfg).unwrap();
     let dim2 = DIM * 2;
@@ -557,6 +560,7 @@ fn router_two_models_one_pool_bit_identical_to_dedicated_servers() {
         engine: cfg,
         server: sc,
         preload: Vec::new(),
+        ..Default::default()
     };
     let router = Router::new(registry, rcfg).unwrap();
     std::thread::scope(|scope| {
@@ -594,6 +598,7 @@ fn router_preload_loads_eagerly_and_counts() {
         engine: EngineConfig::default(),
         server: scfg(1, 4, 16),
         preload: vec!["m2".to_string(), "m3".to_string()],
+        ..Default::default()
     };
     let router = Router::new(three_model_registry(), rcfg).unwrap();
     let m = router.metrics();
@@ -617,6 +622,7 @@ fn router_preload_loads_eagerly_and_counts() {
         engine: EngineConfig::default(),
         server: scfg(1, 4, 16),
         preload: vec!["m9".to_string()],
+        ..Default::default()
     };
     let err = Router::new(three_model_registry(), rcfg).unwrap_err();
     assert!(format!("{err:#}").contains("m9"), "err: {err:#}");
@@ -650,6 +656,7 @@ fn metrics_scrape_does_not_serialize_behind_a_blocked_load() {
         engine: EngineConfig::default(),
         server: scfg(1, 4, 16),
         preload: Vec::new(),
+        ..Default::default()
     };
     let router = Arc::new(Router::new(registry, rcfg).unwrap());
     // kick the slow load off and wait until it is genuinely in flight
@@ -722,6 +729,7 @@ fn router_default_and_wrong_size_semantics() {
         engine: EngineConfig::default(),
         server: scfg(1, 4, 16),
         preload: Vec::new(),
+        ..Default::default()
     };
     let router = Router::new(registry, rcfg).unwrap();
     // wrong-sized image for the ROUTED model is a per-request BadRequest
@@ -805,4 +813,195 @@ fn sorted1_fast_pairing_matches_reference_end_to_end() {
         let want = reference_sorted1(&prods, p);
         assert_eq!(got, want, "case {case}: len {len} bound {bound} p {p}");
     }
+}
+
+// ---- self-healing: panic isolation, circuit breaker, quarantine -----------
+
+#[test]
+fn worker_survives_forward_panics_and_answers_riders_internal() {
+    // regression for the worker-loop panic path: a panic inside a batch
+    // forward must answer that batch's riders with `Internal`, rebuild
+    // the engine, and leave the worker alive for every later request —
+    // it must never take the queue (or its senders) down with it
+    use pqs::faults::{FaultPlan, FaultSpec};
+    use std::sync::Arc;
+    let plan = Arc::new(FaultPlan::new(FaultSpec { panic_every: 3, ..Default::default() }));
+    let mut registry = ModelRegistry::new();
+    registry.register("m", ModelSource::Memory(common::tiny_linear_model(DIM, CLASSES)));
+    let rcfg = RouterConfig {
+        max_loaded: 0,
+        max_bytes: 0,
+        engine: EngineConfig::default(),
+        server: scfg(1, 1, 16), // max_batch 1: each request is its own batch
+        preload: Vec::new(),
+        faults: Some(Arc::clone(&plan)),
+        ..Default::default()
+    };
+    let router = Router::new(registry, rcfg).unwrap();
+    let (mut ok, mut panicked) = (0u64, 0u64);
+    for i in 0..12u64 {
+        let r = wait(router.submit(req(i, Some("m"), img(i))).expect("routes"));
+        match r.result {
+            Ok(_) => ok += 1,
+            Err(ServeError::Internal(msg)) => {
+                assert!(msg.contains("panicked"), "names the panic: {msg}");
+                panicked += 1;
+            }
+            other => panic!("request {i}: expected Ok or Internal, got {other:?}"),
+        }
+    }
+    // every 3rd forward panics: 12 sequential one-request batches → 4
+    assert_eq!((ok, panicked), (8, 4));
+    assert_eq!(plan.counts().panics, 4);
+    // disarmed, the same worker keeps serving on its rebuilt engine
+    plan.disarm();
+    assert!(wait(router.submit(req(99, Some("m"), img(99))).unwrap()).result.is_ok());
+    let m = router.shutdown();
+    let s = m.model("m").unwrap();
+    assert_eq!(s.metrics.requests, 13, "panicked riders still count as answered requests");
+    assert_eq!(s.metrics.errors, 4);
+}
+
+#[test]
+fn load_breaker_opens_fast_fails_then_probe_closes_it() {
+    use std::sync::atomic::{AtomicU32, Ordering};
+    use std::sync::Arc;
+    let fails = Arc::new(AtomicU32::new(2));
+    let mut registry = ModelRegistry::new();
+    let f = Arc::clone(&fails);
+    registry.register(
+        "flaky",
+        ModelSource::factory(move || {
+            if f.load(Ordering::SeqCst) > 0 {
+                f.fetch_sub(1, Ordering::SeqCst);
+                return Err(anyhow::anyhow!("flaky: injected load failure"));
+            }
+            Ok(common::tiny_linear_model(DIM, CLASSES))
+        }),
+    );
+    let rcfg = RouterConfig {
+        max_loaded: 0,
+        max_bytes: 0,
+        engine: EngineConfig::default(),
+        server: scfg(1, 4, 16),
+        preload: Vec::new(),
+        breaker: BreakerConfig {
+            threshold: 2,
+            base_backoff: Duration::from_millis(300),
+            max_backoff: Duration::from_millis(900),
+            ..Default::default()
+        },
+        ..Default::default()
+    };
+    let router = Router::new(registry, rcfg).unwrap();
+    // failure 1: below threshold — plain LoadFailed, breaker still Closed
+    match router.submit(req(1, Some("flaky"), img(1))) {
+        Err(RouteError::LoadFailed(msg)) => assert!(msg.contains("flaky"), "msg: {msg}"),
+        other => panic!("expected LoadFailed, got {other:?}"),
+    }
+    let h = router.health("flaky").expect("failure recorded");
+    assert_eq!(h.breaker.as_str(), "closed");
+    assert_eq!(h.consecutive_failures, 1);
+    // failure 2: hits the threshold — the breaker trips Open
+    assert!(matches!(
+        router.submit(req(2, Some("flaky"), img(2))),
+        Err(RouteError::LoadFailed(_))
+    ));
+    let h = router.health("flaky").unwrap();
+    assert_eq!(h.breaker.as_str(), "open");
+    assert_eq!(h.breaker_opens, 1);
+    assert!(h.retry_after_s > 0.0, "an Open breaker advertises its backoff");
+    // while Open: requests fast-fail with the time remaining, the source
+    // is never touched, and the default-model readiness probe goes false
+    match router.submit(req(3, Some("flaky"), img(3))) {
+        Err(RouteError::BreakerOpen { model, retry_after }) => {
+            assert_eq!(model, "flaky");
+            assert!(retry_after > Duration::ZERO);
+        }
+        other => panic!("expected BreakerOpen, got {other:?}"),
+    }
+    assert_eq!(fails.load(Ordering::SeqCst), 0, "fast-fails never touch the source");
+    assert_eq!(router.health("flaky").unwrap().fast_fails, 1);
+    assert!(!router.ready(), "Open breaker on the default model → not ready");
+    // past the backoff ceiling the next request IS the Half-Open probe;
+    // the source now succeeds, so the probe closes the breaker
+    std::thread::sleep(Duration::from_millis(950));
+    let r = wait(router.submit(req(4, Some("flaky"), img(4))).expect("probe load succeeds"));
+    assert!(r.result.is_ok());
+    let h = router.health("flaky").unwrap();
+    assert_eq!(h.breaker.as_str(), "closed");
+    assert_eq!(h.consecutive_failures, 0, "a successful load resets the streak");
+    assert_eq!(h.breaker_opens, 1);
+    assert_eq!(h.load_retries, 2);
+    assert_eq!(h.fast_fails, 1);
+    assert!(router.ready());
+    // the fleet snapshot carries the same health row
+    let m = router.shutdown();
+    assert_eq!(m.model("flaky").unwrap().health, h);
+}
+
+#[test]
+fn integrity_failure_quarantines_until_explicit_reload() {
+    use std::sync::atomic::{AtomicU32, Ordering};
+    use std::sync::Arc;
+    // the FIRST incarnation carries a flipped weight bit under its
+    // stamped digests; a reload rebuilds from the (now clean) source
+    let builds = Arc::new(AtomicU32::new(0));
+    let mut registry = ModelRegistry::new();
+    let b = Arc::clone(&builds);
+    registry.register(
+        "rotten",
+        ModelSource::factory(move || {
+            let corrupt = b.fetch_add(1, Ordering::SeqCst) == 0;
+            let mut m = pqs::models::synthetic_linear(DIM, CLASSES);
+            m.attach_checksums();
+            if corrupt {
+                let q = m.graph.iter_mut().find_map(|n| n.q.as_mut()).expect("a q-layer");
+                let mut w = q.wq.as_slice().to_vec();
+                w[0] ^= 1;
+                q.wq = w.into();
+            }
+            Ok(m)
+        }),
+    );
+    let rcfg = RouterConfig {
+        max_loaded: 0,
+        max_bytes: 0,
+        engine: EngineConfig::default(),
+        server: scfg(1, 4, 16),
+        preload: Vec::new(),
+        ..Default::default()
+    };
+    let router = Router::new(registry, rcfg).unwrap();
+    // first touch loads, fails verification, quarantines
+    match router.submit(req(1, Some("rotten"), img(1))) {
+        Err(RouteError::Quarantined { model, reason }) => {
+            assert_eq!(model, "rotten");
+            assert!(reason.contains("checksum mismatch"), "reason: {reason}");
+        }
+        other => panic!("expected Quarantined, got {other:?}"),
+    }
+    let h = router.health("rotten").expect("quarantine recorded");
+    assert!(h.quarantined.is_some());
+    assert_eq!(h.breaker.as_str(), "closed", "quarantine is not a breaker trip");
+    assert!(!router.ready());
+    // later requests fast-fail without reloading, and time does not heal
+    std::thread::sleep(Duration::from_millis(50));
+    assert!(matches!(
+        router.submit(req(2, Some("rotten"), img(2))),
+        Err(RouteError::Quarantined { .. })
+    ));
+    assert_eq!(builds.load(Ordering::SeqCst), 1, "a quarantined source is never reloaded");
+    assert_eq!(router.health("rotten").unwrap().fast_fails, 1);
+    // the explicit operator action: reload clears the quarantine and
+    // hosts the fresh (clean) incarnation
+    router.reload("rotten").expect("reload hosts the clean incarnation");
+    assert_eq!(builds.load(Ordering::SeqCst), 2);
+    assert!(router.health("rotten").is_none(), "reload wipes the health record");
+    assert!(router.ready());
+    let r = wait(router.submit(req(3, Some("rotten"), img(3))).expect("routes after reload"));
+    assert!(r.result.is_ok());
+    // reload of an unknown name reports the miss like any route would
+    assert!(matches!(router.reload("nope"), Err(RouteError::UnknownModel(_))));
+    router.shutdown();
 }
