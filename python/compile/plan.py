@@ -1,0 +1,377 @@
+"""Accumulator-budget planning + projection, Python side.
+
+The missing half of the cross-language pipeline: `rust/src/plan/analytic.rs`
+computes per-layer accumulator bounds and `rust/src/sweep/` projects
+weights to a width budget; this module mirrors both **bit-for-bit** so a
+training run can export already-projected, already-planned `.pqsw` files
+that the Rust serving path enforces without recomputation. Parity is
+pinned by known-answer tests on both sides
+(`python/tests/test_plan.py` and `rust/tests/sweep.rs` share the same
+constants, PR 8 checksum-KAT style).
+
+Math recap (see `pqs::sweep` module docs for the derivation):
+
+* The analytic bound treats every centered input coordinate
+  ``x ∈ [xlo, xhi]`` adversarially: weight ``w`` contributes
+  ``[min(w*xlo, w*xhi), max(w*xlo, w*xhi)]`` to the running sum. The
+  final-sum interval bounds the sorting/exact policies; ``clip``/``wrap``
+  accumulate in index order, so their interval tracks prefix extremes.
+* Projection makes ``layer_bits(wq) <= budget`` true: optional N:M
+  pruning first (keep the N largest-|w| per group of M, ties to the
+  lower index — NumPy's stable argsort of descending magnitudes), then
+  per-row integer soft-thresholding ``w' = sign(w) * max(|w| - tau, 0)``
+  with the smallest ``tau`` whose shrunk row fits ``acc_range(budget)``.
+  Every magnitude is non-increasing in ``tau``, so the fit predicate is
+  monotone and the minimal ``tau`` is unique — the linear scan here and
+  the binary search in Rust find the same value.
+
+The exporter writes the projected weights with the plan embedded as a
+format-version-2 ``"plan"`` section (schema = `AccumPlan::to_json`) next
+to the ``"checksums"`` section, loadable by the Rust router unchanged.
+"""
+
+from __future__ import annotations
+
+import json
+import struct
+
+import numpy as np
+
+from .pqsw import MAGIC, _align8, _layer_checksum
+
+SEQUENTIAL_POLICIES = ("clip", "wrap")
+POLICIES = ("exact", "clip", "wrap", "sorted1", "sorted", "oracle")
+
+# accum::acc_range shifts 1i64 by budget-1; mirror the Rust-side cap
+MAX_BUDGET_BITS = 62
+
+
+# ---- analytic bound (mirrors rust/src/accum + rust/src/plan/analytic.rs) --
+
+
+def bits_for_value(v: int) -> int:
+    """Smallest signed width holding ``v`` (two's complement, floor 2)."""
+    v = int(v)
+    mag = v if v >= 0 else ~v
+    return max(mag.bit_length() + 1, 2)
+
+
+def bits_for_range(lo: int, hi: int) -> int:
+    return max(bits_for_value(lo), bits_for_value(hi))
+
+
+def acc_range(bits: int) -> tuple[int, int]:
+    return (-(1 << (bits - 1)), (1 << (bits - 1)) - 1)
+
+
+def qrange(bits: int, offset: int) -> tuple[int, int]:
+    """Quantized-domain range: symmetric without an offset (signed
+    weights), full two's-complement with one (activations)."""
+    if offset == 0:
+        m = (1 << (bits - 1)) - 1
+        return (-m, m)
+    return (-(1 << (bits - 1)), (1 << (bits - 1)) - 1)
+
+
+def centered_window(x_offset: int, abits: int) -> tuple[int, int]:
+    """The centered integer window ``[qlo - o, qhi - o]`` the accumulator
+    sees (always contains 0)."""
+    qlo, qhi = qrange(abits, x_offset)
+    return (qlo - x_offset, qhi - x_offset)
+
+
+def row_range(row, window: tuple[int, int], policy: str) -> tuple[int, int]:
+    """Worst-case accumulator interval of one weight row (mirrors
+    ``pqs::plan::row_range``): final-sum interval for the sorting
+    policies, index-order prefix interval for ``clip``/``wrap``."""
+    xlo, xhi = window
+    sequential = policy in SEQUENTIAL_POLICIES
+    lo = hi = 0
+    row_lo = row_hi = 0
+    for v in np.asarray(row).ravel():
+        v = int(v)
+        a, b = v * xlo, v * xhi
+        hi += max(a, b)
+        lo += min(a, b)
+        if sequential:
+            row_hi = max(row_hi, hi)
+            row_lo = min(row_lo, lo)
+    if not sequential:
+        row_lo = min(lo, 0)
+        row_hi = max(hi, 0)
+    return (row_lo, row_hi)
+
+
+def row_bits(row, window: tuple[int, int], policy: str) -> int:
+    return bits_for_range(*row_range(row, window, policy))
+
+
+def layer_bits(wq, window: tuple[int, int], policy: str) -> int:
+    """Minimal width with the per-policy overflow guarantee for every
+    output row of a (O, K) weight matrix (``analytic_layer_bits``)."""
+    wq = np.asarray(wq)
+    lo = hi = 0
+    for r in range(wq.shape[0]):
+        rlo, rhi = row_range(wq[r], window, policy)
+        lo, hi = min(lo, rlo), max(hi, rhi)
+    return bits_for_range(lo, hi)
+
+
+# ---- projection (mirrors rust/src/sweep/mod.rs) ---------------------------
+
+
+def nm_prune(wq, keep: int, m: int):
+    """Keep the ``keep`` largest-|w| per group of ``m`` consecutive
+    weights along the contraction axis; ties keep the lower index (stable
+    argsort). Returns (pruned_wq, zeroed_count)."""
+    wq = np.array(wq, dtype=np.int8, copy=True)
+    if m <= 0 or keep >= m:
+        return wq, 0
+    zeroed = 0
+    for r in range(wq.shape[0]):
+        row = wq[r]
+        for g0 in range(0, row.shape[0], m):
+            g = row[g0 : g0 + m]
+            order = np.argsort(-np.abs(g.astype(np.int32)), kind="stable")
+            for i in order[keep:]:
+                if g[i] != 0:
+                    g[i] = 0
+                    zeroed += 1
+    return wq, zeroed
+
+
+def soft_threshold(row, tau: int):
+    """``sign(w) * max(|w| - tau, 0)`` — the ℓ1-projection shrink step."""
+    r = np.asarray(row, dtype=np.int32)
+    out = np.sign(r) * np.maximum(np.abs(r) - int(tau), 0)
+    return out.astype(np.int8)
+
+
+def smallest_tau(row, window, policy: str, budget: int) -> int:
+    """Smallest integer ``tau`` whose soft-thresholded row fits
+    ``acc_range(budget)``. Monotone predicate ⇒ unique minimum; Rust
+    binary-searches, this scans — same answer. ``tau = 128`` zeroes any
+    int8 row, so a result always exists for ``budget >= 2``."""
+    blo, bhi = acc_range(budget)
+    for tau in range(0, 129):
+        lo, hi = row_range(soft_threshold(row, tau), window, policy)
+        if lo >= blo and hi <= bhi:
+            return tau
+    raise AssertionError("tau=128 zeroes the row; unreachable for budget >= 2")
+
+
+def project_matrix(wq, window, policy: str, budget: int, nm=None):
+    """Project one (O, K) int8 weight matrix so ``layer_bits <= budget``.
+
+    Returns ``(projected, report)`` where report carries
+    ``tau_max/pruned/clipped`` (the same counters Rust's
+    ``LayerProjection`` reports).
+    """
+    if not 2 <= budget <= MAX_BUDGET_BITS:
+        raise ValueError(f"budget {budget} out of range 2..={MAX_BUDGET_BITS}")
+    if policy not in POLICIES:
+        raise ValueError(f"unknown policy {policy!r}")
+    wq = np.array(wq, dtype=np.int8, copy=True)
+    pruned = 0
+    if nm is not None:
+        keep, m = nm
+        if not 1 <= keep <= m:
+            raise ValueError(f"N:M spec {keep}:{m}: need 1 <= N <= M")
+        wq, pruned = nm_prune(wq, keep, m)
+    tau_max = 0
+    clipped = 0
+    for r in range(wq.shape[0]):
+        tau = smallest_tau(wq[r], window, policy, budget)
+        if tau > 0:
+            tau_max = max(tau_max, tau)
+            shrunk = soft_threshold(wq[r], tau)
+            clipped += int(np.count_nonzero(shrunk != wq[r]))
+            wq[r] = shrunk
+    got = layer_bits(wq, window, policy)
+    assert got <= budget, f"projected to {got} bits > budget {budget}"
+    return wq, {"tau_max": tau_max, "pruned": pruned, "clipped": clipped}
+
+
+# ---- plan section + projected-model exporter ------------------------------
+
+
+def plan_section(policy: str, layers: list[dict]) -> dict:
+    """The ``"plan"`` section dict (schema = ``AccumPlan::to_json`` in
+    rust/src/plan/mod.rs; planner ``analytic``, projection-style plans
+    carry no calibration)."""
+    return {
+        "tag": "plan",
+        "v": 1,
+        "policy": policy,
+        "planner": "analytic",
+        "budget": 0.0,
+        "margin": 0,
+        "samples": 0,
+        "layers": [
+            {
+                "name": l["name"],
+                "k": l["k"],
+                "nnz_max": l["nnz_max"],
+                "analytic_bits": l["analytic_bits"],
+                "calibrated_bits": None,
+                "acc_bits": l["acc_bits"],
+            }
+            for l in layers
+        ],
+    }
+
+
+def synthetic_linear(dim: int, classes: int) -> dict:
+    """The Rust ``models::synthetic_linear`` fixture, reproduced exactly —
+    the shared model the cross-language known-answer tests pin."""
+    o = np.arange(classes)[:, None]
+    k = np.arange(dim)[None, :]
+    wq = ((o * 31 + k * 7) % 11 - 5).astype(np.int8)
+    return {
+        "name": f"synthetic_linear_{dim}x{classes}",
+        "arch": "mlp1",
+        "schedule": "pq",
+        "wbits": 8,
+        "abits": 8,
+        "nm_m": 0,
+        "input_shape": [1, dim, 1],
+        "layers": [
+            {
+                "op": "qlinear",
+                "name": "fc",
+                "oc": classes,
+                "ic": dim,
+                "kh": 1,
+                "kw": 1,
+                "stride": 1,
+                "pad": 0,
+                "prune": False,
+                "w_scale": 0.05,
+                "x_scale": 1.0 / 255.0,
+                "x_offset": -128,
+                "wq": wq,
+                "bias": np.zeros(classes, dtype=np.float32),
+            }
+        ],
+    }
+
+
+def project_model(model: dict, budget: int, policy: str = "sorted", nm=None) -> dict:
+    """Project every q-layer of a ``synthetic_linear``-style model dict in
+    place (wq arrays replaced) and attach the resulting plan section as
+    ``model["plan"]``. Returns a per-layer projection report."""
+    abits = model["abits"]
+    plan_rows = []
+    report = {}
+    for layer in model["layers"]:
+        window = centered_window(layer["x_offset"], abits)
+        wq, rep = project_matrix(layer["wq"], window, policy, budget, nm=nm)
+        layer["wq"] = wq
+        if nm is not None:
+            layer["prune"] = True
+        bits = layer_bits(wq, window, policy)
+        plan_rows.append(
+            {
+                "name": layer["name"],
+                "k": int(wq.shape[1]),
+                "nnz_max": int(max(np.count_nonzero(wq[r]) for r in range(wq.shape[0]))),
+                "analytic_bits": bits,
+                "acc_bits": bits,
+            }
+        )
+        report[layer["name"]] = dict(rep, bits=bits)
+    if nm is not None:
+        model["nm_m"] = nm[1]
+    total = sum(int(np.asarray(l["wq"]).size) for l in model["layers"])
+    zeros = sum(int(np.sum(np.asarray(l["wq"]) == 0)) for l in model["layers"])
+    model["achieved_sparsity"] = zeros / total if total else 0.0
+    model["plan"] = plan_section(policy, plan_rows)
+    return report
+
+
+def export_projected_pqsw(path: str, model: dict) -> None:
+    """Write a projected model dict as a format-version-2 ``.pqsw`` with
+    ``plan`` + ``checksums`` sections (the layout `export_pqsw` uses; the
+    Rust loader verifies the digests and enforces the plan as-is)."""
+    blobs_meta: list[dict] = []
+    blob_data: list[bytes] = []
+    layer_sums: list[str] = []
+
+    def add_blob(arr: np.ndarray, dtype: str) -> int:
+        raw = arr.tobytes()
+        blobs_meta.append({"dtype": dtype, "len": len(raw)})
+        blob_data.append(raw)
+        return len(blob_data) - 1
+
+    graph_out = [
+        {"id": 0, "op": "input", "inputs": []},
+        {"id": 1, "op": "flatten", "inputs": [0]},
+    ]
+    for layer in model["layers"]:
+        wq = np.ascontiguousarray(layer["wq"], dtype=np.int8)
+        bias = np.ascontiguousarray(layer["bias"], dtype="<f4")
+        node = {
+            "id": len(graph_out),
+            "op": layer["op"],
+            "inputs": [len(graph_out) - 1],
+            "name": layer["name"],
+            "oc": layer["oc"],
+            "ic": layer["ic"],
+            "kh": layer["kh"],
+            "kw": layer["kw"],
+            "stride": layer["stride"],
+            "pad": layer["pad"],
+            "prune": layer["prune"],
+            "w_scale": layer["w_scale"],
+            "x_scale": layer["x_scale"],
+            "x_offset": layer["x_offset"],
+            "wq_blob": add_blob(wq, "i8"),
+            "bias_blob": add_blob(bias, "f32"),
+        }
+        oc, k = wq.shape
+        layer_sums.append("%016x" % _layer_checksum(oc, k, wq, bias))
+        graph_out.append(node)
+
+    header = {
+        "name": model["name"],
+        "arch": model["arch"],
+        "schedule": model["schedule"],
+        "wbits": model["wbits"],
+        "abits": model["abits"],
+        "nm_m": model.get("nm_m", 0),
+        "target_sparsity": model.get("target_sparsity", 0.0),
+        "achieved_sparsity": model.get("achieved_sparsity", 0.0),
+        "acc_bits_trained": None,
+        "lowrank_k": None,
+        "acc_q": 0.0,
+        "acc_fp32": 0.0,
+        "input_shape": model["input_shape"],
+        "graph": graph_out,
+        "blobs": blobs_meta,
+        "format_version": 2,
+        "sections": [
+            model["plan"],
+            {"tag": "checksums", "algo": "fnv1a64", "layers": layer_sums},
+        ],
+    }
+
+    off = 0
+    for bm in blobs_meta:
+        bm["offset"] = off
+        off = _align8(off + bm["len"])
+
+    hdr = json.dumps(header).encode()
+    with open(path, "wb") as f:
+        f.write(MAGIC)
+        f.write(struct.pack("<I", len(hdr)))
+        f.write(hdr)
+        pad = _align8(12 + len(hdr)) - (12 + len(hdr))
+        f.write(b"\x00" * pad)
+        pos = 0
+        for bm2, raw in zip(blobs_meta, blob_data):
+            assert bm2["offset"] == pos, (bm2, pos)
+            f.write(raw)
+            pos += len(raw)
+            apad = _align8(pos) - pos
+            f.write(b"\x00" * apad)
+            pos += apad

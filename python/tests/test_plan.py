@@ -1,0 +1,179 @@
+"""Budget projection + plan export tests.
+
+The known-answer constants here are pinned on the Rust side too
+(`rust/tests/sweep.rs::projection_matches_python_kat`): both languages
+project `synthetic_linear(6, 3)` and must land on byte-identical weights,
+the same FNV-1a layer checksum, and the same plan widths. Change either
+implementation and both tests tell you which side moved.
+"""
+
+import json
+import struct
+
+import numpy as np
+import pytest
+
+from compile import plan as P
+from compile.pqsw import _layer_checksum
+
+WINDOW = P.centered_window(-128, 8)  # (0, 255): uint8-style activations
+
+# synthetic_linear(6, 3) raw weights: wq[o][k] = (o*31 + k*7) % 11 - 5
+RAW_WQ = [
+    [-5, 2, -2, 5, 1, -3],
+    [4, 0, -4, 3, -1, -5],
+    [2, -2, 5, 1, -3, 4],
+]
+
+# pinned cross-language KAT: sorted policy, budget 12, dense (tau = 1)
+DENSE_B12_WQ = [
+    [-4, 1, -1, 4, 0, -2],
+    [3, 0, -3, 2, 0, -4],
+    [1, -1, 4, 0, -2, 3],
+]
+DENSE_B12_CHECKSUM = 0x19F8CD528591AC91
+
+# pinned cross-language KAT: sorted policy, budget 10, 2:3 sparsity
+NM23_B10_WQ = [
+    [-2, 0, 0, 2, 0, 0],
+    [0, 0, 0, 0, 0, -1],
+    [0, 0, 1, 0, 0, 0],
+]
+NM23_B10_CHECKSUM = 0x2F62B1939D3E5FFC
+
+
+def test_bits_for_value_matches_rust_accum():
+    # mirrors rust/src/accum bits_for_value: two's-complement width, floor 2
+    assert P.bits_for_value(0) == 2
+    assert P.bits_for_value(1) == 2
+    assert P.bits_for_value(-1) == 2
+    assert P.bits_for_value(127) == 8
+    assert P.bits_for_value(-128) == 8
+    assert P.bits_for_value(128) == 9
+    assert P.bits_for_value(2040) == 12
+    assert P.bits_for_value(-510) == 10
+
+
+def test_row_range_hand_values():
+    # final-sum interval: hi = (3+5)*255, lo = -2*255
+    assert P.row_range([3, -2, 0, 5], WINDOW, "sorted") == (-510, 2040)
+    assert P.row_bits([3, -2, 0, 5], WINDOW, "sorted") == 12
+    # a centered window always contains 0, so every prefix extreme is
+    # monotone and the sequential (clip/wrap) interval coincides
+    for pol in P.POLICIES:
+        assert P.row_range([3, -2, 0, 5], WINDOW, pol) == (-510, 2040)
+    # zeros are no-ops; the empty row is exactly zero
+    assert P.row_range([], WINDOW, "sorted") == (0, 0)
+    assert P.row_range([0, 0], WINDOW, "clip") == (0, 0)
+
+
+def test_synthetic_linear_mirrors_rust_fixture():
+    m = P.synthetic_linear(6, 3)
+    assert m["name"] == "synthetic_linear_6x3"
+    assert m["layers"][0]["wq"].tolist() == RAW_WQ
+    assert m["layers"][0]["x_offset"] == -128
+    assert P.layer_bits(m["layers"][0]["wq"], WINDOW, "sorted") == 13
+
+
+def test_projection_kat_dense_budget12():
+    m = P.synthetic_linear(6, 3)
+    rep = P.project_model(m, 12, policy="sorted")
+    l = m["layers"][0]
+    assert l["wq"].tolist() == DENSE_B12_WQ
+    assert rep["fc"] == {"tau_max": 1, "pruned": 0, "clipped": 17, "bits": 12}
+    plan = m["plan"]
+    assert plan["tag"] == "plan" and plan["v"] == 1
+    assert plan["policy"] == "sorted" and plan["planner"] == "analytic"
+    assert plan["layers"] == [
+        {
+            "name": "fc",
+            "k": 6,
+            "nnz_max": 5,
+            "analytic_bits": 12,
+            "calibrated_bits": None,
+            "acc_bits": 12,
+        }
+    ]
+    wq = np.ascontiguousarray(l["wq"], dtype=np.int8)
+    bias = np.ascontiguousarray(l["bias"], dtype="<f4")
+    assert _layer_checksum(3, 6, wq, bias) == DENSE_B12_CHECKSUM
+
+
+def test_projection_kat_nm23_budget10():
+    m = P.synthetic_linear(6, 3)
+    rep = P.project_model(m, 10, policy="sorted", nm=(2, 3))
+    l = m["layers"][0]
+    assert l["wq"].tolist() == NM23_B10_WQ
+    assert l["prune"] is True
+    assert m["nm_m"] == 3
+    assert rep["fc"] == {"tau_max": 4, "pruned": 5, "clipped": 12, "bits": 10}
+    assert m["plan"]["layers"][0]["nnz_max"] == 2
+    assert m["plan"]["layers"][0]["acc_bits"] == 10
+    wq = np.ascontiguousarray(l["wq"], dtype=np.int8)
+    bias = np.ascontiguousarray(l["bias"], dtype="<f4")
+    assert _layer_checksum(3, 6, wq, bias) == NM23_B10_CHECKSUM
+
+
+def test_nm_prune_stable_ties():
+    wq, zeroed = P.nm_prune([[3, -5, 5, 1]], 2, 4)
+    assert wq.tolist() == [[0, -5, 5, 0]] and zeroed == 2
+    # tie at the keep boundary: equal magnitudes keep the lower index
+    wq, zeroed = P.nm_prune([[-2, 2, 1, 0]], 1, 4)
+    assert wq.tolist() == [[-2, 0, 0, 0]] and zeroed == 2
+    # trailing short group prunes too; pre-existing zeros don't count
+    wq, zeroed = P.nm_prune([[4, 0, -1, 7, 6]], 1, 3)
+    assert wq.tolist() == [[4, 0, 0, 7, 0]] and zeroed == 2
+
+
+@pytest.mark.parametrize("policy", P.POLICIES)
+@pytest.mark.parametrize("budget", [13, 12, 10, 8, 6, 2])
+def test_projection_meets_budget_and_is_idempotent(policy, budget):
+    wq = np.asarray(RAW_WQ, dtype=np.int8)
+    once, rep1 = P.project_matrix(wq, WINDOW, policy, budget)
+    assert P.layer_bits(once, WINDOW, policy) <= budget
+    twice, rep2 = P.project_matrix(once, WINDOW, policy, budget)
+    assert np.array_equal(once, twice), "projection must be idempotent"
+    assert rep2 == {"tau_max": 0, "pruned": 0, "clipped": 0}
+    # monotone: a looser budget never needs a larger threshold
+    loose, rep_loose = P.project_matrix(wq, WINDOW, policy, min(budget + 2, 62))
+    assert rep_loose["tau_max"] <= rep1["tau_max"]
+
+
+def test_projection_rejects_bad_budgets():
+    wq = np.asarray(RAW_WQ, dtype=np.int8)
+    for budget in (0, 1, 63):
+        with pytest.raises(ValueError):
+            P.project_matrix(wq, WINDOW, "sorted", budget)
+    with pytest.raises(ValueError):
+        P.project_matrix(wq, WINDOW, "sorted", 10, nm=(0, 4))
+
+
+def _parse(path):
+    raw = open(path, "rb").read()
+    assert raw[:8] == b"PQSW1\x00\x00\x00"
+    (hlen,) = struct.unpack("<I", raw[8:12])
+    hdr = json.loads(raw[12 : 12 + hlen])
+    blob_base = (12 + hlen + 7) & ~7
+    return raw, hdr, blob_base
+
+
+def test_export_projected_pqsw_roundtrip(tmp_path):
+    m = P.synthetic_linear(6, 3)
+    P.project_model(m, 12, policy="sorted")
+    path = str(tmp_path / "proj.pqsw")
+    P.export_projected_pqsw(path, m)
+    raw, hdr, blob_base = _parse(path)
+    assert hdr["format_version"] == 2
+    assert [s["tag"] for s in hdr["sections"]] == ["plan", "checksums"]
+    assert hdr["sections"][0] == m["plan"]
+    assert hdr["sections"][1]["algo"] == "fnv1a64"
+    assert hdr["sections"][1]["layers"] == ["%016x" % DENSE_B12_CHECKSUM]
+    assert hdr["nm_m"] == 0 and hdr["abits"] == 8
+    node = hdr["graph"][2]
+    assert node["op"] == "qlinear" and node["name"] == "fc"
+    b = hdr["blobs"][node["wq_blob"]]
+    assert b["dtype"] == "i8"
+    wbytes = raw[blob_base + b["offset"] : blob_base + b["offset"] + b["len"]]
+    assert wbytes == np.asarray(DENSE_B12_WQ, dtype=np.int8).tobytes()
+    bb = hdr["blobs"][node["bias_blob"]]
+    assert bb["dtype"] == "f32" and bb["len"] == 12

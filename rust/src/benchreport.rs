@@ -48,6 +48,16 @@
 //!   if any request goes unanswered, the breaker never opens, or the
 //!   fleet never recovers — loss of a request under faults breaks the
 //!   bench, not just a dashboard.
+//! * **sweep** — the accumulator-budget projection + Pareto sweep
+//!   (`crate::sweep`): a (budgets × N:M) grid over the synthetic CNN,
+//!   each candidate projected to its budget and evaluated through
+//!   `EvalService` against a 32-bit reference. The section *fails* if
+//!   any projected point's enforced width exceeds its budget, if any
+//!   point records a persistent overflow at that width (both are broken
+//!   guarantees), if any point's agreement falls more than the declared
+//!   tolerance below the baseline, or if the no-op point (dense at the
+//!   unprojected analytic max) is not *exactly* the baseline — sorted
+//!   arithmetic at the analytic width must equal 32-bit exact.
 //!
 //! Everything runs on synthetic models so the report is reproducible on
 //! any checkout, artifacts or not. `quick: true` shrinks sample counts and
@@ -122,6 +132,7 @@ pub fn run(opts: &BenchOptions) -> Result<Json> {
         ("plan", plan_section(opts)?),
         ("memory", memory_section(opts)?),
         ("faults", faults_section(opts)?),
+        ("sweep", sweep_section(opts)?),
     ]))
 }
 
@@ -1128,6 +1139,107 @@ fn faults_section(opts: &BenchOptions) -> Result<Json> {
     ]))
 }
 
+// ---- sweep ----------------------------------------------------------------
+
+/// Accumulator-budget projection + Pareto sweep smoke (`crate::sweep`): a
+/// small (budgets × N:M) grid over the synthetic CNN, scored as agreement
+/// with the unprojected model at 32-bit exact arithmetic on a seeded
+/// reference set (baseline accuracy 1.0 by construction). Gates, in order
+/// of strength:
+///
+/// * every point's enforced width fits its requested budget and serves
+///   with ZERO persistent overflows — the projection guarantee, checked
+///   through the real evaluation path;
+/// * the no-op point (dense, budget = the unprojected analytic max) must
+///   score *exactly* the baseline: projection edits nothing there, and
+///   sorted accumulation at the analytic width returns the exact value;
+/// * clipped/pruned points must stay within the declared tolerance of
+///   the baseline. The whole run is seeded (deterministic), so this is a
+///   wide catastrophe floor on a tiny synthetic agreement metric, not a
+///   tight regression bound — real sweeps declare their own tolerance.
+fn sweep_section(opts: &BenchOptions) -> Result<Json> {
+    use crate::sweep::{self, NmSpec, SweepConfig};
+
+    let model = if opts.quick {
+        models::synthetic_conv(2, 8, 8, 4, 10)
+    } else {
+        models::synthetic_conv(3, 16, 16, 6, 10)
+    };
+    let policy = Policy::Sorted;
+    let max = sweep::max_analytic_bits(&model, policy)?;
+    let budgets: Vec<u32> = if opts.quick {
+        vec![max, max.saturating_sub(1).max(2)]
+    } else {
+        vec![max, max.saturating_sub(1).max(2), max.saturating_sub(2).max(2)]
+    };
+    let samples = if opts.quick { 48 } else { 192 };
+    let tolerance = if opts.quick { 0.9 } else { 0.5 };
+    let ds = sweep::reference_dataset(&model, samples, 0x5EE9_D00D)?;
+    let cfg = SweepConfig {
+        policy,
+        budgets,
+        nm: vec![None, Some(NmSpec { keep: 3, m: 4 })],
+        batch: 16,
+        threads: opts.threads.iter().copied().max().unwrap_or(2),
+        tolerance,
+        limit: None,
+    };
+    let t0 = Instant::now();
+    let res = sweep::pareto(&model, &ds, &cfg)?;
+    let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
+
+    for p in &res.points {
+        let label = format!("budget {} nm {}", p.budget, NmSpec::label(p.nm));
+        if !p.budget_ok {
+            return Err(anyhow!(
+                "sweep {label}: enforced width {} exceeds the budget",
+                p.width_bits
+            ));
+        }
+        if p.persistent_dots > 0 {
+            return Err(anyhow!(
+                "sweep {label}: {} persistent overflows serving at the planned width",
+                p.persistent_dots
+            ));
+        }
+        if !p.accuracy_ok {
+            return Err(anyhow!(
+                "sweep {label}: accuracy {:.4} fell more than the declared tolerance \
+                 {tolerance} below the baseline {:.4}",
+                p.accuracy,
+                res.baseline_accuracy
+            ));
+        }
+    }
+    let noop = res
+        .points
+        .iter()
+        .find(|p| p.budget == max && p.nm.is_none())
+        .ok_or_else(|| anyhow!("sweep grid lost its no-op point (budget {max}, dense)"))?;
+    if noop.pruned != 0 || noop.clipped != 0 {
+        return Err(anyhow!(
+            "the dense point at the analytic max must be a no-op projection \
+             (pruned {}, clipped {})",
+            noop.pruned,
+            noop.clipped
+        ));
+    }
+    if noop.accuracy != res.baseline_accuracy {
+        return Err(anyhow!(
+            "no-op point accuracy {:.6} != baseline {:.6}: sorted arithmetic at the \
+             analytic width must equal 32-bit exact",
+            noop.accuracy,
+            res.baseline_accuracy
+        ));
+    }
+
+    let mut j = res.to_json();
+    if let Json::Obj(map) = &mut j {
+        map.insert("wall_ms".to_string(), json::num(wall_ms));
+    }
+    Ok(j)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -1142,7 +1254,7 @@ mod tests {
         let parsed = Json::parse(&txt).expect("report round-trips");
         for key in [
             "meta", "dot", "pool", "forward", "serve", "connections", "router", "plan", "memory",
-            "faults",
+            "faults", "sweep",
         ] {
             assert!(parsed.get(key).is_some(), "missing section {key}");
         }
@@ -1230,5 +1342,28 @@ mod tests {
             "engine panics were injected"
         );
         assert!(faults.get("recovery_ms").unwrap().as_f64().unwrap() >= 0.0);
+        // the sweep section gates the projection guarantees over the wire
+        // format: a 2x2 grid (quick mode), every point within budget with
+        // zero persistent overflows, the baseline at exactly 1.0 on the
+        // self-labeled reference set, and a non-empty Pareto frontier
+        let sweep = parsed.get("sweep").unwrap();
+        assert_eq!(sweep.get("tag").and_then(Json::as_str), Some("sweep"));
+        let baseline = sweep.get("baseline").unwrap();
+        assert_eq!(baseline.get("acc_bits").and_then(Json::as_usize), Some(32));
+        assert_eq!(baseline.get("accuracy").and_then(Json::as_f64), Some(1.0));
+        let max = baseline.get("analytic_bits_max").unwrap().as_usize().unwrap();
+        let points = sweep.get("points").unwrap().as_arr().unwrap();
+        assert_eq!(points.len(), 4, "quick mode sweeps a 2x2 grid");
+        for p in points {
+            assert_eq!(p.get("budget_ok").and_then(Json::as_bool), Some(true), "{p:?}");
+            assert_eq!(p.get("accuracy_ok").and_then(Json::as_bool), Some(true), "{p:?}");
+            assert_eq!(p.get("persistent_dots").and_then(Json::as_usize), Some(0), "{p:?}");
+            let budget = p.get("budget").unwrap().as_usize().unwrap();
+            let width = p.get("width_bits").unwrap().as_usize().unwrap();
+            assert!(width <= budget && budget <= max, "{p:?}");
+        }
+        let frontier = sweep.get("frontier").unwrap().as_arr().unwrap();
+        assert!(!frontier.is_empty(), "Pareto frontier present");
+        assert!(sweep.get("wall_ms").unwrap().as_f64().unwrap() >= 0.0);
     }
 }

@@ -18,7 +18,11 @@
 //!   graceful draining shutdown. Built through [`server::ServerBuilder`]
 //!   (which is how the router injects the shared pool);
 //! * `EvalService::evaluate` — whole-dataset sweeps used by the figure
-//!   harnesses (shards batches over a scoped pool);
+//!   harnesses and `sweep::pareto`. Batches shard over a scoped pool by
+//!   default, or over a caller-supplied shared [`ComputePool`]
+//!   ([`EvalService::with_pool`]) so back-to-back sweeps reuse warm
+//!   workers — both paths are bit-identical (results merge in shard
+//!   index order either way; property-tested in `rust/tests/sweep.rs`);
 //! * `serve_requests` — the legacy one-shot request/response front-end,
 //!   kept as a thin compatibility shim over [`server::Server`].
 
@@ -28,11 +32,13 @@ pub mod server;
 
 use anyhow::Result;
 
+use std::sync::Arc;
+
 use crate::data::{Batches, Dataset};
 use crate::formats::pqsw::PqswModel;
 use crate::nn::engine::{Engine, EngineConfig};
 use crate::overflow::OverflowReport;
-use crate::util::pool;
+use crate::util::pool::{self, ComputePool};
 
 pub use metrics::{LatencyRecorder, LatencySummary, ServeMetrics, ServeSummary};
 pub use registry::{
@@ -60,11 +66,12 @@ pub struct EvalService<'m> {
     cfg: EngineConfig,
     threads: usize,
     batch: usize,
+    pool: Option<Arc<ComputePool>>,
 }
 
 impl<'m> EvalService<'m> {
     pub fn new(model: &'m PqswModel, cfg: EngineConfig) -> Self {
-        EvalService { model, cfg, threads: pool::default_threads(), batch: 64 }
+        EvalService { model, cfg, threads: pool::default_threads(), batch: 64, pool: None }
     }
 
     pub fn with_threads(mut self, threads: usize) -> Self {
@@ -74,6 +81,17 @@ impl<'m> EvalService<'m> {
 
     pub fn with_batch(mut self, batch: usize) -> Self {
         self.batch = batch.max(1);
+        self
+    }
+
+    /// Shard over `pool`'s persistent workers instead of spawning a
+    /// scoped pool per call (`ComputePool::map_init` is bit-identical to
+    /// `pool::parallel_map_init`; results merge in shard index order on
+    /// both paths). Callers running many evaluations back to back — the
+    /// Pareto sweep, the router's bench sections — share one pool so the
+    /// fleet's workers stay warm instead of idling.
+    pub fn with_pool(mut self, pool: Arc<ComputePool>) -> Self {
+        self.pool = Some(pool);
         self
     }
 
@@ -102,18 +120,19 @@ impl<'m> EvalService<'m> {
 
         let model = self.model;
         let cfg = self.cfg;
-        let results = pool::parallel_map_init(
-            shards.len(),
-            self.threads,
-            || Engine::new(model, cfg),
-            |eng, i| {
-                let (imgs, labels) = &shards[i];
-                let r = eng.forward(imgs, labels.len()).expect("forward");
-                let correct =
-                    (0..r.batch).filter(|&j| r.argmax(j) == labels[j] as usize).count();
-                (correct, labels.len(), r.report)
-            },
-        );
+        let init = || Engine::new(model, cfg);
+        let work = |eng: &mut Engine, i: usize| {
+            let (imgs, labels) = &shards[i];
+            let r = eng.forward(imgs, labels.len()).expect("forward");
+            let correct = (0..r.batch).filter(|&j| r.argmax(j) == labels[j] as usize).count();
+            (correct, labels.len(), r.report)
+        };
+        // both paths produce results in shard index order, so the merge
+        // below is bit-identical regardless of which pool ran the work
+        let results = match &self.pool {
+            Some(p) => p.map_init(shards.len(), init, work),
+            None => pool::parallel_map_init(shards.len(), self.threads, init, work),
+        };
 
         let mut report = OverflowReport::default();
         let (mut correct, mut total) = (0usize, 0usize);

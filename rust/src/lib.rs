@@ -32,6 +32,7 @@ pub mod plan;
 pub mod quant;
 pub mod runtime;
 pub mod sparse;
+pub mod sweep;
 pub mod tensor;
 pub mod util;
 

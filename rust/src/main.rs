@@ -26,6 +26,34 @@
 //!        --emit writes a .pqsw with the plan embedded as a versioned
 //!        section; serving that file enforces the per-layer widths and
 //!        reports the plan in GET /v1/models.
+//!   project --budget N [--nm N:M] [--model SPEC] [--policy P]
+//!        [--emit PATH.pqsw]
+//!        the planner's inverse (see pqs::sweep): edit the quantized
+//!        weights so every layer's analytic accumulator bound fits
+//!        --budget bits under --policy — optional N:M pruning first
+//!        (keep the N largest-magnitude weights per group of M), then
+//!        per-row integer soft-thresholding (the ℓ1-projection step) —
+//!        and print the per-layer before/after table. --emit writes the
+//!        projected model with its analytic plan embedded (checksummed
+//!        v2 .pqsw; the serving path enforces the widths unchanged).
+//!   sweep [--model SPEC] [--policy P] [--budgets LIST] [--nm LIST]
+//!        [--samples N] [--batch B] [--threads T] [--tolerance F]
+//!        [--seed S] [--json PATH] [--gate]
+//!        walk the (budget × N:M) grid: project each candidate, evaluate
+//!        accuracy through EvalService, print the accuracy-vs-width
+//!        Pareto table and optionally write the frontier JSON (schema in
+//!        the pqs::sweep module docs). --budgets takes integers or
+//!        "max"/"max-K" tokens resolved against the unprojected model's
+//!        widest analytic layer (default "max,max-1,max-2"); --nm is a
+//!        comma list of "dense" and "N:M" specs (default dense).
+//!        Evaluates on the real test set when the artifacts provide a
+//!        matching one (--samples caps it), else on a seeded synthetic
+//!        set labeled by the unprojected model at 32-bit exact
+//!        arithmetic, so accuracy reads as agreement with the wide
+//!        reference and the baseline scores 1.0. Exits nonzero if any
+//!        point violates its budget or records a persistent overflow
+//!        (broken guarantee); --gate additionally fails points whose
+//!        accuracy drops more than --tolerance below the baseline.
 //!   serve-http [--addr HOST:PORT] [--model NAME[=SPEC[,OPTS]]]...
 //!        [--max-loaded M] [--max-bytes B] [--preload NAME]...
 //!        [--threads N] [--engine-threads T]
@@ -84,6 +112,7 @@ use pqs::formats::manifest::Manifest;
 use pqs::http::{HttpConfig, HttpServer};
 use pqs::models;
 use pqs::nn::engine::EngineConfig;
+use pqs::sweep::{NmSpec, ProjectConfig};
 use pqs::util::cli::Args;
 use pqs::util::pool;
 
@@ -92,6 +121,36 @@ fn main() {
         eprintln!("error: {e:#}");
         std::process::exit(1);
     }
+}
+
+/// Parse the `--budgets` grid axis: comma-separated integers or
+/// `max`/`max-K` tokens resolved against the unprojected model's widest
+/// analytic layer (floored at 2 bits).
+fn parse_budgets(s: &str, analytic_max: u32) -> Result<Vec<u32>> {
+    let mut out = Vec::new();
+    for tok in s.split(',') {
+        let t = tok.trim();
+        if t.is_empty() {
+            continue;
+        }
+        let v = if let Some(rest) = t.strip_prefix("max") {
+            let sub: u32 = if rest.is_empty() {
+                0
+            } else {
+                rest.strip_prefix('-')
+                    .and_then(|r| r.trim().parse().ok())
+                    .ok_or_else(|| anyhow!("bad budget token {t:?} (use N, max, or max-K)"))?
+            };
+            analytic_max.saturating_sub(sub).max(2)
+        } else {
+            t.parse().map_err(|_| anyhow!("bad budget token {t:?} (use N, max, or max-K)"))?
+        };
+        out.push(v);
+    }
+    if out.is_empty() {
+        bail!("--budgets lists no budgets");
+    }
+    Ok(out)
 }
 
 fn engine_cfg(args: &Args) -> Result<EngineConfig> {
@@ -299,6 +358,127 @@ fn run() -> Result<()> {
                     "wrote {path} with the plan embedded (a router serving it enforces \
                      the per-layer widths and reports them in GET /v1/models)"
                 );
+            }
+        }
+        "project" => {
+            let manifest = Manifest::load_default().ok();
+            let mut model = match args.get("model") {
+                Some(spec) => ModelSource::parse(spec, manifest.as_ref())?.load()?,
+                None => pqs::models::synthetic_conv(3, 28, 28, 8, 10),
+            };
+            let policy = Policy::from_name(args.get_or("policy", "sorted")).ok_or_else(|| {
+                anyhow!("unknown policy (use one of exact|clip|wrap|sorted1|sorted|oracle)")
+            })?;
+            let budget = args.get_u32("budget", 0);
+            if budget == 0 {
+                bail!("pqs project requires --budget N (the target accumulator width in bits)");
+            }
+            let nm = match args.get("nm") {
+                Some(s) => NmSpec::parse(s)?,
+                None => None,
+            };
+            let t0 = std::time::Instant::now();
+            let rep = pqs::sweep::project(&mut model, &ProjectConfig { policy, budget, nm })?;
+            println!(
+                "projected {} in {:.1} ms ({})",
+                model.name,
+                t0.elapsed().as_secs_f64() * 1e3,
+                if rep.changed() { "weights edited" } else { "already within budget" },
+            );
+            rep.print();
+            if let Some(plan) = &model.plan {
+                plan.print();
+            }
+            if let Some(path) = args.get("emit") {
+                model.save(path)?;
+                println!(
+                    "wrote {path} with projected weights + plan embedded (a router serving \
+                     it enforces the per-layer widths and reports them in GET /v1/models)"
+                );
+            }
+        }
+        "sweep" => {
+            let manifest = Manifest::load_default().ok();
+            let model = match args.get("model") {
+                Some(spec) => ModelSource::parse(spec, manifest.as_ref())?.load()?,
+                None => pqs::models::synthetic_conv(3, 28, 28, 8, 10),
+            };
+            let policy = Policy::from_name(args.get_or("policy", "sorted")).ok_or_else(|| {
+                anyhow!("unknown policy (use one of exact|clip|wrap|sorted1|sorted|oracle)")
+            })?;
+            let analytic_max = pqs::sweep::max_analytic_bits(&model, policy)?;
+            let budgets = match args.get("budgets") {
+                Some(s) => parse_budgets(s, analytic_max)?,
+                None => Vec::new(), // pareto derives [max, max-1, max-2]
+            };
+            let nm: Vec<Option<NmSpec>> = match args.get("nm") {
+                Some(s) => s.split(',').map(NmSpec::parse).collect::<Result<_>>()?,
+                None => vec![None],
+            };
+            let samples = args.get_usize("samples", 256).max(1);
+            let mut cfg = pqs::sweep::SweepConfig {
+                policy,
+                budgets,
+                nm,
+                batch: args.get_usize("batch", 64),
+                threads: args.get_usize("threads", pool::default_threads()),
+                tolerance: args.get_f64("tolerance", 0.05),
+                limit: None,
+            };
+            // evaluate on the real test set when the artifacts provide one
+            // matching this model, else on the self-labeled reference set
+            let dim: usize = model.input_shape.iter().product();
+            let real = manifest.as_ref().and_then(|man| {
+                let entry = man.test_dataset_for(&model.arch).ok()?;
+                let ds = Dataset::load(man.dataset_path(&entry.test)).ok()?;
+                (ds.dim() == dim && ds.n > 0).then_some((entry.test.clone(), ds))
+            });
+            let ds = match real {
+                Some((file, ds)) => {
+                    println!("evaluating on {} real samples from {file}", samples.min(ds.n));
+                    cfg.limit = Some(samples);
+                    ds
+                }
+                None => {
+                    println!(
+                        "(no matching real dataset; scoring agreement with the 32-bit \
+                         reference on {samples} synthetic samples)"
+                    );
+                    let seed = args.get_u32("seed", 0x51EE9) as u64;
+                    pqs::sweep::reference_dataset(&model, samples, seed)?
+                }
+            };
+            let t0 = std::time::Instant::now();
+            let res = pqs::sweep::pareto(&model, &ds, &cfg)?;
+            println!(
+                "swept {} grid points in {:.1} ms",
+                res.points.len(),
+                t0.elapsed().as_secs_f64() * 1e3
+            );
+            res.print();
+            if let Some(path) = args.get("json") {
+                std::fs::write(path, res.to_json().to_string())?;
+                println!("wrote sweep JSON to {path}");
+            }
+            // broken guarantees always fail; accuracy loss past the
+            // declared tolerance fails under --gate (the CI smoke)
+            for p in &res.points {
+                let label = format!("budget {} nm {}", p.budget, NmSpec::label(p.nm));
+                if !p.budget_ok {
+                    bail!("{label}: enforced width {} exceeds the budget", p.width_bits);
+                }
+                if p.persistent_dots > 0 {
+                    bail!("{label}: {} persistent dots at the planned width", p.persistent_dots);
+                }
+                if args.has("gate") && !p.accuracy_ok {
+                    bail!(
+                        "{label}: accuracy {:.4} fell more than the declared tolerance {} \
+                         below the 32-bit baseline {:.4}",
+                        p.accuracy,
+                        res.tolerance,
+                        res.baseline_accuracy
+                    );
+                }
             }
         }
         "serve-http" => {
@@ -549,7 +729,7 @@ fn run() -> Result<()> {
             println!("pqs — Prune, Quantize, and Sort (paper reproduction)");
             println!(
                 "commands: list | describe | eval | profile | runtime | figures | plan | \
-                 serve-http | bench"
+                 project | sweep | serve-http | bench"
             );
             println!("see rust/src/main.rs doc comment for flags");
         }

@@ -42,34 +42,54 @@ pub fn centered_input_range(qp: &QParams) -> (i64, i64) {
     ((qlo - qp.offset) as i64, (qhi - qp.offset) as i64)
 }
 
+/// Worst-case accumulator interval one weight row contributes under
+/// `policy`, over the centered input window `(xlo, xhi)`: the final-sum
+/// interval for the sorting policies, the index-order prefix interval for
+/// `Clip`/`Wrap`. `vals` are the row's weights in accumulation order;
+/// zeros contribute nothing, so passing a dense row or only its nonzeros
+/// (in column order) gives the same answer. Always contains 0 (the
+/// accumulator's start value). This is the row-level primitive the
+/// budget *projection* inverts (`crate::sweep::project` shrinks row
+/// magnitudes until this interval fits the requested width).
+pub fn row_range(vals: &[i8], (xlo, xhi): (i64, i64), policy: Policy) -> (i64, i64) {
+    let sequential = matches!(policy, Policy::Clip | Policy::Wrap);
+    // running worst-case sums over the row's products, in the exact
+    // order the engine accumulates them (dense column order)
+    let (mut lo, mut hi) = (0i64, 0i64);
+    let (mut row_lo, mut row_hi) = (0i64, 0i64);
+    for &v in vals {
+        let a = v as i64 * xlo;
+        let b = v as i64 * xhi;
+        hi += a.max(b);
+        lo += a.min(b);
+        if sequential {
+            row_hi = row_hi.max(hi);
+            row_lo = row_lo.min(lo);
+        }
+    }
+    if !sequential {
+        row_lo = lo.min(0);
+        row_hi = hi.max(0);
+    }
+    (row_lo, row_hi)
+}
+
+/// Minimal accumulator width holding [`row_range`] of one row.
+pub fn row_bits(vals: &[i8], window: (i64, i64), policy: Policy) -> u32 {
+    let (lo, hi) = row_range(vals, window, policy);
+    accum::bits_for_range(lo, hi)
+}
+
 /// Worst-case accumulator interval of `layer` under `policy` (see the
 /// module docs: final-sum interval for the sorting policies, index-order
 /// prefix interval for `Clip`/`Wrap`). Always contains 0 (the
 /// accumulator's start value).
 pub fn analytic_layer_range(layer: &QLayer, policy: Policy) -> (i64, i64) {
-    let (xlo, xhi) = centered_input_range(&layer.x_qp);
-    let sequential = matches!(policy, Policy::Clip | Policy::Wrap);
+    let window = centered_input_range(&layer.x_qp);
     let (mut worst_lo, mut worst_hi) = (0i64, 0i64);
     for r in 0..layer.w.rows {
         let (_, vals) = layer.w.row(r);
-        // running worst-case sums over the row's nonzero products, in the
-        // exact order the engine accumulates them (dense column order)
-        let (mut lo, mut hi) = (0i64, 0i64);
-        let (mut row_lo, mut row_hi) = (0i64, 0i64);
-        for &v in vals {
-            let a = v as i64 * xlo;
-            let b = v as i64 * xhi;
-            hi += a.max(b);
-            lo += a.min(b);
-            if sequential {
-                row_hi = row_hi.max(hi);
-                row_lo = row_lo.min(lo);
-            }
-        }
-        if !sequential {
-            row_lo = lo.min(0);
-            row_hi = hi.max(0);
-        }
+        let (row_lo, row_hi) = row_range(vals, window, policy);
         worst_lo = worst_lo.min(row_lo);
         worst_hi = worst_hi.max(row_hi);
     }
@@ -128,6 +148,25 @@ mod tests {
         // clip's prefix bound coincides when the window spans zero
         assert_eq!(analytic_layer_range(&l, Policy::Clip), (lo, hi));
         assert_eq!(max_row_nnz(&l), 3);
+    }
+
+    #[test]
+    fn row_range_is_zero_insensitive_and_matches_layer() {
+        // the exposed row primitive: zeros are no-ops, so a dense row and
+        // its nonzeros (column order) bound identically, and a 1-row layer
+        // reduces to it exactly
+        let dense: Vec<i8> = vec![3, 0, -2, 0, 0, 5];
+        let nonzeros: Vec<i8> = vec![3, -2, 5];
+        let l = layer_from(dense.clone(), 1, 6, -128, 8);
+        let window = centered_input_range(&l.x_qp);
+        for policy in Policy::ALL {
+            assert_eq!(row_range(&dense, window, policy), row_range(&nonzeros, window, policy));
+            assert_eq!(row_range(&dense, window, policy), analytic_layer_range(&l, policy));
+            assert_eq!(row_bits(&dense, window, policy), analytic_layer_bits(&l, policy));
+        }
+        // empty row: the accumulator never leaves 0
+        assert_eq!(row_range(&[], window, Policy::Sorted), (0, 0));
+        assert_eq!(row_bits(&[], window, Policy::Clip), 2);
     }
 
     #[test]

@@ -46,7 +46,10 @@ use crate::formats::pqsw::PqswModel;
 use crate::nn::QLayer;
 use crate::util::json::{self, Json};
 
-pub use analytic::{analytic_layer_bits, analytic_layer_range, centered_input_range, max_row_nnz};
+pub use analytic::{
+    analytic_layer_bits, analytic_layer_range, centered_input_range, max_row_nnz, row_bits,
+    row_range,
+};
 pub use calibrate::{observe, observe_batches, CALIBRATION_BITS};
 
 /// Which planner produced a plan's enforced widths.

@@ -1,0 +1,895 @@
+//! Accumulator-budget projection + Pareto sweep (the inverse of
+//! `crate::plan`).
+//!
+//! The planner (`plan::analytic`) *measures* a fixed model: given weights,
+//! it reports the minimal accumulator width with a no-persistent-overflow
+//! guarantee. This module runs the other direction — given a **width
+//! budget**, it *makes the budget true* by editing the quantized weights,
+//! then searches the (budget × N:M sparsity) grid for the accuracy/width
+//! Pareto frontier, fig5-style, through the serving stack.
+//!
+//! # Projection math
+//!
+//! [`project`] enforces `analytic_layer_bits(layer, policy) <= budget` for
+//! every q-layer, row by row. Two moves, applied in order:
+//!
+//! 1. **N:M sparsity knob** (optional): per group of `m` consecutive
+//!    weights along the contraction axis, keep the `n` largest-magnitude
+//!    entries (ties break to the lower index) and zero the rest — the
+//!    paper's prune step. Zeroing a weight removes its term from the
+//!    analytic bound, so tighter budgets are met by sparsity first.
+//! 2. **Integer soft-thresholding**: for each row `w`, find the smallest
+//!    integer `tau >= 0` such that the shrunk row
+//!    `w'_j = sign(w_j) * max(|w_j| - tau, 0)` satisfies the bound, i.e.
+//!    `plan::row_range(w', window, policy) ⊆ acc_range(budget)`. This is
+//!    the integer-lattice analogue of the euclidean projection of the row
+//!    onto an ℓ1 ball (soft-thresholding IS that projection's closed
+//!    form), restricted to the thresholds where the analytic bound — a
+//!    weighted ℓ1 norm of the row for final-sum policies — is what
+//!    shrinks. Small weights are zeroed before large ones are clipped, so
+//!    the A2Q-style "scale/clip rows" lands as "sparsify, then shave".
+//!
+//! Every per-weight magnitude is non-increasing in `tau`, so both the
+//! final-sum bound and the `Clip`/`Wrap` prefix bound shrink termwise:
+//! the fitting predicate is monotone and the binary search for the
+//! minimal `tau` is exact. `tau = |w|_max` zeroes the row (bound `(0,0)`,
+//! 2 bits), so any `budget >= 2` is feasible. The projection is
+//! **idempotent** — a row that already fits takes `tau = 0`, and the N:M
+//! step keeps exactly the surviving nonzeros — and **deterministic**, so
+//! the Python exporter (`python/compile/plan.py`) reproduces it
+//! bit-for-bit (pinned by known-answer tests on both sides).
+//!
+//! The projected model carries an embedded [`AccumPlan`] (planner
+//! `Analytic`, per-layer `acc_bits` = post-projection analytic width ≤
+//! budget) and fresh layer checksums, so `PqswModel::save` writes a
+//! version-2 `.pqsw` that the existing router/serving path loads and
+//! enforces unchanged.
+//!
+//! # Grid semantics
+//!
+//! [`pareto`] walks the full cartesian grid `budgets × nm`: each point
+//! clones the model, projects it to that (budget, N:M) pair, and
+//! evaluates accuracy through [`EvalService`] (all candidates share one
+//! [`ComputePool`]). The **baseline** is the unprojected model, plan
+//! stripped, at 32-bit accumulators. When `SweepConfig::budgets` is
+//! empty the grid derives from the unprojected model's widest analytic
+//! layer `M` as `[M, M-1, M-2]` — the no-op point plus two narrowing
+//! steps. A point is **dominated** when another point has width ≤ its
+//! width and accuracy ≥ its accuracy, strictly better in at least one;
+//! the non-dominated rest is the Pareto frontier.
+//!
+//! Accuracy needs labels; [`reference_dataset`] builds a seeded synthetic
+//! set labeled by the *unprojected* model at exact/32-bit arithmetic, so
+//! baseline accuracy is 1.0 by construction and a candidate's accuracy
+//! reads as agreement with the wide-accumulator reference. Callers with
+//! real datasets pass them instead.
+//!
+//! # JSON schema (the `pqs sweep` output and the bench `sweep` section)
+//!
+//! ```text
+//! {"tag": "sweep", "v": 1,
+//!  "model": str, "policy": str, "samples": int, "tolerance": float,
+//!  "baseline": {"acc_bits": 32, "accuracy": float,
+//!               "analytic_bits_max": int},
+//!  "points": [{"budget": int, "nm": "dense" | "n:m",
+//!              "width_bits": int,        // enforced max plan width
+//!              "accuracy": float,
+//!              "accuracy_ok": bool,      // >= baseline - tolerance
+//!              "budget_ok": bool,        // width_bits <= budget
+//!              "persistent_dots": int,   // over the whole eval
+//!              "policy_event_dots": int,
+//!              "sparsity": float, "tau_max": int,
+//!              "pruned": int, "clipped": int,
+//!              "dominated": bool, "eval_ms": float}, ...],
+//!  "frontier": [[width_bits, accuracy], ...]}  // non-dominated, width asc
+//! ```
+
+use std::sync::Arc;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::accum::{self, Policy};
+use crate::coordinator::EvalService;
+use crate::data::Dataset;
+use crate::formats::pqsw::{PqswModel, Weights};
+use crate::nn::engine::{Engine, EngineConfig};
+use crate::nn::QLayer;
+use crate::plan::{
+    analytic_layer_bits, centered_input_range, max_row_nnz, row_range, AccumPlan, LayerPlan,
+    PlannerKind,
+};
+use crate::util::json::{self, Json};
+use crate::util::pool::{self, ComputePool};
+use crate::util::rng::Pcg32;
+
+/// Widest supported projection budget: `accum::acc_range` shifts `1i64`
+/// by `budget - 1`, and 62 already exceeds any real accumulator.
+pub const MAX_BUDGET_BITS: u32 = 62;
+
+/// An N:M structured-sparsity spec: keep the `keep` largest-magnitude
+/// weights per group of `m` consecutive weights.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct NmSpec {
+    pub keep: usize,
+    pub m: usize,
+}
+
+impl NmSpec {
+    /// Parse one grid token: `"dense"` (no pruning) or `"N:M"`.
+    pub fn parse(s: &str) -> Result<Option<NmSpec>> {
+        let t = s.trim();
+        if t.eq_ignore_ascii_case("dense") {
+            return Ok(None);
+        }
+        let (n, m) = t
+            .split_once(':')
+            .ok_or_else(|| anyhow!("N:M spec {t:?}: expected \"dense\" or \"N:M\" (e.g. 2:4)"))?;
+        let keep: usize = n.trim().parse().map_err(|_| anyhow!("N:M spec {t:?}: bad N"))?;
+        let m: usize = m.trim().parse().map_err(|_| anyhow!("N:M spec {t:?}: bad M"))?;
+        if keep < 1 || m < 1 || keep > m {
+            bail!("N:M spec {t:?}: need 1 <= N <= M");
+        }
+        Ok(Some(NmSpec { keep, m }))
+    }
+
+    pub fn label(nm: Option<NmSpec>) -> String {
+        match nm {
+            Some(s) => format!("{}:{}", s.keep, s.m),
+            None => "dense".to_string(),
+        }
+    }
+}
+
+/// Knobs for a single projection (see the module docs).
+#[derive(Clone, Copy, Debug)]
+pub struct ProjectConfig {
+    /// accumulation policy whose analytic bound the budget constrains
+    pub policy: Policy,
+    /// per-layer accumulator width to make true (>= 2)
+    pub budget: u32,
+    /// optional N:M sparsity applied before thresholding
+    pub nm: Option<NmSpec>,
+}
+
+/// Per-layer record of what [`project`] did.
+#[derive(Clone, Debug)]
+pub struct LayerProjection {
+    pub name: String,
+    pub k: usize,
+    /// analytic width before / after projection
+    pub bits_before: u32,
+    pub bits_after: u32,
+    /// largest soft-threshold any row of the layer needed
+    pub tau_max: u32,
+    /// weights zeroed by the N:M knob
+    pub pruned: usize,
+    /// weights changed by soft-thresholding (shrunk or zeroed)
+    pub clipped: usize,
+}
+
+/// What [`project`] did to the whole model.
+#[derive(Clone, Debug)]
+pub struct ProjectionReport {
+    pub policy: Policy,
+    pub budget: u32,
+    pub nm: Option<NmSpec>,
+    pub layers: Vec<LayerProjection>,
+    pub sparsity_before: f64,
+    pub sparsity_after: f64,
+}
+
+impl ProjectionReport {
+    /// Did the projection edit any weight at all?
+    pub fn changed(&self) -> bool {
+        self.layers.iter().any(|l| l.pruned > 0 || l.clipped > 0)
+    }
+
+    pub fn tau_max(&self) -> u32 {
+        self.layers.iter().map(|l| l.tau_max).max().unwrap_or(0)
+    }
+
+    pub fn pruned(&self) -> usize {
+        self.layers.iter().map(|l| l.pruned).sum()
+    }
+
+    pub fn clipped(&self) -> usize {
+        self.layers.iter().map(|l| l.clipped).sum()
+    }
+
+    /// The per-layer table `pqs project` prints.
+    pub fn print(&self) {
+        println!(
+            "project: policy={} budget={} nm={} sparsity {:.3} -> {:.3}",
+            self.policy.name(),
+            self.budget,
+            NmSpec::label(self.nm),
+            self.sparsity_before,
+            self.sparsity_after,
+        );
+        println!(
+            "{:<14} {:>8} {:>8} {:>7} {:>5} {:>8} {:>8}",
+            "layer", "k", "before", "after", "tau", "pruned", "clipped"
+        );
+        for l in &self.layers {
+            println!(
+                "{:<14} {:>8} {:>8} {:>7} {:>5} {:>8} {:>8}",
+                l.name, l.k, l.bits_before, l.bits_after, l.tau_max, l.pruned, l.clipped
+            );
+        }
+    }
+}
+
+/// Soft-threshold one weight toward zero by `tau` magnitude units.
+#[inline]
+fn soft(v: i8, tau: u32) -> i8 {
+    let mag = (v as i32).abs() - tau as i32;
+    if mag <= 0 {
+        0
+    } else if v > 0 {
+        mag as i8
+    } else {
+        (-mag) as i8
+    }
+}
+
+/// Keep the `keep` largest-magnitude weights per group of `m` consecutive
+/// entries of `row` (ties break to the lower index — the order NumPy's
+/// stable argsort of descending magnitudes produces, so the Python
+/// exporter matches exactly); zero the rest. Returns how many weights
+/// were newly zeroed. A trailing short group keeps up to `keep` entries.
+pub fn nm_prune_row(row: &mut [i8], keep: usize, m: usize) -> usize {
+    if m == 0 || keep >= m {
+        return 0;
+    }
+    let mut zeroed = 0;
+    let mut order: Vec<usize> = Vec::with_capacity(m);
+    for g in row.chunks_mut(m) {
+        order.clear();
+        order.extend(0..g.len());
+        order.sort_by(|&a, &b| (g[b] as i32).abs().cmp(&(g[a] as i32).abs()).then(a.cmp(&b)));
+        for &i in order.iter().skip(keep) {
+            if g[i] != 0 {
+                g[i] = 0;
+                zeroed += 1;
+            }
+        }
+    }
+    zeroed
+}
+
+/// Smallest integer `tau` whose soft-thresholded row fits
+/// `acc_range(budget)` under `policy` over the centered input `window`.
+/// Monotone predicate (every magnitude is non-increasing in `tau`), so
+/// the binary search is exact; `tau = 128` zeroes any i8 row, so a
+/// result always exists for `budget >= 2`.
+fn smallest_fitting_tau(row: &[i8], window: (i64, i64), policy: Policy, budget: u32) -> u32 {
+    let (blo, bhi) = accum::acc_range(budget);
+    let mut scratch: Vec<i8> = Vec::with_capacity(row.len());
+    let mut fits = |tau: u32| {
+        scratch.clear();
+        scratch.extend(row.iter().map(|&v| soft(v, tau)));
+        let (lo, hi) = row_range(&scratch, window, policy);
+        lo >= blo && hi <= bhi
+    };
+    if fits(0) {
+        return 0;
+    }
+    // i8 magnitudes reach 128 (v = -128), so tau = 128 always zeroes
+    let (mut lo, mut hi) = (1u32, 128u32);
+    while lo < hi {
+        let mid = lo + (hi - lo) / 2;
+        if fits(mid) {
+            hi = mid;
+        } else {
+            lo = mid + 1;
+        }
+    }
+    lo
+}
+
+fn count_zeros(model: &PqswModel) -> (usize, usize) {
+    let (mut zeros, mut total) = (0usize, 0usize);
+    for (_, q) in model.q_layers() {
+        let w = q.wq.as_slice();
+        zeros += w.iter().filter(|&&v| v == 0).count();
+        total += w.len();
+    }
+    (zeros, total)
+}
+
+/// Project `model` in place so every q-layer satisfies
+/// `analytic_layer_bits(layer, cfg.policy) <= cfg.budget` (see the module
+/// docs for the math). Embeds the resulting analytic [`AccumPlan`] and
+/// fresh layer checksums, so saving yields a version-2 `.pqsw` the
+/// serving path enforces as-is.
+pub fn project(model: &mut PqswModel, cfg: &ProjectConfig) -> Result<ProjectionReport> {
+    if cfg.budget < 2 || cfg.budget > MAX_BUDGET_BITS {
+        bail!("projection budget {} out of range 2..={MAX_BUDGET_BITS}", cfg.budget);
+    }
+    if let Some(nm) = cfg.nm {
+        if nm.keep < 1 || nm.keep > nm.m {
+            bail!("N:M spec {}:{}: need 1 <= N <= M", nm.keep, nm.m);
+        }
+    }
+    let abits = model.abits;
+    let group_m = cfg.nm.map(|s| s.m).unwrap_or(model.nm_m);
+    let (zeros_before, total_w) = count_zeros(model);
+    if total_w == 0 {
+        bail!("model {:?} has no quantized layers to project", model.name);
+    }
+
+    let mut layers = Vec::new();
+    let mut plan_rows = Vec::new();
+    for node in model.graph.iter_mut() {
+        let Some(meta) = node.q.as_mut() else { continue };
+        let before = QLayer::from_meta(meta, abits, group_m);
+        let window = centered_input_range(&before.x_qp);
+        let bits_before = analytic_layer_bits(&before, cfg.policy);
+        drop(before);
+
+        let (oc, k) = (meta.oc, meta.k);
+        let mut dense = meta.wq.to_owned_vec();
+        let (mut pruned, mut clipped, mut tau_max) = (0usize, 0usize, 0u32);
+        for r in 0..oc {
+            let row = &mut dense[r * k..(r + 1) * k];
+            if let Some(nm) = cfg.nm {
+                pruned += nm_prune_row(row, nm.keep, nm.m);
+            }
+            let tau = smallest_fitting_tau(row, window, cfg.policy, cfg.budget);
+            if tau > 0 {
+                tau_max = tau_max.max(tau);
+                for v in row.iter_mut() {
+                    let nv = soft(*v, tau);
+                    if nv != *v {
+                        clipped += 1;
+                        *v = nv;
+                    }
+                }
+            }
+        }
+        meta.wq = Weights::Owned(dense);
+        if cfg.nm.is_some() {
+            meta.prune = true;
+        }
+
+        let after = QLayer::from_meta(meta, abits, group_m);
+        let bits_after = analytic_layer_bits(&after, cfg.policy);
+        if bits_after > cfg.budget {
+            bail!(
+                "internal: layer {:?} projected to {} bits > budget {}",
+                meta.name,
+                bits_after,
+                cfg.budget
+            );
+        }
+        plan_rows.push(LayerPlan {
+            name: meta.name.clone(),
+            k,
+            nnz_max: max_row_nnz(&after),
+            analytic_bits: bits_after,
+            calibrated_bits: None,
+            acc_bits: bits_after,
+        });
+        layers.push(LayerProjection {
+            name: meta.name.clone(),
+            k,
+            bits_before,
+            bits_after,
+            tau_max,
+            pruned,
+            clipped,
+        });
+    }
+    if plan_rows.is_empty() {
+        bail!("model {:?} has no quantized layers to project", model.name);
+    }
+
+    model.plan = Some(AccumPlan {
+        policy: cfg.policy,
+        planner: PlannerKind::Analytic,
+        budget: 0.0,
+        margin: 0,
+        samples: 0,
+        per_layer: plan_rows,
+    });
+    if let Some(nm) = cfg.nm {
+        model.nm_m = nm.m;
+    }
+    let (zeros_after, _) = count_zeros(model);
+    model.achieved_sparsity = zeros_after as f64 / total_w as f64;
+    // the weights changed: re-stamp the integrity digests so
+    // verify_integrity (and the next save) see the live bytes
+    model.attach_checksums();
+
+    Ok(ProjectionReport {
+        policy: cfg.policy,
+        budget: cfg.budget,
+        nm: cfg.nm,
+        layers,
+        sparsity_before: zeros_before as f64 / total_w as f64,
+        sparsity_after: zeros_after as f64 / total_w as f64,
+    })
+}
+
+/// Widest per-layer analytic width of the (unprojected) model under
+/// `policy` — the grid's natural "no-op" budget anchor.
+pub fn max_analytic_bits(model: &PqswModel, policy: Policy) -> Result<u32> {
+    let mut max = None;
+    for (_, meta) in model.q_layers() {
+        let ql = QLayer::from_meta(meta, model.abits, model.nm_m);
+        let b = analytic_layer_bits(&ql, policy);
+        max = Some(max.map_or(b, |m: u32| m.max(b)));
+    }
+    max.ok_or_else(|| anyhow!("model {:?} has no quantized layers", model.name))
+}
+
+/// Build a seeded synthetic dataset labeled by `model` itself at
+/// exact/32-bit arithmetic (plan stripped): a candidate's accuracy on it
+/// is its agreement with the wide-accumulator reference, and the
+/// unprojected baseline scores 1.0 by construction.
+pub fn reference_dataset(model: &PqswModel, n: usize, seed: u64) -> Result<Dataset> {
+    let (c, h, w) = match model.input_shape[..] {
+        [c, h, w] => (c, h, w),
+        [d] => (1, d, 1),
+        _ => bail!("model {:?}: unsupported input shape {:?}", model.name, model.input_shape),
+    };
+    let dim = c * h * w;
+    if n == 0 || dim == 0 {
+        bail!("reference dataset needs n > 0 and a non-empty input shape");
+    }
+    let mut rng = Pcg32::new(seed);
+    let pixels: Vec<u8> = (0..n * dim).map(|_| rng.below(256) as u8).collect();
+
+    let mut reference = model.clone();
+    reference.plan = None;
+    let mut eng = Engine::new(
+        &reference,
+        EngineConfig { policy: Policy::Exact, acc_bits: 32, ..Default::default() },
+    );
+    let mut labels = Vec::with_capacity(n);
+    let batch = 64usize;
+    let mut start = 0;
+    while start < n {
+        let take = batch.min(n - start);
+        let imgs: Vec<f32> = pixels[start * dim..(start + take) * dim]
+            .iter()
+            .map(|&v| v as f32 / 255.0)
+            .collect();
+        let out = eng.forward(&imgs, take)?;
+        if out.classes > 256 {
+            bail!("model {:?}: {} classes exceed u8 labels", model.name, out.classes);
+        }
+        for j in 0..take {
+            labels.push(out.argmax(j) as u8);
+        }
+        start += take;
+    }
+    Ok(Dataset { n, c, h, w, pixels, labels })
+}
+
+/// Grid + evaluation knobs for [`pareto`].
+#[derive(Clone, Debug)]
+pub struct SweepConfig {
+    /// accumulation policy for projection AND evaluation
+    pub policy: Policy,
+    /// width budgets to project to (empty = derive `[M, M-1, M-2]` from
+    /// the unprojected model's widest analytic layer `M`)
+    pub budgets: Vec<u32>,
+    /// N:M axis (empty = dense only; `None` entries = dense)
+    pub nm: Vec<Option<NmSpec>>,
+    /// evaluation batch size / worker threads
+    pub batch: usize,
+    pub threads: usize,
+    /// declared accuracy tolerance: a point is `accuracy_ok` when its
+    /// accuracy >= baseline accuracy - tolerance
+    pub tolerance: f64,
+    /// evaluation sample cap (None = the whole dataset)
+    pub limit: Option<usize>,
+}
+
+impl Default for SweepConfig {
+    fn default() -> Self {
+        SweepConfig {
+            policy: Policy::Sorted,
+            budgets: Vec::new(),
+            nm: vec![None],
+            batch: 64,
+            threads: pool::default_threads(),
+            tolerance: 0.05,
+            limit: None,
+        }
+    }
+}
+
+/// One evaluated grid point.
+#[derive(Clone, Debug)]
+pub struct SweepPoint {
+    pub budget: u32,
+    pub nm: Option<NmSpec>,
+    /// enforced operating width: the embedded plan's widest layer
+    pub width_bits: u32,
+    pub accuracy: f64,
+    pub accuracy_ok: bool,
+    pub budget_ok: bool,
+    pub persistent_dots: u64,
+    pub policy_event_dots: u64,
+    pub sparsity: f64,
+    pub tau_max: u32,
+    pub pruned: usize,
+    pub clipped: usize,
+    pub dominated: bool,
+    pub eval_ms: f64,
+}
+
+/// The sweep's full result (points carry dominance marks; see the module
+/// docs for the JSON schema).
+#[derive(Clone, Debug)]
+pub struct SweepResult {
+    pub model: String,
+    pub policy: Policy,
+    pub samples: usize,
+    pub tolerance: f64,
+    pub baseline_accuracy: f64,
+    /// the unprojected model's widest analytic layer
+    pub analytic_bits_max: u32,
+    pub points: Vec<SweepPoint>,
+}
+
+/// Mark every point dominated by another (width <=, accuracy >=, strictly
+/// better in at least one).
+fn mark_dominated(points: &mut [SweepPoint]) {
+    let snap: Vec<(u32, f64)> = points.iter().map(|p| (p.width_bits, p.accuracy)).collect();
+    for (i, p) in points.iter_mut().enumerate() {
+        p.dominated = snap.iter().enumerate().any(|(j, &(w, a))| {
+            j != i && w <= p.width_bits && a >= p.accuracy && (w < p.width_bits || a > p.accuracy)
+        });
+    }
+}
+
+impl SweepResult {
+    /// Non-dominated points, narrowest first.
+    pub fn frontier(&self) -> Vec<&SweepPoint> {
+        let mut f: Vec<&SweepPoint> = self.points.iter().filter(|p| !p.dominated).collect();
+        f.sort_by(|a, b| {
+            let acc = a.accuracy.partial_cmp(&b.accuracy).unwrap_or(std::cmp::Ordering::Equal);
+            a.width_bits.cmp(&b.width_bits).then(acc)
+        });
+        f
+    }
+
+    /// Every point within budget, overflow-free, and within tolerance?
+    pub fn all_ok(&self) -> bool {
+        self.points
+            .iter()
+            .all(|p| p.budget_ok && p.accuracy_ok && p.persistent_dots == 0)
+    }
+
+    /// Serialize as the `sweep` JSON (schema in the module docs).
+    pub fn to_json(&self) -> Json {
+        let points: Vec<Json> = self
+            .points
+            .iter()
+            .map(|p| {
+                json::obj(vec![
+                    ("budget", json::num(p.budget as f64)),
+                    ("nm", json::s(&NmSpec::label(p.nm))),
+                    ("width_bits", json::num(p.width_bits as f64)),
+                    ("accuracy", json::num(p.accuracy)),
+                    ("accuracy_ok", Json::Bool(p.accuracy_ok)),
+                    ("budget_ok", Json::Bool(p.budget_ok)),
+                    ("persistent_dots", json::num(p.persistent_dots as f64)),
+                    ("policy_event_dots", json::num(p.policy_event_dots as f64)),
+                    ("sparsity", json::num(p.sparsity)),
+                    ("tau_max", json::num(p.tau_max as f64)),
+                    ("pruned", json::num(p.pruned as f64)),
+                    ("clipped", json::num(p.clipped as f64)),
+                    ("dominated", Json::Bool(p.dominated)),
+                    ("eval_ms", json::num(p.eval_ms)),
+                ])
+            })
+            .collect();
+        let frontier: Vec<Json> = self
+            .frontier()
+            .iter()
+            .map(|p| Json::Arr(vec![json::num(p.width_bits as f64), json::num(p.accuracy)]))
+            .collect();
+        json::obj(vec![
+            ("tag", json::s("sweep")),
+            ("v", json::num(1.0)),
+            ("model", json::s(&self.model)),
+            ("policy", json::s(self.policy.name())),
+            ("samples", json::num(self.samples as f64)),
+            ("tolerance", json::num(self.tolerance)),
+            (
+                "baseline",
+                json::obj(vec![
+                    ("acc_bits", json::num(32.0)),
+                    ("accuracy", json::num(self.baseline_accuracy)),
+                    ("analytic_bits_max", json::num(self.analytic_bits_max as f64)),
+                ]),
+            ),
+            ("points", Json::Arr(points)),
+            ("frontier", Json::Arr(frontier)),
+        ])
+    }
+
+    /// The table `pqs sweep` prints.
+    pub fn print(&self) {
+        println!(
+            "sweep: model={} policy={} samples={} tolerance={} baseline acc {:.4} @32b \
+             (analytic max {} bits)",
+            self.model,
+            self.policy.name(),
+            self.samples,
+            self.tolerance,
+            self.baseline_accuracy,
+            self.analytic_bits_max,
+        );
+        println!(
+            "{:>6} {:>6} {:>6} {:>9} {:>8} {:>8} {:>9} {:>5} {:>7}",
+            "budget", "nm", "width", "accuracy", "d-acc", "persist", "sparsity", "tau", "pareto"
+        );
+        for p in &self.points {
+            println!(
+                "{:>6} {:>6} {:>6} {:>9.4} {:>+8.4} {:>8} {:>9.3} {:>5} {:>7}",
+                p.budget,
+                NmSpec::label(p.nm),
+                p.width_bits,
+                p.accuracy,
+                p.accuracy - self.baseline_accuracy,
+                p.persistent_dots,
+                p.sparsity,
+                p.tau_max,
+                if p.dominated { "" } else { "*" },
+            );
+        }
+    }
+}
+
+/// Walk the (budget × N:M) grid: project each candidate, serve it through
+/// [`EvalService`] at its budget width (one shared [`ComputePool`] across
+/// all candidates), and mark the accuracy/width Pareto frontier. See the
+/// module docs for grid semantics and the JSON schema.
+pub fn pareto(model: &PqswModel, ds: &Dataset, cfg: &SweepConfig) -> Result<SweepResult> {
+    let analytic_max = max_analytic_bits(model, cfg.policy)?;
+    let budgets: Vec<u32> = if cfg.budgets.is_empty() {
+        let mut b: Vec<u32> = (0..3).map(|d| analytic_max.saturating_sub(d)).collect();
+        b.retain(|&v| v >= 2);
+        b.dedup();
+        b
+    } else {
+        cfg.budgets.clone()
+    };
+    let nm_axis: &[Option<NmSpec>] = if cfg.nm.is_empty() { &[None] } else { &cfg.nm };
+    let threads = cfg.threads.max(1);
+    let pool = (threads > 1).then(|| Arc::new(ComputePool::new(threads)));
+
+    let eval = |m: &PqswModel, bits: u32| {
+        let ecfg = EngineConfig {
+            policy: cfg.policy,
+            acc_bits: bits,
+            collect_stats: true,
+            ..Default::default()
+        };
+        let mut svc = EvalService::new(m, ecfg).with_threads(threads).with_batch(cfg.batch);
+        if let Some(p) = &pool {
+            svc = svc.with_pool(Arc::clone(p));
+        }
+        svc.evaluate(ds, cfg.limit)
+    };
+
+    // baseline: the unprojected model, plan stripped, at 32 bits
+    let mut base = model.clone();
+    base.plan = None;
+    let baseline = eval(&base, 32)?;
+
+    let mut points = Vec::with_capacity(budgets.len() * nm_axis.len());
+    for &budget in &budgets {
+        for &nm in nm_axis {
+            let mut cand = model.clone();
+            cand.plan = None;
+            let rep = project(&mut cand, &ProjectConfig { policy: cfg.policy, budget, nm })?;
+            let out = eval(&cand, budget)?;
+            let stats = out.report.total();
+            let width = cand.plan.as_ref().map(|p| p.min_safe_bits()).unwrap_or(budget);
+            points.push(SweepPoint {
+                budget,
+                nm,
+                width_bits: width,
+                accuracy: out.accuracy,
+                accuracy_ok: out.accuracy >= baseline.accuracy - cfg.tolerance,
+                budget_ok: width <= budget,
+                persistent_dots: stats.persistent_dots,
+                policy_event_dots: stats.policy_event_dots,
+                sparsity: rep.sparsity_after,
+                tau_max: rep.tau_max(),
+                pruned: rep.pruned(),
+                clipped: rep.clipped(),
+                dominated: false,
+                eval_ms: out.wall_ms,
+            });
+        }
+    }
+    mark_dominated(&mut points);
+    Ok(SweepResult {
+        model: model.name.clone(),
+        policy: cfg.policy,
+        samples: baseline.samples,
+        tolerance: cfg.tolerance,
+        baseline_accuracy: baseline.accuracy,
+        analytic_bits_max: analytic_max,
+        points,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models;
+
+    #[test]
+    fn nm_spec_parses_and_rejects() {
+        assert_eq!(NmSpec::parse("dense").unwrap(), None);
+        assert_eq!(NmSpec::parse(" 2:4 ").unwrap(), Some(NmSpec { keep: 2, m: 4 }));
+        assert_eq!(NmSpec::label(Some(NmSpec { keep: 2, m: 4 })), "2:4");
+        assert_eq!(NmSpec::label(None), "dense");
+        for bad in ["", "2", "0:4", "5:4", "a:b", "2:0"] {
+            assert!(NmSpec::parse(bad).is_err(), "{bad:?} should not parse");
+        }
+    }
+
+    #[test]
+    fn nm_prune_keeps_largest_with_stable_ties() {
+        // magnitudes 3,5,5,1 keep 2 -> the two 5s? no: |3|,|5|,|5|,|1|;
+        // keep 2 largest = both 5s; tie between equal magnitudes keeps
+        // the lower index first (both survive here)
+        let mut row = vec![3, -5, 5, 1];
+        assert_eq!(nm_prune_row(&mut row, 2, 4), 2);
+        assert_eq!(row, vec![0, -5, 5, 0]);
+        // tie at the keep boundary: |2| vs |2| -> lower index survives
+        let mut row = vec![-2, 2, 1, 0];
+        assert_eq!(nm_prune_row(&mut row, 1, 4), 2);
+        assert_eq!(row, vec![-2, 0, 0, 0]);
+        // trailing short group prunes too; pre-existing zeros don't count
+        let mut row = vec![4, 0, -1, 7, 6];
+        assert_eq!(nm_prune_row(&mut row, 1, 3), 2);
+        assert_eq!(row, vec![4, 0, 0, 7, 0]);
+        // keep >= m is a no-op
+        let mut row = vec![1, 2, 3];
+        assert_eq!(nm_prune_row(&mut row, 3, 3), 0);
+        assert_eq!(row, vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn soft_threshold_shrinks_toward_zero() {
+        assert_eq!(soft(5, 0), 5);
+        assert_eq!(soft(5, 2), 3);
+        assert_eq!(soft(-5, 2), -3);
+        assert_eq!(soft(2, 2), 0);
+        assert_eq!(soft(-1, 2), 0);
+        assert_eq!(soft(-128, 0), -128);
+        assert_eq!(soft(-128, 127), -1);
+        assert_eq!(soft(-128, 128), 0);
+        assert_eq!(soft(127, 128), 0);
+    }
+
+    #[test]
+    fn projection_noop_when_budget_is_loose() {
+        let mut model = models::synthetic_linear(16, 4);
+        let before: Vec<i8> = model.q_layers().next().unwrap().1.wq.to_owned_vec();
+        let cfg = ProjectConfig { policy: Policy::Sorted, budget: 32, nm: None };
+        let rep = project(&mut model, &cfg).unwrap();
+        assert!(!rep.changed(), "{rep:?}");
+        assert_eq!(model.q_layers().next().unwrap().1.wq.as_slice(), &before[..]);
+        let plan = model.plan.as_ref().expect("plan embedded");
+        assert!(plan.min_safe_bits() <= 32);
+        assert_eq!(plan.per_layer.len(), 1);
+        // integrity digests were re-stamped against the live bytes
+        model.verify_integrity().unwrap();
+    }
+
+    #[test]
+    fn projection_rejects_bad_budgets() {
+        let mut model = models::synthetic_linear(8, 3);
+        for budget in [0u32, 1, MAX_BUDGET_BITS + 1] {
+            let cfg = ProjectConfig { policy: Policy::Sorted, budget, nm: None };
+            assert!(project(&mut model, &cfg).is_err(), "budget {budget} accepted");
+        }
+    }
+
+    #[test]
+    fn reference_dataset_is_seed_deterministic_and_self_consistent() {
+        let model = models::synthetic_conv(2, 6, 6, 4, 10);
+        let a = reference_dataset(&model, 24, 7).unwrap();
+        let b = reference_dataset(&model, 24, 7).unwrap();
+        assert_eq!(a.pixels, b.pixels);
+        assert_eq!(a.labels, b.labels);
+        assert_eq!(a.n, 24);
+        assert_eq!((a.c, a.h, a.w), (2, 6, 6));
+        let c = reference_dataset(&model, 24, 8).unwrap();
+        assert_ne!(a.pixels, c.pixels, "seed must matter");
+    }
+
+    #[test]
+    fn dominance_marks_the_frontier() {
+        let mk = |width: u32, acc: f64| SweepPoint {
+            budget: width,
+            nm: None,
+            width_bits: width,
+            accuracy: acc,
+            accuracy_ok: true,
+            budget_ok: true,
+            persistent_dots: 0,
+            policy_event_dots: 0,
+            sparsity: 0.0,
+            tau_max: 0,
+            pruned: 0,
+            clipped: 0,
+            dominated: false,
+            eval_ms: 0.0,
+        };
+        // (10, .9) dominates (12, .8); (8, .7) and (10, .9) are both on
+        // the frontier; the duplicate of (10, .9) is NOT dominated (no
+        // strict improvement exists)
+        let mut pts = vec![mk(10, 0.9), mk(12, 0.8), mk(8, 0.7), mk(10, 0.9)];
+        mark_dominated(&mut pts);
+        assert!(!pts[0].dominated);
+        assert!(pts[1].dominated);
+        assert!(!pts[2].dominated);
+        assert!(!pts[3].dominated);
+        let res = SweepResult {
+            model: "t".into(),
+            policy: Policy::Sorted,
+            samples: 0,
+            tolerance: 0.0,
+            baseline_accuracy: 1.0,
+            analytic_bits_max: 12,
+            points: pts,
+        };
+        let widths: Vec<u32> = res.frontier().iter().map(|p| p.width_bits).collect();
+        assert_eq!(widths, vec![8, 10, 10]);
+    }
+
+    #[test]
+    fn sweep_json_matches_documented_schema() {
+        let res = SweepResult {
+            model: "t".into(),
+            policy: Policy::Sorted,
+            samples: 5,
+            tolerance: 0.1,
+            baseline_accuracy: 1.0,
+            analytic_bits_max: 14,
+            points: vec![SweepPoint {
+                budget: 14,
+                nm: Some(NmSpec { keep: 2, m: 4 }),
+                width_bits: 13,
+                accuracy: 0.8,
+                accuracy_ok: false,
+                budget_ok: true,
+                persistent_dots: 0,
+                policy_event_dots: 2,
+                sparsity: 0.5,
+                tau_max: 1,
+                pruned: 8,
+                clipped: 3,
+                dominated: false,
+                eval_ms: 1.5,
+            }],
+        };
+        let j = Json::parse(&res.to_json().to_string()).unwrap();
+        assert_eq!(j.get("tag").and_then(Json::as_str), Some("sweep"));
+        let base = j.get("baseline").unwrap();
+        assert_eq!(base.get("acc_bits").and_then(Json::as_usize), Some(32));
+        assert_eq!(base.get("analytic_bits_max").and_then(Json::as_usize), Some(14));
+        let p = j.get("points").and_then(Json::as_arr).unwrap()[0].clone();
+        let keys = "budget nm width_bits accuracy accuracy_ok budget_ok persistent_dots \
+                    policy_event_dots sparsity tau_max pruned clipped dominated eval_ms";
+        for key in keys.split_whitespace() {
+            assert!(p.get(key).is_some(), "point missing {key}");
+        }
+        assert_eq!(p.get("nm").and_then(Json::as_str), Some("2:4"));
+        let f = j.get("frontier").and_then(Json::as_arr).unwrap();
+        assert_eq!(f.len(), 1);
+        assert_eq!(f[0].idx(0).and_then(Json::as_usize), Some(13));
+    }
+}

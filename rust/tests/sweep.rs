@@ -1,0 +1,250 @@
+//! Budget-projection + Pareto-sweep acceptance suite (artifact-free).
+//!
+//! The ISSUE 9 contract, end to end on the synthetic models:
+//! projection is idempotent and meets the analytic budget for every layer
+//! under all six policies; a projected model serves a 1k-input sweep at
+//! the budget width with ZERO persistent overflows while the unprojected
+//! control at the same width does overflow (proving the zero comes from
+//! the projection); projected models round-trip through `.pqsw`
+//! byte-identically with the plan embedded; the pool-backed and scoped
+//! [`EvalService`] paths are bit-identical; and the Rust projection lands
+//! on the exact constants the Python exporter pins
+//! (`python/tests/test_plan.py` — same weights, same FNV-1a checksum).
+
+use std::sync::Arc;
+
+use pqs::accum::Policy;
+use pqs::coordinator::EvalService;
+use pqs::formats::pqsw::PqswModel;
+use pqs::nn::engine::{Engine, EngineConfig};
+use pqs::overflow::OverflowStats;
+use pqs::sweep::{self, NmSpec, ProjectConfig, SweepConfig};
+use pqs::util::pool::ComputePool;
+use pqs::util::rng::Pcg32;
+
+/// The 1k-input sweep of the acceptance criterion, batched.
+fn serve_sweep(eng: &mut Engine, dim: usize, inputs: usize, seed: u64) -> OverflowStats {
+    let mut rng = Pcg32::new(seed);
+    let batch = 50;
+    let mut total = OverflowStats::default();
+    let mut done = 0;
+    while done < inputs {
+        let n = batch.min(inputs - done);
+        let imgs: Vec<f32> = (0..n * dim).map(|_| rng.f32()).collect();
+        let out = eng.forward(&imgs, n).expect("forward");
+        total.merge(&out.report.total());
+        done += n;
+    }
+    total
+}
+
+fn q_weights(model: &PqswModel) -> Vec<Vec<i8>> {
+    model.q_layers().map(|(_, q)| q.wq.to_owned_vec()).collect()
+}
+
+/// Cross-language KAT: these constants are pinned verbatim in
+/// `python/tests/test_plan.py` — both implementations must project
+/// `synthetic_linear(6, 3)` to byte-identical weights and checksums.
+#[test]
+fn projection_matches_python_kat() {
+    // dense, budget 12, sorted: every row takes tau = 1
+    let mut m = pqs::models::synthetic_linear(6, 3);
+    let cfg = ProjectConfig { policy: Policy::Sorted, budget: 12, nm: None };
+    let rep = sweep::project(&mut m, &cfg).unwrap();
+    let wq = q_weights(&m);
+    assert_eq!(wq[0], vec![-4, 1, -1, 4, 0, -2, 3, 0, -3, 2, 0, -4, 1, -1, 4, 0, -2, 3]);
+    assert_eq!((rep.tau_max(), rep.pruned(), rep.clipped()), (1, 0, 17));
+    let plan = m.plan.as_ref().unwrap();
+    assert_eq!(plan.per_layer[0].analytic_bits, 12);
+    assert_eq!(plan.per_layer[0].acc_bits, 12);
+    assert_eq!(plan.per_layer[0].nnz_max, 5);
+    assert_eq!(m.layer_checksums(), vec![0x19f8cd528591ac91]);
+
+    // 2:3 sparsity, budget 10, sorted: prune first, then tau up to 4
+    let mut m = pqs::models::synthetic_linear(6, 3);
+    let cfg = ProjectConfig {
+        policy: Policy::Sorted,
+        budget: 10,
+        nm: Some(NmSpec { keep: 2, m: 3 }),
+    };
+    let rep = sweep::project(&mut m, &cfg).unwrap();
+    let wq = q_weights(&m);
+    assert_eq!(wq[0], vec![-2, 0, 0, 2, 0, 0, 0, 0, 0, 0, 0, -1, 0, 0, 1, 0, 0, 0]);
+    assert_eq!((rep.tau_max(), rep.pruned(), rep.clipped()), (4, 5, 12));
+    assert_eq!(m.nm_m, 3);
+    let plan = m.plan.as_ref().unwrap();
+    assert_eq!(plan.per_layer[0].acc_bits, 10);
+    assert_eq!(plan.per_layer[0].nnz_max, 2);
+    assert_eq!(m.layer_checksums(), vec![0x2f62b1939d3e5ffc]);
+}
+
+#[test]
+fn projection_is_idempotent_and_meets_every_budget_and_policy() {
+    let base = pqs::models::synthetic_conv(2, 8, 8, 4, 10);
+    for policy in Policy::ALL {
+        for budget in [12u32, 10, 8, 6, 4] {
+            for nm in [None, Some(NmSpec { keep: 2, m: 4 })] {
+                let cfg = ProjectConfig { policy, budget, nm };
+                let mut once = base.clone();
+                let rep1 = sweep::project(&mut once, &cfg).unwrap();
+                let plan = once.plan.as_ref().expect("plan embedded");
+                for l in &plan.per_layer {
+                    assert!(
+                        l.analytic_bits <= budget,
+                        "{} @ {budget} ({:?}): layer {} projected to {}",
+                        policy.name(),
+                        nm,
+                        l.name,
+                        l.analytic_bits
+                    );
+                }
+                assert!(sweep::max_analytic_bits(&once, policy).unwrap() <= budget);
+                assert!(rep1.sparsity_after >= rep1.sparsity_before);
+
+                let mut twice = once.clone();
+                let rep2 = sweep::project(&mut twice, &cfg).unwrap();
+                assert_eq!(q_weights(&once), q_weights(&twice), "idempotent weights");
+                assert_eq!(once.plan, twice.plan, "idempotent plan");
+                assert!(!rep2.changed(), "second projection must be a no-op");
+            }
+        }
+    }
+}
+
+#[test]
+fn acceptance_projected_model_serves_1k_inputs_overflow_free_where_control_overflows() {
+    let model = pqs::models::synthetic_conv(2, 8, 8, 4, 10);
+    let dim: usize = model.input_shape.iter().product();
+    let budget = 6u32;
+
+    // control FIRST: the unprojected model at the same global width must
+    // persistently overflow, or the zero below would prove nothing
+    let ecfg = EngineConfig {
+        policy: Policy::Sorted,
+        acc_bits: budget,
+        collect_stats: true,
+        ..Default::default()
+    };
+    let mut control = Engine::new(&model, ecfg);
+    let control_total = serve_sweep(&mut control, dim, 200, 0x5EE9);
+    assert!(
+        control_total.persistent_dots > 0,
+        "a {budget}-bit accumulator must persistently overflow without projection"
+    );
+
+    // candidate: projected to the budget, plan embedded, served at the
+    // budget width — zero persistent overflows across the 1k-input sweep
+    let mut cand = model.clone();
+    let cfg = ProjectConfig { policy: Policy::Sorted, budget, nm: None };
+    let rep = sweep::project(&mut cand, &cfg).unwrap();
+    assert!(rep.changed(), "budget {budget} must actually tighten this model");
+    let mut eng = Engine::new(&cand, ecfg);
+    let total = serve_sweep(&mut eng, dim, 1000, 0x5EE9);
+    assert!(total.dots >= 1000, "the sweep really ran");
+    assert_eq!(
+        total.persistent_dots, 0,
+        "zero persistent overflows at the projected {budget}-bit width over 1k inputs"
+    );
+}
+
+#[test]
+fn projected_pqsw_roundtrips_with_plan_and_checksums() {
+    let dir = std::env::temp_dir().join("pqs_test_sweep_roundtrip");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("projected_conv.pqsw");
+
+    let mut model = pqs::models::synthetic_conv(2, 8, 8, 4, 10);
+    let cfg = ProjectConfig {
+        policy: Policy::Sorted,
+        budget: 8,
+        nm: Some(NmSpec { keep: 2, m: 4 }),
+    };
+    sweep::project(&mut model, &cfg).unwrap();
+    model.verify_integrity().expect("digests re-stamped after projection");
+    model.save(&path).unwrap();
+
+    let loaded = PqswModel::load(&path).unwrap();
+    loaded.verify_integrity().expect("saved digests match saved bytes");
+    assert_eq!(q_weights(&loaded), q_weights(&model), "byte-identical weights");
+    assert_eq!(loaded.plan, model.plan, "plan survives the round-trip");
+    assert_eq!(loaded.nm_m, model.nm_m);
+    assert_eq!(loaded.layer_checksums(), model.layer_checksums());
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn eval_service_pool_and_scoped_paths_are_bit_identical() {
+    let model = pqs::models::synthetic_conv(2, 8, 8, 4, 10);
+    let ds = sweep::reference_dataset(&model, 96, 0xDA7A).unwrap();
+    let ecfg = EngineConfig {
+        policy: Policy::Sorted,
+        acc_bits: 10,
+        collect_stats: true,
+        ..Default::default()
+    };
+    let scoped = EvalService::new(&model, ecfg).with_threads(4).with_batch(16);
+    let a = scoped.evaluate(&ds, None).unwrap();
+
+    let pool = Arc::new(ComputePool::new(4));
+    let pooled = EvalService::new(&model, ecfg)
+        .with_threads(4)
+        .with_batch(16)
+        .with_pool(Arc::clone(&pool));
+    let b = pooled.evaluate(&ds, None).unwrap();
+
+    let serial = EvalService::new(&model, ecfg).with_threads(1).with_batch(16);
+    let c = serial.evaluate(&ds, None).unwrap();
+
+    for out in [&b, &c] {
+        assert_eq!(a.accuracy, out.accuracy, "accuracy must be bit-identical");
+        assert_eq!(a.samples, out.samples);
+        assert_eq!(a.report.total(), out.report.total(), "overflow stats must match");
+    }
+    assert_eq!(a.samples, 96);
+}
+
+#[test]
+fn pareto_sweep_meets_every_gate_on_the_reference_dataset() {
+    let model = pqs::models::synthetic_conv(2, 8, 8, 4, 10);
+    let ds = sweep::reference_dataset(&model, 48, 0x5EE9).unwrap();
+    let max = sweep::max_analytic_bits(&model, Policy::Sorted).unwrap();
+    let cfg = SweepConfig {
+        policy: Policy::Sorted,
+        budgets: vec![max, max - 1],
+        nm: vec![None, Some(NmSpec { keep: 3, m: 4 })],
+        batch: 16,
+        threads: 2,
+        tolerance: 0.9,
+        limit: None,
+    };
+    let res = sweep::pareto(&model, &ds, &cfg).unwrap();
+
+    // the reference set is labeled by the model itself at exact/32-bit,
+    // so the unprojected baseline is perfect by construction
+    assert_eq!(res.baseline_accuracy, 1.0);
+    assert_eq!(res.samples, 48);
+    assert_eq!(res.points.len(), 4);
+    for p in &res.points {
+        assert!(p.budget_ok, "width {} > budget {}", p.width_bits, p.budget);
+        assert!(p.width_bits <= p.budget && p.budget <= max);
+        assert_eq!(p.persistent_dots, 0, "budget {} ({:?})", p.budget, p.nm);
+        assert!(p.accuracy_ok);
+    }
+    // the (budget = analytic max, dense) point is a no-op projection:
+    // sorted at the analytic width is exact, so accuracy is EXACTLY 1.0
+    let noop = res
+        .points
+        .iter()
+        .find(|p| p.budget == max && p.nm.is_none())
+        .expect("no-op grid point present");
+    assert_eq!((noop.pruned, noop.clipped), (0, 0));
+    assert_eq!(noop.accuracy, 1.0, "no-op point must agree with the 32-bit reference exactly");
+    assert!(!noop.dominated, "the exact point is always on the frontier");
+    assert!(!res.frontier().is_empty());
+    assert!(res.all_ok());
+
+    // the sweep JSON round-trips through the parser with the right tag
+    let j = pqs::util::json::Json::parse(&res.to_json().to_string()).unwrap();
+    assert_eq!(j.get("tag").and_then(pqs::util::json::Json::as_str), Some("sweep"));
+    assert_eq!(j.get("points").and_then(pqs::util::json::Json::as_arr).unwrap().len(), 4);
+}
