@@ -58,6 +58,15 @@
 //!   tolerance below the baseline, or if the no-op point (dense at the
 //!   unprojected analytic max) is not *exactly* the baseline — sorted
 //!   arithmetic at the analytic width must equal 32-bit exact.
+//! * **observability** — the tracing overhead gate: alternating loopback
+//!   rounds with tracing disabled vs enabled at sample rate 0 (the
+//!   always-on production configuration: stage histograms + id echo, no
+//!   ring traffic) must agree on p50 within 2% plus a 5 µs jitter floor
+//!   — the section *fails* otherwise — then a sampling-1.0 functional
+//!   pass: 100+ classifies each echoing its `X-Request-Id`, `/v1/trace`
+//!   span stages summing within their totals, `/metrics` parsing under
+//!   the Prometheus text grammar with the per-layer headroom gauges
+//!   present.
 //!
 //! Everything runs on synthetic models so the report is reproducible on
 //! any checkout, artifacts or not. `quick: true` shrinks sample counts and
@@ -77,6 +86,7 @@ use crate::dot::{tiled_sorted_dot, DotEngine};
 use crate::http::{HttpConfig, HttpServer};
 use crate::models;
 use crate::nn::engine::{Engine, EngineConfig};
+use crate::trace::{self, TraceConfig};
 use crate::util::bench::{bench_cfg, black_box};
 use crate::util::json::{self, Json};
 use crate::util::pool::{self, ComputePool};
@@ -133,6 +143,7 @@ pub fn run(opts: &BenchOptions) -> Result<Json> {
         ("memory", memory_section(opts)?),
         ("faults", faults_section(opts)?),
         ("sweep", sweep_section(opts)?),
+        ("observability", observability_section(opts)?),
     ]))
 }
 
@@ -392,11 +403,45 @@ impl LoopbackClient {
         Ok((status, json))
     }
 
+    /// GET `path` and return the status plus the raw text body (the
+    /// Prometheus exposition is not JSON).
+    fn get_text(&mut self, path: &str) -> Result<(u16, String)> {
+        let req = format!("GET {path} HTTP/1.1\r\nHost: bench\r\n\r\n");
+        self.stream.write_all(req.as_bytes())?;
+        let (status, _head, body) = self.read_response_full()?;
+        Ok((status, String::from_utf8_lossy(&body).into_owned()))
+    }
+
+    /// POST one classify request — optionally carrying an `X-Request-Id`
+    /// header — and return the status plus the echoed id, if any.
+    fn classify_traced(&mut self, body: &str, id: Option<&str>) -> Result<(u16, Option<String>)> {
+        let id_header = id.map(|i| format!("X-Request-Id: {i}\r\n")).unwrap_or_default();
+        let req = format!(
+            "POST /v1/classify HTTP/1.1\r\nHost: bench\r\n{id_header}Content-Type: application/json\r\nContent-Length: {}\r\n\r\n{}",
+            body.len(),
+            body
+        );
+        self.stream.write_all(req.as_bytes())?;
+        let (status, head, _body) = self.read_response_full()?;
+        let echoed = head.lines().find_map(|l| {
+            let (k, v) = l.split_once(':')?;
+            k.eq_ignore_ascii_case("x-request-id").then(|| v.trim().to_string())
+        });
+        Ok((status, echoed))
+    }
+
     fn read_response(&mut self) -> Result<(u16, Vec<u8>)> {
+        let (status, _head, body) = self.read_response_full()?;
+        Ok((status, body))
+    }
+
+    /// Like [`Self::read_response`] but also returns the raw response
+    /// head, so callers can inspect headers.
+    fn read_response_full(&mut self) -> Result<(u16, String, Vec<u8>)> {
         let mut chunk = [0u8; 8192];
         loop {
             if let Some(head_end) = find_crlf2(&self.buf) {
-                let head = std::str::from_utf8(&self.buf[..head_end]).unwrap_or("");
+                let head = String::from_utf8_lossy(&self.buf[..head_end]).into_owned();
                 let status: u16 = head
                     .split_whitespace()
                     .nth(1)
@@ -420,7 +465,7 @@ impl LoopbackClient {
                 }
                 let body = self.buf[head_end + 4..total].to_vec();
                 self.buf.drain(..total);
-                return Ok((status, body));
+                return Ok((status, head, body));
             }
             let n = self.stream.read(&mut chunk)?;
             if n == 0 {
@@ -517,6 +562,176 @@ fn serve_section(opts: &BenchOptions) -> Result<Json> {
         ]));
     }
     Ok(Json::Arr(rows))
+}
+
+// ---- observability --------------------------------------------------------
+
+/// Tracing overhead gate + sampling-1.0 functional pass; see the module
+/// docs for the gate's exact terms.
+fn observability_section(opts: &BenchOptions) -> Result<Json> {
+    let model = models::synthetic_conv(2, 12, 12, 4, 10);
+    let dim: usize = model.input_shape.iter().product();
+    let mut rng = Pcg32::new(0x0B5E);
+    let img: Vec<f32> = (0..dim).map(|_| (rng.below(1000) as f32) / 1000.0).collect();
+    let body = {
+        let pixels: Vec<Json> = img.iter().map(|&v| json::num(v as f64)).collect();
+        json::obj(vec![("image", Json::Arr(pixels))]).to_string()
+    };
+    let requests = if opts.quick { 30 } else { 120 };
+
+    let start_server = |trace: TraceConfig| -> Result<HttpServer> {
+        let cfg = EngineConfig {
+            policy: Policy::Sorted1,
+            acc_bits: 16,
+            tile: 0,
+            collect_stats: false,
+        };
+        let scfg = ServerConfig {
+            threads: 2,
+            max_batch: 8,
+            queue_cap: 256,
+            linger: Duration::from_micros(100),
+            engine_threads: 1,
+            default_deadline: None,
+        };
+        let router = Router::single("default", &model, cfg, scfg);
+        let hcfg = HttpConfig { trace, ..HttpConfig::default() };
+        HttpServer::start(router, "127.0.0.1:0", hcfg).context("binding the bench http server")
+    };
+
+    // one timed round against a fresh server; p50 of per-request wall µs
+    let run_round = |trace: TraceConfig| -> Result<f64> {
+        let http = start_server(trace)?;
+        let mut client = LoopbackClient::connect(&http.local_addr().to_string())?;
+        for _ in 0..3 {
+            let status = client.classify(&body)?;
+            if status != 200 {
+                return Err(anyhow!("bench classify returned {status}"));
+            }
+        }
+        let mut us = Vec::with_capacity(requests);
+        for _ in 0..requests {
+            let r0 = Instant::now();
+            let status = client.classify(&body)?;
+            if status != 200 {
+                return Err(anyhow!("bench classify returned {status}"));
+            }
+            us.push(r0.elapsed().as_secs_f64() * 1e6);
+        }
+        drop(client);
+        let _ = http.shutdown();
+        us.sort_by(f64::total_cmp);
+        Ok(us[us.len() / 2])
+    };
+
+    // alternating rounds, best-of: scheduler noise hits both sides alike
+    let off = TraceConfig { enabled: false, sample_rate: 0.0, ring: 256 };
+    let on = TraceConfig { enabled: true, sample_rate: 0.0, ring: 256 };
+    let pairs = if opts.quick { 2 } else { 3 };
+    let (mut off_p50, mut on_p50) = (f64::INFINITY, f64::INFINITY);
+    for _ in 0..pairs {
+        off_p50 = off_p50.min(run_round(off)?);
+        on_p50 = on_p50.min(run_round(on)?);
+    }
+    if on_p50 > off_p50 * 1.02 + 5.0 {
+        return Err(anyhow!(
+            "tracing-at-rate-0 overhead gate failed: p50 {on_p50:.1}us enabled vs \
+             {off_p50:.1}us disabled (budget: 2% + 5us)"
+        ));
+    }
+
+    // functional pass at sampling 1.0: id echo on every response, span
+    // decomposition bounded by the honest total, a grammatical scrape
+    let http = start_server(TraceConfig { enabled: true, sample_rate: 1.0, ring: 512 })?;
+    let mut client = LoopbackClient::connect(&http.local_addr().to_string())?;
+    let drive = 100usize;
+    for i in 0..drive {
+        let want = format!("bench-{i}");
+        let (status, echoed) = client.classify_traced(&body, Some(&want))?;
+        if status != 200 {
+            return Err(anyhow!("traced classify returned {status}"));
+        }
+        if echoed.as_deref() != Some(want.as_str()) {
+            return Err(anyhow!("X-Request-Id {want:?} not echoed (got {echoed:?})"));
+        }
+    }
+    let (status, echoed) = client.classify_traced(&body, None)?;
+    if status != 200 {
+        return Err(anyhow!("traced classify returned {status}"));
+    }
+    if !echoed.as_deref().is_some_and(|id| id.starts_with("pqs-")) {
+        return Err(anyhow!("generated request id missing or malformed: {echoed:?}"));
+    }
+
+    let (status, tr) = client.get_json("/v1/trace?n=100")?;
+    if status != 200 {
+        return Err(anyhow!("/v1/trace returned {status}"));
+    }
+    let spans = tr.get("spans").and_then(Json::as_arr).unwrap_or(&[]);
+    if spans.is_empty() {
+        return Err(anyhow!("/v1/trace returned no spans at sample rate 1.0"));
+    }
+    let mut max_ratio: f64 = 0.0;
+    for span in spans {
+        let total = span.get("total_us").and_then(Json::as_f64).unwrap_or(0.0);
+        let sum: f64 = span
+            .get("stages")
+            .and_then(|s| match s {
+                Json::Obj(o) => Some(o.values().filter_map(Json::as_f64).sum()),
+                _ => None,
+            })
+            .unwrap_or(0.0);
+        if total > 0.0 {
+            max_ratio = max_ratio.max(sum / total);
+        }
+        if sum > total * (1.0 + 1e-9) {
+            return Err(anyhow!("span stages sum {sum:.1}us past the total {total:.1}us"));
+        }
+    }
+
+    let (status, text) = client.get_text("/metrics")?;
+    if status != 200 {
+        return Err(anyhow!("/metrics returned {status}"));
+    }
+    trace::validate_exposition(&text)
+        .map_err(|e| anyhow!("/metrics violates the exposition grammar: {e}"))?;
+    if !text.contains("pqs_headroom_min_bits{") {
+        return Err(anyhow!("/metrics is missing the per-layer headroom gauges"));
+    }
+
+    // headroom snapshot over the driven traffic
+    let (_, mj) = client.get_json("/v1/models")?;
+    let headroom = mj
+        .get("models")
+        .and_then(Json::as_arr)
+        .and_then(|rows| rows.first())
+        .and_then(|row| row.get("headroom"))
+        .and_then(Json::as_arr)
+        .unwrap_or(&[]);
+    if headroom.is_empty() {
+        return Err(anyhow!("/v1/models carries no headroom rows after traffic"));
+    }
+    let min_headroom = headroom
+        .iter()
+        .filter_map(|l| l.get("min_headroom_bits").and_then(Json::as_f64))
+        .fold(f64::INFINITY, f64::min);
+    let layers = headroom.len();
+    drop(client);
+    let _ = http.shutdown();
+
+    Ok(json::obj(vec![
+        ("requests_per_round", json::num(requests as f64)),
+        ("rounds", json::num((pairs * 2) as f64)),
+        ("tracing_off_p50_us", json::num(off_p50)),
+        ("tracing_on_p50_us", json::num(on_p50)),
+        ("overhead_pct", json::num((on_p50 - off_p50) / off_p50 * 100.0)),
+        ("traced_requests", json::num((drive + 1) as f64)),
+        ("spans_checked", json::num(spans.len() as f64)),
+        ("max_stage_sum_ratio", json::num(max_ratio)),
+        ("prometheus_bytes", json::num(text.len() as f64)),
+        ("headroom_layers", json::num(layers as f64)),
+        ("min_headroom_bits", json::num(min_headroom)),
+    ]))
 }
 
 // ---- connections ----------------------------------------------------------
@@ -1254,7 +1469,7 @@ mod tests {
         let parsed = Json::parse(&txt).expect("report round-trips");
         for key in [
             "meta", "dot", "pool", "forward", "serve", "connections", "router", "plan", "memory",
-            "faults", "sweep",
+            "faults", "sweep", "observability",
         ] {
             assert!(parsed.get(key).is_some(), "missing section {key}");
         }
@@ -1365,5 +1580,16 @@ mod tests {
         let frontier = sweep.get("frontier").unwrap().as_arr().unwrap();
         assert!(!frontier.is_empty(), "Pareto frontier present");
         assert!(sweep.get("wall_ms").unwrap().as_f64().unwrap() >= 0.0);
+        // the observability section ran its own hard gates (overhead,
+        // grammar, id echo) inside run(); re-check the reported shape
+        let obs = parsed.get("observability").unwrap();
+        assert!(obs.get("tracing_off_p50_us").unwrap().as_f64().unwrap() > 0.0);
+        assert!(obs.get("tracing_on_p50_us").unwrap().as_f64().unwrap() > 0.0);
+        assert!(obs.get("spans_checked").unwrap().as_f64().unwrap() > 0.0);
+        let ratio = obs.get("max_stage_sum_ratio").unwrap().as_f64().unwrap();
+        assert!(ratio > 0.0 && ratio <= 1.0 + 1e-9, "stage sums bounded by totals: {ratio}");
+        assert!(obs.get("headroom_layers").unwrap().as_f64().unwrap() >= 1.0);
+        assert!(obs.get("min_headroom_bits").unwrap().as_f64().unwrap().is_finite());
+        assert!(obs.get("prometheus_bytes").unwrap().as_f64().unwrap() > 0.0);
     }
 }

@@ -2,6 +2,7 @@
 
 use crate::util::pool::PoolStats;
 use crate::util::stats;
+use crate::util::stats::HdrHistogram;
 
 /// Reservoir size: memory stays bounded (~512 KiB of f64) no matter how
 /// long the server runs; percentiles beyond this many samples are computed
@@ -17,8 +18,11 @@ fn splitmix64(mut z: u64) -> u64 {
 }
 
 /// Streaming latency recorder (microseconds). Bounded memory: a uniform
-/// reservoir of at most [`RESERVOIR_CAP`] samples backs the percentiles,
-/// while count, mean and max are tracked exactly — safe for a long-lived
+/// reservoir of at most [`RESERVOIR_CAP`] samples keeps quantiles *exact*
+/// while every sample is retained, and a fixed-size [`HdrHistogram`]
+/// shadows the stream so quantiles stay within the HDR bucket error
+/// (±3%) once the reservoir saturates or recorders merge — count, mean
+/// and max are tracked exactly throughout. Safe for a long-lived
 /// production `Server` serving unbounded request streams.
 #[derive(Clone, Debug, Default)]
 pub struct LatencyRecorder {
@@ -26,6 +30,7 @@ pub struct LatencyRecorder {
     seen: u64,
     sum: f64,
     max: f64,
+    hist: HdrHistogram,
 }
 
 impl LatencyRecorder {
@@ -34,6 +39,7 @@ impl LatencyRecorder {
         if us > self.max {
             self.max = us;
         }
+        self.hist.record(us.max(0.0) as u64);
         if self.samples.len() < RESERVOIR_CAP {
             self.samples.push(us);
         } else {
@@ -44,6 +50,19 @@ impl LatencyRecorder {
             }
         }
         self.seen += 1;
+    }
+
+    /// Percentiles come from the reservoir while it still holds every
+    /// sample (exact, order-free), and from the HDR histogram once the
+    /// stream outgrew it — the histogram merge is bucket-exact, so
+    /// quantiles stay ≤3%-accurate across evict/reload merges instead of
+    /// drifting with spliced reservoirs.
+    fn pct(&self, q: f64) -> f64 {
+        if self.samples.len() as u64 == self.seen {
+            stats::percentile(&self.samples, q)
+        } else {
+            self.hist.value_at(q / 100.0) as f64
+        }
     }
 
     pub fn count(&self) -> usize {
@@ -59,19 +78,19 @@ impl LatencyRecorder {
     }
 
     pub fn p50_us(&self) -> f64 {
-        stats::percentile(&self.samples, 50.0)
+        self.pct(50.0)
     }
 
     pub fn p95_us(&self) -> f64 {
-        stats::percentile(&self.samples, 95.0)
+        self.pct(95.0)
     }
 
     pub fn p99_us(&self) -> f64 {
-        stats::percentile(&self.samples, 99.0)
+        self.pct(99.0)
     }
 
     pub fn p999_us(&self) -> f64 {
-        stats::percentile(&self.samples, 99.9)
+        self.pct(99.9)
     }
 
     pub fn max_us(&self) -> f64 {
@@ -79,18 +98,26 @@ impl LatencyRecorder {
     }
 
     /// Fold `other` into this recorder. `count`, `mean` and `max` stay
-    /// exact; the percentile reservoir is spliced (other's samples are
-    /// appended up to the cap), so post-merge percentiles are approximate
-    /// once the combined streams exceed the reservoir. Used by the router
-    /// to carry a model's metrics across load/evict incarnations.
+    /// exact; the shadow histograms merge bucket-exactly, so post-merge
+    /// percentiles hold HDR accuracy (≤3%) even when the combined streams
+    /// exceed the reservoir (the reservoir is still spliced up to the cap
+    /// and keeps serving exact quantiles while it holds every sample).
+    /// Used by the router to carry a model's metrics across load/evict
+    /// incarnations.
     pub fn merge(&mut self, other: &LatencyRecorder) {
         self.sum += other.sum;
         self.seen += other.seen;
         if other.max > self.max {
             self.max = other.max;
         }
+        self.hist.merge(&other.hist);
         let room = RESERVOIR_CAP.saturating_sub(self.samples.len());
         self.samples.extend(other.samples.iter().take(room));
+    }
+
+    /// The shadow histogram (for Prometheus bucket export).
+    pub fn histogram(&self) -> &HdrHistogram {
+        &self.hist
     }
 
     /// Seven-number summary of the stream so far. This is what metrics
@@ -567,6 +594,37 @@ mod tests {
         assert!((sum.throughput_rps - a.throughput_rps).abs() < 1e-9);
         assert_eq!(sum.latency.count, a.latency.count());
         assert!((sum.latency.mean_us - a.latency.mean_us()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn merged_quantiles_hold_hdr_accuracy_past_capacity() {
+        // two incarnations, each past the reservoir cap, with disjoint
+        // latency ranges: a spliced reservoir would keep only the first
+        // stream's samples and report its p50/p99 for the union, but the
+        // histogram-backed merge stays within HDR bucket error (≤3%) of
+        // the true pooled quantiles
+        let mut a = LatencyRecorder::default();
+        let mut b = LatencyRecorder::default();
+        let n = RESERVOIR_CAP + 10_000;
+        for i in 0..n {
+            a.record(100.0 + (i % 100) as f64); // ~[100, 200)
+            b.record(10_000.0 + (i % 100) as f64); // ~[10_000, 10_100)
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), 2 * n);
+        assert_eq!(a.max_us(), 10_099.0);
+        // true pooled quantiles: p50 at the boundary (lower half from a),
+        // p99/p999 deep inside b's range
+        let p50 = a.p50_us();
+        assert!((p50 - 199.0).abs() / 199.0 < 0.04, "p50 {p50}");
+        for (q, exact) in [(a.p99_us(), 10_098.0), (a.p999_us(), 10_099.0)] {
+            assert!((q - exact).abs() / exact < 0.04, "tail {q} vs {exact}");
+            assert!(q <= exact, "HDR lower bounds never overstate");
+        }
+        // summaries built from the merged recorder inherit the accuracy
+        let s = a.summary();
+        assert_eq!(s.count, 2 * n);
+        assert!((s.p999_us - 10_099.0).abs() / 10_099.0 < 0.04);
     }
 
     #[test]

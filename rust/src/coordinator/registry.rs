@@ -19,9 +19,11 @@
 //! * **LRU eviction** — with [`RouterConfig::max_loaded`] set, loading a
 //!   model past the cap drains the least-recently-used server first
 //!   (graceful: queued requests are answered, not dropped). A model's
-//!   metrics survive eviction: the final [`ServeSummary`] of each
-//!   incarnation is folded into a per-model accumulator, so
-//!   [`Router::metrics`] always reports lifetime totals.
+//!   metrics survive eviction: the final [`ServeMetrics`] of each
+//!   incarnation — full recorders, reservoir + HDR histogram — is
+//!   folded into a per-model accumulator, so [`Router::metrics`]
+//!   reports lifetime totals whose quantiles stay pooled (≤3% HDR
+//!   error) across evict/reload cycles.
 //! * **Byte-budgeted memory** — with [`RouterConfig::max_bytes`] set the
 //!   router charges every loaded model its measured
 //!   [`PqswModel::resident_bytes`] and LRU-evicts until a newcomer fits
@@ -40,10 +42,11 @@
 //!   at construction time (hot models skip the first-request latency);
 //!   each preload flows through the regular load path and counters.
 //! * **Cheap snapshots** — [`Router::metrics`] assembles the fleet view
-//!   in two phases: counters + `Copy` summaries under the router lock,
-//!   per-server quantile summaries outside it. A `/v1/metrics` scrape
-//!   never clones a latency reservoir under the lock and never blocks
-//!   (or is blocked by) an in-flight model load.
+//!   in two phases: counters + bounded clones under the router lock,
+//!   per-server metrics reads and histogram-exact recorder merges
+//!   outside it. A `/v1/metrics` scrape never touches a per-server
+//!   metrics mutex under the router lock and never blocks (or is
+//!   blocked by) an in-flight model load.
 //! * **One compute pool** — with `server.engine_threads > 1` the router
 //!   builds ONE [`ComputePool`] and injects it into every per-model
 //!   [`Server`] (via [`crate::coordinator::ServerBuilder::shared_pool`]),
@@ -94,8 +97,9 @@ use crate::plan::PlanSummary;
 use crate::util::pool::{ComputePool, PoolStats};
 use crate::util::rng::Pcg32;
 
-use super::metrics::{LatencyRecorder, LatencySummary, ServeSummary};
+use super::metrics::{LatencyRecorder, LatencySummary, ServeMetrics, ServeSummary};
 use super::server::{PendingResponse, Server, ServerConfig, SubmitError};
+use crate::trace::{LayerHeadroom, RequestTrace};
 
 /// Deterministic synthetic architectures buildable without artifacts.
 #[derive(Clone, Debug, PartialEq, Eq)]
@@ -424,6 +428,11 @@ pub struct ClassifyRequest {
     /// to carry a plan, and `acc_bits` must cover the plan's widest
     /// layer; otherwise the request fails with `BadRequest` (HTTP 400).
     pub acc_bits: Option<u32>,
+    /// Per-request trace context (`X-Request-Id`, arrival timestamp,
+    /// sampling decision — see [`crate::trace::RequestTrace`]). The HTTP
+    /// front-end takes it back out before submitting, so the router and
+    /// servers never touch it; `None` everywhere tracing is off.
+    pub trace: Option<RequestTrace>,
 }
 
 /// Why a request could not be routed.
@@ -603,6 +612,13 @@ pub struct ModelStatus {
     /// Self-healing state: breaker position, failure counters,
     /// quarantine reason.
     pub health: ModelHealth,
+    /// Live accumulator-headroom telemetry of the loaded incarnation:
+    /// per-layer planned width vs max observed required width, min
+    /// headroom bits, overflow/near-saturation dot counts (see
+    /// [`crate::trace::ModelHeadroom`]). `Some` while loaded (empty
+    /// until a batch has run), `None` while unloaded — headroom counters
+    /// describe a live engine, not history.
+    pub headroom: Option<Vec<LayerHeadroom>>,
 }
 
 /// Router-level counters + the per-model fleet snapshot.
@@ -639,6 +655,14 @@ pub struct RouterMetrics {
     pub wall_s: f64,
     /// Per-model rows in registration order.
     pub models: Vec<ModelStatus>,
+    /// Fleet-wide totals pooled at snapshot time from every
+    /// incarnation's FULL latency recorders (live, draining and evicted
+    /// alike merged histogram-exactly before summarizing), so its
+    /// p50/p99/p999 are pooled quantiles within HDR bucket error (≤3%)
+    /// — not count-weighted averages of per-model quantiles.
+    /// [`RouterMetrics::aggregate`] serves this with the router's wall
+    /// clock and pool stats attached.
+    pub fleet: ServeSummary,
     /// The shared compute pool's counters (`None` when engines run
     /// single-threaded).
     pub pool: Option<PoolStats>,
@@ -650,18 +674,16 @@ impl RouterMetrics {
         self.models.iter().find(|m| m.name == name)
     }
 
-    /// Fleet-wide totals: every model's summary folded into one
+    /// Fleet-wide totals: every incarnation's metrics pooled into one
     /// [`ServeSummary`] (counters sum; `wall_s` is the router's wall
     /// clock, so `throughput_rps` is fleet throughput). Counters, means
-    /// and maxima are exact; the aggregate p50/p95/p99 are count-weighted
-    /// averages of per-model quantiles, not pooled quantiles — on a
-    /// heterogeneous fleet read the per-model rows for real tails (see
-    /// [`LatencySummary::merge_from`]).
+    /// and maxima are exact, and — because the snapshot merged FULL
+    /// latency recorders (histogram-exact) before summarizing — the
+    /// aggregate p50/p99/p999 are pooled quantiles within HDR bucket
+    /// error (≤3%), even across evict/reload cycles and heterogeneous
+    /// fleets.
     pub fn aggregate(&self) -> ServeSummary {
-        let mut out = ServeSummary::default();
-        for m in &self.models {
-            out.merge_from(&m.metrics);
-        }
+        let mut out = self.fleet;
         out.wall_s = self.wall_s;
         out.throughput_rps = out.requests as f64 / out.wall_s.max(1e-9);
         out.pool = self.pool;
@@ -776,9 +798,13 @@ struct RouterInner {
     /// visible here so metrics snapshots never lose a model's traffic
     /// mid-drain (folded into `past` when the drain completes)
     draining: Vec<(String, Arc<Server>)>,
-    /// accumulated metrics of evicted incarnations, per model — `Copy`
-    /// summaries, so snapshots read them without reservoir clones
-    past: BTreeMap<String, ServeSummary>,
+    /// accumulated metrics of evicted incarnations, per model — FULL
+    /// recorders (reservoir + HDR histogram), so quantiles merged across
+    /// evict/reload cycles stay pooled (≤3% HDR error) instead of
+    /// count-weighted averages. Bounded memory per model
+    /// (`RESERVOIR_CAP` + fixed histogram), cloned — never locked
+    /// against — by snapshots
+    past: BTreeMap<String, ServeMetrics>,
     tick: u64,
     routed: u64,
     unknown: u64,
@@ -873,7 +899,7 @@ impl Router {
     /// second resolve reloads the model); only a second `Closed` is
     /// reported to the caller.
     pub fn submit(&self, req: ClassifyRequest) -> Result<PendingResponse, RouteError> {
-        let ClassifyRequest { id, model, mut image, deadline, acc_bits } = req;
+        let ClassifyRequest { id, model, mut image, deadline, acc_bits, trace: _ } = req;
         let mut retried = false;
         loop {
             // the retry resolve must not re-count `routed`: one request,
@@ -894,7 +920,7 @@ impl Router {
     /// target queue is at capacity. Loads the model first if needed.
     /// Eviction races retry once, as in [`Router::submit`].
     pub fn try_submit(&self, req: ClassifyRequest) -> Result<PendingResponse, RouteError> {
-        let ClassifyRequest { id, model, mut image, deadline, acc_bits } = req;
+        let ClassifyRequest { id, model, mut image, deadline, acc_bits, trace: _ } = req;
         let mut retried = false;
         loop {
             let server = self.resolve_counted(model.as_deref(), !retried)?;
@@ -1174,13 +1200,14 @@ impl Router {
     /// requests are answered; racing submits fail with Closed → 503).
     /// Only once the final metrics are folded into `past` does a victim
     /// leave `draining`, so snapshots never under-report a model
-    /// mid-drain. The summary is computed before re-taking the lock:
-    /// `past` holds `Copy` summaries only.
+    /// mid-drain. The final metrics are taken before re-taking the lock;
+    /// `past` keeps the FULL recorders so quantiles survive eviction
+    /// histogram-exactly instead of as count-weighted summary averages.
     fn drain_evicted(&self, evicted: Vec<(String, Arc<Server>)>) {
         for (victim, srv) in evicted {
-            let final_summary = srv.drain().summary();
+            let final_metrics = srv.drain();
             let mut inner = self.inner.lock().unwrap();
-            inner.past.entry(victim).or_default().merge_from(&final_summary);
+            inner.past.entry(victim).or_default().merge_from(&final_metrics);
             inner.draining.retain(|(_, a)| !Arc::ptr_eq(a, &srv));
         }
     }
@@ -1314,22 +1341,23 @@ impl Router {
 
     /// Snapshot of router counters + the per-model fleet.
     ///
-    /// Two phases, so a scrape never does reservoir work — or *any*
-    /// per-server locking — while holding the router lock (routing and
-    /// lazy loads proceed concurrently with a scrape; see the
+    /// Two phases, so a scrape never blocks behind — or holds up — a
+    /// lazy load or a server's own metrics mutex (routing and loads
+    /// proceed concurrently with a scrape; see the
     /// `metrics_scrape_does_not_serialize_behind_a_blocked_load` test):
     ///
-    /// 1. **Under the router lock**: plain counters, the `Copy`
-    ///    per-model summaries of evicted incarnations, and `Arc` handles
-    ///    to live/draining servers. Nothing here clones a sample
-    ///    reservoir or touches a server's own metrics mutex.
-    /// 2. **Unlocked**: each live/draining server is asked for its
-    ///    summary (the one place recorder reservoirs are read) and the
-    ///    fleet rows are assembled.
+    /// 1. **Under the router lock**: plain counters, clones of the
+    ///    evicted-incarnation accumulators (bounded memcpys — reservoir
+    ///    cap + fixed histograms, usually empty — touching no other
+    ///    lock), and `Arc` handles to live/draining servers.
+    /// 2. **Unlocked**: each live/draining server is asked for its full
+    ///    metrics (the one place per-server metrics mutexes are taken),
+    ///    recorders merge histogram-exactly into per-model and
+    ///    fleet-wide totals, and the rows are summarized.
     pub fn metrics(&self) -> RouterMetrics {
         struct RowSeed {
             name: String,
-            past: ServeSummary,
+            past: ServeMetrics,
             live: Option<(Arc<Server>, Vec<usize>, Option<PlanSummary>, u64)>,
             draining: Vec<Arc<Server>>,
             health: ModelHealth,
@@ -1355,6 +1383,7 @@ impl Router {
                 load_latency: inner.load_latency.summary(),
                 wall_s: self.started.elapsed().as_secs_f64(),
                 models: Vec::new(),
+                fleet: ServeSummary::default(),
                 pool: self.pool.as_deref().map(|p| p.stats()),
             };
             let seeds: Vec<RowSeed> = self
@@ -1362,7 +1391,7 @@ impl Router {
                 .names()
                 .map(|name| RowSeed {
                     name: name.to_string(),
-                    past: inner.past.get(name).copied().unwrap_or_default(),
+                    past: inner.past.get(name).cloned().unwrap_or_default(),
                     live: inner.loaded.get(name).map(|lm| {
                         (Arc::clone(&lm.server), lm.input_shape.clone(), lm.plan, lm.bytes)
                     }),
@@ -1380,30 +1409,35 @@ impl Router {
                 .collect();
             (rm, seeds)
         };
-        // phase 2: unlocked — summarize servers, assemble rows
+        // phase 2: unlocked — merge full recorders, assemble rows
         let default = self.registry.default_name().unwrap_or_default().to_string();
+        let mut fleet = ServeMetrics::default();
         for seed in seeds {
             let mut metrics = seed.past;
             for srv in &seed.draining {
-                metrics.merge_from(&srv.metrics_summary());
+                metrics.merge_from(&srv.metrics());
             }
-            let (loaded, known) = match seed.live {
+            let (loaded, known, headroom) = match seed.live {
                 Some((srv, shape, plan, bytes)) => {
-                    metrics.merge_from(&srv.metrics_summary());
-                    (true, Some((shape, plan, bytes)))
+                    metrics.merge_from(&srv.metrics());
+                    let headroom = srv.headroom_snapshot();
+                    (true, Some((shape, plan, bytes)), Some(headroom))
                 }
-                None => (false, None),
+                None => (false, None, None),
             };
+            fleet.merge_from(&metrics);
             rm.models.push(model_status(
                 &self.registry,
                 &default,
                 seed.name,
                 loaded,
                 known,
-                metrics,
+                metrics.summary(),
                 seed.health,
+                headroom,
             ));
         }
+        rm.fleet = fleet.summary();
         rm
     }
 
@@ -1421,27 +1455,32 @@ impl Router {
         // `shutdown(self)` cannot race a `resolve(&self)`, so `draining`
         // is normally empty here; fold defensively anyway
         for (name, srv) in std::mem::take(&mut inner.draining) {
-            let final_summary = srv.drain().summary();
-            inner.past.entry(name).or_default().merge_from(&final_summary);
+            let final_metrics = srv.drain();
+            inner.past.entry(name).or_default().merge_from(&final_metrics);
         }
         // remember what the loaded incarnations knew (shape, plan) so the
         // final report keeps reporting it
         let mut known: BTreeMap<String, (Vec<usize>, Option<PlanSummary>, u64)> = BTreeMap::new();
         for (name, lm) in std::mem::take(&mut inner.loaded) {
-            let final_summary = lm.server.drain().summary();
-            inner.past.entry(name.clone()).or_default().merge_from(&final_summary);
+            let final_metrics = lm.server.drain();
+            inner.past.entry(name.clone()).or_default().merge_from(&final_metrics);
             known.insert(name, (lm.input_shape, lm.plan, lm.bytes));
         }
         let default = registry.default_name().unwrap_or_default().to_string();
         let names: Vec<String> = registry.names().map(|n| n.to_string()).collect();
+        let mut fleet = ServeMetrics::default();
         let models = names
             .into_iter()
             .map(|name| {
-                let metrics = inner.past.get(&name).copied().unwrap_or_default();
+                let metrics = inner.past.get(&name).cloned().unwrap_or_default();
+                fleet.merge_from(&metrics);
                 let known = known.remove(&name);
                 let health =
                     inner.health.get(&name).map(|h| h.snapshot()).unwrap_or_default();
-                model_status(&registry, &default, name, false, known, metrics, health)
+                let metrics = metrics.summary();
+                // every engine was just drained, so there is no live
+                // incarnation left for headroom to describe
+                model_status(&registry, &default, name, false, known, metrics, health, None)
             })
             .collect();
         let totals = health_totals(&inner.health);
@@ -1461,6 +1500,7 @@ impl Router {
             load_latency: inner.load_latency.summary(),
             wall_s: started.elapsed().as_secs_f64(),
             models,
+            fleet: fleet.summary(),
             pool: pool.as_deref().map(|p| p.stats()),
         }
     }
@@ -1494,6 +1534,7 @@ fn evict_locked(inner: &mut RouterInner, name: &str) -> Option<(String, Arc<Serv
 /// otherwise fall back to what the source can say without loading.
 /// Shared by [`Router::metrics`] and [`Router::shutdown`] so the two
 /// snapshot paths cannot drift as `ModelStatus` grows fields.
+#[allow(clippy::too_many_arguments)]
 fn model_status(
     registry: &ModelRegistry,
     default: &str,
@@ -1502,6 +1543,7 @@ fn model_status(
     known: Option<(Vec<usize>, Option<PlanSummary>, u64)>,
     metrics: ServeSummary,
     health: ModelHealth,
+    headroom: Option<Vec<LayerHeadroom>>,
 ) -> ModelStatus {
     let (input_shape, plan, bytes) = match known {
         // a drained incarnation still reports shape/plan, but holds no bytes
@@ -1524,6 +1566,7 @@ fn model_status(
         resident_bytes: bytes,
         metrics,
         health,
+        headroom,
     }
 }
 

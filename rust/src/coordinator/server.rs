@@ -37,6 +37,7 @@ use std::time::{Duration, Instant};
 use crate::faults::FaultPlan;
 use crate::formats::pqsw::PqswModel;
 use crate::nn::engine::{Engine, EngineConfig};
+use crate::trace::{LayerHeadroom, ModelHeadroom};
 use crate::util::pool::{self, ComputePool};
 
 use super::metrics::{LatencyRecorder, ServeMetrics};
@@ -95,6 +96,16 @@ pub struct ServeResponse {
     /// how many requests shared the engine invocation (0 for pre-engine
     /// rejections)
     pub batch_size: usize,
+    /// batch validation/grouping/plan-apply time ahead of this request's
+    /// engine invocation (0 for pre-engine rejections); a trace span stage
+    pub batch_us: f64,
+    /// per-layer wall time of the engine invocation this request rode,
+    /// graph order, µs — shared by every batch-mate (empty for rejections
+    /// and engine failures)
+    pub layer_us: Arc<Vec<(String, f64)>>,
+    /// the ridden batch recorded overflow events (policy events or
+    /// persistent overflows); forces trace sampling for this request
+    pub overflow: bool,
 }
 
 /// Handle to a response that has not been produced yet.
@@ -114,6 +125,9 @@ impl PendingResponse {
             compute_us: 0.0,
             latency_us: 0.0,
             batch_size: 0,
+            batch_us: 0.0,
+            layer_us: Arc::new(Vec::new()),
+            overflow: false,
         })
     }
 
@@ -133,6 +147,9 @@ impl PendingResponse {
                 compute_us: 0.0,
                 latency_us: 0.0,
                 batch_size: 0,
+                batch_us: 0.0,
+                layer_us: Arc::new(Vec::new()),
+                overflow: false,
             }),
         }
     }
@@ -225,6 +242,10 @@ struct Shared {
     /// injected-fault plan the workers consult before each forward
     /// (`None` in production: the seam costs one `if let`)
     faults: Option<Arc<FaultPlan>>,
+    /// per-layer accumulator-headroom counters fed by every served batch
+    /// (one mutex touch per engine invocation); counters are per
+    /// incarnation — evict/reload starts a fresh observation window
+    headroom: ModelHeadroom,
 }
 
 /// Persistent worker-pool serving runtime. See the module docs.
@@ -329,6 +350,7 @@ impl ServerBuilder {
             started: Instant::now(),
             pool,
             faults: self.faults,
+            headroom: ModelHeadroom::new(),
         });
         let workers = (0..scfg.threads)
             .map(|_| {
@@ -468,6 +490,14 @@ impl Server {
         snapshot(&self.shared)
     }
 
+    /// Per-layer accumulator-headroom counters observed by this server
+    /// incarnation (planned width vs max required width, min headroom,
+    /// overflow and near-saturation dots — see
+    /// [`crate::trace::ModelHeadroom`]). Empty until a batch has run.
+    pub fn headroom_snapshot(&self) -> Vec<LayerHeadroom> {
+        self.shared.headroom.snapshot()
+    }
+
     /// Quantile-summary snapshot (`Copy`, no reservoirs). The recorder
     /// copies happen under this server's own metrics mutex (a memcpy) and
     /// the percentile sorts outside any lock — this is what the router's
@@ -540,7 +570,13 @@ fn snapshot(shared: &Shared) -> ServeMetrics {
 }
 
 fn worker_loop(shared: &Shared) {
-    let mut engine = Engine::new(&shared.model, shared.cfg);
+    // serving engines always collect overflow statistics: the live
+    // headroom telemetry (`Shared::headroom`) is fed from every batch, and
+    // because the flag never depends on tracing state, logits and overflow
+    // counters are bit-identical with tracing enabled or disabled (the
+    // stats scan computes the same accumulator values as the fast path)
+    let ecfg = EngineConfig { collect_stats: true, ..shared.cfg };
+    let mut engine = Engine::new(&shared.model, ecfg);
     match &shared.pool {
         Some(p) => engine.set_pool(Arc::clone(p)),
         None => engine.set_threads(shared.scfg.engine_threads),
@@ -605,7 +641,7 @@ fn worker_loop(shared: &Shared) {
         if !engine_ok {
             // the unwound engine's scratch arena may hold arbitrary state:
             // rebuild from the pristine model (re-applies any embedded plan)
-            engine = Engine::new(&shared.model, shared.cfg);
+            engine = Engine::new(&shared.model, ecfg);
             match &shared.pool {
                 Some(p) => engine.set_pool(Arc::clone(p)),
                 None => engine.set_threads(shared.scfg.engine_threads),
@@ -624,17 +660,18 @@ fn process_batch(engine: &mut Engine, shared: &Shared, dim: usize, jobs: Vec<Job
     // (the embedded plan / global width) plus one group per requested
     // `acc_bits` — and each group gets its own engine invocation.
     let now = Instant::now();
+    let rejected = GroupStamp::rejected();
     let mut groups: BTreeMap<Option<u32>, Vec<Job>> = BTreeMap::new();
     for j in jobs {
         if j.deadline.is_some_and(|d| now >= d) {
             let waited_us = dur_us(j.enqueued.elapsed()) as u64;
-            respond(shared, &j, Err(ServeError::Expired { waited_us }), 0.0, 0);
+            respond(shared, &j, Err(ServeError::Expired { waited_us }), &rejected);
         } else if j.image.len() != dim {
             let err = ServeError::BadRequest(format!(
                 "image size {} != model input {dim}",
                 j.image.len()
             ));
-            respond(shared, &j, Err(err), 0.0, 0);
+            respond(shared, &j, Err(err), &rejected);
         } else if let Some(w) = j.acc_bits {
             match &shared.model.plan {
                 None => {
@@ -643,7 +680,7 @@ fn process_batch(engine: &mut Engine, shared: &Shared, dim: usize, jobs: Vec<Job
                          accumulator plan (save one with `pqs plan`)"
                             .into(),
                     );
-                    respond(shared, &j, Err(err), 0.0, 0);
+                    respond(shared, &j, Err(err), &rejected);
                 }
                 Some(plan) if w < plan.min_safe_bits() => {
                     let err = ServeError::BadRequest(format!(
@@ -651,7 +688,7 @@ fn process_batch(engine: &mut Engine, shared: &Shared, dim: usize, jobs: Vec<Job
                          (widest planned layer)",
                         plan.min_safe_bits()
                     ));
-                    respond(shared, &j, Err(err), 0.0, 0);
+                    respond(shared, &j, Err(err), &rejected);
                 }
                 Some(_) => groups.entry(Some(w)).or_default().push(j),
             }
@@ -669,7 +706,7 @@ fn process_batch(engine: &mut Engine, shared: &Shared, dim: usize, jobs: Vec<Job
             engine.apply_layer_bits(&plan.operating_point(w));
             overridden = true;
         }
-        engine_ok &= run_group(engine, shared, dim, &valid);
+        engine_ok &= run_group(engine, shared, dim, &valid, now);
     }
     if overridden && engine_ok {
         // restore the embedded plan for the next batch on this engine
@@ -681,10 +718,39 @@ fn process_batch(engine: &mut Engine, shared: &Shared, dim: usize, jobs: Vec<Job
     engine_ok
 }
 
+/// Per-invocation accounting shared by every response of one engine run.
+struct GroupStamp {
+    compute_us: f64,
+    batch_size: usize,
+    batch_us: f64,
+    layer_us: Arc<Vec<(String, f64)>>,
+    overflow: bool,
+}
+
+impl GroupStamp {
+    /// Pre-engine rejections: all-zero, so the queue/compute recorders
+    /// keep describing real engine invocations only.
+    fn rejected() -> GroupStamp {
+        GroupStamp {
+            compute_us: 0.0,
+            batch_size: 0,
+            batch_us: 0.0,
+            layer_us: Arc::new(Vec::new()),
+            overflow: false,
+        }
+    }
+}
+
 /// One engine invocation over an already-validated group of jobs.
 /// Returns whether the engine survived (`false` = it panicked and every
 /// job was answered with an `Internal` error).
-fn run_group(engine: &mut Engine, shared: &Shared, dim: usize, valid: &[Job]) -> bool {
+fn run_group(
+    engine: &mut Engine,
+    shared: &Shared,
+    dim: usize,
+    valid: &[Job],
+    assembled: Instant,
+) -> bool {
     if valid.is_empty() {
         return true;
     }
@@ -694,6 +760,7 @@ fn run_group(engine: &mut Engine, shared: &Shared, dim: usize, valid: &[Job]) ->
         flat.extend_from_slice(&j.image);
     }
     let t0 = Instant::now();
+    let batch_us = dur_us(t0.duration_since(assembled));
     // the forward itself runs under `catch_unwind` so a panicking kernel
     // (or an injected chaos fault) is indistinguishable from an engine
     // `Err` from the client's point of view: one 500 per batch-mate
@@ -710,17 +777,40 @@ fn run_group(engine: &mut Engine, shared: &Shared, dim: usize, valid: &[Job]) ->
         m.batched_requests += n;
     }
     match out {
-        Ok(Ok(out)) => {
+        Ok(Ok(mut out)) => {
+            // the batch ran at the engine's current per-layer widths (the
+            // embedded plan, or this group's operating point): fold its
+            // overflow report into the live headroom counters
+            shared.headroom.record(
+                &out.report,
+                &engine.effective_layer_bits(),
+                shared.cfg.acc_bits,
+            );
+            let totals = out.report.total();
+            let stamp = GroupStamp {
+                compute_us,
+                batch_size: n,
+                batch_us,
+                layer_us: Arc::new(std::mem::take(&mut out.layer_us)),
+                overflow: totals.policy_event_dots > 0 || totals.persistent_dots > 0,
+            };
             for (bi, j) in valid.iter().enumerate() {
-                respond(shared, j, Ok(out.argmax(bi)), compute_us, n);
+                respond(shared, j, Ok(out.argmax(bi)), &stamp);
             }
             true
         }
         Ok(Err(e)) => {
             // engine failure: per-request error responses, service survives
             let msg = format!("forward failed: {e:#}");
+            let stamp = GroupStamp {
+                compute_us,
+                batch_size: n,
+                batch_us,
+                layer_us: Arc::new(Vec::new()),
+                overflow: false,
+            };
             for j in valid {
-                respond(shared, j, Err(ServeError::Internal(msg.clone())), compute_us, n);
+                respond(shared, j, Err(ServeError::Internal(msg.clone())), &stamp);
             }
             true
         }
@@ -734,28 +824,32 @@ fn run_group(engine: &mut Engine, shared: &Shared, dim: usize, valid: &[Job]) ->
                 .unwrap_or_else(|| "unknown panic payload".into());
             shared.metrics.lock().unwrap().panics += 1;
             let msg = format!("engine panicked: {what}");
+            let stamp = GroupStamp {
+                compute_us,
+                batch_size: n,
+                batch_us,
+                layer_us: Arc::new(Vec::new()),
+                overflow: false,
+            };
             for j in valid {
-                respond(shared, j, Err(ServeError::Internal(msg.clone())), compute_us, n);
+                respond(shared, j, Err(ServeError::Internal(msg.clone())), &stamp);
             }
             false
         }
     }
 }
 
-fn respond(
-    shared: &Shared,
-    job: &Job,
-    result: Result<usize, ServeError>,
-    compute_us: f64,
-    batch_size: usize,
-) {
+fn respond(shared: &Shared, job: &Job, result: Result<usize, ServeError>, stamp: &GroupStamp) {
     let total_us = dur_us(job.enqueued.elapsed());
     let resp = ServeResponse {
         id: job.id,
-        queue_us: (total_us - compute_us).max(0.0),
-        compute_us,
+        queue_us: (total_us - stamp.compute_us).max(0.0),
+        compute_us: stamp.compute_us,
         latency_us: total_us,
-        batch_size,
+        batch_size: stamp.batch_size,
+        batch_us: stamp.batch_us,
+        layer_us: Arc::clone(&stamp.layer_us),
+        overflow: stamp.overflow,
         result,
     };
     {
@@ -769,7 +863,7 @@ fn respond(
         // pre-engine rejections (batch_size == 0) never ran the engine:
         // keep them out of the queue/compute distributions so those
         // recorders describe real engine invocations only
-        if batch_size > 0 {
+        if stamp.batch_size > 0 {
             m.queue.record(resp.queue_us);
             m.compute.record(resp.compute_us);
         }

@@ -57,6 +57,7 @@ use crate::util::pool::WorkerPool;
 use super::parser::{self, Version};
 use super::server::{
     encode_reply, prepare_classify, route_fast, run_classify, shed_connection, Ctx, Reply,
+    SHED_MAX_CONNECTIONS, SHED_QUEUE_FULL,
 };
 
 // ---- raw epoll / pipe shim ------------------------------------------------
@@ -544,7 +545,8 @@ impl Driver {
                     self.ctx.http.accepted.fetch_add(1, Ordering::Relaxed);
                     if self.live >= self.ctx.cfg.max_connections {
                         self.ctx.http.accepted.fetch_sub(1, Ordering::Relaxed);
-                        self.ctx.http.shed.fetch_add(1, Ordering::Relaxed);
+                        self.ctx.http.count_shed(SHED_MAX_CONNECTIONS);
+                        self.ctx.tracer.record_shed(SHED_MAX_CONNECTIONS);
                         shed_connection(stream);
                         continue;
                     }
@@ -716,7 +718,7 @@ impl Driver {
                         let http11 = req.version == Version::Http11;
                         match route_fast(&self.ctx, &req) {
                             Some(reply) => Step::Reply(reply, consumed),
-                            None => match prepare_classify(&self.ctx, &req, keep) {
+                            None => match prepare_classify(&self.ctx, &req, keep, now) {
                                 Ok(request) => {
                                     Step::Dispatch(Box::new(request), keep, http11, consumed)
                                 }
@@ -754,6 +756,8 @@ impl Driver {
                         if let Some(c) = &mut self.slots[idx] {
                             c.inflight = false;
                         }
+                        self.ctx.http.count_shed(SHED_QUEUE_FULL);
+                        self.ctx.tracer.record_shed(SHED_QUEUE_FULL);
                         let mut reply = Reply::retryable(503, "server busy", job.keep, 1);
                         reply.http11 = job.http11;
                         self.enqueue_reply(idx, reply, now);

@@ -102,8 +102,12 @@
 //! accumulator-bitwidth `plan` summary (`null` for plan-free models;
 //! populated once loaded, and pre-load for in-memory sources),
 //! `resident_bytes` (the live incarnation's measured weight bytes —
-//! owned weights plus its shared file blob; `null` while unloaded), and
-//! the model's lifetime `metrics` (which survive LRU eviction):
+//! owned weights plus its shared file blob; `null` while unloaded),
+//! the model's lifetime `metrics` (which survive LRU eviction), and —
+//! while a live engine holds the model — a `headroom` array of live
+//! per-layer accumulator telemetry (`null` when unloaded, `[]` until a
+//! batch has run; the same rows the Prometheus `pqs_headroom_*` gauges
+//! export, see `GET /metrics` below):
 //!
 //! ```json
 //! {"default": "a",
@@ -113,7 +117,13 @@
 //!                       "min_bits": 11, "max_bits": 14,
 //!                       "mean_bits": 12.3},
 //!              "resident_bytes": 51240,
-//!              "metrics": {"requests": 12, "...": "..."}}]}
+//!              "metrics": {"requests": 12, "...": "..."},
+//!              "headroom": [{"layer": "fc1", "planned_bits": 12,
+//!                            "max_required_bits": 10,
+//!                            "min_headroom_bits": 2, "dots": 4096,
+//!                            "overflow_dots": 0,
+//!                            "near_saturation_dots": 0,
+//!                            "batches": 4}]}]}
 //! ```
 //!
 //! The `plan` fields mirror [`crate::plan::PlanSummary`]: `planner` is
@@ -132,26 +142,78 @@
 //! unlimited), `dedup_hits`, `load_latency`), per-model
 //! [`crate::coordinator::ServeSummary`]
 //! sections under `models` keyed by name, the front-end's own `http`
-//! counters (`accepted`/`shed`/`read_timeouts` connections), and the
-//! shared compute `pool` utilization (`null` when engines run
-//! single-threaded). Latency objects carry quantile *summaries*
+//! counters (`accepted`, `read_timeouts`, and `shed` broken out per
+//! reason: `shed_queue_full` / `shed_max_connections` / `shed_draining`),
+//! a `trace` section (sampling state plus per-stage span-duration
+//! quantiles — see the span-stage glossary below), and the shared
+//! compute `pool` utilization (`null` when engines run single-threaded).
+//! Latency objects carry quantile *summaries*
 //! (`count`/`mean_us`/`p50_us`/`p95_us`/`p99_us`/`p999_us`/`max_us`);
-//! scrapes are
-//! cheap by construction — assembling one never copies a latency
-//! reservoir or blocks request routing behind the router lock. (`p999_us`
-//! reads from the same uniform reservoir as the other quantiles; it needs
-//! roughly a thousand samples before it separates from `max_us`.) The
-//! top-level (fleet-aggregate) p50/p95/p99 are count-weighted averages
-//! of the per-model quantiles, not pooled quantiles: on a fleet of
-//! models with very different latency profiles, read the per-model
-//! `models.*` sections for real tails (`count`/`mean_us`/`max_us` are
-//! exact at every level).
+//! scrapes are cheap by construction — assembling one never copies a
+//! latency reservoir or blocks request routing behind the router lock.
+//! (`p999_us` reads from the same uniform reservoir as the other
+//! quantiles; it needs roughly a thousand samples before it separates
+//! from `max_us`.) Fleet-aggregate and lifetime (eviction-surviving)
+//! quantiles are *pooled* through merged HDR histograms — within the
+//! histogram's ~3% bucket resolution of the true pooled quantile, never
+//! a count-weighted average of per-model quantiles.
 //!
 //! Each per-model section (and each `/v1/models` row) also carries a
 //! `health` object — circuit-breaker position and self-healing counters
 //! (see below) — and the `router` section totals them as
 //! `load_retries` / `breaker_opens` / `breaker_fast_fails` /
 //! `quarantined`.
+//!
+//! ## Request tracing: `X-Request-Id` and `GET /v1/trace`
+//!
+//! Every `/v1/classify` response carries an `X-Request-Id` header while
+//! tracing is enabled (the default — `--trace-sample-rate` controls
+//! ring sampling, not the id echo): the id is taken verbatim from the
+//! request's own `X-Request-Id` header when present — 1..=128
+//! characters of `[A-Za-z0-9._-]`, anything else is rejected `400` —
+//! and generated (`pqs-` + 16 hex digits) otherwise, so a client can
+//! correlate a response, a log line, and a trace span without minting
+//! ids itself.
+//!
+//! Each traced request records a **span**: total wall time plus a
+//! six-stage decomposition, clamped so the stages never sum past the
+//! honest total. The span-stage glossary:
+//!
+//! * `parse_us` — HTTP read + JSON decode: arrival to a validated
+//!   classify request;
+//! * `route_us` — routing: model lookup, breaker gate, lazy-load wait,
+//!   queue admission (`try_submit` entry to return);
+//! * `queue_us` — waiting in the routed model's queue for a worker;
+//! * `batch_us` — batch assembly (the linger window collecting
+//!   batch-mates);
+//! * `forward_us` — the engine forward pass the request rode in (the
+//!   span also carries per-layer timings for its batch);
+//! * `respond_us` — response encoding up to the flush handoff.
+//!
+//! Stage durations feed the `/v1/metrics` `trace` histograms for every
+//! request; whole spans land in a bounded in-memory ring when
+//! head-sampled, or unconditionally on errors, overflow-flagged
+//! forwards, and sheds (a shed records a synthetic 503 span carrying
+//! its reason). `GET /v1/trace?n=K` returns the most recent `K` ring
+//! spans oldest-first (everything buffered without `n`) plus sampling
+//! state and recorded/dropped counters; the ring never blocks the
+//! request path — old spans are evicted, not flushed.
+//!
+//! ## `GET /metrics` — Prometheus text exposition
+//!
+//! The same counters, gauges and distributions in Prometheus text
+//! format 0.0.4 (`Content-Type: text/plain; version=0.0.4`) for scrape
+//! pipelines: `pqs_*_total` counters (requests, errors, sheds by
+//! `reason`, router loads/evictions, trace spans), byte gauges
+//! (`pqs_resident_bytes`, `pqs_memory_budget_bytes`), a
+//! `pqs_latency_us` summary, one `pqs_trace_stage_us` histogram per
+//! span stage (labeled `stage="parse"`…`"respond"`), and the live
+//! accumulator telemetry as per-model per-layer gauges:
+//! `pqs_headroom_planned_bits`, `pqs_headroom_max_required_bits`,
+//! `pqs_headroom_min_bits` (alert when it approaches zero — some dot
+//! product came within that many bits of its planned accumulator
+//! width), and `pqs_headroom_{dots,overflow_dots,near_saturation_dots}_total`,
+//! all labeled `{model=...,layer=...}`.
 //!
 //! ## `GET /healthz` vs `GET /readyz`
 //!
@@ -188,10 +250,10 @@
 //! | 408  | a partial request stalled past the keep-alive timeout, or a whole request failed to arrive within it | — | `http.read_timeouts` |
 //! | 413  | head, declared body, or decoded chunked body over the configured limits | — | — |
 //! | 500  | engine failure on the batch the request rode in — including a **worker panic**, which is caught per batch (`catch_unwind`): every rider is answered, the engine is rebuilt, the worker survives — or a registered model's load failed (missing file, injected fault, over the `--max-bytes` budget) | — | per-model `errors`; panics also in per-model `panics` |
-//! | 503  | **queue full** (target model's queue, classify worker backlog, connection backlog / `max_connections` cap) — transient, retry | `Retry-After: 1` | `http.shed` (connection-level) |
+//! | 503  | **queue full** (target model's queue, classify worker backlog, connection backlog / `max_connections` cap) — transient, retry | `Retry-After: 1` | `http.shed` per reason: `shed_queue_full` / `shed_max_connections` |
 //! | 503  | **breaker open**: the model's recent loads kept failing; requests fast-fail without touching the source until the backoff elapses | `Retry-After:` ceil of the remaining backoff | `router.breaker_fast_fails`, per-model `health.fast_fails` |
 //! | 503  | **quarantined**: the model failed an integrity check (checksum mismatch, plan/graph inconsistency); only an explicit reload ends it | — (no `Retry-After`: waiting cannot fix corrupt bytes) | `router.quarantined`, per-model `health` |
-//! | 503  | shutting down / draining | — | — |
+//! | 503  | shutting down / draining | — | `http.shed_draining` |
 //! | 504  | per-request deadline expired in queue, or the response-wait backstop fired | `Retry-After: 1` | per-model `expired` |
 //!
 //! All error bodies are `{"error": "<message>"}`. Protocol-level errors

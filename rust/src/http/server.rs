@@ -40,6 +40,9 @@ use crate::coordinator::{
     ServeError, ServeSummary, SubmitError,
 };
 use crate::plan::PlanSummary;
+use crate::trace::{
+    self, PromText, RequestTrace, SpanStages, TraceConfig, TraceSpan, Tracer, MAX_REQUEST_ID_LEN,
+};
 use crate::util::json::{self, Json};
 use crate::util::pool::{self, WorkerPool};
 
@@ -87,6 +90,12 @@ pub struct HttpConfig {
     /// HEAD responses always use `Content-Length`); payload bytes are
     /// identical either way
     pub stream_threshold: usize,
+    /// request tracing: `X-Request-Id` echo, per-request span capture
+    /// into the `GET /v1/trace` ring, per-stage latency histograms.
+    /// Enabled at sample rate 0 by default — IDs are echoed and stage
+    /// histograms recorded, but only error/overflow spans reach the ring
+    /// (CLI: `serve-http --trace-sample-rate`).
+    pub trace: TraceConfig,
 }
 
 impl Default for HttpConfig {
@@ -100,6 +109,7 @@ impl Default for HttpConfig {
             event_loop: cfg!(target_os = "linux"),
             max_connections: 16_384,
             stream_threshold: 64 * 1024,
+            trace: TraceConfig::default(),
         }
     }
 }
@@ -113,9 +123,18 @@ pub struct HttpMetrics {
     /// connections handed to a backend (event loop slab or connection
     /// pool)
     pub accepted: u64,
-    /// connections shed with 503: pool + backlog saturated (blocking
-    /// backend) or the `max_connections` cap hit (event loop)
+    /// connections/requests shed with 503, every reason summed (equals
+    /// `shed_queue_full + shed_max_connections + shed_draining`)
     pub shed: u64,
+    /// sheds because a bounded queue was saturated: the connection
+    /// pool + backlog (blocking backend) or the classify-worker backlog
+    /// (event loop)
+    pub shed_queue_full: u64,
+    /// sheds because the event loop's `max_connections` cap was hit
+    pub shed_max_connections: u64,
+    /// sheds because the server was draining (shutdown in progress) when
+    /// the work arrived
+    pub shed_draining: u64,
     /// requests answered 408 because a partial request stalled or overran
     /// the keep-alive budget
     pub read_timeouts: u64,
@@ -125,16 +144,40 @@ pub struct HttpMetrics {
 pub(crate) struct HttpCounters {
     pub(crate) accepted: AtomicU64,
     pub(crate) shed: AtomicU64,
+    pub(crate) shed_queue_full: AtomicU64,
+    pub(crate) shed_max_connections: AtomicU64,
+    pub(crate) shed_draining: AtomicU64,
     pub(crate) read_timeouts: AtomicU64,
 }
+
+/// Shed reasons as they appear in trace events and the Prometheus
+/// `reason` label (see [`HttpMetrics`] for what each one counts).
+pub(crate) const SHED_QUEUE_FULL: &str = "queue_full";
+pub(crate) const SHED_MAX_CONNECTIONS: &str = "max_connections";
+pub(crate) const SHED_DRAINING: &str = "draining";
 
 impl HttpCounters {
     pub(crate) fn snapshot(&self) -> HttpMetrics {
         HttpMetrics {
             accepted: self.accepted.load(Ordering::Relaxed),
             shed: self.shed.load(Ordering::Relaxed),
+            shed_queue_full: self.shed_queue_full.load(Ordering::Relaxed),
+            shed_max_connections: self.shed_max_connections.load(Ordering::Relaxed),
+            shed_draining: self.shed_draining.load(Ordering::Relaxed),
             read_timeouts: self.read_timeouts.load(Ordering::Relaxed),
         }
+    }
+
+    /// Count one shed under `reason` (the total and the per-reason
+    /// counter move together so `shed` always equals the reason sum).
+    pub(crate) fn count_shed(&self, reason: &str) {
+        self.shed.fetch_add(1, Ordering::Relaxed);
+        let per_reason = match reason {
+            SHED_QUEUE_FULL => &self.shed_queue_full,
+            SHED_MAX_CONNECTIONS => &self.shed_max_connections,
+            _ => &self.shed_draining,
+        };
+        per_reason.fetch_add(1, Ordering::Relaxed);
     }
 }
 
@@ -163,6 +206,10 @@ pub(crate) struct Ctx {
     pub(crate) next_id: AtomicU64,
     pub(crate) stop: Arc<AtomicBool>,
     pub(crate) http: HttpCounters,
+    /// per-request span capture + per-stage histograms + shed events
+    /// (`GET /v1/trace`, the `trace` section of `/v1/metrics`, and the
+    /// `pqs_trace_*` families of `GET /metrics`)
+    pub(crate) tracer: Tracer,
     /// readiness kill-switch: flipped (before any connection closes) by
     /// [`HttpServer::set_draining`] / shutdown so `GET /readyz` reports
     /// not-ready while in-flight requests still complete
@@ -202,6 +249,7 @@ impl HttpServer {
             next_id: AtomicU64::new(1),
             stop: Arc::clone(&stop),
             http: HttpCounters::default(),
+            tracer: Tracer::new(cfg.trace),
             draining: AtomicBool::new(false),
         });
 
@@ -251,7 +299,8 @@ impl HttpServer {
                         actx.http.accepted.fetch_add(1, Ordering::Relaxed);
                         if let Err(shed) = conn_pool.try_dispatch(stream) {
                             actx.http.accepted.fetch_sub(1, Ordering::Relaxed);
-                            actx.http.shed.fetch_add(1, Ordering::Relaxed);
+                            actx.http.count_shed(SHED_QUEUE_FULL);
+                            actx.tracer.record_shed(SHED_QUEUE_FULL);
                             shed_connection(shed);
                         }
                     }
@@ -527,8 +576,14 @@ pub(crate) struct Reply {
     /// (full queue, Open breaker, missed deadline); `None` on errors
     /// retrying cannot fix (quarantine, bad request)
     pub(crate) retry_after: Option<u64>,
-    /// JSON payload text (the would-be payload for HEAD)
+    /// payload text (the would-be payload for HEAD)
     pub(crate) body: String,
+    /// `Content-Type` of the body; almost always JSON — `GET /metrics`
+    /// answers in the Prometheus text exposition format instead
+    pub(crate) content_type: &'static str,
+    /// trace ID echoed back as `X-Request-Id` (classify responses when
+    /// tracing is enabled; `None` elsewhere)
+    pub(crate) request_id: Option<String>,
     /// keep the connection open after this response
     pub(crate) keep: bool,
     /// HEAD semantics: emit GET's status and headers (`Content-Length`
@@ -546,6 +601,8 @@ impl Reply {
             allow: None,
             retry_after: None,
             body,
+            content_type: "application/json",
+            request_id: None,
             keep,
             head_only: false,
             http11: true,
@@ -586,16 +643,26 @@ pub(crate) fn route_fast(ctx: &Ctx, req: &Request<'_>) -> Option<Reply> {
             Reply::new(200, json::obj(vec![("status", json::s("ok"))]).to_string(), keep)
         }
         ("GET" | "HEAD", "/readyz") => readyz_reply(ctx, keep),
-        ("GET" | "HEAD", "/v1/metrics") => {
-            Reply::new(200, metrics_json(&ctx.router.metrics(), &ctx.http.snapshot()), keep)
-        }
+        ("GET" | "HEAD", "/v1/metrics") => Reply::new(
+            200,
+            metrics_json(&ctx.router.metrics(), &ctx.http.snapshot(), &ctx.tracer),
+            keep,
+        ),
         ("GET" | "HEAD", "/v1/models") => {
             Reply::new(200, models_json(ctx.router.default_model(), &ctx.router.models()), keep)
         }
-        ("POST", "/v1/classify") => return None,
-        (_, "/healthz") | (_, "/readyz") | (_, "/v1/metrics") | (_, "/v1/models") => {
-            method_not_allowed("GET, HEAD", keep)
+        ("GET" | "HEAD", "/v1/trace") => {
+            let n = trace_query_n(req.target);
+            Reply::new(200, ctx.tracer.trace_json(n).to_string(), keep)
         }
+        ("GET" | "HEAD", "/metrics") => {
+            let mut r = Reply::new(200, prometheus_text(ctx), keep);
+            r.content_type = "text/plain; version=0.0.4";
+            r
+        }
+        ("POST", "/v1/classify") => return None,
+        (_, "/healthz") | (_, "/readyz") | (_, "/v1/metrics") | (_, "/v1/models")
+        | (_, "/v1/trace") | (_, "/metrics") => method_not_allowed("GET, HEAD", keep),
         (_, "/v1/classify") => method_not_allowed("POST", keep),
         _ => Reply::error(404, "no such endpoint", keep),
     };
@@ -636,15 +703,38 @@ fn readyz_reply(ctx: &Ctx, keep: bool) -> Reply {
     }
 }
 
+/// The `n` query parameter of `GET /v1/trace?n=K` (the whole ring when
+/// absent or malformed — `path()` strips the query, so this reads the
+/// raw target).
+fn trace_query_n(target: &str) -> usize {
+    target
+        .split_once('?')
+        .map(|(_, q)| q)
+        .into_iter()
+        .flat_map(|q| q.split('&'))
+        .find_map(|kv| kv.strip_prefix("n="))
+        .and_then(|v| v.parse::<usize>().ok())
+        .unwrap_or(usize::MAX)
+}
+
+/// Microseconds elapsed since `t0`.
+fn us_since(t0: Instant) -> f64 {
+    t0.elapsed().as_secs_f64() * 1e6
+}
+
 /// Full blocking dispatch of one parsed request (the fallback backend's
 /// path; the event loop splits the same stages across loop and workers).
+/// `arrived` anchors the request's trace span: as close to the bytes'
+/// arrival as the backend can observe (here: parse completion, since the
+/// blocking read loop interleaves reads of many pipelined requests).
 fn route(ctx: &Ctx, req: &Request<'_>) -> Reply {
+    let arrived = Instant::now();
     if let Some(reply) = route_fast(ctx, req) {
         return reply;
     }
     let keep = req.keep_alive() && !ctx.stop.load(Ordering::Acquire);
     let http11 = req.version == Version::Http11;
-    match prepare_classify(ctx, req, keep) {
+    match prepare_classify(ctx, req, keep, arrived) {
         Ok(request) => run_classify(ctx, request, keep, http11),
         Err(reply) => reply,
     }
@@ -654,15 +744,70 @@ fn route(ctx: &Ctx, req: &Request<'_>) -> Reply {
 /// [`ClassifyRequest`]. Pure CPU work (JSON parse + shape checks), cheap
 /// enough for the event loop to run inline; the owned result lets the
 /// blocking router calls run on a worker thread afterwards.
+///
+/// `arrived` is when the backend first saw this request (span anchor).
+/// When tracing is enabled the trace context rides the returned request:
+/// the ID comes from a valid `X-Request-Id` header (1–128 chars of
+/// `[A-Za-z0-9._-]`; an invalid one is a 400, never silently replaced)
+/// or is generated, and is echoed on every classify response — including
+/// the 400s built here, which also record an error span.
 pub(crate) fn prepare_classify(
     ctx: &Ctx,
     req: &Request<'_>,
     keep: bool,
+    arrived: Instant,
 ) -> Result<ClassifyRequest, Reply> {
     let http11 = req.version == Version::Http11;
+    let trace = match (ctx.tracer.enabled(), req.header("x-request-id")) {
+        (false, _) => None,
+        (true, Some(id)) => {
+            if !trace::valid_request_id(id) {
+                let mut r = Reply::error(
+                    400,
+                    &format!(
+                        "invalid X-Request-Id: want 1..={MAX_REQUEST_ID_LEN} characters of \
+                         [A-Za-z0-9._-]"
+                    ),
+                    keep,
+                );
+                r.http11 = http11;
+                return Err(r);
+            }
+            Some(RequestTrace {
+                id: id.to_string(),
+                sampled: ctx.tracer.should_sample(),
+                start: arrived,
+                parse_us: 0.0,
+            })
+        }
+        (true, None) => Some(RequestTrace {
+            id: ctx.tracer.next_id(),
+            sampled: ctx.tracer.should_sample(),
+            start: arrived,
+            parse_us: 0.0,
+        }),
+    };
     let fail = |msg: &str| {
         let mut r = Reply::error(400, msg, keep);
         r.http11 = http11;
+        if let Some(t) = &trace {
+            // even a malformed classify echoes its ID and (being an
+            // error) always reaches the trace ring: one clock read
+            // serves as both the parse stage and the span total
+            let us = us_since(t.start);
+            ctx.tracer.record(TraceSpan {
+                id: t.id.clone(),
+                model: None,
+                status: 400,
+                sampled: t.sampled,
+                overflow: false,
+                shed_reason: None,
+                total_us: us,
+                stages: SpanStages { parse_us: us, ..SpanStages::default() },
+                layers: Vec::new(),
+            });
+            r.request_id = Some(t.id.clone());
+        }
         r
     };
     let payload = match Json::parse_bytes(&req.body) {
@@ -728,7 +873,11 @@ pub(crate) fn prepare_classify(
             None => return Err(fail("\"acc_bits\" must be a positive integer")),
         },
     };
-    Ok(ClassifyRequest { id, model, image, deadline, acc_bits })
+    let mut trace = trace;
+    if let Some(t) = &mut trace {
+        t.parse_us = us_since(t.start);
+    }
+    Ok(ClassifyRequest { id, model, image, deadline, acc_bits, trace })
 }
 
 /// Submit one validated request into the router and wait (blocking) for
@@ -747,36 +896,147 @@ pub(crate) fn run_classify(
     reply
 }
 
-fn run_classify_inner(ctx: &Ctx, request: ClassifyRequest, keep: bool) -> Reply {
+/// What [`classify_route`] observed along the way, for span assembly:
+/// stage boundary instants, the engine's per-batch stamp, the shed
+/// reason (when the answer was a queue-full / draining 503).
+struct ClassifyObs {
+    /// when `Router::try_submit` returned (routing — lazy load, breaker
+    /// gate, queue admission — done, for better or worse)
+    routed_at: Instant,
+    /// when the response (or timeout/route error) was in hand
+    responded_at: Instant,
+    /// set when an engine actually answered
+    engine: Option<EngineObs>,
+    shed_reason: Option<&'static str>,
+}
+
+/// The engine-side facts of one answered request.
+struct EngineObs {
+    batch_us: f64,
+    compute_us: f64,
+    layer_us: Arc<Vec<(String, f64)>>,
+    overflow: bool,
+}
+
+fn run_classify_inner(ctx: &Ctx, mut request: ClassifyRequest, keep: bool) -> Reply {
+    let trace = request.trace.take();
+    // resolve the span's model label up front: the router consumes the
+    // request, and `None` routes to the default
+    let model = trace.as_ref().map(|_| match &request.model {
+        Some(m) => m.clone(),
+        None => ctx.router.default_model().to_string(),
+    });
+    let now = Instant::now();
+    let mut obs =
+        ClassifyObs { routed_at: now, responded_at: now, engine: None, shed_reason: None };
+    let mut reply = classify_route(ctx, request, keep, &mut obs);
+    if let Some(t) = trace {
+        // stage decomposition, clamped so stages can never sum past the
+        // span total: parse+route end at `routed_at`; the wait between
+        // `routed_at` and `responded_at` splits into forward (engine
+        // invocation), batch (assembly) and queue (the remainder) using
+        // the engine's own stamps bounded by the observed wait
+        let to_routed = obs.routed_at.duration_since(t.start).as_secs_f64() * 1e6;
+        let route_us = (to_routed - t.parse_us).max(0.0);
+        let wait_us = obs.responded_at.duration_since(obs.routed_at).as_secs_f64() * 1e6;
+        let (queue_us, batch_us, forward_us, layers, overflow) = match &obs.engine {
+            Some(e) => {
+                let forward = e.compute_us.min(wait_us);
+                let batch = e.batch_us.min(wait_us - forward);
+                let queue = wait_us - forward - batch;
+                (queue, batch, forward, (*e.layer_us).clone(), e.overflow)
+            }
+            None => (wait_us, 0.0, 0.0, Vec::new(), false),
+        };
+        let respond_us = us_since(obs.responded_at);
+        let stages = SpanStages {
+            parse_us: t.parse_us,
+            route_us,
+            queue_us,
+            batch_us,
+            forward_us,
+            respond_us,
+        };
+        // measured LAST, after every stage: an honest upper bound
+        let total_us = us_since(t.start);
+        ctx.tracer.record(TraceSpan {
+            id: t.id.clone(),
+            model,
+            status: reply.status,
+            sampled: t.sampled,
+            overflow,
+            shed_reason: obs.shed_reason,
+            total_us,
+            stages,
+            layers,
+        });
+        reply.request_id = Some(t.id);
+    }
+    reply
+}
+
+/// Route + wait for one classify request, recording stage boundaries and
+/// engine facts into `obs` (the caller assembles the trace span).
+fn classify_route(
+    ctx: &Ctx,
+    request: ClassifyRequest,
+    keep: bool,
+    obs: &mut ClassifyObs,
+) -> Reply {
     let pending = match ctx.router.try_submit(request) {
         Ok(p) => p,
-        Err(RouteError::UnknownModel(msg)) => return Reply::error(404, &msg, keep),
-        Err(RouteError::LoadFailed(msg)) => return Reply::error(500, &msg, keep),
-        Err(e @ RouteError::BreakerOpen { .. }) => {
-            // Retry-After = the breaker's remaining backoff, rounded up:
-            // a client honoring it lands just after the Half-Open probe
-            let after = match &e {
-                RouteError::BreakerOpen { retry_after, .. } => {
-                    retry_after.as_secs_f64().ceil() as u64
+        Err(e) => {
+            obs.routed_at = Instant::now();
+            obs.responded_at = obs.routed_at;
+            return match e {
+                RouteError::UnknownModel(msg) => Reply::error(404, &msg, keep),
+                RouteError::LoadFailed(msg) => Reply::error(500, &msg, keep),
+                e @ RouteError::BreakerOpen { .. } => {
+                    // Retry-After = the breaker's remaining backoff,
+                    // rounded up: a client honoring it lands just after
+                    // the Half-Open probe
+                    let after = match &e {
+                        RouteError::BreakerOpen { retry_after, .. } => {
+                            retry_after.as_secs_f64().ceil() as u64
+                        }
+                        _ => 1,
+                    };
+                    Reply::retryable(503, &e.to_string(), keep, after)
                 }
-                _ => 1,
+                // no Retry-After: a quarantine outlives any client
+                // backoff (it ends only at an explicit operator reload)
+                e @ RouteError::Quarantined { .. } => Reply::error(503, &e.to_string(), keep),
+                RouteError::Rejected(e) => {
+                    let reason = match &e {
+                        SubmitError::Full(_) => SHED_QUEUE_FULL,
+                        SubmitError::Closed(_) => SHED_DRAINING,
+                    };
+                    obs.shed_reason = Some(reason);
+                    ctx.http.count_shed(reason);
+                    // a closing server also closes the connection; a full
+                    // queue is transient, so the connection stays usable
+                    // for a retry
+                    let keep = keep && !matches!(e, SubmitError::Closed(_));
+                    Reply::retryable(503, &RouteError::Rejected(e).to_string(), keep, 1)
+                }
             };
-            return Reply::retryable(503, &e.to_string(), keep, after);
-        }
-        // no Retry-After: a quarantine outlives any client backoff (it
-        // ends only at an explicit operator reload)
-        Err(e @ RouteError::Quarantined { .. }) => return Reply::error(503, &e.to_string(), keep),
-        Err(RouteError::Rejected(e)) => {
-            // a closing server also closes the connection; a full queue is
-            // transient, so the connection stays usable for a retry
-            let keep = keep && !matches!(e, SubmitError::Closed(_));
-            return Reply::retryable(503, &RouteError::Rejected(e).to_string(), keep, 1);
         }
     };
+    obs.routed_at = Instant::now();
     let resp = match pending.wait_timeout(ctx.cfg.response_timeout) {
         Some(r) => r,
-        None => return Reply::retryable(504, "timed out waiting for the engine", keep, 1),
+        None => {
+            obs.responded_at = Instant::now();
+            return Reply::retryable(504, "timed out waiting for the engine", keep, 1);
+        }
     };
+    obs.responded_at = Instant::now();
+    obs.engine = Some(EngineObs {
+        batch_us: resp.batch_us,
+        compute_us: resp.compute_us,
+        layer_us: Arc::clone(&resp.layer_us),
+        overflow: resp.overflow,
+    });
     match resp.result {
         Ok(class) => {
             let body = json::obj(vec![
@@ -839,7 +1099,14 @@ pub(crate) fn encode_reply(r: &Reply, stream_threshold: usize) -> Vec<u8> {
     out.extend_from_slice(r.status.to_string().as_bytes());
     out.push(b' ');
     out.extend_from_slice(status_reason(r.status).as_bytes());
-    out.extend_from_slice(b"\r\nContent-Type: application/json\r\n");
+    out.extend_from_slice(b"\r\nContent-Type: ");
+    out.extend_from_slice(r.content_type.as_bytes());
+    out.extend_from_slice(b"\r\n");
+    if let Some(id) = &r.request_id {
+        out.extend_from_slice(b"X-Request-Id: ");
+        out.extend_from_slice(id.as_bytes());
+        out.extend_from_slice(b"\r\n");
+    }
     if chunked {
         out.extend_from_slice(b"Transfer-Encoding: chunked\r\n");
     } else {
@@ -938,9 +1205,11 @@ fn shape_json(shape: &Option<Vec<usize>>) -> Json {
 
 /// The `GET /v1/metrics` document: aggregate counters at the top level
 /// (old single-model clients keep working), then `router` counters,
-/// per-model sections under `models`, the front-end's `http` counters,
-/// and the shared compute pool (`null` when engines run single-threaded).
-fn metrics_json(rm: &RouterMetrics, hm: &HttpMetrics) -> String {
+/// per-model sections under `models`, the front-end's `http` counters
+/// (sheds broken out per reason), per-stage trace histograms under
+/// `trace`, and the shared compute pool (`null` when engines run
+/// single-threaded).
+fn metrics_json(rm: &RouterMetrics, hm: &HttpMetrics, tracer: &Tracer) -> String {
     let agg = rm.aggregate();
     let models = Json::Obj(
         rm.models
@@ -1006,9 +1275,13 @@ fn metrics_json(rm: &RouterMetrics, hm: &HttpMetrics) -> String {
             json::obj(vec![
                 ("accepted", json::num(hm.accepted as f64)),
                 ("shed", json::num(hm.shed as f64)),
+                ("shed_queue_full", json::num(hm.shed_queue_full as f64)),
+                ("shed_max_connections", json::num(hm.shed_max_connections as f64)),
+                ("shed_draining", json::num(hm.shed_draining as f64)),
                 ("read_timeouts", json::num(hm.read_timeouts as f64)),
             ]),
         ),
+        ("trace", tracer.stages_json()),
         ("pool", pool),
     ])
     .to_string()
@@ -1016,7 +1289,8 @@ fn metrics_json(rm: &RouterMetrics, hm: &HttpMetrics) -> String {
 
 /// The `GET /v1/models` document: the default route and one row per
 /// registered model (load state, input shape, embedded accumulator-plan
-/// summary, per-model metrics).
+/// summary, per-model metrics, and — while the engine is live — the
+/// per-layer accumulator-headroom snapshot).
 fn models_json(default: &str, models: &[ModelStatus]) -> String {
     let rows: Vec<Json> = models
         .iter()
@@ -1033,10 +1307,122 @@ fn models_json(default: &str, models: &[ModelStatus]) -> String {
                 ),
                 ("health", health_json(&m.health)),
                 ("metrics", serve_metrics_json(&m.metrics)),
+                (
+                    "headroom",
+                    m.headroom.as_ref().map_or(Json::Null, |h| trace::headroom_json(h)),
+                ),
             ])
         })
         .collect();
     json::obj(vec![("default", json::s(default)), ("models", Json::Arr(rows))]).to_string()
+}
+
+/// The `GET /metrics` document: Prometheus text exposition format
+/// 0.0.4. Fleet counters and gauges mirror `/v1/metrics`; per-stage
+/// span timings export as one histogram family labeled by stage; the
+/// per-model per-layer accumulator headroom exports as gauges so a
+/// scrape can alert on `pqs_headroom_min_bits` approaching zero long
+/// before a clip or wrap shows up in accuracy.
+fn prometheus_text(ctx: &Ctx) -> String {
+    let rm = ctx.router.metrics();
+    let agg = rm.aggregate();
+    let hm = ctx.http.snapshot();
+    let (recorded, dropped) = ctx.tracer.counts();
+    let mut p = PromText::new();
+
+    let counters = [
+        ("pqs_requests_total", "Requests answered by an engine.", agg.requests as f64),
+        ("pqs_errors_total", "Requests answered with an engine error.", agg.errors as f64),
+        ("pqs_expired_total", "Requests whose deadline expired in queue.", agg.expired as f64),
+        ("pqs_panics_total", "Worker panics isolated by the serving loop.", agg.panics as f64),
+        ("pqs_batches_total", "Engine forward batches executed.", agg.batches as f64),
+        ("pqs_router_routed_total", "Requests routed to a model queue.", rm.routed as f64),
+        (
+            "pqs_router_unknown_model_total",
+            "Requests naming an unregistered model.",
+            rm.unknown_model as f64,
+        ),
+        ("pqs_router_loads_total", "Model engine loads.", rm.loads as f64),
+        ("pqs_router_evictions_total", "Model engines evicted.", rm.evictions as f64),
+        ("pqs_router_dedup_hits_total", "Duplicate loads coalesced.", rm.dedup_hits as f64),
+        ("pqs_router_load_retries_total", "Model load retries.", rm.load_retries as f64),
+        ("pqs_router_breaker_opens_total", "Circuit breaker opens.", rm.breaker_opens as f64),
+        (
+            "pqs_router_breaker_fast_fails_total",
+            "Requests fast-failed by an open breaker.",
+            rm.breaker_fast_fails as f64,
+        ),
+        ("pqs_http_accepted_total", "Connections accepted.", hm.accepted as f64),
+        ("pqs_http_read_timeouts_total", "Connections timed out reading.", hm.read_timeouts as f64),
+        ("pqs_trace_spans_recorded_total", "Trace spans recorded.", recorded as f64),
+        (
+            "pqs_trace_spans_dropped_total",
+            "Trace spans evicted from the ring.",
+            dropped as f64,
+        ),
+    ];
+    for (name, help, v) in counters {
+        p.metric(name, "counter", help, v);
+    }
+
+    let loaded = rm.models.iter().filter(|m| m.loaded).count();
+    let gauges = [
+        ("pqs_resident_bytes", "Bytes of model weights resident.", rm.resident_bytes as f64),
+        ("pqs_memory_budget_bytes", "Fleet weight-memory budget.", rm.budget as f64),
+        ("pqs_quarantined_models", "Models under quarantine.", rm.quarantined as f64),
+        ("pqs_models_loaded", "Models with a live engine.", loaded as f64),
+    ];
+    for (name, help, v) in gauges {
+        p.metric(name, "gauge", help, v);
+    }
+
+    p.family("pqs_http_shed_total", "counter", "Work shed with 503, by reason.");
+    p.sample("pqs_http_shed_total", &[("reason", SHED_QUEUE_FULL)], hm.shed_queue_full as f64);
+    p.sample(
+        "pqs_http_shed_total",
+        &[("reason", SHED_MAX_CONNECTIONS)],
+        hm.shed_max_connections as f64,
+    );
+    p.sample("pqs_http_shed_total", &[("reason", SHED_DRAINING)], hm.shed_draining as f64);
+
+    p.family("pqs_latency_us", "summary", "End-to-end classify latency in microseconds.");
+    let lat = &agg.latency;
+    for (q, v) in [("0.5", lat.p50_us), ("0.99", lat.p99_us), ("0.999", lat.p999_us)] {
+        p.sample("pqs_latency_us", &[("quantile", q)], v);
+    }
+    p.sample("pqs_latency_us_sum", &[], lat.mean_us * lat.count as f64);
+    p.sample("pqs_latency_us_count", &[], lat.count as f64);
+
+    p.family("pqs_trace_stage_us", "histogram", "Per-stage span durations in microseconds.");
+    for (stage, h) in ctx.tracer.stage_hists() {
+        p.histogram_rows("pqs_trace_stage_us", &[("stage", stage)], &h);
+    }
+
+    p.family("pqs_headroom_planned_bits", "gauge", "Accumulator width the layer serves at.");
+    p.family("pqs_headroom_max_required_bits", "gauge", "Widest observed per-dot requirement.");
+    p.family("pqs_headroom_min_bits", "gauge", "Minimum observed headroom (planned - required).");
+    p.family("pqs_headroom_dots_total", "counter", "Dots observed by the overflow monitor.");
+    p.family("pqs_headroom_overflow_dots_total", "counter", "Dots that overflowed at serving.");
+    p.family(
+        "pqs_headroom_near_saturation_dots_total",
+        "counter",
+        "Dots within one bit of the planned width.",
+    );
+    for m in &rm.models {
+        if let Some(rows) = &m.headroom {
+            for l in rows {
+                let lbl = [("model", m.name.as_str()), ("layer", l.layer.as_str())];
+                let near = l.near_saturation_dots as f64;
+                p.sample("pqs_headroom_planned_bits", &lbl, l.planned_bits as f64);
+                p.sample("pqs_headroom_max_required_bits", &lbl, l.max_required_bits as f64);
+                p.sample("pqs_headroom_min_bits", &lbl, l.min_headroom_bits as f64);
+                p.sample("pqs_headroom_dots_total", &lbl, l.dots as f64);
+                p.sample("pqs_headroom_overflow_dots_total", &lbl, l.overflow_dots as f64);
+                p.sample("pqs_headroom_near_saturation_dots_total", &lbl, near);
+            }
+        }
+    }
+    p.finish()
 }
 
 #[cfg(test)]

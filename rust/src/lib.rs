@@ -34,6 +34,7 @@ pub mod runtime;
 pub mod sparse;
 pub mod sweep;
 pub mod tensor;
+pub mod trace;
 pub mod util;
 
 /// Default artifacts directory (relative to the repo root).

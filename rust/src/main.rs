@@ -59,10 +59,16 @@
 //!        [--threads N] [--engine-threads T]
 //!        [--max-batch B] [--queue-cap Q] [--deadline-ms MS] [--for-secs S]
 //!        [--event-loop on|off] [--max-connections N]
+//!        [--trace-sample-rate F] [--trace-ring N]
 //!        multi-model HTTP/1.1 front-end over the serving router
 //!        (POST /v1/classify with optional "model" and "acc_bits" fields,
-//!        GET /v1/models, GET /v1/metrics, GET /healthz — see the
-//!        `pqs::http` module docs for the wire protocol).
+//!        GET /v1/models, GET /v1/metrics, GET /v1/trace, GET /metrics
+//!        in Prometheus text format, GET /healthz — see the `pqs::http`
+//!        module docs for the wire protocol and the X-Request-Id
+//!        contract). --trace-sample-rate sets the head-sampling
+//!        probability for the request-trace ring (default 0: stage
+//!        histograms and id echo still on; errors, overflows and sheds
+//!        are always ring-kept) and --trace-ring its span capacity.
 //!        `--model` repeats; the first is the default route. Each SPEC is
 //!        `linear:<dim>x<classes>`, `conv:<c>x<h>x<w>x<oc>x<classes>`, a
 //!        `.pqsw` path, or (bare name / no SPEC) a manifest entry loaded
@@ -662,6 +668,12 @@ fn run() -> Result<()> {
                 };
             }
             hcfg.max_connections = args.get_usize("max-connections", hcfg.max_connections);
+            // head-sampling probability for the trace ring; 0 keeps the
+            // per-stage histograms and the X-Request-Id echo but rings
+            // only errors/overflows/sheds
+            hcfg.trace.sample_rate =
+                args.get_f64("trace-sample-rate", hcfg.trace.sample_rate).clamp(0.0, 1.0);
+            hcfg.trace.ring = args.get_usize("trace-ring", hcfg.trace.ring);
             if hcfg.event_loop && cfg!(target_os = "linux") {
                 // one loop thread multiplexes every socket; lift the fd
                 // soft limit toward the connection cap so mostly idle
@@ -690,6 +702,8 @@ fn run() -> Result<()> {
             );
             println!("  GET  /v1/models    registered models, load state, per-model metrics");
             println!("  GET  /v1/metrics   serving metrics snapshot (per-model sections)");
+            println!("  GET  /v1/trace     recent request spans (?n=K; sampled + all errors)");
+            println!("  GET  /metrics      Prometheus text exposition (headroom gauges)");
             println!("  GET  /healthz      liveness");
             println!("  GET  /readyz       readiness (drain state, default model, queue)");
             if let Some(f) = http.faults() {

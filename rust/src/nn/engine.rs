@@ -46,6 +46,7 @@
 
 use std::collections::BTreeMap;
 use std::sync::Arc;
+use std::time::Instant;
 
 use anyhow::{anyhow, bail, Result};
 
@@ -85,6 +86,9 @@ pub struct EvalResult {
     pub batch: usize,
     pub classes: usize,
     pub report: OverflowReport,
+    /// wall time spent in each q-layer, graph order, µs (always
+    /// populated — two clock reads per layer; feeds request traces)
+    pub layer_us: Vec<(String, f64)>,
 }
 
 impl EvalResult {
@@ -449,6 +453,7 @@ impl Engine {
             return Err(anyhow!("empty graph"));
         }
         let mut report = OverflowReport::default();
+        let mut layer_us: Vec<(String, f64)> = Vec::new();
         let mut vals: Vec<Option<TensorF>> = (0..self.nodes.len()).map(|_| None).collect();
         let mut in_shape = vec![n];
         in_shape.extend_from_slice(&self.input_shape);
@@ -505,6 +510,7 @@ impl Engine {
                         Some(bits) => EngineConfig { acc_bits: bits, ..self.cfg },
                         None => self.cfg,
                     };
+                    let t0 = Instant::now();
                     let out = match node.op {
                         Op::QLinear => qlinear_forward(
                             layer, &lcfg, &mut self.scratch, self.threads, pool, x,
@@ -519,6 +525,7 @@ impl Engine {
                             collect.then_some(&mut stats),
                         ),
                     };
+                    layer_us.push((layer.name.clone(), t0.elapsed().as_secs_f64() * 1e6));
                     if collect {
                         report.layer_mut(&layer.name).merge(&stats);
                     }
@@ -538,7 +545,7 @@ impl Engine {
 
         let out = vals[self.out_slot].take().ok_or_else(|| anyhow!("missing graph output"))?;
         let classes = out.shape[1];
-        Ok(EvalResult { logits: out.data, batch: n, classes, report })
+        Ok(EvalResult { logits: out.data, batch: n, classes, report, layer_us })
     }
 
     /// Evaluate accuracy over a dataset slice. `limit` is exact: the final
@@ -999,6 +1006,7 @@ mod tests {
             batch: 2,
             classes: 3,
             report: OverflowReport::default(),
+            layer_us: Vec::new(),
         };
         assert_eq!(r.argmax(0), 1);
         assert_eq!(r.argmax(1), 0);

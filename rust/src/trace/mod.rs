@@ -1,0 +1,978 @@
+//! End-to-end request tracing + live telemetry (zero dependencies).
+//!
+//! Three pieces, threaded through every serving seam:
+//!
+//! * **Per-request spans** — every classify carries a [`RequestTrace`]
+//!   (id from the client's `X-Request-Id` header or generated, echoed
+//!   back in the response). The HTTP layer records monotonic stage
+//!   durations (`parse → route → queue → batch → forward → respond`,
+//!   see [`STAGES`]) into a [`TraceSpan`] and hands it to the shared
+//!   [`Tracer`]: a fixed-capacity ring buffer behind one short-lived
+//!   mutex, head-sampled at `TraceConfig::sample_rate` with
+//!   always-sample overrides on errors (status ≥ 400, so 504s and
+//!   sheds are never lost) and on batches that recorded overflow
+//!   events. `GET /v1/trace?n=K` serves the ring as JSON; per-stage
+//!   [`HdrHistogram`] breakdowns ride `GET /v1/metrics`.
+//! * **Accumulator headroom** — [`ModelHeadroom`] folds the engine's
+//!   per-layer [`OverflowStats`] (`bits_hist`) into running counters
+//!   per model × layer: planned width, max observed required width,
+//!   min headroom in bits, overflow-event dots and near-saturation
+//!   dots (within 1 bit of the plan). Exposed per row in
+//!   `GET /v1/models` and as Prometheus gauges, so a layer drifting
+//!   toward its budget is visible before it overflows.
+//! * **Prometheus text exposition** — [`PromText`] renders counters,
+//!   gauges and HDR-bucketed histograms in the text format 0.0.4
+//!   served from `GET /metrics`; [`validate_exposition`] is the
+//!   grammar checker the unit and wire tests hold the output against.
+
+use std::collections::{BTreeMap, VecDeque};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+use crate::overflow::OverflowReport;
+use crate::util::json::{self, Json};
+use crate::util::stats::HdrHistogram;
+
+/// Span stage names, in request order. `parse` covers accept/read →
+/// request decoded; `route` covers model resolution (breaker and
+/// lazy-load waits included) through queue admission; `queue` is the
+/// client-observed wait net of batch assembly and forward; `batch` is
+/// batch assembly (expiry checks, width grouping, plan application);
+/// `forward` is the engine forward of the batch the request rode;
+/// `respond` is result → encoded response handed to the socket writer.
+pub const STAGES: [&str; 6] = ["parse", "route", "queue", "batch", "forward", "respond"];
+
+/// Longest `X-Request-Id` accepted from a client.
+pub const MAX_REQUEST_ID_LEN: usize = 128;
+
+/// Client-supplied request ids must be 1..=128 chars of
+/// `[A-Za-z0-9._-]` — anything else is rejected with a 400 rather than
+/// echoed back into a header.
+pub fn valid_request_id(s: &str) -> bool {
+    !s.is_empty()
+        && s.len() <= MAX_REQUEST_ID_LEN
+        && s.bytes().all(|b| b.is_ascii_alphanumeric() || matches!(b, b'.' | b'_' | b'-'))
+}
+
+fn splitmix64(mut z: u64) -> u64 {
+    z = z.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// Tracing knobs (rides [`crate::http::HttpConfig`], so it stays `Copy`).
+#[derive(Clone, Copy, Debug)]
+pub struct TraceConfig {
+    /// master switch: when false no ids are generated, no spans recorded
+    pub enabled: bool,
+    /// head-sampling probability in [0,1] (`--trace-sample-rate`);
+    /// errors and overflow batches are always sampled regardless
+    pub sample_rate: f64,
+    /// ring-buffer capacity (spans evict oldest-first past it)
+    pub ring: usize,
+}
+
+impl Default for TraceConfig {
+    fn default() -> Self {
+        TraceConfig { enabled: true, sample_rate: 0.0, ring: 256 }
+    }
+}
+
+/// Per-request trace context, created at HTTP parse time and carried
+/// inside `ClassifyRequest` so both connection backends reach the
+/// response path with the same identity and clock.
+#[derive(Clone, Debug)]
+pub struct RequestTrace {
+    /// echoed back as `X-Request-Id`
+    pub id: String,
+    /// head sampling decision (error/overflow override it at record time)
+    pub sampled: bool,
+    /// request arrival (first readable byte, or handler entry)
+    pub start: Instant,
+    /// arrival → request decoded and validated, µs
+    pub parse_us: f64,
+}
+
+/// Stage durations of one span, µs. Derived from one monotonic clock
+/// chain so they never sum past the honest request latency.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SpanStages {
+    pub parse_us: f64,
+    pub route_us: f64,
+    pub queue_us: f64,
+    pub batch_us: f64,
+    pub forward_us: f64,
+    pub respond_us: f64,
+}
+
+impl SpanStages {
+    pub fn as_array(&self) -> [f64; 6] {
+        [
+            self.parse_us,
+            self.route_us,
+            self.queue_us,
+            self.batch_us,
+            self.forward_us,
+            self.respond_us,
+        ]
+    }
+
+    pub fn sum_us(&self) -> f64 {
+        self.as_array().iter().sum()
+    }
+}
+
+/// One recorded event: a completed classify span, or a capacity shed.
+#[derive(Clone, Debug)]
+pub struct TraceSpan {
+    pub id: String,
+    pub model: Option<String>,
+    pub status: u16,
+    /// head sampling decision carried from [`RequestTrace`]
+    pub sampled: bool,
+    /// the batch this request rode recorded overflow events
+    pub overflow: bool,
+    /// set for shed events (`queue-full` / `max-connections` / `draining`)
+    pub shed_reason: Option<&'static str>,
+    pub total_us: f64,
+    pub stages: SpanStages,
+    /// per-layer forward timings of the ridden batch, µs
+    pub layers: Vec<(String, f64)>,
+}
+
+impl TraceSpan {
+    /// Why this span is in the ring.
+    pub fn reason(&self) -> &'static str {
+        if self.shed_reason.is_some() {
+            "shed"
+        } else if self.status >= 400 {
+            "error"
+        } else if self.overflow {
+            "overflow"
+        } else {
+            "sampled"
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let layers: Vec<Json> = self
+            .layers
+            .iter()
+            .map(|(name, us)| {
+                json::obj(vec![("layer", json::s(name)), ("us", json::num(*us))])
+            })
+            .collect();
+        let mut fields = vec![
+            ("id", json::s(&self.id)),
+            (
+                "model",
+                self.model.as_deref().map(json::s).unwrap_or(Json::Null),
+            ),
+            ("status", json::num(self.status as f64)),
+            ("reason", json::s(self.reason())),
+            ("total_us", json::num(self.total_us)),
+            (
+                "stages",
+                json::obj(
+                    STAGES
+                        .iter()
+                        .zip(self.stages.as_array())
+                        .map(|(name, us)| (*name, json::num(us)))
+                        .collect(),
+                ),
+            ),
+            ("layers", Json::Arr(layers)),
+        ];
+        if let Some(reason) = self.shed_reason {
+            fields.push(("shed_reason", json::s(reason)));
+        }
+        json::obj(fields)
+    }
+}
+
+/// The shared collector: sampling state, the span ring, and per-stage
+/// latency histograms. One instance per HTTP front-end, behind an `Arc`.
+#[derive(Debug)]
+pub struct Tracer {
+    cfg: TraceConfig,
+    /// threshold on a 53-bit uniform draw; rate 1.0 ⇒ every draw passes
+    threshold: u64,
+    seq: AtomicU64,
+    seed: u64,
+    recorded: AtomicU64,
+    dropped: AtomicU64,
+    ring: Mutex<VecDeque<TraceSpan>>,
+    stages: Mutex<[HdrHistogram; 6]>,
+}
+
+impl Tracer {
+    pub fn new(cfg: TraceConfig) -> Tracer {
+        let rate = cfg.sample_rate.clamp(0.0, 1.0);
+        let seed = splitmix64(
+            u64::from(std::process::id())
+                ^ std::time::SystemTime::now()
+                    .duration_since(std::time::UNIX_EPOCH)
+                    .map(|d| d.as_nanos() as u64)
+                    .unwrap_or(0),
+        );
+        Tracer {
+            cfg,
+            threshold: (rate * (1u64 << 53) as f64) as u64,
+            seq: AtomicU64::new(0),
+            seed,
+            recorded: AtomicU64::new(0),
+            dropped: AtomicU64::new(0),
+            ring: Mutex::new(VecDeque::with_capacity(cfg.ring.max(1))),
+            stages: Mutex::new(std::array::from_fn(|_| HdrHistogram::new())),
+        }
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.cfg.enabled
+    }
+
+    pub fn sample_rate(&self) -> f64 {
+        self.cfg.sample_rate
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.cfg.ring.max(1)
+    }
+
+    /// Generate a request id (`pqs-` + 16 hex digits).
+    pub fn next_id(&self) -> String {
+        let seq = self.seq.fetch_add(1, Ordering::Relaxed);
+        format!("pqs-{:016x}", splitmix64(self.seed ^ seq))
+    }
+
+    /// Head sampling decision for one request.
+    pub fn should_sample(&self) -> bool {
+        if self.threshold == 0 {
+            return false;
+        }
+        let seq = self.seq.fetch_add(1, Ordering::Relaxed);
+        (splitmix64(self.seed.wrapping_add(seq)) >> 11) < self.threshold
+    }
+
+    /// Record one completed classify span: stage histograms always (the
+    /// `/v1/metrics` breakdown covers every request, sampled or not),
+    /// the ring only when head-sampled or error/overflow forces it.
+    pub fn record(&self, span: TraceSpan) {
+        if !self.cfg.enabled {
+            return;
+        }
+        {
+            let mut hists = self.stages.lock().unwrap();
+            for (h, us) in hists.iter_mut().zip(span.stages.as_array()) {
+                h.record(us.max(0.0) as u64);
+            }
+        }
+        if span.sampled || span.status >= 400 || span.overflow {
+            self.push(span);
+        } else {
+            self.dropped.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Record a capacity shed as a trace event (always kept: sheds are
+    /// errors under the always-sample-on-error policy, and the bounded
+    /// ring caps what a shed storm can occupy).
+    pub fn record_shed(&self, reason: &'static str) {
+        if !self.cfg.enabled {
+            return;
+        }
+        self.push(TraceSpan {
+            id: self.next_id(),
+            model: None,
+            status: 503,
+            sampled: true,
+            overflow: false,
+            shed_reason: Some(reason),
+            total_us: 0.0,
+            stages: SpanStages::default(),
+            layers: Vec::new(),
+        });
+    }
+
+    fn push(&self, span: TraceSpan) {
+        let mut ring = self.ring.lock().unwrap();
+        while ring.len() >= self.capacity() {
+            ring.pop_front();
+        }
+        ring.push_back(span);
+        self.recorded.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Up to `n` most recent spans, oldest first.
+    pub fn recent(&self, n: usize) -> Vec<TraceSpan> {
+        let ring = self.ring.lock().unwrap();
+        let skip = ring.len().saturating_sub(n);
+        ring.iter().skip(skip).cloned().collect()
+    }
+
+    /// (spans recorded into the ring, completed spans not sampled)
+    pub fn counts(&self) -> (u64, u64) {
+        (self.recorded.load(Ordering::Relaxed), self.dropped.load(Ordering::Relaxed))
+    }
+
+    /// Per-stage histogram clones, in [`STAGES`] order.
+    pub fn stage_hists(&self) -> Vec<(&'static str, HdrHistogram)> {
+        let hists = self.stages.lock().unwrap();
+        STAGES.iter().zip(hists.iter()).map(|(n, h)| (*n, h.clone())).collect()
+    }
+
+    /// The `GET /v1/trace?n=K` body.
+    pub fn trace_json(&self, n: usize) -> Json {
+        let (recorded, dropped) = self.counts();
+        let spans: Vec<Json> = self.recent(n).iter().map(TraceSpan::to_json).collect();
+        json::obj(vec![
+            ("enabled", Json::Bool(self.cfg.enabled)),
+            ("sample_rate", json::num(self.cfg.sample_rate)),
+            ("capacity", json::num(self.capacity() as f64)),
+            ("recorded", json::num(recorded as f64)),
+            ("dropped", json::num(dropped as f64)),
+            ("spans", Json::Arr(spans)),
+        ])
+    }
+
+    /// The `trace` section of `GET /v1/metrics`: per-stage quantiles.
+    pub fn stages_json(&self) -> Json {
+        let (recorded, dropped) = self.counts();
+        let stages: Vec<(&str, Json)> = self
+            .stage_hists()
+            .into_iter()
+            .map(|(name, h)| {
+                (
+                    name,
+                    json::obj(vec![
+                        ("count", json::num(h.count() as f64)),
+                        ("p50_us", json::num(h.value_at(0.50) as f64)),
+                        ("p99_us", json::num(h.value_at(0.99) as f64)),
+                        ("p999_us", json::num(h.value_at(0.999) as f64)),
+                        ("max_us", json::num(h.max() as f64)),
+                    ]),
+                )
+            })
+            .collect();
+        json::obj(vec![
+            ("enabled", Json::Bool(self.cfg.enabled)),
+            ("sample_rate", json::num(self.cfg.sample_rate)),
+            ("recorded", json::num(recorded as f64)),
+            ("dropped", json::num(dropped as f64)),
+            ("stages", json::obj(stages)),
+        ])
+    }
+}
+
+// ---- accumulator headroom -------------------------------------------------
+
+/// Running per-layer headroom counters for one model.
+#[derive(Clone, Debug)]
+pub struct LayerHeadroom {
+    pub layer: String,
+    /// accumulator width the layer is serving at (plan / operating point)
+    pub planned_bits: u32,
+    /// widest per-dot requirement observed (`OverflowStats::bits_hist`)
+    pub max_required_bits: u32,
+    /// `planned - max_required`, minimum over every observed batch ×
+    /// operating point — negative means a dot needed more than the plan
+    pub min_headroom_bits: i64,
+    pub dots: u64,
+    /// dots with overflow events under the serving policy
+    pub overflow_dots: u64,
+    /// dots within 1 bit of the planned width (required ≥ planned − 1)
+    pub near_saturation_dots: u64,
+    pub batches: u64,
+}
+
+impl LayerHeadroom {
+    pub fn to_json(&self) -> Json {
+        json::obj(vec![
+            ("layer", json::s(&self.layer)),
+            ("planned_bits", json::num(self.planned_bits as f64)),
+            ("max_required_bits", json::num(self.max_required_bits as f64)),
+            ("min_headroom_bits", json::num(self.min_headroom_bits as f64)),
+            ("dots", json::num(self.dots as f64)),
+            ("overflow_dots", json::num(self.overflow_dots as f64)),
+            ("near_saturation_dots", json::num(self.near_saturation_dots as f64)),
+            ("batches", json::num(self.batches as f64)),
+        ])
+    }
+}
+
+/// JSON rows for a headroom snapshot (`GET /v1/models` per-model field).
+pub fn headroom_json(layers: &[LayerHeadroom]) -> Json {
+    Json::Arr(layers.iter().map(LayerHeadroom::to_json).collect())
+}
+
+/// Per-model headroom accumulator, updated once per served batch from
+/// the worker's [`OverflowReport`] — one mutex lock per batch, never per
+/// request. Lives on the serving `Server` so counters reset with the
+/// incarnation (evict/reload starts a fresh observation window).
+#[derive(Debug, Default)]
+pub struct ModelHeadroom {
+    layers: Mutex<BTreeMap<String, LayerHeadroom>>,
+}
+
+impl ModelHeadroom {
+    pub fn new() -> ModelHeadroom {
+        ModelHeadroom::default()
+    }
+
+    /// Fold one batch: `widths` are the effective per-layer accumulator
+    /// bits the batch served at (`Engine::effective_layer_bits`);
+    /// `default_bits` covers layers the width table does not name.
+    pub fn record(&self, report: &OverflowReport, widths: &[(String, u32)], default_bits: u32) {
+        let mut layers = self.layers.lock().unwrap();
+        for (name, stats) in &report.layers {
+            if stats.dots == 0 && stats.hist_dots() == 0 {
+                continue;
+            }
+            let planned = widths
+                .iter()
+                .find(|(n, _)| n == name)
+                .map(|&(_, b)| b)
+                .unwrap_or(default_bits);
+            let required = stats.max_required_bits();
+            let headroom = planned as i64 - required as i64;
+            // required ≥ planned − 1  ⇔  does not fit planned − 2 bits
+            let near = stats.dots_over_width(planned.saturating_sub(2));
+            let row = layers.entry(name.clone()).or_insert_with(|| LayerHeadroom {
+                layer: name.clone(),
+                planned_bits: planned,
+                max_required_bits: 0,
+                min_headroom_bits: i64::MAX,
+                dots: 0,
+                overflow_dots: 0,
+                near_saturation_dots: 0,
+                batches: 0,
+            });
+            row.planned_bits = planned;
+            row.max_required_bits = row.max_required_bits.max(required);
+            row.min_headroom_bits = row.min_headroom_bits.min(headroom);
+            row.dots += stats.dots;
+            row.overflow_dots += stats.policy_event_dots;
+            row.near_saturation_dots += near;
+            row.batches += 1;
+        }
+    }
+
+    pub fn snapshot(&self) -> Vec<LayerHeadroom> {
+        self.layers.lock().unwrap().values().cloned().collect()
+    }
+}
+
+// ---- Prometheus text exposition -------------------------------------------
+
+/// Hand-rolled Prometheus text format 0.0.4 encoder. Serve the result
+/// with `Content-Type: text/plain; version=0.0.4`.
+#[derive(Debug, Default)]
+pub struct PromText {
+    out: String,
+}
+
+fn escape_help(s: &str) -> String {
+    s.replace('\\', "\\\\").replace('\n', "\\n")
+}
+
+fn escape_label(s: &str) -> String {
+    s.replace('\\', "\\\\").replace('"', "\\\"").replace('\n', "\\n")
+}
+
+fn fmt_value(v: f64) -> String {
+    if v.is_nan() {
+        "NaN".to_string()
+    } else if v == f64::INFINITY {
+        "+Inf".to_string()
+    } else if v == f64::NEG_INFINITY {
+        "-Inf".to_string()
+    } else {
+        format!("{v}")
+    }
+}
+
+impl PromText {
+    pub fn new() -> PromText {
+        PromText::default()
+    }
+
+    /// Emit the `# HELP` / `# TYPE` pair for a metric family.
+    pub fn family(&mut self, name: &str, kind: &str, help: &str) {
+        self.out.push_str(&format!("# HELP {name} {}\n", escape_help(help)));
+        self.out.push_str(&format!("# TYPE {name} {kind}\n"));
+    }
+
+    /// Emit one sample line, optionally labeled.
+    pub fn sample(&mut self, name: &str, labels: &[(&str, &str)], value: f64) {
+        self.out.push_str(name);
+        if !labels.is_empty() {
+            self.out.push('{');
+            for (i, (k, v)) in labels.iter().enumerate() {
+                if i > 0 {
+                    self.out.push(',');
+                }
+                self.out.push_str(&format!("{k}=\"{}\"", escape_label(v)));
+            }
+            self.out.push('}');
+        }
+        self.out.push(' ');
+        self.out.push_str(&fmt_value(value));
+        self.out.push('\n');
+    }
+
+    /// Family header + one unlabeled sample.
+    pub fn metric(&mut self, name: &str, kind: &str, help: &str, value: f64) {
+        self.family(name, kind, help);
+        self.sample(name, &[], value);
+    }
+
+    /// Render an [`HdrHistogram`] as a Prometheus histogram: cumulative
+    /// `le` buckets from the HDR layout (exact — every recorded value ≤
+    /// the bucket's upper bound is counted), `+Inf`, `_count`, and a
+    /// `_sum` reconstructed from bucket lower bounds (conservative,
+    /// never overstated — the HDR layout does not keep an exact sum).
+    pub fn histogram(
+        &mut self,
+        name: &str,
+        help: &str,
+        labels: &[(&str, &str)],
+        h: &HdrHistogram,
+    ) {
+        self.family(name, "histogram", help);
+        self.histogram_rows(name, labels, h);
+    }
+
+    /// Sample rows of an [`HdrHistogram`] without the family header —
+    /// for histogram families with several label sets (one stage each),
+    /// where `# TYPE` must appear exactly once: call [`Self::family`]
+    /// once, then this per label set.
+    pub fn histogram_rows(&mut self, name: &str, labels: &[(&str, &str)], h: &HdrHistogram) {
+        let bucket = format!("{name}_bucket");
+        for (hi, cum) in h.cumulative() {
+            let le = hi.to_string();
+            let mut row: Vec<(&str, &str)> = labels.to_vec();
+            row.push(("le", &le));
+            self.sample(&bucket, &row, cum as f64);
+        }
+        let mut inf_row: Vec<(&str, &str)> = labels.to_vec();
+        inf_row.push(("le", "+Inf"));
+        self.sample(&bucket, &inf_row, h.count() as f64);
+        let sum: f64 = h.buckets().iter().map(|&(lo, c)| lo as f64 * c as f64).sum();
+        self.sample(&format!("{name}_sum"), labels, sum);
+        self.sample(&format!("{name}_count"), labels, h.count() as f64);
+    }
+
+    pub fn finish(self) -> String {
+        self.out
+    }
+}
+
+// ---- exposition grammar checker -------------------------------------------
+
+fn valid_metric_name(s: &str) -> bool {
+    let mut chars = s.chars();
+    match chars.next() {
+        Some(c) if c.is_ascii_alphabetic() || c == '_' || c == ':' => {}
+        _ => return false,
+    }
+    chars.all(|c| c.is_ascii_alphanumeric() || c == '_' || c == ':')
+}
+
+fn valid_label_name(s: &str) -> bool {
+    let mut chars = s.chars();
+    match chars.next() {
+        Some(c) if c.is_ascii_alphabetic() || c == '_' => {}
+        _ => return false,
+    }
+    chars.all(|c| c.is_ascii_alphanumeric() || c == '_')
+}
+
+/// Parse one sample line, returning the metric name. Grammar (text
+/// format 0.0.4): `name ['{' label '=' '"' escaped '"' [',' ...] '}']
+/// value [timestamp]`, value a float or `+Inf`/`-Inf`/`NaN`.
+fn parse_sample_line(line: &str) -> Result<String, String> {
+    let name_end = line
+        .find(|c: char| c == '{' || c == ' ')
+        .ok_or_else(|| format!("sample without value: {line:?}"))?;
+    let name = &line[..name_end];
+    if !valid_metric_name(name) {
+        return Err(format!("bad metric name {name:?}"));
+    }
+    let mut rest = &line[name_end..];
+    if let Some(after_brace) = rest.strip_prefix('{') {
+        let close = after_brace
+            .find('}')
+            .ok_or_else(|| format!("unterminated label set: {line:?}"))?;
+        let labels = &after_brace[..close];
+        rest = &after_brace[close + 1..];
+        for pair in labels.split(',') {
+            let (k, v) = pair
+                .split_once('=')
+                .ok_or_else(|| format!("label without '=': {pair:?}"))?;
+            if !valid_label_name(k) {
+                return Err(format!("bad label name {k:?}"));
+            }
+            let inner = v
+                .strip_prefix('"')
+                .and_then(|v| v.strip_suffix('"'))
+                .ok_or_else(|| format!("unquoted label value {v:?}"))?;
+            // reject raw quotes/backslashes that are not escape pairs
+            let mut bytes = inner.bytes();
+            while let Some(b) = bytes.next() {
+                match b {
+                    b'\\' => match bytes.next() {
+                        Some(b'\\') | Some(b'"') | Some(b'n') => {}
+                        other => return Err(format!("bad escape {other:?} in {pair:?}")),
+                    },
+                    b'"' => return Err(format!("unescaped quote in {pair:?}")),
+                    _ => {}
+                }
+            }
+        }
+    }
+    let rest = rest
+        .strip_prefix(' ')
+        .ok_or_else(|| format!("missing space before value: {line:?}"))?;
+    let mut parts = rest.split(' ');
+    let value = parts.next().unwrap_or("");
+    let value_ok = matches!(value, "+Inf" | "-Inf" | "NaN") || value.parse::<f64>().is_ok();
+    if !value_ok {
+        return Err(format!("bad sample value {value:?}"));
+    }
+    if let Some(ts) = parts.next() {
+        if ts.parse::<i64>().is_err() {
+            return Err(format!("bad timestamp {ts:?}"));
+        }
+    }
+    if parts.next().is_some() {
+        return Err(format!("trailing tokens on sample line: {line:?}"));
+    }
+    Ok(name.to_string())
+}
+
+/// Check a full scrape body against the exposition grammar: every line
+/// must be a well-formed `# HELP`/`# TYPE`/comment or sample, `TYPE`
+/// declared at most once per family and *before* its samples, histogram
+/// suffixes (`_bucket`/`_sum`/`_count`) tied to a histogram family
+/// (`_sum`/`_count` also to a summary), and the body
+/// newline-terminated. Used by the unit tests, the wire tests and the
+/// bench observability gate.
+pub fn validate_exposition(text: &str) -> Result<(), String> {
+    if text.is_empty() {
+        return Err("empty exposition".to_string());
+    }
+    if !text.ends_with('\n') {
+        return Err("exposition must end with a newline".to_string());
+    }
+    let mut types: BTreeMap<String, String> = BTreeMap::new();
+    for (i, line) in text.lines().enumerate() {
+        let ln = i + 1;
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix("# HELP ") {
+            let name = rest.split(' ').next().unwrap_or("");
+            if !valid_metric_name(name) {
+                return Err(format!("line {ln}: bad HELP metric name {name:?}"));
+            }
+        } else if let Some(rest) = line.strip_prefix("# TYPE ") {
+            let mut parts = rest.split(' ');
+            let name = parts.next().unwrap_or("");
+            let kind = parts.next().unwrap_or("");
+            if !valid_metric_name(name) {
+                return Err(format!("line {ln}: bad TYPE metric name {name:?}"));
+            }
+            if !matches!(kind, "counter" | "gauge" | "histogram" | "summary" | "untyped") {
+                return Err(format!("line {ln}: bad metric type {kind:?}"));
+            }
+            if parts.next().is_some() {
+                return Err(format!("line {ln}: trailing tokens after TYPE"));
+            }
+            if types.insert(name.to_string(), kind.to_string()).is_some() {
+                return Err(format!("line {ln}: duplicate TYPE for {name}"));
+            }
+        } else if line.starts_with('#') {
+            continue;
+        } else {
+            let name = parse_sample_line(line).map_err(|e| format!("line {ln}: {e}"))?;
+            // a sample belongs to its family: exact name, or the
+            // histogram suffixes of a declared histogram family
+            let family = ["_bucket", "_sum", "_count"]
+                .iter()
+                .find_map(|suf| {
+                    name.strip_suffix(suf).filter(|base| {
+                        let kind = types.get(*base).map(String::as_str);
+                        match *suf {
+                            "_bucket" => kind == Some("histogram"),
+                            _ => matches!(kind, Some("histogram") | Some("summary")),
+                        }
+                    })
+                })
+                .unwrap_or(&name);
+            if !types.contains_key(family) {
+                return Err(format!("line {ln}: sample {name} before its TYPE declaration"));
+            }
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::overflow::OverflowStats;
+
+    fn span(id: &str, status: u16, sampled: bool, overflow: bool) -> TraceSpan {
+        TraceSpan {
+            id: id.to_string(),
+            model: Some("m".to_string()),
+            status,
+            sampled,
+            overflow,
+            shed_reason: None,
+            total_us: 100.0,
+            stages: SpanStages { parse_us: 1.0, forward_us: 50.0, ..Default::default() },
+            layers: vec![("fc".to_string(), 50.0)],
+        }
+    }
+
+    #[test]
+    fn request_id_validation() {
+        assert!(valid_request_id("abc-123_X.Y"));
+        assert!(valid_request_id("a"));
+        assert!(valid_request_id(&"x".repeat(MAX_REQUEST_ID_LEN)));
+        assert!(!valid_request_id(""));
+        assert!(!valid_request_id(&"x".repeat(MAX_REQUEST_ID_LEN + 1)));
+        assert!(!valid_request_id("has space"));
+        assert!(!valid_request_id("newline\n"));
+        assert!(!valid_request_id("quote\""));
+        assert!(!valid_request_id("héllo"));
+    }
+
+    #[test]
+    fn sampling_rates_zero_and_one() {
+        let never = Tracer::new(TraceConfig { sample_rate: 0.0, ..Default::default() });
+        let always = Tracer::new(TraceConfig { sample_rate: 1.0, ..Default::default() });
+        for _ in 0..256 {
+            assert!(!never.should_sample());
+            assert!(always.should_sample());
+        }
+    }
+
+    #[test]
+    fn generated_ids_are_unique_and_valid() {
+        let t = Tracer::new(TraceConfig::default());
+        let mut seen = std::collections::BTreeSet::new();
+        for _ in 0..1000 {
+            let id = t.next_id();
+            assert!(valid_request_id(&id), "{id}");
+            assert!(seen.insert(id), "duplicate generated id");
+        }
+    }
+
+    #[test]
+    fn ring_evicts_oldest_first() {
+        let t = Tracer::new(TraceConfig { ring: 4, sample_rate: 1.0, ..Default::default() });
+        for i in 0..7 {
+            t.record(span(&format!("s{i}"), 200, true, false));
+        }
+        let recent = t.recent(10);
+        let ids: Vec<&str> = recent.iter().map(|s| s.id.as_str()).collect();
+        assert_eq!(ids, ["s3", "s4", "s5", "s6"], "oldest evicted, order kept");
+        let last2: Vec<String> = t.recent(2).iter().map(|s| s.id.clone()).collect();
+        assert_eq!(last2, ["s5", "s6"]);
+        let (recorded, dropped) = t.counts();
+        assert_eq!((recorded, dropped), (7, 0));
+    }
+
+    #[test]
+    fn errors_and_overflow_bypass_sampling() {
+        let t = Tracer::new(TraceConfig { sample_rate: 0.0, ..Default::default() });
+        t.record(span("ok", 200, false, false)); // dropped
+        t.record(span("err", 504, false, false)); // kept: error
+        t.record(span("ovf", 200, false, true)); // kept: overflow
+        t.record_shed("queue-full"); // kept: shed
+        let spans = t.recent(10);
+        let reasons: Vec<&str> = spans.iter().map(|s| s.reason()).collect();
+        assert_eq!(reasons, ["error", "overflow", "shed"]);
+        assert_eq!(spans[2].shed_reason, Some("queue-full"));
+        assert_eq!(spans[2].status, 503);
+        let (recorded, dropped) = t.counts();
+        assert_eq!((recorded, dropped), (3, 1));
+    }
+
+    #[test]
+    fn disabled_tracer_records_nothing() {
+        let t = Tracer::new(TraceConfig { enabled: false, sample_rate: 1.0, ..Default::default() });
+        t.record(span("a", 500, true, true));
+        t.record_shed("draining");
+        assert!(t.recent(10).is_empty());
+        assert_eq!(t.counts(), (0, 0));
+        assert!(t.stage_hists().iter().all(|(_, h)| h.count() == 0));
+    }
+
+    #[test]
+    fn stage_histograms_cover_every_request() {
+        let t = Tracer::new(TraceConfig { sample_rate: 0.0, ..Default::default() });
+        for _ in 0..10 {
+            t.record(span("x", 200, false, false)); // unsampled, still histogrammed
+        }
+        let hists = t.stage_hists();
+        assert_eq!(hists.len(), STAGES.len());
+        for (name, h) in &hists {
+            assert_eq!(h.count(), 10, "stage {name}");
+        }
+        let j = t.stages_json();
+        let forward = j.get("stages").and_then(|s| s.get("forward")).unwrap();
+        assert_eq!(forward.get("count").and_then(Json::as_usize), Some(10));
+        assert_eq!(forward.get("max_us").and_then(Json::as_f64), Some(50.0));
+    }
+
+    #[test]
+    fn trace_json_shape() {
+        let t = Tracer::new(TraceConfig { sample_rate: 1.0, ring: 8, ..Default::default() });
+        t.record(span("a", 200, true, false));
+        let j = t.trace_json(5);
+        assert_eq!(j.get("capacity").and_then(Json::as_usize), Some(8));
+        let spans = j.get("spans").unwrap().as_arr().unwrap();
+        assert_eq!(spans.len(), 1);
+        let s = &spans[0];
+        assert_eq!(s.get("id").and_then(Json::as_str), Some("a"));
+        assert_eq!(s.get("reason").and_then(Json::as_str), Some("sampled"));
+        let stages = s.get("stages").unwrap();
+        for name in STAGES {
+            assert!(stages.get(name).is_some(), "stage {name} missing");
+        }
+        let layers = s.get("layers").unwrap().as_arr().unwrap();
+        assert_eq!(layers[0].get("layer").and_then(Json::as_str), Some("fc"));
+    }
+
+    #[test]
+    fn span_stage_sum_never_exceeds_total() {
+        let s = span("a", 200, true, false);
+        assert!(s.stages.sum_us() <= s.total_us);
+    }
+
+    #[test]
+    fn headroom_tracks_planned_vs_required() {
+        let hr = ModelHeadroom::new();
+        let mut report = OverflowReport::default();
+        {
+            let s: &mut OverflowStats = report.layer_mut("fc");
+            s.dots = 100;
+            for _ in 0..90 {
+                s.record_required_bits(12);
+            }
+            for _ in 0..10 {
+                s.record_required_bits(15);
+            }
+            s.policy_event_dots = 3;
+        }
+        hr.record(&report, &[("fc".to_string(), 16)], 32);
+        let snap = hr.snapshot();
+        assert_eq!(snap.len(), 1);
+        let row = &snap[0];
+        assert_eq!(row.layer, "fc");
+        assert_eq!(row.planned_bits, 16);
+        assert_eq!(row.max_required_bits, 15);
+        assert_eq!(row.min_headroom_bits, 1);
+        // within 1 bit of the 16-bit plan: the 10 dots needing 15 bits
+        assert_eq!(row.near_saturation_dots, 10);
+        assert_eq!(row.overflow_dots, 3);
+        assert_eq!(row.dots, 100);
+        assert_eq!(row.batches, 1);
+
+        // a second batch at a wider operating point must not lose the min
+        hr.record(&report, &[("fc".to_string(), 20)], 32);
+        let row = &hr.snapshot()[0];
+        assert_eq!(row.planned_bits, 20, "latest operating point");
+        assert_eq!(row.min_headroom_bits, 1, "minimum survives wider batches");
+        assert_eq!(row.batches, 2);
+        // 20-bit plan: nothing within 1 bit
+        assert_eq!(row.near_saturation_dots, 10);
+    }
+
+    #[test]
+    fn headroom_default_width_covers_unplanned_layers() {
+        let hr = ModelHeadroom::new();
+        let mut report = OverflowReport::default();
+        report.layer_mut("conv0").dots = 1;
+        report.layer_mut("conv0").record_required_bits(10);
+        hr.record(&report, &[], 16);
+        let row = &hr.snapshot()[0];
+        assert_eq!(row.planned_bits, 16);
+        assert_eq!(row.min_headroom_bits, 6);
+    }
+
+    #[test]
+    fn prometheus_output_passes_the_grammar() {
+        let mut p = PromText::new();
+        p.metric("pqs_http_accepted_total", "counter", "connections accepted", 42.0);
+        p.family("pqs_http_shed_total", "counter", "connections shed by reason");
+        p.sample("pqs_http_shed_total", &[("reason", "queue-full")], 1.0);
+        p.sample("pqs_http_shed_total", &[("reason", "max-connections")], 0.0);
+        p.family("pqs_headroom_min_bits", "gauge", "min accumulator headroom");
+        p.sample(
+            "pqs_headroom_min_bits",
+            &[("model", "cnn \"v2\"\\prod"), ("layer", "fc")],
+            3.0,
+        );
+        let mut h = HdrHistogram::new();
+        for v in [3u64, 70, 900, 12_345] {
+            h.record(v);
+        }
+        p.histogram("pqs_stage_forward_us", "forward stage latency", &[], &h);
+        let text = p.finish();
+        validate_exposition(&text).expect("generated exposition parses");
+        assert!(text.contains("pqs_stage_forward_us_bucket{le=\"+Inf\"} 4"));
+        assert!(text.contains("pqs_stage_forward_us_count 4"));
+        assert!(text.contains("le=\"3\"") || text.contains("le=\"4\""));
+        // escaped label value round-trips the grammar
+        assert!(text.contains("model=\"cnn \\\"v2\\\"\\\\prod\""));
+    }
+
+    #[test]
+    fn histogram_buckets_are_cumulative_and_exact() {
+        let mut h = HdrHistogram::new();
+        for v in 0..100u64 {
+            h.record(v);
+        }
+        let mut p = PromText::new();
+        p.histogram("m", "h", &[], &h);
+        let text = p.finish();
+        validate_exposition(&text).expect("parses");
+        // cumulative counts are non-decreasing down the bucket list
+        let mut last = 0.0;
+        for line in text.lines().filter(|l| l.starts_with("m_bucket")) {
+            let v: f64 = line.rsplit(' ').next().unwrap().parse().unwrap();
+            assert!(v >= last, "non-decreasing: {line}");
+            last = v;
+        }
+        assert_eq!(last, 100.0, "+Inf bucket holds every sample");
+    }
+
+    #[test]
+    fn grammar_rejects_malformed_lines() {
+        for bad in [
+            "no_newline_terminator 1",                         // missing trailing \n
+            "# TYPE m wibble\nm 1\n",                          // unknown type
+            "# TYPE m counter\n# TYPE m counter\nm 1\n",       // duplicate TYPE
+            "m 1\n",                                           // sample before TYPE
+            "# TYPE m counter\nm one\n",                       // non-numeric value
+            "# TYPE m counter\nm{l=unquoted} 1\n",             // unquoted label
+            "# TYPE m counter\nm{l=\"a\"b\"} 1\n",             // unescaped quote
+            "# TYPE m counter\nm{0l=\"a\"} 1\n",               // bad label name
+            "# TYPE m counter\n9m 1\n",                        // bad metric name
+            "# TYPE m counter\nm 1 2 3\n",                     // trailing tokens
+            "# TYPE m histogram\nother_bucket{le=\"1\"} 1\n",  // suffix of undeclared family
+        ] {
+            assert!(validate_exposition(bad).is_err(), "accepted: {bad:?}");
+        }
+        // timestamps are part of the grammar
+        validate_exposition("# TYPE m counter\nm 1 1700000000\n").expect("timestamp ok");
+        validate_exposition("# HELP m some help text\n# TYPE m gauge\nm{a=\"b\\n\"} -1.5\n")
+            .expect("escaped newline ok");
+    }
+}

@@ -137,6 +137,22 @@ impl HdrHistogram {
             .map(|(i, &c)| (Self::value_of(i), c))
             .collect()
     }
+
+    /// Non-empty buckets as `(upper_bound, cumulative_count)` rows:
+    /// every recorded value <= `upper_bound` is counted, so the rows
+    /// translate exactly into Prometheus `le` histogram buckets.
+    pub fn cumulative(&self) -> Vec<(u64, u64)> {
+        let mut rows = Vec::new();
+        let mut cum = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            if c > 0 {
+                cum += c;
+                let hi = if i + 1 < HDR_BUCKETS { Self::value_of(i + 1) - 1 } else { u64::MAX };
+                rows.push((hi, cum));
+            }
+        }
+        rows
+    }
 }
 
 /// Human-readable duration from nanoseconds.
@@ -232,6 +248,30 @@ mod tests {
         }
         assert_eq!(h.value_at(1.0), 100_000, "top quantile reports the exact max");
         assert_eq!(HdrHistogram::new().value_at(0.5), 0, "empty histogram");
+    }
+
+    #[test]
+    fn hdr_cumulative_rows_cover_and_bound_every_value() {
+        let mut h = HdrHistogram::new();
+        for v in [0u64, 3, 63, 64, 70, 900, 12_345] {
+            h.record(v);
+        }
+        let rows = h.cumulative();
+        assert_eq!(rows.len(), h.buckets().len());
+        // upper bounds strictly increase, cumulative counts never decrease
+        for w in rows.windows(2) {
+            assert!(w[1].0 > w[0].0);
+            assert!(w[1].1 >= w[0].1);
+        }
+        assert_eq!(rows.last().unwrap().1, h.count());
+        // each row's cumulative count equals the number of recorded
+        // values <= its upper bound — the `le` contract
+        let values = [0u64, 3, 63, 64, 70, 900, 12_345];
+        for &(hi, cum) in &rows {
+            let exact = values.iter().filter(|&&v| v <= hi).count() as u64;
+            assert_eq!(cum, exact, "le={hi}");
+        }
+        assert!(HdrHistogram::new().cumulative().is_empty());
     }
 
     #[test]

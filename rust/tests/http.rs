@@ -35,6 +35,7 @@ use pqs::coordinator::{
 };
 use pqs::http::{HttpConfig, HttpServer};
 use pqs::nn::engine::{Engine, EngineConfig};
+use pqs::trace::{validate_exposition, TraceConfig};
 use pqs::util::json::Json;
 use pqs::util::prop;
 use pqs::util::rng::Pcg32;
@@ -296,6 +297,15 @@ fn post_classify_chunked(body: &str, split: usize) -> Vec<u8> {
     chunks.push_str("0\r\nX-Checksum: none\r\n\r\n");
     format!("POST /v1/classify HTTP/1.1\r\nHost: t\r\nTransfer-Encoding: chunked\r\n\r\n{chunks}")
         .into_bytes()
+}
+
+/// The same classify POST carrying an `X-Request-Id` header.
+fn post_classify_with_id(body: &str, id: &str) -> Vec<u8> {
+    format!(
+        "POST /v1/classify HTTP/1.1\r\nHost: t\r\nX-Request-Id: {id}\r\nContent-Type: application/json\r\nContent-Length: {}\r\n\r\n{body}",
+        body.len()
+    )
+    .into_bytes()
 }
 
 /// The same classify POST asking the server to close after answering.
@@ -948,7 +958,7 @@ fn stalled_partial_request_answers_408_and_counts_read_timeout() {
 /// deliberately exercise.
 fn assert_head_mirrors_get(http: &HttpServer) {
     let mut c = Client::connect(http);
-    for path in ["/healthz", "/v1/models", "/v1/metrics", "/nope"] {
+    for path in ["/healthz", "/v1/models", "/v1/metrics", "/v1/trace", "/metrics", "/nope"] {
         c.send(format!("GET {path} HTTP/1.1\r\nHost: t\r\n\r\n").as_bytes());
         let get = c.read_response();
         c.send(format!("HEAD {path} HTTP/1.1\r\nHost: t\r\n\r\n").as_bytes());
@@ -1173,6 +1183,174 @@ fn concurrent_connections_all_served() {
     assert_eq!(report.http.accepted, 4);
     assert_eq!(report.http.shed, 0);
     assert_eq!(report.http.read_timeouts, 0);
+}
+
+// ---- request tracing + Prometheus exposition -------------------------------
+
+fn trace_hcfg(sample_rate: f64, ring: usize) -> HttpConfig {
+    HttpConfig { trace: TraceConfig { enabled: true, sample_rate, ring }, ..hcfg() }
+}
+
+#[test]
+fn x_request_id_echo_provided_generated_and_invalid() {
+    // the default config (sample rate 0) still echoes ids — sampling
+    // gates the ring, never the id contract
+    let http = start_http();
+    let mut c = Client::connect(&http);
+    // provided: echoed verbatim on the 200
+    c.send(&post_classify_with_id(&classify_body(DIM, 1, 1, None), "req-A.1_z"));
+    let r = c.read_response();
+    assert_eq!(r.status, 200, "body: {}", r.body);
+    assert_eq!(r.header("x-request-id"), Some("req-A.1_z"));
+    // absent: a generated pqs-<16 hex> id is echoed
+    c.send(&post_classify(&classify_body(DIM, 2, 2, None)));
+    let r = c.read_response();
+    assert_eq!(r.status, 200);
+    let id = r.header("x-request-id").expect("generated id echoed").to_string();
+    assert!(id.starts_with("pqs-") && id.len() == 20, "generated id shape: {id}");
+    assert!(id[4..].bytes().all(|b| b.is_ascii_hexdigit()), "hex suffix: {id}");
+    // two requests never share a generated id
+    c.send(&post_classify(&classify_body(DIM, 3, 3, None)));
+    let r = c.read_response();
+    assert_eq!(r.status, 200);
+    assert_ne!(r.header("x-request-id"), Some(id.as_str()));
+    // prepare-stage 400s still echo a provided id
+    c.send(&post_classify_with_id("{not json", "bad-body-1"));
+    let r = c.read_response();
+    assert_eq!(r.status, 400);
+    assert_eq!(r.header("x-request-id"), Some("bad-body-1"));
+    // an invalid id is rejected outright — never echoed, never replaced
+    c.send(&post_classify_with_id(&classify_body(DIM, 4, 4, None), "bad id"));
+    let r = c.read_response();
+    assert_eq!(r.status, 400, "body: {}", r.body);
+    assert!(r.body.contains("X-Request-Id"), "names the header: {}", r.body);
+    assert!(r.header("x-request-id").is_none(), "an invalid id must not be echoed");
+    let long = "a".repeat(129);
+    c.send(&post_classify_with_id(&classify_body(DIM, 5, 5, None), &long));
+    assert_eq!(c.read_response().status, 400, "over-length id rejected");
+    // non-classify endpoints do not echo
+    c.send(b"GET /v1/metrics HTTP/1.1\r\nHost: t\r\n\r\n");
+    let r = c.read_response();
+    assert_eq!(r.status, 200);
+    assert!(r.header("x-request-id").is_none());
+    // the connection survived every rejection
+    c.send(&post_classify(&classify_body(DIM, 6, 6, None)));
+    assert_eq!(c.read_response().status, 200);
+    http.shutdown();
+}
+
+#[test]
+fn trace_endpoint_reports_spans_and_evicts_oldest() {
+    let http = start_http_with(trace_hcfg(1.0, 4));
+    let mut c = Client::connect(&http);
+    for i in 0..6u64 {
+        c.send(&post_classify_with_id(&classify_body(DIM, i, i, None), &format!("t-{i}")));
+        assert_eq!(c.read_response().status, 200);
+    }
+    c.send(b"GET /v1/trace HTTP/1.1\r\nHost: t\r\n\r\n");
+    let r = c.read_response();
+    assert_eq!(r.status, 200);
+    let j = r.json();
+    assert_eq!(j.get("enabled"), Some(&Json::Bool(true)));
+    assert_eq!(j.get("sample_rate").and_then(Json::as_f64), Some(1.0));
+    assert_eq!(j.get("capacity").and_then(Json::as_usize), Some(4));
+    assert_eq!(j.get("recorded").and_then(Json::as_usize), Some(6));
+    let spans = j.get("spans").and_then(Json::as_arr).expect("spans array");
+    let ids: Vec<&str> = spans.iter().filter_map(|s| s.get("id").and_then(Json::as_str)).collect();
+    assert_eq!(ids, vec!["t-2", "t-3", "t-4", "t-5"], "ring keeps the newest, oldest first");
+    for s in spans {
+        assert_eq!(s.get("status").and_then(Json::as_usize), Some(200));
+        assert_eq!(s.get("model").and_then(Json::as_str), Some("tiny"));
+        let total = s.get("total_us").and_then(Json::as_f64).expect("total_us");
+        assert!(total > 0.0);
+        let stages = s.get("stages").expect("stages object");
+        let mut sum = 0.0;
+        for name in ["parse", "route", "queue", "batch", "forward", "respond"] {
+            let us = stages
+                .get(name)
+                .and_then(Json::as_f64)
+                .unwrap_or_else(|| panic!("stage {name} missing"));
+            assert!(us >= 0.0, "{name}: {us}");
+            sum += us;
+        }
+        assert!(sum <= total * (1.0 + 1e-9), "stage sum {sum} past the total {total}");
+    }
+    // ?n=2 returns just the newest two, still oldest first
+    c.send(b"GET /v1/trace?n=2 HTTP/1.1\r\nHost: t\r\n\r\n");
+    let j = c.read_response().json();
+    let ids: Vec<String> = j
+        .get("spans")
+        .and_then(Json::as_arr)
+        .expect("spans array")
+        .iter()
+        .filter_map(|s| s.get("id").and_then(Json::as_str).map(String::from))
+        .collect();
+    assert_eq!(ids, vec!["t-4", "t-5"]);
+    http.shutdown();
+}
+
+#[test]
+fn prometheus_scrape_parses_and_carries_headroom_gauges() {
+    // the acceptance drive: ≥100 classifies at sampling 1.0, every
+    // response echoing its id, then the scrape must obey the text
+    // exposition grammar and carry per-layer headroom gauges
+    let http = start_http_with(trace_hcfg(1.0, 512));
+    let mut c = Client::connect(&http);
+    for i in 0..100u64 {
+        let id = format!("acc-{i}");
+        c.send(&post_classify_with_id(&classify_body(DIM, i, i, None), &id));
+        let r = c.read_response();
+        assert_eq!(r.status, 200, "drive {i}: {}", r.body);
+        assert_eq!(r.header("x-request-id"), Some(id.as_str()), "drive {i}");
+    }
+    c.send(b"GET /metrics HTTP/1.1\r\nHost: t\r\n\r\n");
+    let r = c.read_response();
+    assert_eq!(r.status, 200);
+    assert_eq!(r.header("content-type"), Some("text/plain; version=0.0.4"));
+    validate_exposition(&r.body).expect("scrape obeys the text exposition grammar");
+    for needle in [
+        "# TYPE pqs_requests_total counter",
+        "# TYPE pqs_models_loaded gauge",
+        "# TYPE pqs_latency_us summary",
+        "pqs_latency_us{quantile=\"0.99\"}",
+        "# TYPE pqs_trace_stage_us histogram",
+        "pqs_trace_stage_us_bucket{stage=\"forward\",le=\"+Inf\"}",
+        "pqs_http_shed_total{reason=\"queue_full\"}",
+        "# TYPE pqs_headroom_min_bits gauge",
+        "pqs_headroom_min_bits{model=\"tiny\",layer=",
+    ] {
+        assert!(r.body.contains(needle), "scrape missing {needle:?}:\n{}", r.body);
+    }
+    // the /v1/metrics trace section carries the same per-stage breakdown
+    c.send(b"GET /v1/metrics HTTP/1.1\r\nHost: t\r\n\r\n");
+    let j = c.read_response().json();
+    let tr = j.get("trace").expect("trace section");
+    assert_eq!(tr.get("recorded").and_then(Json::as_usize), Some(100));
+    let stages = tr.get("stages").expect("stages");
+    for name in ["parse", "route", "queue", "batch", "forward", "respond"] {
+        let st = stages.get(name).unwrap_or_else(|| panic!("stage {name} missing"));
+        assert_eq!(st.get("count").and_then(Json::as_usize), Some(100), "{name}");
+        assert!(st.get("p50_us").and_then(Json::as_f64).unwrap_or(-1.0) >= 0.0, "{name}");
+    }
+    // per-model headroom rows ride GET /v1/models once batches have run
+    c.send(b"GET /v1/models HTTP/1.1\r\nHost: t\r\n\r\n");
+    let j = c.read_response().json();
+    let rows = j.get("models").and_then(Json::as_arr).expect("models array");
+    let tiny = rows
+        .iter()
+        .find(|m| m.get("name").and_then(Json::as_str) == Some("tiny"))
+        .expect("tiny row");
+    let hr = tiny.get("headroom").and_then(Json::as_arr).expect("headroom rows");
+    assert!(!hr.is_empty(), "served batches must produce headroom rows");
+    for l in hr {
+        assert!(l.get("layer").and_then(Json::as_str).is_some());
+        let planned = l.get("planned_bits").and_then(Json::as_f64).expect("planned_bits");
+        let required = l.get("max_required_bits").and_then(Json::as_f64).expect("required");
+        let min_h = l.get("min_headroom_bits").and_then(Json::as_f64).expect("min headroom");
+        assert_eq!(min_h, planned - required, "constant width: headroom is plan minus need");
+        assert!(l.get("dots").and_then(Json::as_f64).unwrap_or(0.0) > 0.0);
+    }
+    http.shutdown();
 }
 
 // ---- self-healing on the wire: /readyz, Retry-After, quarantine -----------

@@ -39,7 +39,14 @@ fn server_cfg() -> ServerConfig {
 }
 
 fn req(id: u64, model: &str, image: Vec<f32>, acc_bits: Option<u32>) -> ClassifyRequest {
-    ClassifyRequest { id, model: Some(model.to_string()), image, deadline: None, acc_bits }
+    ClassifyRequest {
+        id,
+        model: Some(model.to_string()),
+        image,
+        deadline: None,
+        acc_bits,
+        trace: None,
+    }
 }
 
 /// Route one request and wait for its response.

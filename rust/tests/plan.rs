@@ -213,6 +213,7 @@ fn pqsw_roundtrip_applies_and_reports_the_plan_via_the_router() {
             image: image.clone(),
             deadline: None,
             acc_bits: None,
+            trace: None,
         })
         .expect("routes");
     let r = p.wait_timeout(Duration::from_secs(60)).expect("response");

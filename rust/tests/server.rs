@@ -392,7 +392,14 @@ fn server_with_shared_engine_pool_matches_single_threaded_server() {
 // ---- multi-model router ---------------------------------------------------
 
 fn req(id: u64, model: Option<&str>, image: Vec<f32>) -> ClassifyRequest {
-    ClassifyRequest { id, model: model.map(String::from), image, deadline: None, acc_bits: None }
+    ClassifyRequest {
+        id,
+        model: model.map(String::from),
+        image,
+        deadline: None,
+        acc_bits: None,
+        trace: None,
+    }
 }
 
 fn three_model_registry() -> ModelRegistry {
@@ -1004,4 +1011,128 @@ fn integrity_failure_quarantines_until_explicit_reload() {
     // reload of an unknown name reports the miss like any route would
     assert!(matches!(router.reload("nope"), Err(RouteError::UnknownModel(_))));
     router.shutdown();
+}
+
+// ---- observability: headroom telemetry, trace-attachment neutrality --------
+
+#[test]
+fn headroom_telemetry_tracks_required_bits_and_near_saturation() {
+    // serve a fixed request set at an accumulator width, then read the
+    // per-layer headroom rows off the fleet snapshot
+    let run = |acc_bits: u32| {
+        let mut registry = ModelRegistry::new();
+        registry.register("m", ModelSource::Memory(common::tiny_linear_model(DIM, CLASSES)));
+        let rcfg = RouterConfig {
+            max_loaded: 0,
+            max_bytes: 0,
+            engine: EngineConfig { policy: Policy::Sorted, acc_bits, ..Default::default() },
+            server: scfg(1, 4, 16),
+            preload: Vec::new(),
+            ..Default::default()
+        };
+        let router = Router::new(registry, rcfg).unwrap();
+        let mut classes = Vec::new();
+        for i in 0..8u64 {
+            let r = wait(router.submit(req(i, None, img(i))).expect("routes"));
+            classes.push(r.result.expect("serves"));
+        }
+        let rows = router
+            .metrics()
+            .model("m")
+            .unwrap()
+            .headroom
+            .clone()
+            .expect("a loaded model reports headroom");
+        router.shutdown();
+        (classes, rows)
+    };
+
+    // wide observation pass: learn the widest per-dot requirement
+    let (wide_classes, wide_rows) = run(24);
+    assert!(!wide_rows.is_empty(), "served batches must produce headroom rows");
+    let mut required = 0u32;
+    for row in &wide_rows {
+        assert_eq!(row.planned_bits, 24);
+        assert!(row.dots > 0, "{}: dots counted", row.layer);
+        assert_eq!(row.overflow_dots, 0, "{}: 24 bits is comfortably wide", row.layer);
+        assert!(row.max_required_bits <= 24, "{}", row.layer);
+        assert_eq!(
+            row.min_headroom_bits,
+            24 - row.max_required_bits as i64,
+            "{}: constant width → headroom is plan minus requirement",
+            row.layer
+        );
+        required = required.max(row.max_required_bits);
+    }
+    assert!(required >= 2, "synthetic dots must need a non-trivial width (got {required})");
+
+    // near-budget pass: one spare bit. The headroom gauges must flag it
+    // (min headroom 1, near-saturation dots counted) while the served
+    // classes stay bit-identical — nothing actually clipped
+    let (near_classes, near_rows) = run(required + 1);
+    assert_eq!(near_classes, wide_classes, "one spare bit must not change any answer");
+    let min_headroom = near_rows.iter().map(|r| r.min_headroom_bits).min().unwrap();
+    assert_eq!(min_headroom, 1, "the widest dot sits one bit under the plan");
+    let near: u64 = near_rows.iter().map(|r| r.near_saturation_dots).sum();
+    assert!(near > 0, "dots within one bit of the plan must be counted");
+    assert_eq!(near_rows.iter().map(|r| r.overflow_dots).sum::<u64>(), 0);
+}
+
+#[test]
+fn trace_attachment_never_perturbs_results() {
+    // ClassifyRequest.trace is observability-only: attaching a span
+    // context must not change classes or overflow accounting (the HTTP
+    // layer relies on this to keep tracing on/off bit-identical)
+    use pqs::trace::RequestTrace;
+    use std::time::Instant;
+    let run = |traced: bool| {
+        let mut registry = ModelRegistry::new();
+        registry.register("m", ModelSource::Memory(common::tiny_linear_model(DIM, CLASSES)));
+        let rcfg = RouterConfig {
+            max_loaded: 0,
+            max_bytes: 0,
+            engine: EngineConfig { policy: Policy::Sorted1, acc_bits: 14, ..Default::default() },
+            server: scfg(1, 4, 16),
+            preload: Vec::new(),
+            ..Default::default()
+        };
+        let router = Router::new(registry, rcfg).unwrap();
+        let mut classes = Vec::new();
+        for i in 0..16u64 {
+            let trace = traced.then(|| RequestTrace {
+                id: format!("t-{i}"),
+                sampled: true,
+                start: Instant::now(),
+                parse_us: 0.0,
+            });
+            let r = wait(
+                router
+                    .submit(ClassifyRequest {
+                        id: i,
+                        model: None,
+                        image: img(i),
+                        deadline: None,
+                        acc_bits: None,
+                        trace,
+                    })
+                    .expect("routes"),
+            );
+            classes.push(r.result.expect("serves"));
+        }
+        let rows = router.metrics().model("m").unwrap().headroom.clone().unwrap_or_default();
+        router.shutdown();
+        (classes, rows)
+    };
+    let (with, rows_with) = run(true);
+    let (without, rows_without) = run(false);
+    assert_eq!(with, without, "classes must be bit-identical tracing on vs off");
+    assert_eq!(rows_with.len(), rows_without.len(), "same layers observed");
+    for (a, b) in rows_with.iter().zip(&rows_without) {
+        assert_eq!(
+            (a.dots, a.overflow_dots, a.max_required_bits, a.min_headroom_bits),
+            (b.dots, b.overflow_dots, b.max_required_bits, b.min_headroom_bits),
+            "overflow accounting diverged on layer {}",
+            a.layer
+        );
+    }
 }
